@@ -1,0 +1,71 @@
+//! Policy sweep: dispatch policy × cache-eviction policy ablation.
+//!
+//! The paper runs all experiments with LRU and defers the eviction-policy
+//! question to future work (§6); this example answers it on the Fig 5
+//! configuration (1 GB caches — the thrashing regime, where eviction
+//! choice matters most) and sweeps all five dispatch policies at 4 GB.
+//!
+//!     cargo run --release --example policy_sweep [--quick]
+
+use datadiffusion::cache::EvictionPolicy;
+use datadiffusion::config::ExperimentConfig;
+use datadiffusion::coordinator::scheduler::DispatchPolicy;
+use datadiffusion::experiments::run_summary_experiment;
+use datadiffusion::report::{f, pct, Table};
+
+fn main() {
+    datadiffusion::util::logger::init();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let scale = if quick { 10 } else { 1 };
+
+    // --- 1. Eviction ablation on the cache-thrashing configuration.
+    let mut evict_table = Table::new(
+        "eviction-policy ablation (good-cache-compute, 1GB caches — paper future work §6)",
+        &["eviction", "WET(s)", "efficiency", "hit-local", "miss"],
+    );
+    for policy in [
+        EvictionPolicy::Lru,
+        EvictionPolicy::Lfu,
+        EvictionPolicy::Fifo,
+        EvictionPolicy::Random,
+    ] {
+        let mut cfg = ExperimentConfig::paper_fig(5).unwrap();
+        cfg.name = format!("evict-{}", policy.name());
+        cfg.cache.policy = policy;
+        cfg.workload.num_tasks /= scale;
+        let r = run_summary_experiment(&cfg);
+        evict_table.row(vec![
+            policy.name().into(),
+            f(r.summary.workload_execution_time_s, 0),
+            pct(r.summary.efficiency),
+            pct(r.summary.hit_local_rate),
+            pct(r.summary.miss_rate),
+        ]);
+    }
+    evict_table.print();
+    let _ = evict_table.write_csv("policy_sweep_eviction");
+
+    // --- 2. Dispatch-policy sweep at 4 GB caches.
+    let mut dispatch_table = Table::new(
+        "dispatch-policy sweep (4GB caches)",
+        &["policy", "WET(s)", "efficiency", "hit-local", "hit-global", "miss", "cpu-util"],
+    );
+    for policy in DispatchPolicy::ALL {
+        let mut cfg = ExperimentConfig::paper_fig(8).unwrap();
+        cfg.name = format!("dispatch-{policy}");
+        cfg.scheduler.policy = policy;
+        cfg.workload.num_tasks /= scale;
+        let r = run_summary_experiment(&cfg);
+        dispatch_table.row(vec![
+            policy.name().into(),
+            f(r.summary.workload_execution_time_s, 0),
+            pct(r.summary.efficiency),
+            pct(r.summary.hit_local_rate),
+            pct(r.summary.hit_global_rate),
+            pct(r.summary.miss_rate),
+            pct(r.summary.avg_cpu_utilization),
+        ]);
+    }
+    dispatch_table.print();
+    let _ = dispatch_table.write_csv("policy_sweep_dispatch");
+}

@@ -1,0 +1,39 @@
+//! Quickstart: run one paper experiment end to end in the simulator and
+//! print the paper's summary metrics.
+//!
+//!     cargo run --release --example quickstart [fig]
+//!
+//! `fig` is a figure number 4–10 (default 7: good-cache-compute with
+//! 2 GB caches — the near-ideal configuration).
+
+use datadiffusion::config::ExperimentConfig;
+use datadiffusion::experiments::{self, summary_table, summary_view_table};
+
+fn main() {
+    datadiffusion::util::logger::init();
+    let fig: u32 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(7);
+    let cfg = ExperimentConfig::paper_fig(fig).unwrap_or_else(|| {
+        eprintln!("unknown figure {fig} (expected 4-10)");
+        std::process::exit(2);
+    });
+
+    println!(
+        "experiment `{}`: policy {}, {} cache/node, ideal WET {:.0}s",
+        cfg.name,
+        cfg.scheduler.policy,
+        datadiffusion::util::units::fmt_bytes(cfg.cache.capacity_bytes),
+        cfg.ideal_wet_s()
+    );
+    let result = experiments::run_summary_experiment(&cfg);
+    summary_view_table(&result, 120).print();
+    summary_table(std::slice::from_ref(&result)).print();
+    println!(
+        "\nsimulated {} events in {:.1}s wall ({:.0} events/s)",
+        result.events_processed,
+        result.sim_wall_s,
+        result.events_processed as f64 / result.sim_wall_s
+    );
+}

@@ -1,0 +1,83 @@
+"""AOT lowering: JAX graphs → HLO *text* artifacts for the Rust runtime.
+
+HLO text — not ``lowered.compiler_ir("hlo")`` protos and not
+``.serialize()`` — is the interchange format: jax ≥ 0.5 emits protos with
+64-bit instruction ids that the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits:
+  artifacts/stacking.hlo.txt     stack_pipeline(N=128, H=64, W=64)
+  artifacts/model_eval.hlo.txt   model_eval_graph(B=64)
+  artifacts/manifest.txt         name → file, shapes (parsed by Rust)
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+#: Fixed example shapes baked into the artifacts (the Rust side pads).
+STACK_N, STACK_H, STACK_W = 128, 64, 64
+MODEL_BATCH = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (id-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_stacking() -> str:
+    spec = jax.ShapeDtypeStruct((STACK_N, STACK_H, STACK_W), jnp.float32)
+    wspec = jax.ShapeDtypeStruct((STACK_N,), jnp.float32)
+    return to_hlo_text(jax.jit(model.stack_pipeline).lower(spec, wspec))
+
+
+def lower_model_eval() -> str:
+    b = jax.ShapeDtypeStruct((MODEL_BATCH,), jnp.float32)
+    return to_hlo_text(jax.jit(model.model_eval_graph).lower(*([b] * 9)))
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    artifacts = {
+        "stacking": (
+            lower_stacking(),
+            f"inputs=cutouts:f32[{STACK_N},{STACK_H},{STACK_W}],weights:f32[{STACK_N}] "
+            f"outputs=image:f32[{STACK_H},{STACK_W}],mean:f32[],peak:f32[]",
+        ),
+        "model_eval": (
+            lower_model_eval(),
+            f"inputs=9x f32[{MODEL_BATCH}] "
+            f"outputs=7x f32[{MODEL_BATCH}] (V,Y,W,E,S,omega,zeta)",
+        ),
+    }
+
+    manifest_lines = []
+    for name, (hlo, sig) in artifacts.items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(hlo)
+        manifest_lines.append(f"{name}\t{name}.hlo.txt\t{sig}")
+        print(f"wrote {path} ({len(hlo)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as fh:
+        fh.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: batched abstract-model evaluation (§4.3).
+
+Evaluates the data-centric task-farm model for a *batch* of parameter
+points — the Figure 2 validation sweeps evaluate hundreds of (CPUs,
+locality) combinations, and the Rust coordinator batch-offloads them
+through this kernel's AOT artifact.
+
+Model (paper §4.3, mirrored bit-for-bit by ``rust/src/model/mod.rs``):
+
+    V  = max(μ/|T|, 1/A) · |K|
+    Y  = μ + o + p_local·(β/ν_τ) + p_miss·ζ          (ζ = β·ω/ν_π)
+    ω' = max(busy · p_miss·ζ / Y, 1)                  (fixed point, 32 it.)
+    W  = max(Y/|T|, 1/A) · |K|
+    E  = min(V/W, 1),  S = E·|T|
+
+All arrays share shape (B,); the kernel is pure VPU elementwise work with
+the fixed-point loop unrolled (32 steps — the same bound as the Rust
+implementation). f32 in/out.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Fixed-point iterations (matches rust/src/model/mod.rs).
+FIXED_POINT_ITERS = 32
+
+
+def _model_kernel(k_ref, t_ref, mu_ref, o_ref, beta_ref, inva_ref, nupi_ref,
+                  nutau_ref, pmiss_ref, v_ref, y_ref, w_ref, e_ref, s_ref,
+                  omega_ref, zeta_ref):
+    k = k_ref[...]
+    cpus = t_ref[...]
+    mu = mu_ref[...]
+    o = o_ref[...]
+    beta = beta_ref[...]
+    inv_a = inva_ref[...]
+    nu_pi = nupi_ref[...]
+    nu_tau = nutau_ref[...]
+    p_miss = pmiss_ref[...]
+    p_local = 1.0 - p_miss
+
+    v = jnp.maximum(mu / cpus, inv_a) * k
+    local_read = beta / nu_tau
+
+    omega = jnp.ones_like(mu)
+    zeta = beta / nu_pi
+    y = mu + o + p_local * local_read + p_miss * zeta
+    for _ in range(FIXED_POINT_ITERS):
+        zeta = beta * jnp.maximum(omega, 1.0) / nu_pi
+        y = mu + o + p_local * local_read + p_miss * zeta
+        # busy CPUs capped by the arrival rate (inv_a = 0 ⇒ batch ⇒ all).
+        busy = jnp.where(inv_a > 0.0, jnp.minimum(y / jnp.maximum(inv_a, 1e-30), cpus), cpus)
+        omega = jnp.maximum(busy * p_miss * zeta / y, 1.0)
+
+    zeta = beta * jnp.maximum(omega, 1.0) / nu_pi
+    y = mu + o + p_local * local_read + p_miss * zeta
+    w = jnp.maximum(y / cpus, inv_a) * k
+    e = jnp.minimum(v / w, 1.0)
+
+    v_ref[...] = v
+    y_ref[...] = y
+    w_ref[...] = w
+    e_ref[...] = e
+    s_ref[...] = e * cpus
+    omega_ref[...] = omega
+    zeta_ref[...] = zeta
+
+
+@jax.jit
+def model_eval(k, cpus, mu, o, beta, inv_a, nu_pi, nu_tau, p_miss):
+    """Batched model evaluation; all inputs shape (B,) f32.
+
+    Returns (V, Y, W, E, S, ω, ζ), each (B,) f32.
+    """
+    (b,) = mu.shape
+    shapes = [jax.ShapeDtypeStruct((b,), jnp.float32)] * 7
+    return pl.pallas_call(
+        _model_kernel,
+        out_shape=shapes,
+        interpret=True,
+    )(k, cpus, mu, o, beta, inv_a, nu_pi, nu_tau, p_miss)

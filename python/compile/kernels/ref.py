@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package has a reference implementation here written
+with plain jax.numpy (no Pallas, no custom control flow), checked by
+``python/tests`` under hypothesis sweeps, and mirrored again on the Rust
+side (``model::predict``) for the model evaluator.
+"""
+
+import jax.numpy as jnp
+
+#: Must match model_eval.FIXED_POINT_ITERS and the Rust implementation.
+FIXED_POINT_ITERS = 32
+
+
+def ref_stack(cutouts, weights):
+    """Weighted stack: out[h,w] = Σ_n weights[n]·cutouts[n,h,w]."""
+    return jnp.sum(cutouts * weights[:, None, None], axis=0)
+
+
+def ref_model_eval(k, cpus, mu, o, beta, inv_a, nu_pi, nu_tau, p_miss):
+    """Abstract-model evaluation (§4.3), elementwise over (B,) arrays."""
+    p_local = 1.0 - p_miss
+    v = jnp.maximum(mu / cpus, inv_a) * k
+    local_read = beta / nu_tau
+
+    omega = jnp.ones_like(mu)
+    zeta = beta / nu_pi
+    y = mu + o + p_local * local_read + p_miss * zeta
+    for _ in range(FIXED_POINT_ITERS):
+        zeta = beta * jnp.maximum(omega, 1.0) / nu_pi
+        y = mu + o + p_local * local_read + p_miss * zeta
+        busy = jnp.where(
+            inv_a > 0.0, jnp.minimum(y / jnp.maximum(inv_a, 1e-30), cpus), cpus
+        )
+        omega = jnp.maximum(busy * p_miss * zeta / y, 1.0)
+
+    zeta = beta * jnp.maximum(omega, 1.0) / nu_pi
+    y = mu + o + p_local * local_read + p_miss * zeta
+    w = jnp.maximum(y / cpus, inv_a) * k
+    e = jnp.minimum(v / w, 1.0)
+    return v, y, w, e, e * cpus, omega, zeta

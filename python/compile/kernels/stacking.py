@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: astronomy cutout stacking.
+
+The paper's driving application (AstroPortal, refs [5][6]) stacks many
+small image cutouts of the same sky object to raise signal-to-noise: the
+per-task compute μ(κ) of the data-diffusion workloads. The hot loop is a
+weighted sum over a batch of cutouts:
+
+    out[h, w] = Σ_n  weight[n] · cutout[n, h, w]
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the batch dimension is
+the Pallas grid; each grid step streams one VMEM-sized block of cutouts
+from HBM and accumulates into the output block, which stays resident in
+VMEM across the whole grid (classic revisiting-output schedule expressed
+with a constant index_map). The multiply-accumulate is a VPU
+elementwise-reduce, f32 throughout.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness is asserted against the pure-jnp oracle in
+``ref.py`` and real-TPU performance is *estimated* (DESIGN.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stack_kernel(x_ref, w_ref, o_ref):
+    """One grid step: accumulate `weight · cutout` for a block of cutouts.
+
+    x_ref: (BN, H, W) block of cutouts in VMEM
+    w_ref: (BN,)     matching weights
+    o_ref: (H, W)    the full output block (revisited every step)
+    """
+    step = pl.program_id(0)
+
+    # Zero the accumulator on the first visit.
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    block = x_ref[...]  # (BN, H, W)
+    weights = w_ref[...]  # (BN,)
+    # Broadcast weights over the image plane and reduce the batch axis.
+    o_ref[...] += jnp.sum(block * weights[:, None, None], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def stack(cutouts: jax.Array, weights: jax.Array, *, block_n: int = 32) -> jax.Array:
+    """Weighted stack of `cutouts` (N, H, W) with `weights` (N,) → (H, W).
+
+    N must be divisible by `block_n` (the AOT artifact fixes N; the
+    library pads on the Rust side).
+    """
+    n, h, w = cutouts.shape
+    assert weights.shape == (n,), f"weights {weights.shape} != ({n},)"
+    assert n % block_n == 0, f"N={n} not divisible by block_n={block_n}"
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _stack_kernel,
+        grid=grid,
+        in_specs=[
+            # Stream cutout blocks: grid step i reads rows [i·BN, (i+1)·BN).
+            pl.BlockSpec((block_n, h, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        # The output block is the whole image, revisited at every step.
+        out_specs=pl.BlockSpec((h, w), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), cutouts.dtype),
+        interpret=True,
+    )(cutouts, weights)

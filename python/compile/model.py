@@ -1,0 +1,40 @@
+"""L2: the JAX compute graphs that the Rust coordinator executes via PJRT.
+
+Two graphs, both calling the L1 Pallas kernels so they lower into the
+same HLO modules:
+
+* :func:`stack_pipeline` — the astronomy per-task analysis: weighted
+  cutout stacking (Pallas) followed by normalization and basic image
+  statistics. One call = one task's μ(κ) in the live engine.
+* :func:`model_eval_graph` — the batched §4.3 abstract-model evaluator
+  used by the Figure 2 validation sweeps.
+
+Python only runs at build time (``make artifacts``); the request path is
+pure Rust + PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import model_eval as me
+from compile.kernels import stacking
+
+
+@jax.jit
+def stack_pipeline(cutouts: jax.Array, weights: jax.Array):
+    """Stack `cutouts` (N, H, W) with `weights` (N,), normalized.
+
+    Returns (stacked_image (H, W), mean, peak) — the statistics the
+    AstroPortal-style service reports per stacking request.
+    """
+    raw = stacking.stack(cutouts, weights)
+    total = jnp.sum(weights)
+    # Guard against an all-zero weight vector (empty stacking request).
+    img = raw / jnp.maximum(total, jnp.finfo(raw.dtype).tiny)
+    return img, jnp.mean(img), jnp.max(img)
+
+
+@jax.jit
+def model_eval_graph(k, cpus, mu, o, beta, inv_a, nu_pi, nu_tau, p_miss):
+    """Batched abstract-model evaluation; see kernels/model_eval.py."""
+    return me.model_eval(k, cpus, mu, o, beta, inv_a, nu_pi, nu_tau, p_miss)

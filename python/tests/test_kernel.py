@@ -1,0 +1,122 @@
+"""Pallas kernels vs pure-jnp oracles — hypothesis sweeps over shapes.
+
+The CORE correctness signal for L1: every kernel must match its ref.py
+oracle to float32 tolerance across randomized shapes and values.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import model_eval as me
+from compile.kernels import ref, stacking
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def rand(key, shape, lo=-2.0, hi=2.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, jnp.float32, lo, hi)
+
+
+# ---------------------------------------------------------------- stacking
+
+@given(
+    n_blocks=st.integers(min_value=1, max_value=6),
+    block_n=st.sampled_from([1, 2, 8, 32]),
+    h=st.integers(min_value=1, max_value=48),
+    w=st.integers(min_value=1, max_value=48),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_stack_matches_ref(n_blocks, block_n, h, w, seed):
+    n = n_blocks * block_n
+    cutouts = rand(seed, (n, h, w))
+    weights = rand(seed + 1, (n,), 0.0, 3.0)
+    got = stacking.stack(cutouts, weights, block_n=block_n)
+    want = ref.ref_stack(cutouts, weights)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_stack_rejects_indivisible_batch():
+    cutouts = rand(0, (10, 4, 4))
+    weights = rand(1, (10,))
+    with pytest.raises(AssertionError):
+        stacking.stack(cutouts, weights, block_n=4)
+
+
+def test_stack_zero_weights_zero_image():
+    cutouts = rand(2, (32, 8, 8))
+    weights = jnp.zeros((32,), jnp.float32)
+    got = stacking.stack(cutouts, weights)
+    np.testing.assert_allclose(got, jnp.zeros((8, 8)), atol=1e-7)
+
+
+def test_stack_single_cutout_identity():
+    cutouts = rand(3, (1, 16, 16))
+    weights = jnp.ones((1,), jnp.float32)
+    got = stacking.stack(cutouts, weights, block_n=1)
+    np.testing.assert_allclose(got, cutouts[0], rtol=1e-6)
+
+
+# -------------------------------------------------------------- model_eval
+
+def model_args(seed, b):
+    """Random but physically plausible model parameter batch."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 9)
+    u = lambda k, lo, hi: jax.random.uniform(k, (b,), jnp.float32, lo, hi)
+    return dict(
+        k=u(ks[0], 1e2, 1e5),          # tasks
+        cpus=u(ks[1], 1.0, 256.0),
+        mu=u(ks[2], 1e-3, 10.0),       # seconds
+        o=u(ks[3], 1e-4, 0.1),
+        beta=u(ks[4], 1e3, 1e8),       # bytes
+        inv_a=jnp.where(u(ks[5], 0.0, 1.0) < 0.3, 0.0, u(ks[6], 1e-4, 1.0)),
+        nu_pi=u(ks[7], 1e7, 1e9),      # bytes/s
+        nu_tau=u(ks[8], 1e7, 1e9),
+        p_miss=u(ks[0], 0.0, 1.0),
+    )
+
+
+ARG_ORDER = ["k", "cpus", "mu", "o", "beta", "inv_a", "nu_pi", "nu_tau", "p_miss"]
+
+
+@given(
+    b=st.sampled_from([1, 3, 64, 129]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_model_eval_matches_ref(b, seed):
+    args = model_args(seed, b)
+    ordered = [args[k] for k in ARG_ORDER]
+    got = me.model_eval(*ordered)
+    want = ref.ref_model_eval(*ordered)
+    for g, w, name in zip(got, want, ["V", "Y", "W", "E", "S", "omega", "zeta"]):
+        np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-5, err_msg=name)
+
+
+def test_model_eval_invariants():
+    args = model_args(7, 128)
+    ordered = [args[k] for k in ARG_ORDER]
+    v, y, w, e, s, omega, zeta = me.model_eval(*ordered)
+    assert np.all(np.asarray(w) >= np.asarray(v) * (1 - 1e-5)), "W ≥ V"
+    assert np.all((np.asarray(e) > 0) & (np.asarray(e) <= 1.0 + 1e-6)), "E ∈ (0,1]"
+    np.testing.assert_allclose(s, np.asarray(e) * np.asarray(args["cpus"]), rtol=1e-5)
+    assert np.all(np.asarray(omega) >= 1.0), "ω ≥ 1"
+
+
+def test_model_eval_zero_miss_means_no_copy_cost():
+    b = 8
+    args = model_args(11, b)
+    args["p_miss"] = jnp.zeros((b,), jnp.float32)
+    ordered = [args[k] for k in ARG_ORDER]
+    v, y, w, e, s, omega, zeta = me.model_eval(*ordered)
+    # Y = μ + o + local read, no ζ term; ω stays at the floor.
+    expect_y = args["mu"] + args["o"] + args["beta"] / args["nu_tau"]
+    np.testing.assert_allclose(y, expect_y, rtol=1e-5)
+    np.testing.assert_allclose(omega, jnp.ones((b,)), rtol=1e-6)

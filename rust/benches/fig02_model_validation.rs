@@ -1,0 +1,33 @@
+//! Figure 2 bench: abstract-model validation against the simulator
+//! (§4.4 — paper: 5%/8% mean error, 29% worst case over 92 runs).
+//!
+//!     cargo bench --bench fig02_model_validation
+//!
+//! Env: `DD_SCALE` scales task counts (default 0.2 of paper scale).
+
+use datadiffusion::experiments::fig02;
+
+fn main() {
+    datadiffusion::util::logger::init();
+    let scale: f64 = std::env::var("DD_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.2);
+    let t0 = std::time::Instant::now();
+    let out = fig02::run(scale);
+    for t in fig02::tables(&out) {
+        t.print();
+        let name = t.title.split(':').next().unwrap_or("fig02").replace(' ', "_");
+        let _ = t.write_csv(&name);
+    }
+    let (mean_cpu, _, worst_cpu) = fig02::Fig02Output::stats(&out.cpu_sweep);
+    let (mean_loc, _, worst_loc) = fig02::Fig02Output::stats(&out.locality_sweep);
+    println!(
+        "\nfig02 done in {:.1}s: cpu-sweep mean err {:.1}% (paper ~5%), \
+         locality-sweep mean err {:.1}% (paper ~8%), worst {:.1}% (paper 29%)",
+        t0.elapsed().as_secs_f64(),
+        mean_cpu * 100.0,
+        mean_loc * 100.0,
+        worst_cpu.max(worst_loc) * 100.0
+    );
+}

@@ -1,0 +1,46 @@
+//! Figure 3 bench: raw data-aware scheduler throughput (§5.1 — paper:
+//! 2981 decisions/s first-available → 1322/s max-cache-hit on a 2007
+//! Xeon; our Rust implementation targets ≥10× that, see DESIGN.md §Perf).
+//!
+//!     cargo bench --bench fig03_scheduler
+//!
+//! Env: `DD_TASKS` (default 250000), `DD_NODES` (default 32).
+
+use datadiffusion::experiments::fig03;
+
+fn main() {
+    datadiffusion::util::logger::init();
+    let tasks: u64 = std::env::var("DD_TASKS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(250_000);
+    let nodes: usize = std::env::var("DD_NODES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(32);
+    println!(
+        "scheduler microbenchmark: {tasks} tasks, 10K 1-byte files, {nodes} nodes, window {}",
+        100 * nodes
+    );
+    let results = fig03::run(tasks, 10_000, nodes);
+    let t = fig03::table(&results);
+    t.print();
+    let _ = t.write_csv("fig03_scheduler");
+
+    // Shape check vs the paper: first-available is the fastest policy;
+    // the data-aware policies cost more per decision.
+    let fa = results
+        .iter()
+        .find(|r| r.policy.name() == "first-available")
+        .expect("fa present");
+    let mch = results
+        .iter()
+        .find(|r| r.policy.name() == "max-cache-hit")
+        .expect("mch present");
+    println!(
+        "\nshape: first-available {:.0}/s vs max-cache-hit {:.0}/s ({:.1}× — paper 2.3×)",
+        fa.decisions_per_sec,
+        mch.decisions_per_sec,
+        fa.decisions_per_sec / mch.decisions_per_sec
+    );
+}

@@ -1,0 +1,39 @@
+//! Figures 4–10 bench: the seven summary-view experiments at paper scale
+//! (250K tasks, 64 nodes, 10K × 10 MB files).
+//!
+//!     cargo bench --bench fig04_10_policies
+//!
+//! Env: `DD_SCALE` scales the task count (default 1.0 = paper scale),
+//! `DD_VIEW` sets the time-series sampling stride in seconds.
+
+use datadiffusion::experiments::{self, fig04_10};
+
+fn main() {
+    datadiffusion::util::logger::init();
+    let scale: f64 = std::env::var("DD_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let view: usize = std::env::var("DD_VIEW")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(120);
+    let t0 = std::time::Instant::now();
+    let results = fig04_10::scaled_run(scale);
+    for t in fig04_10::tables(&results, view) {
+        t.print();
+    }
+    let summary = experiments::summary_table(&results);
+    let _ = summary.write_csv("fig04_10_summary");
+    for r in &results {
+        let _ = experiments::summary_view_table(r, 1).write_csv(&format!("{}_series", r.name));
+    }
+    let total_events: u64 = results.iter().map(|r| r.events_processed).sum();
+    let total_wall: f64 = results.iter().map(|r| r.sim_wall_s).sum();
+    println!(
+        "\nfig04-10 done in {:.1}s ({} events, {:.2}M events/s simulated)",
+        t0.elapsed().as_secs_f64(),
+        total_events,
+        total_events as f64 / total_wall / 1e6
+    );
+}

@@ -1,0 +1,19 @@
+//! Figure 11 bench: cache hit/miss decomposition across the diffusion
+//! experiments (§5.2.2 — paper: ~70% misses at 1 GB vs 4–6% at ≥1.5 GB).
+//!
+//!     cargo bench --bench fig11_cache_performance
+//! Env: `DD_SCALE` (default 1.0).
+
+use datadiffusion::experiments::{fig04_10, fig11};
+
+fn main() {
+    datadiffusion::util::logger::init();
+    let scale: f64 = std::env::var("DD_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let results = fig04_10::scaled_run(scale);
+    let t = fig11::table(&results);
+    t.print();
+    let _ = t.write_csv("fig11");
+}

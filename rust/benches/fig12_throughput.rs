@@ -1,0 +1,21 @@
+//! Figure 12 bench: average + peak throughput split by data source
+//! (§5.2.3 — paper: 4 Gb/s GPFS-only vs 5.3–13.9 Gb/s diffusion with
+//! 100 Gb/s peaks; GPFS load drops to 0.4 Gb/s once the working set is
+//! cached).
+//!
+//!     cargo bench --bench fig12_throughput
+//! Env: `DD_SCALE` (default 1.0).
+
+use datadiffusion::experiments::{fig04_10, fig12};
+
+fn main() {
+    datadiffusion::util::logger::init();
+    let scale: f64 = std::env::var("DD_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let results = fig04_10::scaled_run(scale);
+    let t = fig12::table(&results);
+    t.print();
+    let _ = t.write_csv("fig12");
+}

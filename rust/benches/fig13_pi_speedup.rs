@@ -1,0 +1,38 @@
+//! Figure 13 bench: performance index + speedup, including the static
+//! 64-node comparison (§5.2.4 — paper: PI gain up to 34×; static PI 0.33
+//! vs DRP 1.0 at equal speedup).
+//!
+//!     cargo bench --bench fig13_pi_speedup
+//! Env: `DD_SCALE` (default 1.0).
+
+use datadiffusion::experiments::{fig13, run_summary_experiment};
+
+fn main() {
+    datadiffusion::util::logger::init();
+    let scale: f64 = std::env::var("DD_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let mut results = datadiffusion::experiments::fig04_10::scaled_run(scale);
+    let mut static_cfg = fig13::static_best_config();
+    static_cfg.workload.num_tasks =
+        ((static_cfg.workload.num_tasks as f64 * scale) as u64).max(1_000);
+    results.push(run_summary_experiment(&static_cfg));
+    let t = fig13::table(&results);
+    t.print();
+    let _ = t.write_csv("fig13");
+
+    let rows = fig13::rows(&results);
+    let best_dd = rows
+        .iter()
+        .filter(|r| r.name.contains("gcc"))
+        .map(|r| r.pi)
+        .fold(0.0, f64::max);
+    let fa = rows.first().expect("baseline");
+    println!(
+        "\nshape: PI(first-available) {:.3} vs best diffusion {:.3} → {:.0}× gain (paper: up to 34×)",
+        fa.pi,
+        best_dd,
+        best_dd / fa.pi.max(1e-9)
+    );
+}

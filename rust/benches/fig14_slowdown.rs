@@ -1,0 +1,29 @@
+//! Figure 14 bench: slowdown vs arrival rate (§5.2.5 — paper:
+//! first-available saturates at 59 tasks/s; big caches stay near 1×;
+//! 1.5 GB recovers from ~5× to ~1× once the working set caches).
+//!
+//!     cargo bench --bench fig14_slowdown
+//! Env: `DD_SCALE` (default 1.0).
+
+use datadiffusion::experiments::{fig04_10, fig14};
+
+fn main() {
+    datadiffusion::util::logger::init();
+    let scale: f64 = std::env::var("DD_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let results = fig04_10::scaled_run(scale);
+    let t = fig14::table(&results);
+    t.print();
+    let _ = t.write_csv("fig14");
+
+    for r in &results {
+        if let Some(rate) = fig14::saturation_rate(r, 1.5) {
+            println!("{}: saturates at ~{rate:.0} tasks/s", r.name);
+        } else {
+            println!("{}: never saturates (≤1.5× slowdown throughout)", r.name);
+        }
+    }
+    println!("(paper: first-available saturates at 59 tasks/s)");
+}

@@ -1,0 +1,23 @@
+//! Figure 15 bench: average response time per experiment (§5.2.6 —
+//! paper: 3.1 s best diffusion vs 1870 s worst GPFS, >500× apart).
+//!
+//!     cargo bench --bench fig15_response_time
+//! Env: `DD_SCALE` (default 1.0).
+
+use datadiffusion::experiments::{fig04_10, fig15};
+
+fn main() {
+    datadiffusion::util::logger::init();
+    let scale: f64 = std::env::var("DD_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let results = fig04_10::scaled_run(scale);
+    let t = fig15::table(&results);
+    t.print();
+    let _ = t.write_csv("fig15");
+    println!(
+        "\nshape: worst/best avg response = {:.0}× (paper: >500×)",
+        fig15::best_worst_ratio(&results)
+    );
+}

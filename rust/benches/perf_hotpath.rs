@@ -1,0 +1,156 @@
+//! §Perf hot-path microbenchmarks (DESIGN.md §8, EXPERIMENTS.md §Perf).
+//!
+//! Covers the three L3 hot paths: scheduler decisions, wait-queue window
+//! ops, flow-network transfer churn, plus the whole-simulation event
+//! rate. Run before/after every optimization:
+//!
+//!     cargo bench --bench perf_hotpath
+
+use datadiffusion::cache::{CacheConfig, EvictionPolicy, ObjectCache};
+use datadiffusion::config::ExperimentConfig;
+use datadiffusion::coordinator::executor::ExecutorRegistry;
+use datadiffusion::coordinator::queue::{Task, WaitQueue};
+use datadiffusion::coordinator::scheduler::{DispatchPolicy, Scheduler, SchedulerConfig};
+use datadiffusion::ids::{ExecutorId, FileId, TaskId};
+use datadiffusion::index::LocationIndex;
+use datadiffusion::sim::flow::FlowNet;
+use datadiffusion::util::bench::{black_box, Bench};
+use datadiffusion::util::prng::Pcg64;
+use datadiffusion::util::time::Micros;
+
+fn main() {
+    datadiffusion::util::logger::init();
+    bench_scheduler_decision();
+    bench_waitqueue();
+    bench_cache();
+    bench_flownet();
+    bench_whole_sim();
+}
+
+/// One phase-2 pickup on a warm 64-node cluster with a deep queue.
+fn bench_scheduler_decision() {
+    let mut b = Bench::new("scheduler pick_tasks (64 nodes, warm index)");
+    for policy in [
+        DispatchPolicy::FirstAvailable,
+        DispatchPolicy::MaxComputeUtil,
+        DispatchPolicy::GoodCacheCompute,
+    ] {
+        let mut reg = ExecutorRegistry::new();
+        let mut index = LocationIndex::new();
+        let mut rng = Pcg64::seeded(1);
+        let execs: Vec<ExecutorId> =
+            (0..64).map(|_| reg.register(2, Micros::ZERO)).collect();
+        // Warm index: every file cached somewhere.
+        for f in 0..10_000u32 {
+            index.add(FileId(f), *rng.choose(&execs));
+        }
+        let mut queue = WaitQueue::new();
+        for i in 0..50_000u64 {
+            queue.push_back(Task {
+                id: TaskId(i),
+                files: vec![FileId(rng.below(10_000) as u32)],
+                compute: Micros::ZERO,
+                arrival: Micros::ZERO,
+            });
+        }
+        let mut sched = Scheduler::new(SchedulerConfig {
+            policy,
+            ..SchedulerConfig::default()
+        });
+        let mut e = 0usize;
+        b.iter(policy.name(), 1, || {
+            e = (e + 1) % execs.len();
+            let got = sched.pick_tasks(execs[e], 1, &mut queue, &reg, &index);
+            // Re-queue so the bench is steady-state.
+            for t in got {
+                queue.push_back(t);
+            }
+        });
+    }
+    let _ = b.write_csv();
+}
+
+fn bench_waitqueue() {
+    let mut b = Bench::new("wait-queue ops");
+    let mut q = WaitQueue::new();
+    for i in 0..100_000u64 {
+        q.push_back(Task {
+            id: TaskId(i),
+            files: vec![FileId(i as u32)],
+            compute: Micros::ZERO,
+            arrival: Micros::ZERO,
+        });
+    }
+    b.iter("push+pop", 1, || {
+        let t = q.pop_front().expect("non-empty");
+        q.push_back(t);
+    });
+    b.iter("window scan 3200", 3200, || {
+        let n = q.window(3200).count();
+        black_box(n);
+    });
+    let _ = b.write_csv();
+}
+
+fn bench_cache() {
+    let mut b = Bench::new("object cache (LRU, 4GB, 10MB objects)");
+    let mut cache = ObjectCache::new(CacheConfig {
+        capacity_bytes: 4_000_000_000,
+        policy: EvictionPolicy::Lru,
+    });
+    let mut rng = Pcg64::seeded(2);
+    for f in 0..400u32 {
+        cache.insert(FileId(f), 10_000_000, &mut rng);
+    }
+    b.iter("touch (hit)", 1, || {
+        let f = FileId(rng.below(400) as u32);
+        black_box(cache.touch(f));
+    });
+    b.iter("insert (evicting)", 1, || {
+        let f = FileId(400 + rng.below(10_000) as u32);
+        black_box(cache.insert(f, 10_000_000, &mut rng));
+    });
+    let _ = b.write_csv();
+}
+
+fn bench_flownet() {
+    let mut b = Bench::new("flow network transfer churn");
+    for concurrency in [16usize, 128] {
+        let mut net = FlowNet::new();
+        let gpfs = net.add_link(5.5e8);
+        let nics: Vec<_> = (0..64).map(|_| net.add_link(1.25e8)).collect();
+        let mut now = Micros::ZERO;
+        let mut i = 0u64;
+        // Prime with `concurrency` in-flight transfers.
+        for _ in 0..concurrency {
+            net.start(now, 10_000_000, &[gpfs, nics[(i % 64) as usize]], i);
+            i += 1;
+        }
+        b.iter(&format!("start+complete @ {concurrency} concurrent"), 1, || {
+            let t = net.next_completion().expect("in flight");
+            now = t;
+            net.pop_completion(t);
+            net.start(now, 10_000_000, &[gpfs, nics[(i % 64) as usize]], i);
+            i += 1;
+        });
+    }
+    let _ = b.write_csv();
+}
+
+/// Whole-simulation event rate on a mid-sized workload (the §Perf
+/// headline for the engine).
+fn bench_whole_sim() {
+    let mut b = Bench::new("whole simulation (25K tasks, 64 nodes)")
+        .samples(3)
+        .min_sample_duration(std::time::Duration::from_millis(1));
+    let mut cfg = ExperimentConfig::paper_fig(8).expect("preset");
+    cfg.workload.num_tasks = 25_000;
+    let mut events_per_s = 0.0;
+    b.iter("fig08 @ 10% scale", 25_000, || {
+        let r = datadiffusion::sim::run(&cfg);
+        events_per_s = r.events_processed as f64 / r.sim_wall_s;
+        black_box(r.summary.efficiency);
+    });
+    println!("  engine event rate: {:.2}M events/s", events_per_s / 1e6);
+    let _ = b.write_csv();
+}

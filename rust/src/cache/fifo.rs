@@ -1,0 +1,64 @@
+//! First-In-First-Out eviction: victims in insertion order, accesses
+//! ignored.
+
+use super::EvictionState;
+use crate::ids::FileId;
+use crate::util::prng::Pcg64;
+use std::collections::{BTreeMap, HashMap};
+
+/// FIFO book-keeping (insertion-ordered set).
+#[derive(Debug, Default)]
+pub struct FifoState {
+    clock: u64,
+    by_seq: BTreeMap<u64, FileId>,
+    seq_of: HashMap<FileId, u64>,
+}
+
+impl FifoState {
+    /// Empty state.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl EvictionState for FifoState {
+    fn on_insert(&mut self, file: FileId) {
+        // Re-insert of an evicted-then-refetched file gets a new slot;
+        // on_insert of a resident file never happens (ObjectCache treats
+        // that as an access).
+        self.clock += 1;
+        if let Some(old) = self.seq_of.insert(file, self.clock) {
+            self.by_seq.remove(&old);
+        }
+        self.by_seq.insert(self.clock, file);
+    }
+
+    fn on_access(&mut self, _file: FileId) {
+        // FIFO ignores recency.
+    }
+
+    fn pick_victim(&mut self, _rng: &mut Pcg64) -> Option<FileId> {
+        self.by_seq.first_key_value().map(|(_, &f)| f)
+    }
+
+    fn on_remove(&mut self, file: FileId) {
+        if let Some(seq) = self.seq_of.remove(&file) {
+            self.by_seq.remove(&seq);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insertion_order_victims() {
+        let mut rng = Pcg64::seeded(0);
+        let mut s = FifoState::new();
+        s.on_insert(FileId(1));
+        s.on_insert(FileId(2));
+        s.on_access(FileId(1)); // ignored
+        assert_eq!(s.pick_victim(&mut rng), Some(FileId(1)));
+    }
+}

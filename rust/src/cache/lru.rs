@@ -1,0 +1,83 @@
+//! Least-Recently-Used eviction (the paper's default policy).
+//!
+//! Implemented as a monotone "clock" per file: each access stamps the file
+//! with a fresh sequence number kept in a `BTreeMap<seq, file>` ordered
+//! set, so victim selection is O(log n) (`first_key_value`) and accesses
+//! are O(log n) re-stampings — the same hash-map + sorted-set shape the
+//! paper's §3.2 complexity argument relies on.
+
+use super::EvictionState;
+use crate::ids::FileId;
+use crate::util::prng::Pcg64;
+use std::collections::{BTreeMap, HashMap};
+
+/// LRU book-keeping.
+#[derive(Debug, Default)]
+pub struct LruState {
+    clock: u64,
+    by_seq: BTreeMap<u64, FileId>,
+    seq_of: HashMap<FileId, u64>,
+}
+
+impl LruState {
+    /// Empty state.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn stamp(&mut self, file: FileId) {
+        self.clock += 1;
+        if let Some(old) = self.seq_of.insert(file, self.clock) {
+            self.by_seq.remove(&old);
+        }
+        self.by_seq.insert(self.clock, file);
+    }
+}
+
+impl EvictionState for LruState {
+    fn on_insert(&mut self, file: FileId) {
+        self.stamp(file);
+    }
+
+    fn on_access(&mut self, file: FileId) {
+        self.stamp(file);
+    }
+
+    fn pick_victim(&mut self, _rng: &mut Pcg64) -> Option<FileId> {
+        self.by_seq.first_key_value().map(|(_, &f)| f)
+    }
+
+    fn on_remove(&mut self, file: FileId) {
+        if let Some(seq) = self.seq_of.remove(&file) {
+            self.by_seq.remove(&seq);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn victim_is_least_recent() {
+        let mut rng = Pcg64::seeded(0);
+        let mut s = LruState::new();
+        s.on_insert(FileId(1));
+        s.on_insert(FileId(2));
+        s.on_insert(FileId(3));
+        s.on_access(FileId(1));
+        assert_eq!(s.pick_victim(&mut rng), Some(FileId(2)));
+        s.on_remove(FileId(2));
+        assert_eq!(s.pick_victim(&mut rng), Some(FileId(3)));
+    }
+
+    #[test]
+    fn empty_has_no_victim() {
+        let mut rng = Pcg64::seeded(0);
+        let mut s = LruState::new();
+        assert_eq!(s.pick_victim(&mut rng), None);
+        s.on_insert(FileId(7));
+        s.on_remove(FileId(7));
+        assert_eq!(s.pick_victim(&mut rng), None);
+    }
+}

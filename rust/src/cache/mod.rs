@@ -1,0 +1,385 @@
+//! Per-executor data-object caches (§3.1.1).
+//!
+//! Each executor manages its own byte-capacity cache of immutable data
+//! objects and reports content changes to the dispatcher's central
+//! [`crate::index::LocationIndex`]. The paper implements four eviction
+//! policies — **Random, FIFO, LRU, LFU** — and runs all its experiments
+//! with LRU; all four are provided here (the eviction-policy ablation the
+//! paper defers to future work is exercised by `examples/policy_sweep.rs`
+//! and the `fig04_10` bench's `--evict` flag).
+//!
+//! Because the paper assumes data is *never modified after creation*
+//! (§3.1.1), there is no coherence protocol: a cache entry is just
+//! `(FileId, size)` plus policy book-keeping.
+
+mod fifo;
+mod lfu;
+mod lru;
+mod random;
+
+pub use fifo::FifoState;
+pub use lfu::LfuState;
+pub use lru::LruState;
+pub use random::RandomState;
+
+use crate::ids::FileId;
+use crate::util::prng::Pcg64;
+use std::collections::HashMap;
+
+/// Which eviction policy a cache uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EvictionPolicy {
+    /// Evict a uniformly random resident object.
+    Random,
+    /// Evict the object resident the longest.
+    Fifo,
+    /// Evict the least-recently-used object (the paper's default).
+    Lru,
+    /// Evict the least-frequently-used object (ties broken by recency).
+    Lfu,
+}
+
+impl EvictionPolicy {
+    /// Parse from config text.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "random" => Some(EvictionPolicy::Random),
+            "fifo" => Some(EvictionPolicy::Fifo),
+            "lru" => Some(EvictionPolicy::Lru),
+            "lfu" => Some(EvictionPolicy::Lfu),
+            _ => None,
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EvictionPolicy::Random => "random",
+            EvictionPolicy::Fifo => "fifo",
+            EvictionPolicy::Lru => "lru",
+            EvictionPolicy::Lfu => "lfu",
+        }
+    }
+}
+
+/// Cache sizing + policy configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheConfig {
+    /// Capacity in bytes (the paper varies 1 GB / 1.5 GB / 2 GB / 4 GB per node).
+    pub capacity_bytes: u64,
+    /// Eviction policy (paper experiments: LRU).
+    pub policy: EvictionPolicy,
+}
+
+impl CacheConfig {
+    /// LRU cache of the given capacity — the paper's configuration.
+    pub fn lru(capacity_bytes: u64) -> Self {
+        CacheConfig {
+            capacity_bytes,
+            policy: EvictionPolicy::Lru,
+        }
+    }
+}
+
+/// Policy-specific state: the ordering/recency structure that picks a
+/// victim. Implementations must be O(log n) or better per operation — the
+/// scheduler touches caches on every dispatch decision.
+pub trait EvictionState: std::fmt::Debug {
+    /// Record that `file` was inserted.
+    fn on_insert(&mut self, file: FileId);
+    /// Record an access (hit) on `file`.
+    fn on_access(&mut self, file: FileId);
+    /// Pick the victim to evict; `rng` is supplied for Random.
+    /// Must only return currently-resident files.
+    fn pick_victim(&mut self, rng: &mut Pcg64) -> Option<FileId>;
+    /// Record that `file` was removed (evicted or invalidated).
+    fn on_remove(&mut self, file: FileId);
+}
+
+fn new_state(policy: EvictionPolicy) -> Box<dyn EvictionState + Send> {
+    match policy {
+        EvictionPolicy::Random => Box::new(RandomState::new()),
+        EvictionPolicy::Fifo => Box::new(FifoState::new()),
+        EvictionPolicy::Lru => Box::new(LruState::new()),
+        EvictionPolicy::Lfu => Box::new(LfuState::new()),
+    }
+}
+
+/// A byte-capacity object cache with pluggable eviction.
+///
+/// `insert` returns the list of evicted objects so the owner can propagate
+/// index updates (the executor's periodic cache-content messages in the
+/// paper's loosely-coherent design).
+#[derive(Debug)]
+pub struct ObjectCache {
+    capacity: u64,
+    used: u64,
+    sizes: HashMap<FileId, u64>,
+    state: Box<dyn EvictionState + Send>,
+    policy: EvictionPolicy,
+    /// Cumulative eviction count (for ablation reporting).
+    pub evictions: u64,
+}
+
+impl ObjectCache {
+    /// Create an empty cache.
+    pub fn new(config: CacheConfig) -> Self {
+        ObjectCache {
+            capacity: config.capacity_bytes,
+            used: 0,
+            sizes: HashMap::new(),
+            state: new_state(config.policy),
+            policy: config.policy,
+            evictions: 0,
+        }
+    }
+
+    /// The configured policy.
+    pub fn policy(&self) -> EvictionPolicy {
+        self.policy
+    }
+
+    /// Capacity in bytes.
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Bytes currently resident.
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    /// Number of resident objects.
+    pub fn len(&self) -> usize {
+        self.sizes.len()
+    }
+
+    /// True when nothing is resident.
+    pub fn is_empty(&self) -> bool {
+        self.sizes.is_empty()
+    }
+
+    /// Is `file` resident? (Does *not* count as an access.)
+    pub fn contains(&self, file: FileId) -> bool {
+        self.sizes.contains_key(&file)
+    }
+
+    /// Record a read of a resident object (updates recency/frequency).
+    /// Returns false if the object was not resident.
+    pub fn touch(&mut self, file: FileId) -> bool {
+        if self.sizes.contains_key(&file) {
+            self.state.on_access(file);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Insert `file` of `size` bytes, evicting as needed.
+    ///
+    /// Returns the evicted objects. Objects larger than the whole cache are
+    /// rejected (`None`), mirroring Falkon executors refusing to cache
+    /// objects beyond local disk capacity.
+    pub fn insert(&mut self, file: FileId, size: u64, rng: &mut Pcg64) -> Option<Vec<FileId>> {
+        if size > self.capacity {
+            return None;
+        }
+        if self.sizes.contains_key(&file) {
+            // Re-insert of a resident object is just an access.
+            self.state.on_access(file);
+            return Some(Vec::new());
+        }
+        let mut evicted = Vec::new();
+        while self.used + size > self.capacity {
+            let victim = self
+                .state
+                .pick_victim(rng)
+                .expect("cache accounting: used > 0 implies a victim exists");
+            let vsize = self
+                .sizes
+                .remove(&victim)
+                .expect("victim must be resident");
+            self.state.on_remove(victim);
+            self.used -= vsize;
+            self.evictions += 1;
+            evicted.push(victim);
+        }
+        self.sizes.insert(file, size);
+        self.state.on_insert(file);
+        self.used += size;
+        Some(evicted)
+    }
+
+    /// Remove a specific object (e.g. on executor deregistration cleanup).
+    pub fn remove(&mut self, file: FileId) -> bool {
+        if let Some(size) = self.sizes.remove(&file) {
+            self.state.on_remove(file);
+            self.used -= size;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Iterate over resident objects.
+    pub fn files(&self) -> impl Iterator<Item = FileId> + '_ {
+        self.sizes.keys().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache(policy: EvictionPolicy, cap: u64) -> ObjectCache {
+        ObjectCache::new(CacheConfig {
+            capacity_bytes: cap,
+            policy,
+        })
+    }
+
+    #[test]
+    fn insert_and_contains() {
+        let mut rng = Pcg64::seeded(1);
+        let mut c = cache(EvictionPolicy::Lru, 100);
+        assert_eq!(c.insert(FileId(1), 40, &mut rng), Some(vec![]));
+        assert_eq!(c.insert(FileId(2), 40, &mut rng), Some(vec![]));
+        assert!(c.contains(FileId(1)));
+        assert!(c.contains(FileId(2)));
+        assert_eq!(c.used(), 80);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn rejects_oversized_object() {
+        let mut rng = Pcg64::seeded(1);
+        let mut c = cache(EvictionPolicy::Lru, 100);
+        assert_eq!(c.insert(FileId(1), 101, &mut rng), None);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut rng = Pcg64::seeded(1);
+        let mut c = cache(EvictionPolicy::Lru, 100);
+        c.insert(FileId(1), 50, &mut rng).unwrap();
+        c.insert(FileId(2), 50, &mut rng).unwrap();
+        assert!(c.touch(FileId(1))); // 2 is now LRU
+        let evicted = c.insert(FileId(3), 50, &mut rng).unwrap();
+        assert_eq!(evicted, vec![FileId(2)]);
+        assert!(c.contains(FileId(1)));
+        assert!(c.contains(FileId(3)));
+    }
+
+    #[test]
+    fn fifo_ignores_recency() {
+        let mut rng = Pcg64::seeded(1);
+        let mut c = cache(EvictionPolicy::Fifo, 100);
+        c.insert(FileId(1), 50, &mut rng).unwrap();
+        c.insert(FileId(2), 50, &mut rng).unwrap();
+        c.touch(FileId(1)); // FIFO must not care
+        let evicted = c.insert(FileId(3), 50, &mut rng).unwrap();
+        assert_eq!(evicted, vec![FileId(1)]);
+    }
+
+    #[test]
+    fn lfu_evicts_least_frequent() {
+        let mut rng = Pcg64::seeded(1);
+        let mut c = cache(EvictionPolicy::Lfu, 100);
+        c.insert(FileId(1), 50, &mut rng).unwrap();
+        c.insert(FileId(2), 50, &mut rng).unwrap();
+        c.touch(FileId(1));
+        c.touch(FileId(1));
+        c.touch(FileId(2));
+        let evicted = c.insert(FileId(3), 50, &mut rng).unwrap();
+        assert_eq!(evicted, vec![FileId(2)]);
+    }
+
+    #[test]
+    fn random_evicts_some_resident_object() {
+        let mut rng = Pcg64::seeded(1);
+        let mut c = cache(EvictionPolicy::Random, 100);
+        c.insert(FileId(1), 50, &mut rng).unwrap();
+        c.insert(FileId(2), 50, &mut rng).unwrap();
+        let evicted = c.insert(FileId(3), 60, &mut rng).unwrap();
+        // 60 bytes needs both 50-byte victims out.
+        assert_eq!(evicted.len(), 2);
+        assert!(c.contains(FileId(3)));
+        assert_eq!(c.used(), 60);
+    }
+
+    #[test]
+    fn reinsert_is_access_not_duplicate() {
+        let mut rng = Pcg64::seeded(1);
+        let mut c = cache(EvictionPolicy::Lru, 100);
+        c.insert(FileId(1), 60, &mut rng).unwrap();
+        assert_eq!(c.insert(FileId(1), 60, &mut rng), Some(vec![]));
+        assert_eq!(c.used(), 60);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn remove_frees_space() {
+        let mut rng = Pcg64::seeded(1);
+        let mut c = cache(EvictionPolicy::Lru, 100);
+        c.insert(FileId(1), 60, &mut rng).unwrap();
+        assert!(c.remove(FileId(1)));
+        assert!(!c.remove(FileId(1)));
+        assert_eq!(c.used(), 0);
+        assert_eq!(c.insert(FileId(2), 100, &mut rng), Some(vec![]));
+    }
+
+    #[test]
+    fn multi_eviction_until_fit() {
+        let mut rng = Pcg64::seeded(1);
+        let mut c = cache(EvictionPolicy::Lru, 100);
+        for i in 0..10 {
+            c.insert(FileId(i), 10, &mut rng).unwrap();
+        }
+        let evicted = c.insert(FileId(99), 95, &mut rng).unwrap();
+        assert_eq!(evicted.len(), 10);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.evictions, 10);
+    }
+
+    #[test]
+    fn accounting_invariant_under_all_policies() {
+        use crate::util::proptest::{property, Gen};
+        for policy in [
+            EvictionPolicy::Random,
+            EvictionPolicy::Fifo,
+            EvictionPolicy::Lru,
+            EvictionPolicy::Lfu,
+        ] {
+            property(&format!("cache accounting {policy:?}"), 50, |g: &mut Gen| {
+                let cap = g.u64_in(50..200);
+                let mut rng = Pcg64::seeded(g.case_seed);
+                let mut c = cache(policy, cap);
+                let ops = g.usize_in(1..200);
+                for _ in 0..ops {
+                    let file = FileId(g.u64_in(0..30) as u32);
+                    match g.usize_in(0..3) {
+                        0 => {
+                            let size = g.u64_in(1..60);
+                            let _ = c.insert(file, size, &mut rng);
+                        }
+                        1 => {
+                            let _ = c.touch(file);
+                        }
+                        _ => {
+                            let _ = c.remove(file);
+                        }
+                    }
+                    if c.used() > c.capacity() {
+                        return Err(format!("used {} > cap {}", c.used(), c.capacity()));
+                    }
+                    let sum: u64 = c.sizes.values().sum();
+                    if sum != c.used() {
+                        return Err(format!("sum {} != used {}", sum, c.used()));
+                    }
+                }
+                Ok(())
+            });
+        }
+    }
+}

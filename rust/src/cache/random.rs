@@ -1,0 +1,88 @@
+//! Random eviction: victim chosen uniformly among resident objects.
+//!
+//! Swap-remove vector + position map gives O(1) insert/remove/pick.
+
+use super::EvictionState;
+use crate::ids::FileId;
+use crate::util::prng::Pcg64;
+use std::collections::HashMap;
+
+/// Random-eviction book-keeping.
+#[derive(Debug, Default)]
+pub struct RandomState {
+    items: Vec<FileId>,
+    pos: HashMap<FileId, usize>,
+}
+
+impl RandomState {
+    /// Empty state.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl EvictionState for RandomState {
+    fn on_insert(&mut self, file: FileId) {
+        if !self.pos.contains_key(&file) {
+            self.pos.insert(file, self.items.len());
+            self.items.push(file);
+        }
+    }
+
+    fn on_access(&mut self, _file: FileId) {
+        // Random eviction ignores access patterns.
+    }
+
+    fn pick_victim(&mut self, rng: &mut Pcg64) -> Option<FileId> {
+        if self.items.is_empty() {
+            None
+        } else {
+            let i = rng.below(self.items.len() as u64) as usize;
+            Some(self.items[i])
+        }
+    }
+
+    fn on_remove(&mut self, file: FileId) {
+        if let Some(i) = self.pos.remove(&file) {
+            let last = self.items.pop().expect("pos implies non-empty");
+            if i < self.items.len() {
+                self.items[i] = last;
+                self.pos.insert(last, i);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn victims_are_resident_and_removal_is_consistent() {
+        let mut rng = Pcg64::seeded(0);
+        let mut s = RandomState::new();
+        for i in 0..10 {
+            s.on_insert(FileId(i));
+        }
+        for _ in 0..10 {
+            let v = s.pick_victim(&mut rng).unwrap();
+            assert!(v.0 < 10);
+            s.on_remove(v);
+        }
+        assert_eq!(s.pick_victim(&mut rng), None);
+    }
+
+    #[test]
+    fn all_objects_eventually_chosen() {
+        let mut rng = Pcg64::seeded(1);
+        let mut s = RandomState::new();
+        for i in 0..4 {
+            s.on_insert(FileId(i));
+        }
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            seen[s.pick_victim(&mut rng).unwrap().0 as usize] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+}

@@ -1,0 +1,353 @@
+//! Command-line interface for the `datadiff` binary.
+//!
+//! Hand-rolled argv parsing (the build environment is offline; no clap).
+//! Subcommands:
+//!
+//! * `run (--fig N | --config FILE) [--view SECS] [--csv]` — run one
+//!   experiment and print its summary view;
+//! * `figures [--scale X]` — regenerate every paper figure (2–15);
+//! * `fig2|fig3|fig4-10|fig11|fig12|fig13|fig14|fig15 [--scale X]` —
+//!   regenerate a single figure;
+//! * `validate-model [--pjrt]` — model-vs-simulator validation, with
+//!   `--pjrt` evaluating the model through the AOT JAX/Pallas artifact;
+//! * `artifacts-check` — verify the AOT artifacts load and execute;
+//! * `help` — usage.
+
+use crate::config::ExperimentConfig;
+use crate::experiments::{self, fig02, fig03, fig04_10, fig11, fig12, fig13, fig14, fig15};
+use crate::report::Table;
+use crate::{Error, Result};
+
+/// Usage text.
+pub const USAGE: &str = "\
+datadiff — data diffusion (Raicu et al. 2008) reproduction
+
+USAGE:
+  datadiff run (--fig N | --config FILE) [--view SECS] [--csv]
+  datadiff figures [--scale X]         regenerate Figures 2-15
+  datadiff fig2|fig3|fig4-10|fig11|fig12|fig13|fig14|fig15 [--scale X]
+  datadiff validate-model [--pjrt]     model vs simulator (Figure 2 core)
+  datadiff artifacts-check             verify AOT artifacts (PJRT)
+  datadiff help
+
+Figures 4-10 presets: 4=first-available/GPFS, 5-8=good-cache-compute with
+1/1.5/2/4GB caches, 9=max-cache-hit, 10=max-compute-util. --scale shrinks
+workloads for quick runs (default 1.0 = paper scale).";
+
+/// Parsed command line.
+#[derive(Debug)]
+pub enum Command {
+    /// Run one experiment.
+    Run {
+        /// Experiment config.
+        config: Box<ExperimentConfig>,
+        /// Print the time-series view sampled every N seconds.
+        view_every_s: usize,
+        /// Also write CSVs.
+        csv: bool,
+    },
+    /// Regenerate a set of figures.
+    Figures {
+        /// Which figures ("all", "2", "3", "4-10", "11"…"15").
+        which: String,
+        /// Workload scale factor.
+        scale: f64,
+    },
+    /// Model validation.
+    ValidateModel {
+        /// Evaluate through the PJRT artifact as well.
+        pjrt: bool,
+    },
+    /// Artifact smoke test.
+    ArtifactsCheck,
+    /// Print usage.
+    Help,
+}
+
+/// Parse argv (without the program name).
+pub fn parse(args: &[String]) -> Result<Command> {
+    let mut it = args.iter().peekable();
+    let cmd = match it.next().map(String::as_str) {
+        None | Some("help") | Some("--help") | Some("-h") => return Ok(Command::Help),
+        Some(c) => c,
+    };
+    let mut flags: Vec<(&str, Option<&str>)> = Vec::new();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            let takes_value = matches!(name, "fig" | "config" | "view" | "scale");
+            let value = if takes_value {
+                Some(
+                    it.next()
+                        .ok_or_else(|| Error::Config(format!("--{name} needs a value")))?
+                        .as_str(),
+                )
+            } else {
+                None
+            };
+            flags.push((name, value));
+        } else {
+            return Err(Error::Config(format!("unexpected argument `{a}`")));
+        }
+    }
+    let get = |name: &str| flags.iter().find(|(n, _)| *n == name).map(|(_, v)| *v);
+
+    match cmd {
+        "run" => {
+            let config = if let Some(Some(fig)) = get("fig") {
+                let n: u32 = fig
+                    .parse()
+                    .map_err(|_| Error::Config(format!("bad figure `{fig}`")))?;
+                ExperimentConfig::paper_fig(n)
+                    .ok_or_else(|| Error::Config(format!("no preset for figure {n}")))?
+            } else if let Some(Some(path)) = get("config") {
+                ExperimentConfig::from_file(std::path::Path::new(path))?
+            } else {
+                return Err(Error::Config("run needs --fig N or --config FILE".into()));
+            };
+            let view_every_s = match get("view") {
+                Some(Some(v)) => v
+                    .parse()
+                    .map_err(|_| Error::Config(format!("bad --view `{v}`")))?,
+                _ => 120,
+            };
+            Ok(Command::Run {
+                config: Box::new(config),
+                view_every_s,
+                csv: get("csv").is_some(),
+            })
+        }
+        "figures" => Ok(Command::Figures {
+            which: "all".into(),
+            scale: parse_scale(get("scale"))?,
+        }),
+        "fig2" | "fig3" | "fig4-10" | "fig11" | "fig12" | "fig13" | "fig14" | "fig15" => {
+            Ok(Command::Figures {
+                which: cmd.trim_start_matches("fig").into(),
+                scale: parse_scale(get("scale"))?,
+            })
+        }
+        "validate-model" => Ok(Command::ValidateModel {
+            pjrt: get("pjrt").is_some(),
+        }),
+        "artifacts-check" => Ok(Command::ArtifactsCheck),
+        other => Err(Error::Config(format!("unknown command `{other}`"))),
+    }
+}
+
+fn parse_scale(v: Option<Option<&str>>) -> Result<f64> {
+    match v {
+        Some(Some(s)) => s
+            .parse()
+            .map_err(|_| Error::Config(format!("bad --scale `{s}`"))),
+        _ => Ok(1.0),
+    }
+}
+
+/// Execute a parsed command; returns the process exit code.
+pub fn execute(cmd: Command) -> Result<i32> {
+    match cmd {
+        Command::Help => {
+            println!("{USAGE}");
+            Ok(0)
+        }
+        Command::Run {
+            config,
+            view_every_s,
+            csv,
+        } => {
+            let r = experiments::run_summary_experiment(&config);
+            let view = experiments::summary_view_table(&r, view_every_s);
+            view.print();
+            let t = experiments::summary_table(std::slice::from_ref(&r));
+            t.print();
+            if csv {
+                let p1 = view.write_csv(&format!("{}_view", r.name))?;
+                let p2 = t.write_csv(&format!("{}_summary", r.name))?;
+                println!("wrote {} and {}", p1.display(), p2.display());
+            }
+            Ok(0)
+        }
+        Command::Figures { which, scale } => {
+            run_figures(&which, scale)?;
+            Ok(0)
+        }
+        Command::ValidateModel { pjrt } => {
+            let out = fig02::run(0.1);
+            for t in fig02::tables(&out) {
+                t.print();
+            }
+            if pjrt {
+                validate_via_pjrt(&out)?;
+            }
+            Ok(0)
+        }
+        Command::ArtifactsCheck => {
+            let a = crate::runtime::Artifacts::open_default()?;
+            println!("PJRT platform: {}", a.platform());
+            let s = a.stacking()?;
+            let frame =
+                crate::runtime::shapes::STACK_H * crate::runtime::shapes::STACK_W;
+            let res = s.stack(&vec![1.0; frame], &[2.0])?;
+            assert!((res.mean - 1.0).abs() < 1e-5);
+            println!("stacking artifact: OK (mean {:.3})", res.mean);
+            let m = a.model_eval()?;
+            let p = m.eval(&[crate::model::ModelInputs {
+                num_tasks: 1000.0,
+                cpus: 64.0,
+                mu_s: 0.01,
+                overhead_s: 0.001,
+                object_bytes: 1e7,
+                arrival_rate: f64::INFINITY,
+                persistent_bps: 5.5e8,
+                transient_bps: 2e8,
+                p_miss: 0.1,
+                p_local: 0.9,
+            }])?;
+            println!(
+                "model_eval artifact: OK (E {:.3}, S {:.1})",
+                p[0].efficiency, p[0].speedup
+            );
+            Ok(0)
+        }
+    }
+}
+
+fn run_figures(which: &str, scale: f64) -> Result<()> {
+    let all = which == "all";
+    let mut csvs: Vec<std::path::PathBuf> = Vec::new();
+    let mut emit = |t: &Table, name: &str| {
+        t.print();
+        if let Ok(p) = t.write_csv(name) {
+            csvs.push(p);
+        }
+    };
+    if all || which == "2" {
+        let out = fig02::run(0.2 * scale);
+        for (i, t) in fig02::tables(&out).iter().enumerate() {
+            emit(t, &format!("fig02_{i}"));
+        }
+    }
+    if all || which == "3" {
+        let tasks = (250_000.0 * scale) as u64;
+        let results = fig03::run(tasks.max(10_000), 10_000, 32);
+        emit(&fig03::table(&results), "fig03");
+    }
+    if all || which == "4-10" || "11,12,13,14,15".contains(which) {
+        // Figures 11-15 reuse the 4-10 runs (plus the static run for 13).
+        let mut results = fig04_10::scaled_run(scale);
+        if all || which == "4-10" {
+            for t in fig04_10::tables(&results, 120) {
+                t.print();
+            }
+            emit(&experiments::summary_table(&results), "fig04_10_summary");
+        }
+        if all || which == "11" {
+            emit(&fig11::table(&results), "fig11");
+        }
+        if all || which == "12" {
+            emit(&fig12::table(&results), "fig12");
+        }
+        if all || which == "13" {
+            let mut static_cfg = fig13::static_best_config();
+            static_cfg.workload.num_tasks =
+                ((static_cfg.workload.num_tasks as f64 * scale) as u64).max(1000);
+            results.push(experiments::run_summary_experiment(&static_cfg));
+            emit(&fig13::table(&results), "fig13");
+            results.pop();
+        }
+        if all || which == "14" {
+            emit(&fig14::table(&results), "fig14");
+        }
+        if all || which == "15" {
+            emit(&fig15::table(&results), "fig15");
+        }
+    }
+    if !csvs.is_empty() {
+        println!("\nCSV outputs under target/figures/:");
+        for p in csvs {
+            println!("  {}", p.display());
+        }
+    }
+    Ok(())
+}
+
+/// Re-predict the Figure 2 points through the AOT PJRT artifact and
+/// report the Rust-vs-PJRT agreement (they implement the same model).
+fn validate_via_pjrt(out: &fig02::Fig02Output) -> Result<()> {
+    let a = crate::runtime::Artifacts::open_default()?;
+    let exe = a.model_eval()?;
+    let points: Vec<crate::model::ModelInputs> = out
+        .cpu_sweep
+        .iter()
+        .map(|p| {
+            let cfg = fig02::validation_config(p.cpus, p.locality, 2_000);
+            crate::model::ModelInputs::from_config(&cfg)
+        })
+        .collect();
+    let preds = exe.eval(&points)?;
+    let mut worst: f64 = 0.0;
+    for (inp, pjrt) in points.iter().zip(&preds) {
+        let rust = crate::model::predict(inp);
+        let err = (pjrt.w - rust.w).abs() / rust.w.max(1e-9);
+        worst = worst.max(err);
+    }
+    println!(
+        "\nPJRT model artifact vs Rust model: worst relative ΔW = {:.4}% over {} points",
+        worst * 100.0,
+        preds.len()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_run_with_fig() {
+        match parse(&args("run --fig 7 --view 60 --csv")).unwrap() {
+            Command::Run {
+                config,
+                view_every_s,
+                csv,
+            } => {
+                assert_eq!(config.name, "fig07-gcc-2gb");
+                assert_eq!(view_every_s, 60);
+                assert!(csv);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_figures_and_single_fig() {
+        assert!(matches!(
+            parse(&args("figures --scale 0.1")).unwrap(),
+            Command::Figures { scale, .. } if (scale - 0.1).abs() < 1e-12
+        ));
+        assert!(matches!(
+            parse(&args("fig14")).unwrap(),
+            Command::Figures { which, .. } if which == "14"
+        ));
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(parse(&args("run")).is_err());
+        assert!(parse(&args("run --fig banana")).is_err());
+        assert!(parse(&args("bogus")).is_err());
+        assert!(parse(&args("run stray")).is_err());
+        assert!(parse(&args("run --fig")).is_err());
+    }
+
+    #[test]
+    fn help_paths() {
+        assert!(matches!(parse(&[]).unwrap(), Command::Help));
+        assert!(matches!(parse(&args("help")).unwrap(), Command::Help));
+        assert!(matches!(parse(&args("--help")).unwrap(), Command::Help));
+    }
+}

@@ -1,0 +1,570 @@
+//! Typed experiment configuration.
+//!
+//! Every run of the system — CLI, examples, tests, figure benches — is
+//! described by an [`ExperimentConfig`], loadable from a TOML-subset file
+//! ([`toml_lite`]) or constructed from the paper presets
+//! ([`ExperimentConfig::paper_fig`]). Defaults are the calibration
+//! constants from DESIGN.md §6 (all taken from the paper's text).
+
+pub mod toml_lite;
+
+use crate::cache::{CacheConfig, EvictionPolicy};
+use crate::coordinator::provisioner::{AllocationPolicy, ProvisionerConfig};
+use crate::coordinator::scheduler::{DispatchPolicy, SchedulerConfig};
+use crate::util::units::{GB, MB};
+use crate::{Error, Result};
+use toml_lite::Document;
+
+/// Physical testbed parameters (the simulated ANL/UC TeraGrid site).
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Maximum provisionable nodes (paper: 64).
+    pub max_nodes: usize,
+    /// CPUs (task slots) per node (paper: 2 — "2 per node, 1 per CPU").
+    pub cpus_per_node: usize,
+    /// GPFS aggregate sustained read bandwidth, Gb/s (paper: ≈4).
+    pub gpfs_gbps: f64,
+    /// Per-node local-disk read bandwidth, Gb/s (sized so 64 nodes peak
+    /// near the paper's 100 Gb/s aggregate).
+    pub local_disk_gbps: f64,
+    /// Per-node NIC bandwidth for peer cache transfers, Gb/s.
+    pub nic_gbps: f64,
+    /// Dispatcher↔executor network latency, milliseconds (paper: 2 ms).
+    pub net_latency_ms: f64,
+    /// GRAM/LRM resource-allocation latency bounds, seconds (paper: 30–60).
+    pub gram_latency_s: (f64, f64),
+    /// Dispatcher service time per scheduling decision, microseconds —
+    /// caps dispatch throughput like Falkon's single service instance
+    /// (paper §5.1: 1322–2981 decisions/s → 335–760 µs each).
+    pub dispatch_service_us: f64,
+    /// Per-transfer session setup cost for *peer* cache fetches,
+    /// milliseconds — each remote read opens a GridFTP session to the
+    /// holder's server (§3.1.1); this is why max-compute-util's heavy
+    /// remote traffic loses to good-cache-compute despite 100% CPU
+    /// utilization (§5.2.1, Fig 10 discussion).
+    pub peer_overhead_ms: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            max_nodes: 64,
+            cpus_per_node: 2,
+            gpfs_gbps: 4.4,
+            local_disk_gbps: 1.6,
+            nic_gbps: 1.0,
+            net_latency_ms: 2.0,
+            gram_latency_s: (30.0, 60.0),
+            dispatch_service_us: 600.0,
+            peer_overhead_ms: 60.0,
+        }
+    }
+}
+
+/// How task arrival times are generated.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalSpec {
+    /// The paper's §5.2 schedule: `A_i = min(ceil(A_{i-1}·factor), max)`,
+    /// one interval per `interval_s` seconds, until `num_tasks` tasks.
+    IncreasingRate {
+        /// Initial arrival rate, tasks/sec (paper: 1).
+        initial: f64,
+        /// Multiplicative increase per interval (paper: 1.3).
+        factor: f64,
+        /// Seconds between increases (paper: 60).
+        interval_s: f64,
+        /// Arrival-rate ceiling, tasks/sec (paper: 1000).
+        max_rate: f64,
+    },
+    /// Constant arrival rate, tasks/sec.
+    Constant(f64),
+    /// All tasks arrive at t = 0 (batch submission; scheduler microbench).
+    Batch,
+}
+
+/// How tasks pick the file(s) they read.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AccessSpec {
+    /// Uniformly random file per task (the paper's §5 workloads).
+    Uniform,
+    /// Zipf-distributed popularity with exponent `s`.
+    Zipf(f64),
+    /// Astronomy-style locality: each file is accessed `locality` times;
+    /// accesses are shuffled within a bounded reordering window, matching
+    /// the paper's "locality of 1 … 30" workload definition (Fig 2).
+    Locality(f64),
+}
+
+/// Workload description (task count, dataset, arrival, access pattern).
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    /// Total tasks |K| (paper: 250 000).
+    pub num_tasks: u64,
+    /// Dataset size in files (paper: 10 000).
+    pub num_files: u32,
+    /// Bytes per file (paper: 10 MB; scheduler microbench: 1 B).
+    pub file_size_bytes: u64,
+    /// Per-task compute time μ(κ), milliseconds (paper: 10 ms).
+    pub compute_ms: f64,
+    /// Arrival process.
+    pub arrival: ArrivalSpec,
+    /// File access pattern.
+    pub access: AccessSpec,
+}
+
+impl Default for WorkloadConfig {
+    /// The §5.2 provisioning workload, verbatim.
+    fn default() -> Self {
+        WorkloadConfig {
+            num_tasks: 250_000,
+            num_files: 10_000,
+            file_size_bytes: 10 * MB,
+            compute_ms: 10.0,
+            arrival: ArrivalSpec::IncreasingRate {
+                initial: 1.0,
+                factor: 1.3,
+                interval_s: 60.0,
+                max_rate: 1000.0,
+            },
+            access: AccessSpec::Uniform,
+        }
+    }
+}
+
+/// Full experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Human-readable experiment name (report headers, CSV filenames).
+    pub name: String,
+    /// PRNG seed; every run with the same config+seed is bit-identical.
+    pub seed: u64,
+    /// Testbed parameters.
+    pub cluster: ClusterConfig,
+    /// Workload parameters.
+    pub workload: WorkloadConfig,
+    /// Scheduler policy and tuning.
+    pub scheduler: SchedulerConfig,
+    /// Dynamic-resource-provisioner policy and tuning.
+    pub provisioner: ProvisionerConfig,
+    /// Per-executor cache sizing and eviction.
+    pub cache: CacheConfig,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            seed: 42,
+            cluster: ClusterConfig::default(),
+            workload: WorkloadConfig::default(),
+            scheduler: SchedulerConfig::default(),
+            provisioner: ProvisionerConfig::default(),
+            cache: CacheConfig::lru(4 * GB),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Preset for a paper figure's experiment (4–10 are the summary-view
+    /// experiments; the aggregate figures 11–15 reuse those runs).
+    ///
+    /// | fig | policy | cache/node |
+    /// |-----|--------|------------|
+    /// | 4 | first-available (GPFS only) | — |
+    /// | 5 | good-cache-compute | 1 GB |
+    /// | 6 | good-cache-compute | 1.5 GB |
+    /// | 7 | good-cache-compute | 2 GB |
+    /// | 8 | good-cache-compute | 4 GB |
+    /// | 9 | max-cache-hit | 4 GB |
+    /// | 10 | max-compute-util | 4 GB |
+    pub fn paper_fig(fig: u32) -> Option<ExperimentConfig> {
+        let (name, policy, cache_bytes) = match fig {
+            4 => ("fig04-first-available-gpfs", DispatchPolicy::FirstAvailable, 0),
+            5 => ("fig05-gcc-1gb", DispatchPolicy::GoodCacheCompute, GB),
+            6 => ("fig06-gcc-1.5gb", DispatchPolicy::GoodCacheCompute, 3 * GB / 2),
+            7 => ("fig07-gcc-2gb", DispatchPolicy::GoodCacheCompute, 2 * GB),
+            8 => ("fig08-gcc-4gb", DispatchPolicy::GoodCacheCompute, 4 * GB),
+            9 => ("fig09-mch-4gb", DispatchPolicy::MaxCacheHit, 4 * GB),
+            10 => ("fig10-mcu-4gb", DispatchPolicy::MaxComputeUtil, 4 * GB),
+            _ => return None,
+        };
+        let mut cfg = ExperimentConfig {
+            name: name.into(),
+            ..ExperimentConfig::default()
+        };
+        cfg.scheduler.policy = policy;
+        cfg.cache = CacheConfig::lru(cache_bytes.max(1)); // first-available never caches
+        Some(cfg)
+    }
+
+    /// The paper's ideal workload execution time for this workload
+    /// (infinite resources, zero-cost communication) — §5.2.5's 1415 s.
+    pub fn ideal_wet_s(&self) -> f64 {
+        crate::workload::ideal_execution_time_s(&self.workload)
+    }
+
+    /// Parse from TOML-subset text. Unknown keys are rejected so typos in
+    /// experiment files fail loudly.
+    pub fn from_toml(text: &str) -> Result<ExperimentConfig> {
+        let doc = Document::parse(text).map_err(Error::Config)?;
+        let mut cfg = ExperimentConfig::default();
+
+        const KNOWN: &[&str] = &[
+            "name",
+            "seed",
+            "cluster.max_nodes",
+            "cluster.cpus_per_node",
+            "cluster.gpfs_gbps",
+            "cluster.local_disk_gbps",
+            "cluster.nic_gbps",
+            "cluster.net_latency_ms",
+            "cluster.gram_latency_min_s",
+            "cluster.gram_latency_max_s",
+            "cluster.dispatch_service_us",
+            "cluster.peer_overhead_ms",
+            "workload.num_tasks",
+            "workload.num_files",
+            "workload.file_size_mb",
+            "workload.compute_ms",
+            "workload.arrival",
+            "workload.arrival_initial",
+            "workload.arrival_factor",
+            "workload.arrival_interval_s",
+            "workload.arrival_max_rate",
+            "workload.arrival_rate",
+            "workload.access",
+            "workload.zipf_s",
+            "workload.locality",
+            "scheduler.policy",
+            "scheduler.window_multiplier",
+            "scheduler.cpu_util_threshold",
+            "scheduler.max_replication",
+            "scheduler.max_tasks_per_pickup",
+            "provisioner.allocation",
+            "provisioner.allocation_increment",
+            "provisioner.allocation_factor",
+            "provisioner.idle_release_s",
+            "provisioner.static",
+            "provisioner.initial_nodes",
+            "cache.capacity_gb",
+            "cache.policy",
+        ];
+        for key in doc.keys() {
+            if !KNOWN.contains(&key) {
+                return Err(Error::Config(format!("unknown config key `{key}`")));
+            }
+        }
+
+        if let Some(name) = doc.get_str("name") {
+            cfg.name = name.to_string();
+        }
+        if let Some(seed) = doc.get_int("seed") {
+            cfg.seed = seed as u64;
+        }
+
+        // [cluster]
+        let c = &mut cfg.cluster;
+        if let Some(v) = doc.get_int("cluster.max_nodes") {
+            c.max_nodes = v as usize;
+        }
+        if let Some(v) = doc.get_int("cluster.cpus_per_node") {
+            c.cpus_per_node = v as usize;
+        }
+        if let Some(v) = doc.get_float("cluster.gpfs_gbps") {
+            c.gpfs_gbps = v;
+        }
+        if let Some(v) = doc.get_float("cluster.local_disk_gbps") {
+            c.local_disk_gbps = v;
+        }
+        if let Some(v) = doc.get_float("cluster.nic_gbps") {
+            c.nic_gbps = v;
+        }
+        if let Some(v) = doc.get_float("cluster.net_latency_ms") {
+            c.net_latency_ms = v;
+        }
+        if let Some(v) = doc.get_float("cluster.gram_latency_min_s") {
+            c.gram_latency_s.0 = v;
+        }
+        if let Some(v) = doc.get_float("cluster.gram_latency_max_s") {
+            c.gram_latency_s.1 = v;
+        }
+        if let Some(v) = doc.get_float("cluster.dispatch_service_us") {
+            c.dispatch_service_us = v;
+        }
+        if let Some(v) = doc.get_float("cluster.peer_overhead_ms") {
+            c.peer_overhead_ms = v;
+        }
+
+        // [workload]
+        let w = &mut cfg.workload;
+        if let Some(v) = doc.get_int("workload.num_tasks") {
+            w.num_tasks = v as u64;
+        }
+        if let Some(v) = doc.get_int("workload.num_files") {
+            w.num_files = v as u32;
+        }
+        if let Some(v) = doc.get_float("workload.file_size_mb") {
+            w.file_size_bytes = (v * MB as f64) as u64;
+        }
+        if let Some(v) = doc.get_float("workload.compute_ms") {
+            w.compute_ms = v;
+        }
+        match doc.get_str("workload.arrival") {
+            None | Some("increasing") => {
+                if let ArrivalSpec::IncreasingRate {
+                    initial,
+                    factor,
+                    interval_s,
+                    max_rate,
+                } = &mut w.arrival
+                {
+                    if let Some(v) = doc.get_float("workload.arrival_initial") {
+                        *initial = v;
+                    }
+                    if let Some(v) = doc.get_float("workload.arrival_factor") {
+                        *factor = v;
+                    }
+                    if let Some(v) = doc.get_float("workload.arrival_interval_s") {
+                        *interval_s = v;
+                    }
+                    if let Some(v) = doc.get_float("workload.arrival_max_rate") {
+                        *max_rate = v;
+                    }
+                }
+            }
+            Some("constant") => {
+                let rate = doc
+                    .get_float("workload.arrival_rate")
+                    .ok_or_else(|| Error::Config("constant arrival needs workload.arrival_rate".into()))?;
+                w.arrival = ArrivalSpec::Constant(rate);
+            }
+            Some("batch") => w.arrival = ArrivalSpec::Batch,
+            Some(other) => {
+                return Err(Error::Config(format!("unknown arrival spec `{other}`")));
+            }
+        }
+        match doc.get_str("workload.access") {
+            None | Some("uniform") => w.access = AccessSpec::Uniform,
+            Some("zipf") => {
+                let s = doc.get_float("workload.zipf_s").unwrap_or(1.0);
+                w.access = AccessSpec::Zipf(s);
+            }
+            Some("locality") => {
+                let l = doc
+                    .get_float("workload.locality")
+                    .ok_or_else(|| Error::Config("locality access needs workload.locality".into()))?;
+                w.access = AccessSpec::Locality(l);
+            }
+            Some(other) => {
+                return Err(Error::Config(format!("unknown access spec `{other}`")));
+            }
+        }
+
+        // [scheduler]
+        let s = &mut cfg.scheduler;
+        if let Some(p) = doc.get_str("scheduler.policy") {
+            s.policy = DispatchPolicy::parse(p)
+                .ok_or_else(|| Error::Config(format!("unknown dispatch policy `{p}`")))?;
+        }
+        if let Some(v) = doc.get_int("scheduler.window_multiplier") {
+            s.window_multiplier = v as usize;
+        }
+        if let Some(v) = doc.get_float("scheduler.cpu_util_threshold") {
+            s.cpu_util_threshold = v;
+        }
+        if let Some(v) = doc.get_int("scheduler.max_replication") {
+            s.max_replication = v as usize;
+        }
+        if let Some(v) = doc.get_int("scheduler.max_tasks_per_pickup") {
+            s.max_tasks_per_pickup = v as usize;
+        }
+
+        // [provisioner]
+        let p = &mut cfg.provisioner;
+        match doc.get_str("provisioner.allocation") {
+            None => {}
+            Some("one") => p.allocation = AllocationPolicy::OneAtATime,
+            Some("additive") => {
+                let inc = doc.get_int("provisioner.allocation_increment").unwrap_or(8) as usize;
+                p.allocation = AllocationPolicy::Additive(inc);
+            }
+            Some("multiplicative") => {
+                let f = doc.get_float("provisioner.allocation_factor").unwrap_or(2.0);
+                p.allocation = AllocationPolicy::Multiplicative(f);
+            }
+            Some("all") => p.allocation = AllocationPolicy::AllAtOnce,
+            Some(other) => {
+                return Err(Error::Config(format!("unknown allocation policy `{other}`")));
+            }
+        }
+        if let Some(v) = doc.get_float("provisioner.idle_release_s") {
+            p.idle_release_s = v;
+        }
+        if let Some(v) = doc.get_bool("provisioner.static") {
+            p.static_provisioning = v;
+        }
+        if let Some(v) = doc.get_int("provisioner.initial_nodes") {
+            p.initial_nodes = v as usize;
+        }
+
+        // [cache]
+        if let Some(v) = doc.get_float("cache.capacity_gb") {
+            cfg.cache.capacity_bytes = (v * GB as f64) as u64;
+        }
+        if let Some(v) = doc.get_str("cache.policy") {
+            cfg.cache.policy = EvictionPolicy::parse(v)
+                .ok_or_else(|| Error::Config(format!("unknown eviction policy `{v}`")))?;
+        }
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &std::path::Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+
+    /// Sanity-check invariants; returns a config error on violation.
+    pub fn validate(&self) -> Result<()> {
+        let fail = |msg: String| Err(Error::Config(msg));
+        if self.cluster.max_nodes == 0 {
+            return fail("cluster.max_nodes must be ≥ 1".into());
+        }
+        if self.cluster.cpus_per_node == 0 {
+            return fail("cluster.cpus_per_node must be ≥ 1".into());
+        }
+        for (name, v) in [
+            ("gpfs_gbps", self.cluster.gpfs_gbps),
+            ("local_disk_gbps", self.cluster.local_disk_gbps),
+            ("nic_gbps", self.cluster.nic_gbps),
+        ] {
+            if v <= 0.0 {
+                return fail(format!("cluster.{name} must be > 0"));
+            }
+        }
+        if self.cluster.gram_latency_s.0 > self.cluster.gram_latency_s.1 {
+            return fail("gram latency min > max".into());
+        }
+        if self.workload.num_tasks == 0 || self.workload.num_files == 0 {
+            return fail("workload must have tasks and files".into());
+        }
+        if self.workload.compute_ms < 0.0 {
+            return fail("workload.compute_ms must be ≥ 0".into());
+        }
+        match self.workload.arrival {
+            ArrivalSpec::IncreasingRate {
+                initial,
+                factor,
+                interval_s,
+                max_rate,
+            } => {
+                if initial <= 0.0 || factor <= 1.0 || interval_s <= 0.0 || max_rate < initial {
+                    return fail("invalid increasing-rate arrival parameters".into());
+                }
+            }
+            ArrivalSpec::Constant(rate) => {
+                if rate <= 0.0 {
+                    return fail("constant arrival rate must be > 0".into());
+                }
+            }
+            ArrivalSpec::Batch => {}
+        }
+        if let AccessSpec::Locality(l) = self.workload.access {
+            if l < 1.0 {
+                return fail("locality must be ≥ 1".into());
+            }
+        }
+        if !(0.0..=1.0).contains(&self.scheduler.cpu_util_threshold) {
+            return fail("cpu_util_threshold must be in [0,1]".into());
+        }
+        if self.scheduler.max_tasks_per_pickup == 0 {
+            return fail("max_tasks_per_pickup must be ≥ 1".into());
+        }
+        if self.scheduler.policy != DispatchPolicy::FirstAvailable
+            && self.cache.capacity_bytes < self.workload.file_size_bytes
+        {
+            return fail(format!(
+                "cache capacity {} cannot hold even one file of {}",
+                self.cache.capacity_bytes, self.workload.file_size_bytes
+            ));
+        }
+        if self.provisioner.initial_nodes > self.cluster.max_nodes {
+            return fail("provisioner.initial_nodes > cluster.max_nodes".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid_and_matches_paper() {
+        let cfg = ExperimentConfig::default();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.cluster.max_nodes, 64);
+        assert_eq!(cfg.workload.num_tasks, 250_000);
+        assert_eq!(cfg.workload.file_size_bytes, 10 * MB);
+        // Ideal WET from the arrival function ≈ 1415 s (§5.2).
+        let wet = cfg.ideal_wet_s();
+        assert!((wet - 1415.0).abs() < 30.0, "ideal WET = {wet}");
+    }
+
+    #[test]
+    fn paper_fig_presets() {
+        for fig in 4..=10 {
+            let cfg = ExperimentConfig::paper_fig(fig).unwrap();
+            cfg.validate().unwrap();
+        }
+        assert!(ExperimentConfig::paper_fig(3).is_none());
+        let f7 = ExperimentConfig::paper_fig(7).unwrap();
+        assert_eq!(f7.cache.capacity_bytes, 2 * GB);
+        assert_eq!(f7.scheduler.policy, DispatchPolicy::GoodCacheCompute);
+    }
+
+    #[test]
+    fn toml_round_trip() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            name = "custom"
+            seed = 7
+            [cluster]
+            max_nodes = 32
+            gpfs_gbps = 8.0
+            [workload]
+            num_tasks = 1000
+            file_size_mb = 1.0
+            access = "zipf"
+            zipf_s = 1.1
+            [scheduler]
+            policy = "max-cache-hit"
+            [cache]
+            capacity_gb = 0.5
+            policy = "lfu"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "custom");
+        assert_eq!(cfg.cluster.max_nodes, 32);
+        assert_eq!(cfg.workload.num_tasks, 1000);
+        assert_eq!(cfg.workload.access, AccessSpec::Zipf(1.1));
+        assert_eq!(cfg.scheduler.policy, DispatchPolicy::MaxCacheHit);
+        assert_eq!(cfg.cache.policy, EvictionPolicy::Lfu);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let err = ExperimentConfig::from_toml("typo_key = 1").unwrap_err();
+        assert!(err.to_string().contains("unknown config key"));
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(ExperimentConfig::from_toml("[cluster]\ngpfs_gbps = -1.0").is_err());
+        assert!(ExperimentConfig::from_toml("[scheduler]\npolicy = \"bogus\"").is_err());
+        assert!(ExperimentConfig::from_toml("[workload]\narrival = \"constant\"").is_err());
+    }
+}

@@ -1,0 +1,261 @@
+//! A small TOML-subset parser (offline replacement for the `toml` crate).
+//!
+//! Supported syntax — enough for experiment configuration files:
+//!
+//! * `[section]` and `[dotted.section]` headers;
+//! * `key = value` with string (`"…"`), integer, float, boolean values;
+//! * `#` comments and blank lines;
+//! * bare keys before the first header live in the root table.
+//!
+//! Values are stored flattened under dotted paths (`section.key`), which is
+//! what the typed config layer consumes. Arrays/inline tables/multi-line
+//! strings are intentionally out of scope.
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// 64-bit signed integer.
+    Int(i64),
+    /// 64-bit float.
+    Float(f64),
+    /// `true` / `false`.
+    Bool(bool),
+}
+
+impl Value {
+    /// As string (exact type required).
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As integer (exact type required).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// As float; integers coerce losslessly.
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// As boolean (exact type required).
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A flat `dotted.path → Value` document.
+#[derive(Debug, Default, Clone)]
+pub struct Document {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Document {
+    /// Parse a document; errors carry 1-based line numbers.
+    pub fn parse(text: &str) -> Result<Document, String> {
+        let mut doc = Document::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| format!("line {}: expected `key = value`", lineno + 1))?;
+            let key = line[..eq].trim();
+            let val_text = line[eq + 1..].trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let value = parse_value(val_text)
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            let path = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            if doc.entries.insert(path.clone(), value).is_some() {
+                return Err(format!("line {}: duplicate key `{path}`", lineno + 1));
+            }
+        }
+        Ok(doc)
+    }
+
+    /// Look up a dotted path.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    /// String at path.
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(Value::as_str)
+    }
+
+    /// Integer at path.
+    pub fn get_int(&self, path: &str) -> Option<i64> {
+        self.get(path).and_then(Value::as_int)
+    }
+
+    /// Float at path (integers coerce).
+    pub fn get_float(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(Value::as_float)
+    }
+
+    /// Boolean at path.
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(Value::as_bool)
+    }
+
+    /// All keys under a dotted prefix (for unknown-key validation).
+    pub fn keys_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        self.entries
+            .keys()
+            .filter(move |k| k.starts_with(prefix))
+            .map(String::as_str)
+    }
+
+    /// All keys in the document.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside a quoted string must not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<Value, String> {
+    if text.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or("unterminated string literal")?;
+        if inner.contains('"') {
+            return Err("embedded quote in string (escapes unsupported)".into());
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match text {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    // Underscore separators allowed in numbers, as in TOML.
+    let num = text.replace('_', "");
+    if num.contains('.') || num.contains('e') || num.contains('E') {
+        num.parse::<f64>()
+            .map(Value::Float)
+            .map_err(|_| format!("invalid float `{text}`"))
+    } else {
+        num.parse::<i64>()
+            .map(Value::Int)
+            .map_err(|_| format!("invalid value `{text}` (not a string/int/float/bool)"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = Document::parse(
+            r#"
+            # experiment
+            name = "fig7"
+            seed = 42
+
+            [cache]
+            capacity_gb = 2.0
+            policy = "lru"
+
+            [scheduler]
+            window_multiplier = 100
+            data_aware = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name"), Some("fig7"));
+        assert_eq!(doc.get_int("seed"), Some(42));
+        assert_eq!(doc.get_float("cache.capacity_gb"), Some(2.0));
+        assert_eq!(doc.get_str("cache.policy"), Some("lru"));
+        assert_eq!(doc.get_bool("scheduler.data_aware"), Some(true));
+        assert_eq!(doc.get_float("scheduler.window_multiplier"), Some(100.0));
+    }
+
+    #[test]
+    fn underscores_and_comments() {
+        let doc = Document::parse("n = 250_000 # tasks\nbw = 4.0# gbps\ns = \"a # b\"").unwrap();
+        assert_eq!(doc.get_int("n"), Some(250_000));
+        assert_eq!(doc.get_float("bw"), Some(4.0));
+        assert_eq!(doc.get_str("s"), Some("a # b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Document::parse("ok = 1\nbroken").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        let err = Document::parse("[unterminated").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        let err = Document::parse("x = \"open").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        let err = Document::parse("a = 1\na = 2").unwrap_err();
+        assert!(err.contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn type_mismatches_are_none() {
+        let doc = Document::parse("x = 5").unwrap();
+        assert_eq!(doc.get_str("x"), None);
+        assert_eq!(doc.get_bool("x"), None);
+        assert_eq!(doc.get_float("x"), Some(5.0)); // int coerces to float
+        assert_eq!(doc.get("missing"), None);
+    }
+
+    #[test]
+    fn keys_under_prefix() {
+        let doc = Document::parse("[a]\nx = 1\ny = 2\n[b]\nz = 3").unwrap();
+        let keys: Vec<_> = doc.keys_under("a.").collect();
+        assert_eq!(keys, vec!["a.x", "a.y"]);
+    }
+}

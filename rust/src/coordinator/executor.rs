@@ -1,0 +1,387 @@
+//! Executor registry — the scheduler's E_set (§3.2).
+//!
+//! Tracks every registered executor (one per provisioned node; each has
+//! `cpus` task slots, 2 in the paper's testbed) and its state: *free*
+//! (≥1 idle slot), *busy* (all slots running tasks), or *pending* (a
+//! dispatch notification is in flight, §3.2's pending state). The free
+//! set is an ordered set so "next free executor" is deterministic.
+
+use crate::ids::ExecutorId;
+use crate::util::time::Micros;
+use std::collections::{BTreeSet, HashMap};
+
+/// Per-executor registry entry.
+#[derive(Debug, Clone)]
+pub struct ExecutorEntry {
+    /// Total task slots (CPUs).
+    pub slots: u32,
+    /// Slots currently running tasks.
+    pub busy_slots: u32,
+    /// Slots reserved by in-flight dispatch notifications.
+    pub pending_slots: u32,
+    /// Time this executor last started or finished a task (idle-release
+    /// accounting in the provisioner).
+    pub last_active: Micros,
+    /// Registration time.
+    pub registered_at: Micros,
+}
+
+impl ExecutorEntry {
+    /// Slots with neither work nor a pending notification.
+    pub fn free_slots(&self) -> u32 {
+        self.slots - self.busy_slots - self.pending_slots
+    }
+}
+
+/// Registry of all executors with free/busy/pending accounting.
+#[derive(Debug, Default)]
+pub struct ExecutorRegistry {
+    entries: HashMap<ExecutorId, ExecutorEntry>,
+    /// Executors with ≥1 free slot, ordered for deterministic iteration.
+    free: BTreeSet<ExecutorId>,
+    total_slots: u64,
+    busy_slots: u64,
+    next_id: u32,
+}
+
+impl ExecutorRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a newly provisioned executor with `slots` CPUs; returns its
+    /// fresh id.
+    pub fn register(&mut self, slots: u32, now: Micros) -> ExecutorId {
+        assert!(slots > 0);
+        let id = ExecutorId(self.next_id);
+        self.next_id += 1;
+        self.entries.insert(
+            id,
+            ExecutorEntry {
+                slots,
+                busy_slots: 0,
+                pending_slots: 0,
+                last_active: now,
+                registered_at: now,
+            },
+        );
+        self.free.insert(id);
+        self.total_slots += slots as u64;
+        id
+    }
+
+    /// Deregister (release) an executor. Panics if it still has busy or
+    /// pending slots — the provisioner must only release idle executors.
+    pub fn deregister(&mut self, id: ExecutorId) -> ExecutorEntry {
+        let entry = self.entries.remove(&id).expect("unknown executor");
+        assert_eq!(entry.busy_slots, 0, "releasing busy executor {id}");
+        assert_eq!(entry.pending_slots, 0, "releasing pending executor {id}");
+        self.free.remove(&id);
+        self.total_slots -= entry.slots as u64;
+        entry
+    }
+
+    /// Look up an executor.
+    pub fn get(&self, id: ExecutorId) -> Option<&ExecutorEntry> {
+        self.entries.get(&id)
+    }
+
+    /// Is this executor registered?
+    pub fn contains(&self, id: ExecutorId) -> bool {
+        self.entries.contains_key(&id)
+    }
+
+    /// Does `id` have a free slot (registered, not all busy/pending)?
+    pub fn is_free(&self, id: ExecutorId) -> bool {
+        self.free.contains(&id)
+    }
+
+    /// First free executor at-or-after `from` in id order, wrapping —
+    /// the paper's "next free executor" fallback, kept rotating so
+    /// first-available load-balances instead of pinning executor 0.
+    pub fn next_free(&self, from: ExecutorId) -> Option<ExecutorId> {
+        self.free
+            .range(from..)
+            .next()
+            .or_else(|| self.free.iter().next())
+            .copied()
+    }
+
+    /// Iterate all free executors in id order.
+    pub fn free_iter(&self) -> impl Iterator<Item = ExecutorId> + '_ {
+        self.free.iter().copied()
+    }
+
+    /// Number of free executors.
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Reserve a slot for an in-flight dispatch (pending state).
+    pub fn mark_pending(&mut self, id: ExecutorId) {
+        let e = self.entries.get_mut(&id).expect("unknown executor");
+        assert!(e.free_slots() > 0, "no free slot to mark pending on {id}");
+        e.pending_slots += 1;
+        if e.free_slots() == 0 {
+            self.free.remove(&id);
+        }
+    }
+
+    /// Convert a pending reservation into a running task.
+    pub fn pending_to_busy(&mut self, id: ExecutorId, now: Micros) {
+        let e = self.entries.get_mut(&id).expect("unknown executor");
+        assert!(e.pending_slots > 0, "no pending slot on {id}");
+        e.pending_slots -= 1;
+        e.busy_slots += 1;
+        e.last_active = now;
+        self.busy_slots += 1;
+    }
+
+    /// Cancel a pending reservation (notification declined / no work).
+    pub fn cancel_pending(&mut self, id: ExecutorId) {
+        let e = self.entries.get_mut(&id).expect("unknown executor");
+        assert!(e.pending_slots > 0, "no pending slot on {id}");
+        e.pending_slots -= 1;
+        self.free.insert(id);
+    }
+
+    /// Start a task directly on a free slot (no notification round-trip).
+    pub fn start_task(&mut self, id: ExecutorId, now: Micros) {
+        let e = self.entries.get_mut(&id).expect("unknown executor");
+        assert!(e.free_slots() > 0, "no free slot on {id}");
+        e.busy_slots += 1;
+        e.last_active = now;
+        self.busy_slots += 1;
+        if e.free_slots() == 0 {
+            self.free.remove(&id);
+        }
+    }
+
+    /// Finish a task, freeing its slot.
+    pub fn finish_task(&mut self, id: ExecutorId, now: Micros) {
+        let e = self.entries.get_mut(&id).expect("unknown executor");
+        assert!(e.busy_slots > 0, "finish with no busy slot on {id}");
+        e.busy_slots -= 1;
+        e.last_active = now;
+        self.busy_slots -= 1;
+        self.free.insert(id);
+    }
+
+    /// Registered executor count.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no executors are registered.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total slots across the cluster.
+    pub fn total_slots(&self) -> u64 {
+        self.total_slots
+    }
+
+    /// Busy slots across the cluster.
+    pub fn busy_slots(&self) -> u64 {
+        self.busy_slots
+    }
+
+    /// CPU utilization in [0, 1] — the good-cache-compute heuristic input
+    /// ("number of busy nodes divided by all registered nodes", §3.2; we
+    /// use slots for a smoother signal with 2 CPUs/node).
+    pub fn cpu_utilization(&self) -> f64 {
+        if self.total_slots == 0 {
+            0.0
+        } else {
+            self.busy_slots as f64 / self.total_slots as f64
+        }
+    }
+
+    /// Iterate `(id, entry)` pairs in arbitrary order.
+    pub fn iter(&self) -> impl Iterator<Item = (ExecutorId, &ExecutorEntry)> {
+        self.entries.iter().map(|(&id, e)| (id, e))
+    }
+
+    /// Executors idle since before `cutoff` (provisioner release scan).
+    pub fn idle_since(&self, cutoff: Micros) -> Vec<ExecutorId> {
+        let mut v: Vec<ExecutorId> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| {
+                e.busy_slots == 0 && e.pending_slots == 0 && e.last_active < cutoff
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Internal consistency check (tests).
+    #[doc(hidden)]
+    pub fn check_consistent(&self) -> Result<(), String> {
+        let mut busy = 0u64;
+        let mut total = 0u64;
+        for (id, e) in &self.entries {
+            if e.busy_slots + e.pending_slots > e.slots {
+                return Err(format!("{id}: overcommitted"));
+            }
+            let should_be_free = e.free_slots() > 0;
+            if should_be_free != self.free.contains(id) {
+                return Err(format!("{id}: free set disagrees"));
+            }
+            busy += e.busy_slots as u64;
+            total += e.slots as u64;
+        }
+        if busy != self.busy_slots || total != self.total_slots {
+            return Err("aggregate slot counters drifted".into());
+        }
+        for id in &self.free {
+            if !self.entries.contains_key(id) {
+                return Err(format!("{id} in free set but not registered"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_free_busy_pending() {
+        let mut reg = ExecutorRegistry::new();
+        let e = reg.register(2, Micros::ZERO);
+        assert!(reg.is_free(e));
+        reg.start_task(e, Micros::from_secs(1));
+        assert!(reg.is_free(e)); // 1 of 2 slots busy
+        reg.mark_pending(e);
+        assert!(!reg.is_free(e)); // busy + pending = 2
+        reg.pending_to_busy(e, Micros::from_secs(2));
+        assert_eq!(reg.cpu_utilization(), 1.0);
+        reg.finish_task(e, Micros::from_secs(3));
+        reg.finish_task(e, Micros::from_secs(3));
+        assert_eq!(reg.cpu_utilization(), 0.0);
+        reg.check_consistent().unwrap();
+    }
+
+    #[test]
+    fn next_free_rotates() {
+        let mut reg = ExecutorRegistry::new();
+        let ids: Vec<_> = (0..3).map(|_| reg.register(1, Micros::ZERO)).collect();
+        assert_eq!(reg.next_free(ids[1]), Some(ids[1]));
+        reg.start_task(ids[1], Micros::ZERO);
+        assert_eq!(reg.next_free(ids[1]), Some(ids[2]));
+        reg.start_task(ids[2], Micros::ZERO);
+        // Wraps around.
+        assert_eq!(reg.next_free(ids[1]), Some(ids[0]));
+        reg.start_task(ids[0], Micros::ZERO);
+        assert_eq!(reg.next_free(ids[1]), None);
+    }
+
+    #[test]
+    fn cancel_pending_restores_free() {
+        let mut reg = ExecutorRegistry::new();
+        let e = reg.register(1, Micros::ZERO);
+        reg.mark_pending(e);
+        assert!(!reg.is_free(e));
+        reg.cancel_pending(e);
+        assert!(reg.is_free(e));
+        reg.check_consistent().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "releasing busy executor")]
+    fn cannot_release_busy() {
+        let mut reg = ExecutorRegistry::new();
+        let e = reg.register(1, Micros::ZERO);
+        reg.start_task(e, Micros::ZERO);
+        reg.deregister(e);
+    }
+
+    #[test]
+    fn idle_since_finds_only_idle() {
+        let mut reg = ExecutorRegistry::new();
+        let a = reg.register(1, Micros::ZERO);
+        let b = reg.register(1, Micros::ZERO);
+        reg.start_task(b, Micros::from_secs(100));
+        // a idle since 0; b busy.
+        assert_eq!(reg.idle_since(Micros::from_secs(50)), vec![a]);
+        reg.finish_task(b, Micros::from_secs(100));
+        assert_eq!(reg.idle_since(Micros::from_secs(50)), vec![a]);
+        assert_eq!(
+            reg.idle_since(Micros::from_secs(101)),
+            vec![a, b]
+        );
+    }
+
+    #[test]
+    fn registry_invariants_under_random_ops() {
+        use crate::util::proptest::{property, Gen};
+        property("registry invariants", 80, |g: &mut Gen| {
+            let mut reg = ExecutorRegistry::new();
+            // (id, busy, pending) shadow model
+            let mut shadow: Vec<(ExecutorId, u32, u32, u32)> = Vec::new();
+            for step in 0..g.usize_in(1..150) {
+                let now = Micros::from_secs(step as u64);
+                match g.usize_in(0..6) {
+                    0 => {
+                        let slots = g.u64_in(1..4) as u32;
+                        let id = reg.register(slots, now);
+                        shadow.push((id, slots, 0, 0));
+                    }
+                    1 if !shadow.is_empty() => {
+                        let i = g.usize_in(0..shadow.len());
+                        let (id, slots, busy, pend) = shadow[i];
+                        if busy + pend < slots {
+                            reg.start_task(id, now);
+                            shadow[i].2 += 1;
+                        }
+                    }
+                    2 if !shadow.is_empty() => {
+                        let i = g.usize_in(0..shadow.len());
+                        let (id, _, busy, _) = shadow[i];
+                        if busy > 0 {
+                            reg.finish_task(id, now);
+                            shadow[i].2 -= 1;
+                        }
+                    }
+                    3 if !shadow.is_empty() => {
+                        let i = g.usize_in(0..shadow.len());
+                        let (id, slots, busy, pend) = shadow[i];
+                        if busy + pend < slots {
+                            reg.mark_pending(id);
+                            shadow[i].3 += 1;
+                        }
+                    }
+                    4 if !shadow.is_empty() => {
+                        let i = g.usize_in(0..shadow.len());
+                        let (id, _, _, pend) = shadow[i];
+                        if pend > 0 {
+                            if g.bool(0.5) {
+                                reg.pending_to_busy(id, now);
+                                shadow[i].2 += 1;
+                            } else {
+                                reg.cancel_pending(id);
+                            }
+                            shadow[i].3 -= 1;
+                        }
+                    }
+                    5 if !shadow.is_empty() => {
+                        let i = g.usize_in(0..shadow.len());
+                        let (id, _, busy, pend) = shadow[i];
+                        if busy == 0 && pend == 0 {
+                            reg.deregister(id);
+                            shadow.swap_remove(i);
+                        }
+                    }
+                    _ => {}
+                }
+                reg.check_consistent()?;
+            }
+            Ok(())
+        });
+    }
+}

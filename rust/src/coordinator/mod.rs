@@ -1,0 +1,165 @@
+//! The Falkon coordinator: wait queue, executor registry, data-aware
+//! scheduler, and dynamic resource provisioner.
+//!
+//! Everything in this module is *pure decision logic* over explicit state
+//! — no clocks, threads, or I/O — so the same code drives both the
+//! discrete-event simulator ([`crate::sim`]) and the live thread-pool
+//! engine ([`crate::live`]). The engines own time and data movement; the
+//! coordinator owns *what happens next*:
+//!
+//! * [`queue::WaitQueue`] — the task wait queue (Q) with O(1) window
+//!   removal;
+//! * [`executor::ExecutorRegistry`] — E_set with free/busy/pending state;
+//! * [`scheduler::Scheduler`] — the two-phase data-aware scheduler;
+//! * [`provisioner::Provisioner`] — DRP allocation/release decisions.
+
+pub mod executor;
+pub mod provisioner;
+pub mod queue;
+pub mod scheduler;
+
+use crate::cache::ObjectCache;
+#[cfg(test)]
+use crate::cache::CacheConfig;
+use crate::ids::{ExecutorId, FileId};
+use crate::index::LocationIndex;
+use crate::util::prng::Pcg64;
+
+/// Classification of one file access — the paper's three-way split that
+/// every cache/throughput figure is built on (§5.2.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AccessKind {
+    /// Served from the executor's local cache (H_L).
+    HitLocal,
+    /// Fetched from a peer executor's cache (H_C, "global hit").
+    HitGlobal,
+    /// Fetched from persistent storage / GPFS (H_S, miss).
+    Miss,
+}
+
+/// Outcome of resolving one file access on the task data path.
+#[derive(Debug, Clone)]
+pub struct AccessResolution {
+    /// Local hit / global (peer) hit / persistent-store miss.
+    pub kind: AccessKind,
+    /// For global hits, the peer executor chosen as the transfer source.
+    pub peer: Option<ExecutorId>,
+    /// Files evicted from the executor's cache to make room (the live
+    /// engine deletes these from the worker's cache directory).
+    pub evicted: Vec<FileId>,
+}
+
+/// Shared helper: resolve where an executor will get `file` from and
+/// update cache + index accordingly.
+///
+/// The peer for a global hit is picked uniformly at random among holders
+/// to spread load, like Falkon's GridFTP peer selection. This is the
+/// single place where cache contents and the central index are mutated
+/// on the task data path, keeping the two coherent in both engines.
+pub fn resolve_access(
+    exec: ExecutorId,
+    file: FileId,
+    size: u64,
+    cache: &mut ObjectCache,
+    index: &mut LocationIndex,
+    rng: &mut Pcg64,
+) -> AccessResolution {
+    if cache.touch(file) {
+        return AccessResolution {
+            kind: AccessKind::HitLocal,
+            peer: None,
+            evicted: Vec::new(),
+        };
+    }
+    // Pick a peer holder if any (excluding ourselves, which we know
+    // misses).
+    let peer = index.holders(file).and_then(|holders| {
+        let peers: Vec<ExecutorId> = holders.iter().copied().filter(|&e| e != exec).collect();
+        if peers.is_empty() {
+            None
+        } else {
+            Some(peers[rng.below(peers.len() as u64) as usize])
+        }
+    });
+    // Insert into our cache (evicting as needed) and update the index.
+    let mut evicted_files = Vec::new();
+    if let Some(evicted) = cache.insert(file, size, rng) {
+        for &old in &evicted {
+            index.remove(old, exec);
+        }
+        index.add(file, exec);
+        evicted_files = evicted;
+    }
+    AccessResolution {
+        kind: if peer.is_some() {
+            AccessKind::HitGlobal
+        } else {
+            AccessKind::Miss
+        },
+        peer,
+        evicted: evicted_files,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::EvictionPolicy;
+
+    fn cache(cap: u64) -> ObjectCache {
+        ObjectCache::new(CacheConfig {
+            capacity_bytes: cap,
+            policy: EvictionPolicy::Lru,
+        })
+    }
+
+    #[test]
+    fn miss_then_local_hit() {
+        let mut rng = Pcg64::seeded(1);
+        let mut c = cache(100);
+        let mut ix = LocationIndex::new();
+        let r = resolve_access(ExecutorId(0), FileId(1), 10, &mut c, &mut ix, &mut rng);
+        assert_eq!(r.kind, AccessKind::Miss);
+        assert_eq!(r.peer, None);
+        assert_eq!(ix.replication(FileId(1)), 1);
+        let r = resolve_access(ExecutorId(0), FileId(1), 10, &mut c, &mut ix, &mut rng);
+        assert_eq!(r.kind, AccessKind::HitLocal);
+    }
+
+    #[test]
+    fn global_hit_from_peer() {
+        let mut rng = Pcg64::seeded(1);
+        let mut c0 = cache(100);
+        let mut c1 = cache(100);
+        let mut ix = LocationIndex::new();
+        resolve_access(ExecutorId(0), FileId(1), 10, &mut c0, &mut ix, &mut rng);
+        let r = resolve_access(ExecutorId(1), FileId(1), 10, &mut c1, &mut ix, &mut rng);
+        assert_eq!(r.kind, AccessKind::HitGlobal);
+        assert_eq!(r.peer, Some(ExecutorId(0)));
+        assert_eq!(ix.replication(FileId(1)), 2);
+    }
+
+    #[test]
+    fn eviction_updates_index() {
+        let mut rng = Pcg64::seeded(1);
+        let mut c = cache(20);
+        let mut ix = LocationIndex::new();
+        resolve_access(ExecutorId(0), FileId(1), 15, &mut c, &mut ix, &mut rng);
+        let r = resolve_access(ExecutorId(0), FileId(2), 15, &mut c, &mut ix, &mut rng);
+        assert_eq!(r.evicted, vec![FileId(1)]);
+        assert_eq!(ix.replication(FileId(1)), 0, "evicted file left the index");
+        assert_eq!(ix.replication(FileId(2)), 1);
+        ix.check_consistent().unwrap();
+    }
+
+    #[test]
+    fn oversized_file_is_miss_without_caching() {
+        let mut rng = Pcg64::seeded(1);
+        let mut c = cache(5);
+        let mut ix = LocationIndex::new();
+        let r = resolve_access(ExecutorId(0), FileId(1), 10, &mut c, &mut ix, &mut rng);
+        assert_eq!(r.kind, AccessKind::Miss);
+        assert_eq!(ix.replication(FileId(1)), 0);
+        assert!(c.is_empty());
+    }
+}

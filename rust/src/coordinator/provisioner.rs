@@ -1,0 +1,292 @@
+//! Dynamic Resource Provisioning (DRP) — §3.1, §5.2.
+//!
+//! Falkon's provisioner watches the wait-queue length (the paper's load
+//! metric) and acquires executors through GRAM4/the LRM, which imposes a
+//! 30–60 s allocation latency; idle executors are released so the
+//! resources can serve other users (the performance-index win of Fig 13).
+//!
+//! The provisioner here is pure decision logic: the engine calls
+//! [`Provisioner::on_tick`] periodically (1 Hz in the simulator, matching
+//! the paper's provisioning granularity) and enacts the returned
+//! [`ProvisionAction`] — scheduling `allocate` node registrations after
+//! the GRAM latency, and deregistering the `release` list.
+
+use crate::coordinator::executor::ExecutorRegistry;
+use crate::ids::ExecutorId;
+use crate::util::time::Micros;
+
+/// How aggressively new nodes are requested (the paper's tunable
+/// allocation policies; `one`/`additive`/`multiplicative`/`all`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AllocationPolicy {
+    /// Request one node per decision.
+    OneAtATime,
+    /// Request a fixed batch per decision.
+    Additive(usize),
+    /// Grow the fleet by a factor per decision (≥1 node).
+    Multiplicative(f64),
+    /// Request everything still needed at once.
+    AllAtOnce,
+}
+
+/// Provisioner tuning.
+#[derive(Debug, Clone)]
+pub struct ProvisionerConfig {
+    /// Allocation aggressiveness.
+    pub allocation: AllocationPolicy,
+    /// Release executors idle for this many seconds (the paper's
+    /// de-allocation policy; releases drop cached data).
+    pub idle_release_s: f64,
+    /// Static provisioning: allocate `initial_nodes` before t=0 and never
+    /// change (the Fig 13 comparison run uses 64 static nodes).
+    pub static_provisioning: bool,
+    /// Nodes registered at experiment start (before any GRAM latency).
+    pub initial_nodes: usize,
+    /// Queue pressure that justifies one node: desired fleet =
+    /// ceil(queue_len / queue_tasks_per_node), clamped to max_nodes.
+    pub queue_tasks_per_node: u64,
+}
+
+impl Default for ProvisionerConfig {
+    fn default() -> Self {
+        ProvisionerConfig {
+            allocation: AllocationPolicy::Multiplicative(2.0),
+            idle_release_s: 60.0,
+            static_provisioning: false,
+            initial_nodes: 0,
+            queue_tasks_per_node: 10,
+        }
+    }
+}
+
+impl ProvisionerConfig {
+    /// Static fleet of `n` nodes (the paper's non-DRP baseline).
+    pub fn static_nodes(n: usize) -> Self {
+        ProvisionerConfig {
+            static_provisioning: true,
+            initial_nodes: n,
+            ..ProvisionerConfig::default()
+        }
+    }
+}
+
+/// What the engine should enact after a provisioning tick.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct ProvisionAction {
+    /// Nodes to request from the LRM now (arrive after GRAM latency).
+    pub allocate: usize,
+    /// Idle executors to release now.
+    pub release: Vec<ExecutorId>,
+}
+
+/// Cumulative provisioner statistics (Fig 13's CPU-time accounting uses
+/// the registration intervals tracked by the metrics layer; these
+/// counters cover decisions).
+#[derive(Debug, Default, Clone)]
+pub struct ProvisionerStats {
+    /// Total nodes requested.
+    pub nodes_requested: u64,
+    /// Total nodes released.
+    pub nodes_released: u64,
+    /// Ticks that requested at least one node.
+    pub allocation_decisions: u64,
+}
+
+/// The DRP decision engine.
+#[derive(Debug)]
+pub struct Provisioner {
+    /// Tuning.
+    pub config: ProvisionerConfig,
+    max_nodes: usize,
+    /// Nodes requested but not yet registered (in GRAM limbo).
+    pending: usize,
+    /// Counters.
+    pub stats: ProvisionerStats,
+}
+
+impl Provisioner {
+    /// New provisioner for a cluster capped at `max_nodes`.
+    pub fn new(config: ProvisionerConfig, max_nodes: usize) -> Self {
+        Provisioner {
+            config,
+            max_nodes,
+            pending: 0,
+            stats: ProvisionerStats::default(),
+        }
+    }
+
+    /// Nodes requested but not yet registered.
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    /// The engine must call this when a requested node finishes GRAM
+    /// bootstrap and registers.
+    pub fn on_node_registered(&mut self) {
+        debug_assert!(self.pending > 0, "registration without a request");
+        self.pending = self.pending.saturating_sub(1);
+    }
+
+    /// Periodic provisioning decision.
+    ///
+    /// `queue_len` is the current wait-queue length (the paper's load
+    /// metric). Returns how many nodes to request and which to release.
+    pub fn on_tick(
+        &mut self,
+        now: Micros,
+        queue_len: usize,
+        registry: &ExecutorRegistry,
+    ) -> ProvisionAction {
+        if self.config.static_provisioning {
+            return ProvisionAction::default();
+        }
+        let mut action = ProvisionAction::default();
+        let registered = registry.len();
+        let capacity = registered + self.pending;
+
+        // --- Allocation: queue pressure → desired fleet size.
+        if queue_len > 0 && capacity < self.max_nodes {
+            let desired = (queue_len as u64)
+                .div_ceil(self.config.queue_tasks_per_node)
+                .min(self.max_nodes as u64) as usize;
+            let deficit = desired.saturating_sub(capacity);
+            if deficit > 0 {
+                let step = match self.config.allocation {
+                    AllocationPolicy::OneAtATime => 1,
+                    AllocationPolicy::Additive(k) => k.max(1),
+                    AllocationPolicy::Multiplicative(f) => {
+                        let grown = ((capacity.max(1)) as f64 * (f - 1.0)).ceil() as usize;
+                        grown.max(1)
+                    }
+                    AllocationPolicy::AllAtOnce => deficit,
+                };
+                action.allocate = step.min(deficit).min(self.max_nodes - capacity);
+                if action.allocate > 0 {
+                    self.pending += action.allocate;
+                    self.stats.nodes_requested += action.allocate as u64;
+                    self.stats.allocation_decisions += 1;
+                }
+            }
+        }
+
+        // --- Release: executors idle longer than the threshold. Never
+        // release while the queue is non-empty (they are about to get
+        // work) — mirrors Falkon's demand-driven contraction.
+        if queue_len == 0 && self.config.idle_release_s > 0.0 {
+            let cutoff = now.saturating_sub(Micros::from_secs_f64(self.config.idle_release_s));
+            action.release = registry.idle_since(cutoff);
+            self.stats.nodes_released += action.release.len() as u64;
+        }
+
+        action
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry(n: usize) -> ExecutorRegistry {
+        let mut reg = ExecutorRegistry::new();
+        for _ in 0..n {
+            reg.register(2, Micros::ZERO);
+        }
+        reg
+    }
+
+    #[test]
+    fn allocates_under_queue_pressure() {
+        let mut p = Provisioner::new(ProvisionerConfig::default(), 64);
+        let reg = registry(0);
+        let a = p.on_tick(Micros::from_secs(1), 100, &reg);
+        assert!(a.allocate >= 1);
+        assert_eq!(p.pending(), a.allocate);
+    }
+
+    #[test]
+    fn respects_max_nodes() {
+        let mut p = Provisioner::new(
+            ProvisionerConfig {
+                allocation: AllocationPolicy::AllAtOnce,
+                ..ProvisionerConfig::default()
+            },
+            8,
+        );
+        let reg = registry(5);
+        let a = p.on_tick(Micros::from_secs(1), 1_000_000, &reg);
+        assert_eq!(a.allocate, 3);
+        // All pending: no more allocations.
+        let a2 = p.on_tick(Micros::from_secs(2), 1_000_000, &reg);
+        assert_eq!(a2.allocate, 0);
+    }
+
+    #[test]
+    fn multiplicative_growth_doubles() {
+        let mut p = Provisioner::new(
+            ProvisionerConfig {
+                allocation: AllocationPolicy::Multiplicative(2.0),
+                queue_tasks_per_node: 1,
+                ..ProvisionerConfig::default()
+            },
+            64,
+        );
+        let reg = registry(4);
+        let a = p.on_tick(Micros::from_secs(1), 1_000, &reg);
+        assert_eq!(a.allocate, 4, "capacity 4 doubles to 8");
+    }
+
+    #[test]
+    fn one_at_a_time_is_gentle() {
+        let mut p = Provisioner::new(
+            ProvisionerConfig {
+                allocation: AllocationPolicy::OneAtATime,
+                ..ProvisionerConfig::default()
+            },
+            64,
+        );
+        let reg = registry(0);
+        assert_eq!(p.on_tick(Micros::from_secs(1), 10_000, &reg).allocate, 1);
+    }
+
+    #[test]
+    fn no_allocation_when_queue_within_capacity() {
+        let mut p = Provisioner::new(ProvisionerConfig::default(), 64);
+        let reg = registry(10);
+        // 10 nodes × 4 tasks/node threshold covers a queue of 40.
+        let a = p.on_tick(Micros::from_secs(1), 40, &reg);
+        assert_eq!(a.allocate, 0);
+    }
+
+    #[test]
+    fn releases_idle_nodes_when_queue_empty() {
+        let mut p = Provisioner::new(ProvisionerConfig::default(), 64);
+        let mut reg = registry(2);
+        // Node 1 worked recently; node 0 idle since t=0.
+        reg.start_task(ExecutorId(1), Micros::from_secs(100));
+        reg.finish_task(ExecutorId(1), Micros::from_secs(100));
+        let a = p.on_tick(Micros::from_secs(90), 0, &reg);
+        assert_eq!(a.release, vec![ExecutorId(0)]);
+        // Queue pressure suppresses release.
+        let a = p.on_tick(Micros::from_secs(90), 5, &reg);
+        assert!(a.release.is_empty());
+    }
+
+    #[test]
+    fn static_provisioning_never_changes() {
+        let mut p = Provisioner::new(ProvisionerConfig::static_nodes(64), 64);
+        let reg = registry(64);
+        let a = p.on_tick(Micros::from_secs(1000), 1_000_000, &reg);
+        assert_eq!(a, ProvisionAction::default());
+    }
+
+    #[test]
+    fn registration_drains_pending() {
+        let mut p = Provisioner::new(ProvisionerConfig::default(), 64);
+        let reg = registry(0);
+        let a = p.on_tick(Micros::from_secs(1), 100, &reg);
+        for _ in 0..a.allocate {
+            p.on_node_registered();
+        }
+        assert_eq!(p.pending(), 0);
+    }
+}

@@ -1,0 +1,305 @@
+//! The Falkon wait queue (Q in §3.2).
+//!
+//! The data-aware scheduler's second phase scans a *window* of up to W
+//! tasks from the head of the queue and removes arbitrary tasks in the
+//! window (those with the best cache-hit scores). A `VecDeque` would make
+//! those removals O(W); this queue is an arena of slots threaded with an
+//! intrusive doubly-linked list, giving O(1) push/pop/mid-removal and
+//! cache-friendly in-order traversal — the property the paper's
+//! O(min(|Q|, W)) scheduling-cost argument depends on.
+
+use crate::ids::{FileId, TaskId};
+use crate::util::time::Micros;
+
+/// A task (κ ∈ K) as the coordinator sees it.
+#[derive(Debug, Clone)]
+pub struct Task {
+    /// Task id (position in the incoming stream).
+    pub id: TaskId,
+    /// Data objects the task reads — θ(κ). Usually one file in the
+    /// paper's workloads, but the scheduler handles any number.
+    pub files: Vec<FileId>,
+    /// Compute duration μ(κ).
+    pub compute: Micros,
+    /// Submission time (for response-time metrics).
+    pub arrival: Micros,
+}
+
+/// Stable reference to a queued task (valid until removed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueRef(u32);
+
+const NIL: u32 = u32::MAX;
+
+#[derive(Debug)]
+struct Slot {
+    task: Option<Task>,
+    prev: u32,
+    next: u32,
+}
+
+/// FIFO wait queue with O(1) mid-queue removal.
+#[derive(Debug, Default)]
+pub struct WaitQueue {
+    slots: Vec<Slot>,
+    free: Vec<u32>,
+    head: u32,
+    tail: u32,
+    len: usize,
+    /// High-water mark (the paper reports 7K–200K peak queue lengths).
+    pub max_len: usize,
+}
+
+impl WaitQueue {
+    /// Empty queue.
+    pub fn new() -> Self {
+        WaitQueue {
+            slots: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            len: 0,
+            max_len: 0,
+        }
+    }
+
+    /// Number of queued tasks.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no tasks are waiting.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Append a task at the tail; returns its stable reference.
+    pub fn push_back(&mut self, task: Task) -> QueueRef {
+        let idx = match self.free.pop() {
+            Some(i) => {
+                self.slots[i as usize] = Slot {
+                    task: Some(task),
+                    prev: self.tail,
+                    next: NIL,
+                };
+                i
+            }
+            None => {
+                self.slots.push(Slot {
+                    task: Some(task),
+                    prev: self.tail,
+                    next: NIL,
+                });
+                (self.slots.len() - 1) as u32
+            }
+        };
+        if self.tail != NIL {
+            self.slots[self.tail as usize].next = idx;
+        } else {
+            self.head = idx;
+        }
+        self.tail = idx;
+        self.len += 1;
+        self.max_len = self.max_len.max(self.len);
+        QueueRef(idx)
+    }
+
+    /// Peek the head task (T₀) without removing it.
+    pub fn front(&self) -> Option<&Task> {
+        if self.head == NIL {
+            None
+        } else {
+            self.slots[self.head as usize].task.as_ref()
+        }
+    }
+
+    /// Reference to the head slot.
+    pub fn front_ref(&self) -> Option<QueueRef> {
+        if self.head == NIL {
+            None
+        } else {
+            Some(QueueRef(self.head))
+        }
+    }
+
+    /// Remove and return the head task.
+    pub fn pop_front(&mut self) -> Option<Task> {
+        self.front_ref().map(|r| self.remove(r))
+    }
+
+    /// Remove an arbitrary queued task by reference.
+    ///
+    /// Panics if the reference was already removed (references are not
+    /// reused until then, so a stale ref is a logic bug upstream).
+    pub fn remove(&mut self, qref: QueueRef) -> Task {
+        let idx = qref.0;
+        let (prev, next, task) = {
+            let slot = &mut self.slots[idx as usize];
+            let task = slot.task.take().expect("QueueRef already removed");
+            (slot.prev, slot.next, task)
+        };
+        if prev != NIL {
+            self.slots[prev as usize].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slots[next as usize].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+        self.free.push(idx);
+        self.len -= 1;
+        task
+    }
+
+    /// Access a queued task by reference.
+    pub fn get(&self, qref: QueueRef) -> &Task {
+        self.slots[qref.0 as usize]
+            .task
+            .as_ref()
+            .expect("QueueRef already removed")
+    }
+
+    /// Iterate `(QueueRef, &Task)` head→tail, up to `window` entries —
+    /// the scheduling-window scan of §3.2. O(min(|Q|, window)).
+    pub fn window(&self, window: usize) -> WindowIter<'_> {
+        WindowIter {
+            queue: self,
+            cursor: self.head,
+            remaining: window,
+        }
+    }
+}
+
+/// Iterator over the scheduling window.
+pub struct WindowIter<'a> {
+    queue: &'a WaitQueue,
+    cursor: u32,
+    remaining: usize,
+}
+
+impl<'a> Iterator for WindowIter<'a> {
+    type Item = (QueueRef, &'a Task);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.remaining == 0 || self.cursor == NIL {
+            return None;
+        }
+        let idx = self.cursor;
+        let slot = &self.queue.slots[idx as usize];
+        self.cursor = slot.next;
+        self.remaining -= 1;
+        Some((
+            QueueRef(idx),
+            slot.task.as_ref().expect("linked slot must be occupied"),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(i: u64) -> Task {
+        Task {
+            id: TaskId(i),
+            files: vec![FileId(i as u32)],
+            compute: Micros::from_millis(10),
+            arrival: Micros::ZERO,
+        }
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut q = WaitQueue::new();
+        for i in 0..5 {
+            q.push_back(task(i));
+        }
+        assert_eq!(q.len(), 5);
+        for i in 0..5 {
+            assert_eq!(q.pop_front().unwrap().id, TaskId(i));
+        }
+        assert!(q.is_empty());
+        assert_eq!(q.max_len, 5);
+    }
+
+    #[test]
+    fn mid_removal_keeps_order() {
+        let mut q = WaitQueue::new();
+        let refs: Vec<_> = (0..5).map(|i| q.push_back(task(i))).collect();
+        assert_eq!(q.remove(refs[2]).id, TaskId(2));
+        assert_eq!(q.remove(refs[0]).id, TaskId(0));
+        let order: Vec<_> = q.window(10).map(|(_, t)| t.id.0).collect();
+        assert_eq!(order, vec![1, 3, 4]);
+        assert_eq!(q.remove(refs[4]).id, TaskId(4));
+        let order: Vec<_> = q.window(10).map(|(_, t)| t.id.0).collect();
+        assert_eq!(order, vec![1, 3]);
+    }
+
+    #[test]
+    fn window_is_bounded() {
+        let mut q = WaitQueue::new();
+        for i in 0..100 {
+            q.push_back(task(i));
+        }
+        assert_eq!(q.window(7).count(), 7);
+        assert_eq!(q.window(1000).count(), 100);
+    }
+
+    #[test]
+    fn slot_reuse_after_removal() {
+        let mut q = WaitQueue::new();
+        let r = q.push_back(task(1));
+        q.remove(r);
+        let r2 = q.push_back(task(2));
+        assert_eq!(q.get(r2).id, TaskId(2));
+        assert_eq!(q.len(), 1);
+        // Arena should not have grown.
+        assert_eq!(q.slots.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "QueueRef already removed")]
+    fn stale_ref_panics() {
+        let mut q = WaitQueue::new();
+        let r = q.push_back(task(1));
+        q.remove(r);
+        let _ = q.get(r);
+    }
+
+    #[test]
+    fn random_ops_preserve_linkage() {
+        use crate::util::proptest::{property, Gen};
+        property("waitqueue linkage", 100, |g: &mut Gen| {
+            let mut q = WaitQueue::new();
+            let mut live: Vec<(QueueRef, u64)> = Vec::new();
+            let mut expect: Vec<u64> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..g.usize_in(1..200) {
+                if live.is_empty() || g.bool(0.6) {
+                    let r = q.push_back(task(next_id));
+                    live.push((r, next_id));
+                    expect.push(next_id);
+                    next_id += 1;
+                } else {
+                    let i = g.usize_in(0..live.len());
+                    let (r, id) = live.swap_remove(i);
+                    let t = q.remove(r);
+                    if t.id.0 != id {
+                        return Err(format!("removed {} expected {}", t.id.0, id));
+                    }
+                    expect.retain(|&x| x != id);
+                }
+                let got: Vec<u64> = q.window(usize::MAX).map(|(_, t)| t.id.0).collect();
+                if got != expect {
+                    return Err(format!("order {got:?} != {expect:?}"));
+                }
+                if q.len() != expect.len() {
+                    return Err(format!("len {} != {}", q.len(), expect.len()));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,592 @@
+//! The data-aware scheduler (§3.2) — the heart of data diffusion.
+//!
+//! The scheduler is split in two parts, exactly as in the paper:
+//!
+//! 1. **Notification** ([`Scheduler::select_notify`]): given the task at
+//!    the head of the wait queue (T₀), score candidate executors by how
+//!    many of the task's files they cache (via the I_map), and pick the
+//!    best *free* candidate to notify that work is available. Policy
+//!    decides the fallback when no preferred executor is free.
+//! 2. **Pickup** ([`Scheduler::pick_tasks`]): when an executor asks for
+//!    work, scan a *scheduling window* of up to W tasks from the queue
+//!    head, score each by its local cache-hit fraction
+//!    (|fileSet ∩ E_map(executor)| / |fileSet|), dispatch any 100 %-hit
+//!    task immediately, and otherwise dispatch the m best-scoring
+//!    eligible tasks. Policy decides eligibility of 0-hit tasks.
+//!
+//! Complexity is O(|θ(κ)| + replication + min(|Q|, W)) per decision, as
+//! claimed in the paper — guaranteed by the hash-map/sorted-set shapes of
+//! [`LocationIndex`](crate::index::LocationIndex) and
+//! [`WaitQueue`](crate::coordinator::queue::WaitQueue), and measured by
+//! the Figure 3 bench (`cargo bench --bench fig03_scheduler`).
+
+pub mod policy;
+
+pub use policy::DispatchPolicy;
+
+use crate::coordinator::executor::ExecutorRegistry;
+use crate::coordinator::queue::{QueueRef, Task, WaitQueue};
+use crate::ids::{ExecutorId, FileId};
+use crate::index::LocationIndex;
+use std::collections::HashMap;
+
+/// Scheduler tuning knobs (§3.2, §5.1).
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Dispatch policy (paper policies 1–5).
+    pub policy: DispatchPolicy,
+    /// Scheduling window W = `window_multiplier` × registered executors
+    /// (paper: 100× → 3200 at 32 nodes).
+    pub window_multiplier: usize,
+    /// good-cache-compute heuristic 1: CPU-utilization threshold that
+    /// switches between max-cache-hit behaviour (util ≥ threshold) and
+    /// max-compute-util behaviour (util < threshold). Paper: 0.8 in the
+    /// empirical section.
+    pub cpu_util_threshold: f64,
+    /// good-cache-compute heuristic 2: maximum replicas of a data object
+    /// before the scheduler stops diffusing additional copies.
+    pub max_replication: usize,
+    /// Maximum tasks handed to an executor per pickup (m in §3.2).
+    pub max_tasks_per_pickup: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            policy: DispatchPolicy::GoodCacheCompute,
+            window_multiplier: 100,
+            cpu_util_threshold: 0.8,
+            max_replication: 2,
+            max_tasks_per_pickup: 1,
+        }
+    }
+}
+
+/// Why phase 1 chose (or declined to choose) an executor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NotifyOutcome {
+    /// Notify this executor; it caches ≥1 of the task's files.
+    Preferred(ExecutorId),
+    /// No free preferred executor; fall back to the next free executor.
+    Fallback(ExecutorId),
+    /// Policy says wait (max-cache-hit semantics: a preferred executor
+    /// exists but is busy; dispatch is delayed until it frees).
+    Wait,
+    /// Nothing is free at all.
+    NoneFree,
+}
+
+/// Counters the Figure 3 microbench reports (per-decision cost breakdown).
+#[derive(Debug, Default, Clone)]
+pub struct SchedulerStats {
+    /// Phase-1 decisions taken.
+    pub notify_decisions: u64,
+    /// Phase-2 pickups served.
+    pub pickups: u64,
+    /// Tasks dispatched.
+    pub tasks_dispatched: u64,
+    /// Window entries inspected across all pickups.
+    pub tasks_inspected: u64,
+    /// Tasks dispatched with a 100 % local-hit score.
+    pub full_hit_dispatches: u64,
+}
+
+/// The data-aware scheduler. Pure logic: no clocks, no I/O — both the
+/// discrete-event engine and the live engine drive it.
+#[derive(Debug)]
+pub struct Scheduler {
+    /// Tuning knobs.
+    pub config: SchedulerConfig,
+    /// Rotating hint so first-available round-robins over free executors.
+    next_free_hint: u32,
+    /// Cost/behaviour counters.
+    pub stats: SchedulerStats,
+    /// Scratch buffer reused across notify decisions (perf: avoids an
+    /// allocation per decision on the hot path).
+    candidates: HashMap<ExecutorId, usize>,
+    /// Scratch buffer for the window scan's partial candidates (perf:
+    /// §Perf iteration 1 — reuse instead of re-allocating per pickup).
+    partial_scratch: Vec<(u8, usize, usize, QueueRef)>,
+}
+
+impl Scheduler {
+    /// New scheduler with the given configuration.
+    pub fn new(config: SchedulerConfig) -> Self {
+        Scheduler {
+            config,
+            next_free_hint: 0,
+            stats: SchedulerStats::default(),
+            candidates: HashMap::new(),
+            partial_scratch: Vec::new(),
+        }
+    }
+
+    /// Effective scheduling window for the current cluster size.
+    pub fn window_size(&self, registry: &ExecutorRegistry) -> usize {
+        (self.config.window_multiplier * registry.len()).max(1)
+    }
+
+    /// **Phase 1 — notification.** Choose an executor to notify for the
+    /// task with files `files` at the head of the wait queue.
+    pub fn select_notify(
+        &mut self,
+        files: &[FileId],
+        registry: &ExecutorRegistry,
+        index: &LocationIndex,
+    ) -> NotifyOutcome {
+        self.stats.notify_decisions += 1;
+        if registry.free_count() == 0 {
+            return NotifyOutcome::NoneFree;
+        }
+        let policy = self.config.policy;
+        if policy == DispatchPolicy::FirstAvailable {
+            return match self.rotate_free(registry) {
+                Some(e) => NotifyOutcome::Fallback(e),
+                None => NotifyOutcome::NoneFree,
+            };
+        }
+
+        // Score candidates: executors holding any of the task's files,
+        // weighted by how many they hold (the paper's candidate counting).
+        self.candidates.clear();
+        let mut any_holder = false;
+        for &f in files {
+            if let Some(holders) = index.holders(f) {
+                for &e in holders {
+                    any_holder = true;
+                    *self.candidates.entry(e).or_insert(0) += 1;
+                }
+            }
+        }
+        // Best free candidate, ties broken by id for determinism.
+        let mut best: Option<(usize, ExecutorId)> = None;
+        for (&e, &score) in self.candidates.iter() {
+            if registry.is_free(e) {
+                let better = match best {
+                    None => true,
+                    Some((bs, be)) => score > bs || (score == bs && e < be),
+                };
+                if better {
+                    best = Some((score, e));
+                }
+            }
+        }
+        if let Some((_, e)) = best {
+            return NotifyOutcome::Preferred(e);
+        }
+
+        if policy == DispatchPolicy::FirstCacheAvailable {
+            // No free executor holds the data: fall back immediately.
+            return match self.rotate_free(registry) {
+                Some(e) => NotifyOutcome::Fallback(e),
+                None => NotifyOutcome::NoneFree,
+            };
+        }
+
+        let wait_for_holder = match policy {
+            DispatchPolicy::MaxCacheHit => true,
+            DispatchPolicy::MaxComputeUtil => false,
+            DispatchPolicy::GoodCacheCompute => {
+                registry.cpu_utilization() >= self.config.cpu_util_threshold
+            }
+            DispatchPolicy::FirstAvailable | DispatchPolicy::FirstCacheAvailable => {
+                unreachable!("handled above")
+            }
+        };
+        if any_holder && wait_for_holder {
+            // Data is cached somewhere but every holder is busy: delay
+            // dispatch until the holder frees (max-cache-hit semantics).
+            NotifyOutcome::Wait
+        } else {
+            // Data cached nowhere (bootstrap miss) or policy prefers
+            // utilization: send to the next free executor.
+            match self.rotate_free(registry) {
+                Some(e) => NotifyOutcome::Fallback(e),
+                None => NotifyOutcome::NoneFree,
+            }
+        }
+    }
+
+    /// **Phase 2 — pickup.** The executor `exec` is asking for work: scan
+    /// the scheduling window and remove up to `limit` tasks for it (the
+    /// engine passes `min(max_tasks_per_pickup, free slots)`). Returns
+    /// the dispatched tasks (possibly empty — the paper's "no tasks
+    /// returned" outcome sends the executor back to the free pool).
+    pub fn pick_tasks(
+        &mut self,
+        exec: ExecutorId,
+        limit: usize,
+        queue: &mut WaitQueue,
+        registry: &ExecutorRegistry,
+        index: &LocationIndex,
+    ) -> Vec<Task> {
+        self.stats.pickups += 1;
+        let m = limit.max(1);
+        if queue.is_empty() {
+            return Vec::new();
+        }
+
+        // first-available ignores data location entirely: O(1) head pop.
+        if self.config.policy == DispatchPolicy::FirstAvailable {
+            let mut out = Vec::with_capacity(m);
+            for _ in 0..m {
+                match queue.pop_front() {
+                    Some(t) => out.push(t),
+                    None => break,
+                }
+            }
+            self.stats.tasks_dispatched += out.len() as u64;
+            return out;
+        }
+
+        let window = self.window_size(registry);
+        let mcu_mode = self.mcu_mode(registry);
+        // §Perf: hoist the E_map(exec) lookup out of the scan — one hash
+        // probe per pickup instead of one per window entry.
+        let exec_set = index.cached_at(exec);
+
+        // Single pass over the window: take 100 %-hit tasks immediately,
+        // remember the best partial candidates otherwise.
+        let mut full_hits: Vec<QueueRef> = Vec::new();
+        // (class, score_num, queue_position) — lower tuple is better.
+        let mut partial = std::mem::take(&mut self.partial_scratch);
+        partial.clear();
+        // §Perf: with m == 1 (the common case) track the single best
+        // partial candidate inline instead of collecting + sorting.
+        let mut best_one: Option<(u8, usize, usize, QueueRef)> = None;
+        // §Perf iteration 2: when the executor caches nothing, no task
+        // can score hits, so the first class-2 candidate (files cached
+        // nowhere — the best zero-hit class) is provably optimal and the
+        // scan can stop there. This collapses the cold-start phase from
+        // full-window scans to O(1) without changing any decision.
+        let no_hits_possible = exec_set.is_none_or(|s| s.is_empty());
+        let mut inspected = 0u64;
+        for (pos, (qref, task)) in queue.window(window).enumerate() {
+            inspected += 1;
+            let nfiles = task.files.len().max(1);
+            let hits = match exec_set {
+                Some(set) => task.files.iter().filter(|f| set.contains(f)).count(),
+                None => 0,
+            };
+            if hits == nfiles {
+                full_hits.push(qref);
+                if full_hits.len() == m {
+                    break;
+                }
+                continue;
+            }
+            let class = if hits > 0 {
+                1 // partial local hit
+            } else {
+                self.zero_hit_class(task, index, mcu_mode)
+            };
+            if class < u8::MAX {
+                let cand = (class, nfiles - hits, pos, qref);
+                if m == 1 {
+                    let key = (cand.0, cand.1, cand.2);
+                    if best_one.is_none_or(|b| key < (b.0, b.1, b.2)) {
+                        best_one = Some(cand);
+                    }
+                    if no_hits_possible && class == 2 {
+                        break; // nothing later can beat (2, ·, earlier pos)
+                    }
+                } else if full_hits.len() + partial.len() < window {
+                    partial.push(cand);
+                }
+            }
+        }
+        self.stats.tasks_inspected += inspected;
+
+        let mut refs = full_hits;
+        self.stats.full_hit_dispatches += refs.len() as u64;
+        if refs.len() < m {
+            if m == 1 {
+                if let Some((_, _, _, qref)) = best_one {
+                    refs.push(qref);
+                }
+            } else if !partial.is_empty() {
+                // Order: class asc (local-partial, uncached, replica-ok,
+                // replica-capped), then misses asc (higher hit fraction
+                // first), then queue order. Deterministic.
+                partial.sort_unstable_by_key(|&(class, miss, pos, _)| (class, miss, pos));
+                for &(_, _, _, qref) in partial.iter().take(m - refs.len()) {
+                    refs.push(qref);
+                }
+            }
+        }
+        self.partial_scratch = partial;
+
+        let tasks: Vec<Task> = refs.into_iter().map(|r| queue.remove(r)).collect();
+        self.stats.tasks_dispatched += tasks.len() as u64;
+        tasks
+    }
+
+    /// Eligibility class for a task with zero local hits at the asking
+    /// executor. `u8::MAX` means "leave it in the queue".
+    ///
+    /// * class 2 — files cached **nowhere**: someone must fetch from
+    ///   persistent storage; dispatching here bootstraps diffusion.
+    /// * class 3 — files cached only at busy executors, replication below
+    ///   the cap: dispatching here creates a useful extra replica
+    ///   (max-compute-util behaviour).
+    /// * class 4 — as above but replication already at the cap (only
+    ///   taken when CPUs are starving).
+    fn zero_hit_class(&self, task: &Task, index: &LocationIndex, mcu_mode: bool) -> u8 {
+        // §Perf: one index probe per file gives both the cached-anywhere
+        // and the replication-cap answers.
+        let max_repl = task
+            .files
+            .iter()
+            .map(|&f| index.replication(f))
+            .max()
+            .unwrap_or(0);
+        if max_repl == 0 {
+            return 2;
+        }
+        match self.config.policy {
+            // max-cache-hit never dispatches a task away from its data:
+            // wait for the holder (paper: "no tasks are returned").
+            DispatchPolicy::MaxCacheHit => u8::MAX,
+            DispatchPolicy::GoodCacheCompute if !mcu_mode => u8::MAX,
+            _ => {
+                if max_repl >= self.config.max_replication {
+                    4
+                } else {
+                    3
+                }
+            }
+        }
+    }
+
+    /// Is good-cache-compute currently in max-compute-util mode?
+    fn mcu_mode(&self, registry: &ExecutorRegistry) -> bool {
+        match self.config.policy {
+            DispatchPolicy::MaxComputeUtil
+            | DispatchPolicy::FirstAvailable
+            | DispatchPolicy::FirstCacheAvailable => true,
+            DispatchPolicy::MaxCacheHit => false,
+            DispatchPolicy::GoodCacheCompute => {
+                registry.cpu_utilization() < self.config.cpu_util_threshold
+            }
+        }
+    }
+
+    fn rotate_free(&mut self, registry: &ExecutorRegistry) -> Option<ExecutorId> {
+        let from = ExecutorId(self.next_free_hint);
+        let found = registry.next_free(from)?;
+        self.next_free_hint = found.0.wrapping_add(1);
+        Some(found)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ids::TaskId;
+    use crate::util::time::Micros;
+
+    fn task(i: u64, files: &[u32]) -> Task {
+        Task {
+            id: TaskId(i),
+            files: files.iter().map(|&f| FileId(f)).collect(),
+            compute: Micros::from_millis(10),
+            arrival: Micros::ZERO,
+        }
+    }
+
+    fn setup(n_exec: usize) -> (ExecutorRegistry, LocationIndex, WaitQueue) {
+        let mut reg = ExecutorRegistry::new();
+        for _ in 0..n_exec {
+            reg.register(2, Micros::ZERO);
+        }
+        (reg, LocationIndex::new(), WaitQueue::new())
+    }
+
+    fn sched(policy: DispatchPolicy) -> Scheduler {
+        Scheduler::new(SchedulerConfig {
+            policy,
+            ..SchedulerConfig::default()
+        })
+    }
+
+    #[test]
+    fn first_available_round_robins() {
+        let (reg, index, _) = setup(3);
+        let mut s = sched(DispatchPolicy::FirstAvailable);
+        let mut picks = Vec::new();
+        for _ in 0..3 {
+            match s.select_notify(&[FileId(0)], &reg, &index) {
+                NotifyOutcome::Fallback(e) => picks.push(e.0),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        picks.sort_unstable();
+        assert_eq!(picks, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn notify_prefers_holder() {
+        let (reg, mut index, _) = setup(3);
+        index.add(FileId(7), ExecutorId(2));
+        let mut s = sched(DispatchPolicy::MaxComputeUtil);
+        assert_eq!(
+            s.select_notify(&[FileId(7)], &reg, &index),
+            NotifyOutcome::Preferred(ExecutorId(2))
+        );
+    }
+
+    #[test]
+    fn mch_waits_for_busy_holder() {
+        let (mut reg, mut index, _) = setup(2);
+        index.add(FileId(7), ExecutorId(0));
+        // Make executor 0 fully busy.
+        reg.start_task(ExecutorId(0), Micros::ZERO);
+        reg.start_task(ExecutorId(0), Micros::ZERO);
+        let mut s = sched(DispatchPolicy::MaxCacheHit);
+        assert_eq!(
+            s.select_notify(&[FileId(7)], &reg, &index),
+            NotifyOutcome::Wait
+        );
+        // But a file cached nowhere bootstraps to a free executor.
+        assert_eq!(
+            s.select_notify(&[FileId(8)], &reg, &index),
+            NotifyOutcome::Fallback(ExecutorId(1))
+        );
+    }
+
+    #[test]
+    fn mcu_falls_back_to_free_executor() {
+        let (mut reg, mut index, _) = setup(2);
+        index.add(FileId(7), ExecutorId(0));
+        reg.start_task(ExecutorId(0), Micros::ZERO);
+        reg.start_task(ExecutorId(0), Micros::ZERO);
+        let mut s = sched(DispatchPolicy::MaxComputeUtil);
+        assert!(matches!(
+            s.select_notify(&[FileId(7)], &reg, &index),
+            NotifyOutcome::Fallback(ExecutorId(1))
+        ));
+    }
+
+    #[test]
+    fn gcc_switches_on_utilization() {
+        let (mut reg, mut index, _) = setup(2);
+        index.add(FileId(7), ExecutorId(0));
+        reg.start_task(ExecutorId(0), Micros::ZERO);
+        reg.start_task(ExecutorId(0), Micros::ZERO);
+        let mut s = sched(DispatchPolicy::GoodCacheCompute);
+        // util = 2/4 = 0.5 < 0.8 → mcu mode → fallback.
+        assert!(matches!(
+            s.select_notify(&[FileId(7)], &reg, &index),
+            NotifyOutcome::Fallback(_)
+        ));
+        // Push util to 0.75… still below. One more task → 3/4 < 0.8; fill all → 1.0.
+        reg.start_task(ExecutorId(1), Micros::ZERO);
+        reg.start_task(ExecutorId(1), Micros::ZERO);
+        assert_eq!(
+            s.select_notify(&[FileId(7)], &reg, &index),
+            NotifyOutcome::NoneFree
+        );
+    }
+
+    #[test]
+    fn pickup_prefers_full_hits() {
+        let (reg, mut index, mut q) = setup(2);
+        index.add(FileId(1), ExecutorId(0));
+        index.add(FileId(2), ExecutorId(1));
+        q.push_back(task(0, &[2])); // hit at exec 1, not exec 0
+        q.push_back(task(1, &[1])); // hit at exec 0
+        let mut s = sched(DispatchPolicy::GoodCacheCompute);
+        let picked = s.pick_tasks(ExecutorId(0), 1, &mut q, &reg, &index);
+        assert_eq!(picked.len(), 1);
+        assert_eq!(picked[0].id, TaskId(1));
+        assert_eq!(q.len(), 1);
+        assert_eq!(s.stats.full_hit_dispatches, 1);
+    }
+
+    #[test]
+    fn mch_pickup_leaves_foreign_tasks() {
+        let (mut reg, mut index, mut q) = setup(2);
+        index.add(FileId(1), ExecutorId(1));
+        // Executor 1 is busy; its task sits in the queue.
+        reg.start_task(ExecutorId(1), Micros::ZERO);
+        reg.start_task(ExecutorId(1), Micros::ZERO);
+        q.push_back(task(0, &[1]));
+        let mut s = sched(DispatchPolicy::MaxCacheHit);
+        let picked = s.pick_tasks(ExecutorId(0), 1, &mut q, &reg, &index);
+        assert!(picked.is_empty(), "mch must wait for the holder");
+        assert_eq!(q.len(), 1);
+        // An uncached task bootstraps.
+        q.push_back(task(1, &[9]));
+        let picked = s.pick_tasks(ExecutorId(0), 1, &mut q, &reg, &index);
+        assert_eq!(picked.len(), 1);
+        assert_eq!(picked[0].id, TaskId(1));
+    }
+
+    #[test]
+    fn mcu_pickup_takes_foreign_tasks() {
+        let (mut reg, mut index, mut q) = setup(2);
+        index.add(FileId(1), ExecutorId(1));
+        reg.start_task(ExecutorId(1), Micros::ZERO);
+        reg.start_task(ExecutorId(1), Micros::ZERO);
+        q.push_back(task(0, &[1]));
+        let mut s = sched(DispatchPolicy::MaxComputeUtil);
+        let picked = s.pick_tasks(ExecutorId(0), 1, &mut q, &reg, &index);
+        assert_eq!(picked.len(), 1, "mcu must keep the CPU busy");
+    }
+
+    #[test]
+    fn replication_cap_orders_candidates() {
+        let (reg, mut index, mut q) = setup(8);
+        // file 1 already at 4 replicas (the default cap); file 2 at 1.
+        for e in 0..4 {
+            index.add(FileId(1), ExecutorId(e));
+        }
+        index.add(FileId(2), ExecutorId(0));
+        q.push_back(task(0, &[1])); // over cap → class 4
+        q.push_back(task(1, &[2])); // under cap → class 3
+        let mut s = sched(DispatchPolicy::MaxComputeUtil);
+        let picked = s.pick_tasks(ExecutorId(7), 1, &mut q, &reg, &index);
+        assert_eq!(picked[0].id, TaskId(1), "under-cap replica preferred");
+    }
+
+    #[test]
+    fn first_available_pickup_is_fifo() {
+        let (reg, index, mut q) = setup(1);
+        for i in 0..5 {
+            q.push_back(task(i, &[i as u32]));
+        }
+        let mut s = Scheduler::new(SchedulerConfig {
+            policy: DispatchPolicy::FirstAvailable,
+            max_tasks_per_pickup: 3,
+            ..SchedulerConfig::default()
+        });
+        let picked = s.pick_tasks(ExecutorId(0), 3, &mut q, &reg, &index);
+        let ids: Vec<u64> = picked.iter().map(|t| t.id.0).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn window_bounds_inspection() {
+        let (reg, index, mut q) = setup(1); // window = 100 × 1
+        for i in 0..500 {
+            q.push_back(task(i, &[i as u32]));
+        }
+        let mut s = sched(DispatchPolicy::GoodCacheCompute);
+        let _ = s.pick_tasks(ExecutorId(0), 1, &mut q, &reg, &index);
+        assert!(s.stats.tasks_inspected <= 100, "{}", s.stats.tasks_inspected);
+    }
+
+    #[test]
+    fn multi_file_tasks_score_fractionally() {
+        let (reg, mut index, mut q) = setup(2);
+        index.add(FileId(1), ExecutorId(0));
+        index.add(FileId(2), ExecutorId(0));
+        index.add(FileId(3), ExecutorId(1));
+        q.push_back(task(0, &[1, 3])); // 1/2 hit at exec 0
+        q.push_back(task(1, &[1, 2])); // 2/2 hit at exec 0
+        let mut s = sched(DispatchPolicy::GoodCacheCompute);
+        let picked = s.pick_tasks(ExecutorId(0), 1, &mut q, &reg, &index);
+        assert_eq!(picked[0].id, TaskId(1));
+    }
+}

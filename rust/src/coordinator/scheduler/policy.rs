@@ -1,0 +1,95 @@
+//! The five dispatch policies of §3.2 / §4.2.
+
+/// Task dispatch policy (paper numbering in comments).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DispatchPolicy {
+    /// (1) Ignore data location; first free executor; executors always
+    /// read from persistent storage (the no-data-diffusion baseline).
+    FirstAvailable,
+    /// (2) Prefer a free executor holding any of the task's data, else
+    /// the first free executor. The paper notes it has no practical
+    /// advantage; included for completeness and the Fig 3 bench.
+    FirstCacheAvailable,
+    /// (3) Dispatch to the executor with the most of the task's data,
+    /// waiting for it if busy. Maximizes cache-hit ratio at the cost of
+    /// CPU utilization (best for data-intensive workloads).
+    MaxCacheHit,
+    /// (4) Always dispatch to an available executor, preferring the one
+    /// with the most of the task's data. Maximizes CPU utilization at
+    /// the cost of extra data movement (best for compute-intensive
+    /// workloads).
+    MaxComputeUtil,
+    /// (5) Combination of (3) and (4): behave like max-cache-hit while
+    /// CPU utilization is above a threshold, like max-compute-util
+    /// below it; bounded by a maximum replication factor.
+    GoodCacheCompute,
+}
+
+impl DispatchPolicy {
+    /// All policies, in paper order.
+    pub const ALL: [DispatchPolicy; 5] = [
+        DispatchPolicy::FirstAvailable,
+        DispatchPolicy::FirstCacheAvailable,
+        DispatchPolicy::MaxCacheHit,
+        DispatchPolicy::MaxComputeUtil,
+        DispatchPolicy::GoodCacheCompute,
+    ];
+
+    /// Canonical hyphenated name (as in the paper).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchPolicy::FirstAvailable => "first-available",
+            DispatchPolicy::FirstCacheAvailable => "first-cache-available",
+            DispatchPolicy::MaxCacheHit => "max-cache-hit",
+            DispatchPolicy::MaxComputeUtil => "max-compute-util",
+            DispatchPolicy::GoodCacheCompute => "good-cache-compute",
+        }
+    }
+
+    /// Parse a policy name (hyphens or underscores).
+    pub fn parse(s: &str) -> Option<DispatchPolicy> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "first-available" | "fa" => Some(DispatchPolicy::FirstAvailable),
+            "first-cache-available" | "fca" => Some(DispatchPolicy::FirstCacheAvailable),
+            "max-cache-hit" | "mch" => Some(DispatchPolicy::MaxCacheHit),
+            "max-compute-util" | "mcu" => Some(DispatchPolicy::MaxComputeUtil),
+            "good-cache-compute" | "gcc" => Some(DispatchPolicy::GoodCacheCompute),
+            _ => None,
+        }
+    }
+
+    /// Does this policy use data diffusion (per-executor caching)?
+    /// first-available works directly against persistent storage.
+    pub fn uses_caching(&self) -> bool {
+        !matches!(self, DispatchPolicy::FirstAvailable)
+    }
+}
+
+impl std::fmt::Display for DispatchPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for p in DispatchPolicy::ALL {
+            assert_eq!(DispatchPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(DispatchPolicy::parse("GCC"), Some(DispatchPolicy::GoodCacheCompute));
+        assert_eq!(DispatchPolicy::parse("max_cache_hit"), Some(DispatchPolicy::MaxCacheHit));
+        assert_eq!(DispatchPolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn caching_flag() {
+        assert!(!DispatchPolicy::FirstAvailable.uses_caching());
+        for p in &DispatchPolicy::ALL[1..] {
+            assert!(p.uses_caching());
+        }
+    }
+}

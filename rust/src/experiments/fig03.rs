@@ -1,0 +1,261 @@
+//! Figure 3 — raw data-aware scheduler performance (§5.1).
+//!
+//! The paper measures the Falkon service's scheduling throughput with a
+//! no-I/O workload: 250K tasks over 10K 1-byte files on 32 nodes, window
+//! 3200, utilization threshold 0.8. Reported: 2981 decisions/s for
+//! first-available (no I/O) down to 1322/s for max-cache-hit, with a
+//! per-decision cost breakdown (communication vs scheduling).
+//!
+//! This driver benchmarks *our* scheduler implementation on the same
+//! workload shape, driving the notify + pickup phases directly (no
+//! simulated time, executors complete instantly) and attributing wall
+//! time to the paper's cost categories.
+
+use crate::cache::{CacheConfig, EvictionPolicy, ObjectCache};
+use crate::coordinator::executor::ExecutorRegistry;
+use crate::coordinator::queue::{Task, WaitQueue};
+use crate::coordinator::scheduler::{DispatchPolicy, Scheduler, SchedulerConfig};
+use crate::coordinator::resolve_access;
+use crate::ids::{ExecutorId, FileId, TaskId};
+use crate::index::LocationIndex;
+use crate::report::{f, Table};
+use crate::util::prng::Pcg64;
+use crate::util::time::Micros;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Result of one policy's microbenchmark.
+#[derive(Debug, Clone)]
+pub struct SchedulerBenchResult {
+    /// Policy measured.
+    pub policy: DispatchPolicy,
+    /// Tasks dispatched.
+    pub tasks: u64,
+    /// Scheduling decisions per second (the paper's headline number).
+    pub decisions_per_sec: f64,
+    /// Seconds spent in phase 1 (notification scoring).
+    pub notify_s: f64,
+    /// Seconds spent in phase 2 (window scan + dispatch).
+    pub pickup_s: f64,
+    /// Seconds spent in cache/index maintenance (executor side).
+    pub index_s: f64,
+    /// Fraction of dispatches that were 100 % cache hits.
+    pub full_hit_frac: f64,
+}
+
+/// Run the §5.1 microbenchmark for one policy.
+///
+/// `num_tasks` tasks over `num_files` 1-byte files, `nodes`×2 executors.
+/// Executors "execute" instantly; with caching policies they also update
+/// their caches + the central index, so data-aware scoring sees realistic
+/// replica state (every file ends up cached after its first dispatch).
+pub fn bench_policy(
+    policy: DispatchPolicy,
+    num_tasks: u64,
+    num_files: u32,
+    nodes: usize,
+) -> SchedulerBenchResult {
+    let mut rng = Pcg64::seeded(0x5eed);
+    let mut reg = ExecutorRegistry::new();
+    let mut index = LocationIndex::new();
+    let mut queue = WaitQueue::new();
+    let mut caches: HashMap<ExecutorId, ObjectCache> = HashMap::new();
+    let caching = policy.uses_caching();
+
+    let execs: Vec<ExecutorId> = (0..nodes).map(|_| reg.register(2, Micros::ZERO)).collect();
+    for &e in &execs {
+        if caching {
+            index.register_executor(e);
+            caches.insert(
+                e,
+                ObjectCache::new(CacheConfig {
+                    capacity_bytes: 1 << 30, // 1-byte files: effectively infinite
+                    policy: EvictionPolicy::Lru,
+                }),
+            );
+        }
+    }
+
+    // Pre-fill the wait queue (batch submission, as in §5.1).
+    for i in 0..num_tasks {
+        queue.push_back(Task {
+            id: TaskId(i),
+            files: vec![FileId(rng.below(num_files as u64) as u32)],
+            compute: Micros::ZERO,
+            arrival: Micros::ZERO,
+        });
+    }
+
+    let mut sched = Scheduler::new(SchedulerConfig {
+        policy,
+        window_multiplier: 100, // window = 3200 at 32 nodes, as in §5.1
+        cpu_util_threshold: 0.8,
+        max_replication: 4,
+        max_tasks_per_pickup: 1,
+        ..SchedulerConfig::default()
+    });
+
+    let mut notify_s = 0.0;
+    let mut pickup_s = 0.0;
+    let mut index_s = 0.0;
+    let mut dispatched = 0u64;
+    let t0 = Instant::now();
+    let mut ei = 0usize;
+    // Drive the dispatch loop: notify for the head task, then serve the
+    // chosen executor's pickup; executors complete instantly so the
+    // registry never saturates (pure scheduler cost, like sleep-0 tasks).
+    while !queue.is_empty() {
+        let head_files = queue.front().expect("non-empty").files.clone();
+        let tn = Instant::now();
+        let outcome = sched.select_notify(&head_files, &reg, &index);
+        notify_s += tn.elapsed().as_secs_f64();
+        let exec = match outcome {
+            crate::coordinator::scheduler::NotifyOutcome::Preferred(e)
+            | crate::coordinator::scheduler::NotifyOutcome::Fallback(e) => e,
+            _ => {
+                // All executors momentarily out of the free set cannot
+                // happen here (instant completion); round-robin fallback.
+                ei = (ei + 1) % execs.len();
+                execs[ei]
+            }
+        };
+        let tp = Instant::now();
+        let tasks = sched.pick_tasks(exec, 1, &mut queue, &reg, &index);
+        pickup_s += tp.elapsed().as_secs_f64();
+        if tasks.is_empty() {
+            // max-cache-hit can decline; force progress on the head task
+            // via its holder (paper: dispatch is delayed — here the
+            // holder is instantly free, so serve it directly).
+            let holder = head_files
+                .first()
+                .and_then(|&f| index.holders(f))
+                .and_then(|h| h.iter().next().copied());
+            if let Some(h) = holder {
+                let tp2 = Instant::now();
+                let t2 = sched.pick_tasks(h, 1, &mut queue, &reg, &index);
+                pickup_s += tp2.elapsed().as_secs_f64();
+                dispatched += execute(&t2, h, caching, &mut caches, &mut index, &mut rng, &mut index_s);
+            } else {
+                // Nothing anywhere (cold cache, mch): head pops via its
+                // bootstrap class on the fallback executor next round —
+                // guard against a livelock by popping directly.
+                let t = queue.pop_front().expect("non-empty");
+                dispatched += execute(
+                    &[t],
+                    exec,
+                    caching,
+                    &mut caches,
+                    &mut index,
+                    &mut rng,
+                    &mut index_s,
+                );
+            }
+            continue;
+        }
+        dispatched += execute(&tasks, exec, caching, &mut caches, &mut index, &mut rng, &mut index_s);
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    SchedulerBenchResult {
+        policy,
+        tasks: dispatched,
+        decisions_per_sec: dispatched as f64 / elapsed,
+        notify_s,
+        pickup_s,
+        index_s,
+        full_hit_frac: if sched.stats.tasks_dispatched > 0 {
+            sched.stats.full_hit_dispatches as f64 / sched.stats.tasks_dispatched as f64
+        } else {
+            0.0
+        },
+    }
+}
+
+/// "Execute" dispatched tasks instantly: cache+index maintenance only.
+fn execute(
+    tasks: &[Task],
+    exec: ExecutorId,
+    caching: bool,
+    caches: &mut HashMap<ExecutorId, ObjectCache>,
+    index: &mut LocationIndex,
+    rng: &mut Pcg64,
+    index_s: &mut f64,
+) -> u64 {
+    if caching {
+        let ti = Instant::now();
+        for t in tasks {
+            let cache = caches.get_mut(&exec).expect("cache exists");
+            for &file in &t.files {
+                let _ = resolve_access(exec, file, 1, cache, index, rng);
+            }
+        }
+        *index_s += ti.elapsed().as_secs_f64();
+    }
+    tasks.len() as u64
+}
+
+/// Run the benchmark across the paper's policy set.
+pub fn run(num_tasks: u64, num_files: u32, nodes: usize) -> Vec<SchedulerBenchResult> {
+    [
+        DispatchPolicy::FirstAvailable,
+        DispatchPolicy::FirstCacheAvailable,
+        DispatchPolicy::MaxComputeUtil,
+        DispatchPolicy::MaxCacheHit,
+        DispatchPolicy::GoodCacheCompute,
+    ]
+    .into_iter()
+    .map(|p| bench_policy(p, num_tasks, num_files, nodes))
+    .collect()
+}
+
+/// Render the Figure 3 table.
+pub fn table(results: &[SchedulerBenchResult]) -> Table {
+    let mut t = Table::new(
+        "Figure 3: data-aware scheduler performance (paper: 2981/s first-available → 1322/s max-cache-hit)",
+        &[
+            "policy",
+            "tasks",
+            "decisions/s",
+            "notify(s)",
+            "window-scan(s)",
+            "cache+index(s)",
+            "full-hit",
+        ],
+    );
+    for r in results {
+        t.row(vec![
+            r.policy.name().into(),
+            r.tasks.to_string(),
+            f(r.decisions_per_sec, 0),
+            f(r.notify_s, 3),
+            f(r.pickup_s, 3),
+            f(r.index_s, 3),
+            crate::report::pct(r.full_hit_frac),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_policies_dispatch_all_tasks() {
+        for policy in DispatchPolicy::ALL {
+            let r = bench_policy(policy, 2_000, 500, 8);
+            assert_eq!(r.tasks, 2_000, "policy {policy}");
+            assert!(r.decisions_per_sec > 0.0);
+        }
+    }
+
+    #[test]
+    fn data_aware_policies_get_cache_hits() {
+        // 2000 tasks over 100 files: after first pass every file is
+        // cached somewhere — data-aware policies should score hits.
+        let r = bench_policy(DispatchPolicy::GoodCacheCompute, 2_000, 100, 8);
+        assert!(r.full_hit_frac > 0.5, "full hits {}", r.full_hit_frac);
+        let r = bench_policy(DispatchPolicy::FirstAvailable, 2_000, 100, 8);
+        assert_eq!(r.full_hit_frac, 0.0);
+    }
+}

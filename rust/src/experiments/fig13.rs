@@ -1,0 +1,129 @@
+//! Figure 13 — performance index and speedup (§5.2.4).
+//!
+//! `SP = WET_GPFS / WET_DD` (baseline = the first-available run);
+//! `PI = SP / CPU_T`, normalized to [0, 1] across experiments.
+//!
+//! Paper shape: good-cache-compute 2 GB and 4 GB both reach SP = 3.5×,
+//! but the 4 GB run used 17 CPU-hours vs 24 → PI 1.0 vs 0.7; a static
+//! 64-node run of the same workload matches the speedup but burns 46
+//! CPU-hours → PI 0.33; first-available PI is 2–34× below diffusion.
+
+use super::run_summary_experiment;
+use crate::config::ExperimentConfig;
+use crate::coordinator::provisioner::ProvisionerConfig;
+use crate::report::{f, Table};
+use crate::sim::RunResult;
+
+/// One Figure 13 row.
+#[derive(Debug, Clone)]
+pub struct PiRow {
+    /// Experiment name.
+    pub name: String,
+    /// Speedup vs the first-available baseline.
+    pub speedup: f64,
+    /// CPU hours consumed.
+    pub cpu_hours: f64,
+    /// Normalized performance index ∈ [0, 1].
+    pub pi: f64,
+}
+
+/// The extra run Figure 13 adds: the best policy (good-cache-compute,
+/// 4 GB) with *static* provisioning — 64 nodes held for the whole run.
+pub fn static_best_config() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_fig(8).expect("preset");
+    cfg.name = "fig13-gcc-4gb-static64".into();
+    cfg.provisioner = ProvisionerConfig::static_nodes(cfg.cluster.max_nodes);
+    cfg
+}
+
+/// Compute Figure 13 rows. `results` must start with the first-available
+/// baseline (Fig 4) and may include the static run appended.
+pub fn rows(results: &[RunResult]) -> Vec<PiRow> {
+    let baseline = results
+        .first()
+        .expect("need the first-available baseline")
+        .summary
+        .workload_execution_time_s;
+    let mut rows: Vec<PiRow> = results
+        .iter()
+        .map(|r| {
+            let sp = r.summary.speedup_vs(baseline);
+            PiRow {
+                name: r.name.clone(),
+                speedup: sp,
+                cpu_hours: r.summary.cpu_time_hours,
+                pi: r.summary.performance_index_raw(baseline),
+            }
+        })
+        .collect();
+    let max_pi = rows.iter().map(|r| r.pi).fold(0.0, f64::max);
+    if max_pi > 0.0 {
+        for r in &mut rows {
+            r.pi /= max_pi;
+        }
+    }
+    rows
+}
+
+/// Run the full Figure 13 set: the seven paper runs plus the static one.
+pub fn run() -> Vec<RunResult> {
+    let mut results = super::fig04_10::run();
+    results.push(run_summary_experiment(&static_best_config()));
+    results
+}
+
+/// Render the Figure 13 table.
+pub fn table(results: &[RunResult]) -> Table {
+    let mut t = Table::new(
+        "Figure 13: performance index and speedup (baseline = first-available)",
+        &["experiment", "speedup", "CPU-hrs", "PI (normalized)"],
+    );
+    for r in rows(results) {
+        t.row(vec![
+            r.name,
+            f(r.speedup, 2),
+            f(r.cpu_hours, 1),
+            f(r.pi, 2),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArrivalSpec;
+    use crate::coordinator::scheduler::DispatchPolicy;
+    use crate::util::units::MB;
+
+    fn mini(policy: DispatchPolicy, static_nodes: bool) -> RunResult {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = format!("{policy}-{static_nodes}");
+        cfg.cluster.max_nodes = 4;
+        cfg.workload.num_tasks = 400;
+        cfg.workload.num_files = 40;
+        cfg.workload.file_size_bytes = 5 * MB;
+        cfg.workload.arrival = ArrivalSpec::Constant(50.0);
+        cfg.scheduler.policy = policy;
+        if static_nodes {
+            cfg.provisioner = ProvisionerConfig::static_nodes(4);
+        }
+        run_summary_experiment(&cfg)
+    }
+
+    #[test]
+    fn baseline_speedup_is_one_and_pi_normalized() {
+        let results = vec![
+            mini(DispatchPolicy::FirstAvailable, false),
+            mini(DispatchPolicy::GoodCacheCompute, false),
+            mini(DispatchPolicy::GoodCacheCompute, true),
+        ];
+        let rs = rows(&results);
+        assert!((rs[0].speedup - 1.0).abs() < 1e-9);
+        let max = rs.iter().map(|r| r.pi).fold(0.0, f64::max);
+        assert!((max - 1.0).abs() < 1e-9);
+        // Static provisioning burns at least as many CPU hours as DRP
+        // for the same policy.
+        assert!(rs[2].cpu_hours >= rs[1].cpu_hours * 0.9);
+    }
+}

@@ -1,0 +1,87 @@
+//! Figure 14 — slowdown as a function of arrival rate (§5.2.5).
+//!
+//! For every arrival-rate interval of the §5.2 workload, slowdown is the
+//! makespan of that interval's tasks over the ideal. Paper shape:
+//! first-available saturates at 59 tasks/s and its slowdown climbs
+//! steadily; 1.5 GB caches recover from ~5× back to ~1× once the working
+//! set is cached; 2–4 GB caches stay near 1× throughout (with a small
+//! provisioning blip at low rates — GRAM latency).
+
+use crate::report::{f, Table};
+use crate::sim::RunResult;
+
+/// Render the Figure 14 table: one row per arrival-rate interval, one
+/// column per experiment.
+pub fn table(results: &[RunResult]) -> Table {
+    let mut headers: Vec<String> = vec!["arrival(tasks/s)".into()];
+    headers.extend(results.iter().map(|r| r.name.clone()));
+    let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut t = Table::new("Figure 14: slowdown vs arrival rate", &header_refs);
+
+    let max_intervals = results.iter().map(|r| r.intervals.len()).max().unwrap_or(0);
+    for i in 0..max_intervals {
+        let rate = results
+            .iter()
+            .find_map(|r| r.intervals.get(i).map(|s| s.rate))
+            .unwrap_or(0.0);
+        let mut row = vec![f(rate, 0)];
+        for r in results {
+            row.push(match r.intervals.get(i) {
+                Some(s) if s.tasks > 0 => f(s.slowdown(), 2),
+                _ => "-".into(),
+            });
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// The arrival rate at which an experiment saturates: the first interval
+/// whose slowdown exceeds `threshold` and never recovers below it.
+pub fn saturation_rate(r: &RunResult, threshold: f64) -> Option<f64> {
+    let n = r.intervals.len();
+    for i in 0..n {
+        if r.intervals[i..]
+            .iter()
+            .all(|s| s.tasks == 0 || s.slowdown() > threshold)
+            && r.intervals[i].tasks > 0
+            && r.intervals[i].slowdown() > threshold
+        {
+            return Some(r.intervals[i].rate);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::coordinator::scheduler::DispatchPolicy;
+    use crate::experiments::run_summary_experiment;
+    use crate::util::units::MB;
+
+    #[test]
+    fn saturation_detected_for_overloaded_first_available() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = "sat".into();
+        cfg.cluster.max_nodes = 4;
+        cfg.workload.num_tasks = 3_000;
+        cfg.workload.num_files = 100;
+        cfg.workload.file_size_bytes = 10 * MB;
+        // Rates 2 → 128 tasks/s: GPFS (4.4 Gb/s ≈ 55 × 10 MB/s) saturates.
+        cfg.workload.arrival = crate::config::ArrivalSpec::IncreasingRate {
+            initial: 2.0,
+            factor: 2.0,
+            interval_s: 15.0,
+            max_rate: 128.0,
+        };
+        cfg.scheduler.policy = DispatchPolicy::FirstAvailable;
+        let r = run_summary_experiment(&cfg);
+        let sat = saturation_rate(&r, 1.5);
+        assert!(sat.is_some(), "no saturation found");
+        assert!(sat.unwrap() <= 128.0);
+        let t = table(&[r]);
+        assert!(!t.rows.is_empty());
+    }
+}

@@ -1,0 +1,82 @@
+//! Figure 15 — average response time per experiment (§5.2.6).
+//!
+//! `AR_T = WQ_T + E_T + D_T` (wait-queue + execution + delivery). Paper
+//! shape: 3.1 s for the best diffusion run (good-cache-compute 4 GB) vs
+//! 1569+ s for first-available on GPFS — a >500× gap, driven almost
+//! entirely by wait-queue length.
+
+use crate::report::{f, Table};
+use crate::sim::RunResult;
+
+/// Render the Figure 15 table from the Figure 4–10 runs.
+pub fn table(results: &[RunResult]) -> Table {
+    let mut t = Table::new(
+        "Figure 15: average response time (paper: 3.1s best diffusion vs 1870s worst GPFS)",
+        &["experiment", "avg-resp(s)", "max-resp(s)", "queue-max"],
+    );
+    for r in results {
+        t.row(vec![
+            r.name.clone(),
+            f(r.summary.avg_response_time_s, 1),
+            f(r.summary.max_response_time_s, 1),
+            r.summary.queue_max_len.to_string(),
+        ]);
+    }
+    t
+}
+
+/// The headline ratio: worst response time over best (paper: >500×).
+pub fn best_worst_ratio(results: &[RunResult]) -> f64 {
+    let best = results
+        .iter()
+        .map(|r| r.summary.avg_response_time_s)
+        .fold(f64::INFINITY, f64::min);
+    let worst = results
+        .iter()
+        .map(|r| r.summary.avg_response_time_s)
+        .fold(0.0, f64::max);
+    if best > 0.0 {
+        worst / best
+    } else {
+        f64::INFINITY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArrivalSpec, ExperimentConfig};
+    use crate::coordinator::scheduler::DispatchPolicy;
+    use crate::experiments::run_summary_experiment;
+    use crate::util::units::MB;
+
+    #[test]
+    fn diffusion_beats_gpfs_on_response_time() {
+        let mk = |policy| {
+            let mut cfg = ExperimentConfig::default();
+            cfg.name = format!("{policy}");
+            cfg.cluster.max_nodes = 4;
+            cfg.workload.num_tasks = 2_000;
+            cfg.workload.num_files = 50;
+            cfg.workload.file_size_bytes = 10 * MB;
+            cfg.workload.arrival = ArrivalSpec::IncreasingRate {
+                initial: 10.0,
+                factor: 1.5,
+                interval_s: 10.0,
+                max_rate: 100.0,
+            };
+            cfg.scheduler.policy = policy;
+            run_summary_experiment(&cfg)
+        };
+        let fa = mk(DispatchPolicy::FirstAvailable);
+        let gcc = mk(DispatchPolicy::GoodCacheCompute);
+        assert!(
+            gcc.summary.avg_response_time_s < fa.summary.avg_response_time_s,
+            "diffusion {} !< gpfs {}",
+            gcc.summary.avg_response_time_s,
+            fa.summary.avg_response_time_s
+        );
+        let ratio = best_worst_ratio(&[fa, gcc]);
+        assert!(ratio > 1.0);
+    }
+}

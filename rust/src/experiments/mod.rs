@@ -1,0 +1,234 @@
+//! Experiment drivers — one entry point per figure of the paper's
+//! evaluation (§4.4 Figure 2, §5.1 Figure 3, §5.2 Figures 4–15).
+//!
+//! Each driver builds its configs, runs the simulator, and renders the
+//! same rows/series the paper reports (ASCII + CSV under
+//! `target/figures/`). The `rust/benches/*` binaries and the `datadiff`
+//! CLI are thin wrappers over these functions, so a figure can be
+//! regenerated either way.
+
+pub mod fig02;
+pub mod fig03;
+pub mod fig04_10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod fig15;
+
+use crate::config::ExperimentConfig;
+use crate::report::{f, pct, Table};
+use crate::sim::{self, RunResult};
+use crate::util::units::bps_to_gbps;
+
+/// Run one summary-view experiment (Figs 4–10 style).
+pub fn run_summary_experiment(cfg: &ExperimentConfig) -> RunResult {
+    log::info!(
+        "running experiment `{}` (policy {}, cache {})",
+        cfg.name,
+        cfg.scheduler.policy,
+        crate::util::units::fmt_bytes(cfg.cache.capacity_bytes)
+    );
+    let r = sim::run(cfg);
+    log::info!(
+        "`{}`: WET {:.0}s, eff {:.0}%, {} events in {:.1}s wall",
+        cfg.name,
+        r.summary.workload_execution_time_s,
+        r.summary.efficiency * 100.0,
+        r.events_processed,
+        r.sim_wall_s
+    );
+    r
+}
+
+/// The seven summary-view experiments of Figures 4–10, in figure order.
+pub fn paper_experiment_set() -> Vec<ExperimentConfig> {
+    (4..=10)
+        .map(|fig| ExperimentConfig::paper_fig(fig).expect("known preset"))
+        .collect()
+}
+
+/// Run the full Figure 4–10 set (the aggregate figures 11–15 reuse it).
+pub fn run_paper_set() -> Vec<RunResult> {
+    paper_experiment_set()
+        .iter()
+        .map(run_summary_experiment)
+        .collect()
+}
+
+/// One-line-per-experiment summary table (the numbers §5.2 quotes).
+pub fn summary_table(results: &[RunResult]) -> Table {
+    let mut t = Table::new(
+        "experiment summaries (paper §5.2)",
+        &[
+            "experiment",
+            "WET(s)",
+            "eff",
+            "hit-local",
+            "hit-global",
+            "miss",
+            "avgTP(Gb/s)",
+            "peakTP(Gb/s)",
+            "queue-max",
+            "CPU-hrs",
+            "avg-resp(s)",
+        ],
+    );
+    for r in results {
+        let s = &r.summary;
+        t.row(vec![
+            r.name.clone(),
+            f(s.workload_execution_time_s, 0),
+            pct(s.efficiency),
+            pct(s.hit_local_rate),
+            pct(s.hit_global_rate),
+            pct(s.miss_rate),
+            f(s.avg_throughput_gbps, 1),
+            f(s.peak_throughput_gbps, 1),
+            s.queue_max_len.to_string(),
+            f(s.cpu_time_hours, 1),
+            f(s.avg_response_time_s, 1),
+        ]);
+    }
+    t
+}
+
+/// Render one run's per-second time series (the Figs 4–10 summary view),
+/// sampled every `every_s` seconds.
+pub fn summary_view_table(r: &RunResult, every_s: usize) -> Table {
+    let mut t = Table::new(
+        &format!("summary view: {}", r.name),
+        &[
+            "t(s)",
+            "ideal(Gb/s)",
+            "tp(Gb/s)",
+            "local(Gb/s)",
+            "remote(Gb/s)",
+            "gpfs(Gb/s)",
+            "nodes",
+            "busy-cpus",
+            "queue",
+        ],
+    );
+    // The ideal throughput is the arrival rate times the file size — we
+    // reconstruct it from arrivals (A·β per second).
+    for (sec, b) in r.ts.buckets().iter().enumerate().step_by(every_s.max(1)) {
+        let ideal = bps_to_gbps(b.arrivals as f64 * bytes_per_task(r));
+        t.row(vec![
+            sec.to_string(),
+            f(ideal, 2),
+            f(bps_to_gbps(b.bytes_total() as f64), 2),
+            f(bps_to_gbps(b.bytes_local as f64), 2),
+            f(bps_to_gbps(b.bytes_remote as f64), 2),
+            f(bps_to_gbps(b.bytes_gpfs as f64), 2),
+            b.nodes.to_string(),
+            b.busy_slots.to_string(),
+            b.queue_len.to_string(),
+        ]);
+    }
+    t
+}
+
+fn bytes_per_task(r: &RunResult) -> f64 {
+    let total: u64 = r
+        .ts
+        .buckets()
+        .iter()
+        .map(|b| b.bytes_local + b.bytes_remote + b.bytes_gpfs)
+        .sum();
+    if r.summary.tasks_completed > 0 {
+        total as f64 / r.summary.tasks_completed as f64
+    } else {
+        0.0
+    }
+}
+
+/// Per-source average/peak throughput decomposition used by Figure 12.
+#[derive(Debug, Clone, Copy)]
+pub struct ThroughputSplit {
+    /// Mean Gb/s from local caches over active seconds.
+    pub local_gbps: f64,
+    /// Mean Gb/s from peer caches.
+    pub remote_gbps: f64,
+    /// Mean Gb/s from GPFS.
+    pub gpfs_gbps: f64,
+    /// 99th-percentile total Gb/s (the paper's "peak").
+    pub peak_gbps: f64,
+}
+
+/// Compute the Figure 12 decomposition for one run.
+pub fn throughput_split(r: &RunResult) -> ThroughputSplit {
+    let active: Vec<&crate::metrics::Bucket> = r
+        .ts
+        .buckets()
+        .iter()
+        .filter(|b| b.bytes_total() > 0)
+        .collect();
+    let n = active.len().max(1) as f64;
+    let mean_of = |sel: fn(&crate::metrics::Bucket) -> u64| -> f64 {
+        bps_to_gbps(active.iter().map(|b| sel(b) as f64).sum::<f64>() / n)
+    };
+    let totals: Vec<f64> = r
+        .ts
+        .buckets()
+        .iter()
+        .map(|b| bps_to_gbps(b.bytes_total() as f64))
+        .collect();
+    ThroughputSplit {
+        local_gbps: mean_of(|b| b.bytes_local),
+        remote_gbps: mean_of(|b| b.bytes_remote),
+        gpfs_gbps: mean_of(|b| b.bytes_gpfs),
+        peak_gbps: crate::util::stats::percentile(&totals, 0.99),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArrivalSpec;
+    use crate::coordinator::scheduler::DispatchPolicy;
+    use crate::util::units::MB;
+
+    pub(crate) fn tiny_cfg(name: &str, policy: DispatchPolicy) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = name.into();
+        cfg.cluster.max_nodes = 4;
+        cfg.workload.num_tasks = 500;
+        cfg.workload.num_files = 50;
+        cfg.workload.file_size_bytes = 5 * MB;
+        cfg.workload.arrival = ArrivalSpec::Constant(50.0);
+        cfg.scheduler.policy = policy;
+        cfg.cache.capacity_bytes = 1000 * MB;
+        cfg
+    }
+
+    #[test]
+    fn summary_table_has_row_per_result() {
+        let r1 = run_summary_experiment(&tiny_cfg("a", DispatchPolicy::GoodCacheCompute));
+        let r2 = run_summary_experiment(&tiny_cfg("b", DispatchPolicy::FirstAvailable));
+        let t = summary_table(&[r1, r2]);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][0], "a");
+    }
+
+    #[test]
+    fn summary_view_sampling() {
+        let r = run_summary_experiment(&tiny_cfg("v", DispatchPolicy::GoodCacheCompute));
+        let t = summary_view_table(&r, 5);
+        assert!(!t.rows.is_empty());
+        assert!(t.rows.len() <= r.ts.len() / 5 + 1);
+    }
+
+    #[test]
+    fn throughput_split_sums_to_total() {
+        let r = run_summary_experiment(&tiny_cfg("s", DispatchPolicy::GoodCacheCompute));
+        let sp = throughput_split(&r);
+        let total = sp.local_gbps + sp.remote_gbps + sp.gpfs_gbps;
+        assert!(total > 0.0);
+        assert!(sp.peak_gbps >= 0.0);
+        // Average of the split equals the average computed over the same
+        // active-second definition.
+        let avg = r.summary.avg_throughput_gbps;
+        assert!((total - avg).abs() / avg < 0.05, "split {total} vs avg {avg}");
+    }
+}

@@ -1,0 +1,227 @@
+//! Centralized data-location index (§3.1.1, §3.2).
+//!
+//! The dispatcher keeps a *centralized index* recording where every cached
+//! data object lives, maintained loosely coherent with executor caches via
+//! update messages. The scheduler's two lookups are exactly the paper's
+//! two maps:
+//!
+//! * `I_map` — file logical name → sorted set of executors caching it
+//!   ([`LocationIndex::holders`]);
+//! * `E_map` — executor name → sorted set of file names it caches
+//!   ([`LocationIndex::cached_at`]).
+//!
+//! Both directions are kept mutually consistent by construction (asserted
+//! by a property test), and all operations are O(log n) hash + btree work,
+//! matching the paper's complexity argument for scheduling decisions.
+
+use crate::ids::{ExecutorId, FileId};
+use std::collections::{BTreeSet, HashMap};
+
+/// The dispatcher's central file-location index (`I_map` + `E_map`).
+#[derive(Debug, Default)]
+pub struct LocationIndex {
+    /// I_map: file → executors holding it.
+    holders: HashMap<FileId, BTreeSet<ExecutorId>>,
+    /// E_map: executor → files it holds.
+    cached: HashMap<ExecutorId, BTreeSet<FileId>>,
+    /// Total (file, executor) replica pairs — cheap global replication stat.
+    replicas: u64,
+}
+
+impl LocationIndex {
+    /// Empty index.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register an executor with an empty cache (no-op if present).
+    pub fn register_executor(&mut self, executor: ExecutorId) {
+        self.cached.entry(executor).or_default();
+    }
+
+    /// Remove an executor and all its entries (deregistration / release by
+    /// the provisioner). Returns the files it held, for accounting.
+    pub fn deregister_executor(&mut self, executor: ExecutorId) -> Vec<FileId> {
+        let files = self.cached.remove(&executor).unwrap_or_default();
+        for &f in &files {
+            if let Some(set) = self.holders.get_mut(&f) {
+                set.remove(&executor);
+                self.replicas -= 1;
+                if set.is_empty() {
+                    self.holders.remove(&f);
+                }
+            }
+        }
+        files.into_iter().collect()
+    }
+
+    /// Record that `executor` now caches `file` (an executor cache-content
+    /// update message).
+    pub fn add(&mut self, file: FileId, executor: ExecutorId) {
+        let inserted = self.holders.entry(file).or_default().insert(executor);
+        self.cached.entry(executor).or_default().insert(file);
+        if inserted {
+            self.replicas += 1;
+        }
+    }
+
+    /// Record that `executor` evicted `file`.
+    pub fn remove(&mut self, file: FileId, executor: ExecutorId) {
+        if let Some(set) = self.holders.get_mut(&file) {
+            if set.remove(&executor) {
+                self.replicas -= 1;
+            }
+            if set.is_empty() {
+                self.holders.remove(&file);
+            }
+        }
+        if let Some(set) = self.cached.get_mut(&executor) {
+            set.remove(&file);
+        }
+    }
+
+    /// I_map lookup: executors currently caching `file`.
+    pub fn holders(&self, file: FileId) -> Option<&BTreeSet<ExecutorId>> {
+        self.holders.get(&file)
+    }
+
+    /// Number of replicas of `file` (the scheduler's replication-factor
+    /// input for good-cache-compute).
+    pub fn replication(&self, file: FileId) -> usize {
+        self.holders.get(&file).map_or(0, |s| s.len())
+    }
+
+    /// E_map lookup: files cached at `executor`.
+    pub fn cached_at(&self, executor: ExecutorId) -> Option<&BTreeSet<FileId>> {
+        self.cached.get(&executor)
+    }
+
+    /// How many of `files` are cached at `executor` — the scheduling-window
+    /// cache-hit score of §3.2 (|fileSet ∩ E_map(executor)|).
+    pub fn hit_count(&self, executor: ExecutorId, files: &[FileId]) -> usize {
+        match self.cached.get(&executor) {
+            Some(set) => files.iter().filter(|f| set.contains(f)).count(),
+            None => 0,
+        }
+    }
+
+    /// Registered executors count.
+    pub fn executors(&self) -> usize {
+        self.cached.len()
+    }
+
+    /// Distinct files with at least one replica.
+    pub fn distinct_files(&self) -> usize {
+        self.holders.len()
+    }
+
+    /// Total replica pairs across the cluster.
+    pub fn total_replicas(&self) -> u64 {
+        self.replicas
+    }
+
+    /// Debug-check the two maps agree; used by tests.
+    #[doc(hidden)]
+    pub fn check_consistent(&self) -> Result<(), String> {
+        let mut pairs = 0u64;
+        for (f, execs) in &self.holders {
+            if execs.is_empty() {
+                return Err(format!("empty holder set for {f}"));
+            }
+            for e in execs {
+                pairs += 1;
+                if !self.cached.get(e).is_some_and(|s| s.contains(f)) {
+                    return Err(format!("I_map has ({f},{e}) but E_map does not"));
+                }
+            }
+        }
+        for (e, files) in &self.cached {
+            for f in files {
+                if !self.holders.get(f).is_some_and(|s| s.contains(e)) {
+                    return Err(format!("E_map has ({e},{f}) but I_map does not"));
+                }
+            }
+        }
+        if pairs != self.replicas {
+            return Err(format!("replica count {} != actual {}", self.replicas, pairs));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{property, Gen};
+
+    #[test]
+    fn add_remove_round_trip() {
+        let mut ix = LocationIndex::new();
+        ix.register_executor(ExecutorId(1));
+        ix.add(FileId(10), ExecutorId(1));
+        ix.add(FileId(10), ExecutorId(2));
+        assert_eq!(ix.replication(FileId(10)), 2);
+        assert_eq!(ix.total_replicas(), 2);
+        ix.remove(FileId(10), ExecutorId(1));
+        assert_eq!(ix.replication(FileId(10)), 1);
+        ix.remove(FileId(10), ExecutorId(2));
+        assert_eq!(ix.replication(FileId(10)), 0);
+        assert_eq!(ix.holders(FileId(10)), None);
+        assert_eq!(ix.distinct_files(), 0);
+    }
+
+    #[test]
+    fn double_add_is_idempotent() {
+        let mut ix = LocationIndex::new();
+        ix.add(FileId(1), ExecutorId(1));
+        ix.add(FileId(1), ExecutorId(1));
+        assert_eq!(ix.total_replicas(), 1);
+        ix.check_consistent().unwrap();
+    }
+
+    #[test]
+    fn hit_count_counts_intersection() {
+        let mut ix = LocationIndex::new();
+        for f in [1, 2, 3] {
+            ix.add(FileId(f), ExecutorId(9));
+        }
+        let want = [FileId(2), FileId(3), FileId(4)];
+        assert_eq!(ix.hit_count(ExecutorId(9), &want), 2);
+        assert_eq!(ix.hit_count(ExecutorId(8), &want), 0);
+    }
+
+    #[test]
+    fn deregister_cleans_both_maps() {
+        let mut ix = LocationIndex::new();
+        ix.add(FileId(1), ExecutorId(1));
+        ix.add(FileId(2), ExecutorId(1));
+        ix.add(FileId(1), ExecutorId(2));
+        let mut files = ix.deregister_executor(ExecutorId(1));
+        files.sort();
+        assert_eq!(files, vec![FileId(1), FileId(2)]);
+        assert_eq!(ix.replication(FileId(1)), 1);
+        assert_eq!(ix.replication(FileId(2)), 0);
+        ix.check_consistent().unwrap();
+    }
+
+    #[test]
+    fn maps_stay_mutually_consistent_under_random_ops() {
+        property("index consistency", 100, |g: &mut Gen| {
+            let mut ix = LocationIndex::new();
+            let ops = g.usize_in(1..300);
+            for _ in 0..ops {
+                let f = FileId(g.u64_in(0..20) as u32);
+                let e = ExecutorId(g.u64_in(0..8) as u32);
+                match g.usize_in(0..4) {
+                    0 | 1 => ix.add(f, e),
+                    2 => ix.remove(f, e),
+                    _ => {
+                        ix.deregister_executor(e);
+                    }
+                }
+                ix.check_consistent()?;
+            }
+            Ok(())
+        });
+    }
+}

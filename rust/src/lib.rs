@@ -1,0 +1,130 @@
+//! # data-diffusion
+//!
+//! A production-quality reproduction of **"Data Diffusion: Dynamic Resource
+//! Provisioning and Data-Aware Scheduling for Data-Intensive Applications"**
+//! (Raicu, Zhao, Foster, Szalay; 2008) — the Falkon data-diffusion system.
+//!
+//! The crate implements the paper's full stack:
+//!
+//! * a **data-aware scheduler** with the paper's five dispatch policies
+//!   (`first-available`, `first-cache-available`, `max-cache-hit`,
+//!   `max-compute-util`, `good-cache-compute`), realized as the two-phase
+//!   notify/window algorithm of §3.2 ([`coordinator::scheduler`]);
+//! * **per-executor data caches** with the four eviction policies of §3.1.1
+//!   (LRU / FIFO / LFU / Random) ([`cache`]);
+//! * a **centralized location index** (`I_map`/`E_map`) ([`index`]);
+//! * a **dynamic resource provisioner** with tunable allocation and release
+//!   policies and a GRAM/LRM allocation-latency model
+//!   ([`coordinator::provisioner`]);
+//! * the paper's **abstract model** of data-centric task farms (§4) and its
+//!   validation machinery ([`model`]);
+//! * a deterministic **discrete-event cluster simulator** standing in for
+//!   the ANL/UC TeraGrid testbed ([`sim`]), plus a **live execution engine**
+//!   that runs real tasks on real files with worker threads ([`live`]);
+//! * a **PJRT runtime bridge** that loads the AOT-compiled JAX/Pallas
+//!   artifacts (built once by `make artifacts`; Python is never on the
+//!   request path) ([`runtime`]);
+//! * **workload generators**, **metrics**, **report renderers** and one
+//!   [`experiments`] entry point per figure of the paper's evaluation.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use datadiffusion::config::ExperimentConfig;
+//! use datadiffusion::experiments;
+//!
+//! // Run the paper's Figure 7 experiment (good-cache-compute, 2 GB caches)
+//! let cfg = ExperimentConfig::paper_fig(7).expect("known figure");
+//! let outcome = experiments::run_summary_experiment(&cfg);
+//! println!("workload execution time: {:.0} s", outcome.summary.workload_execution_time_s);
+//! ```
+
+pub mod cache;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod index;
+pub mod live;
+pub mod metrics;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Configuration parse/validation failure.
+    #[error("config error: {0}")]
+    Config(String),
+    /// Artifact (AOT HLO) missing or failed to load/compile.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    /// Simulation invariant violated (a bug, not a user error).
+    #[error("simulation invariant violated: {0}")]
+    SimInvariant(String),
+    /// Live-engine I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    /// XLA/PJRT failure.
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Identifier newtypes shared across layers.
+pub mod ids {
+    /// A logical data object (file) in the persistent store (δ ∈ Δ).
+    #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+    pub struct FileId(pub u32);
+
+    /// A provisioned executor (transient compute+storage resource, τ ∈ T).
+    #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+    pub struct ExecutorId(pub u32);
+
+    /// A task in the incoming stream (κ ∈ K).
+    #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+    pub struct TaskId(pub u64);
+
+    impl std::fmt::Display for FileId {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "f{}", self.0)
+        }
+    }
+    impl std::fmt::Display for ExecutorId {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "e{}", self.0)
+        }
+    }
+    impl std::fmt::Display for TaskId {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "t{}", self.0)
+        }
+    }
+}
+
+/// Convenient re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::cache::{CacheConfig, EvictionPolicy};
+    pub use crate::config::ExperimentConfig;
+    pub use crate::coordinator::provisioner::{AllocationPolicy, ProvisionerConfig};
+    pub use crate::coordinator::scheduler::DispatchPolicy;
+    pub use crate::ids::{ExecutorId, FileId, TaskId};
+    pub use crate::metrics::{SummaryMetrics, TimeSeries};
+    pub use crate::util::time::Micros;
+    pub use crate::{Error, Result};
+}

@@ -1,0 +1,644 @@
+//! Live execution engine: the coordinator driving *real* work.
+//!
+//! Where [`crate::sim`] substitutes the testbed, this engine runs the
+//! identical coordinator logic (wait queue, data-aware scheduler,
+//! location index, per-executor caches, demand-driven provisioning) over
+//! real worker threads that move real files and run real compute:
+//!
+//! * the **persistent store** is a directory (the GPFS stand-in);
+//! * each worker owns a **local cache directory**; a dispatch tells it
+//!   where to fetch from — its own cache (local hit), a peer worker's
+//!   cache directory (global hit, the GridFTP path), or the persistent
+//!   store (miss) — exactly the three-way split of §5.2.1;
+//! * per-task compute is either a calibrated sleep or the AOT-compiled
+//!   **PJRT stacking pipeline** (`examples/astronomy_stacking.rs`), so
+//!   the full three-layer stack (Rust → HLO → Pallas kernel) is on the
+//!   hot path with Python nowhere in sight;
+//! * **dynamic provisioning**: workers are spawned on demand from the
+//!   wait-queue length and retired when idle, mirroring the DRP.
+
+use crate::cache::{CacheConfig, ObjectCache};
+use crate::coordinator::queue::{Task, WaitQueue};
+use crate::coordinator::scheduler::{DispatchPolicy, Scheduler, SchedulerConfig};
+use crate::coordinator::executor::ExecutorRegistry;
+use crate::coordinator::{resolve_access, AccessKind};
+use crate::ids::{ExecutorId, FileId, TaskId};
+use crate::index::LocationIndex;
+use crate::metrics::Recorder;
+use crate::util::prng::Pcg64;
+use crate::util::time::Micros;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// What a worker does after staging its input file.
+#[derive(Debug, Clone)]
+pub enum ComputeKind {
+    /// Sleep for the given duration (micro-benchmark workloads).
+    Sleep(Duration),
+    /// Run the AOT stacking pipeline on the file's contents (the file
+    /// must hold STACK-shaped f32 cutouts + weights; see
+    /// [`crate::runtime::StackingExecutable`]). Each worker compiles its
+    /// own executable (PJRT handles are not Sync).
+    Stacking,
+}
+
+/// Live-engine configuration.
+#[derive(Debug, Clone)]
+pub struct LiveConfig {
+    /// Workers to start with.
+    pub initial_workers: usize,
+    /// Maximum workers the provisioner may spawn.
+    pub max_workers: usize,
+    /// Queue length per worker that triggers growth.
+    pub queue_tasks_per_worker: usize,
+    /// Dispatch policy.
+    pub policy: DispatchPolicy,
+    /// Per-worker cache configuration.
+    pub cache: CacheConfig,
+    /// Directory holding the dataset (the persistent store).
+    pub persistent_dir: PathBuf,
+    /// Root under which per-worker cache directories are created.
+    pub cache_root: PathBuf,
+    /// Per-task compute.
+    pub compute: ComputeKind,
+    /// PRNG seed (peer selection, eviction randomness).
+    pub seed: u64,
+}
+
+/// One task for the live engine: read `file`, compute.
+#[derive(Debug, Clone)]
+pub struct LiveTask {
+    /// File name inside `persistent_dir`.
+    pub file_name: String,
+    /// Logical file id (for the scheduler/index).
+    pub file: FileId,
+}
+
+/// Where the worker should fetch its input from.
+#[derive(Debug, Clone)]
+enum FetchSource {
+    /// Already in the worker's own cache directory.
+    Local,
+    /// Copy from this peer cache directory.
+    Peer(PathBuf),
+    /// Copy from the persistent store.
+    Persistent,
+}
+
+#[derive(Debug)]
+struct Assignment {
+    task_id: TaskId,
+    file_name: String,
+    source: FetchSource,
+    /// Files the worker should delete from its cache dir (evictions
+    /// decided by the coordinator-side cache model).
+    evict: Vec<String>,
+}
+
+#[derive(Debug)]
+enum WorkerMsg {
+    Done {
+        worker: usize,
+        task_id: TaskId,
+        kind: AccessKind,
+        bytes: u64,
+        fetch: Duration,
+        compute: Duration,
+    },
+    Failed {
+        worker: usize,
+        task_id: TaskId,
+        error: String,
+    },
+}
+
+enum ToWorker {
+    Run(Assignment),
+    Shutdown,
+}
+
+struct WorkerHandle {
+    tx: mpsc::Sender<ToWorker>,
+    join: thread::JoinHandle<()>,
+    cache_dir: PathBuf,
+}
+
+/// End-of-run report from the live engine.
+#[derive(Debug)]
+pub struct LiveReport {
+    /// Tasks completed successfully.
+    pub completed: u64,
+    /// Tasks failed (worker errors; the replay policy retries once).
+    pub failed: u64,
+    /// Wall-clock makespan.
+    pub makespan: Duration,
+    /// Local/global/miss access counts.
+    pub hits_local: u64,
+    /// Peer-cache hits.
+    pub hits_global: u64,
+    /// Persistent-store misses.
+    pub misses: u64,
+    /// Total bytes fetched (all sources).
+    pub bytes_moved: u64,
+    /// Mean per-task fetch time.
+    pub avg_fetch: Duration,
+    /// Mean per-task compute time.
+    pub avg_compute: Duration,
+    /// Peak worker count (provisioning).
+    pub peak_workers: usize,
+    /// Per-second recorder (same shape as the simulator's).
+    pub recorder: Recorder,
+}
+
+/// Run `tasks` through the live engine.
+pub fn run(config: &LiveConfig, tasks: &[LiveTask]) -> Result<LiveReport> {
+    if tasks.is_empty() {
+        return Err(Error::Config("live run needs at least one task".into()));
+    }
+    std::fs::create_dir_all(&config.cache_root)?;
+    let t0 = Instant::now();
+    let (done_tx, done_rx) = mpsc::channel::<WorkerMsg>();
+
+    let mut rng = Pcg64::seeded(config.seed);
+    let mut sched = Scheduler::new(SchedulerConfig {
+        policy: config.policy,
+        ..SchedulerConfig::default()
+    });
+    let mut reg = ExecutorRegistry::new();
+    let mut index = LocationIndex::new();
+    let mut queue = WaitQueue::new();
+    let mut caches: HashMap<ExecutorId, ObjectCache> = HashMap::new();
+    let mut workers: HashMap<ExecutorId, WorkerHandle> = HashMap::new();
+    let mut rec = Recorder::new();
+
+    // File sizes from the persistent store (needed for cache accounting).
+    let mut file_sizes: HashMap<FileId, u64> = HashMap::new();
+    let mut file_names: HashMap<FileId, String> = HashMap::new();
+    for t in tasks {
+        if let std::collections::hash_map::Entry::Vacant(e) = file_sizes.entry(t.file) {
+            let meta = std::fs::metadata(config.persistent_dir.join(&t.file_name))?;
+            e.insert(meta.len());
+            file_names.insert(t.file, t.file_name.clone());
+        }
+    }
+
+    let spawn_worker = |idx: usize,
+                        reg: &mut ExecutorRegistry,
+                        index: &mut LocationIndex,
+                        caches: &mut HashMap<ExecutorId, ObjectCache>,
+                        workers: &mut HashMap<ExecutorId, WorkerHandle>|
+     -> Result<ExecutorId> {
+        let exec = reg.register(1, Micros::ZERO);
+        let cache_dir = config.cache_root.join(format!("worker-{idx}"));
+        std::fs::create_dir_all(&cache_dir)?;
+        if config.policy.uses_caching() {
+            index.register_executor(exec);
+            caches.insert(exec, ObjectCache::new(config.cache));
+        }
+        let (tx, rx) = mpsc::channel::<ToWorker>();
+        let done = done_tx.clone();
+        let persistent = config.persistent_dir.clone();
+        let cdir = cache_dir.clone();
+        let compute = config.compute.clone();
+        let join = thread::Builder::new()
+            .name(format!("dd-worker-{idx}"))
+            .spawn(move || worker_main(idx, rx, done, persistent, cdir, compute))
+            .map_err(Error::Io)?;
+        workers.insert(
+            exec,
+            WorkerHandle {
+                tx,
+                join,
+                cache_dir,
+            },
+        );
+        Ok(exec)
+    };
+
+    let mut next_worker_idx = 0usize;
+    let mut exec_by_idx: Vec<ExecutorId> = Vec::new();
+    for _ in 0..config.initial_workers.max(1) {
+        let e = spawn_worker(next_worker_idx, &mut reg, &mut index, &mut caches, &mut workers)?;
+        exec_by_idx.push(e);
+        next_worker_idx += 1;
+    }
+    let mut peak_workers = workers.len();
+
+    // Submit everything (batch submission, like the §5.1 microbench).
+    for (i, t) in tasks.iter().enumerate() {
+        queue.push_back(Task {
+            id: TaskId(i as u64),
+            files: vec![t.file],
+            compute: Micros::ZERO,
+            arrival: Micros::ZERO,
+        });
+        rec.record_arrival(Micros::ZERO, 0, 0.0);
+    }
+
+    // Dispatch helper: assign work to one free worker; returns true if a
+    // task was dispatched.
+    let mut retried: HashMap<u64, bool> = HashMap::new();
+    let mut completed = 0u64;
+    let mut failed = 0u64;
+    let (mut hits_local, mut hits_global, mut misses) = (0u64, 0u64, 0u64);
+    let mut bytes_moved = 0u64;
+    let mut fetch_total = Duration::ZERO;
+    let mut compute_total = Duration::ZERO;
+
+    macro_rules! pump {
+        () => {{
+            loop {
+                let free: Vec<ExecutorId> = reg.free_iter().collect();
+                let mut dispatched_any = false;
+                for exec in free {
+                    if queue.is_empty() {
+                        break;
+                    }
+                    let picked = sched.pick_tasks(exec, 1, &mut queue, &reg, &index);
+                    for task in picked {
+                        reg.start_task(exec, now_micros(t0));
+                        let file = task.files[0];
+                        let size = file_sizes[&file];
+                        let file_name = file_names[&file].clone();
+                        let (source, evict) = if config.policy.uses_caching() {
+                            let cache = caches.get_mut(&exec).expect("cache");
+                            let res =
+                                resolve_access(exec, file, size, cache, &mut index, &mut rng);
+                            let evicted_names: Vec<String> = res
+                                .evicted
+                                .iter()
+                                .filter_map(|f| file_names.get(f).cloned())
+                                .collect();
+                            let source = match (res.kind, res.peer) {
+                                (AccessKind::HitLocal, _) => FetchSource::Local,
+                                (AccessKind::HitGlobal, Some(p)) => {
+                                    FetchSource::Peer(workers[&p].cache_dir.clone())
+                                }
+                                _ => FetchSource::Persistent,
+                            };
+                            (source, evicted_names)
+                        } else {
+                            (FetchSource::Persistent, Vec::new())
+                        };
+                        workers[&exec]
+                            .tx
+                            .send(ToWorker::Run(Assignment {
+                                task_id: task.id,
+                                file_name,
+                                source,
+                                evict,
+                            }))
+                            .expect("worker channel closed");
+                        dispatched_any = true;
+                    }
+                }
+                if !dispatched_any {
+                    break;
+                }
+            }
+        }};
+    }
+
+    pump!();
+
+    // Main loop: completions drive re-dispatch; the provisioner grows
+    // the fleet while the queue stays long.
+    while completed + failed < tasks.len() as u64 {
+        // Provision: spawn a worker if the queue is long and we have
+        // headroom (live DRP — no GRAM latency on a local testbed).
+        if queue.len() > config.queue_tasks_per_worker * workers.len()
+            && workers.len() < config.max_workers
+        {
+            let e =
+                spawn_worker(next_worker_idx, &mut reg, &mut index, &mut caches, &mut workers)?;
+            exec_by_idx.push(e);
+            next_worker_idx += 1;
+            peak_workers = peak_workers.max(workers.len());
+            pump!();
+        }
+        let msg = done_rx
+            .recv_timeout(Duration::from_secs(60))
+            .map_err(|_| Error::Runtime("live engine stalled for 60s".into()))?;
+        let widx_of = |m: &WorkerMsg| match m {
+            WorkerMsg::Done { worker, .. } | WorkerMsg::Failed { worker, .. } => *worker,
+        };
+        let sender_idx = widx_of(&msg);
+        match msg {
+            WorkerMsg::Done {
+                worker: _,
+                task_id,
+                kind,
+                bytes,
+                fetch,
+                compute,
+            } => {
+                completed += 1;
+                match kind {
+                    AccessKind::HitLocal => hits_local += 1,
+                    AccessKind::HitGlobal => hits_global += 1,
+                    AccessKind::Miss => misses += 1,
+                }
+                bytes_moved += bytes;
+                fetch_total += fetch;
+                compute_total += compute;
+                let now = now_micros(t0);
+                rec.record_access(now, kind, bytes);
+                rec.record_completion(now, Micros::ZERO, 0);
+                let _ = task_id;
+            }
+            WorkerMsg::Failed {
+                worker: _,
+                task_id,
+                error,
+            } => {
+                // Replay policy (§4.2): re-dispatch once, then count as
+                // failed.
+                if !retried.get(&task_id.0).copied().unwrap_or(false) {
+                    retried.insert(task_id.0, true);
+                    let t = &tasks[task_id.0 as usize];
+                    queue.push_back(Task {
+                        id: task_id,
+                        files: vec![t.file],
+                        compute: Micros::ZERO,
+                        arrival: now_micros(t0),
+                    });
+                    log::warn!("task {task_id} failed ({error}); replaying");
+                } else {
+                    failed += 1;
+                    log::error!("task {task_id} failed twice: {error}");
+                }
+            }
+        }
+        // The sender's slot frees regardless of outcome (worker idx ==
+        // spawn order == exec_by_idx position).
+        reg.finish_task(exec_by_idx[sender_idx], now_micros(t0));
+        rec.sample(
+            now_micros(t0),
+            queue.len(),
+            workers.len(),
+            reg.busy_slots(),
+            reg.total_slots(),
+        );
+        pump!();
+    }
+
+    // Shut down workers.
+    for (_, h) in workers.drain() {
+        let _ = h.tx.send(ToWorker::Shutdown);
+        let _ = h.join.join();
+    }
+
+    let done_tasks = completed.max(1);
+    Ok(LiveReport {
+        completed,
+        failed,
+        makespan: t0.elapsed(),
+        hits_local,
+        hits_global,
+        misses,
+        bytes_moved,
+        avg_fetch: fetch_total / done_tasks as u32,
+        avg_compute: compute_total / done_tasks as u32,
+        peak_workers,
+        recorder: rec,
+    })
+}
+
+fn now_micros(t0: Instant) -> Micros {
+    Micros(t0.elapsed().as_micros() as u64)
+}
+
+/// Worker thread: fetch the file per the coordinator's instruction, run
+/// the compute, report back.
+fn worker_main(
+    idx: usize,
+    rx: mpsc::Receiver<ToWorker>,
+    done: mpsc::Sender<WorkerMsg>,
+    persistent: PathBuf,
+    cache_dir: PathBuf,
+    compute: ComputeKind,
+) {
+    // PJRT handles are not Sync: each worker compiles its own pipeline.
+    let stacker = match &compute {
+        ComputeKind::Stacking => match crate::runtime::Artifacts::open_default()
+            .and_then(|a| a.stacking())
+        {
+            Ok(s) => Some(s),
+            Err(e) => {
+                log::error!("worker {idx}: cannot load stacking artifact: {e}");
+                None
+            }
+        },
+        ComputeKind::Sleep(_) => None,
+    };
+    while let Ok(ToWorker::Run(a)) = rx.recv() {
+        let result = run_one(&a, &persistent, &cache_dir, &compute, stacker.as_ref());
+        let msg = match result {
+            Ok((kind, bytes, fetch, comp)) => WorkerMsg::Done {
+                worker: idx,
+                task_id: a.task_id,
+                kind,
+                bytes,
+                fetch,
+                compute: comp,
+            },
+            Err(e) => WorkerMsg::Failed {
+                worker: idx,
+                task_id: a.task_id,
+                error: e.to_string(),
+            },
+        };
+        if done.send(msg).is_err() {
+            return; // coordinator gone
+        }
+    }
+}
+
+fn run_one(
+    a: &Assignment,
+    persistent: &Path,
+    cache_dir: &Path,
+    compute: &ComputeKind,
+    stacker: Option<&crate::runtime::StackingExecutable>,
+) -> Result<(AccessKind, u64, Duration, Duration)> {
+    for name in &a.evict {
+        let _ = std::fs::remove_file(cache_dir.join(name));
+    }
+    let local_path = cache_dir.join(&a.file_name);
+    let tf = Instant::now();
+    let (kind, bytes) = match &a.source {
+        FetchSource::Local => {
+            let meta = std::fs::metadata(&local_path)?;
+            (AccessKind::HitLocal, meta.len())
+        }
+        FetchSource::Peer(peer_dir) => {
+            // The peer may not have finished writing the object yet (the
+            // coordinator's index is updated at dispatch time); fall back
+            // to persistent storage like a real executor would (§3.1:
+            // "only if no cached copy is available does the executor
+            // request a copy from persistent storage").
+            match std::fs::copy(peer_dir.join(&a.file_name), &local_path) {
+                Ok(n) => (AccessKind::HitGlobal, n),
+                Err(_) => {
+                    let n = std::fs::copy(persistent.join(&a.file_name), &local_path)?;
+                    (AccessKind::Miss, n)
+                }
+            }
+        }
+        FetchSource::Persistent => {
+            let n = std::fs::copy(persistent.join(&a.file_name), &local_path)?;
+            (AccessKind::Miss, n)
+        }
+    };
+    let fetch = tf.elapsed();
+
+    let tc = Instant::now();
+    match compute {
+        ComputeKind::Sleep(d) => thread::sleep(*d),
+        ComputeKind::Stacking => {
+            let stacker = stacker
+                .ok_or_else(|| Error::Runtime("stacking executable unavailable".into()))?;
+            let data = std::fs::read(&local_path)?;
+            let floats: Vec<f32> = data
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            use crate::runtime::shapes::{STACK_H, STACK_W};
+            let frame = STACK_H * STACK_W;
+            if floats.len() < frame + 1 {
+                return Err(Error::Runtime(format!(
+                    "file {} too small for stacking ({} floats)",
+                    a.file_name,
+                    floats.len()
+                )));
+            }
+            // Layout: n full frames followed by n weights.
+            let n = floats.len() / (frame + 1);
+            let (cutouts, weights) = floats.split_at(n * frame);
+            let res = stacker.stack(cutouts, &weights[..n])?;
+            // Consume the result so the work cannot be elided.
+            if !res.mean.is_finite() {
+                return Err(Error::Runtime("non-finite stacking output".into()));
+            }
+        }
+    }
+    let comp = tc.elapsed();
+    Ok((kind, bytes, fetch, comp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::EvictionPolicy;
+
+    fn setup_dataset(dir: &Path, files: usize, bytes: usize) -> Vec<LiveTask> {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut tasks = Vec::new();
+        for i in 0..files {
+            let name = format!("f{i}.bin");
+            std::fs::write(dir.join(&name), vec![i as u8; bytes]).unwrap();
+            // 3 accesses per file.
+            for _ in 0..3 {
+                tasks.push(LiveTask {
+                    file_name: name.clone(),
+                    file: FileId(i as u32),
+                });
+            }
+        }
+        tasks
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("dd-live-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        p
+    }
+
+    #[test]
+    fn live_run_completes_and_hits_cache() {
+        let root = tmp("basic");
+        let data = root.join("store");
+        let tasks = setup_dataset(&data, 10, 4096);
+        let cfg = LiveConfig {
+            initial_workers: 3,
+            max_workers: 3,
+            queue_tasks_per_worker: 10,
+            policy: DispatchPolicy::GoodCacheCompute,
+            cache: CacheConfig {
+                capacity_bytes: 1 << 20,
+                policy: EvictionPolicy::Lru,
+            },
+            persistent_dir: data,
+            cache_root: root.join("caches"),
+            compute: ComputeKind::Sleep(Duration::from_millis(1)),
+            seed: 7,
+        };
+        let report = run(&cfg, &tasks).expect("live run");
+        assert_eq!(report.completed, 30);
+        assert_eq!(report.failed, 0);
+        // 10 cold misses; the 20 re-accesses must hit some cache.
+        assert!(report.misses >= 10, "misses {}", report.misses);
+        assert!(
+            report.hits_local + report.hits_global >= 15,
+            "hits {} + {}",
+            report.hits_local,
+            report.hits_global
+        );
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn first_available_never_caches() {
+        let root = tmp("fa");
+        let data = root.join("store");
+        let tasks = setup_dataset(&data, 5, 1024);
+        let cfg = LiveConfig {
+            initial_workers: 2,
+            max_workers: 2,
+            queue_tasks_per_worker: 10,
+            policy: DispatchPolicy::FirstAvailable,
+            cache: CacheConfig {
+                capacity_bytes: 1 << 20,
+                policy: EvictionPolicy::Lru,
+            },
+            persistent_dir: data,
+            cache_root: root.join("caches"),
+            compute: ComputeKind::Sleep(Duration::from_millis(1)),
+            seed: 7,
+        };
+        let report = run(&cfg, &tasks).expect("live run");
+        assert_eq!(report.completed, 15);
+        assert_eq!(report.misses, 15);
+        assert_eq!(report.hits_local + report.hits_global, 0);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn provisioner_spawns_extra_workers() {
+        let root = tmp("prov");
+        let data = root.join("store");
+        let tasks = setup_dataset(&data, 20, 512);
+        let cfg = LiveConfig {
+            initial_workers: 1,
+            max_workers: 4,
+            queue_tasks_per_worker: 5,
+            policy: DispatchPolicy::GoodCacheCompute,
+            cache: CacheConfig {
+                capacity_bytes: 1 << 20,
+                policy: EvictionPolicy::Lru,
+            },
+            persistent_dir: data,
+            cache_root: root.join("caches"),
+            compute: ComputeKind::Sleep(Duration::from_millis(2)),
+            seed: 7,
+        };
+        let report = run(&cfg, &tasks).expect("live run");
+        assert_eq!(report.completed, 60);
+        assert!(report.peak_workers > 1, "never grew: {}", report.peak_workers);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

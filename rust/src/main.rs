@@ -1,0 +1,17 @@
+//! `datadiff` — the data-diffusion framework launcher.
+//!
+//! See `datadiff help` (or [`datadiffusion::cli::USAGE`]) for commands.
+
+fn main() {
+    datadiffusion::util::logger::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match datadiffusion::cli::parse(&args).and_then(datadiffusion::cli::execute) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("run `datadiff help` for usage");
+            2
+        }
+    };
+    std::process::exit(code);
+}

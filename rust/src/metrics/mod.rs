@@ -1,0 +1,424 @@
+//! Metrics collection — the measured/computed quantities of §5.2.1:
+//! ideal vs achieved throughput, node count, wait-queue length, CPU
+//! utilization, cache hit-local/hit-global/miss rates, response times,
+//! CPU time, and the derived efficiency/speedup/PI/slowdown statistics
+//! of §5.2.4–§5.2.6.
+
+use crate::coordinator::AccessKind;
+use crate::util::stats::percentile;
+use crate::util::time::Micros;
+use crate::util::units::bps_to_gbps;
+
+/// Per-second sample bucket (the summary-view time series of Figs 4–10).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Bucket {
+    /// Bytes served from local caches this second.
+    pub bytes_local: u64,
+    /// Bytes served from peer caches this second.
+    pub bytes_remote: u64,
+    /// Bytes served from persistent storage (GPFS) this second.
+    pub bytes_gpfs: u64,
+    /// Tasks completed this second.
+    pub tasks_completed: u32,
+    /// Tasks that arrived this second.
+    pub arrivals: u32,
+    /// Wait-queue length at the end of the second.
+    pub queue_len: u32,
+    /// Registered nodes at the end of the second.
+    pub nodes: u32,
+    /// Busy CPU slots at the end of the second.
+    pub busy_slots: u32,
+    /// Total CPU slots at the end of the second.
+    pub total_slots: u32,
+}
+
+impl Bucket {
+    /// All bytes moved this second.
+    pub fn bytes_total(&self) -> u64 {
+        self.bytes_local + self.bytes_remote + self.bytes_gpfs
+    }
+}
+
+/// The full per-second time series of one run.
+#[derive(Debug, Default, Clone)]
+pub struct TimeSeries {
+    buckets: Vec<Bucket>,
+}
+
+impl TimeSeries {
+    /// Empty series.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mutable bucket for second `sec`, growing as needed.
+    pub fn bucket_mut(&mut self, sec: u64) -> &mut Bucket {
+        let i = sec as usize;
+        if i >= self.buckets.len() {
+            self.buckets.resize(i + 1, Bucket::default());
+        }
+        &mut self.buckets[i]
+    }
+
+    /// All buckets, second 0 onward.
+    pub fn buckets(&self) -> &[Bucket] {
+        &self.buckets
+    }
+
+    /// Length in seconds.
+    pub fn len(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// True when no samples were recorded.
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+
+    /// Measured aggregate throughput in Gb/s for second `sec`.
+    pub fn throughput_gbps(&self, sec: usize) -> f64 {
+        self.buckets
+            .get(sec)
+            .map_or(0.0, |b| bps_to_gbps(b.bytes_total() as f64))
+    }
+
+    /// Per-second total throughput series (Gb/s).
+    pub fn throughput_series(&self) -> Vec<f64> {
+        self.buckets
+            .iter()
+            .map(|b| bps_to_gbps(b.bytes_total() as f64))
+            .collect()
+    }
+}
+
+/// Per arrival-rate-interval statistics (slowdown, Fig 14).
+#[derive(Debug, Clone, Default)]
+pub struct IntervalStat {
+    /// Arrival rate during this interval (tasks/s).
+    pub rate: f64,
+    /// Interval start (first arrival).
+    pub start: Micros,
+    /// Last *arrival* in this interval.
+    pub last_arrival: Micros,
+    /// Last *completion* of a task that arrived in this interval.
+    pub last_completion: Micros,
+    /// Tasks in this interval.
+    pub tasks: u64,
+}
+
+impl IntervalStat {
+    /// Slowdown = measured makespan of this interval's tasks over the
+    /// ideal (tasks finish as they arrive).
+    pub fn slowdown(&self) -> f64 {
+        let ideal = (self.last_arrival - self.start).as_secs_f64();
+        let actual = (self.last_completion.saturating_sub(self.start)).as_secs_f64();
+        if ideal <= 0.0 {
+            // Single-arrival interval: compare against a 1/rate quantum.
+            let quantum = if self.rate > 0.0 { 1.0 / self.rate } else { 1.0 };
+            return (actual / quantum).max(1.0);
+        }
+        (actual / ideal).max(1.0)
+    }
+}
+
+/// Recorder driven by the engines during a run.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    /// Per-second series.
+    pub ts: TimeSeries,
+    hits_local: u64,
+    hits_global: u64,
+    misses: u64,
+    resp_sum_s: f64,
+    resp_max_s: f64,
+    tasks_done: u64,
+    last_completion: Micros,
+    /// CPU time integral: slot-seconds of *registered* capacity (the
+    /// paper's CPU-hours consumed, Fig 13).
+    cpu_slot_seconds: f64,
+    /// Per-interval slowdown accounting.
+    pub intervals: Vec<IntervalStat>,
+    queue_max: usize,
+}
+
+impl Recorder {
+    /// Fresh recorder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one file access of `bytes` at time `now`.
+    pub fn record_access(&mut self, now: Micros, kind: AccessKind, bytes: u64) {
+        let b = self.ts.bucket_mut(now.as_secs());
+        match kind {
+            AccessKind::HitLocal => {
+                self.hits_local += 1;
+                b.bytes_local += bytes;
+            }
+            AccessKind::HitGlobal => {
+                self.hits_global += 1;
+                b.bytes_remote += bytes;
+            }
+            AccessKind::Miss => {
+                self.misses += 1;
+                b.bytes_gpfs += bytes;
+            }
+        }
+    }
+
+    /// Record a task arrival (and its interval for slowdown accounting).
+    pub fn record_arrival(&mut self, now: Micros, interval: u32, rate: f64) {
+        self.ts.bucket_mut(now.as_secs()).arrivals += 1;
+        let i = interval as usize;
+        if i >= self.intervals.len() {
+            self.intervals.resize(i + 1, IntervalStat::default());
+            self.intervals[i].start = now;
+            self.intervals[i].rate = rate;
+        }
+        let stat = &mut self.intervals[i];
+        stat.last_arrival = stat.last_arrival.max(now);
+        stat.tasks += 1;
+    }
+
+    /// Record a task completion; `arrival` and `interval` come from the
+    /// task, `now` is completion (result delivered).
+    pub fn record_completion(&mut self, now: Micros, arrival: Micros, interval: u32) {
+        self.ts.bucket_mut(now.as_secs()).tasks_completed += 1;
+        let resp = (now - arrival).as_secs_f64();
+        self.resp_sum_s += resp;
+        self.resp_max_s = self.resp_max_s.max(resp);
+        self.tasks_done += 1;
+        self.last_completion = self.last_completion.max(now);
+        if let Some(stat) = self.intervals.get_mut(interval as usize) {
+            stat.last_completion = stat.last_completion.max(now);
+        }
+    }
+
+    /// Periodic (1 Hz) cluster sample.
+    pub fn sample(
+        &mut self,
+        now: Micros,
+        queue_len: usize,
+        nodes: usize,
+        busy_slots: u64,
+        total_slots: u64,
+    ) {
+        let b = self.ts.bucket_mut(now.as_secs());
+        b.queue_len = queue_len.min(u32::MAX as usize) as u32;
+        b.nodes = nodes as u32;
+        b.busy_slots = busy_slots as u32;
+        b.total_slots = total_slots as u32;
+        self.cpu_slot_seconds += total_slots as f64;
+        self.queue_max = self.queue_max.max(queue_len);
+    }
+
+    /// Tasks completed so far.
+    pub fn tasks_done(&self) -> u64 {
+        self.tasks_done
+    }
+
+    /// Finalize into summary metrics.
+    pub fn summarize(&self, ideal_wet_s: f64) -> SummaryMetrics {
+        let accesses = (self.hits_local + self.hits_global + self.misses).max(1);
+        let wet = self.last_completion.as_secs_f64();
+        let tp = self.ts.throughput_series();
+        // Average over the active portion (ignore trailing zeros).
+        let active: Vec<f64> = tp.iter().copied().filter(|&x| x > 0.0).collect();
+        let cpu_time_h = self.cpu_slot_seconds / 3600.0;
+        SummaryMetrics {
+            workload_execution_time_s: wet,
+            ideal_wet_s,
+            efficiency: if wet > 0.0 { (ideal_wet_s / wet).min(1.0) } else { 0.0 },
+            hit_local_rate: self.hits_local as f64 / accesses as f64,
+            hit_global_rate: self.hits_global as f64 / accesses as f64,
+            miss_rate: self.misses as f64 / accesses as f64,
+            avg_throughput_gbps: crate::util::stats::mean(&active),
+            peak_throughput_gbps: percentile(&tp, 0.99),
+            avg_response_time_s: if self.tasks_done > 0 {
+                self.resp_sum_s / self.tasks_done as f64
+            } else {
+                0.0
+            },
+            max_response_time_s: self.resp_max_s,
+            cpu_time_hours: cpu_time_h,
+            tasks_completed: self.tasks_done,
+            queue_max_len: self.queue_max,
+            avg_cpu_utilization: {
+                let samples: Vec<&Bucket> = self
+                    .ts
+                    .buckets()
+                    .iter()
+                    .filter(|b| b.total_slots > 0)
+                    .collect();
+                if samples.is_empty() {
+                    0.0
+                } else {
+                    samples
+                        .iter()
+                        .map(|b| b.busy_slots as f64 / b.total_slots as f64)
+                        .sum::<f64>()
+                        / samples.len() as f64
+                }
+            },
+        }
+    }
+}
+
+/// End-of-run summary (the numbers the paper reports per experiment).
+#[derive(Debug, Clone, Default)]
+pub struct SummaryMetrics {
+    /// Workload execution time (s) — first arrival to last completion.
+    pub workload_execution_time_s: f64,
+    /// Ideal WET (s) from the arrival function.
+    pub ideal_wet_s: f64,
+    /// Efficiency = ideal / measured (§5.2: 28 %…99 %).
+    pub efficiency: f64,
+    /// HR_L — local cache-hit fraction.
+    pub hit_local_rate: f64,
+    /// HR_C — remote (peer cache) hit fraction.
+    pub hit_global_rate: f64,
+    /// HR_S — miss (persistent storage) fraction.
+    pub miss_rate: f64,
+    /// Mean aggregate throughput over active seconds, Gb/s.
+    pub avg_throughput_gbps: f64,
+    /// 99th-percentile per-second throughput, Gb/s (the paper's "peak").
+    pub peak_throughput_gbps: f64,
+    /// Mean end-to-end response time (s), §5.2.6.
+    pub avg_response_time_s: f64,
+    /// Worst response time (s).
+    pub max_response_time_s: f64,
+    /// CPU hours of registered capacity (Fig 13 PI denominator).
+    pub cpu_time_hours: f64,
+    /// Tasks completed.
+    pub tasks_completed: u64,
+    /// Peak wait-queue length.
+    pub queue_max_len: usize,
+    /// Mean CPU utilization over sampled seconds.
+    pub avg_cpu_utilization: f64,
+}
+
+impl SummaryMetrics {
+    /// Speedup of this run relative to a baseline WET (paper:
+    /// `SP = WET_GPFS / WET_DD`).
+    pub fn speedup_vs(&self, baseline_wet_s: f64) -> f64 {
+        if self.workload_execution_time_s > 0.0 {
+            baseline_wet_s / self.workload_execution_time_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Raw (unnormalized) performance index `PI = SP / CPU_T` (paper
+    /// normalizes across experiments; see the report layer).
+    pub fn performance_index_raw(&self, baseline_wet_s: f64) -> f64 {
+        if self.cpu_time_hours > 0.0 {
+            self.speedup_vs(baseline_wet_s) / self.cpu_time_hours
+        } else {
+            0.0
+        }
+    }
+
+    /// Slowdown vs the ideal WET (`SL = WET_policy / WET_ideal`).
+    pub fn slowdown(&self) -> f64 {
+        if self.ideal_wet_s > 0.0 {
+            self.workload_execution_time_s / self.ideal_wet_s
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_accounting() {
+        let mut r = Recorder::new();
+        r.record_access(Micros::from_secs(1), AccessKind::HitLocal, 100);
+        r.record_access(Micros::from_secs(1), AccessKind::Miss, 50);
+        r.record_access(Micros::from_secs(2), AccessKind::HitGlobal, 25);
+        let b1 = r.ts.buckets()[1];
+        assert_eq!(b1.bytes_local, 100);
+        assert_eq!(b1.bytes_gpfs, 50);
+        assert_eq!(b1.bytes_total(), 150);
+        assert_eq!(r.ts.buckets()[2].bytes_remote, 25);
+    }
+
+    #[test]
+    fn summary_rates_sum_to_one() {
+        let mut r = Recorder::new();
+        for i in 0..60 {
+            let kind = match i % 3 {
+                0 => AccessKind::HitLocal,
+                1 => AccessKind::HitGlobal,
+                _ => AccessKind::Miss,
+            };
+            r.record_access(Micros::from_secs(i), kind, 1000);
+        }
+        let s = r.summarize(100.0);
+        let total = s.hit_local_rate + s.hit_global_rate + s.miss_rate;
+        assert!((total - 1.0).abs() < 1e-12);
+        assert!((s.hit_local_rate - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn response_time_and_wet() {
+        let mut r = Recorder::new();
+        r.record_arrival(Micros::from_secs(0), 0, 1.0);
+        r.record_arrival(Micros::from_secs(10), 0, 1.0);
+        r.record_completion(Micros::from_secs(5), Micros::from_secs(0), 0);
+        r.record_completion(Micros::from_secs(30), Micros::from_secs(10), 0);
+        let s = r.summarize(30.0);
+        assert_eq!(s.workload_execution_time_s, 30.0);
+        assert_eq!(s.avg_response_time_s, 12.5);
+        assert_eq!(s.max_response_time_s, 20.0);
+        assert_eq!(s.efficiency, 1.0);
+        assert_eq!(s.tasks_completed, 2);
+    }
+
+    #[test]
+    fn cpu_time_integrates_capacity() {
+        let mut r = Recorder::new();
+        for sec in 0..3600 {
+            r.sample(Micros::from_secs(sec), 0, 64, 0, 128);
+        }
+        let s = r.summarize(1.0);
+        assert!((s.cpu_time_hours - 128.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn interval_slowdown() {
+        let mut stat = IntervalStat {
+            rate: 10.0,
+            start: Micros::from_secs(0),
+            last_arrival: Micros::from_secs(60),
+            last_completion: Micros::from_secs(120),
+            tasks: 600,
+        };
+        assert!((stat.slowdown() - 2.0).abs() < 1e-9);
+        stat.last_completion = Micros::from_secs(30);
+        assert_eq!(stat.slowdown(), 1.0, "slowdown floors at 1");
+    }
+
+    #[test]
+    fn speedup_and_pi() {
+        let s = SummaryMetrics {
+            workload_execution_time_s: 1436.0,
+            cpu_time_hours: 24.0,
+            ..SummaryMetrics::default()
+        };
+        let sp = s.speedup_vs(5011.0);
+        assert!((sp - 3.49).abs() < 0.01);
+        assert!((s.performance_index_raw(5011.0) - sp / 24.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn queue_high_water() {
+        let mut r = Recorder::new();
+        r.sample(Micros::from_secs(0), 10, 1, 0, 2);
+        r.sample(Micros::from_secs(1), 500, 1, 0, 2);
+        r.sample(Micros::from_secs(2), 3, 1, 0, 2);
+        assert_eq!(r.summarize(1.0).queue_max_len, 500);
+    }
+}

@@ -1,0 +1,324 @@
+//! The abstract model of data-centric task farms (§4).
+//!
+//! Implements the paper's definitions verbatim:
+//!
+//! * average task execution time `B = (1/|K|) Σ μ(κ)`;
+//! * computational intensity `I = B · A`;
+//! * workload execution time `V = max(B/|T|, 1/A) · |K|`;
+//! * overhead-inclusive average `Y = avg(μ + o [+ ζ(δ,τ)])`;
+//! * overhead-inclusive execution time `W = max(Y/|T|, 1/A) · |K|`;
+//! * efficiency `E = V/W`, speedup `S = E · |T|`;
+//! * copy time `ζ(δ,τ) = β(δ) / min(η(ν_src,ω_src), η(ν_dst,ω_dst))` with
+//!   available bandwidth `η(ν,ω) = ν/ω` for load ω ≥ 1.
+//!
+//! The store load ω is not observable before a run, so the evaluator
+//! closes the loop with a small fixed-point iteration: the expected
+//! number of concurrent readers of a store follows from the fraction of
+//! task time spent copying, which depends on ζ, which depends on ω. The
+//! paper notes its model captures contention "only simplistically" and
+//! attributes its 5–8 % error to exactly this — our validation harness
+//! (Figure 2 bench) measures the same gap against the simulator.
+//!
+//! The same arithmetic is exported two ways: pure Rust ([`predict`])
+//! for fast sweeps, and — to exercise the AOT path end to end — a
+//! batched evaluator compiled from JAX/Pallas and executed via PJRT
+//! (see `crate::runtime`); a test asserts both agree.
+
+use crate::config::{AccessSpec, ArrivalSpec, ExperimentConfig};
+
+/// Inputs to the abstract model, extracted from an [`ExperimentConfig`].
+#[derive(Debug, Clone, Copy)]
+pub struct ModelInputs {
+    /// Tasks |K|.
+    pub num_tasks: f64,
+    /// Transient compute resources |T| (CPU slots).
+    pub cpus: f64,
+    /// Mean task compute time μ (s).
+    pub mu_s: f64,
+    /// Dispatch + result-delivery overhead o (s).
+    pub overhead_s: f64,
+    /// Data object size β (bytes).
+    pub object_bytes: f64,
+    /// Mean task arrival rate A (tasks/s); `f64::INFINITY` for batch.
+    pub arrival_rate: f64,
+    /// Persistent-store ideal bandwidth ν(π) (bytes/s).
+    pub persistent_bps: f64,
+    /// Transient-store (local disk) ideal bandwidth ν(τ) (bytes/s).
+    pub transient_bps: f64,
+    /// Probability a task's object misses every cache (→ copy from π).
+    pub p_miss: f64,
+    /// Probability a task's object is cached locally (no copy at all).
+    pub p_local: f64,
+}
+
+/// Model outputs (§4.3's quantities).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelPrediction {
+    /// Average task execution time B (s).
+    pub b: f64,
+    /// Computational intensity I = B·A.
+    pub intensity: f64,
+    /// Ideal workload execution time V (s).
+    pub v: f64,
+    /// Overhead-inclusive average task time Y (s).
+    pub y: f64,
+    /// Overhead-inclusive workload execution time W (s).
+    pub w: f64,
+    /// Efficiency E = V/W ∈ (0, 1].
+    pub efficiency: f64,
+    /// Speedup S = E·|T|.
+    pub speedup: f64,
+    /// Converged persistent-store load ω(π) (concurrent readers).
+    pub omega_pi: f64,
+    /// Copy time from the persistent store ζ (s) at that load.
+    pub zeta_s: f64,
+}
+
+impl ModelInputs {
+    /// Derive model inputs from an experiment configuration.
+    ///
+    /// The miss/local-hit split is the model user's estimate; the default
+    /// derivation assumes steady-state diffusion with caches large enough
+    /// for the working set: every distinct file misses once, all repeat
+    /// accesses hit locally (the paper's locality workloads). If the
+    /// aggregate cache cannot hold the working set, the resident fraction
+    /// scales the hit probability (LRU under uniform access).
+    pub fn from_config(cfg: &ExperimentConfig) -> ModelInputs {
+        let w = &cfg.workload;
+        let accesses_per_file = match w.access {
+            AccessSpec::Locality(l) => l.max(1.0),
+            // Uniform: expected accesses per distinct file.
+            AccessSpec::Uniform | AccessSpec::Zipf(_) => {
+                w.num_tasks as f64 / w.num_files as f64
+            }
+        };
+        let working_set = match w.access {
+            AccessSpec::Locality(l) => {
+                (w.num_tasks as f64 / l.max(1.0)).ceil() * w.file_size_bytes as f64
+            }
+            _ => w.num_files as f64 * w.file_size_bytes as f64,
+        };
+        let nodes = cfg.cluster.max_nodes as f64;
+        let aggregate_cache = if cfg.scheduler.policy.uses_caching() {
+            nodes * cfg.cache.capacity_bytes as f64
+        } else {
+            0.0
+        };
+        let resident = if working_set > 0.0 {
+            (aggregate_cache / working_set).min(1.0)
+        } else {
+            0.0
+        };
+        // Cold miss once per file, then hits at the resident fraction.
+        let p_first = 1.0 / accesses_per_file.max(1.0);
+        let p_miss = (p_first + (1.0 - p_first) * (1.0 - resident)).clamp(0.0, 1.0);
+        let arrival_rate = match w.arrival {
+            ArrivalSpec::Batch => f64::INFINITY,
+            ArrivalSpec::Constant(r) => r,
+            ArrivalSpec::IncreasingRate { .. } => {
+                // Mean rate over the run = |K| / span.
+                let span = crate::workload::ideal_execution_time_s(w);
+                if span > 0.0 {
+                    w.num_tasks as f64 / span
+                } else {
+                    f64::INFINITY
+                }
+            }
+        };
+        ModelInputs {
+            num_tasks: w.num_tasks as f64,
+            cpus: nodes * cfg.cluster.cpus_per_node as f64,
+            mu_s: w.compute_ms / 1e3,
+            overhead_s: cfg.cluster.dispatch_service_us / 1e6
+                + 2.0 * cfg.cluster.net_latency_ms / 1e3,
+            object_bytes: w.file_size_bytes as f64,
+            arrival_rate,
+            persistent_bps: crate::util::units::gbps_to_bps(cfg.cluster.gpfs_gbps),
+            transient_bps: crate::util::units::gbps_to_bps(cfg.cluster.local_disk_gbps),
+            p_miss,
+            p_local: 1.0 - p_miss,
+        }
+    }
+}
+
+/// Evaluate the model (fixed-point on store load, ≤32 iterations).
+pub fn predict(inp: &ModelInputs) -> ModelPrediction {
+    assert!(inp.cpus >= 1.0, "need at least one CPU");
+    let b = inp.mu_s;
+    let intensity = if inp.arrival_rate.is_finite() {
+        b * inp.arrival_rate
+    } else {
+        f64::INFINITY
+    };
+    let inv_a = if inp.arrival_rate.is_finite() && inp.arrival_rate > 0.0 {
+        1.0 / inp.arrival_rate
+    } else {
+        0.0
+    };
+    let v = (b / inp.cpus).max(inv_a) * inp.num_tasks;
+
+    // Local reads: the object streams from the local disk (the paper
+    // folds local-read I/O into the task's effective service time).
+    let local_read_s = inp.object_bytes / inp.transient_bps;
+
+    // Fixed point: ω(π) → ζ → time share copying → ω(π).
+    let mut omega: f64 = 1.0;
+    let mut zeta = inp.object_bytes / inp.persistent_bps;
+    for _ in 0..32 {
+        let eta = inp.persistent_bps / omega.max(1.0);
+        zeta = inp.object_bytes / eta;
+        let y = inp.mu_s + inp.overhead_s + inp.p_local * local_read_s + inp.p_miss * zeta;
+        // Expected concurrent persistent-store readers: each CPU spends
+        // p_miss·ζ/Y of its busy time copying from π; the number of busy
+        // CPUs is capped by the arrival rate.
+        let busy_cpus = if inp.arrival_rate.is_finite() {
+            (inp.arrival_rate * y).min(inp.cpus)
+        } else {
+            inp.cpus
+        };
+        let new_omega = (busy_cpus * inp.p_miss * zeta / y).max(1.0);
+        if (new_omega - omega).abs() < 1e-9 {
+            omega = new_omega;
+            break;
+        }
+        omega = new_omega;
+    }
+    let y = inp.mu_s + inp.overhead_s + inp.p_local * local_read_s + inp.p_miss * zeta;
+    let w = (y / inp.cpus).max(inv_a) * inp.num_tasks;
+    let efficiency = if w > 0.0 { (v / w).min(1.0) } else { 1.0 };
+    ModelPrediction {
+        b,
+        intensity,
+        v,
+        y,
+        w,
+        efficiency,
+        speedup: efficiency * inp.cpus,
+        omega_pi: omega,
+        zeta_s: zeta,
+    }
+}
+
+/// Relative model error vs a measured workload execution time
+/// (|W_model − WET_measured| / WET_measured) — the Figure 2 statistic.
+pub fn relative_error(prediction: &ModelPrediction, measured_wet_s: f64) -> f64 {
+    if measured_wet_s <= 0.0 {
+        return f64::NAN;
+    }
+    (prediction.w - measured_wet_s).abs() / measured_wet_s
+}
+
+/// The E > 0.5 sufficient condition of §4.3:
+/// μ(κ) > o(κ) + ζ(δ,τ) ⇒ efficiency above one half.
+pub fn efficiency_condition_holds(inp: &ModelInputs) -> bool {
+    let p = predict(inp);
+    inp.mu_s > inp.overhead_s + p.zeta_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{gbps_to_bps, MB};
+
+    fn base_inputs() -> ModelInputs {
+        ModelInputs {
+            num_tasks: 10_000.0,
+            cpus: 128.0,
+            mu_s: 0.01,
+            overhead_s: 0.005,
+            object_bytes: (10 * MB) as f64,
+            arrival_rate: f64::INFINITY,
+            persistent_bps: gbps_to_bps(4.0),
+            transient_bps: gbps_to_bps(1.6),
+            p_miss: 0.04,
+            p_local: 0.96,
+        }
+    }
+
+    #[test]
+    fn v_is_ideal_time() {
+        let inp = base_inputs();
+        let p = predict(&inp);
+        // Batch arrival: V = B/|T| · |K|.
+        assert!((p.v - 0.01 / 128.0 * 10_000.0).abs() < 1e-12);
+        assert!(p.w >= p.v, "overheads cannot make it faster");
+        assert!(p.efficiency <= 1.0 && p.efficiency > 0.0);
+        assert!((p.speedup - p.efficiency * 128.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn arrival_rate_bounds_v() {
+        let mut inp = base_inputs();
+        inp.arrival_rate = 10.0; // slow arrivals dominate: V = |K|/A
+        let p = predict(&inp);
+        assert!((p.v - 10_000.0 / 10.0).abs() < 1e-9);
+        assert!((p.intensity - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn misses_hurt_efficiency_monotonically() {
+        let mut last = f64::INFINITY;
+        for p_miss in [0.0, 0.1, 0.3, 0.7, 1.0] {
+            let mut inp = base_inputs();
+            inp.p_miss = p_miss;
+            inp.p_local = 1.0 - p_miss;
+            let e = predict(&inp).efficiency;
+            assert!(e <= last + 1e-12, "p_miss={p_miss}: {e} > {last}");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn contention_fixed_point_converges_and_loads_store() {
+        let mut inp = base_inputs();
+        inp.p_miss = 1.0;
+        inp.p_local = 0.0;
+        let p = predict(&inp);
+        // All 128 CPUs copying 10 MB objects from a 4 Gb/s store: load
+        // must be far above 1 and ζ far above the unloaded 20 ms.
+        assert!(p.omega_pi > 10.0, "ω={}", p.omega_pi);
+        assert!(p.zeta_s > 0.1, "ζ={}", p.zeta_s);
+        // Efficiency collapses — data-intensive without caching.
+        assert!(p.efficiency < 0.2, "E={}", p.efficiency);
+    }
+
+    #[test]
+    fn efficiency_condition_matches_definition() {
+        let mut inp = base_inputs();
+        inp.mu_s = 10.0; // compute-heavy: condition holds
+        assert!(efficiency_condition_holds(&inp));
+        let p = predict(&inp);
+        assert!(p.efficiency > 0.5);
+
+        inp.mu_s = 0.001; // data-heavy with misses: condition fails
+        inp.p_miss = 1.0;
+        inp.p_local = 0.0;
+        assert!(!efficiency_condition_holds(&inp));
+    }
+
+    #[test]
+    fn from_config_derives_miss_rates() {
+        // first-available: no caching → p_miss = 1.
+        let cfg = ExperimentConfig::paper_fig(4).unwrap();
+        let inp = ModelInputs::from_config(&cfg);
+        assert!((inp.p_miss - 1.0).abs() < 1e-9);
+
+        // fig 8 (4 GB caches, 100 GB working set over 64 nodes): caches
+        // hold everything → only cold misses remain (1/25 accesses).
+        let cfg = ExperimentConfig::paper_fig(8).unwrap();
+        let inp = ModelInputs::from_config(&cfg);
+        assert!((inp.p_miss - 0.04).abs() < 0.001, "p_miss={}", inp.p_miss);
+
+        // fig 5 (1 GB caches): 64 GB of 100 GB resident.
+        let cfg = ExperimentConfig::paper_fig(5).unwrap();
+        let inp = ModelInputs::from_config(&cfg);
+        assert!(inp.p_miss > 0.3 && inp.p_miss < 0.5, "p_miss={}", inp.p_miss);
+    }
+
+    #[test]
+    fn relative_error_math() {
+        let p = predict(&base_inputs());
+        assert!((relative_error(&p, p.w) - 0.0).abs() < 1e-12);
+        assert!((relative_error(&p, p.w * 2.0) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,670 @@
+//! The discrete-event cluster engine — the testbed substitute.
+//!
+//! Drives the pure coordinator logic (queue / scheduler / provisioner /
+//! index / caches) over simulated time, with data movement flowing
+//! through the fluid-flow contention model of [`super::flow`]:
+//!
+//! * **GPFS** is one shared link (≈4.4 Gb/s sustained);
+//! * each node contributes a **local-disk link** and **NIC in/out links**;
+//! * a local cache hit reads `[disk(e)]`; a peer ("global") hit reads
+//!   `[disk(peer), nic_out(peer), nic_in(e)]` (GridFTP alongside each
+//!   executor, §3.1.1); a miss reads `[gpfs, nic_in(e)]`;
+//! * dispatch passes through a single dispatcher service instance with a
+//!   per-decision service time, reproducing Falkon's measured dispatch
+//!   throughput ceiling (§5.1);
+//! * GRAM/LRM allocation latency delays every provisioning batch
+//!   (30–60 s, §5.2.5).
+//!
+//! The engine is fully deterministic for a given config: integer event
+//! times, seeded PRNG streams, sequence-numbered heap ties.
+
+use super::flow::{FlowNet, LinkId};
+use crate::cache::ObjectCache;
+use crate::config::ExperimentConfig;
+use crate::coordinator::executor::ExecutorRegistry;
+use crate::coordinator::provisioner::Provisioner;
+use crate::coordinator::queue::{Task, WaitQueue};
+use crate::coordinator::scheduler::{NotifyOutcome, Scheduler, SchedulerStats};
+use crate::coordinator::{resolve_access, AccessKind};
+use crate::ids::{ExecutorId, FileId, TaskId};
+use crate::index::LocationIndex;
+use crate::metrics::{IntervalStat, Recorder, SummaryMetrics, TimeSeries};
+use crate::util::prng::Pcg64;
+use crate::util::time::Micros;
+use crate::util::units::gbps_to_bps;
+use crate::workload::{self, Workload};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+/// Result of one simulated experiment.
+#[derive(Debug)]
+pub struct RunResult {
+    /// Experiment name (from the config).
+    pub name: String,
+    /// End-of-run summary metrics.
+    pub summary: SummaryMetrics,
+    /// Per-second time series (the Figs 4–10 summary views).
+    pub ts: TimeSeries,
+    /// Per arrival-interval slowdown stats (Fig 14).
+    pub intervals: Vec<IntervalStat>,
+    /// Scheduler behaviour counters.
+    pub sched_stats: SchedulerStats,
+    /// Working-set size of the generated workload (bytes).
+    pub working_set_bytes: u64,
+    /// Bytes per file in the workload.
+    pub file_size_bytes: u64,
+    /// Wall-clock seconds the simulation itself took (engine §Perf).
+    pub sim_wall_s: f64,
+    /// Events processed (engine §Perf).
+    pub events_processed: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Event {
+    /// Task `workload index` arrives.
+    Arrival(u32),
+    /// Dispatch notification delivered; executor asks for work.
+    Pickup(ExecutorId),
+    /// Task finished computing on its executor.
+    ComputeDone(u64),
+    /// Delayed transfer start (peer-fetch session setup elapsed).
+    StartTransfer(u64),
+    /// A provisioning batch of `n` nodes finished GRAM bootstrap.
+    NodesUp(u32),
+    /// 1 Hz metrics sample + provisioning decision.
+    Tick,
+}
+
+#[derive(Debug)]
+struct HeapEntry {
+    time: Micros,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for HeapEntry {}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.time, self.seq).cmp(&(other.time, other.seq))
+    }
+}
+
+/// Per-node link handles.
+#[derive(Debug, Clone, Copy)]
+struct NodeLinks {
+    disk: LinkId,
+    nic_in: LinkId,
+    nic_out: LinkId,
+}
+
+/// A dispatched task moving through fetch → compute.
+#[derive(Debug)]
+struct InFlight {
+    task: Task,
+    exec: ExecutorId,
+    /// Files still to fetch after the current transfer.
+    remaining_files: Vec<FileId>,
+    /// Kind of the access currently in flight (recorded on completion).
+    current_kind: AccessKind,
+    /// Path waiting on a delayed start (peer session setup).
+    pending_path: Vec<LinkId>,
+    interval: u32,
+}
+
+/// The engine. Construct via [`run`].
+struct Engine {
+    cfg: ExperimentConfig,
+    wl: Workload,
+    clock: Micros,
+    heap: BinaryHeap<Reverse<HeapEntry>>,
+    seq: u64,
+    // Coordinator state (pure logic).
+    sched: Scheduler,
+    reg: ExecutorRegistry,
+    queue: WaitQueue,
+    index: LocationIndex,
+    prov: Provisioner,
+    caches: HashMap<ExecutorId, ObjectCache>,
+    // Cluster substrate.
+    flow: FlowNet,
+    gpfs: LinkId,
+    node_links: HashMap<ExecutorId, NodeLinks>,
+    inflight: HashMap<u64, InFlight>,
+    // Dispatcher service model.
+    dispatcher_free_at: Micros,
+    pending_pickups: usize,
+    // Randomness streams.
+    rng_cache: Pcg64,
+    rng_gram: Pcg64,
+    // Progress.
+    completed: u64,
+    rec: Recorder,
+    events: u64,
+}
+
+/// Run one experiment to completion.
+pub fn run(cfg: &ExperimentConfig) -> RunResult {
+    cfg.validate().expect("invalid experiment config");
+    let t_wall = std::time::Instant::now();
+    let wl = workload::generate(&cfg.workload, cfg.seed);
+    let working_set = wl.working_set_bytes();
+    let ideal_wet = workload::ideal_execution_time_s(&cfg.workload);
+
+    let mut root = Pcg64::seeded(cfg.seed);
+    let mut eng = Engine {
+        sched: Scheduler::new(cfg.scheduler.clone()),
+        reg: ExecutorRegistry::new(),
+        queue: WaitQueue::new(),
+        index: LocationIndex::new(),
+        prov: Provisioner::new(cfg.provisioner.clone(), cfg.cluster.max_nodes),
+        caches: HashMap::new(),
+        flow: FlowNet::new(),
+        gpfs: LinkId(0),
+        node_links: HashMap::new(),
+        inflight: HashMap::new(),
+        dispatcher_free_at: Micros::ZERO,
+        pending_pickups: 0,
+        rng_cache: root.fork(1),
+        rng_gram: root.fork(2),
+        completed: 0,
+        rec: Recorder::new(),
+        events: 0,
+        clock: Micros::ZERO,
+        heap: BinaryHeap::new(),
+        seq: 0,
+        cfg: cfg.clone(),
+        wl,
+    };
+    eng.gpfs = eng.flow.add_link(gbps_to_bps(cfg.cluster.gpfs_gbps));
+
+    // Initial nodes (static provisioning / warm start) register at t=0.
+    for _ in 0..cfg.provisioner.initial_nodes {
+        eng.register_node();
+    }
+    // Kick off arrivals and the 1 Hz tick.
+    if !eng.wl.tasks.is_empty() {
+        let t0 = eng.wl.tasks[0].arrival;
+        eng.push(t0, Event::Arrival(0));
+    }
+    eng.push(Micros::ZERO, Event::Tick);
+
+    eng.run_loop();
+
+    let summary = eng.rec.summarize(ideal_wet);
+    RunResult {
+        name: cfg.name.clone(),
+        summary,
+        ts: std::mem::take(&mut eng.rec.ts),
+        intervals: std::mem::take(&mut eng.rec.intervals),
+        sched_stats: eng.sched.stats.clone(),
+        working_set_bytes: working_set,
+        file_size_bytes: cfg.workload.file_size_bytes,
+        sim_wall_s: t_wall.elapsed().as_secs_f64(),
+        events_processed: eng.events,
+    }
+}
+
+impl Engine {
+    fn push(&mut self, time: Micros, event: Event) {
+        debug_assert!(time >= self.clock, "event scheduled in the past");
+        self.seq += 1;
+        self.heap.push(Reverse(HeapEntry {
+            time,
+            seq: self.seq,
+            event,
+        }));
+    }
+
+    fn run_loop(&mut self) {
+        let total = self.wl.tasks.len() as u64;
+        while self.completed < total {
+            // Interleave flow completions with coordinator events;
+            // transfer completions win ties so data is accounted before
+            // same-instant samples.
+            let next_main = self.heap.peek().map(|Reverse(e)| e.time);
+            let next_flow = self.flow.next_completion();
+            match (next_main, next_flow) {
+                (None, None) => {
+                    panic!(
+                        "simulation stalled at {} with {} tasks incomplete \
+                         (queue={}, inflight={})",
+                        self.clock,
+                        total - self.completed,
+                        self.queue.len(),
+                        self.inflight.len()
+                    );
+                }
+                (m, Some(f)) if m.is_none_or(|m| f <= m) => {
+                    self.clock = f;
+                    self.events += 1;
+                    let tag = self.flow.pop_completion(f);
+                    self.on_transfer_done(tag);
+                }
+                _ => {
+                    let Reverse(entry) = self.heap.pop().expect("peeked");
+                    self.clock = entry.time;
+                    self.events += 1;
+                    self.on_event(entry.event);
+                }
+            }
+        }
+    }
+
+    fn on_event(&mut self, event: Event) {
+        match event {
+            Event::Arrival(i) => self.on_arrival(i),
+            Event::Pickup(e) => self.on_pickup(e),
+            Event::ComputeDone(task_id) => self.on_compute_done(task_id),
+            Event::StartTransfer(task_id) => {
+                let inf = self
+                    .inflight
+                    .get_mut(&task_id)
+                    .expect("delayed start for unknown task");
+                let path = std::mem::take(&mut inf.pending_path);
+                debug_assert!(!path.is_empty());
+                self.flow
+                    .start(self.clock, self.wl.file_size_bytes, &path, task_id);
+            }
+            Event::NodesUp(n) => {
+                for _ in 0..n {
+                    self.prov.on_node_registered();
+                    self.register_node();
+                }
+            }
+            Event::Tick => self.on_tick(),
+        }
+    }
+
+    // ---- node lifecycle -------------------------------------------------
+
+    fn register_node(&mut self) {
+        let now = self.clock;
+        let id = self.reg.register(self.cfg.cluster.cpus_per_node as u32, now);
+        let disk = self.flow.add_link(gbps_to_bps(self.cfg.cluster.local_disk_gbps));
+        let nic_in = self.flow.add_link(gbps_to_bps(self.cfg.cluster.nic_gbps));
+        let nic_out = self.flow.add_link(gbps_to_bps(self.cfg.cluster.nic_gbps));
+        self.node_links.insert(
+            id,
+            NodeLinks {
+                disk,
+                nic_in,
+                nic_out,
+            },
+        );
+        if self.cfg.scheduler.policy.uses_caching() {
+            self.caches.insert(id, ObjectCache::new(self.cfg.cache));
+            self.index.register_executor(id);
+        }
+        // A fresh executor immediately asks for work.
+        self.schedule_pickup(id);
+    }
+
+    fn release_node(&mut self, id: ExecutorId) {
+        // Peers may be mid-transfer from this node's cache; skip the
+        // release this round if so (retry next tick).
+        if let Some(links) = self.node_links.get(&id) {
+            if self.flow.link_active(links.disk) > 0
+                || self.flow.link_active(links.nic_in) > 0
+                || self.flow.link_active(links.nic_out) > 0
+            {
+                return;
+            }
+        }
+        if self.cfg.scheduler.policy.uses_caching() {
+            self.index.deregister_executor(id);
+            self.caches.remove(&id);
+        }
+        self.node_links.remove(&id);
+        self.reg.deregister(id);
+    }
+
+    // ---- dispatch path --------------------------------------------------
+
+    /// Reserve a pending slot on `exec` and schedule its pickup through
+    /// the dispatcher service queue.
+    fn schedule_pickup(&mut self, exec: ExecutorId) {
+        if !self.reg.is_free(exec) {
+            return;
+        }
+        self.reg.mark_pending(exec);
+        self.pending_pickups += 1;
+        let service = Micros::from_secs_f64(self.cfg.cluster.dispatch_service_us / 1e6);
+        let start = self.dispatcher_free_at.max(self.clock);
+        self.dispatcher_free_at = start + service;
+        let latency = Micros::from_secs_f64(self.cfg.cluster.net_latency_ms / 1e3);
+        self.push(self.dispatcher_free_at + latency, Event::Pickup(exec));
+    }
+
+    fn on_arrival(&mut self, i: u32) {
+        let spec = &self.wl.tasks[i as usize];
+        let task = Task {
+            id: spec.id,
+            files: vec![spec.file],
+            compute: self.wl.compute,
+            arrival: spec.arrival,
+        };
+        let rate = self
+            .wl
+            .stages
+            .get(spec.interval as usize)
+            .map_or(0.0, |&(_, r)| r);
+        self.rec.record_arrival(self.clock, spec.interval, rate);
+        self.queue.push_back(task);
+
+        // Phase 1: try to notify an executor for the head task.
+        self.notify_for_head();
+
+        // Chain the next arrival.
+        let next = i as usize + 1;
+        if next < self.wl.tasks.len() {
+            let t = self.wl.tasks[next].arrival;
+            self.push(t.max(self.clock), Event::Arrival(next as u32));
+        }
+    }
+
+    fn notify_for_head(&mut self) {
+        if self.reg.free_count() == 0 {
+            return;
+        }
+        let Some(head) = self.queue.front() else {
+            return;
+        };
+        let files = head.files.clone();
+        match self.sched.select_notify(&files, &self.reg, &self.index) {
+            NotifyOutcome::Preferred(e) | NotifyOutcome::Fallback(e) => {
+                self.schedule_pickup(e);
+            }
+            NotifyOutcome::Wait | NotifyOutcome::NoneFree => {}
+        }
+    }
+
+    fn on_pickup(&mut self, exec: ExecutorId) {
+        self.pending_pickups -= 1;
+        if !self.reg.contains(exec) {
+            return; // released meanwhile (cannot happen while pending, but be safe)
+        }
+        // The pending reservation holds one slot; extra free slots allow a
+        // larger batch.
+        let free_extra = self.reg.get(exec).map_or(0, |e| e.free_slots()) as usize;
+        let limit = self
+            .cfg
+            .scheduler
+            .max_tasks_per_pickup
+            .min(1 + free_extra)
+            .max(1);
+        let tasks = self
+            .sched
+            .pick_tasks(exec, limit, &mut self.queue, &self.reg, &self.index);
+        if tasks.is_empty() {
+            self.reg.cancel_pending(exec);
+            return;
+        }
+        for (i, task) in tasks.into_iter().enumerate() {
+            if i == 0 {
+                self.reg.pending_to_busy(exec, self.clock);
+            } else {
+                self.reg.start_task(exec, self.clock);
+            }
+            self.start_data_phase(task, exec);
+        }
+    }
+
+    /// Begin fetching the task's first file (remaining files chain on
+    /// transfer completion).
+    fn start_data_phase(&mut self, task: Task, exec: ExecutorId) {
+        let mut files = task.files.clone();
+        files.reverse(); // pop() yields paper order
+        let interval = self
+            .wl
+            .tasks
+            .get(task.id.0 as usize)
+            .map_or(0, |t| t.interval);
+        let mut inf = InFlight {
+            task,
+            exec,
+            remaining_files: files,
+            current_kind: AccessKind::Miss,
+            pending_path: Vec::new(),
+            interval,
+        };
+        let first = inf.remaining_files.pop().expect("task has ≥1 file");
+        self.start_fetch(&mut inf, first);
+        self.inflight.insert(inf.task.id.0, inf);
+    }
+
+    /// Resolve one file access and start its transfer.
+    fn start_fetch(&mut self, inf: &mut InFlight, file: FileId) {
+        let exec = inf.exec;
+        let size = self.wl.file_size_bytes;
+        let links = self.node_links[&exec];
+        let (kind, path): (AccessKind, Vec<LinkId>) =
+            if self.cfg.scheduler.policy.uses_caching() {
+                let cache = self
+                    .caches
+                    .get_mut(&exec)
+                    .expect("caching policy ⇒ cache exists");
+                let res = resolve_access(
+                    exec,
+                    file,
+                    size,
+                    cache,
+                    &mut self.index,
+                    &mut self.rng_cache,
+                );
+                let path = match (res.kind, res.peer) {
+                    (AccessKind::HitLocal, _) => vec![links.disk],
+                    (AccessKind::HitGlobal, Some(p)) => {
+                        let pl = self.node_links[&p];
+                        vec![pl.disk, pl.nic_out, links.nic_in]
+                    }
+                    (AccessKind::HitGlobal, None) => unreachable!("global hit needs a peer"),
+                    (AccessKind::Miss, _) => vec![self.gpfs, links.nic_in],
+                };
+                (res.kind, path)
+            } else {
+                // first-available: every access goes to GPFS.
+                (AccessKind::Miss, vec![self.gpfs, links.nic_in])
+            };
+        inf.current_kind = kind;
+        // Peer fetches pay a GridFTP session-setup cost before bytes flow
+        // (cluster.peer_overhead_ms) — see Fig 10's discussion of remote
+        // cache access costs.
+        let overhead = self.cfg.cluster.peer_overhead_ms;
+        if kind == AccessKind::HitGlobal && overhead > 0.0 {
+            inf.pending_path = path;
+            self.push(
+                self.clock + Micros::from_secs_f64(overhead / 1e3),
+                Event::StartTransfer(inf.task.id.0),
+            );
+        } else {
+            self.flow.start(self.clock, size, &path, inf.task.id.0);
+        }
+    }
+
+    fn on_transfer_done(&mut self, task_id: u64) {
+        let mut inf = self
+            .inflight
+            .remove(&task_id)
+            .expect("transfer for unknown task");
+        self.rec
+            .record_access(self.clock, inf.current_kind, self.wl.file_size_bytes);
+        if let Some(next_file) = inf.remaining_files.pop() {
+            self.start_fetch(&mut inf, next_file);
+            self.inflight.insert(task_id, inf);
+        } else {
+            // All data staged: compute.
+            let done = self.clock + inf.task.compute;
+            self.inflight.insert(task_id, inf);
+            self.push(done, Event::ComputeDone(task_id));
+        }
+    }
+
+    fn on_compute_done(&mut self, task_id: u64) {
+        let inf = self
+            .inflight
+            .remove(&task_id)
+            .expect("compute for unknown task");
+        debug_assert_eq!(inf.task.id, TaskId(task_id));
+        self.reg.finish_task(inf.exec, self.clock);
+        // Result delivery back to the dispatcher.
+        let latency = Micros::from_secs_f64(self.cfg.cluster.net_latency_ms / 1e3);
+        self.rec
+            .record_completion(self.clock + latency, inf.task.arrival, inf.interval);
+        self.completed += 1;
+        // The now-free executor asks for more work.
+        if !self.queue.is_empty() {
+            self.schedule_pickup(inf.exec);
+        }
+    }
+
+    // ---- provisioning ---------------------------------------------------
+
+    fn on_tick(&mut self) {
+        self.rec.sample(
+            self.clock,
+            self.queue.len(),
+            self.reg.len(),
+            self.reg.busy_slots(),
+            self.reg.total_slots(),
+        );
+        let action = self
+            .prov
+            .on_tick(self.clock, self.queue.len(), &self.reg);
+        if action.allocate > 0 {
+            let (lo, hi) = self.cfg.cluster.gram_latency_s;
+            let latency = Micros::from_secs_f64(self.rng_gram.range_f64(lo, hi.max(lo + 1e-9)));
+            self.push(self.clock + latency, Event::NodesUp(action.allocate as u32));
+        }
+        for e in action.release {
+            self.release_node(e);
+        }
+        // Safety net: if tasks wait, executors are free, and no pickup is
+        // in flight (e.g. every notification was declined), re-notify.
+        if !self.queue.is_empty() && self.reg.free_count() > 0 && self.pending_pickups == 0 {
+            self.notify_for_head();
+            // max-cache-hit can legitimately Wait with free executors;
+            // guarantee progress by forcing one pickup if still none.
+            if self.pending_pickups == 0 {
+                let first_free = self.reg.free_iter().next();
+                if let Some(e) = first_free {
+                    self.schedule_pickup(e);
+                }
+            }
+        }
+        self.push(self.clock + Micros::from_secs(1), Event::Tick);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArrivalSpec, ExperimentConfig};
+    use crate::coordinator::scheduler::DispatchPolicy;
+    use crate::util::units::MB;
+
+    /// A small workload that runs in milliseconds of wall time.
+    fn small_cfg(policy: DispatchPolicy) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = format!("test-{policy}");
+        cfg.cluster.max_nodes = 8;
+        cfg.workload.num_tasks = 2_000;
+        cfg.workload.num_files = 100;
+        cfg.workload.file_size_bytes = 10 * MB;
+        cfg.workload.arrival = ArrivalSpec::IncreasingRate {
+            initial: 4.0,
+            factor: 1.5,
+            interval_s: 10.0,
+            max_rate: 100.0,
+        };
+        cfg.scheduler.policy = policy;
+        cfg.cache.capacity_bytes = 4_000 * MB;
+        cfg
+    }
+
+    #[test]
+    fn completes_all_tasks_first_available() {
+        let r = run(&small_cfg(DispatchPolicy::FirstAvailable));
+        assert_eq!(r.summary.tasks_completed, 2_000);
+        assert_eq!(r.summary.miss_rate, 1.0, "no caching under first-available");
+        assert!(r.summary.workload_execution_time_s > 0.0);
+    }
+
+    #[test]
+    fn completes_all_tasks_every_policy() {
+        for policy in DispatchPolicy::ALL {
+            let r = run(&small_cfg(policy));
+            assert_eq!(r.summary.tasks_completed, 2_000, "policy {policy}");
+            let rates =
+                r.summary.hit_local_rate + r.summary.hit_global_rate + r.summary.miss_rate;
+            assert!((rates - 1.0).abs() < 1e-9, "policy {policy}: rates {rates}");
+        }
+    }
+
+    #[test]
+    fn caching_policies_get_hits() {
+        // 100 files × 10 MB = 1 GB working set, 4 GB caches: after the
+        // first pass everything is cached.
+        let r = run(&small_cfg(DispatchPolicy::GoodCacheCompute));
+        assert!(
+            r.summary.hit_local_rate > 0.7,
+            "hit rate {} too low",
+            r.summary.hit_local_rate
+        );
+        assert!(r.summary.miss_rate < 0.2, "miss rate {}", r.summary.miss_rate);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = run(&small_cfg(DispatchPolicy::GoodCacheCompute));
+        let b = run(&small_cfg(DispatchPolicy::GoodCacheCompute));
+        assert_eq!(
+            a.summary.workload_execution_time_s,
+            b.summary.workload_execution_time_s
+        );
+        assert_eq!(a.summary.hit_local_rate, b.summary.hit_local_rate);
+        assert_eq!(a.events_processed, b.events_processed);
+    }
+
+    #[test]
+    fn provisioner_grows_fleet_under_load() {
+        let r = run(&small_cfg(DispatchPolicy::GoodCacheCompute));
+        let max_nodes = r.ts.buckets().iter().map(|b| b.nodes).max().unwrap_or(0);
+        assert!(max_nodes >= 2, "fleet never grew: {max_nodes}");
+    }
+
+    #[test]
+    fn static_provisioning_uses_fixed_fleet() {
+        let mut cfg = small_cfg(DispatchPolicy::GoodCacheCompute);
+        cfg.provisioner = crate::coordinator::provisioner::ProvisionerConfig::static_nodes(8);
+        let r = run(&cfg);
+        assert_eq!(r.summary.tasks_completed, 2_000);
+        for b in r.ts.buckets().iter().filter(|b| b.total_slots > 0) {
+            assert_eq!(b.nodes, 8);
+        }
+    }
+
+    #[test]
+    fn gpfs_bound_throughput_under_first_available() {
+        // With first-available everything reads GPFS: aggregate
+        // throughput must never exceed the GPFS capacity.
+        let cfg = small_cfg(DispatchPolicy::FirstAvailable);
+        let r = run(&cfg);
+        // Allow 15% slack for bucket-boundary attribution (bytes are
+        // credited at transfer completion, so seconds can burst).
+        let cap = cfg.cluster.gpfs_gbps * 1.15;
+        for (sec, b) in r.ts.buckets().iter().enumerate() {
+            let gbps = crate::util::units::bps_to_gbps(b.bytes_total() as f64);
+            assert!(gbps <= cap, "second {sec}: {gbps} Gb/s > GPFS cap");
+        }
+    }
+}

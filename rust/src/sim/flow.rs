@@ -1,0 +1,469 @@
+//! Fluid-flow transfer model — the bandwidth-contention substrate.
+//!
+//! Every shared resource (the GPFS server, each node's local disk, each
+//! node's NIC in/out direction) is a [`Link`] with an ideal capacity ν.
+//! A [`Transfer`] occupies one or more links; its instantaneous rate is
+//! `min over links (capacity / active-count)` — the paper's available-
+//! bandwidth model η(ν,ω) = ν/ω (§4.1) applied along the path.
+//!
+//! Rates change only when a transfer starts or completes, so progress is
+//! integrated lazily per transfer and completion times are kept *exact*
+//! in an indexed min-heap (decrease-key, no stale entries) — the engine
+//! interleaves these completions with its own event queue.
+
+use crate::util::time::Micros;
+use std::collections::HashSet;
+
+/// Handle to a bandwidth link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LinkId(pub u32);
+
+/// Handle to an in-flight transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TransferId(pub u32);
+
+#[derive(Debug)]
+struct Link {
+    capacity_bps: f64,
+    /// Transfers currently using this link.
+    active: HashSet<u32>,
+}
+
+#[derive(Debug)]
+struct Transfer {
+    remaining_bytes: f64,
+    rate_bps: f64,
+    last_update: Micros,
+    links: [u32; 3],
+    nlinks: u8,
+    /// Engine-side identity (task id).
+    tag: u64,
+}
+
+/// Indexed min-heap over (completion time, transfer id) with in-place
+/// key updates — O(log n), no lazy deletion.
+#[derive(Debug, Default)]
+struct IndexedHeap {
+    /// (key, handle) pairs in heap order.
+    heap: Vec<(Micros, u32)>,
+    /// handle → position in `heap` (u32::MAX = absent).
+    pos: Vec<u32>,
+}
+
+const ABSENT: u32 = u32::MAX;
+
+impl IndexedHeap {
+    fn ensure(&mut self, handle: u32) {
+        if handle as usize >= self.pos.len() {
+            self.pos.resize(handle as usize + 1, ABSENT);
+        }
+    }
+
+    fn insert(&mut self, handle: u32, key: Micros) {
+        self.ensure(handle);
+        debug_assert_eq!(self.pos[handle as usize], ABSENT);
+        self.heap.push((key, handle));
+        let i = self.heap.len() - 1;
+        self.pos[handle as usize] = i as u32;
+        self.sift_up(i);
+    }
+
+    fn update(&mut self, handle: u32, key: Micros) {
+        let i = self.pos[handle as usize] as usize;
+        debug_assert_ne!(i as u32, ABSENT);
+        let old = self.heap[i].0;
+        self.heap[i].0 = key;
+        if key < old {
+            self.sift_up(i);
+        } else {
+            self.sift_down(i);
+        }
+    }
+
+    fn remove(&mut self, handle: u32) {
+        let i = self.pos[handle as usize] as usize;
+        debug_assert_ne!(i as u32, ABSENT);
+        self.pos[handle as usize] = ABSENT;
+        let last = self.heap.len() - 1;
+        if i != last {
+            self.heap.swap(i, last);
+            self.heap.pop();
+            let moved = self.heap[i].1;
+            self.pos[moved as usize] = i as u32;
+            // Restore heap property in whichever direction is needed.
+            self.sift_up(i);
+            let j = self.pos[moved as usize] as usize;
+            self.sift_down(j);
+        } else {
+            self.heap.pop();
+        }
+    }
+
+    fn peek(&self) -> Option<(Micros, u32)> {
+        self.heap.first().copied()
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.heap[i] < self.heap[parent] {
+                self.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let l = 2 * i + 1;
+            let r = 2 * i + 2;
+            let mut m = i;
+            if l < self.heap.len() && self.heap[l] < self.heap[m] {
+                m = l;
+            }
+            if r < self.heap.len() && self.heap[r] < self.heap[m] {
+                m = r;
+            }
+            if m == i {
+                break;
+            }
+            self.swap(i, m);
+            i = m;
+        }
+    }
+
+    fn swap(&mut self, a: usize, b: usize) {
+        self.heap.swap(a, b);
+        self.pos[self.heap[a].1 as usize] = a as u32;
+        self.pos[self.heap[b].1 as usize] = b as u32;
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+/// The flow network: links + in-flight transfers + exact completion heap.
+#[derive(Debug, Default)]
+pub struct FlowNet {
+    links: Vec<Link>,
+    transfers: Vec<Option<Transfer>>,
+    free: Vec<u32>,
+    completions: IndexedHeap,
+    /// Cumulative completed transfer count (stats).
+    pub completed: u64,
+    /// Scratch id buffer reused by settle/rerate (§Perf: avoids two Vec
+    /// allocations per transfer event on the engine's hottest path).
+    scratch: Vec<u32>,
+}
+
+impl FlowNet {
+    /// Empty network.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a link with the given capacity (bytes/second).
+    pub fn add_link(&mut self, capacity_bps: f64) -> LinkId {
+        assert!(capacity_bps > 0.0);
+        self.links.push(Link {
+            capacity_bps,
+            active: HashSet::new(),
+        });
+        LinkId(self.links.len() as u32 - 1)
+    }
+
+    /// Active transfer count on a link (release-safety check).
+    pub fn link_active(&self, link: LinkId) -> usize {
+        self.links[link.0 as usize].active.len()
+    }
+
+    /// In-flight transfer count.
+    pub fn in_flight(&self) -> usize {
+        self.completions.len()
+    }
+
+    /// Start a transfer of `bytes` across `links` (1–3 links) at `now`.
+    /// `tag` is returned on completion. Zero-byte transfers complete at
+    /// `now` (still go through the heap for deterministic ordering).
+    pub fn start(&mut self, now: Micros, bytes: u64, links: &[LinkId], tag: u64) -> TransferId {
+        assert!(!links.is_empty() && links.len() <= 3);
+        let mut arr = [u32::MAX; 3];
+        for (i, l) in links.iter().enumerate() {
+            arr[i] = l.0;
+        }
+        let id = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                self.transfers.push(None);
+                self.transfers.len() as u32 - 1
+            }
+        };
+        let t = Transfer {
+            remaining_bytes: bytes as f64,
+            rate_bps: 0.0,
+            last_update: now,
+            links: arr,
+            nlinks: links.len() as u8,
+            tag,
+        };
+        self.transfers[id as usize] = Some(t);
+        // Settle existing flows on the affected links, add us, re-rate.
+        for l in links {
+            self.settle_link(*l, now);
+        }
+        for l in links {
+            self.links[l.0 as usize].active.insert(id);
+        }
+        self.completions.insert(id, Micros::MAX);
+        for l in links {
+            self.rerate_link(*l, now);
+        }
+        TransferId(id)
+    }
+
+    /// Earliest completion, if any transfers are in flight.
+    pub fn next_completion(&self) -> Option<Micros> {
+        self.completions.peek().map(|(t, _)| t)
+    }
+
+    /// Pop the transfer completing at `now` (must equal
+    /// [`FlowNet::next_completion`]). Returns its tag.
+    pub fn pop_completion(&mut self, now: Micros) -> u64 {
+        let (t, id) = self.completions.peek().expect("no completion pending");
+        debug_assert!(t <= now, "popping future completion {t} at {now}");
+        self.completions.remove(id);
+        let (links, tag) = {
+            let tr = self.transfers[id as usize].as_ref().expect("live transfer");
+            let links: Vec<LinkId> = tr.links[..tr.nlinks as usize]
+                .iter()
+                .map(|&l| LinkId(l))
+                .collect();
+            (links, tr.tag)
+        };
+        // Settle co-flows while this transfer is still a link member (its
+        // share was real until `now`), then remove it and re-rate.
+        for l in &links {
+            self.settle_link(*l, now);
+        }
+        for l in &links {
+            self.links[l.0 as usize].active.remove(&id);
+        }
+        self.transfers[id as usize] = None;
+        self.free.push(id);
+        self.completed += 1;
+        for l in &links {
+            self.rerate_link(*l, now);
+        }
+        tag
+    }
+
+    /// Integrate progress of all transfers on `link` up to `now`.
+    fn settle_link(&mut self, link: LinkId, now: Micros) {
+        let mut ids = std::mem::take(&mut self.scratch);
+        ids.clear();
+        ids.extend(self.links[link.0 as usize].active.iter().copied());
+        for &id in &ids {
+            let tr = self.transfers[id as usize]
+                .as_mut()
+                .expect("active transfer must live");
+            if tr.last_update < now {
+                let dt = (now - tr.last_update).as_secs_f64();
+                tr.remaining_bytes = (tr.remaining_bytes - tr.rate_bps * dt).max(0.0);
+                tr.last_update = now;
+            }
+        }
+        self.scratch = ids;
+    }
+
+    /// Recompute rates and completion keys for all transfers on `link`.
+    fn rerate_link(&mut self, link: LinkId, now: Micros) {
+        let mut ids = std::mem::take(&mut self.scratch);
+        ids.clear();
+        ids.extend(self.links[link.0 as usize].active.iter().copied());
+        for &id in &ids {
+            let tr = self.transfers[id as usize]
+                .as_ref()
+                .expect("active transfer must live");
+            let mut rate = f64::INFINITY;
+            for &l in &tr.links[..tr.nlinks as usize] {
+                let lk = &self.links[l as usize];
+                rate = rate.min(lk.capacity_bps / lk.active.len().max(1) as f64);
+            }
+            debug_assert!(rate.is_finite() && rate > 0.0);
+            let tr = self.transfers[id as usize].as_mut().unwrap();
+            if (tr.rate_bps - rate).abs() > 1e-9 * rate || tr.rate_bps == 0.0 {
+                tr.rate_bps = rate;
+                let secs = tr.remaining_bytes / rate;
+                let done = now
+                    .checked_add(Micros::from_secs_f64(secs))
+                    .unwrap_or(Micros::MAX);
+                self.completions.update(id, done);
+            }
+        }
+        self.scratch = ids;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::gbps_to_bps;
+
+    #[test]
+    fn single_transfer_at_full_rate() {
+        let mut net = FlowNet::new();
+        let l = net.add_link(gbps_to_bps(8.0)); // 1 GB/s
+        net.start(Micros::ZERO, 1_000_000_000, &[l], 42);
+        let done = net.next_completion().unwrap();
+        assert!((done.as_secs_f64() - 1.0).abs() < 1e-6, "{done}");
+        assert_eq!(net.pop_completion(done), 42);
+        assert_eq!(net.next_completion(), None);
+        assert_eq!(net.completed, 1);
+    }
+
+    #[test]
+    fn fair_share_halves_rate() {
+        let mut net = FlowNet::new();
+        let l = net.add_link(gbps_to_bps(8.0));
+        net.start(Micros::ZERO, 1_000_000_000, &[l], 1);
+        net.start(Micros::ZERO, 1_000_000_000, &[l], 2);
+        // Both share: each at 0.5 GB/s → 2 s.
+        let done = net.next_completion().unwrap();
+        assert!((done.as_secs_f64() - 2.0).abs() < 1e-6, "{done}");
+        net.pop_completion(done);
+        // Survivor had 0 bytes left? No: both finish at 2 s.
+        let done2 = net.next_completion().unwrap();
+        assert!((done2.as_secs_f64() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn late_joiner_slows_then_speeds_up() {
+        let mut net = FlowNet::new();
+        let l = net.add_link(1000.0); // 1000 B/s
+        net.start(Micros::ZERO, 1000, &[l], 1);
+        // At t=0.5, 500 bytes left; second transfer joins.
+        net.start(Micros::from_secs_f64(0.5), 1000, &[l], 2);
+        // First: 500 B at 500 B/s → done t=1.5.
+        let d1 = net.next_completion().unwrap();
+        assert!((d1.as_secs_f64() - 1.5).abs() < 1e-6, "{d1}");
+        assert_eq!(net.pop_completion(d1), 1);
+        // Second: at t=1.5 it has 1000-500=500 left, now alone at 1000 B/s → t=2.0.
+        let d2 = net.next_completion().unwrap();
+        assert!((d2.as_secs_f64() - 2.0).abs() < 1e-6, "{d2}");
+        assert_eq!(net.pop_completion(d2), 2);
+    }
+
+    #[test]
+    fn min_over_links_bottleneck() {
+        let mut net = FlowNet::new();
+        let fast = net.add_link(1000.0);
+        let slow = net.add_link(100.0);
+        net.start(Micros::ZERO, 100, &[fast, slow], 1);
+        let done = net.next_completion().unwrap();
+        assert!((done.as_secs_f64() - 1.0).abs() < 1e-6, "{done}");
+    }
+
+    #[test]
+    fn shared_bottleneck_across_paths() {
+        let mut net = FlowNet::new();
+        let gpfs = net.add_link(1000.0);
+        let nic_a = net.add_link(10_000.0);
+        let nic_b = net.add_link(10_000.0);
+        net.start(Micros::ZERO, 500, &[gpfs, nic_a], 1);
+        net.start(Micros::ZERO, 500, &[gpfs, nic_b], 2);
+        // GPFS is the shared bottleneck: each gets 500 B/s → 1 s.
+        let done = net.next_completion().unwrap();
+        assert!((done.as_secs_f64() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_byte_transfer_completes_immediately() {
+        let mut net = FlowNet::new();
+        let l = net.add_link(1000.0);
+        net.start(Micros::from_secs(5), 0, &[l], 9);
+        assert_eq!(net.next_completion(), Some(Micros::from_secs(5)));
+        assert_eq!(net.pop_completion(Micros::from_secs(5)), 9);
+    }
+
+    #[test]
+    fn aggregate_link_throughput_is_capped() {
+        // 10 concurrent transfers on a 1000 B/s link, 100 B each: total
+        // 1000 B at 1000 B/s aggregate → all complete at t=1.
+        let mut net = FlowNet::new();
+        let l = net.add_link(1000.0);
+        for i in 0..10 {
+            net.start(Micros::ZERO, 100, &[l], i);
+        }
+        let mut last = Micros::ZERO;
+        for _ in 0..10 {
+            let t = net.next_completion().unwrap();
+            net.pop_completion(t);
+            last = t;
+        }
+        assert!((last.as_secs_f64() - 1.0).abs() < 1e-6, "{last}");
+    }
+
+    #[test]
+    fn slab_reuse_and_many_transfers() {
+        let mut net = FlowNet::new();
+        let l = net.add_link(1e9);
+        for round in 0..100u64 {
+            let now = Micros::from_secs(round);
+            for i in 0..5 {
+                net.start(now, 1000, &[l], round * 10 + i);
+            }
+            for _ in 0..5 {
+                let t = net.next_completion().unwrap();
+                net.pop_completion(t);
+            }
+        }
+        assert_eq!(net.completed, 500);
+        assert!(net.transfers.len() <= 8, "slab grew: {}", net.transfers.len());
+    }
+
+    #[test]
+    fn indexed_heap_ordering_under_updates() {
+        use crate::util::proptest::{property, Gen};
+        property("indexed heap", 100, |g: &mut Gen| {
+            let mut h = IndexedHeap::default();
+            let mut model: std::collections::HashMap<u32, Micros> = Default::default();
+            for _ in 0..g.usize_in(1..100) {
+                let handle = g.u64_in(0..20) as u32;
+                match g.usize_in(0..3) {
+                    0 if !model.contains_key(&handle) => {
+                        let k = Micros(g.u64_in(0..1000));
+                        h.insert(handle, k);
+                        model.insert(handle, k);
+                    }
+                    1 if model.contains_key(&handle) => {
+                        let k = Micros(g.u64_in(0..1000));
+                        h.update(handle, k);
+                        model.insert(handle, k);
+                    }
+                    2 if model.contains_key(&handle) => {
+                        h.remove(handle);
+                        model.remove(&handle);
+                    }
+                    _ => {}
+                }
+                match h.peek() {
+                    None => {
+                        if !model.is_empty() {
+                            return Err("heap empty but model not".into());
+                        }
+                    }
+                    Some((k, _)) => {
+                        let min = model.values().min().copied().unwrap();
+                        if k != min {
+                            return Err(format!("peek {k} != model min {min}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

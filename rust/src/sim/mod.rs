@@ -1,0 +1,19 @@
+//! Discrete-event cluster simulator — the ANL/UC TeraGrid substitute.
+//!
+//! See DESIGN.md §3 for the substitution argument: the paper's evaluation
+//! metrics are functions of bandwidth contention, cache contents, and
+//! scheduler decisions, which is exactly what this substrate models:
+//!
+//! * [`flow`] — fluid-flow bandwidth sharing over links (GPFS, per-node
+//!   disk and NIC), implementing the paper's η(ν,ω) available-bandwidth
+//!   model along transfer paths;
+//! * [`engine`] — the event loop driving the coordinator over simulated
+//!   time, with dispatcher service-time and GRAM-latency models.
+//!
+//! Runs are deterministic: `run(cfg)` with the same config and seed
+//! produces bit-identical metrics (asserted by the integration suite).
+
+pub mod engine;
+pub mod flow;
+
+pub use engine::{run, RunResult};

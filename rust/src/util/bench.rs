@@ -1,0 +1,192 @@
+//! Micro-benchmark harness — the offline replacement for `criterion`.
+//!
+//! Each `rust/benches/*.rs` binary is declared with `harness = false` and
+//! drives this module directly. Two kinds of benchmarks are supported:
+//!
+//! * [`Bench::iter`] — classic timed closures with warm-up, multiple
+//!   samples, and mean/stddev/throughput reporting (used by the scheduler
+//!   micro-benchmarks of Figure 3 and the §Perf hot-path benches);
+//! * whole-experiment runs, where the "benchmark" regenerates a paper
+//!   figure and the harness just frames and times it.
+//!
+//! Results are printed as ASCII tables and optionally appended as CSV under
+//! `target/bench-results/` so EXPERIMENTS.md numbers are traceable.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark group; prints a header on creation.
+pub struct Bench {
+    name: String,
+    samples: usize,
+    warmup: usize,
+    min_duration: Duration,
+    results: Vec<Measurement>,
+}
+
+/// Result of one timed benchmark case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Case label.
+    pub label: String,
+    /// Mean wall time per iteration, seconds.
+    pub mean_s: f64,
+    /// Standard deviation across samples, seconds.
+    pub stddev_s: f64,
+    /// Iterations per second (1/mean).
+    pub per_sec: f64,
+    /// Optional user-supplied item count per iteration → items/sec.
+    pub items_per_sec: Option<f64>,
+}
+
+impl Bench {
+    /// New group with default settings (3 warm-up, 10 samples, each sample
+    /// runs the closure enough times to take ≥20 ms).
+    pub fn new(name: &str) -> Self {
+        println!("\n== bench: {name} ==");
+        Bench {
+            name: name.to_string(),
+            samples: 10,
+            warmup: 3,
+            min_duration: Duration::from_millis(20),
+            results: Vec::new(),
+        }
+    }
+
+    /// Override the number of timed samples.
+    pub fn samples(mut self, n: usize) -> Self {
+        self.samples = n.max(1);
+        self
+    }
+
+    /// Override the per-sample minimum duration.
+    pub fn min_sample_duration(mut self, d: Duration) -> Self {
+        self.min_duration = d;
+        self
+    }
+
+    /// Time `f`, which processes `items` logical items per call (pass 1 for
+    /// plain latency benchmarks). Reports mean/stddev and items/sec.
+    pub fn iter<F: FnMut()>(&mut self, label: &str, items: u64, mut f: F) -> &Measurement {
+        // Warm-up.
+        for _ in 0..self.warmup {
+            f();
+        }
+        // Determine batch size so one sample takes at least min_duration.
+        let t0 = Instant::now();
+        f();
+        let one = t0.elapsed().max(Duration::from_nanos(50));
+        let batch = (self.min_duration.as_secs_f64() / one.as_secs_f64()).ceil() as usize;
+        let batch = batch.clamp(1, 1_000_000);
+
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            times.push(t.elapsed().as_secs_f64() / batch as f64);
+        }
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let var = times.iter().map(|t| (t - mean).powi(2)).sum::<f64>()
+            / (times.len().max(2) - 1) as f64;
+        let m = Measurement {
+            label: label.to_string(),
+            mean_s: mean,
+            stddev_s: var.sqrt(),
+            per_sec: 1.0 / mean,
+            items_per_sec: if items > 1 {
+                Some(items as f64 / mean)
+            } else {
+                None
+            },
+        };
+        self.print_row(&m);
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    fn print_row(&self, m: &Measurement) {
+        let rate = match m.items_per_sec {
+            Some(ips) => format!("{:>12.0} items/s", ips),
+            None => format!("{:>12.1} iters/s", m.per_sec),
+        };
+        println!(
+            "  {:<42} {:>12} ± {:<10} {rate}",
+            m.label,
+            fmt_duration(m.mean_s),
+            fmt_duration(m.stddev_s),
+        );
+    }
+
+    /// All measurements taken so far.
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Write results as CSV under `target/bench-results/<group>.csv`.
+    pub fn write_csv(&self) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::path::Path::new("target/bench-results");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.csv", self.name.replace([' ', '/'], "_")));
+        let mut out = String::from("label,mean_s,stddev_s,per_sec,items_per_sec\n");
+        for m in &self.results {
+            out.push_str(&format!(
+                "{},{},{},{},{}\n",
+                m.label,
+                m.mean_s,
+                m.stddev_s,
+                m.per_sec,
+                m.items_per_sec.unwrap_or(f64::NAN)
+            ));
+        }
+        std::fs::write(&path, out)?;
+        Ok(path)
+    }
+}
+
+/// Format a duration in engineering units.
+pub fn fmt_duration(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}µs", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value
+/// (`std::hint::black_box` wrapper kept local so benches read uniformly).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench::new("selftest").samples(3).min_sample_duration(Duration::from_millis(1));
+        let mut acc = 0u64;
+        let m = b.iter("count", 100, || {
+            for i in 0..100u64 {
+                acc = black_box(acc.wrapping_add(i));
+            }
+        });
+        assert!(m.mean_s > 0.0);
+        assert!(m.items_per_sec.unwrap() > 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(2.5), "2.500s");
+        assert_eq!(fmt_duration(2.5e-3), "2.500ms");
+        assert_eq!(fmt_duration(2.5e-6), "2.500µs");
+        assert_eq!(fmt_duration(25e-9), "25.0ns");
+    }
+}

@@ -1,0 +1,24 @@
+//! Small self-contained utilities used across the crate.
+//!
+//! The build environment is fully offline, so crates that would normally be
+//! pulled in (`rand`, `criterion`, `proptest`) are replaced by small,
+//! well-tested local implementations:
+//!
+//! * [`prng`] — a deterministic PCG64 generator plus the distributions the
+//!   workloads need (uniform, zipf, exponential).
+//! * [`stats`] — streaming mean/variance and exact percentiles.
+//! * [`time`] — the microsecond-resolution simulation clock.
+//! * [`units`] — byte / bandwidth unit helpers and formatting.
+//! * [`bench`] — a micro-benchmark harness (criterion replacement) used by
+//!   the `rust/benches/*` binaries.
+//! * [`proptest`] — a miniature property-testing harness with input
+//!   shrinking, used by the test suites.
+//! * [`logger`] — a tiny `log` backend writing to stderr.
+
+pub mod bench;
+pub mod logger;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod time;
+pub mod units;

@@ -1,0 +1,124 @@
+//! Microsecond-resolution simulation time.
+//!
+//! The simulator and the coordinator share one clock type, [`Micros`], a
+//! monotone `u64` count of microseconds since experiment start. Integer
+//! time keeps event ordering exact and runs bit-reproducible (no FP drift
+//! in the event queue).
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in (or duration of) simulated time, in microseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct Micros(pub u64);
+
+impl Micros {
+    /// Time zero.
+    pub const ZERO: Micros = Micros(0);
+    /// The far future; used as a sentinel for "no deadline".
+    pub const MAX: Micros = Micros(u64::MAX);
+
+    /// From whole seconds.
+    pub fn from_secs(s: u64) -> Micros {
+        Micros(s * 1_000_000)
+    }
+
+    /// From fractional seconds (rounds to the nearest microsecond).
+    pub fn from_secs_f64(s: f64) -> Micros {
+        debug_assert!(s >= 0.0, "negative duration: {s}");
+        Micros((s * 1e6).round() as u64)
+    }
+
+    /// From whole milliseconds.
+    pub fn from_millis(ms: u64) -> Micros {
+        Micros(ms * 1000)
+    }
+
+    /// As fractional seconds.
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+
+    /// As whole seconds, truncated (the metrics bucket index).
+    pub fn as_secs(self) -> u64 {
+        self.0 / 1_000_000
+    }
+
+    /// Saturating subtraction.
+    pub fn saturating_sub(self, rhs: Micros) -> Micros {
+        Micros(self.0.saturating_sub(rhs.0))
+    }
+
+    /// Checked addition (None on overflow, e.g. `MAX + x`).
+    pub fn checked_add(self, rhs: Micros) -> Option<Micros> {
+        self.0.checked_add(rhs.0).map(Micros)
+    }
+}
+
+impl Add for Micros {
+    type Output = Micros;
+    fn add(self, rhs: Micros) -> Micros {
+        Micros(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for Micros {
+    fn add_assign(&mut self, rhs: Micros) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for Micros {
+    type Output = Micros;
+    fn sub(self, rhs: Micros) -> Micros {
+        debug_assert!(self.0 >= rhs.0, "time went backwards: {self} - {rhs}");
+        Micros(self.0 - rhs.0)
+    }
+}
+
+impl fmt::Display for Micros {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = self.as_secs_f64();
+        if s >= 1.0 {
+            write!(f, "{s:.3}s")
+        } else {
+            write!(f, "{:.3}ms", s * 1e3)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_round_trip() {
+        assert_eq!(Micros::from_secs(3).0, 3_000_000);
+        assert_eq!(Micros::from_millis(10).0, 10_000);
+        assert_eq!(Micros::from_secs_f64(1.5).as_secs_f64(), 1.5);
+        assert_eq!(Micros::from_secs(7).as_secs(), 7);
+        assert_eq!(Micros(1_999_999).as_secs(), 1);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Micros::from_secs(2);
+        let b = Micros::from_millis(500);
+        assert_eq!((a + b).as_secs_f64(), 2.5);
+        assert_eq!((a - b).as_secs_f64(), 1.5);
+        assert_eq!(b.saturating_sub(a), Micros::ZERO);
+        assert_eq!(Micros::MAX.checked_add(Micros(1)), None);
+    }
+
+    #[test]
+    fn ordering_is_numeric() {
+        assert!(Micros(5) < Micros(6));
+        assert!(Micros::MAX > Micros::from_secs(1_000_000));
+    }
+
+    #[test]
+    fn display_picks_unit() {
+        assert_eq!(format!("{}", Micros::from_secs(2)), "2.000s");
+        assert_eq!(format!("{}", Micros::from_millis(2)), "2.000ms");
+    }
+}

@@ -1,0 +1,67 @@
+//! Byte and bandwidth unit helpers.
+//!
+//! The paper reports storage in GB (decimal) and bandwidth in Gb/s
+//! (decimal bits). We follow the paper's conventions: `1 GB = 1e9 bytes`,
+//! `1 Gb/s = 1e9 bits/s = 125e6 bytes/s`.
+
+/// Bytes per decimal kilobyte/megabyte/gigabyte.
+pub const KB: u64 = 1_000;
+/// Bytes per decimal megabyte.
+pub const MB: u64 = 1_000_000;
+/// Bytes per decimal gigabyte.
+pub const GB: u64 = 1_000_000_000;
+
+/// Convert a byte count to decimal gigabytes.
+pub fn bytes_to_gb(bytes: u64) -> f64 {
+    bytes as f64 / GB as f64
+}
+
+/// Convert bytes/second to Gb/s (gigabits per second).
+pub fn bps_to_gbps(bytes_per_sec: f64) -> f64 {
+    bytes_per_sec * 8.0 / 1e9
+}
+
+/// Convert Gb/s (gigabits per second) to bytes/second.
+pub fn gbps_to_bps(gbps: f64) -> f64 {
+    gbps * 1e9 / 8.0
+}
+
+/// Human-readable byte count (decimal units, two significant decimals).
+pub fn fmt_bytes(bytes: u64) -> String {
+    if bytes >= GB {
+        format!("{:.2}GB", bytes as f64 / GB as f64)
+    } else if bytes >= MB {
+        format!("{:.2}MB", bytes as f64 / MB as f64)
+    } else if bytes >= KB {
+        format!("{:.2}KB", bytes as f64 / KB as f64)
+    } else {
+        format!("{bytes}B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gbps_round_trip() {
+        let bw = gbps_to_bps(4.0);
+        assert_eq!(bw, 0.5e9); // 4 Gb/s = 500 MB/s
+        assert!((bps_to_gbps(bw) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn byte_formatting() {
+        assert_eq!(fmt_bytes(10 * MB), "10.00MB");
+        assert_eq!(fmt_bytes(GB + GB / 2), "1.50GB");
+        assert_eq!(fmt_bytes(999), "999B");
+        assert_eq!(fmt_bytes(1_500), "1.50KB");
+    }
+
+    #[test]
+    fn paper_units_sanity() {
+        // 10 MB file at GPFS's 4 Gb/s = 0.02 s transfer.
+        let secs = (10 * MB) as f64 / gbps_to_bps(4.0);
+        assert!((secs - 0.02).abs() < 1e-9);
+    }
+}

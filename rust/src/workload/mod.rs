@@ -1,0 +1,342 @@
+//! Workload generation — arrival processes and file-access patterns.
+//!
+//! The paper's provisioning workload (§5.2): 250K tasks, each reading one
+//! of 10K × 10 MB files chosen uniformly at random and computing for
+//! 10 ms; arrival rate follows `A_i = min(ceil(A_{i-1}·1.3), 1000)` with
+//! 60 s intervals — 24 intervals, ≈1415 s span. The scheduler
+//! micro-benchmark (§5.1) uses the same shape with 1-byte files submitted
+//! in batch. The astronomy model-validation workloads (§4.4) sweep a
+//! *data locality* parameter from 1 to 30 (mean accesses per file).
+
+use crate::config::{AccessSpec, ArrivalSpec, WorkloadConfig};
+use crate::ids::{FileId, TaskId};
+use crate::util::prng::{Pcg64, Zipf};
+use crate::util::time::Micros;
+
+/// One generated task.
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    /// Task id (stream position).
+    pub id: TaskId,
+    /// Submission time.
+    pub arrival: Micros,
+    /// File the task reads (θ(κ); the paper's workloads read one file).
+    pub file: FileId,
+    /// Index of the arrival-rate interval this task belongs to (slowdown
+    /// accounting, Fig 14); 0 for non-staged arrivals.
+    pub interval: u32,
+}
+
+/// A fully materialized workload.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    /// Tasks ordered by arrival time.
+    pub tasks: Vec<TaskSpec>,
+    /// Bytes per file.
+    pub file_size_bytes: u64,
+    /// Per-task compute time.
+    pub compute: Micros,
+    /// Arrival-rate stages: `(start, rate_tasks_per_s)` per interval
+    /// (one entry for non-staged arrivals).
+    pub stages: Vec<(Micros, f64)>,
+    /// Number of distinct files actually referenced.
+    pub distinct_files: u32,
+}
+
+impl Workload {
+    /// Total workload bytes if every task read from scratch.
+    pub fn total_bytes(&self) -> u64 {
+        self.tasks.len() as u64 * self.file_size_bytes
+    }
+
+    /// Working-set size in bytes (distinct files × file size) — the |Ω|
+    /// the caches must exceed for diffusion to reach steady state.
+    pub fn working_set_bytes(&self) -> u64 {
+        self.distinct_files as u64 * self.file_size_bytes
+    }
+
+    /// Arrival time of the last task.
+    pub fn span(&self) -> Micros {
+        self.tasks.last().map_or(Micros::ZERO, |t| t.arrival)
+    }
+
+    /// Arrival rate (tasks/s) in effect at time `t`.
+    pub fn rate_at(&self, t: Micros) -> f64 {
+        let mut rate = 0.0;
+        for &(start, r) in &self.stages {
+            if start <= t {
+                rate = r;
+            } else {
+                break;
+            }
+        }
+        rate
+    }
+}
+
+/// The ideal workload execution time (s): infinite resources, zero-cost
+/// communication — tasks finish as they arrive (§5.2.5's 1415 s).
+pub fn ideal_execution_time_s(cfg: &WorkloadConfig) -> f64 {
+    let arrivals = arrival_times(cfg);
+    match arrivals.last() {
+        Some(&(t, _)) => t.as_secs_f64() + cfg.compute_ms / 1e3,
+        None => 0.0,
+    }
+}
+
+/// Generate the full workload deterministically from `seed`.
+pub fn generate(cfg: &WorkloadConfig, seed: u64) -> Workload {
+    let mut rng = Pcg64::new(seed, 0x6f72_6b6c); // "workl" stream
+    let arrivals = arrival_times(cfg);
+    let files = access_sequence(cfg, arrivals.len(), &mut rng);
+    debug_assert_eq!(arrivals.len(), files.len());
+
+    let mut distinct = std::collections::HashSet::new();
+    let tasks: Vec<TaskSpec> = arrivals
+        .iter()
+        .zip(&files)
+        .enumerate()
+        .map(|(i, (&(arrival, interval), &file))| {
+            distinct.insert(file);
+            TaskSpec {
+                id: TaskId(i as u64),
+                arrival,
+                file,
+                interval,
+            }
+        })
+        .collect();
+
+    Workload {
+        stages: stages(cfg, &tasks),
+        tasks,
+        file_size_bytes: cfg.file_size_bytes,
+        compute: Micros::from_secs_f64(cfg.compute_ms / 1e3),
+        distinct_files: distinct.len() as u32,
+    }
+}
+
+/// Arrival times plus interval index, per the configured process.
+fn arrival_times(cfg: &WorkloadConfig) -> Vec<(Micros, u32)> {
+    let n = cfg.num_tasks;
+    match cfg.arrival {
+        ArrivalSpec::Batch => (0..n).map(|_| (Micros::ZERO, 0)).collect(),
+        ArrivalSpec::Constant(rate) => {
+            let gap = 1e6 / rate;
+            (0..n)
+                .map(|i| (Micros((i as f64 * gap).round() as u64), 0))
+                .collect()
+        }
+        ArrivalSpec::IncreasingRate {
+            initial,
+            factor,
+            interval_s,
+            max_rate,
+        } => {
+            // A_i = min(ceil(A_{i-1}·factor), max). Tasks are evenly
+            // spaced within each interval; the last interval extends
+            // until the task budget is exhausted (the paper's 24th
+            // interval at 1000/s runs ~35 s).
+            let mut out = Vec::with_capacity(n as usize);
+            let mut rate = initial;
+            let mut interval: u32 = 0;
+            let mut t0 = 0.0f64;
+            'outer: loop {
+                let gap = 1.0 / rate;
+                let capped = rate >= max_rate;
+                let in_interval = if capped {
+                    u64::MAX // run out the task budget at the cap
+                } else {
+                    (rate * interval_s).round() as u64
+                };
+                for j in 0..in_interval {
+                    if out.len() as u64 >= n {
+                        break 'outer;
+                    }
+                    let t = t0 + j as f64 * gap;
+                    out.push((Micros::from_secs_f64(t), interval));
+                }
+                t0 += interval_s;
+                rate = (rate * factor).ceil().min(max_rate);
+                interval += 1;
+            }
+            out
+        }
+    }
+}
+
+/// Stage table `(start, rate)` for ideal-throughput plotting.
+fn stages(cfg: &WorkloadConfig, tasks: &[TaskSpec]) -> Vec<(Micros, f64)> {
+    match cfg.arrival {
+        ArrivalSpec::Batch => vec![(Micros::ZERO, f64::INFINITY)],
+        ArrivalSpec::Constant(rate) => vec![(Micros::ZERO, rate)],
+        ArrivalSpec::IncreasingRate {
+            initial,
+            factor,
+            interval_s,
+            max_rate,
+        } => {
+            let last_interval = tasks.last().map_or(0, |t| t.interval);
+            let mut out = Vec::new();
+            let mut rate = initial;
+            for i in 0..=last_interval {
+                out.push((Micros::from_secs_f64(i as f64 * interval_s), rate));
+                rate = (rate * factor).ceil().min(max_rate);
+            }
+            out
+        }
+    }
+}
+
+/// File-per-task sequence, per the configured access pattern.
+fn access_sequence(cfg: &WorkloadConfig, n: usize, rng: &mut Pcg64) -> Vec<FileId> {
+    match cfg.access {
+        AccessSpec::Uniform => (0..n)
+            .map(|_| FileId(rng.below(cfg.num_files as u64) as u32))
+            .collect(),
+        AccessSpec::Zipf(s) => {
+            let z = Zipf::new(cfg.num_files as usize, s);
+            (0..n).map(|_| FileId(z.sample(rng) as u32)).collect()
+        }
+        AccessSpec::Locality(l) => {
+            // Each distinct file is accessed ⌈l⌉ or ⌊l⌋ times so the mean
+            // is l; repeats are clustered in time (shuffled within a
+            // bounded window) — the astronomy workloads' "locality"
+            // (§4.4: 1 = one access per file … 30 = thirty).
+            let distinct = ((n as f64 / l).ceil() as usize).clamp(1, cfg.num_files as usize);
+            let mut seq = Vec::with_capacity(n);
+            let mut remaining = n;
+            for i in 0..distinct {
+                // Distribute n accesses over `distinct` files as evenly
+                // as integer arithmetic allows.
+                let share = remaining / (distinct - i);
+                for _ in 0..share {
+                    seq.push(FileId((i % cfg.num_files as usize) as u32));
+                }
+                remaining -= share;
+            }
+            debug_assert_eq!(seq.len(), n);
+            // Window shuffle: preserves coarse temporal locality while
+            // breaking the degenerate exact-repeat pattern.
+            let window = (l.ceil() as usize * 64).clamp(64, 8192).min(seq.len());
+            let mut i = 0;
+            while i < seq.len() {
+                let end = (i + window).min(seq.len());
+                rng.shuffle(&mut seq[i..end]);
+                i = end;
+            }
+            seq
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::MB;
+
+    fn paper_cfg() -> WorkloadConfig {
+        WorkloadConfig::default()
+    }
+
+    #[test]
+    fn paper_workload_span_matches_1415s() {
+        let cfg = paper_cfg();
+        let ideal = ideal_execution_time_s(&cfg);
+        assert!(
+            (ideal - 1415.0).abs() < 25.0,
+            "ideal WET {ideal} ≉ paper's 1415 s"
+        );
+        let w = generate(&cfg, 1);
+        assert_eq!(w.tasks.len(), 250_000);
+        assert_eq!(w.file_size_bytes, 10 * MB);
+        // 24 arrival intervals (§5.2).
+        assert_eq!(w.stages.len(), 24, "stages: {}", w.stages.len());
+    }
+
+    #[test]
+    fn arrivals_are_sorted_and_rates_increase() {
+        let w = generate(&paper_cfg(), 7);
+        for pair in w.tasks.windows(2) {
+            assert!(pair[0].arrival <= pair[1].arrival);
+            assert!(pair[0].interval <= pair[1].interval);
+        }
+        assert_eq!(w.rate_at(Micros::ZERO), 1.0);
+        assert_eq!(w.rate_at(Micros::from_secs(61)), 2.0);
+        assert_eq!(w.rate_at(Micros::from_secs(100_000)), 1000.0);
+    }
+
+    #[test]
+    fn uniform_access_covers_files() {
+        let mut cfg = paper_cfg();
+        cfg.num_tasks = 50_000;
+        cfg.num_files = 100;
+        let w = generate(&cfg, 3);
+        assert_eq!(w.distinct_files, 100);
+        assert!(w.tasks.iter().all(|t| t.file.0 < 100));
+    }
+
+    #[test]
+    fn determinism_same_seed() {
+        let a = generate(&paper_cfg(), 5);
+        let b = generate(&paper_cfg(), 5);
+        assert_eq!(a.tasks.len(), b.tasks.len());
+        for (x, y) in a.tasks.iter().zip(&b.tasks) {
+            assert_eq!(x.file, y.file);
+            assert_eq!(x.arrival, y.arrival);
+        }
+    }
+
+    #[test]
+    fn locality_controls_distinct_files() {
+        let mut cfg = paper_cfg();
+        cfg.num_tasks = 30_000;
+        cfg.num_files = 1_000_000; // no cap
+        cfg.access = AccessSpec::Locality(30.0);
+        let w = generate(&cfg, 11);
+        assert_eq!(w.distinct_files, 1000);
+        // Mean accesses per file = 30.
+        let mean = w.tasks.len() as f64 / w.distinct_files as f64;
+        assert!((mean - 30.0).abs() < 0.5, "mean={mean}");
+
+        cfg.access = AccessSpec::Locality(1.0);
+        let w = generate(&cfg, 11);
+        assert_eq!(w.distinct_files, 30_000);
+    }
+
+    #[test]
+    fn zipf_access_is_skewed() {
+        let mut cfg = paper_cfg();
+        cfg.num_tasks = 20_000;
+        cfg.num_files = 1000;
+        cfg.access = AccessSpec::Zipf(1.2);
+        let w = generate(&cfg, 13);
+        let head = w.tasks.iter().filter(|t| t.file.0 < 100).count();
+        assert!(head > w.tasks.len() / 2);
+    }
+
+    #[test]
+    fn batch_and_constant_arrivals() {
+        let mut cfg = paper_cfg();
+        cfg.num_tasks = 100;
+        cfg.arrival = ArrivalSpec::Batch;
+        let w = generate(&cfg, 1);
+        assert!(w.tasks.iter().all(|t| t.arrival == Micros::ZERO));
+
+        cfg.arrival = ArrivalSpec::Constant(10.0);
+        let w = generate(&cfg, 1);
+        assert_eq!(w.span(), Micros::from_secs_f64(9.9));
+    }
+
+    #[test]
+    fn working_set_math() {
+        let mut cfg = paper_cfg();
+        cfg.num_tasks = 1000;
+        let w = generate(&cfg, 1);
+        assert_eq!(
+            w.working_set_bytes(),
+            w.distinct_files as u64 * cfg.file_size_bytes
+        );
+        assert_eq!(w.total_bytes(), 1000 * cfg.file_size_bytes);
+    }
+}

@@ -1,0 +1,284 @@
+//! Integration tests: whole-system behaviour across modules.
+//!
+//! These run scaled-down versions of the paper's experiments (the full
+//! 250K-task runs live in the benches) and assert the qualitative
+//! properties the paper demonstrates, plus engineering invariants
+//! (determinism, conservation, config round-trips).
+
+use datadiffusion::config::{AccessSpec, ArrivalSpec, ExperimentConfig};
+use datadiffusion::coordinator::provisioner::ProvisionerConfig;
+use datadiffusion::coordinator::scheduler::DispatchPolicy;
+use datadiffusion::experiments::{fig02, fig03, throughput_split};
+use datadiffusion::sim;
+use datadiffusion::util::units::{GB, MB};
+
+/// A 10%-scale version of the paper's §5.2 workload.
+fn scaled_paper_cfg(fig: u32, scale: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_fig(fig).expect("preset");
+    cfg.workload.num_tasks /= scale;
+    cfg
+}
+
+#[test]
+fn determinism_full_stack() {
+    let cfg = scaled_paper_cfg(8, 25);
+    let a = sim::run(&cfg);
+    let b = sim::run(&cfg);
+    assert_eq!(a.events_processed, b.events_processed);
+    assert_eq!(
+        a.summary.workload_execution_time_s,
+        b.summary.workload_execution_time_s
+    );
+    assert_eq!(a.summary.hit_local_rate, b.summary.hit_local_rate);
+    assert_eq!(a.summary.cpu_time_hours, b.summary.cpu_time_hours);
+    // Different seed ⇒ different micro-behaviour (but tasks all finish).
+    let mut cfg2 = cfg.clone();
+    cfg2.seed += 1;
+    let c = sim::run(&cfg2);
+    assert_eq!(c.summary.tasks_completed, a.summary.tasks_completed);
+    assert_ne!(a.events_processed, c.events_processed);
+}
+
+#[test]
+fn task_conservation_across_policies() {
+    for policy in DispatchPolicy::ALL {
+        let mut cfg = scaled_paper_cfg(8, 50);
+        cfg.scheduler.policy = policy;
+        let r = sim::run(&cfg);
+        assert_eq!(
+            r.summary.tasks_completed, cfg.workload.num_tasks,
+            "policy {policy} lost tasks"
+        );
+        // Every task reads exactly one file: accesses sum to tasks.
+        let rates =
+            r.summary.hit_local_rate + r.summary.hit_global_rate + r.summary.miss_rate;
+        assert!((rates - 1.0).abs() < 1e-9);
+        // Bytes moved = tasks × file size.
+        let total: u64 = r
+            .ts
+            .buckets()
+            .iter()
+            .map(|b| b.bytes_total())
+            .sum();
+        assert_eq!(total, cfg.workload.num_tasks * cfg.workload.file_size_bytes);
+    }
+}
+
+#[test]
+fn diffusion_beats_gpfs_baseline() {
+    // The paper's headline: data diffusion crushes first-available on
+    // both execution time and response time once caches hold the
+    // working set. The scaled workload must actually exceed the GPFS
+    // capacity (~55 tasks/s at 10 MB), so ramp fast to 400/s.
+    let mk = |fig: u32| {
+        let mut cfg = scaled_paper_cfg(fig, 20);
+        cfg.workload.arrival = ArrivalSpec::IncreasingRate {
+            initial: 10.0,
+            factor: 1.6,
+            interval_s: 15.0,
+            max_rate: 400.0,
+        };
+        cfg
+    };
+    let fa = sim::run(&mk(4));
+    let gcc = sim::run(&mk(8));
+    assert!(
+        gcc.summary.workload_execution_time_s < fa.summary.workload_execution_time_s,
+        "no speedup: {} vs {}",
+        gcc.summary.workload_execution_time_s,
+        fa.summary.workload_execution_time_s
+    );
+    assert!(
+        gcc.summary.avg_response_time_s * 2.0 < fa.summary.avg_response_time_s,
+        "response gap too small: {} vs {}",
+        gcc.summary.avg_response_time_s,
+        fa.summary.avg_response_time_s
+    );
+    // GPFS-only throughput is pinned at the GPFS cap; diffusion exceeds it.
+    assert!(gcc.summary.peak_throughput_gbps > fa.summary.peak_throughput_gbps * 2.0);
+}
+
+#[test]
+fn cache_size_scaling_shape() {
+    // Fig 5→8 shape at 10% scale: bigger caches, faster runs (weakly).
+    let wets: Vec<f64> = [5u32, 6, 7, 8]
+        .iter()
+        .map(|&f| sim::run(&scaled_paper_cfg(f, 10)).summary.workload_execution_time_s)
+        .collect();
+    assert!(wets[1] <= wets[0] * 1.02, "1.5GB {} vs 1GB {}", wets[1], wets[0]);
+    assert!(wets[2] <= wets[1] * 1.02, "2GB {} vs 1.5GB {}", wets[2], wets[1]);
+    assert!(
+        (wets[3] - wets[2]).abs() / wets[2] < 0.15,
+        "4GB ≈ 2GB expected: {} vs {}",
+        wets[3],
+        wets[2]
+    );
+}
+
+#[test]
+fn static_provisioning_burns_more_cpu_hours() {
+    // Fig 13's PI story at reduced scale.
+    let dyn_r = sim::run(&scaled_paper_cfg(8, 10));
+    let mut static_cfg = scaled_paper_cfg(8, 10);
+    static_cfg.provisioner = ProvisionerConfig::static_nodes(64);
+    let static_r = sim::run(&static_cfg);
+    // Similar speed…
+    let ratio = static_r.summary.workload_execution_time_s
+        / dyn_r.summary.workload_execution_time_s;
+    assert!(ratio < 1.1, "static should not be slower: {ratio}");
+    // …but more CPU time than DRP.
+    assert!(
+        static_r.summary.cpu_time_hours > dyn_r.summary.cpu_time_hours * 1.3,
+        "static {} !≫ dynamic {}",
+        static_r.summary.cpu_time_hours,
+        dyn_r.summary.cpu_time_hours
+    );
+}
+
+#[test]
+fn gpfs_never_exceeds_capacity_and_caches_offload_it() {
+    let mut cfg = scaled_paper_cfg(8, 10);
+    // Scale the dataset with the task count so accesses-per-file stays
+    // at the paper's 25 (otherwise cold misses dominate at 10% scale).
+    cfg.workload.num_files /= 10;
+    let r = sim::run(&cfg);
+    // Bytes are credited at transfer completion, so single seconds can
+    // burst; the cap must hold on a 10-second moving window.
+    let cap = cfg.cluster.gpfs_gbps * 1.10;
+    let buckets = r.ts.buckets();
+    for (sec, win) in buckets.windows(10).enumerate() {
+        let bytes: u64 = win.iter().map(|b| b.bytes_gpfs).sum();
+        let gbps = datadiffusion::util::units::bps_to_gbps(bytes as f64 / 10.0);
+        assert!(gbps <= cap, "window @{sec}s: GPFS {gbps} Gb/s over cap");
+    }
+    let split = throughput_split(&r);
+    assert!(
+        split.local_gbps > split.gpfs_gbps,
+        "diffusion should serve most bytes locally: {split:?}"
+    );
+}
+
+#[test]
+fn model_tracks_simulator_within_tolerance() {
+    // Fig 2 mini-validation: the paper reports 5-8% mean error with a
+    // 29% worst case; at our reduced scale allow a generous 35% bound
+    // per point and 15% on the mean.
+    let points = [
+        fig02::run_point(8, 2.0, 3_000),
+        fig02::run_point(32, 5.0, 3_000),
+        fig02::run_point(64, 10.0, 3_000),
+        fig02::run_point(128, 30.0, 3_000),
+    ];
+    let mean: f64 =
+        points.iter().map(|p| p.error).sum::<f64>() / points.len() as f64;
+    for p in &points {
+        assert!(
+            p.error < 0.35,
+            "point cpus={} loc={} error {:.1}%",
+            p.cpus,
+            p.locality,
+            p.error * 100.0
+        );
+    }
+    assert!(mean < 0.20, "mean model error {:.1}%", mean * 100.0);
+}
+
+#[test]
+fn scheduler_microbench_dispatches_everything() {
+    // Fig 3 at 2% scale, all five policies.
+    for r in fig03::run(5_000, 1_000, 8) {
+        assert_eq!(r.tasks, 5_000, "{}", r.policy);
+        assert!(r.decisions_per_sec > 1_000.0, "{}: {}", r.policy, r.decisions_per_sec);
+    }
+}
+
+#[test]
+fn locality_workloads_cache_better() {
+    let mk = |access: AccessSpec| {
+        let mut cfg = ExperimentConfig::default();
+        cfg.cluster.max_nodes = 8;
+        cfg.workload.num_tasks = 5_000;
+        cfg.workload.num_files = 2_000;
+        cfg.workload.file_size_bytes = 10 * MB;
+        cfg.workload.arrival = ArrivalSpec::Constant(100.0);
+        cfg.workload.access = access;
+        cfg.cache.capacity_bytes = GB;
+        sim::run(&cfg)
+    };
+    let uniform = mk(AccessSpec::Uniform);
+    let zipf = mk(AccessSpec::Zipf(1.1));
+    let local = mk(AccessSpec::Locality(10.0));
+    assert!(
+        zipf.summary.hit_local_rate > uniform.summary.hit_local_rate,
+        "zipf {} !> uniform {}",
+        zipf.summary.hit_local_rate,
+        uniform.summary.hit_local_rate
+    );
+    assert!(
+        local.summary.hit_local_rate > uniform.summary.hit_local_rate,
+        "locality {} !> uniform {}",
+        local.summary.hit_local_rate,
+        uniform.summary.hit_local_rate
+    );
+}
+
+#[test]
+fn eviction_policy_ablation_runs_all_policies() {
+    use datadiffusion::cache::EvictionPolicy;
+    for ev in [
+        EvictionPolicy::Lru,
+        EvictionPolicy::Lfu,
+        EvictionPolicy::Fifo,
+        EvictionPolicy::Random,
+    ] {
+        let mut cfg = scaled_paper_cfg(5, 50);
+        cfg.cache.policy = ev;
+        let r = sim::run(&cfg);
+        assert_eq!(r.summary.tasks_completed, cfg.workload.num_tasks, "{ev:?}");
+    }
+}
+
+#[test]
+fn config_file_round_trip_drives_simulation() {
+    let toml = r#"
+        name = "integration-toml"
+        seed = 9
+        [cluster]
+        max_nodes = 4
+        [workload]
+        num_tasks = 1500
+        num_files = 100
+        file_size_mb = 5.0
+        arrival = "constant"
+        arrival_rate = 80.0
+        [scheduler]
+        policy = "good-cache-compute"
+        [cache]
+        capacity_gb = 1.0
+    "#;
+    let cfg = ExperimentConfig::from_toml(toml).expect("parse");
+    let r = sim::run(&cfg);
+    assert_eq!(r.summary.tasks_completed, 1500);
+    assert_eq!(r.name, "integration-toml");
+}
+
+#[test]
+fn failure_free_but_stressed_provisioning_cycles() {
+    // Bursty arrivals with aggressive release: nodes should be released
+    // between bursts and re-acquired, and everything still completes.
+    let mut cfg = ExperimentConfig::default();
+    cfg.cluster.max_nodes = 16;
+    cfg.cluster.gram_latency_s = (2.0, 4.0);
+    cfg.workload.num_tasks = 4_000;
+    cfg.workload.num_files = 200;
+    cfg.workload.file_size_bytes = 5 * MB;
+    // Slow constant arrival with long tail → idle periods.
+    cfg.workload.arrival = ArrivalSpec::Constant(20.0);
+    cfg.provisioner.idle_release_s = 5.0;
+    let r = sim::run(&cfg);
+    assert_eq!(r.summary.tasks_completed, 4_000);
+    // Fleet should have both grown and (possibly) contracted; at minimum
+    // it never exceeded the cap.
+    let max_nodes = r.ts.buckets().iter().map(|b| b.nodes).max().unwrap();
+    assert!(max_nodes <= 16);
+}
