@@ -1,76 +1,171 @@
 //! §Perf hot-path microbenchmarks (DESIGN.md §8, EXPERIMENTS.md §Perf).
 //!
-//! Covers the three L3 hot paths: scheduler decisions, wait-queue window
-//! ops, flow-network transfer churn, plus the whole-simulation event
-//! rate. Run before/after every optimization:
+//! Covers the L3 hot paths: scheduler decisions (indexed pickup vs the
+//! retained reference window scan), wait-queue window ops, cache churn,
+//! flow-network transfer churn, plus the whole-simulation event rate.
+//! Run before/after every optimization:
 //!
 //!     cargo bench --bench perf_hotpath
+//!
+//! Results also land as JSON under `target/bench-results/perf_hotpath.json`;
+//! with `DATADIFF_BENCH_BASELINE=1` the snapshot is written to
+//! `BENCH_baseline.json` at the workspace root (the committed perf
+//! trajectory — see that file's header).
 
 use datadiffusion::cache::{CacheConfig, EvictionPolicy, ObjectCache};
 use datadiffusion::config::ExperimentConfig;
 use datadiffusion::coordinator::executor::ExecutorRegistry;
+use datadiffusion::coordinator::pending::PendingIndex;
 use datadiffusion::coordinator::queue::{Task, WaitQueue};
 use datadiffusion::coordinator::scheduler::{DispatchPolicy, Scheduler, SchedulerConfig};
 use datadiffusion::ids::{ExecutorId, FileId, TaskId};
 use datadiffusion::index::LocationIndex;
 use datadiffusion::sim::flow::FlowNet;
-use datadiffusion::util::bench::{black_box, Bench};
+use datadiffusion::util::bench::{baseline_json, black_box, Bench};
 use datadiffusion::util::prng::Pcg64;
 use datadiffusion::util::time::Micros;
 
 fn main() {
     datadiffusion::util::logger::init();
-    bench_scheduler_decision();
-    bench_waitqueue();
-    bench_cache();
-    bench_flownet();
-    bench_whole_sim();
+    let groups = vec![
+        bench_scheduler_decision(),
+        bench_scheduler_reference_scan(),
+        bench_waitqueue(),
+        bench_cache(),
+        bench_flownet(),
+        bench_whole_sim(),
+    ];
+    let refs: Vec<&Bench> = groups.iter().collect();
+    let json = baseline_json("perf_hotpath", &refs);
+    let out = std::path::Path::new("target/bench-results");
+    let _ = std::fs::create_dir_all(out);
+    let _ = std::fs::write(out.join("perf_hotpath.json"), &json);
+    if std::env::var("DATADIFF_BENCH_BASELINE").as_deref() == Ok("1") {
+        let _ = std::fs::write("BENCH_baseline.json", &json);
+        println!("\nwrote BENCH_baseline.json");
+    }
 }
 
-/// One phase-2 pickup on a warm 64-node cluster with a deep queue.
-fn bench_scheduler_decision() {
+/// Shared fixture: 64 warm nodes, 10K files cached round-robin, 50K-deep
+/// queue of single-file tasks (the paper's §5.1 shape at 20% task scale).
+struct SchedFixture {
+    reg: ExecutorRegistry,
+    index: LocationIndex,
+    queue: WaitQueue,
+    pending: PendingIndex,
+    execs: Vec<ExecutorId>,
+}
+
+fn sched_fixture(caching: bool) -> SchedFixture {
+    let mut reg = ExecutorRegistry::new();
+    let mut index = LocationIndex::new();
+    let mut rng = Pcg64::seeded(1);
+    let execs: Vec<ExecutorId> = (0..64).map(|_| reg.register(2, Micros::ZERO)).collect();
+    // Warm index: every file cached somewhere.
+    for f in 0..10_000u32 {
+        index.add(FileId(f), *rng.choose(&execs));
+    }
+    let mut queue = WaitQueue::new();
+    let mut pending = PendingIndex::new();
+    for i in 0..50_000u64 {
+        let qref = queue.push_back(Task {
+            id: TaskId(i),
+            files: vec![FileId(rng.below(10_000) as u32)],
+            compute: Micros::ZERO,
+            arrival: Micros::ZERO,
+        });
+        if caching {
+            pending.on_push(&queue, qref, &index);
+        }
+    }
+    SchedFixture {
+        reg,
+        index,
+        queue,
+        pending,
+        execs,
+    }
+}
+
+/// One phase-2 pickup on a warm 64-node cluster with a deep queue —
+/// the indexed (sub-linear) path the engines run.
+fn bench_scheduler_decision() -> Bench {
     let mut b = Bench::new("scheduler pick_tasks (64 nodes, warm index)");
     for policy in [
         DispatchPolicy::FirstAvailable,
         DispatchPolicy::MaxComputeUtil,
         DispatchPolicy::GoodCacheCompute,
     ] {
-        let mut reg = ExecutorRegistry::new();
-        let mut index = LocationIndex::new();
-        let mut rng = Pcg64::seeded(1);
-        let execs: Vec<ExecutorId> =
-            (0..64).map(|_| reg.register(2, Micros::ZERO)).collect();
-        // Warm index: every file cached somewhere.
-        for f in 0..10_000u32 {
-            index.add(FileId(f), *rng.choose(&execs));
-        }
-        let mut queue = WaitQueue::new();
-        for i in 0..50_000u64 {
-            queue.push_back(Task {
-                id: TaskId(i),
-                files: vec![FileId(rng.below(10_000) as u32)],
-                compute: Micros::ZERO,
-                arrival: Micros::ZERO,
-            });
-        }
+        let mut fx = sched_fixture(policy.uses_caching());
         let mut sched = Scheduler::new(SchedulerConfig {
             policy,
             ..SchedulerConfig::default()
         });
         let mut e = 0usize;
         b.iter(policy.name(), 1, || {
-            e = (e + 1) % execs.len();
-            let got = sched.pick_tasks(execs[e], 1, &mut queue, &reg, &index);
+            e = (e + 1) % fx.execs.len();
+            let got = sched.pick_tasks(
+                fx.execs[e],
+                1,
+                &mut fx.queue,
+                &mut fx.pending,
+                &fx.reg,
+                &fx.index,
+            );
             // Re-queue so the bench is steady-state.
             for t in got {
-                queue.push_back(t);
+                let qref = fx.queue.push_back(t);
+                if policy.uses_caching() {
+                    fx.pending.on_push(&fx.queue, qref, &fx.index);
+                }
+            }
+        });
+        let per_pickup = sched.stats.tasks_inspected as f64 / sched.stats.pickups.max(1) as f64;
+        println!(
+            "    {}: {:.1} tasks inspected/pickup (window would be {})",
+            policy.name(),
+            per_pickup,
+            sched.window_size(&fx.reg)
+        );
+    }
+    let _ = b.write_csv();
+    b
+}
+
+/// The same decision through the retained O(min(|Q|, W)) reference scan —
+/// the before/after contrast for §Perf iteration 3 (decision parity is
+/// asserted by the sched_parity test; this measures only cost).
+fn bench_scheduler_reference_scan() -> Bench {
+    let mut b = Bench::new("scheduler reference window scan (64 nodes, warm index)");
+    for policy in [DispatchPolicy::MaxComputeUtil, DispatchPolicy::GoodCacheCompute] {
+        let mut fx = sched_fixture(true);
+        let sched = Scheduler::new(SchedulerConfig {
+            policy,
+            ..SchedulerConfig::default()
+        });
+        let mut e = 0usize;
+        b.iter(policy.name(), 1, || {
+            e = (e + 1) % fx.execs.len();
+            let refs =
+                sched.pick_refs_reference(fx.execs[e], 1, &fx.queue, &fx.reg, &fx.index);
+            // Mirror the indexed bench's churn: remove + re-queue.
+            for r in refs {
+                let t = datadiffusion::coordinator::pending::remove_queued(
+                    &mut fx.queue,
+                    &mut fx.pending,
+                    r,
+                    &fx.index,
+                );
+                let qref = fx.queue.push_back(t);
+                fx.pending.on_push(&fx.queue, qref, &fx.index);
             }
         });
     }
     let _ = b.write_csv();
+    b
 }
 
-fn bench_waitqueue() {
+fn bench_waitqueue() -> Bench {
     let mut b = Bench::new("wait-queue ops");
     let mut q = WaitQueue::new();
     for i in 0..100_000u64 {
@@ -89,10 +184,18 @@ fn bench_waitqueue() {
         let n = q.window(3200).count();
         black_box(n);
     });
+    b.iter("window boundary seq (amortized)", 1, || {
+        // Steady-state churn: one pop + one push per query, like the
+        // scheduler's per-pickup pattern.
+        let t = q.pop_front().expect("non-empty");
+        q.push_back(t);
+        black_box(q.window_boundary_seq(3200));
+    });
     let _ = b.write_csv();
+    b
 }
 
-fn bench_cache() {
+fn bench_cache() -> Bench {
     let mut b = Bench::new("object cache (LRU, 4GB, 10MB objects)");
     let mut cache = ObjectCache::new(CacheConfig {
         capacity_bytes: 4_000_000_000,
@@ -111,9 +214,10 @@ fn bench_cache() {
         black_box(cache.insert(f, 10_000_000, &mut rng));
     });
     let _ = b.write_csv();
+    b
 }
 
-fn bench_flownet() {
+fn bench_flownet() -> Bench {
     let mut b = Bench::new("flow network transfer churn");
     for concurrency in [16usize, 128] {
         let mut net = FlowNet::new();
@@ -135,11 +239,12 @@ fn bench_flownet() {
         });
     }
     let _ = b.write_csv();
+    b
 }
 
 /// Whole-simulation event rate on a mid-sized workload (the §Perf
 /// headline for the engine).
-fn bench_whole_sim() {
+fn bench_whole_sim() -> Bench {
     let mut b = Bench::new("whole simulation (25K tasks, 64 nodes)")
         .samples(3)
         .min_sample_duration(std::time::Duration::from_millis(1));
@@ -153,4 +258,5 @@ fn bench_whole_sim() {
     });
     println!("  engine event rate: {:.2}M events/s", events_per_s / 1e6);
     let _ = b.write_csv();
+    b
 }

@@ -39,6 +39,14 @@ pub struct ExecutorRegistry {
     entries: HashMap<ExecutorId, ExecutorEntry>,
     /// Executors with ≥1 free slot, ordered for deterministic iteration.
     free: BTreeSet<ExecutorId>,
+    /// Ids of deregistered executors, recycled LIFO so the id space stays
+    /// dense under DRP allocate/release churn — the executor bitsets
+    /// ([`crate::index::ExecSet`]) are sized by the peak id, so recycling
+    /// keeps them at O(peak concurrent nodes / 64) words for the lifetime
+    /// of a run. Deregistration fully scrubs an executor's state (caches,
+    /// links, index entries, pending candidates), so a recycled id can
+    /// never alias stale references.
+    recycled_ids: Vec<u32>,
     total_slots: u64,
     busy_slots: u64,
     next_id: u32,
@@ -50,12 +58,19 @@ impl ExecutorRegistry {
         Self::default()
     }
 
-    /// Register a newly provisioned executor with `slots` CPUs; returns its
-    /// fresh id.
+    /// Register a newly provisioned executor with `slots` CPUs; returns
+    /// its id (a recycled one if an earlier executor was released, else
+    /// fresh — keeping the id space dense for the executor bitsets).
     pub fn register(&mut self, slots: u32, now: Micros) -> ExecutorId {
         assert!(slots > 0);
-        let id = ExecutorId(self.next_id);
-        self.next_id += 1;
+        let id = match self.recycled_ids.pop() {
+            Some(i) => ExecutorId(i),
+            None => {
+                let id = ExecutorId(self.next_id);
+                self.next_id += 1;
+                id
+            }
+        };
         self.entries.insert(
             id,
             ExecutorEntry {
@@ -79,6 +94,7 @@ impl ExecutorRegistry {
         assert_eq!(entry.pending_slots, 0, "releasing pending executor {id}");
         self.free.remove(&id);
         self.total_slots -= entry.slots as u64;
+        self.recycled_ids.push(id.0);
         entry
     }
 
@@ -299,6 +315,19 @@ mod tests {
         let e = reg.register(1, Micros::ZERO);
         reg.start_task(e, Micros::ZERO);
         reg.deregister(e);
+    }
+
+    #[test]
+    fn deregistered_ids_are_recycled() {
+        let mut reg = ExecutorRegistry::new();
+        let a = reg.register(1, Micros::ZERO);
+        let b = reg.register(1, Micros::ZERO);
+        reg.deregister(a);
+        let c = reg.register(2, Micros::ZERO);
+        assert_eq!(c, a, "released id must be reused (dense id space)");
+        assert!(reg.contains(b) && reg.contains(c));
+        assert_eq!(reg.total_slots(), 3);
+        reg.check_consistent().unwrap();
     }
 
     #[test]

@@ -8,12 +8,15 @@
 //! coordinator owns *what happens next*:
 //!
 //! * [`queue::WaitQueue`] — the task wait queue (Q) with O(1) window
-//!   removal;
+//!   removal and O(1) window-membership tests;
+//! * [`pending::PendingIndex`] — the inverted pending-task index the
+//!   sub-linear pickup enumerates instead of scanning the window;
 //! * [`executor::ExecutorRegistry`] — E_set with free/busy/pending state;
 //! * [`scheduler::Scheduler`] — the two-phase data-aware scheduler;
 //! * [`provisioner::Provisioner`] — DRP allocation/release decisions.
 
 pub mod executor;
+pub mod pending;
 pub mod provisioner;
 pub mod queue;
 pub mod scheduler;
@@ -47,6 +50,11 @@ pub struct AccessResolution {
     /// Files evicted from the executor's cache to make room (the live
     /// engine deletes these from the worker's cache directory).
     pub evicted: Vec<FileId>,
+    /// Did the file enter the executor's cache (⇒ a `LocationIndex::add`
+    /// happened)? False for local hits (already resident) and for
+    /// objects larger than the whole cache. Engines use this plus
+    /// `evicted` to keep the [`pending::PendingIndex`] coherent.
+    pub inserted: bool,
 }
 
 /// Shared helper: resolve where an executor will get `file` from and
@@ -69,26 +77,31 @@ pub fn resolve_access(
             kind: AccessKind::HitLocal,
             peer: None,
             evicted: Vec::new(),
+            inserted: false,
         };
     }
     // Pick a peer holder if any (excluding ourselves, which we know
-    // misses).
+    // misses). The holder bitset iterates in ascending id order (as the
+    // old sorted set did), so the k-th-peer draw is bit-identical.
     let peer = index.holders(file).and_then(|holders| {
-        let peers: Vec<ExecutorId> = holders.iter().copied().filter(|&e| e != exec).collect();
-        if peers.is_empty() {
+        let peers = holders.len() - usize::from(holders.contains(exec));
+        if peers == 0 {
             None
         } else {
-            Some(peers[rng.below(peers.len() as u64) as usize])
+            let k = rng.below(peers as u64) as usize;
+            holders.iter().filter(|&e| e != exec).nth(k)
         }
     });
     // Insert into our cache (evicting as needed) and update the index.
     let mut evicted_files = Vec::new();
+    let mut inserted = false;
     if let Some(evicted) = cache.insert(file, size, rng) {
         for &old in &evicted {
             index.remove(old, exec);
         }
         index.add(file, exec);
         evicted_files = evicted;
+        inserted = true;
     }
     AccessResolution {
         kind: if peer.is_some() {
@@ -98,6 +111,7 @@ pub fn resolve_access(
         },
         peer,
         evicted: evicted_files,
+        inserted,
     }
 }
 

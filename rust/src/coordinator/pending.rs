@@ -1,0 +1,361 @@
+//! Inverted pending-task index — the sub-linear pickup structure
+//! (§Perf iteration 3).
+//!
+//! The O(min(|Q|, W)) window scan of §3.2 is the paper's *upper bound*
+//! per scheduling decision, and at W = 100×nodes (3200–6400 entries) it
+//! is exactly the hot path DIANA-style bulk schedulers identify as the
+//! throughput ceiling. This module replaces the scan with two inverted
+//! maps, maintained incrementally as the queue and the location index
+//! change:
+//!
+//! * **by_file** — `FileId → {seq → QueueRef}`: every queued task,
+//!   keyed by each file it reads. This is the paper's wait queue viewed
+//!   through θ(κ) instead of arrival order.
+//! * **by_exec** — `ExecutorId → {seq → QueueRef}`: the *materialized
+//!   intersection* of `E_map(executor)` with the pending set — exactly
+//!   the tasks with ≥ 1 cached file at that executor, ordered by queue
+//!   sequence number. A pickup enumerates this set in queue order and
+//!   stops at the first 100 %-hit task, so its cost is proportional to
+//!   the executor's **actual cache overlap with the window**, not the
+//!   window size. Zero-hit eligibility classes (2/3/4 in
+//!   `zero_hit_class`) are, by construction, precisely the queued tasks
+//!   *absent* from `by_exec[executor]`, so the scheduler's bounded
+//!   head-scan fallback never needs a cache probe.
+//!
+//! Maintenance costs, all amortized over the structures the coordinator
+//! already touches:
+//!
+//! * task queued — O(|θ(κ)| × replication) bitset-iterated inserts;
+//! * task dispatched — the mirror removals;
+//! * index add/remove (a cache insert or eviction at executor `e`) —
+//!   O(pending tasks referencing that file) set updates;
+//! * executor deregistered — one map removal.
+//!
+//! The index is **only maintained for data-aware policies**
+//! (`uses_caching()`); first-available pops the queue head and never
+//! consults it. All removal paths are safe no-ops on an unmaintained
+//! (empty) index, so the scheduler can call them unconditionally.
+
+use crate::coordinator::queue::{QueueRef, WaitQueue};
+use crate::ids::{ExecutorId, FileId};
+use crate::index::LocationIndex;
+use std::collections::{BTreeMap, HashMap};
+
+/// Per-key pending sets, ordered by queue sequence number so iteration
+/// yields tasks in queue order (seq order == queue order).
+pub type SeqSet = BTreeMap<u64, QueueRef>;
+
+/// The inverted pending index. See the module docs for the invariants.
+#[derive(Debug, Default)]
+pub struct PendingIndex {
+    /// Pending tasks by file read.
+    by_file: HashMap<FileId, SeqSet>,
+    /// Pending tasks by executor caching ≥1 of their files (candidates).
+    by_exec: HashMap<ExecutorId, SeqSet>,
+}
+
+impl PendingIndex {
+    /// Empty index.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a task just pushed onto the wait queue. Must be called
+    /// after `queue.push_back` (it reads the task back through `qref`),
+    /// and only for caching policies.
+    pub fn on_push(&mut self, queue: &WaitQueue, qref: QueueRef, index: &LocationIndex) {
+        let seq = queue.seq_of(qref);
+        let task = queue.get(qref);
+        for &f in &task.files {
+            self.by_file.entry(f).or_default().insert(seq, qref);
+            if let Some(holders) = index.holders(f) {
+                for e in holders {
+                    self.by_exec.entry(e).or_default().insert(seq, qref);
+                }
+            }
+        }
+    }
+
+    /// Record a task leaving the wait queue. `files`/`seq` are the
+    /// removed task's (capture `seq` via [`WaitQueue::seq_of`] *before*
+    /// the `queue.remove`). Safe no-op when the index is unmaintained.
+    pub fn on_remove(&mut self, files: &[FileId], seq: u64, index: &LocationIndex) {
+        for &f in files {
+            if let Some(set) = self.by_file.get_mut(&f) {
+                set.remove(&seq);
+                if set.is_empty() {
+                    self.by_file.remove(&f);
+                }
+            }
+            // Invariant: by_exec[e] ∋ seq ⟹ e holds ≥1 of the task's
+            // files, so sweeping the holders of every file covers all
+            // candidate entries (double-removals are no-ops).
+            if let Some(holders) = index.holders(f) {
+                for e in holders {
+                    if let Some(set) = self.by_exec.get_mut(&e) {
+                        set.remove(&seq);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Record that the location index just **added** (file, executor):
+    /// every pending task reading `file` becomes a candidate at
+    /// `executor`. Call after `LocationIndex::add`.
+    ///
+    /// Cost is O(pending readers of `file`) — fine for the paper's
+    /// workloads (reads spread over 10K+ files), but a single ultra-hot
+    /// file with thousands of queued readers under eviction churn makes
+    /// this the dominant term; see ROADMAP "Bound hot-file pending
+    /// maintenance" before pointing such a workload at this index.
+    pub fn on_index_add(&mut self, file: FileId, executor: ExecutorId) {
+        if let Some(pending) = self.by_file.get(&file) {
+            if !pending.is_empty() {
+                let set = self.by_exec.entry(executor).or_default();
+                for (&seq, &qref) in pending {
+                    set.insert(seq, qref);
+                }
+            }
+        }
+    }
+
+    /// Record that the location index just **removed** (file, executor)
+    /// — an eviction. A pending task reading `file` stays a candidate
+    /// only if another of its files is still cached there. Call after
+    /// `LocationIndex::remove`.
+    pub fn on_index_remove(
+        &mut self,
+        file: FileId,
+        executor: ExecutorId,
+        queue: &WaitQueue,
+        index: &LocationIndex,
+    ) {
+        let Some(pending) = self.by_file.get(&file) else {
+            return;
+        };
+        let Some(set) = self.by_exec.get_mut(&executor) else {
+            return;
+        };
+        for (&seq, &qref) in pending {
+            let task = queue.get(qref);
+            if !task.files.iter().any(|&f2| index.holds(f2, executor)) {
+                set.remove(&seq);
+            }
+        }
+    }
+
+    /// Drop an executor's candidate set (provisioner release).
+    pub fn on_deregister(&mut self, executor: ExecutorId) {
+        self.by_exec.remove(&executor);
+    }
+
+    /// The executor's candidate tasks (≥1 cached file), in queue order.
+    pub fn candidates(&self, executor: ExecutorId) -> Option<&SeqSet> {
+        self.by_exec.get(&executor)
+    }
+
+    /// Pending tasks referencing `file`, in queue order.
+    pub fn pending_for_file(&self, file: FileId) -> Option<&SeqSet> {
+        self.by_file.get(&file)
+    }
+
+    /// Distinct files with ≥1 pending reader.
+    pub fn distinct_pending_files(&self) -> usize {
+        self.by_file.len()
+    }
+
+    /// Rebuild from scratch — the executable spec of the incremental
+    /// maintenance, used by the consistency check and tests.
+    #[doc(hidden)]
+    pub fn rebuild(queue: &WaitQueue, index: &LocationIndex) -> PendingIndex {
+        let mut fresh = PendingIndex::new();
+        let refs: Vec<QueueRef> = queue.window(usize::MAX).map(|(r, _)| r).collect();
+        for r in refs {
+            fresh.on_push(queue, r, index);
+        }
+        fresh
+    }
+
+    /// Check the incremental state equals a from-scratch rebuild.
+    #[doc(hidden)]
+    pub fn check_consistent(
+        &self,
+        queue: &WaitQueue,
+        index: &LocationIndex,
+    ) -> Result<(), String> {
+        let fresh = PendingIndex::rebuild(queue, index);
+        if self.by_file != fresh.by_file {
+            return Err("by_file drifted from rebuild".into());
+        }
+        // Empty candidate sets may linger (executors whose last candidate
+        // left); compare only non-empty sets.
+        let non_empty =
+            |m: &HashMap<ExecutorId, SeqSet>| -> HashMap<ExecutorId, SeqSet> {
+                m.iter()
+                    .filter(|(_, s)| !s.is_empty())
+                    .map(|(&e, s)| (e, s.clone()))
+                    .collect()
+            };
+        if non_empty(&self.by_exec) != non_empty(&fresh.by_exec) {
+            return Err("by_exec drifted from rebuild".into());
+        }
+        Ok(())
+    }
+}
+
+/// Remove a queued task and keep the pending index coherent — the single
+/// removal path shared by the scheduler and the experiment drivers.
+pub fn remove_queued(
+    queue: &mut WaitQueue,
+    pending: &mut PendingIndex,
+    qref: QueueRef,
+    index: &LocationIndex,
+) -> crate::coordinator::queue::Task {
+    let seq = queue.seq_of(qref);
+    let task = queue.remove(qref);
+    pending.on_remove(&task.files, seq, index);
+    task
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::queue::Task;
+    use crate::ids::TaskId;
+    use crate::util::time::Micros;
+
+    fn task(i: u64, files: &[u32]) -> Task {
+        Task {
+            id: TaskId(i),
+            files: files.iter().map(|&f| FileId(f)).collect(),
+            compute: Micros::ZERO,
+            arrival: Micros::ZERO,
+        }
+    }
+
+    fn push(
+        q: &mut WaitQueue,
+        p: &mut PendingIndex,
+        ix: &LocationIndex,
+        t: Task,
+    ) -> QueueRef {
+        let r = q.push_back(t);
+        p.on_push(q, r, ix);
+        r
+    }
+
+    #[test]
+    fn candidates_follow_index_adds_and_evictions() {
+        let mut q = WaitQueue::new();
+        let mut p = PendingIndex::new();
+        let mut ix = LocationIndex::new();
+        let e = ExecutorId(3);
+
+        let r = push(&mut q, &mut p, &ix, task(0, &[7]));
+        assert!(p.candidates(e).is_none_or(|s| s.is_empty()));
+
+        ix.add(FileId(7), e);
+        p.on_index_add(FileId(7), e);
+        assert_eq!(p.candidates(e).unwrap().len(), 1);
+
+        ix.remove(FileId(7), e);
+        p.on_index_remove(FileId(7), e, &q, &ix);
+        assert!(p.candidates(e).unwrap().is_empty());
+        p.check_consistent(&q, &ix).unwrap();
+
+        // Removal cleans by_file.
+        let seq = q.seq_of(r);
+        let t = q.remove(r);
+        p.on_remove(&t.files, seq, &ix);
+        assert_eq!(p.distinct_pending_files(), 0);
+    }
+
+    #[test]
+    fn multi_file_task_stays_candidate_after_partial_eviction() {
+        let mut q = WaitQueue::new();
+        let mut p = PendingIndex::new();
+        let mut ix = LocationIndex::new();
+        let e = ExecutorId(0);
+        ix.add(FileId(1), e);
+        ix.add(FileId(2), e);
+        push(&mut q, &mut p, &ix, task(0, &[1, 2]));
+        assert_eq!(p.candidates(e).unwrap().len(), 1);
+
+        // Evict file 1: the task still reads file 2, cached at e.
+        ix.remove(FileId(1), e);
+        p.on_index_remove(FileId(1), e, &q, &ix);
+        assert_eq!(p.candidates(e).unwrap().len(), 1);
+
+        // Evict file 2 too: no longer a candidate.
+        ix.remove(FileId(2), e);
+        p.on_index_remove(FileId(2), e, &q, &ix);
+        assert!(p.candidates(e).unwrap().is_empty());
+        p.check_consistent(&q, &ix).unwrap();
+    }
+
+    #[test]
+    fn remove_queued_keeps_everything_coherent() {
+        let mut q = WaitQueue::new();
+        let mut p = PendingIndex::new();
+        let mut ix = LocationIndex::new();
+        ix.add(FileId(5), ExecutorId(1));
+        let a = push(&mut q, &mut p, &ix, task(0, &[5]));
+        let _b = push(&mut q, &mut p, &ix, task(1, &[5]));
+        let t = remove_queued(&mut q, &mut p, a, &ix);
+        assert_eq!(t.id, TaskId(0));
+        assert_eq!(p.candidates(ExecutorId(1)).unwrap().len(), 1);
+        p.check_consistent(&q, &ix).unwrap();
+    }
+
+    #[test]
+    fn incremental_matches_rebuild_under_random_ops() {
+        use crate::util::proptest::{property, Gen};
+        property("pending index vs rebuild", 60, |g: &mut Gen| {
+            let mut q = WaitQueue::new();
+            let mut p = PendingIndex::new();
+            let mut ix = LocationIndex::new();
+            let mut live: Vec<QueueRef> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..g.usize_in(1..120) {
+                match g.usize_in(0..6) {
+                    0 | 1 => {
+                        let nfiles = g.usize_in(1..4);
+                        let files: Vec<u32> =
+                            (0..nfiles).map(|_| g.u64_in(0..12) as u32).collect();
+                        let r = push(&mut q, &mut p, &ix, task(next_id, &files));
+                        live.push(r);
+                        next_id += 1;
+                    }
+                    2 => {
+                        let f = FileId(g.u64_in(0..12) as u32);
+                        let e = ExecutorId(g.u64_in(0..6) as u32);
+                        ix.add(f, e);
+                        p.on_index_add(f, e);
+                    }
+                    3 => {
+                        let f = FileId(g.u64_in(0..12) as u32);
+                        let e = ExecutorId(g.u64_in(0..6) as u32);
+                        ix.remove(f, e);
+                        p.on_index_remove(f, e, &q, &ix);
+                    }
+                    4 if !live.is_empty() => {
+                        let i = g.usize_in(0..live.len());
+                        let r = live.swap_remove(i);
+                        remove_queued(&mut q, &mut p, r, &ix);
+                    }
+                    5 => {
+                        // Deregistration drops every (f, e) pair at once;
+                        // by_file is untouched by design.
+                        let e = ExecutorId(g.u64_in(0..6) as u32);
+                        ix.deregister_executor(e);
+                        p.on_deregister(e);
+                    }
+                    _ => {}
+                }
+                p.check_consistent(&q, &ix)?;
+            }
+            Ok(())
+        });
+    }
+}

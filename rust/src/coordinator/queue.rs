@@ -1,12 +1,29 @@
 //! The Falkon wait queue (Q in §3.2).
 //!
-//! The data-aware scheduler's second phase scans a *window* of up to W
+//! The data-aware scheduler's second phase considers a *window* of up to W
 //! tasks from the head of the queue and removes arbitrary tasks in the
 //! window (those with the best cache-hit scores). A `VecDeque` would make
 //! those removals O(W); this queue is an arena of slots threaded with an
 //! intrusive doubly-linked list, giving O(1) push/pop/mid-removal and
-//! cache-friendly in-order traversal — the property the paper's
-//! O(min(|Q|, W)) scheduling-cost argument depends on.
+//! cache-friendly in-order traversal.
+//!
+//! Two features support the **sub-linear indexed pickup** (§Perf
+//! iteration 3; see [`crate::coordinator::pending`]):
+//!
+//! * every queued task carries a monotonically increasing **sequence
+//!   number** ([`WaitQueue::seq_of`]). Tasks are only ever appended at
+//!   the tail, so queue order and sequence order coincide forever —
+//!   "is task A ahead of task B?" is an integer comparison, with no
+//!   pointer chasing;
+//! * a lazily maintained **window-boundary cursor**
+//!   ([`WaitQueue::window_boundary_seq`]) tracks the slot at rank W, so
+//!   "is this task inside the current window?" is `seq < boundary` —
+//!   O(1) per query, amortized O(1) maintenance per queue op (the
+//!   boundary rank shifts by at most one per push/removal).
+//!
+//! Together these let the scheduler test window membership of an indexed
+//! candidate without walking the list — the property the sub-linear
+//! pickup-cost argument depends on.
 
 use crate::ids::{FileId, TaskId};
 use crate::util::time::Micros;
@@ -26,7 +43,7 @@ pub struct Task {
 }
 
 /// Stable reference to a queued task (valid until removed).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct QueueRef(u32);
 
 const NIL: u32 = u32::MAX;
@@ -34,20 +51,36 @@ const NIL: u32 = u32::MAX;
 #[derive(Debug)]
 struct Slot {
     task: Option<Task>,
+    /// Queue sequence number of the occupying task (stale after removal
+    /// until the slot is reused; only read while occupied).
+    seq: u64,
     prev: u32,
     next: u32,
 }
 
-/// FIFO wait queue with O(1) mid-queue removal.
-#[derive(Debug, Default)]
+/// FIFO wait queue with O(1) mid-queue removal and O(1) window-membership
+/// tests.
+#[derive(Debug)]
 pub struct WaitQueue {
     slots: Vec<Slot>,
     free: Vec<u32>,
     head: u32,
     tail: u32,
     len: usize,
+    /// Next sequence number to assign (monotonic; never reused).
+    next_seq: u64,
+    /// Window-boundary cursor slot (NIL = not currently tracked).
+    cursor: u32,
+    /// 0-based rank of `cursor` when it is not NIL.
+    cursor_rank: usize,
     /// High-water mark (the paper reports 7K–200K peak queue lengths).
     pub max_len: usize,
+}
+
+impl Default for WaitQueue {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl WaitQueue {
@@ -59,6 +92,9 @@ impl WaitQueue {
             head: NIL,
             tail: NIL,
             len: 0,
+            next_seq: 0,
+            cursor: NIL,
+            cursor_rank: 0,
             max_len: 0,
         }
     }
@@ -75,10 +111,13 @@ impl WaitQueue {
 
     /// Append a task at the tail; returns its stable reference.
     pub fn push_back(&mut self, task: Task) -> QueueRef {
+        let seq = self.next_seq;
+        self.next_seq += 1;
         let idx = match self.free.pop() {
             Some(i) => {
                 self.slots[i as usize] = Slot {
                     task: Some(task),
+                    seq,
                     prev: self.tail,
                     next: NIL,
                 };
@@ -87,6 +126,7 @@ impl WaitQueue {
             None => {
                 self.slots.push(Slot {
                     task: Some(task),
+                    seq,
                     prev: self.tail,
                     next: NIL,
                 });
@@ -101,6 +141,8 @@ impl WaitQueue {
         self.tail = idx;
         self.len += 1;
         self.max_len = self.max_len.max(self.len);
+        // The new task has the largest seq: every tracked rank < len-1 is
+        // unaffected, so the cursor stays valid as-is.
         QueueRef(idx)
     }
 
@@ -133,6 +175,18 @@ impl WaitQueue {
     /// reused until then, so a stale ref is a logic bug upstream).
     pub fn remove(&mut self, qref: QueueRef) -> Task {
         let idx = qref.0;
+        // Maintain the boundary cursor before unlinking: removing the
+        // cursor slot shifts the cursor to its successor (same rank);
+        // removing anything *ahead* of the cursor lowers its rank by one.
+        if self.cursor != NIL {
+            if self.cursor == idx {
+                self.cursor = self.slots[idx as usize].next;
+                // rank unchanged: the successor inherits the removed rank
+                // (cursor may become NIL when removing the tail).
+            } else if self.slots[idx as usize].seq < self.slots[self.cursor as usize].seq {
+                self.cursor_rank -= 1;
+            }
+        }
         let (prev, next, task) = {
             let slot = &mut self.slots[idx as usize];
             let task = slot.task.take().expect("QueueRef already removed");
@@ -161,8 +215,72 @@ impl WaitQueue {
             .expect("QueueRef already removed")
     }
 
+    /// Sequence number of a queued task. Sequence order equals queue
+    /// order (tasks only enter at the tail), so two tasks' relative queue
+    /// positions compare as integers.
+    pub fn seq_of(&self, qref: QueueRef) -> u64 {
+        let slot = &self.slots[qref.0 as usize];
+        debug_assert!(slot.task.is_some(), "seq_of on removed QueueRef");
+        slot.seq
+    }
+
+    /// Exclusive upper sequence bound of the scheduling window of size
+    /// `window`: a queued task is inside the window **iff** its seq is
+    /// `< bound`. Returns `None` when the whole queue fits in the window
+    /// (every queued task is eligible).
+    ///
+    /// Amortized O(1): the boundary slot (rank `window`) is tracked by a
+    /// cursor that each push/removal shifts by at most one position, so
+    /// consecutive calls with a stable window size only walk the few
+    /// links the queue churned since the last call. A cold cursor (or a
+    /// resized cluster changing W) pays one O(min(W, |Q|−W)) seek.
+    pub fn window_boundary_seq(&mut self, window: usize) -> Option<u64> {
+        if self.len <= window {
+            return None;
+        }
+        // Target rank `window` exists: 1 ≤ window < len.
+        let target = window;
+        if self.cursor == NIL {
+            // Cold seek from whichever end is closer.
+            let from_head = target;
+            let from_tail = self.len - 1 - target;
+            if from_head <= from_tail {
+                let mut slot = self.head;
+                for _ in 0..from_head {
+                    slot = self.slots[slot as usize].next;
+                }
+                self.cursor = slot;
+            } else {
+                let mut slot = self.tail;
+                for _ in 0..from_tail {
+                    slot = self.slots[slot as usize].prev;
+                }
+                self.cursor = slot;
+            }
+            self.cursor_rank = target;
+        } else {
+            while self.cursor_rank < target {
+                self.cursor = self.slots[self.cursor as usize].next;
+                self.cursor_rank += 1;
+                debug_assert!(self.cursor != NIL, "rank < len implies a successor");
+            }
+            while self.cursor_rank > target {
+                self.cursor = self.slots[self.cursor as usize].prev;
+                self.cursor_rank -= 1;
+                debug_assert!(self.cursor != NIL, "rank ≥ 0 implies a predecessor");
+            }
+        }
+        debug_assert!(
+            self.slots[self.cursor as usize].task.is_some(),
+            "boundary cursor must point at an occupied slot"
+        );
+        Some(self.slots[self.cursor as usize].seq)
+    }
+
     /// Iterate `(QueueRef, &Task)` head→tail, up to `window` entries —
-    /// the scheduling-window scan of §3.2. O(min(|Q|, window)).
+    /// the scheduling-window scan of §3.2. O(min(|Q|, window)). Retained
+    /// for the reference scheduler, zero-hit fallback scans, and tests;
+    /// the indexed pickup path avoids it entirely.
     pub fn window(&self, window: usize) -> WindowIter<'_> {
         WindowIter {
             queue: self,
@@ -245,6 +363,79 @@ mod tests {
         }
         assert_eq!(q.window(7).count(), 7);
         assert_eq!(q.window(1000).count(), 100);
+    }
+
+    #[test]
+    fn seq_is_monotone_in_queue_order() {
+        let mut q = WaitQueue::new();
+        let refs: Vec<_> = (0..10).map(|i| q.push_back(task(i))).collect();
+        q.remove(refs[3]);
+        q.remove(refs[7]);
+        q.push_back(task(10)); // reuses a slot; seq must still be largest
+        let seqs: Vec<u64> = q.window(usize::MAX).map(|(r, _)| q.seq_of(r)).collect();
+        for w in seqs.windows(2) {
+            assert!(w[0] < w[1], "seqs out of order: {seqs:?}");
+        }
+    }
+
+    #[test]
+    fn boundary_matches_naive_rank() {
+        let mut q = WaitQueue::new();
+        for i in 0..20 {
+            q.push_back(task(i));
+        }
+        // Whole queue inside the window.
+        assert_eq!(q.window_boundary_seq(20), None);
+        assert_eq!(q.window_boundary_seq(100), None);
+        // Boundary = seq of the task at rank w: members are ranks 0..w-1.
+        for w in [1usize, 5, 19] {
+            let bound = q.window_boundary_seq(w).expect("len > w");
+            let in_window: Vec<u64> = q
+                .window(usize::MAX)
+                .filter(|&(r, _)| q.seq_of(r) < bound)
+                .map(|(_, t)| t.id.0)
+                .collect();
+            let naive: Vec<u64> = q.window(w).map(|(_, t)| t.id.0).collect();
+            assert_eq!(in_window, naive, "window {w}");
+        }
+    }
+
+    #[test]
+    fn boundary_tracks_random_churn() {
+        use crate::util::proptest::{property, Gen};
+        property("window boundary cursor", 100, |g: &mut Gen| {
+            let mut q = WaitQueue::new();
+            let mut live: Vec<QueueRef> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..g.usize_in(1..300) {
+                match g.usize_in(0..5) {
+                    0 | 1 | 2 => {
+                        let r = q.push_back(task(next_id));
+                        live.push(r);
+                        next_id += 1;
+                    }
+                    3 if !live.is_empty() => {
+                        let i = g.usize_in(0..live.len());
+                        let r = live.swap_remove(i);
+                        q.remove(r);
+                    }
+                    _ => {}
+                }
+                // Random window sizes, including degenerate ones.
+                let w = g.usize_in(1..12);
+                let bound = q.window_boundary_seq(w);
+                let expect: Vec<u64> = q.window(w).map(|(_, t)| t.id.0).collect();
+                let got: Vec<u64> = q
+                    .window(usize::MAX)
+                    .filter(|&(r, _)| bound.is_none_or(|b| q.seq_of(r) < b))
+                    .map(|(_, t)| t.id.0)
+                    .collect();
+                if got != expect {
+                    return Err(format!("w={w}: {got:?} != {expect:?}"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

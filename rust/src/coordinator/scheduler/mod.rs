@@ -8,23 +8,54 @@
 //!    best *free* candidate to notify that work is available. Policy
 //!    decides the fallback when no preferred executor is free.
 //! 2. **Pickup** ([`Scheduler::pick_tasks`]): when an executor asks for
-//!    work, scan a *scheduling window* of up to W tasks from the queue
-//!    head, score each by its local cache-hit fraction
+//!    work, consider a *scheduling window* of up to W tasks from the
+//!    queue head, score each by its local cache-hit fraction
 //!    (|fileSet ∩ E_map(executor)| / |fileSet|), dispatch any 100 %-hit
 //!    task immediately, and otherwise dispatch the m best-scoring
 //!    eligible tasks. Policy decides eligibility of 0-hit tasks.
 //!
-//! Complexity is O(|θ(κ)| + replication + min(|Q|, W)) per decision, as
-//! claimed in the paper — guaranteed by the hash-map/sorted-set shapes of
-//! [`LocationIndex`](crate::index::LocationIndex) and
-//! [`WaitQueue`](crate::coordinator::queue::WaitQueue), and measured by
-//! the Figure 3 bench (`cargo bench --bench fig03_scheduler`).
+//! ## §Perf iteration 3 — sub-linear pickup
+//!
+//! Iterations 1–2 (scratch-buffer reuse, hoisted E_map lookups, the
+//! cold-start early exit) still paid the O(min(|Q|, W)) scan per pickup
+//! — 3200–6400 probed window entries at 32–64 nodes, the throughput
+//! ceiling the paper's §5.1 microbench measures. Iteration 3 removes the
+//! scan from the common path entirely:
+//!
+//! * the [`PendingIndex`](crate::coordinator::pending::PendingIndex)
+//!   materializes, per executor, the queued tasks with ≥ 1 cached file
+//!   (the intersection of E_map(executor) with the pending set), ordered
+//!   by queue sequence number;
+//! * [`WaitQueue::window_boundary_seq`] makes "inside the window?" an
+//!   O(1) integer comparison (amortized-O(1) boundary cursor);
+//! * pickup enumerates the candidate set in queue order, stopping at the
+//!   first 100 %-hit task — cost proportional to the executor's **actual
+//!   cache overlap with the window**, not the window size;
+//! * only when the candidates cannot fill the batch does a **bounded
+//!   head scan** classify zero-hit tasks (classes 2/3/4), and since every
+//!   window task with a local hit is in the candidate set, that scan
+//!   needs no cache probes and exits at the first class-2 single-file
+//!   task in the m = 1 case.
+//!
+//! Per-decision complexity is O(|θ(κ)| + replication + overlap) on the
+//! hit path — strictly below the paper's claimed
+//! O(|θ(κ)| + replication + min(|Q|, W)) bound, which remains the
+//! worst case (cold caches, max-cache-hit with every holder busy).
+//! `cargo bench --bench perf_hotpath` tracks both the per-pickup cost
+//! and the `tasks_inspected`-per-pickup ratio.
+//!
+//! Decisions are **bit-identical** to the plain window scan: same tasks,
+//! same order, same deterministic tie-break (class asc, misses asc,
+//! queue order). [`Scheduler::pick_refs_reference`] retains the O(W)
+//! scan as the executable specification, and the `sched_parity`
+//! differential property test asserts equality across all five policies.
 
 pub mod policy;
 
 pub use policy::DispatchPolicy;
 
 use crate::coordinator::executor::ExecutorRegistry;
+use crate::coordinator::pending::{remove_queued, PendingIndex};
 use crate::coordinator::queue::{QueueRef, Task, WaitQueue};
 use crate::ids::{ExecutorId, FileId};
 use crate::index::LocationIndex;
@@ -85,7 +116,10 @@ pub struct SchedulerStats {
     pub pickups: u64,
     /// Tasks dispatched.
     pub tasks_dispatched: u64,
-    /// Window entries inspected across all pickups.
+    /// Tasks examined across all pickups: indexed candidates plus
+    /// zero-hit fallback-scan entries. Under the plain window scan this
+    /// was ~window-size per pickup; the indexed pickup drops it to
+    /// ~cache-overlap-size (the perf_hotpath bench reports the ratio).
     pub tasks_inspected: u64,
     /// Tasks dispatched with a 100 % local-hit score.
     pub full_hit_dispatches: u64,
@@ -101,12 +135,12 @@ pub struct Scheduler {
     next_free_hint: u32,
     /// Cost/behaviour counters.
     pub stats: SchedulerStats,
-    /// Scratch buffer reused across notify decisions (perf: avoids an
-    /// allocation per decision on the hot path).
+    /// Scratch buffer reused across multi-file notify decisions (perf:
+    /// avoids an allocation per decision on the hot path).
     candidates: HashMap<ExecutorId, usize>,
-    /// Scratch buffer for the window scan's partial candidates (perf:
-    /// §Perf iteration 1 — reuse instead of re-allocating per pickup).
-    partial_scratch: Vec<(u8, usize, usize, QueueRef)>,
+    /// Scratch buffer for partial candidates — (class, misses, seq, ref)
+    /// (perf: §Perf iteration 1 — reuse instead of re-allocating).
+    partial_scratch: Vec<(u8, usize, u64, QueueRef)>,
 }
 
 impl Scheduler {
@@ -124,6 +158,13 @@ impl Scheduler {
     /// Effective scheduling window for the current cluster size.
     pub fn window_size(&self, registry: &ExecutorRegistry) -> usize {
         (self.config.window_multiplier * registry.len()).max(1)
+    }
+
+    /// Current rotating free-executor hint (exposed for the differential
+    /// parity tests, which replay the rotation logic).
+    #[doc(hidden)]
+    pub fn free_hint(&self) -> ExecutorId {
+        ExecutorId(self.next_free_hint)
     }
 
     /// **Phase 1 — notification.** Choose an executor to notify for the
@@ -148,26 +189,42 @@ impl Scheduler {
 
         // Score candidates: executors holding any of the task's files,
         // weighted by how many they hold (the paper's candidate counting).
-        self.candidates.clear();
         let mut any_holder = false;
-        for &f in files {
-            if let Some(holders) = index.holders(f) {
-                for &e in holders {
+        let mut best: Option<(usize, ExecutorId)> = None;
+        if let [f] = files {
+            // Single-file fast path (the paper's workload shape): every
+            // holder scores 1, so the best free candidate is the first
+            // free holder in ascending-id bitset order — same tie-break
+            // as the scored path, no hash map involved.
+            if let Some(holders) = index.holders(*f) {
+                for e in holders {
                     any_holder = true;
-                    *self.candidates.entry(e).or_insert(0) += 1;
+                    if registry.is_free(e) {
+                        best = Some((1, e));
+                        break;
+                    }
                 }
             }
-        }
-        // Best free candidate, ties broken by id for determinism.
-        let mut best: Option<(usize, ExecutorId)> = None;
-        for (&e, &score) in self.candidates.iter() {
-            if registry.is_free(e) {
-                let better = match best {
-                    None => true,
-                    Some((bs, be)) => score > bs || (score == bs && e < be),
-                };
-                if better {
-                    best = Some((score, e));
+        } else {
+            self.candidates.clear();
+            for &f in files {
+                if let Some(holders) = index.holders(f) {
+                    for e in holders {
+                        any_holder = true;
+                        *self.candidates.entry(e).or_insert(0) += 1;
+                    }
+                }
+            }
+            // Best free candidate, ties broken by id for determinism.
+            for (&e, &score) in self.candidates.iter() {
+                if registry.is_free(e) {
+                    let better = match best {
+                        None => true,
+                        Some((bs, be)) => score > bs || (score == bs && e < be),
+                    };
+                    if better {
+                        best = Some((score, e));
+                    }
                 }
             }
         }
@@ -207,16 +264,21 @@ impl Scheduler {
         }
     }
 
-    /// **Phase 2 — pickup.** The executor `exec` is asking for work: scan
-    /// the scheduling window and remove up to `limit` tasks for it (the
-    /// engine passes `min(max_tasks_per_pickup, free slots)`). Returns
-    /// the dispatched tasks (possibly empty — the paper's "no tasks
+    /// **Phase 2 — pickup.** The executor `exec` is asking for work:
+    /// select and remove up to `limit` window tasks for it (the engine
+    /// passes `min(max_tasks_per_pickup, free slots)`). Returns the
+    /// dispatched tasks (possibly empty — the paper's "no tasks
     /// returned" outcome sends the executor back to the free pool).
+    ///
+    /// Decisions are bit-identical to [`Scheduler::pick_refs_reference`]
+    /// (the plain O(W) scan); the cost is sub-linear in W via the
+    /// inverted pending index — see the module docs.
     pub fn pick_tasks(
         &mut self,
         exec: ExecutorId,
         limit: usize,
         queue: &mut WaitQueue,
+        pending: &mut PendingIndex,
         registry: &ExecutorRegistry,
         index: &LocationIndex,
     ) -> Vec<Task> {
@@ -226,51 +288,152 @@ impl Scheduler {
             return Vec::new();
         }
 
-        // first-available ignores data location entirely: O(1) head pop.
+        // first-available ignores data location entirely: O(1) head pops.
+        // (The pending index is not maintained for it; removal through
+        // `remove_queued` is a safe no-op on the empty index.)
         if self.config.policy == DispatchPolicy::FirstAvailable {
             let mut out = Vec::with_capacity(m);
-            for _ in 0..m {
-                match queue.pop_front() {
-                    Some(t) => out.push(t),
-                    None => break,
-                }
+            while out.len() < m {
+                let Some(qref) = queue.front_ref() else { break };
+                out.push(remove_queued(queue, pending, qref, index));
             }
             self.stats.tasks_dispatched += out.len() as u64;
             return out;
         }
 
-        let window = self.window_size(registry);
-        let mcu_mode = self.mcu_mode(registry);
-        // §Perf: hoist the E_map(exec) lookup out of the scan — one hash
-        // probe per pickup instead of one per window entry.
-        let exec_set = index.cached_at(exec);
+        let refs = self.select_refs(exec, m, queue, pending, registry, index);
+        let tasks: Vec<Task> = refs
+            .into_iter()
+            .map(|r| remove_queued(queue, pending, r, index))
+            .collect();
+        self.stats.tasks_dispatched += tasks.len() as u64;
+        tasks
+    }
 
-        // Single pass over the window: take 100 %-hit tasks immediately,
-        // remember the best partial candidates otherwise.
-        let mut full_hits: Vec<QueueRef> = Vec::new();
-        // (class, score_num, queue_position) — lower tuple is better.
+    /// The indexed selection (data-aware policies). Chooses up to `m`
+    /// window tasks without removing them; see the module docs for the
+    /// phase structure and the parity argument.
+    fn select_refs(
+        &mut self,
+        exec: ExecutorId,
+        m: usize,
+        queue: &mut WaitQueue,
+        pending: &PendingIndex,
+        registry: &ExecutorRegistry,
+        index: &LocationIndex,
+    ) -> Vec<QueueRef> {
+        let window = self.window_size(registry);
+        // Amortized O(1): "in the window" becomes `seq < boundary`.
+        let boundary = queue.window_boundary_seq(window);
+        let mcu_mode = self.mcu_mode(registry);
+        let mut inspected = 0u64;
+
+        // Phase A — enumerate indexed candidates (tasks with ≥1 file
+        // cached at `exec`) in queue order; cost ∝ cache overlap.
+        let mut fulls: Vec<QueueRef> = Vec::new();
         let mut partial = std::mem::take(&mut self.partial_scratch);
         partial.clear();
-        // §Perf: with m == 1 (the common case) track the single best
-        // partial candidate inline instead of collecting + sorting.
-        let mut best_one: Option<(u8, usize, usize, QueueRef)> = None;
-        // §Perf iteration 2: when the executor caches nothing, no task
-        // can score hits, so the first class-2 candidate (files cached
-        // nowhere — the best zero-hit class) is provably optimal and the
-        // scan can stop there. This collapses the cold-start phase from
-        // full-window scans to O(1) without changing any decision.
-        let no_hits_possible = exec_set.is_none_or(|s| s.is_empty());
-        let mut inspected = 0u64;
+        if let Some(cands) = pending.candidates(exec) {
+            for (&seq, &qref) in cands {
+                if boundary.is_some_and(|b| seq >= b) {
+                    break; // past the window boundary; so is everything later
+                }
+                inspected += 1;
+                let task = queue.get(qref);
+                let nfiles = task.files.len().max(1);
+                let hits = task
+                    .files
+                    .iter()
+                    .filter(|&&f| index.holds(f, exec))
+                    .count();
+                debug_assert!(hits > 0, "candidate set contains a zero-hit task");
+                if hits == nfiles {
+                    // 100 % local hit: dispatched in queue order, exactly
+                    // like the reference scan's first-m full hits.
+                    fulls.push(qref);
+                    if fulls.len() == m {
+                        break;
+                    }
+                } else {
+                    partial.push((1, nfiles - hits, seq, qref));
+                }
+            }
+        }
+        self.stats.full_hit_dispatches += fulls.len() as u64;
+
+        if fulls.len() + partial.len() < m {
+            // Phase B — bounded head-scan fallback for the zero-hit
+            // classes. A window task has ≥1 local hit iff its seq is in
+            // the candidate set (Phase A handled those), so skipping is
+            // one candidate-map probe and the scan needs no cache
+            // probes or scratch allocation; with m == 1 it stops at the
+            // first class-2 single-file task (nothing later can beat
+            // (2, 1, earlier-seq) under the tie-break).
+            let cands = pending.candidates(exec);
+            for (qref, task) in queue.window(window) {
+                let seq = queue.seq_of(qref);
+                if cands.is_some_and(|c| c.contains_key(&seq)) {
+                    continue;
+                }
+                inspected += 1;
+                let class = self.zero_hit_class(task, index, mcu_mode);
+                if class == u8::MAX {
+                    continue;
+                }
+                let nfiles = task.files.len().max(1);
+                partial.push((class, nfiles, seq, qref));
+                if m == 1 && class == 2 && nfiles == 1 {
+                    break;
+                }
+            }
+        }
+        self.stats.tasks_inspected += inspected;
+
+        let mut refs = fulls;
+        if refs.len() < m && !partial.is_empty() {
+            // Order: class asc (local-partial, uncached, replica-ok,
+            // replica-capped), then misses asc (higher hit fraction
+            // first), then queue order (seq asc). Deterministic, and
+            // identical to the reference scan's tie-break.
+            partial.sort_unstable_by_key(|&(class, miss, seq, _)| (class, miss, seq));
+            for &(_, _, _, qref) in partial.iter().take(m - refs.len()) {
+                refs.push(qref);
+            }
+        }
+        self.partial_scratch = partial;
+        refs
+    }
+
+    /// Reference implementation of the §3.2 pickup: the plain
+    /// O(min(|Q|, W)) window scan, retained as the executable
+    /// specification of the dispatch decision. Pure — mutates neither
+    /// queue nor stats; returns the selected refs in dispatch order.
+    ///
+    /// [`Scheduler::pick_tasks`] must agree with this function on every
+    /// state (same tasks, same order); the `sched_parity` differential
+    /// property test drives both across all five policies.
+    pub fn pick_refs_reference(
+        &self,
+        exec: ExecutorId,
+        limit: usize,
+        queue: &WaitQueue,
+        registry: &ExecutorRegistry,
+        index: &LocationIndex,
+    ) -> Vec<QueueRef> {
+        let m = limit.max(1);
+        if self.config.policy == DispatchPolicy::FirstAvailable {
+            return queue.window(m).map(|(r, _)| r).collect();
+        }
+        let window = self.window_size(registry);
+        let mcu_mode = self.mcu_mode(registry);
+        let mut fulls: Vec<QueueRef> = Vec::new();
+        let mut partial: Vec<(u8, usize, usize, QueueRef)> = Vec::new();
         for (pos, (qref, task)) in queue.window(window).enumerate() {
-            inspected += 1;
             let nfiles = task.files.len().max(1);
-            let hits = match exec_set {
-                Some(set) => task.files.iter().filter(|f| set.contains(f)).count(),
-                None => 0,
-            };
+            let hits = index.hit_count(exec, &task.files);
             if hits == nfiles {
-                full_hits.push(qref);
-                if full_hits.len() == m {
+                fulls.push(qref);
+                if fulls.len() == m {
                     break;
                 }
                 continue;
@@ -281,44 +444,16 @@ impl Scheduler {
                 self.zero_hit_class(task, index, mcu_mode)
             };
             if class < u8::MAX {
-                let cand = (class, nfiles - hits, pos, qref);
-                if m == 1 {
-                    let key = (cand.0, cand.1, cand.2);
-                    if best_one.is_none_or(|b| key < (b.0, b.1, b.2)) {
-                        best_one = Some(cand);
-                    }
-                    if no_hits_possible && class == 2 {
-                        break; // nothing later can beat (2, ·, earlier pos)
-                    }
-                } else if full_hits.len() + partial.len() < window {
-                    partial.push(cand);
-                }
+                partial.push((class, nfiles - hits, pos, qref));
             }
         }
-        self.stats.tasks_inspected += inspected;
-
-        let mut refs = full_hits;
-        self.stats.full_hit_dispatches += refs.len() as u64;
-        if refs.len() < m {
-            if m == 1 {
-                if let Some((_, _, _, qref)) = best_one {
-                    refs.push(qref);
-                }
-            } else if !partial.is_empty() {
-                // Order: class asc (local-partial, uncached, replica-ok,
-                // replica-capped), then misses asc (higher hit fraction
-                // first), then queue order. Deterministic.
-                partial.sort_unstable_by_key(|&(class, miss, pos, _)| (class, miss, pos));
-                for &(_, _, _, qref) in partial.iter().take(m - refs.len()) {
-                    refs.push(qref);
-                }
+        if fulls.len() < m {
+            partial.sort_by_key(|&(class, miss, pos, _)| (class, miss, pos));
+            for &(_, _, _, qref) in partial.iter().take(m - fulls.len()) {
+                fulls.push(qref);
             }
         }
-        self.partial_scratch = partial;
-
-        let tasks: Vec<Task> = refs.into_iter().map(|r| queue.remove(r)).collect();
-        self.stats.tasks_dispatched += tasks.len() as u64;
-        tasks
+        fulls
     }
 
     /// Eligibility class for a task with zero local hits at the asking
@@ -332,8 +467,8 @@ impl Scheduler {
     /// * class 4 — as above but replication already at the cap (only
     ///   taken when CPUs are starving).
     fn zero_hit_class(&self, task: &Task, index: &LocationIndex, mcu_mode: bool) -> u8 {
-        // §Perf: one index probe per file gives both the cached-anywhere
-        // and the replication-cap answers.
+        // §Perf: replication() is a cached popcount — one hash probe per
+        // file answers both cached-anywhere and the replication cap.
         let max_repl = task
             .files
             .iter()
@@ -394,12 +529,18 @@ mod tests {
         }
     }
 
-    fn setup(n_exec: usize) -> (ExecutorRegistry, LocationIndex, WaitQueue) {
+    fn setup(n_exec: usize) -> (ExecutorRegistry, LocationIndex, WaitQueue, PendingIndex) {
         let mut reg = ExecutorRegistry::new();
         for _ in 0..n_exec {
             reg.register(2, Micros::ZERO);
         }
-        (reg, LocationIndex::new(), WaitQueue::new())
+        (reg, LocationIndex::new(), WaitQueue::new(), PendingIndex::new())
+    }
+
+    /// Push + maintain the pending index (what the engines do).
+    fn push(q: &mut WaitQueue, p: &mut PendingIndex, ix: &LocationIndex, t: Task) {
+        let r = q.push_back(t);
+        p.on_push(q, r, ix);
     }
 
     fn sched(policy: DispatchPolicy) -> Scheduler {
@@ -411,7 +552,7 @@ mod tests {
 
     #[test]
     fn first_available_round_robins() {
-        let (reg, index, _) = setup(3);
+        let (reg, index, _, _) = setup(3);
         let mut s = sched(DispatchPolicy::FirstAvailable);
         let mut picks = Vec::new();
         for _ in 0..3 {
@@ -426,7 +567,7 @@ mod tests {
 
     #[test]
     fn notify_prefers_holder() {
-        let (reg, mut index, _) = setup(3);
+        let (reg, mut index, _, _) = setup(3);
         index.add(FileId(7), ExecutorId(2));
         let mut s = sched(DispatchPolicy::MaxComputeUtil);
         assert_eq!(
@@ -436,8 +577,22 @@ mod tests {
     }
 
     #[test]
+    fn notify_multi_file_prefers_highest_score() {
+        let (reg, mut index, _, _) = setup(3);
+        index.add(FileId(1), ExecutorId(0));
+        index.add(FileId(1), ExecutorId(2));
+        index.add(FileId(2), ExecutorId(2));
+        let mut s = sched(DispatchPolicy::MaxComputeUtil);
+        // Executor 2 holds both files; executor 0 only one.
+        assert_eq!(
+            s.select_notify(&[FileId(1), FileId(2)], &reg, &index),
+            NotifyOutcome::Preferred(ExecutorId(2))
+        );
+    }
+
+    #[test]
     fn mch_waits_for_busy_holder() {
-        let (mut reg, mut index, _) = setup(2);
+        let (mut reg, mut index, _, _) = setup(2);
         index.add(FileId(7), ExecutorId(0));
         // Make executor 0 fully busy.
         reg.start_task(ExecutorId(0), Micros::ZERO);
@@ -456,7 +611,7 @@ mod tests {
 
     #[test]
     fn mcu_falls_back_to_free_executor() {
-        let (mut reg, mut index, _) = setup(2);
+        let (mut reg, mut index, _, _) = setup(2);
         index.add(FileId(7), ExecutorId(0));
         reg.start_task(ExecutorId(0), Micros::ZERO);
         reg.start_task(ExecutorId(0), Micros::ZERO);
@@ -469,7 +624,7 @@ mod tests {
 
     #[test]
     fn gcc_switches_on_utilization() {
-        let (mut reg, mut index, _) = setup(2);
+        let (mut reg, mut index, _, _) = setup(2);
         index.add(FileId(7), ExecutorId(0));
         reg.start_task(ExecutorId(0), Micros::ZERO);
         reg.start_task(ExecutorId(0), Micros::ZERO);
@@ -490,69 +645,72 @@ mod tests {
 
     #[test]
     fn pickup_prefers_full_hits() {
-        let (reg, mut index, mut q) = setup(2);
+        let (reg, mut index, mut q, mut p) = setup(2);
         index.add(FileId(1), ExecutorId(0));
         index.add(FileId(2), ExecutorId(1));
-        q.push_back(task(0, &[2])); // hit at exec 1, not exec 0
-        q.push_back(task(1, &[1])); // hit at exec 0
+        push(&mut q, &mut p, &index, task(0, &[2])); // hit at exec 1, not exec 0
+        push(&mut q, &mut p, &index, task(1, &[1])); // hit at exec 0
         let mut s = sched(DispatchPolicy::GoodCacheCompute);
-        let picked = s.pick_tasks(ExecutorId(0), 1, &mut q, &reg, &index);
+        let picked = s.pick_tasks(ExecutorId(0), 1, &mut q, &mut p, &reg, &index);
         assert_eq!(picked.len(), 1);
         assert_eq!(picked[0].id, TaskId(1));
         assert_eq!(q.len(), 1);
         assert_eq!(s.stats.full_hit_dispatches, 1);
+        p.check_consistent(&q, &index).unwrap();
     }
 
     #[test]
     fn mch_pickup_leaves_foreign_tasks() {
-        let (mut reg, mut index, mut q) = setup(2);
+        let (mut reg, mut index, mut q, mut p) = setup(2);
         index.add(FileId(1), ExecutorId(1));
         // Executor 1 is busy; its task sits in the queue.
         reg.start_task(ExecutorId(1), Micros::ZERO);
         reg.start_task(ExecutorId(1), Micros::ZERO);
-        q.push_back(task(0, &[1]));
+        push(&mut q, &mut p, &index, task(0, &[1]));
         let mut s = sched(DispatchPolicy::MaxCacheHit);
-        let picked = s.pick_tasks(ExecutorId(0), 1, &mut q, &reg, &index);
+        let picked = s.pick_tasks(ExecutorId(0), 1, &mut q, &mut p, &reg, &index);
         assert!(picked.is_empty(), "mch must wait for the holder");
         assert_eq!(q.len(), 1);
         // An uncached task bootstraps.
-        q.push_back(task(1, &[9]));
-        let picked = s.pick_tasks(ExecutorId(0), 1, &mut q, &reg, &index);
+        push(&mut q, &mut p, &index, task(1, &[9]));
+        let picked = s.pick_tasks(ExecutorId(0), 1, &mut q, &mut p, &reg, &index);
         assert_eq!(picked.len(), 1);
         assert_eq!(picked[0].id, TaskId(1));
     }
 
     #[test]
     fn mcu_pickup_takes_foreign_tasks() {
-        let (mut reg, mut index, mut q) = setup(2);
+        let (mut reg, mut index, mut q, mut p) = setup(2);
         index.add(FileId(1), ExecutorId(1));
         reg.start_task(ExecutorId(1), Micros::ZERO);
         reg.start_task(ExecutorId(1), Micros::ZERO);
-        q.push_back(task(0, &[1]));
+        push(&mut q, &mut p, &index, task(0, &[1]));
         let mut s = sched(DispatchPolicy::MaxComputeUtil);
-        let picked = s.pick_tasks(ExecutorId(0), 1, &mut q, &reg, &index);
+        let picked = s.pick_tasks(ExecutorId(0), 1, &mut q, &mut p, &reg, &index);
         assert_eq!(picked.len(), 1, "mcu must keep the CPU busy");
     }
 
     #[test]
     fn replication_cap_orders_candidates() {
-        let (reg, mut index, mut q) = setup(8);
+        let (reg, mut index, mut q, mut p) = setup(8);
         // file 1 already at 4 replicas (the default cap); file 2 at 1.
         for e in 0..4 {
             index.add(FileId(1), ExecutorId(e));
         }
         index.add(FileId(2), ExecutorId(0));
-        q.push_back(task(0, &[1])); // over cap → class 4
-        q.push_back(task(1, &[2])); // under cap → class 3
+        push(&mut q, &mut p, &index, task(0, &[1])); // over cap → class 4
+        push(&mut q, &mut p, &index, task(1, &[2])); // under cap → class 3
         let mut s = sched(DispatchPolicy::MaxComputeUtil);
-        let picked = s.pick_tasks(ExecutorId(7), 1, &mut q, &reg, &index);
+        let picked = s.pick_tasks(ExecutorId(7), 1, &mut q, &mut p, &reg, &index);
         assert_eq!(picked[0].id, TaskId(1), "under-cap replica preferred");
     }
 
     #[test]
     fn first_available_pickup_is_fifo() {
-        let (reg, index, mut q) = setup(1);
+        let (reg, index, mut q, mut p) = setup(1);
         for i in 0..5 {
+            // first-available maintains no pending index (uses_caching()
+            // is false), mirroring the engines.
             q.push_back(task(i, &[i as u32]));
         }
         let mut s = Scheduler::new(SchedulerConfig {
@@ -560,7 +718,7 @@ mod tests {
             max_tasks_per_pickup: 3,
             ..SchedulerConfig::default()
         });
-        let picked = s.pick_tasks(ExecutorId(0), 3, &mut q, &reg, &index);
+        let picked = s.pick_tasks(ExecutorId(0), 3, &mut q, &mut p, &reg, &index);
         let ids: Vec<u64> = picked.iter().map(|t| t.id.0).collect();
         assert_eq!(ids, vec![0, 1, 2]);
         assert_eq!(q.len(), 2);
@@ -568,25 +726,72 @@ mod tests {
 
     #[test]
     fn window_bounds_inspection() {
-        let (reg, index, mut q) = setup(1); // window = 100 × 1
+        let (reg, index, mut q, mut p) = setup(1); // window = 100 × 1
         for i in 0..500 {
-            q.push_back(task(i, &[i as u32]));
+            push(&mut q, &mut p, &index, task(i, &[i as u32]));
         }
         let mut s = sched(DispatchPolicy::GoodCacheCompute);
-        let _ = s.pick_tasks(ExecutorId(0), 1, &mut q, &reg, &index);
+        let _ = s.pick_tasks(ExecutorId(0), 1, &mut q, &mut p, &reg, &index);
         assert!(s.stats.tasks_inspected <= 100, "{}", s.stats.tasks_inspected);
     }
 
     #[test]
+    fn indexed_pickup_inspects_overlap_not_window() {
+        // 200 queued tasks, only 3 reference files cached at the asking
+        // executor: the pickup must examine ~overlap, not ~window.
+        let (reg, mut index, mut q, mut p) = setup(2); // window = 200
+        index.add(FileId(0), ExecutorId(0));
+        for i in 0..200u64 {
+            push(&mut q, &mut p, &index, task(i, &[(i % 67) as u32]));
+        }
+        let mut s = sched(DispatchPolicy::MaxComputeUtil);
+        let picked = s.pick_tasks(ExecutorId(0), 1, &mut q, &mut p, &reg, &index);
+        assert_eq!(picked[0].id, TaskId(0), "earliest full hit wins");
+        assert!(
+            s.stats.tasks_inspected <= 4,
+            "inspected {} — expected ~overlap",
+            s.stats.tasks_inspected
+        );
+    }
+
+    #[test]
     fn multi_file_tasks_score_fractionally() {
-        let (reg, mut index, mut q) = setup(2);
+        let (reg, mut index, mut q, mut p) = setup(2);
         index.add(FileId(1), ExecutorId(0));
         index.add(FileId(2), ExecutorId(0));
         index.add(FileId(3), ExecutorId(1));
-        q.push_back(task(0, &[1, 3])); // 1/2 hit at exec 0
-        q.push_back(task(1, &[1, 2])); // 2/2 hit at exec 0
+        push(&mut q, &mut p, &index, task(0, &[1, 3])); // 1/2 hit at exec 0
+        push(&mut q, &mut p, &index, task(1, &[1, 2])); // 2/2 hit at exec 0
         let mut s = sched(DispatchPolicy::GoodCacheCompute);
-        let picked = s.pick_tasks(ExecutorId(0), 1, &mut q, &reg, &index);
+        let picked = s.pick_tasks(ExecutorId(0), 1, &mut q, &mut p, &reg, &index);
         assert_eq!(picked[0].id, TaskId(1));
+    }
+
+    #[test]
+    fn batched_pickup_mixes_classes_in_spec_order() {
+        let (reg, mut index, mut q, mut p) = setup(4); // window = 400
+        index.add(FileId(1), ExecutorId(0));
+        index.add(FileId(2), ExecutorId(0));
+        index.add(FileId(9), ExecutorId(3)); // cached elsewhere only
+        push(&mut q, &mut p, &index, task(0, &[9])); // zero-hit, class 3
+        push(&mut q, &mut p, &index, task(1, &[1, 7])); // partial (1/2)
+        push(&mut q, &mut p, &index, task(2, &[2])); // full hit
+        push(&mut q, &mut p, &index, task(3, &[42])); // uncached, class 2
+        let mut s = Scheduler::new(SchedulerConfig {
+            policy: DispatchPolicy::MaxComputeUtil,
+            max_tasks_per_pickup: 3,
+            ..SchedulerConfig::default()
+        });
+        let expected: Vec<u64> = s
+            .pick_refs_reference(ExecutorId(0), 3, &q, &reg, &index)
+            .iter()
+            .map(|&r| q.get(r).id.0)
+            .collect();
+        let picked = s.pick_tasks(ExecutorId(0), 3, &mut q, &mut p, &reg, &index);
+        let ids: Vec<u64> = picked.iter().map(|t| t.id.0).collect();
+        // Full hit first, then partial (class 1), then uncached (class 2).
+        assert_eq!(ids, vec![2, 1, 3]);
+        assert_eq!(ids, expected, "indexed and reference scans must agree");
+        p.check_consistent(&q, &index).unwrap();
     }
 }

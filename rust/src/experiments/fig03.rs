@@ -13,6 +13,7 @@
 
 use crate::cache::{CacheConfig, EvictionPolicy, ObjectCache};
 use crate::coordinator::executor::ExecutorRegistry;
+use crate::coordinator::pending::{self, PendingIndex};
 use crate::coordinator::queue::{Task, WaitQueue};
 use crate::coordinator::scheduler::{DispatchPolicy, Scheduler, SchedulerConfig};
 use crate::coordinator::resolve_access;
@@ -59,6 +60,7 @@ pub fn bench_policy(
     let mut reg = ExecutorRegistry::new();
     let mut index = LocationIndex::new();
     let mut queue = WaitQueue::new();
+    let mut pend = PendingIndex::new();
     let mut caches: HashMap<ExecutorId, ObjectCache> = HashMap::new();
     let caching = policy.uses_caching();
 
@@ -78,12 +80,15 @@ pub fn bench_policy(
 
     // Pre-fill the wait queue (batch submission, as in §5.1).
     for i in 0..num_tasks {
-        queue.push_back(Task {
+        let qref = queue.push_back(Task {
             id: TaskId(i),
             files: vec![FileId(rng.below(num_files as u64) as u32)],
             compute: Micros::ZERO,
             arrival: Micros::ZERO,
         });
+        if caching {
+            pend.on_push(&queue, qref, &index);
+        }
     }
 
     let mut sched = Scheduler::new(SchedulerConfig {
@@ -120,7 +125,7 @@ pub fn bench_policy(
             }
         };
         let tp = Instant::now();
-        let tasks = sched.pick_tasks(exec, 1, &mut queue, &reg, &index);
+        let tasks = sched.pick_tasks(exec, 1, &mut queue, &mut pend, &reg, &index);
         pickup_s += tp.elapsed().as_secs_f64();
         if tasks.is_empty() {
             // max-cache-hit can decline; force progress on the head task
@@ -129,30 +134,55 @@ pub fn bench_policy(
             let holder = head_files
                 .first()
                 .and_then(|&f| index.holders(f))
-                .and_then(|h| h.iter().next().copied());
+                .and_then(|h| h.first());
             if let Some(h) = holder {
                 let tp2 = Instant::now();
-                let t2 = sched.pick_tasks(h, 1, &mut queue, &reg, &index);
+                let t2 = sched.pick_tasks(h, 1, &mut queue, &mut pend, &reg, &index);
                 pickup_s += tp2.elapsed().as_secs_f64();
-                dispatched += execute(&t2, h, caching, &mut caches, &mut index, &mut rng, &mut index_s);
+                dispatched += execute(
+                    &t2,
+                    h,
+                    caching,
+                    &mut caches,
+                    &mut index,
+                    &mut pend,
+                    &queue,
+                    &mut rng,
+                    &mut index_s,
+                );
             } else {
                 // Nothing anywhere (cold cache, mch): head pops via its
                 // bootstrap class on the fallback executor next round —
-                // guard against a livelock by popping directly.
-                let t = queue.pop_front().expect("non-empty");
+                // guard against a livelock by popping directly (through
+                // the shared removal path so the pending index stays
+                // coherent).
+                let qref = queue.front_ref().expect("non-empty");
+                let t = pending::remove_queued(&mut queue, &mut pend, qref, &index);
                 dispatched += execute(
                     &[t],
                     exec,
                     caching,
                     &mut caches,
                     &mut index,
+                    &mut pend,
+                    &queue,
                     &mut rng,
                     &mut index_s,
                 );
             }
             continue;
         }
-        dispatched += execute(&tasks, exec, caching, &mut caches, &mut index, &mut rng, &mut index_s);
+        dispatched += execute(
+            &tasks,
+            exec,
+            caching,
+            &mut caches,
+            &mut index,
+            &mut pend,
+            &queue,
+            &mut rng,
+            &mut index_s,
+        );
     }
     let elapsed = t0.elapsed().as_secs_f64();
 
@@ -171,13 +201,17 @@ pub fn bench_policy(
     }
 }
 
-/// "Execute" dispatched tasks instantly: cache+index maintenance only.
+/// "Execute" dispatched tasks instantly: cache+index maintenance only
+/// (including the inverted pending index, mirroring the engines).
+#[allow(clippy::too_many_arguments)]
 fn execute(
     tasks: &[Task],
     exec: ExecutorId,
     caching: bool,
     caches: &mut HashMap<ExecutorId, ObjectCache>,
     index: &mut LocationIndex,
+    pend: &mut PendingIndex,
+    queue: &WaitQueue,
     rng: &mut Pcg64,
     index_s: &mut f64,
 ) -> u64 {
@@ -186,7 +220,13 @@ fn execute(
         for t in tasks {
             let cache = caches.get_mut(&exec).expect("cache exists");
             for &file in &t.files {
-                let _ = resolve_access(exec, file, 1, cache, index, rng);
+                let res = resolve_access(exec, file, 1, cache, index, rng);
+                for &old in &res.evicted {
+                    pend.on_index_remove(old, exec, queue, index);
+                }
+                if res.inserted {
+                    pend.on_index_add(file, exec);
+                }
             }
         }
         *index_s += ti.elapsed().as_secs_f64();

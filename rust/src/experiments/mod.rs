@@ -23,14 +23,14 @@ use crate::util::units::bps_to_gbps;
 
 /// Run one summary-view experiment (Figs 4–10 style).
 pub fn run_summary_experiment(cfg: &ExperimentConfig) -> RunResult {
-    log::info!(
+    crate::info!(
         "running experiment `{}` (policy {}, cache {})",
         cfg.name,
         cfg.scheduler.policy,
         crate::util::units::fmt_bytes(cfg.cache.capacity_bytes)
     );
     let r = sim::run(cfg);
-    log::info!(
+    crate::info!(
         "`{}`: WET {:.0}s, eff {:.0}%, {} events in {:.1}s wall",
         cfg.name,
         r.summary.workload_execution_time_s,

@@ -1,0 +1,256 @@
+//! Fixed-width executor bitsets.
+//!
+//! Executor ids are small dense integers (the registry hands them out
+//! sequentially; clusters are at most a few hundred nodes), so a holder
+//! set is a handful of `u64` words: membership is a mask test, replica
+//! counting is a popcount, and set iteration walks trailing-zero bits.
+//! This replaces the `BTreeSet<ExecutorId>` holder sets the scheduler
+//! §Perf profile showed as pointer-chasing hot (one probe per window
+//! entry before the inverted pending index, one per candidate after).
+//!
+//! Iteration order is ascending executor id — the same order the old
+//! sorted sets produced — so every tie-break downstream (notify scoring,
+//! peer selection) is bit-identical to the pre-bitset implementation.
+
+use crate::ids::ExecutorId;
+
+const WORD_BITS: usize = 64;
+
+/// A set of executors as a growable bitmask with a cached population
+/// count (`len` is O(1)).
+#[derive(Debug, Clone, Default)]
+pub struct ExecSet {
+    words: Vec<u64>,
+    count: u32,
+}
+
+/// Equality is by membership, not representation: `words` never shrinks,
+/// so a set that once held a high id keeps trailing zero words a fresh
+/// structurally-equal set lacks.
+impl PartialEq for ExecSet {
+    fn eq(&self, other: &ExecSet) -> bool {
+        if self.count != other.count {
+            return false;
+        }
+        let (short, long) = if self.words.len() <= other.words.len() {
+            (&self.words, &other.words)
+        } else {
+            (&other.words, &self.words)
+        };
+        short.iter().zip(long.iter()).all(|(a, b)| a == b)
+            && long[short.len()..].iter().all(|&w| w == 0)
+    }
+}
+
+impl Eq for ExecSet {}
+
+impl ExecSet {
+    /// Empty set.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn split(e: ExecutorId) -> (usize, u64) {
+        let idx = e.0 as usize;
+        (idx / WORD_BITS, 1u64 << (idx % WORD_BITS))
+    }
+
+    /// Insert `e`; returns true if it was not already present.
+    pub fn insert(&mut self, e: ExecutorId) -> bool {
+        let (w, mask) = Self::split(e);
+        if w >= self.words.len() {
+            self.words.resize(w + 1, 0);
+        }
+        let word = &mut self.words[w];
+        if *word & mask != 0 {
+            return false;
+        }
+        *word |= mask;
+        self.count += 1;
+        true
+    }
+
+    /// Remove `e`; returns true if it was present. The word array never
+    /// shrinks (sets churn around a stable cluster width).
+    pub fn remove(&mut self, e: ExecutorId) -> bool {
+        let (w, mask) = Self::split(e);
+        match self.words.get_mut(w) {
+            Some(word) if *word & mask != 0 => {
+                *word &= !mask;
+                self.count -= 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Membership test — O(1).
+    #[inline]
+    pub fn contains(&self, e: ExecutorId) -> bool {
+        let (w, mask) = Self::split(e);
+        self.words.get(w).is_some_and(|word| word & mask != 0)
+    }
+
+    /// Number of members — O(1) (cached popcount).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.count as usize
+    }
+
+    /// True when no executor is in the set.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Smallest member, if any.
+    pub fn first(&self) -> Option<ExecutorId> {
+        self.iter().next()
+    }
+
+    /// Members shared with `other` — a word-wise AND + popcount.
+    pub fn intersection_count(&self, other: &ExecSet) -> usize {
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a & b).count_ones() as usize)
+            .sum()
+    }
+
+    /// Iterate members in ascending id order.
+    pub fn iter(&self) -> ExecSetIter<'_> {
+        ExecSetIter {
+            words: &self.words,
+            word_idx: 0,
+            current: self.words.first().copied().unwrap_or(0),
+        }
+    }
+}
+
+impl<'a> IntoIterator for &'a ExecSet {
+    type Item = ExecutorId;
+    type IntoIter = ExecSetIter<'a>;
+
+    fn into_iter(self) -> ExecSetIter<'a> {
+        self.iter()
+    }
+}
+
+impl FromIterator<ExecutorId> for ExecSet {
+    fn from_iter<T: IntoIterator<Item = ExecutorId>>(iter: T) -> Self {
+        let mut s = ExecSet::new();
+        for e in iter {
+            s.insert(e);
+        }
+        s
+    }
+}
+
+/// Ascending-order iterator over an [`ExecSet`].
+pub struct ExecSetIter<'a> {
+    words: &'a [u64],
+    word_idx: usize,
+    current: u64,
+}
+
+impl Iterator for ExecSetIter<'_> {
+    type Item = ExecutorId;
+
+    fn next(&mut self) -> Option<ExecutorId> {
+        while self.current == 0 {
+            self.word_idx += 1;
+            if self.word_idx >= self.words.len() {
+                return None;
+            }
+            self.current = self.words[self.word_idx];
+        }
+        let bit = self.current.trailing_zeros();
+        self.current &= self.current - 1; // clear lowest set bit
+        Some(ExecutorId((self.word_idx * WORD_BITS) as u32 + bit))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_remove_contains_len() {
+        let mut s = ExecSet::new();
+        assert!(s.is_empty());
+        assert!(s.insert(ExecutorId(3)));
+        assert!(!s.insert(ExecutorId(3)));
+        assert!(s.insert(ExecutorId(200)));
+        assert_eq!(s.len(), 2);
+        assert!(s.contains(ExecutorId(3)));
+        assert!(s.contains(ExecutorId(200)));
+        assert!(!s.contains(ExecutorId(4)));
+        assert!(s.remove(ExecutorId(3)));
+        assert!(!s.remove(ExecutorId(3)));
+        assert!(!s.remove(ExecutorId(9999)));
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.first(), Some(ExecutorId(200)));
+    }
+
+    #[test]
+    fn equality_ignores_trailing_zero_words() {
+        let mut a = ExecSet::new();
+        a.insert(ExecutorId(64));
+        a.remove(ExecutorId(64));
+        assert_eq!(a, ExecSet::new(), "empty sets must compare equal");
+        let mut b = ExecSet::new();
+        b.insert(ExecutorId(3));
+        b.insert(ExecutorId(200));
+        b.remove(ExecutorId(200));
+        let c: ExecSet = [ExecutorId(3)].into_iter().collect();
+        assert_eq!(b, c);
+        assert_ne!(c, ExecSet::new());
+    }
+
+    #[test]
+    fn iterates_in_ascending_order() {
+        let ids = [130u32, 0, 63, 64, 5, 129];
+        let s: ExecSet = ids.iter().map(|&i| ExecutorId(i)).collect();
+        let got: Vec<u32> = s.iter().map(|e| e.0).collect();
+        assert_eq!(got, vec![0, 5, 63, 64, 129, 130]);
+    }
+
+    #[test]
+    fn intersection_count_is_popcount_and() {
+        let a: ExecSet = [0u32, 1, 64, 65].iter().map(|&i| ExecutorId(i)).collect();
+        let b: ExecSet = [1u32, 64, 200].iter().map(|&i| ExecutorId(i)).collect();
+        assert_eq!(a.intersection_count(&b), 2);
+        assert_eq!(b.intersection_count(&a), 2);
+        assert_eq!(a.intersection_count(&ExecSet::new()), 0);
+    }
+
+    #[test]
+    fn matches_btreeset_under_random_ops() {
+        use crate::util::proptest::{property, Gen};
+        use std::collections::BTreeSet;
+        property("execset vs btreeset", 100, |g: &mut Gen| {
+            let mut fast = ExecSet::new();
+            let mut slow: BTreeSet<ExecutorId> = BTreeSet::new();
+            for _ in 0..g.usize_in(1..200) {
+                let e = ExecutorId(g.u64_in(0..300) as u32);
+                if g.bool(0.6) {
+                    if fast.insert(e) != slow.insert(e) {
+                        return Err(format!("insert({e}) disagreed"));
+                    }
+                } else if fast.remove(e) != slow.remove(&e) {
+                    return Err(format!("remove({e}) disagreed"));
+                }
+                if fast.len() != slow.len() {
+                    return Err(format!("len {} != {}", fast.len(), slow.len()));
+                }
+                let a: Vec<ExecutorId> = fast.iter().collect();
+                let b: Vec<ExecutorId> = slow.iter().copied().collect();
+                if a != b {
+                    return Err(format!("order {a:?} != {b:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

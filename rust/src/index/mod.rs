@@ -5,25 +5,37 @@
 //! update messages. The scheduler's two lookups are exactly the paper's
 //! two maps:
 //!
-//! * `I_map` — file logical name → sorted set of executors caching it
-//!   ([`LocationIndex::holders`]);
-//! * `E_map` — executor name → sorted set of file names it caches
-//!   ([`LocationIndex::cached_at`]).
+//! * `I_map` — file logical name → set of executors caching it, stored as
+//!   an [`ExecSet`] **bitset** ([`LocationIndex::holders`]): membership is
+//!   a mask test, the replication factor is a cached popcount, and holder
+//!   iteration (notify scoring, peer selection) walks set bits in
+//!   ascending id order — the same deterministic order the pre-bitset
+//!   `BTreeSet` produced;
+//! * `E_map` — executor name → hash set of file names it caches
+//!   ([`LocationIndex::cached_at`]): O(1) hit-probes for the scheduler's
+//!   cache-hit scoring (§Perf iteration 3 replaced the per-probe
+//!   `BTreeSet` descent with a single hash lookup).
 //!
 //! Both directions are kept mutually consistent by construction (asserted
-//! by a property test), and all operations are O(log n) hash + btree work,
-//! matching the paper's complexity argument for scheduling decisions.
+//! by a property test). Per-file holder probes ([`LocationIndex::holds`])
+//! and replica counts ([`LocationIndex::replication`]) are O(1), matching
+//! the paper's O(|θ(κ)| + replication + min(|Q|, W)) scheduling-cost
+//! argument.
+
+pub mod execset;
+
+pub use execset::ExecSet;
 
 use crate::ids::{ExecutorId, FileId};
-use std::collections::{BTreeSet, HashMap};
+use std::collections::{HashMap, HashSet};
 
 /// The dispatcher's central file-location index (`I_map` + `E_map`).
 #[derive(Debug, Default)]
 pub struct LocationIndex {
-    /// I_map: file → executors holding it.
-    holders: HashMap<FileId, BTreeSet<ExecutorId>>,
+    /// I_map: file → executors holding it (bitset).
+    holders: HashMap<FileId, ExecSet>,
     /// E_map: executor → files it holds.
-    cached: HashMap<ExecutorId, BTreeSet<FileId>>,
+    cached: HashMap<ExecutorId, HashSet<FileId>>,
     /// Total (file, executor) replica pairs — cheap global replication stat.
     replicas: u64,
 }
@@ -42,21 +54,26 @@ impl LocationIndex {
     /// Remove an executor and all its entries (deregistration / release by
     /// the provisioner). Returns the files it held, for accounting.
     pub fn deregister_executor(&mut self, executor: ExecutorId) -> Vec<FileId> {
-        let files = self.cached.remove(&executor).unwrap_or_default();
+        let files: Vec<FileId> = self
+            .cached
+            .remove(&executor)
+            .map(|set| set.into_iter().collect())
+            .unwrap_or_default();
         for &f in &files {
             if let Some(set) = self.holders.get_mut(&f) {
-                set.remove(&executor);
-                self.replicas -= 1;
+                if set.remove(executor) {
+                    self.replicas -= 1;
+                }
                 if set.is_empty() {
                     self.holders.remove(&f);
                 }
             }
         }
-        files.into_iter().collect()
+        files
     }
 
     /// Record that `executor` now caches `file` (an executor cache-content
-    /// update message).
+    /// update message). One probe per map: both sides use the entry API.
     pub fn add(&mut self, file: FileId, executor: ExecutorId) {
         let inserted = self.holders.entry(file).or_default().insert(executor);
         self.cached.entry(executor).or_default().insert(file);
@@ -68,7 +85,7 @@ impl LocationIndex {
     /// Record that `executor` evicted `file`.
     pub fn remove(&mut self, file: FileId, executor: ExecutorId) {
         if let Some(set) = self.holders.get_mut(&file) {
-            if set.remove(&executor) {
+            if set.remove(executor) {
                 self.replicas -= 1;
             }
             if set.is_empty() {
@@ -81,18 +98,27 @@ impl LocationIndex {
     }
 
     /// I_map lookup: executors currently caching `file`.
-    pub fn holders(&self, file: FileId) -> Option<&BTreeSet<ExecutorId>> {
+    pub fn holders(&self, file: FileId) -> Option<&ExecSet> {
         self.holders.get(&file)
     }
 
+    /// Does `executor` cache `file`? One hash probe + one mask test —
+    /// the scheduler's per-candidate hit-scoring primitive.
+    #[inline]
+    pub fn holds(&self, file: FileId, executor: ExecutorId) -> bool {
+        self.holders
+            .get(&file)
+            .is_some_and(|set| set.contains(executor))
+    }
+
     /// Number of replicas of `file` (the scheduler's replication-factor
-    /// input for good-cache-compute).
+    /// input for good-cache-compute). O(1): cached popcount.
     pub fn replication(&self, file: FileId) -> usize {
         self.holders.get(&file).map_or(0, |s| s.len())
     }
 
     /// E_map lookup: files cached at `executor`.
-    pub fn cached_at(&self, executor: ExecutorId) -> Option<&BTreeSet<FileId>> {
+    pub fn cached_at(&self, executor: ExecutorId) -> Option<&HashSet<FileId>> {
         self.cached.get(&executor)
     }
 
@@ -124,20 +150,20 @@ impl LocationIndex {
     #[doc(hidden)]
     pub fn check_consistent(&self) -> Result<(), String> {
         let mut pairs = 0u64;
-        for (f, execs) in &self.holders {
+        for (&f, execs) in &self.holders {
             if execs.is_empty() {
                 return Err(format!("empty holder set for {f}"));
             }
             for e in execs {
                 pairs += 1;
-                if !self.cached.get(e).is_some_and(|s| s.contains(f)) {
+                if !self.cached.get(&e).is_some_and(|s| s.contains(&f)) {
                     return Err(format!("I_map has ({f},{e}) but E_map does not"));
                 }
             }
         }
-        for (e, files) in &self.cached {
-            for f in files {
-                if !self.holders.get(f).is_some_and(|s| s.contains(e)) {
+        for (&e, files) in &self.cached {
+            for &f in files {
+                if !self.holders.get(&f).is_some_and(|s| s.contains(e)) {
                     return Err(format!("E_map has ({e},{f}) but I_map does not"));
                 }
             }
@@ -162,8 +188,11 @@ mod tests {
         ix.add(FileId(10), ExecutorId(2));
         assert_eq!(ix.replication(FileId(10)), 2);
         assert_eq!(ix.total_replicas(), 2);
+        assert!(ix.holds(FileId(10), ExecutorId(1)));
+        assert!(!ix.holds(FileId(11), ExecutorId(1)));
         ix.remove(FileId(10), ExecutorId(1));
         assert_eq!(ix.replication(FileId(10)), 1);
+        assert!(!ix.holds(FileId(10), ExecutorId(1)));
         ix.remove(FileId(10), ExecutorId(2));
         assert_eq!(ix.replication(FileId(10)), 0);
         assert_eq!(ix.holders(FileId(10)), None);
@@ -188,6 +217,16 @@ mod tests {
         let want = [FileId(2), FileId(3), FileId(4)];
         assert_eq!(ix.hit_count(ExecutorId(9), &want), 2);
         assert_eq!(ix.hit_count(ExecutorId(8), &want), 0);
+    }
+
+    #[test]
+    fn holders_iterate_in_id_order() {
+        let mut ix = LocationIndex::new();
+        for e in [5u32, 1, 3, 200] {
+            ix.add(FileId(7), ExecutorId(e));
+        }
+        let got: Vec<u32> = ix.holders(FileId(7)).unwrap().iter().map(|e| e.0).collect();
+        assert_eq!(got, vec![1, 3, 5, 200]);
     }
 
     #[test]

@@ -21,9 +21,10 @@
 //! * a deterministic **discrete-event cluster simulator** standing in for
 //!   the ANL/UC TeraGrid testbed ([`sim`]), plus a **live execution engine**
 //!   that runs real tasks on real files with worker threads ([`live`]);
-//! * a **PJRT runtime bridge** that loads the AOT-compiled JAX/Pallas
-//!   artifacts (built once by `make artifacts`; Python is never on the
-//!   request path) ([`runtime`]);
+//! * a **runtime bridge** for the AOT-compiled JAX/Pallas artifacts
+//!   (built once by `make artifacts`; Python is never on the request
+//!   path), shipped with a dependency-free pure-Rust reference backend
+//!   so offline builds stay green ([`runtime`]);
 //! * **workload generators**, **metrics**, **report renderers** and one
 //!   [`experiments`] entry point per figure of the paper's evaluation.
 //!
@@ -61,28 +62,49 @@ pub mod workload;
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+///
+/// `Display`/`Error` are implemented by hand — the build environment is
+/// offline and the crate carries zero external dependencies (no
+/// `thiserror`).
+#[derive(Debug)]
 pub enum Error {
     /// Configuration parse/validation failure.
-    #[error("config error: {0}")]
     Config(String),
     /// Artifact (AOT HLO) missing or failed to load/compile.
-    #[error("runtime error: {0}")]
     Runtime(String),
     /// Simulation invariant violated (a bug, not a user error).
-    #[error("simulation invariant violated: {0}")]
     SimInvariant(String),
     /// Live-engine I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    /// XLA/PJRT failure.
-    #[error("xla error: {0}")]
+    Io(std::io::Error),
+    /// XLA/PJRT failure (kept for API stability; the in-tree runtime
+    /// backend is pure Rust and never produces it).
     Xla(String),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Xla(e.to_string())
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::SimInvariant(m) => write!(f, "simulation invariant violated: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
     }
 }
 

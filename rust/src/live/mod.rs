@@ -18,6 +18,7 @@
 //!   wait-queue length and retired when idle, mirroring the DRP.
 
 use crate::cache::{CacheConfig, ObjectCache};
+use crate::coordinator::pending::PendingIndex;
 use crate::coordinator::queue::{Task, WaitQueue};
 use crate::coordinator::scheduler::{DispatchPolicy, Scheduler, SchedulerConfig};
 use crate::coordinator::executor::ExecutorRegistry;
@@ -171,6 +172,7 @@ pub fn run(config: &LiveConfig, tasks: &[LiveTask]) -> Result<LiveReport> {
     let mut reg = ExecutorRegistry::new();
     let mut index = LocationIndex::new();
     let mut queue = WaitQueue::new();
+    let mut pending = PendingIndex::new();
     let mut caches: HashMap<ExecutorId, ObjectCache> = HashMap::new();
     let mut workers: HashMap<ExecutorId, WorkerHandle> = HashMap::new();
     let mut rec = Recorder::new();
@@ -230,12 +232,15 @@ pub fn run(config: &LiveConfig, tasks: &[LiveTask]) -> Result<LiveReport> {
 
     // Submit everything (batch submission, like the §5.1 microbench).
     for (i, t) in tasks.iter().enumerate() {
-        queue.push_back(Task {
+        let qref = queue.push_back(Task {
             id: TaskId(i as u64),
             files: vec![t.file],
             compute: Micros::ZERO,
             arrival: Micros::ZERO,
         });
+        if config.policy.uses_caching() {
+            pending.on_push(&queue, qref, &index);
+        }
         rec.record_arrival(Micros::ZERO, 0, 0.0);
     }
 
@@ -258,7 +263,8 @@ pub fn run(config: &LiveConfig, tasks: &[LiveTask]) -> Result<LiveReport> {
                     if queue.is_empty() {
                         break;
                     }
-                    let picked = sched.pick_tasks(exec, 1, &mut queue, &reg, &index);
+                    let picked =
+                        sched.pick_tasks(exec, 1, &mut queue, &mut pending, &reg, &index);
                     for task in picked {
                         reg.start_task(exec, now_micros(t0));
                         let file = task.files[0];
@@ -268,6 +274,14 @@ pub fn run(config: &LiveConfig, tasks: &[LiveTask]) -> Result<LiveReport> {
                             let cache = caches.get_mut(&exec).expect("cache");
                             let res =
                                 resolve_access(exec, file, size, cache, &mut index, &mut rng);
+                            // Keep the inverted pending index coherent
+                            // with the index changes just made.
+                            for &old in &res.evicted {
+                                pending.on_index_remove(old, exec, &queue, &index);
+                            }
+                            if res.inserted {
+                                pending.on_index_add(file, exec);
+                            }
                             let evicted_names: Vec<String> = res
                                 .evicted
                                 .iter()
@@ -360,16 +374,19 @@ pub fn run(config: &LiveConfig, tasks: &[LiveTask]) -> Result<LiveReport> {
                 if !retried.get(&task_id.0).copied().unwrap_or(false) {
                     retried.insert(task_id.0, true);
                     let t = &tasks[task_id.0 as usize];
-                    queue.push_back(Task {
+                    let qref = queue.push_back(Task {
                         id: task_id,
                         files: vec![t.file],
                         compute: Micros::ZERO,
                         arrival: now_micros(t0),
                     });
-                    log::warn!("task {task_id} failed ({error}); replaying");
+                    if config.policy.uses_caching() {
+                        pending.on_push(&queue, qref, &index);
+                    }
+                    crate::warn!("task {task_id} failed ({error}); replaying");
                 } else {
                     failed += 1;
-                    log::error!("task {task_id} failed twice: {error}");
+                    crate::error!("task {task_id} failed twice: {error}");
                 }
             }
         }
@@ -429,7 +446,7 @@ fn worker_main(
         {
             Ok(s) => Some(s),
             Err(e) => {
-                log::error!("worker {idx}: cannot load stacking artifact: {e}");
+                crate::error!("worker {idx}: cannot load stacking artifact: {e}");
                 None
             }
         },

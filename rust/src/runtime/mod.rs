@@ -1,12 +1,21 @@
-//! PJRT runtime bridge — loads the AOT artifacts built by
-//! `make artifacts` and executes them from the Rust request path.
+//! Runtime bridge for the AOT-compiled JAX/Pallas artifacts.
 //!
-//! Pipeline (see /opt/xla-example/load_hlo and DESIGN.md §2):
-//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
-//! `XlaComputation::from_proto` → `client.compile` → `execute`.
-//! Python never runs at request time; if `artifacts/` is missing the
-//! loaders return [`crate::Error::Runtime`] telling the user to run
-//! `make artifacts`.
+//! The original bridge executed the artifacts through PJRT
+//! (`PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `compile` → `execute`; see
+//! python/compile/aot.py for the producing side). This build environment
+//! is offline and the crate carries **zero external dependencies**, so
+//! the `xla` crate is unavailable; the same public API is provided by a
+//! **pure-Rust reference backend** implementing exactly the math the
+//! kernels were AOT'd from (`python/compile/kernels/ref.py` is the
+//! executable spec both sides mirror). Callers are agnostic: the CLI,
+//! the live engine, and `examples/astronomy_stacking.rs` compile and run
+//! unchanged, and the artifact-presence checks keep their semantics so a
+//! future PJRT backend can slot back in behind the same types.
+//!
+//! Artifacts are still located the same way: `Artifacts::open*` requires
+//! the `artifacts/manifest.txt` produced by `make artifacts`, and
+//! missing entries yield [`crate::Error::Runtime`] with guidance.
 
 use crate::model::{ModelInputs, ModelPrediction};
 use crate::{Error, Result};
@@ -24,15 +33,14 @@ pub mod shapes {
     pub const MODEL_BATCH: usize = 64;
 }
 
-/// A directory of AOT artifacts plus a shared PJRT CPU client.
+/// A directory of AOT artifacts plus the executing backend.
 pub struct Artifacts {
-    client: xla::PjRtClient,
     dir: PathBuf,
 }
 
 impl Artifacts {
-    /// Open the artifacts directory (default `artifacts/`); creates the
-    /// PJRT CPU client eagerly so failures surface early.
+    /// Open the artifacts directory (default `artifacts/`); the manifest
+    /// check surfaces a missing `make artifacts` run early.
     pub fn open(dir: impl AsRef<Path>) -> Result<Artifacts> {
         let dir = dir.as_ref().to_path_buf();
         if !dir.join("manifest.txt").exists() {
@@ -41,10 +49,7 @@ impl Artifacts {
                 dir.display()
             )));
         }
-        Ok(Artifacts {
-            client: xla::PjRtClient::cpu()?,
-            dir,
-        })
+        Ok(Artifacts { dir })
     }
 
     /// Open `artifacts/` relative to the workspace root, walking up from
@@ -65,13 +70,15 @@ impl Artifacts {
         }
     }
 
-    /// PJRT platform name (diagnostics).
+    /// Executing platform name (diagnostics).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "cpu-reference".to_string()
     }
 
-    /// Load and compile one artifact by manifest name.
-    pub fn load(&self, name: &str) -> Result<xla::PjRtLoadedExecutable> {
+    /// Check one artifact by manifest name (the PJRT backend compiled it
+    /// here; the reference backend validates presence so missing-artifact
+    /// errors keep their shape).
+    pub fn load(&self, name: &str) -> Result<()> {
         let path = self.dir.join(format!("{name}.hlo.txt"));
         if !path.exists() {
             return Err(Error::Runtime(format!(
@@ -79,26 +86,19 @@ impl Artifacts {
                 path.display()
             )));
         }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        Ok(self.client.compile(&comp)?)
+        Ok(())
     }
 
     /// Load the astronomy stacking pipeline.
     pub fn stacking(&self) -> Result<StackingExecutable> {
-        Ok(StackingExecutable {
-            exe: self.load("stacking")?,
-        })
+        self.load("stacking")?;
+        Ok(StackingExecutable { _priv: () })
     }
 
     /// Load the batched abstract-model evaluator.
     pub fn model_eval(&self) -> Result<ModelEvalExecutable> {
-        Ok(ModelEvalExecutable {
-            exe: self.load("model_eval")?,
-        })
+        self.load("model_eval")?;
+        Ok(ModelEvalExecutable { _priv: () })
     }
 }
 
@@ -113,9 +113,10 @@ pub struct StackResult {
     pub peak: f32,
 }
 
-/// The compiled astronomy stacking pipeline (L2+L1 in one HLO module).
+/// The astronomy stacking pipeline (L2+L1 fused in the AOT module; the
+/// reference backend computes the identical normalized weighted sum).
 pub struct StackingExecutable {
-    exe: xla::PjRtLoadedExecutable,
+    _priv: (),
 }
 
 impl StackingExecutable {
@@ -134,113 +135,47 @@ impl StackingExecutable {
                 STACK_N
             )));
         }
-        let mut cut = vec![0.0f32; STACK_N * frame];
-        cut[..cutouts.len()].copy_from_slice(cutouts);
-        let mut w = vec![0.0f32; STACK_N];
-        w[..n].copy_from_slice(weights);
-
-        let x = xla::Literal::vec1(&cut).reshape(&[
-            STACK_N as i64,
-            STACK_H as i64,
-            STACK_W as i64,
-        ])?;
-        let wl = xla::Literal::vec1(&w);
-        let result = self.exe.execute::<xla::Literal>(&[x, wl])?[0][0].to_literal_sync()?;
-        let (img, mean, peak) = result.to_tuple3()?;
-        Ok(StackResult {
-            image: img.to_vec::<f32>()?,
-            mean: mean.get_first_element::<f32>()?,
-            peak: peak.get_first_element::<f32>()?,
-        })
+        // Normalized weighted sum, accumulated cutout-major like the
+        // kernel (f32 throughout, so results track the AOT path bit-close).
+        let total: f32 = weights.iter().sum();
+        let mut image = vec![0.0f32; frame];
+        for (i, w) in weights.iter().enumerate() {
+            for p in 0..frame {
+                image[p] += w * cutouts[i * frame + p];
+            }
+        }
+        if total != 0.0 {
+            for p in image.iter_mut() {
+                *p /= total;
+            }
+        }
+        let mean = image.iter().sum::<f32>() / frame as f32;
+        let peak = image.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        Ok(StackResult { image, mean, peak })
     }
 }
 
-/// The compiled batched model evaluator.
+/// The batched abstract-model evaluator.
 pub struct ModelEvalExecutable {
-    exe: xla::PjRtLoadedExecutable,
+    _priv: (),
 }
 
 impl ModelEvalExecutable {
-    /// Evaluate model points via the AOT'd JAX/Pallas kernel; slices
-    /// longer than [`shapes::MODEL_BATCH`] are processed in chunks.
+    /// Evaluate model points. The reference backend applies the Rust
+    /// model directly (the AOT kernel implements the same closed-form
+    /// equations in f32; see `python/compile/kernels/model_eval.py`).
     pub fn eval(&self, inputs: &[ModelInputs]) -> Result<Vec<ModelPrediction>> {
-        let mut out = Vec::with_capacity(inputs.len());
-        for chunk in inputs.chunks(shapes::MODEL_BATCH) {
-            out.extend(self.eval_chunk(chunk)?);
-        }
-        Ok(out)
-    }
-
-    fn eval_chunk(&self, inputs: &[ModelInputs]) -> Result<Vec<ModelPrediction>> {
-        use shapes::MODEL_BATCH;
-        let n = inputs.len();
-        debug_assert!(n <= MODEL_BATCH);
-        // Pad with a benign point (all ones) to the fixed batch size.
-        let mut cols = vec![vec![1.0f32; MODEL_BATCH]; 9];
-        for (i, inp) in inputs.iter().enumerate() {
-            let inv_a = if inp.arrival_rate.is_finite() && inp.arrival_rate > 0.0 {
-                1.0 / inp.arrival_rate
-            } else {
-                0.0
-            };
-            let vals = [
-                inp.num_tasks,
-                inp.cpus,
-                inp.mu_s,
-                inp.overhead_s,
-                inp.object_bytes,
-                inv_a,
-                inp.persistent_bps,
-                inp.transient_bps,
-                inp.p_miss,
-            ];
-            for (c, v) in vals.iter().enumerate() {
-                cols[c][i] = *v as f32;
-            }
-        }
-        let literals: Vec<xla::Literal> = cols.iter().map(|c| xla::Literal::vec1(c)).collect();
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        let outs = result.to_tuple()?;
-        if outs.len() != 7 {
-            return Err(Error::Runtime(format!(
-                "model_eval returned {} outputs, expected 7",
-                outs.len()
-            )));
-        }
-        let get = |lit: &xla::Literal| -> Result<Vec<f32>> { Ok(lit.to_vec::<f32>()?) };
-        let v = get(&outs[0])?;
-        let y = get(&outs[1])?;
-        let w = get(&outs[2])?;
-        let e = get(&outs[3])?;
-        let s = get(&outs[4])?;
-        let omega = get(&outs[5])?;
-        let zeta = get(&outs[6])?;
-        Ok((0..n)
-            .map(|i| ModelPrediction {
-                b: inputs[i].mu_s,
-                intensity: if inputs[i].arrival_rate.is_finite() {
-                    inputs[i].mu_s * inputs[i].arrival_rate
-                } else {
-                    f64::INFINITY
-                },
-                v: v[i] as f64,
-                y: y[i] as f64,
-                w: w[i] as f64,
-                efficiency: e[i] as f64,
-                speedup: s[i] as f64,
-                omega_pi: omega[i] as f64,
-                zeta_s: zeta[i] as f64,
-            })
-            .collect())
+        Ok(inputs.iter().map(crate::model::predict).collect())
     }
 }
 
 #[cfg(test)]
 mod tests {
-    //! These tests require `make artifacts` to have run; they are part
-    //! of `make test` (artifacts are a build prerequisite). If artifacts
-    //! are absent the tests are skipped with a notice rather than
-    //! failing, so `cargo test` alone stays green in a fresh checkout.
+    //! These tests require `make artifacts` to have run (the manifest
+    //! gates the loaders even under the reference backend, keeping the
+    //! missing-artifact UX honest). If artifacts are absent the tests
+    //! are skipped with a notice rather than failing, so `cargo test`
+    //! alone stays green in a fresh checkout.
     use super::*;
 
     fn artifacts() -> Option<Artifacts> {
@@ -272,7 +207,7 @@ mod tests {
     #[test]
     fn stacking_matches_cpu_reference() {
         let Some(a) = artifacts() else { return };
-        let exe = a.stacking().expect("compile stacking");
+        let exe = a.stacking().expect("load stacking");
         use shapes::{STACK_H, STACK_N, STACK_W};
         let frame = STACK_H * STACK_W;
         let mut rng = crate::util::prng::Pcg64::seeded(99);
@@ -304,7 +239,7 @@ mod tests {
     #[test]
     fn stacking_pads_short_batches() {
         let Some(a) = artifacts() else { return };
-        let exe = a.stacking().expect("compile stacking");
+        let exe = a.stacking().expect("load stacking");
         use shapes::{STACK_H, STACK_W};
         let frame = STACK_H * STACK_W;
         let cutouts = vec![2.0f32; 3 * frame];
@@ -318,52 +253,55 @@ mod tests {
     #[test]
     fn stacking_rejects_mismatched_inputs() {
         let Some(a) = artifacts() else { return };
-        let exe = a.stacking().expect("compile stacking");
+        let exe = a.stacking().expect("load stacking");
         assert!(exe.stack(&[0.0; 10], &[1.0; 3]).is_err());
     }
 
     #[test]
-    fn model_eval_agrees_with_rust_model() {
+    fn model_eval_preserves_order_and_shape() {
+        // NOTE: the reference backend routes through
+        // `crate::model::predict`, so a value-level comparison against
+        // `predict` would be circular (the pre-change test cross-checked
+        // the independent f32 AOT kernel; that check must return with a
+        // real PJRT backend). What is meaningful here: batching/order
+        // preservation across the MODEL_BATCH chunk boundary, and sane
+        // monotone structure of the outputs.
         let Some(a) = artifacts() else { return };
-        let exe = a.model_eval().expect("compile model_eval");
-        // A spread of model points, including batch (inv_a = 0) and
-        // rate-limited cases — f32 kernel vs f64 Rust: 2% tolerance.
-        let mut points = Vec::new();
-        for &cpus in &[2.0, 16.0, 128.0] {
-            for &p_miss in &[0.0, 0.04, 0.5, 1.0] {
-                for &rate in &[f64::INFINITY, 50.0] {
-                    points.push(ModelInputs {
-                        num_tasks: 10_000.0,
-                        cpus,
-                        mu_s: 0.1,
-                        overhead_s: 0.005,
-                        object_bytes: 5e6,
-                        arrival_rate: rate,
-                        persistent_bps: 5.5e8,
-                        transient_bps: 2e8,
-                        p_miss,
-                        p_local: 1.0 - p_miss,
-                    });
-                }
-            }
-        }
+        let exe = a.model_eval().expect("load model_eval");
+        // MODEL_BATCH + 7 points forces a second chunk in a PJRT-style
+        // batched backend; outputs must stay aligned with inputs.
+        let n = shapes::MODEL_BATCH + 7;
+        let points: Vec<ModelInputs> = (0..n)
+            .map(|i| ModelInputs {
+                num_tasks: 10_000.0,
+                cpus: (1 + i) as f64,
+                mu_s: 0.1,
+                overhead_s: 0.005,
+                object_bytes: 5e6,
+                arrival_rate: f64::INFINITY,
+                persistent_bps: 5.5e8,
+                transient_bps: 2e8,
+                p_miss: 0.04,
+                p_local: 0.96,
+            })
+            .collect();
         let got = exe.eval(&points).expect("execute");
         assert_eq!(got.len(), points.len());
-        for (inp, g) in points.iter().zip(&got) {
-            let want = crate::model::predict(inp);
-            let close = |a: f64, b: f64, what: &str| {
-                let denom = b.abs().max(1e-9);
-                assert!(
-                    (a - b).abs() / denom < 0.02,
-                    "{what}: pjrt {a} vs rust {b} (cpus={}, p_miss={})",
-                    inp.cpus,
-                    inp.p_miss
-                );
-            };
-            close(g.w, want.w, "W");
-            close(g.v, want.v, "V");
-            close(g.efficiency, want.efficiency, "E");
-            close(g.speedup, want.speedup, "S");
+        for w in got.windows(2) {
+            assert!(
+                w[1].speedup >= w[0].speedup - 1e-9,
+                "speedup must not decrease with cpus: {} then {}",
+                w[0].speedup,
+                w[1].speedup
+            );
+        }
+        for (i, g) in got.iter().enumerate() {
+            assert!(
+                g.efficiency > 0.0 && g.efficiency <= 1.0 + 1e-9,
+                "point {i}: efficiency {} out of range",
+                g.efficiency
+            );
+            assert!(g.w.is_finite() && g.w > 0.0, "point {i}: W {}", g.w);
         }
     }
 }

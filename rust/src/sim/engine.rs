@@ -22,6 +22,7 @@ use super::flow::{FlowNet, LinkId};
 use crate::cache::ObjectCache;
 use crate::config::ExperimentConfig;
 use crate::coordinator::executor::ExecutorRegistry;
+use crate::coordinator::pending::PendingIndex;
 use crate::coordinator::provisioner::Provisioner;
 use crate::coordinator::queue::{Task, WaitQueue};
 use crate::coordinator::scheduler::{NotifyOutcome, Scheduler, SchedulerStats};
@@ -133,6 +134,9 @@ struct Engine {
     reg: ExecutorRegistry,
     queue: WaitQueue,
     index: LocationIndex,
+    /// Inverted pending-task index (maintained for caching policies only;
+    /// kept coherent with `queue` + `index` at every mutation site).
+    pending: PendingIndex,
     prov: Provisioner,
     caches: HashMap<ExecutorId, ObjectCache>,
     // Cluster substrate.
@@ -166,6 +170,7 @@ pub fn run(cfg: &ExperimentConfig) -> RunResult {
         reg: ExecutorRegistry::new(),
         queue: WaitQueue::new(),
         index: LocationIndex::new(),
+        pending: PendingIndex::new(),
         prov: Provisioner::new(cfg.provisioner.clone(), cfg.cluster.max_nodes),
         caches: HashMap::new(),
         flow: FlowNet::new(),
@@ -322,6 +327,7 @@ impl Engine {
         }
         if self.cfg.scheduler.policy.uses_caching() {
             self.index.deregister_executor(id);
+            self.pending.on_deregister(id);
             self.caches.remove(&id);
         }
         self.node_links.remove(&id);
@@ -359,7 +365,10 @@ impl Engine {
             .get(spec.interval as usize)
             .map_or(0.0, |&(_, r)| r);
         self.rec.record_arrival(self.clock, spec.interval, rate);
-        self.queue.push_back(task);
+        let qref = self.queue.push_back(task);
+        if self.cfg.scheduler.policy.uses_caching() {
+            self.pending.on_push(&self.queue, qref, &self.index);
+        }
 
         // Phase 1: try to notify an executor for the head task.
         self.notify_for_head();
@@ -402,9 +411,14 @@ impl Engine {
             .max_tasks_per_pickup
             .min(1 + free_extra)
             .max(1);
-        let tasks = self
-            .sched
-            .pick_tasks(exec, limit, &mut self.queue, &self.reg, &self.index);
+        let tasks = self.sched.pick_tasks(
+            exec,
+            limit,
+            &mut self.queue,
+            &mut self.pending,
+            &self.reg,
+            &self.index,
+        );
         if tasks.is_empty() {
             self.reg.cancel_pending(exec);
             return;
@@ -461,6 +475,15 @@ impl Engine {
                     &mut self.index,
                     &mut self.rng_cache,
                 );
+                // Keep the inverted pending index coherent with the
+                // index mutations resolve_access just made.
+                for &old in &res.evicted {
+                    self.pending
+                        .on_index_remove(old, exec, &self.queue, &self.index);
+                }
+                if res.inserted {
+                    self.pending.on_index_add(file, exec);
+                }
                 let path = match (res.kind, res.peer) {
                     (AccessKind::HitLocal, _) => vec![links.disk],
                     (AccessKind::HitGlobal, Some(p)) => {

@@ -118,6 +118,11 @@ impl Bench {
         );
     }
 
+    /// Group name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
     /// All measurements taken so far.
     pub fn results(&self) -> &[Measurement] {
         &self.results
@@ -142,6 +147,55 @@ impl Bench {
         std::fs::write(&path, out)?;
         Ok(path)
     }
+}
+
+/// Serialize bench groups as a JSON snapshot (the `BENCH_baseline.json`
+/// schema): future PRs regenerate the file with the same bench binary and
+/// diff the numbers to track the perf trajectory.
+///
+/// The crate is dependency-free, so the writer is hand-rolled; labels are
+/// plain ASCII and escaped minimally.
+pub fn baseline_json(bench_name: &str, groups: &[&Bench]) -> String {
+    fn esc(s: &str) -> String {
+        s.replace('\\', "\\\\").replace('"', "\\\"")
+    }
+    fn num(x: f64) -> String {
+        if x.is_finite() {
+            format!("{x:e}")
+        } else {
+            "null".to_string()
+        }
+    }
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": 1,\n");
+    out.push_str(&format!("  \"bench\": \"{}\",\n", esc(bench_name)));
+    out.push_str("  \"unit\": \"seconds_per_iteration\",\n");
+    out.push_str("  \"groups\": [\n");
+    for (gi, g) in groups.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"cases\": [\n",
+            esc(g.name())
+        ));
+        for (ci, m) in g.results().iter().enumerate() {
+            out.push_str(&format!(
+                "      {{\"label\": \"{}\", \"mean_s\": {}, \"stddev_s\": {}, \
+                 \"per_sec\": {}, \"items_per_sec\": {}}}{}\n",
+                esc(&m.label),
+                num(m.mean_s),
+                num(m.stddev_s),
+                num(m.per_sec),
+                m.items_per_sec.map_or("null".to_string(), num),
+                if ci + 1 < g.results().len() { "," } else { "" },
+            ));
+        }
+        out.push_str(&format!(
+            "    ]}}{}\n",
+            if gi + 1 < groups.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
 }
 
 /// Format a duration in engineering units.
@@ -180,6 +234,22 @@ mod tests {
         assert!(m.mean_s > 0.0);
         assert!(m.items_per_sec.unwrap() > 0.0);
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn baseline_json_is_well_formed() {
+        let mut b = Bench::new("json selftest")
+            .samples(2)
+            .min_sample_duration(Duration::from_millis(1));
+        let mut acc = 0u64;
+        b.iter("case \"quoted\"", 10, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        let j = baseline_json("selftest", &[&b]);
+        assert!(j.contains("\"bench\": \"selftest\""));
+        assert!(j.contains("\\\"quoted\\\""));
+        assert!(j.contains("\"mean_s\": "));
+        assert!(j.trim_end().ends_with('}'));
     }
 
     #[test]

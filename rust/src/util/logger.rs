@@ -1,62 +1,156 @@
-//! Minimal `log` backend (offline replacement for `env_logger`).
+//! Minimal leveled logging facade — the offline replacement for the
+//! `log` + `env_logger` crates, keeping the crate dependency-free.
 //!
 //! Level is controlled by `DATADIFF_LOG` (`error|warn|info|debug|trace`,
 //! default `info`). Output goes to stderr so report tables on stdout stay
-//! machine-parseable.
+//! machine-parseable. Call sites use the crate-root macros:
+//! `crate::info!(...)`, `crate::warn!(...)`, `crate::error!(...)`.
 
-use log::{Level, LevelFilter, Metadata, Record};
+use std::fmt;
 use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
 
-struct StderrLogger {
-    level: LevelFilter,
+/// Log severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Unrecoverable or data-losing conditions.
+    Error = 1,
+    /// Suspicious but recovered conditions (task replays, skipped work).
+    Warn = 2,
+    /// High-level progress (experiment start/finish).
+    Info = 3,
+    /// Per-decision detail.
+    Debug = 4,
+    /// Firehose.
+    Trace = 5,
 }
 
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= self.level
-    }
-
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let tag = match record.level() {
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
             Level::Info => "INFO ",
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
-        };
-        let mut err = std::io::stderr().lock();
-        let _ = writeln!(err, "[{tag}] {}: {}", record.target(), record.args());
-    }
-
-    fn flush(&self) {
-        let _ = std::io::stderr().flush();
+        }
     }
 }
 
-/// Install the logger (idempotent; later calls are no-ops).
+/// Current maximum emitted level (atomic: worker threads log lock-free).
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Install the logger: reads `DATADIFF_LOG` and sets the level.
+/// Idempotent; later calls simply re-read the environment.
 pub fn init() {
     let level = match std::env::var("DATADIFF_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        _ => LevelFilter::Info,
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
     };
-    let logger = Box::new(StderrLogger { level });
-    if log::set_boxed_logger(logger).is_ok() {
-        log::set_max_level(level);
+    set_max_level(level);
+}
+
+/// Override the level programmatically (tests, examples).
+pub fn set_max_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Would a record at `level` be emitted?
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one record. Prefer the crate-root macros at call sites; they
+/// capture `module_path!()` as the target and defer formatting until the
+/// level check passes.
+pub fn log(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
     }
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{}] {}: {}", level.tag(), target, args);
+}
+
+/// Log at [`Level::Error`].
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log(
+            $crate::util::logger::Level::Error,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at [`Level::Warn`].
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log(
+            $crate::util::logger::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at [`Level::Info`].
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log(
+            $crate::util::logger::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at [`Level::Debug`].
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log(
+            $crate::util::logger::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at [`Level::Trace`].
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log(
+            $crate::util::logger::Level::Trace,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
+    // One test only: the level is process-global, and parallel test
+    // threads mutating it would race.
     #[test]
-    fn init_is_idempotent() {
-        super::init();
-        super::init();
-        log::info!("logger smoke test");
+    fn init_and_level_gating() {
+        init();
+        init();
+        crate::info!("logger smoke test");
+        set_max_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_max_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
     }
 }

@@ -13,7 +13,9 @@
 //!   the `rust/benches/*` binaries.
 //! * [`proptest`] — a miniature property-testing harness with input
 //!   shrinking, used by the test suites.
-//! * [`logger`] — a tiny `log` backend writing to stderr.
+//! * [`logger`] — a tiny leveled logging facade writing to stderr (the
+//!   `log` crate replacement; see the crate-root `info!`/`warn!`/`error!`
+//!   macros).
 
 pub mod bench;
 pub mod logger;

@@ -4,8 +4,7 @@
 //! the runner executes it for many random seeds and, on failure, reports
 //! the failing seed so the case can be replayed deterministically:
 //!
-//! ```no_run
-//! # // no_run: doctest binaries miss the xla rpath in this environment
+//! ```
 //! use datadiffusion::util::proptest::{property, Gen};
 //!
 //! property("reverse twice is identity", 200, |g: &mut Gen| {
