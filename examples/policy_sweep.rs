@@ -5,67 +5,41 @@
 //! configuration (1 GB caches — the thrashing regime, where eviction
 //! choice matters most) and sweeps all five dispatch policies at 4 GB.
 //!
-//!     cargo run --release --example policy_sweep [--quick]
+//! The configs and tables live in `experiments::sweeps` (the figure
+//! registry runs the same sweeps in CI); this wrapper fans the nine
+//! independent runs out across worker threads.
+//!
+//!     cargo run --release --example policy_sweep [--quick] [--jobs N]
 
-use datadiffusion::cache::EvictionPolicy;
-use datadiffusion::config::ExperimentConfig;
-use datadiffusion::coordinator::scheduler::DispatchPolicy;
-use datadiffusion::experiments::run_summary_experiment;
-use datadiffusion::report::{f, pct, Table};
+use datadiffusion::experiments::{registry, sweeps};
+use datadiffusion::util::par;
 
 fn main() {
     datadiffusion::util::logger::init();
-    let quick = std::env::args().any(|a| a == "--quick");
-    let scale = if quick { 10 } else { 1 };
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let scale = if quick { 0.1 } else { 1.0 };
+    let jobs = args
+        .iter()
+        .position(|a| a == "--jobs")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or_else(par::default_jobs);
 
-    // --- 1. Eviction ablation on the cache-thrashing configuration.
-    let mut evict_table = Table::new(
-        "eviction-policy ablation (good-cache-compute, 1GB caches — paper future work §6)",
-        &["eviction", "WET(s)", "efficiency", "hit-local", "miss"],
-    );
-    for policy in [
-        EvictionPolicy::Lru,
-        EvictionPolicy::Lfu,
-        EvictionPolicy::Fifo,
-        EvictionPolicy::Random,
-    ] {
-        let mut cfg = ExperimentConfig::paper_fig(5).unwrap();
-        cfg.name = format!("evict-{}", policy.name());
-        cfg.cache.policy = policy;
-        cfg.workload.num_tasks /= scale;
-        let r = run_summary_experiment(&cfg);
-        evict_table.row(vec![
-            policy.name().into(),
-            f(r.summary.workload_execution_time_s, 0),
-            pct(r.summary.efficiency),
-            pct(r.summary.hit_local_rate),
-            pct(r.summary.miss_rate),
-        ]);
-    }
+    // Both sweeps share one fan-out; results come back in config order,
+    // so the tables are identical for any job count.
+    let evict_cfgs = sweeps::eviction_configs(scale);
+    let n_evict = evict_cfgs.len();
+    let mut cfgs = evict_cfgs;
+    cfgs.extend(sweeps::dispatch_configs(scale));
+    let mut results = registry::run_configs(cfgs, jobs);
+    let dispatch_results = results.split_off(n_evict);
+
+    let evict_table = sweeps::eviction_table(&results);
     evict_table.print();
     let _ = evict_table.write_csv("policy_sweep_eviction");
 
-    // --- 2. Dispatch-policy sweep at 4 GB caches.
-    let mut dispatch_table = Table::new(
-        "dispatch-policy sweep (4GB caches)",
-        &["policy", "WET(s)", "efficiency", "hit-local", "hit-global", "miss", "cpu-util"],
-    );
-    for policy in DispatchPolicy::ALL {
-        let mut cfg = ExperimentConfig::paper_fig(8).unwrap();
-        cfg.name = format!("dispatch-{policy}");
-        cfg.scheduler.policy = policy;
-        cfg.workload.num_tasks /= scale;
-        let r = run_summary_experiment(&cfg);
-        dispatch_table.row(vec![
-            policy.name().into(),
-            f(r.summary.workload_execution_time_s, 0),
-            pct(r.summary.efficiency),
-            pct(r.summary.hit_local_rate),
-            pct(r.summary.hit_global_rate),
-            pct(r.summary.miss_rate),
-            pct(r.summary.avg_cpu_utilization),
-        ]);
-    }
+    let dispatch_table = sweeps::dispatch_table(&dispatch_results);
     dispatch_table.print();
     let _ = dispatch_table.write_csv("policy_sweep_dispatch");
 }

@@ -2,15 +2,20 @@
 //!
 //! Covers the L3 hot paths: scheduler decisions (indexed pickup vs the
 //! retained reference window scan), wait-queue window ops, cache churn,
-//! flow-network transfer churn, plus the whole-simulation event rate.
-//! Run before/after every optimization:
+//! flow-network transfer churn (batched vs per-event reference rerating),
+//! plus the whole-simulation event rate. Run before/after every
+//! optimization:
 //!
 //!     cargo bench --bench perf_hotpath
 //!
 //! Results also land as JSON under `target/bench-results/perf_hotpath.json`;
 //! with `DATADIFF_BENCH_BASELINE=1` the snapshot is written to
 //! `BENCH_baseline.json` at the workspace root (the committed perf
-//! trajectory — see that file's header).
+//! trajectory — see that file's header). Besides wall times, the snapshot
+//! carries **deterministic work counters** (tasks inspected per pickup,
+//! boundary-cursor steps, flow rerates per event); `tools/bench_gate.py`
+//! gates CI on those and on within-run speedup ratios, which shared-runner
+//! noise cannot fake.
 
 use datadiffusion::cache::{CacheConfig, EvictionPolicy, ObjectCache};
 use datadiffusion::config::ExperimentConfig;
@@ -20,23 +25,28 @@ use datadiffusion::coordinator::queue::{Task, WaitQueue};
 use datadiffusion::coordinator::scheduler::{DispatchPolicy, Scheduler, SchedulerConfig};
 use datadiffusion::ids::{ExecutorId, FileId, TaskId};
 use datadiffusion::index::LocationIndex;
-use datadiffusion::sim::flow::FlowNet;
+use datadiffusion::sim::flow::{FlowNet, RerateMode};
 use datadiffusion::util::bench::{baseline_json, black_box, Bench};
 use datadiffusion::util::prng::Pcg64;
 use datadiffusion::util::time::Micros;
 
 fn main() {
     datadiffusion::util::logger::init();
+    let mut counters: Vec<(String, f64)> = Vec::new();
     let groups = vec![
-        bench_scheduler_decision(),
+        bench_scheduler_decision(&mut counters),
         bench_scheduler_reference_scan(),
-        bench_waitqueue(),
+        bench_waitqueue(&mut counters),
         bench_cache(),
-        bench_flownet(),
+        bench_flownet(&mut counters),
         bench_whole_sim(),
     ];
+    println!("\n== counters (deterministic work metrics) ==");
+    for (k, v) in &counters {
+        println!("  {k:<52} {v:.4}");
+    }
     let refs: Vec<&Bench> = groups.iter().collect();
-    let json = baseline_json("perf_hotpath", &refs);
+    let json = baseline_json("perf_hotpath", &refs, &counters);
     let out = std::path::Path::new("target/bench-results");
     let _ = std::fs::create_dir_all(out);
     let _ = std::fs::write(out.join("perf_hotpath.json"), &json);
@@ -89,7 +99,7 @@ fn sched_fixture(caching: bool) -> SchedFixture {
 
 /// One phase-2 pickup on a warm 64-node cluster with a deep queue —
 /// the indexed (sub-linear) path the engines run.
-fn bench_scheduler_decision() -> Bench {
+fn bench_scheduler_decision(counters: &mut Vec<(String, f64)>) -> Bench {
     let mut b = Bench::new("scheduler pick_tasks (64 nodes, warm index)");
     for policy in [
         DispatchPolicy::FirstAvailable,
@@ -127,6 +137,9 @@ fn bench_scheduler_decision() -> Bench {
             per_pickup,
             sched.window_size(&fx.reg)
         );
+        if policy.uses_caching() {
+            counters.push((format!("inspected_per_pickup/{}", policy.name()), per_pickup));
+        }
     }
     let _ = b.write_csv();
     b
@@ -165,7 +178,7 @@ fn bench_scheduler_reference_scan() -> Bench {
     b
 }
 
-fn bench_waitqueue() -> Bench {
+fn bench_waitqueue(counters: &mut Vec<(String, f64)>) -> Bench {
     let mut b = Bench::new("wait-queue ops");
     let mut q = WaitQueue::new();
     for i in 0..100_000u64 {
@@ -191,6 +204,25 @@ fn bench_waitqueue() -> Bench {
         q.push_back(t);
         black_box(q.window_boundary_seq(3200));
     });
+    // ROADMAP "scheduler stats for boundary cursor": cold seeks must stay
+    // rare and warm repositioning ~O(1) steps per query, or the
+    // sub-linear pickup's amortization argument has regressed.
+    let bs = &q.boundary_stats;
+    println!(
+        "    boundary cursor: {} queries, {} cold seeks ({} steps), \
+         {:.3} amortized steps/query",
+        bs.queries,
+        bs.cold_seeks,
+        bs.cold_seek_steps,
+        bs.amortized_steps_per_query()
+    );
+    counters.push(("boundary/queries".into(), bs.queries as f64));
+    counters.push(("boundary/cold_seeks".into(), bs.cold_seeks as f64));
+    counters.push(("boundary/cold_seek_steps".into(), bs.cold_seek_steps as f64));
+    counters.push((
+        "boundary/amortized_steps_per_query".into(),
+        bs.amortized_steps_per_query(),
+    ));
     let _ = b.write_csv();
     b
 }
@@ -217,26 +249,50 @@ fn bench_cache() -> Bench {
     b
 }
 
-fn bench_flownet() -> Bench {
+fn mode_name(mode: RerateMode) -> &'static str {
+    match mode {
+        RerateMode::Batched => "batched",
+        RerateMode::Reference => "reference",
+    }
+}
+
+/// Transfer churn on a shared bottleneck link: the batched rerate path
+/// (what the engine runs) against the retained per-event reference. The
+/// per-event work counters are deterministic, so the CI gate asserts
+/// batched ≤ reference regardless of machine noise.
+fn bench_flownet(counters: &mut Vec<(String, f64)>) -> Bench {
     let mut b = Bench::new("flow network transfer churn");
-    for concurrency in [16usize, 128] {
-        let mut net = FlowNet::new();
-        let gpfs = net.add_link(5.5e8);
-        let nics: Vec<_> = (0..64).map(|_| net.add_link(1.25e8)).collect();
-        let mut now = Micros::ZERO;
-        let mut i = 0u64;
-        // Prime with `concurrency` in-flight transfers.
-        for _ in 0..concurrency {
-            net.start(now, 10_000_000, &[gpfs, nics[(i % 64) as usize]], i);
-            i += 1;
+    for mode in [RerateMode::Batched, RerateMode::Reference] {
+        for concurrency in [16usize, 128] {
+            let mut net = FlowNet::with_mode(mode);
+            let gpfs = net.add_link(5.5e8);
+            let nics: Vec<_> = (0..64).map(|_| net.add_link(1.25e8)).collect();
+            let mut now = Micros::ZERO;
+            let mut i = 0u64;
+            // Prime with `concurrency` in-flight transfers.
+            for _ in 0..concurrency {
+                net.start(now, 10_000_000, &[gpfs, nics[(i % 64) as usize]], i);
+                i += 1;
+            }
+            let mut events = 0u64;
+            let label = format!("{} start+complete @ {concurrency} concurrent", mode_name(mode));
+            b.iter(&label, 1, || {
+                let t = net.next_completion().expect("in flight");
+                now = t;
+                net.pop_completion(t);
+                net.start(now, 10_000_000, &[gpfs, nics[(i % 64) as usize]], i);
+                i += 1;
+                events += 2;
+            });
+            counters.push((
+                format!("flow/{}_rerates_per_event@{concurrency}", mode_name(mode)),
+                net.stats.transfer_rerates as f64 / events.max(1) as f64,
+            ));
+            counters.push((
+                format!("flow/{}_heap_updates_per_event@{concurrency}", mode_name(mode)),
+                net.stats.heap_updates as f64 / events.max(1) as f64,
+            ));
         }
-        b.iter(&format!("start+complete @ {concurrency} concurrent"), 1, || {
-            let t = net.next_completion().expect("in flight");
-            now = t;
-            net.pop_completion(t);
-            net.start(now, 10_000_000, &[gpfs, nics[(i % 64) as usize]], i);
-            i += 1;
-        });
     }
     let _ = b.write_csv();
     b

@@ -5,17 +5,18 @@
 //!
 //! * `run (--fig N | --config FILE) [--view SECS] [--csv]` — run one
 //!   experiment and print its summary view;
-//! * `figures [--scale X]` — regenerate every paper figure (2–15);
-//! * `fig2|fig3|fig4-10|fig11|fig12|fig13|fig14|fig15 [--scale X]` —
-//!   regenerate a single figure;
+//! * `figures [--scale X] [--quick] [--jobs N] [--check]` — regenerate
+//!   every paper figure (2–15) plus the §6 sweeps through the figure
+//!   registry, fanning independent runs out across `N` workers;
+//! * `fig2|fig3|fig4-10|fig11|fig12|fig13|fig14|fig15|sweeps` —
+//!   regenerate a single figure (same flags);
 //! * `validate-model [--pjrt]` — model-vs-simulator validation, with
 //!   `--pjrt` evaluating the model through the AOT JAX/Pallas artifact;
 //! * `artifacts-check` — verify the AOT artifacts load and execute;
 //! * `help` — usage.
 
 use crate::config::ExperimentConfig;
-use crate::experiments::{self, fig02, fig03, fig04_10, fig11, fig12, fig13, fig14, fig15};
-use crate::report::Table;
+use crate::experiments::{self, fig02, registry};
 use crate::{Error, Result};
 
 /// Usage text.
@@ -24,15 +25,21 @@ datadiff — data diffusion (Raicu et al. 2008) reproduction
 
 USAGE:
   datadiff run (--fig N | --config FILE) [--view SECS] [--csv]
-  datadiff figures [--scale X]         regenerate Figures 2-15
-  datadiff fig2|fig3|fig4-10|fig11|fig12|fig13|fig14|fig15 [--scale X]
+  datadiff figures [--scale X] [--quick] [--jobs N] [--check]
+                                       regenerate Figures 2-15 + sweeps
+  datadiff fig2|fig3|fig4-10|fig11|fig12|fig13|fig14|fig15|sweeps
+                                       one figure (same flags as figures)
   datadiff validate-model [--pjrt]     model vs simulator (Figure 2 core)
   datadiff artifacts-check             verify AOT artifacts (PJRT)
   datadiff help
 
 Figures 4-10 presets: 4=first-available/GPFS, 5-8=good-cache-compute with
 1/1.5/2/4GB caches, 9=max-cache-hit, 10=max-compute-util. --scale shrinks
-workloads for quick runs (default 1.0 = paper scale).";
+workloads for quick runs (default 1.0 = paper scale); --quick is shorthand
+for --scale 0.02 (the CI smoke scale). --jobs N fans independent runs out
+across N threads (default: all cores; merged tables are byte-identical for
+any N). --check fails with a non-zero exit on NaN cells or empty tables —
+the CI figures-smoke gate.";
 
 /// Parsed command line.
 #[derive(Debug)]
@@ -48,10 +55,14 @@ pub enum Command {
     },
     /// Regenerate a set of figures.
     Figures {
-        /// Which figures ("all", "2", "3", "4-10", "11"…"15").
+        /// Which figures ("all", "2", "3", "4-10", "11"…"15", "sweeps").
         which: String,
         /// Workload scale factor.
         scale: f64,
+        /// Fan-out width (None = all cores).
+        jobs: Option<usize>,
+        /// Fail on NaN cells / empty tables (the CI smoke gate).
+        check: bool,
     },
     /// Model validation.
     ValidateModel {
@@ -74,7 +85,7 @@ pub fn parse(args: &[String]) -> Result<Command> {
     let mut flags: Vec<(&str, Option<&str>)> = Vec::new();
     while let Some(a) = it.next() {
         if let Some(name) = a.strip_prefix("--") {
-            let takes_value = matches!(name, "fig" | "config" | "view" | "scale");
+            let takes_value = matches!(name, "fig" | "config" | "view" | "scale" | "jobs");
             let value = if takes_value {
                 Some(
                     it.next()
@@ -118,14 +129,17 @@ pub fn parse(args: &[String]) -> Result<Command> {
         }
         "figures" => Ok(Command::Figures {
             which: "all".into(),
-            scale: parse_scale(get("scale"))?,
+            scale: parse_figures_scale(&get)?,
+            jobs: parse_jobs(get("jobs"))?,
+            check: get("check").is_some(),
         }),
-        "fig2" | "fig3" | "fig4-10" | "fig11" | "fig12" | "fig13" | "fig14" | "fig15" => {
-            Ok(Command::Figures {
-                which: cmd.trim_start_matches("fig").into(),
-                scale: parse_scale(get("scale"))?,
-            })
-        }
+        "fig2" | "fig3" | "fig4-10" | "fig11" | "fig12" | "fig13" | "fig14" | "fig15"
+        | "sweeps" => Ok(Command::Figures {
+            which: cmd.trim_start_matches("fig").into(),
+            scale: parse_figures_scale(&get)?,
+            jobs: parse_jobs(get("jobs"))?,
+            check: get("check").is_some(),
+        }),
         "validate-model" => Ok(Command::ValidateModel {
             pjrt: get("pjrt").is_some(),
         }),
@@ -134,12 +148,31 @@ pub fn parse(args: &[String]) -> Result<Command> {
     }
 }
 
-fn parse_scale(v: Option<Option<&str>>) -> Result<f64> {
-    match v {
-        Some(Some(s)) => s
+/// The `--quick` workload scale: small enough for a CI smoke run, large
+/// enough that every experiment clears its minimum-task floor.
+pub const QUICK_SCALE: f64 = 0.02;
+
+fn parse_figures_scale<'a>(get: &impl Fn(&str) -> Option<Option<&'a str>>) -> Result<f64> {
+    if let Some(Some(s)) = get("scale") {
+        return s
             .parse()
-            .map_err(|_| Error::Config(format!("bad --scale `{s}`"))),
-        _ => Ok(1.0),
+            .map_err(|_| Error::Config(format!("bad --scale `{s}`")));
+    }
+    Ok(if get("quick").is_some() { QUICK_SCALE } else { 1.0 })
+}
+
+fn parse_jobs(v: Option<Option<&str>>) -> Result<Option<usize>> {
+    match v {
+        Some(Some(s)) => {
+            let n: usize = s
+                .parse()
+                .map_err(|_| Error::Config(format!("bad --jobs `{s}`")))?;
+            if n == 0 {
+                return Err(Error::Config("--jobs must be >= 1".into()));
+            }
+            Ok(Some(n))
+        }
+        _ => Ok(None),
     }
 }
 
@@ -167,8 +200,13 @@ pub fn execute(cmd: Command) -> Result<i32> {
             }
             Ok(0)
         }
-        Command::Figures { which, scale } => {
-            run_figures(&which, scale)?;
+        Command::Figures {
+            which,
+            scale,
+            jobs,
+            check,
+        } => {
+            run_figures(&which, scale, jobs, check)?;
             Ok(0)
         }
         Command::ValidateModel { pjrt } => {
@@ -212,54 +250,39 @@ pub fn execute(cmd: Command) -> Result<i32> {
     }
 }
 
-fn run_figures(which: &str, scale: f64) -> Result<()> {
-    let all = which == "all";
-    let mut csvs: Vec<std::path::PathBuf> = Vec::new();
-    let mut emit = |t: &Table, name: &str| {
-        t.print();
-        if let Ok(p) = t.write_csv(name) {
-            csvs.push(p);
-        }
+fn run_figures(which: &str, scale: f64, jobs: Option<usize>, check: bool) -> Result<()> {
+    let ids: Vec<&str> = match which {
+        "all" => registry::all_ids(),
+        "2" => vec!["fig02"],
+        "3" => vec!["fig03"],
+        "4-10" => vec!["fig04-10"],
+        "11" => vec!["fig11"],
+        "12" => vec!["fig12"],
+        "13" => vec!["fig13"],
+        "14" => vec!["fig14"],
+        "15" => vec!["fig15"],
+        "sweeps" => vec!["sweep-eviction", "sweep-dispatch"],
+        other => return Err(Error::Config(format!("unknown figure set `{other}`"))),
     };
-    if all || which == "2" {
-        let out = fig02::run(0.2 * scale);
-        for (i, t) in fig02::tables(&out).iter().enumerate() {
-            emit(t, &format!("fig02_{i}"));
-        }
-    }
-    if all || which == "3" {
-        let tasks = (250_000.0 * scale) as u64;
-        let results = fig03::run(tasks.max(10_000), 10_000, 32);
-        emit(&fig03::table(&results), "fig03");
-    }
-    if all || which == "4-10" || "11,12,13,14,15".contains(which) {
-        // Figures 11-15 reuse the 4-10 runs (plus the static run for 13).
-        let mut results = fig04_10::scaled_run(scale);
-        if all || which == "4-10" {
-            for t in fig04_10::tables(&results, 120) {
-                t.print();
+    let jobs = jobs.unwrap_or_else(crate::util::par::default_jobs);
+    crate::info!(
+        "figure suite: {} figure(s) at scale {scale} with {jobs} job(s)",
+        ids.len()
+    );
+    let outputs = registry::run_selected(&ids, scale, jobs);
+    let mut csvs: Vec<std::path::PathBuf> = Vec::new();
+    for o in &outputs {
+        for (i, t) in o.tables.iter().enumerate() {
+            t.print();
+            let base = o.id.replace('-', "_");
+            let name = if o.tables.len() == 1 {
+                base
+            } else {
+                format!("{base}_{i}")
+            };
+            if let Ok(p) = t.write_csv(&name) {
+                csvs.push(p);
             }
-            emit(&experiments::summary_table(&results), "fig04_10_summary");
-        }
-        if all || which == "11" {
-            emit(&fig11::table(&results), "fig11");
-        }
-        if all || which == "12" {
-            emit(&fig12::table(&results), "fig12");
-        }
-        if all || which == "13" {
-            let mut static_cfg = fig13::static_best_config();
-            static_cfg.workload.num_tasks =
-                ((static_cfg.workload.num_tasks as f64 * scale) as u64).max(1000);
-            results.push(experiments::run_summary_experiment(&static_cfg));
-            emit(&fig13::table(&results), "fig13");
-            results.pop();
-        }
-        if all || which == "14" {
-            emit(&fig14::table(&results), "fig14");
-        }
-        if all || which == "15" {
-            emit(&fig15::table(&results), "fig15");
         }
     }
     if !csvs.is_empty() {
@@ -267,6 +290,14 @@ fn run_figures(which: &str, scale: f64) -> Result<()> {
         for p in csvs {
             println!("  {}", p.display());
         }
+    }
+    if check {
+        registry::check_outputs(&outputs).map_err(Error::SimInvariant)?;
+        println!(
+            "figure check OK: {} figures, {} tables, no NaN/empty output",
+            outputs.len(),
+            outputs.iter().map(|o| o.tables.len()).sum::<usize>()
+        );
     }
     Ok(())
 }
@@ -333,6 +364,39 @@ mod tests {
             parse(&args("fig14")).unwrap(),
             Command::Figures { which, .. } if which == "14"
         ));
+        assert!(matches!(
+            parse(&args("sweeps")).unwrap(),
+            Command::Figures { which, .. } if which == "sweeps"
+        ));
+    }
+
+    #[test]
+    fn parses_quick_jobs_and_check() {
+        match parse(&args("figures --quick --jobs 4 --check")).unwrap() {
+            Command::Figures {
+                which,
+                scale,
+                jobs,
+                check,
+            } => {
+                assert_eq!(which, "all");
+                assert!((scale - QUICK_SCALE).abs() < 1e-12);
+                assert_eq!(jobs, Some(4));
+                assert!(check);
+            }
+            other => panic!("{other:?}"),
+        }
+        // Explicit --scale wins over --quick; defaults are None/false.
+        assert!(matches!(
+            parse(&args("figures --quick --scale 0.5")).unwrap(),
+            Command::Figures { scale, .. } if (scale - 0.5).abs() < 1e-12
+        ));
+        assert!(matches!(
+            parse(&args("figures")).unwrap(),
+            Command::Figures { jobs: None, check: false, .. }
+        ));
+        assert!(parse(&args("figures --jobs 0")).is_err());
+        assert!(parse(&args("figures --jobs many")).is_err());
     }
 
     #[test]

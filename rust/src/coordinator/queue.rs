@@ -46,6 +46,31 @@ pub struct Task {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct QueueRef(u32);
 
+/// Cost counters for the window-boundary cursor
+/// ([`WaitQueue::window_boundary_seq`]). The sub-linear pickup argument
+/// rests on the cursor being amortized-O(1): cold seeks should be rare
+/// (cursor invalidation only) and amortized steps should stay ~O(1) per
+/// query. `perf_hotpath` surfaces these so the CI bench gate can watch
+/// regressions in the amortization.
+#[derive(Debug, Default, Clone)]
+pub struct BoundaryStats {
+    /// Boundary queries answered (including trivial whole-queue cases).
+    pub queries: u64,
+    /// Queries that had to seek the cursor from a list end.
+    pub cold_seeks: u64,
+    /// Link-walk steps spent in cold seeks.
+    pub cold_seek_steps: u64,
+    /// Link-walk steps spent re-positioning a warm cursor.
+    pub amortized_steps: u64,
+}
+
+impl BoundaryStats {
+    /// Mean warm-cursor steps per query (the amortization headline).
+    pub fn amortized_steps_per_query(&self) -> f64 {
+        self.amortized_steps as f64 / self.queries.max(1) as f64
+    }
+}
+
 const NIL: u32 = u32::MAX;
 
 #[derive(Debug)]
@@ -75,6 +100,8 @@ pub struct WaitQueue {
     cursor_rank: usize,
     /// High-water mark (the paper reports 7K–200K peak queue lengths).
     pub max_len: usize,
+    /// Boundary-cursor cost counters (§Perf scheduler stats).
+    pub boundary_stats: BoundaryStats,
 }
 
 impl Default for WaitQueue {
@@ -96,6 +123,7 @@ impl WaitQueue {
             cursor: NIL,
             cursor_rank: 0,
             max_len: 0,
+            boundary_stats: BoundaryStats::default(),
         }
     }
 
@@ -235,6 +263,7 @@ impl WaitQueue {
     /// links the queue churned since the last call. A cold cursor (or a
     /// resized cluster changing W) pays one O(min(W, |Q|−W)) seek.
     pub fn window_boundary_seq(&mut self, window: usize) -> Option<u64> {
+        self.boundary_stats.queries += 1;
         if self.len <= window {
             return None;
         }
@@ -244,6 +273,8 @@ impl WaitQueue {
             // Cold seek from whichever end is closer.
             let from_head = target;
             let from_tail = self.len - 1 - target;
+            self.boundary_stats.cold_seeks += 1;
+            self.boundary_stats.cold_seek_steps += from_head.min(from_tail) as u64;
             if from_head <= from_tail {
                 let mut slot = self.head;
                 for _ in 0..from_head {
@@ -262,11 +293,13 @@ impl WaitQueue {
             while self.cursor_rank < target {
                 self.cursor = self.slots[self.cursor as usize].next;
                 self.cursor_rank += 1;
+                self.boundary_stats.amortized_steps += 1;
                 debug_assert!(self.cursor != NIL, "rank < len implies a successor");
             }
             while self.cursor_rank > target {
                 self.cursor = self.slots[self.cursor as usize].prev;
                 self.cursor_rank -= 1;
+                self.boundary_stats.amortized_steps += 1;
                 debug_assert!(self.cursor != NIL, "rank ≥ 0 implies a predecessor");
             }
         }
@@ -436,6 +469,25 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn boundary_stats_count_cold_and_amortized() {
+        let mut q = WaitQueue::new();
+        for i in 0..100 {
+            q.push_back(task(i));
+        }
+        let _ = q.window_boundary_seq(10); // cold seek from the head side
+        assert_eq!(q.boundary_stats.cold_seeks, 1);
+        assert_eq!(q.boundary_stats.cold_seek_steps, 10);
+        let _ = q.window_boundary_seq(10); // warm, cursor already in place
+        assert_eq!(q.boundary_stats.amortized_steps, 0);
+        q.pop_front(); // shifts the tracked rank by one
+        let _ = q.window_boundary_seq(10);
+        assert_eq!(q.boundary_stats.cold_seeks, 1);
+        assert_eq!(q.boundary_stats.amortized_steps, 1);
+        assert_eq!(q.boundary_stats.queries, 3);
+        assert!(q.boundary_stats.amortized_steps_per_query() < 1.0);
     }
 
     #[test]

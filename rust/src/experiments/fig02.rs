@@ -93,8 +93,16 @@ impl Fig02Output {
 }
 
 /// Run both sweeps. `scale` shrinks task counts for quick runs
-/// (1.0 ≈ paper-scale task counts; benches use 0.2).
+/// (1.0 ≈ paper-scale task counts; benches use 0.2). Points fan out
+/// over all cores; see [`run_jobs`].
 pub fn run(scale: f64) -> Fig02Output {
+    run_jobs(scale, crate::util::par::default_jobs())
+}
+
+/// Run both sweeps with the validation points fanned out over `jobs`
+/// workers. Every point is an independent seeded simulation and the
+/// output order is fixed, so the result is identical for any job count.
+pub fn run_jobs(scale: f64, jobs: usize) -> Fig02Output {
     // Paper: 111K/154K/23K tasks for locality 1/1.38/30.
     let tasks_for = |l: f64| -> u64 {
         let base = if l < 1.2 {
@@ -106,19 +114,38 @@ pub fn run(scale: f64) -> Fig02Output {
         };
         ((base * scale) as u64).max(2_000)
     };
-    let mut cpu_sweep = Vec::new();
+    let mut specs: Vec<(usize, f64)> = Vec::new();
     for &locality in &[1.0, 1.38, 30.0] {
         for &cpus in &[2usize, 4, 8, 16, 32, 64, 128] {
-            cpu_sweep.push(run_point(cpus, locality, tasks_for(locality)));
+            specs.push((cpus, locality));
         }
     }
-    let mut locality_sweep = Vec::new();
+    let cpu_points = specs.len();
     for &locality in &[1.0, 2.0, 3.0, 4.0, 5.0, 10.0, 15.0, 20.0, 25.0, 30.0] {
-        locality_sweep.push(run_point(128, locality, tasks_for(locality)));
+        specs.push((128, locality));
     }
+    let mut points = crate::util::par::map(specs, jobs, |_, (cpus, locality)| {
+        run_point(cpus, locality, tasks_for(locality))
+    });
+    let locality_sweep = points.split_off(cpu_points);
     Fig02Output {
-        cpu_sweep,
+        cpu_sweep: points,
         locality_sweep,
+    }
+}
+
+/// Registry entry: standalone driver at 0.2× the suite scale (the
+/// historical `figures` scaling for this figure's sweeps).
+pub fn figure() -> crate::experiments::registry::Figure {
+    use crate::experiments::registry::{Figure, FigureKind};
+    fn run_tables(scale: f64, jobs: usize) -> Vec<Table> {
+        tables(&run_jobs(0.2 * scale, jobs))
+    }
+    Figure {
+        id: "fig02",
+        title: "Figure 2: abstract-model validation (§4.4)",
+        deterministic: true,
+        kind: FigureKind::Standalone(run_tables),
     }
 }
 

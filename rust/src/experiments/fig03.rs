@@ -276,6 +276,24 @@ pub fn table(results: &[SchedulerBenchResult]) -> Table {
     t
 }
 
+/// Registry entry. `deterministic: false`: the table reports measured
+/// decisions/s, which varies run to run — the registry runs this entry
+/// alone on the caller's thread (never inside the fan-out) so the
+/// numbers are not distorted by concurrent simulator runs.
+pub fn figure() -> crate::experiments::registry::Figure {
+    use crate::experiments::registry::{Figure, FigureKind};
+    fn run_tables(scale: f64, _jobs: usize) -> Vec<Table> {
+        let tasks = ((250_000.0 * scale) as u64).max(10_000);
+        vec![table(&run(tasks, 10_000, 32))]
+    }
+    Figure {
+        id: "fig03",
+        title: "Figure 3: raw data-aware scheduler performance (§5.1)",
+        deterministic: false,
+        kind: FigureKind::Standalone(run_tables),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -10,7 +10,7 @@
 //! | 9 | max-cache-hit | 4 GB | 2888 s | 49 % |
 //! | 10 | max-compute-util | 4 GB | 2037 s | 69 % |
 
-use super::{run_summary_experiment, summary_table, summary_view_table};
+use super::{summary_table, summary_view_table};
 use crate::config::ExperimentConfig;
 use crate::report::Table;
 use crate::sim::RunResult;
@@ -31,18 +31,48 @@ pub fn run() -> Vec<RunResult> {
     scaled_run(1.0)
 }
 
-/// Run all seven experiments with the task count scaled by `scale`
+/// The seven experiment configs with the task count scaled by `scale`
 /// (1.0 = the paper's 250K tasks; benches use smaller scales for quick
 /// iterations — the shape holds, absolute times shrink).
-pub fn scaled_run(scale: f64) -> Vec<RunResult> {
+pub fn configs(scale: f64) -> Vec<ExperimentConfig> {
     (4..=10)
         .map(|fig| {
             let mut cfg = ExperimentConfig::paper_fig(fig).expect("preset");
             cfg.workload.num_tasks =
                 ((cfg.workload.num_tasks as f64 * scale) as u64).max(1_000);
-            run_summary_experiment(&cfg)
+            cfg
         })
         .collect()
+}
+
+/// Run all seven experiments at `scale`, fanned out across all cores.
+/// The runs are independent and carry their own seeds, so results are
+/// identical to a sequential run and returned in figure order.
+pub fn scaled_run(scale: f64) -> Vec<RunResult> {
+    scaled_run_jobs(scale, crate::util::par::default_jobs())
+}
+
+/// [`scaled_run`] with an explicit worker count (`1` = inline).
+pub fn scaled_run_jobs(scale: f64, jobs: usize) -> Vec<RunResult> {
+    crate::experiments::registry::run_configs(configs(scale), jobs)
+}
+
+/// Registry entry: renders the summary, the paper-comparison table, and
+/// the per-run summary views from the shared paper set.
+pub fn figure() -> crate::experiments::registry::Figure {
+    use crate::experiments::registry::{Figure, FigureKind, SimSet};
+    fn render(results: &[RunResult]) -> Vec<Table> {
+        tables(results, 120)
+    }
+    Figure {
+        id: "fig04-10",
+        title: "Figures 4-10: the seven summary-view experiments (§5.2.1)",
+        deterministic: true,
+        kind: FigureKind::Sims {
+            set: SimSet::Paper,
+            render,
+        },
+    }
 }
 
 /// Render: one summary table plus a sampled time-series view per run.

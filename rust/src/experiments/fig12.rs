@@ -36,6 +36,23 @@ pub fn table(results: &[RunResult]) -> Table {
     t
 }
 
+/// Registry entry: renders from the shared Figure 4–10 runs.
+pub fn figure() -> crate::experiments::registry::Figure {
+    use crate::experiments::registry::{Figure, FigureKind, SimSet};
+    fn render(results: &[RunResult]) -> Vec<Table> {
+        vec![table(results)]
+    }
+    Figure {
+        id: "fig12",
+        title: "Figure 12: avg/peak throughput by source (§5.2.3)",
+        deterministic: true,
+        kind: FigureKind::Sims {
+            set: SimSet::Paper,
+            render,
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

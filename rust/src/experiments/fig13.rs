@@ -89,6 +89,25 @@ pub fn table(results: &[RunResult]) -> Table {
     t
 }
 
+/// Registry entry: renders from the Figure 4–10 runs **plus** the
+/// static-provisioning run ([`static_best_config`]) the registry
+/// materializes alongside them.
+pub fn figure() -> crate::experiments::registry::Figure {
+    use crate::experiments::registry::{Figure, FigureKind, SimSet};
+    fn render(results: &[RunResult]) -> Vec<Table> {
+        vec![table(results)]
+    }
+    Figure {
+        id: "fig13",
+        title: "Figure 13: performance index and speedup (§5.2.4)",
+        deterministic: true,
+        kind: FigureKind::Sims {
+            set: SimSet::PaperPlusStatic,
+            render,
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

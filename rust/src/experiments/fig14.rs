@@ -53,6 +53,23 @@ pub fn saturation_rate(r: &RunResult, threshold: f64) -> Option<f64> {
     None
 }
 
+/// Registry entry: renders from the shared Figure 4–10 runs.
+pub fn figure() -> crate::experiments::registry::Figure {
+    use crate::experiments::registry::{Figure, FigureKind, SimSet};
+    fn render(results: &[RunResult]) -> Vec<Table> {
+        vec![table(results)]
+    }
+    Figure {
+        id: "fig14",
+        title: "Figure 14: slowdown vs arrival rate (§5.2.5)",
+        deterministic: true,
+        kind: FigureKind::Sims {
+            set: SimSet::Paper,
+            render,
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

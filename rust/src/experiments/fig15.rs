@@ -42,6 +42,23 @@ pub fn best_worst_ratio(results: &[RunResult]) -> f64 {
     }
 }
 
+/// Registry entry: renders from the shared Figure 4–10 runs.
+pub fn figure() -> crate::experiments::registry::Figure {
+    use crate::experiments::registry::{Figure, FigureKind, SimSet};
+    fn render(results: &[RunResult]) -> Vec<Table> {
+        vec![table(results)]
+    }
+    Figure {
+        id: "fig15",
+        title: "Figure 15: average response time (§5.2.6)",
+        deterministic: true,
+        kind: FigureKind::Sims {
+            set: SimSet::Paper,
+            render,
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

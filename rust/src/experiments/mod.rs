@@ -6,6 +6,12 @@
 //! `target/figures/`). The `rust/benches/*` binaries and the `datadiff`
 //! CLI are thin wrappers over these functions, so a figure can be
 //! regenerated either way.
+//!
+//! The [`registry`] module exposes the whole suite (figs 2–15 plus the
+//! §6 sweeps) as one [`run_all_figures`] entry point: shared runs are
+//! deduplicated and fanned out across cores, and the merged tables are
+//! byte-identical for any `--jobs` value — the artifact the CI
+//! `figures-smoke` job runs on every push.
 
 pub mod fig02;
 pub mod fig03;
@@ -15,6 +21,10 @@ pub mod fig12;
 pub mod fig13;
 pub mod fig14;
 pub mod fig15;
+pub mod registry;
+pub mod sweeps;
+
+pub use registry::{run_all_figures, FigureOutput};
 
 use crate::config::ExperimentConfig;
 use crate::report::{f, pct, Table};
@@ -48,12 +58,10 @@ pub fn paper_experiment_set() -> Vec<ExperimentConfig> {
         .collect()
 }
 
-/// Run the full Figure 4–10 set (the aggregate figures 11–15 reuse it).
+/// Run the full Figure 4–10 set (the aggregate figures 11–15 reuse it),
+/// fanned out across all cores.
 pub fn run_paper_set() -> Vec<RunResult> {
-    paper_experiment_set()
-        .iter()
-        .map(run_summary_experiment)
-        .collect()
+    registry::run_configs(paper_experiment_set(), crate::util::par::default_jobs())
 }
 
 /// One-line-per-experiment summary table (the numbers §5.2 quotes).

@@ -1,0 +1,274 @@
+//! The figure registry — the paper reproduction as a first-class,
+//! CI-runnable artifact.
+//!
+//! Every figure module (plus the §6 sweeps) contributes one [`Figure`]
+//! entry; [`run_selected`] materializes the union of the experiment
+//! configs the selected figures need, **deduplicates shared runs** (Figs
+//! 11–15 reuse the Fig 4–10 set), fans all simulator runs out across
+//! cores with [`crate::util::par`], and renders tables in figure order —
+//! so the merged output is byte-identical for any `--jobs` value.
+//!
+//! Standalone figures run after the fan-out on the caller's thread:
+//! Figure 2 parallelizes its validation points internally, and Figure 3
+//! is a wall-clock scheduler benchmark that must not contend with other
+//! work (its throughput numbers are inherently non-deterministic, which
+//! its entry declares via `deterministic: false`).
+//!
+//! [`check_outputs`] is the CI `figures-smoke` gate: it rejects empty
+//! tables and non-finite cells, so a regression that silently produces
+//! NaN efficiency or an empty sweep fails the build.
+
+use super::{fig02, fig03, fig04_10, fig11, fig12, fig13, fig14, fig15, sweeps};
+use crate::config::ExperimentConfig;
+use crate::report::Table;
+use crate::sim::RunResult;
+use crate::util::par;
+
+/// Which shared simulator-run set a figure renders from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimSet {
+    /// The seven Figure 4–10 paper runs, in figure order.
+    Paper,
+    /// The paper runs plus the Figure 13 static-provisioning run.
+    PaperPlusStatic,
+    /// The §6 eviction-policy ablation runs.
+    Eviction,
+    /// The §6 dispatch-policy sweep runs.
+    Dispatch,
+}
+
+/// How a figure produces its tables.
+#[derive(Clone, Copy)]
+pub enum FigureKind {
+    /// Self-contained driver: `run(scale, jobs)`.
+    Standalone(fn(f64, usize) -> Vec<Table>),
+    /// Renders from a shared simulator-run set.
+    Sims {
+        /// Which run set the renderer consumes.
+        set: SimSet,
+        /// Renderer over the set's results (set order).
+        render: fn(&[RunResult]) -> Vec<Table>,
+    },
+}
+
+/// One registry entry.
+pub struct Figure {
+    /// Stable id (`fig02` … `fig15`, `sweep-eviction`, `sweep-dispatch`).
+    pub id: &'static str,
+    /// Human title for logs and reports.
+    pub title: &'static str,
+    /// Whether the rendered tables are byte-stable across reruns and job
+    /// counts (false only for wall-clock benchmarks like Figure 3).
+    pub deterministic: bool,
+    /// How to produce the tables.
+    pub kind: FigureKind,
+}
+
+/// Rendered output of one figure.
+pub struct FigureOutput {
+    /// Registry id.
+    pub id: &'static str,
+    /// Registry title.
+    pub title: &'static str,
+    /// Copied from the registry entry.
+    pub deterministic: bool,
+    /// The figure's tables, in render order.
+    pub tables: Vec<Table>,
+}
+
+/// All registered figures, in paper order (sweeps last).
+pub fn registry() -> Vec<Figure> {
+    vec![
+        fig02::figure(),
+        fig03::figure(),
+        fig04_10::figure(),
+        fig11::figure(),
+        fig12::figure(),
+        fig13::figure(),
+        fig14::figure(),
+        fig15::figure(),
+        sweeps::eviction_figure(),
+        sweeps::dispatch_figure(),
+    ]
+}
+
+/// Ids of every registered figure, in registry order.
+pub fn all_ids() -> Vec<&'static str> {
+    registry().iter().map(|f| f.id).collect()
+}
+
+/// Fan a list of experiment configs out across `jobs` workers; results
+/// come back in config order (per-run seeding lives in each config, so
+/// scheduling cannot perturb them).
+pub fn run_configs(cfgs: Vec<ExperimentConfig>, jobs: usize) -> Vec<RunResult> {
+    par::map(cfgs, jobs, |_, cfg| super::run_summary_experiment(&cfg))
+}
+
+/// Run every registered figure at `scale` with `jobs` workers.
+pub fn run_all_figures(scale: f64, jobs: usize) -> Vec<FigureOutput> {
+    let ids = all_ids();
+    run_selected(&ids, scale, jobs)
+}
+
+/// Run the figures named in `ids` (unknown ids are ignored; use
+/// [`all_ids`] to enumerate) at `scale` with `jobs` workers.
+pub fn run_selected(ids: &[&str], scale: f64, jobs: usize) -> Vec<FigureOutput> {
+    let figures: Vec<Figure> = registry()
+        .into_iter()
+        .filter(|f| ids.contains(&f.id))
+        .collect();
+    let needs = |set: SimSet| -> bool {
+        figures
+            .iter()
+            .any(|f| matches!(f.kind, FigureKind::Sims { set: s, .. } if s == set))
+    };
+    let need_paper = needs(SimSet::Paper) || needs(SimSet::PaperPlusStatic);
+    let need_static = needs(SimSet::PaperPlusStatic);
+    let need_evict = needs(SimSet::Eviction);
+    let need_dispatch = needs(SimSet::Dispatch);
+
+    // One shared fan-out over the union of needed configs, deduplicated:
+    // the paper set is materialized once no matter how many figures
+    // render from it.
+    let mut cfgs: Vec<ExperimentConfig> = Vec::new();
+    if need_paper {
+        cfgs.extend(fig04_10::configs(scale));
+    }
+    let paper_n = cfgs.len();
+    if need_static {
+        let mut cfg = fig13::static_best_config();
+        cfg.workload.num_tasks = ((cfg.workload.num_tasks as f64 * scale) as u64).max(1_000);
+        cfgs.push(cfg);
+    }
+    let static_n = cfgs.len() - paper_n;
+    if need_evict {
+        cfgs.extend(sweeps::eviction_configs(scale));
+    }
+    let evict_n = cfgs.len() - paper_n - static_n;
+    if need_dispatch {
+        cfgs.extend(sweeps::dispatch_configs(scale));
+    }
+    let mut results = run_configs(cfgs, jobs);
+
+    // Split the flat result vector back into the per-set slices.
+    let dispatch_results = results.split_off(paper_n + static_n + evict_n);
+    let evict_results = results.split_off(paper_n + static_n);
+    let mut static13 = if need_static { results.pop() } else { None };
+    let mut paper = results; // the first `paper_n` entries
+
+    let mut out = Vec::with_capacity(figures.len());
+    for fig in &figures {
+        let tables = match fig.kind {
+            FigureKind::Standalone(run) => run(scale, jobs),
+            FigureKind::Sims { set, render } => match set {
+                SimSet::Paper => render(&paper),
+                SimSet::PaperPlusStatic => {
+                    let s = static13.take().expect("static run materialized");
+                    paper.push(s);
+                    let tables = render(&paper);
+                    static13 = paper.pop();
+                    tables
+                }
+                SimSet::Eviction => render(&evict_results),
+                SimSet::Dispatch => render(&dispatch_results),
+            },
+        };
+        out.push(FigureOutput {
+            id: fig.id,
+            title: fig.title,
+            deterministic: fig.deterministic,
+            tables,
+        });
+    }
+    out
+}
+
+/// The `figures --check` / CI `figures-smoke` gate: every selected
+/// figure must render at least one table, every table must have rows,
+/// and no cell may hold a non-finite number.
+pub fn check_outputs(outputs: &[FigureOutput]) -> Result<(), String> {
+    if outputs.is_empty() {
+        return Err("no figures were produced".into());
+    }
+    for o in outputs {
+        if o.tables.is_empty() {
+            return Err(format!("{}: produced no tables", o.id));
+        }
+        for t in &o.tables {
+            if t.rows.is_empty() {
+                return Err(format!("{}: table `{}` is empty", o.id, t.title));
+            }
+            for row in &t.rows {
+                for cell in row {
+                    let bad = cell.contains("NaN") || cell.contains("inf");
+                    if bad {
+                        return Err(format!(
+                            "{}: table `{}` has non-finite cell `{cell}`",
+                            o.id, t.title
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_are_unique_and_complete() {
+        let ids = all_ids();
+        let mut dedup = ids.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ids.len(), "duplicate figure ids");
+        for id in ["fig02", "fig03", "fig04-10", "fig11", "fig15", "sweep-eviction"] {
+            assert!(ids.contains(&id), "missing {id}");
+        }
+    }
+
+    #[test]
+    fn check_outputs_flags_bad_tables() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["1.0".into()]);
+        let good = FigureOutput {
+            id: "fig99",
+            title: "t",
+            deterministic: true,
+            tables: vec![t.clone()],
+        };
+        assert!(check_outputs(&[good]).is_ok());
+        let empty = FigureOutput {
+            id: "fig99",
+            title: "t",
+            deterministic: true,
+            tables: vec![Table::new("e", &["a"])],
+        };
+        assert!(check_outputs(&[empty]).unwrap_err().contains("empty"));
+        let mut nan = Table::new("n", &["a"]);
+        nan.row(vec!["NaN".into()]);
+        let bad = FigureOutput {
+            id: "fig99",
+            title: "t",
+            deterministic: true,
+            tables: vec![nan],
+        };
+        assert!(check_outputs(&[bad]).unwrap_err().contains("non-finite"));
+        assert!(check_outputs(&[]).is_err());
+    }
+
+    #[test]
+    fn sweep_selection_runs_only_the_sweeps() {
+        // Tiny scale (clamped to the 1K-task floor) keeps this fast while
+        // exercising the fan-out + split logic end to end.
+        let outs = run_selected(&["sweep-eviction", "sweep-dispatch"], 0.004, 4);
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].id, "sweep-eviction");
+        assert_eq!(outs[0].tables[0].rows.len(), 4);
+        assert_eq!(outs[1].tables[0].rows.len(), 5);
+        check_outputs(&outs).unwrap();
+    }
+}

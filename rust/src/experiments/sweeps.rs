@@ -1,0 +1,167 @@
+//! The §6 sweeps — the ablations the paper defers to future work.
+//!
+//! * **Eviction sweep**: LRU / LFU / FIFO / Random on the Figure 5
+//!   configuration (1 GB caches — the thrashing regime, where eviction
+//!   choice matters most).
+//! * **Dispatch sweep**: all five dispatch policies at 4 GB caches
+//!   (the Figure 8 configuration).
+//!
+//! Both are plain config lists + table renderers so the figure registry
+//! fans the runs out with the rest of the suite and
+//! `examples/policy_sweep.rs` stays a thin wrapper.
+
+use crate::cache::EvictionPolicy;
+use crate::config::ExperimentConfig;
+use crate::coordinator::scheduler::DispatchPolicy;
+use crate::report::{f, pct, Table};
+use crate::sim::RunResult;
+
+/// The four eviction policies, in sweep order.
+pub const EVICTION_POLICIES: [EvictionPolicy; 4] = [
+    EvictionPolicy::Lru,
+    EvictionPolicy::Lfu,
+    EvictionPolicy::Fifo,
+    EvictionPolicy::Random,
+];
+
+fn scale_tasks(cfg: &mut ExperimentConfig, scale: f64) {
+    cfg.workload.num_tasks = ((cfg.workload.num_tasks as f64 * scale) as u64).max(1_000);
+}
+
+/// Configs for the eviction-policy ablation at `scale`.
+pub fn eviction_configs(scale: f64) -> Vec<ExperimentConfig> {
+    EVICTION_POLICIES
+        .iter()
+        .map(|&policy| {
+            let mut cfg = ExperimentConfig::paper_fig(5).expect("preset");
+            cfg.name = format!("evict-{}", policy.name());
+            cfg.cache.policy = policy;
+            scale_tasks(&mut cfg, scale);
+            cfg
+        })
+        .collect()
+}
+
+/// Render the eviction-ablation table from its runs (same order as
+/// [`eviction_configs`]).
+pub fn eviction_table(results: &[RunResult]) -> Table {
+    let mut t = Table::new(
+        "eviction-policy ablation (good-cache-compute, 1GB caches — paper future work §6)",
+        &["eviction", "WET(s)", "efficiency", "hit-local", "miss"],
+    );
+    for (r, policy) in results.iter().zip(EVICTION_POLICIES.iter()) {
+        t.row(vec![
+            policy.name().into(),
+            f(r.summary.workload_execution_time_s, 0),
+            pct(r.summary.efficiency),
+            pct(r.summary.hit_local_rate),
+            pct(r.summary.miss_rate),
+        ]);
+    }
+    t
+}
+
+/// Configs for the dispatch-policy sweep at `scale`.
+pub fn dispatch_configs(scale: f64) -> Vec<ExperimentConfig> {
+    DispatchPolicy::ALL
+        .into_iter()
+        .map(|policy| {
+            let mut cfg = ExperimentConfig::paper_fig(8).expect("preset");
+            cfg.name = format!("dispatch-{policy}");
+            cfg.scheduler.policy = policy;
+            scale_tasks(&mut cfg, scale);
+            cfg
+        })
+        .collect()
+}
+
+/// Render the dispatch-sweep table from its runs (same order as
+/// [`dispatch_configs`]).
+pub fn dispatch_table(results: &[RunResult]) -> Table {
+    let mut t = Table::new(
+        "dispatch-policy sweep (4GB caches)",
+        &[
+            "policy",
+            "WET(s)",
+            "efficiency",
+            "hit-local",
+            "hit-global",
+            "miss",
+            "cpu-util",
+        ],
+    );
+    for (r, policy) in results.iter().zip(DispatchPolicy::ALL.into_iter()) {
+        t.row(vec![
+            policy.name().into(),
+            f(r.summary.workload_execution_time_s, 0),
+            pct(r.summary.efficiency),
+            pct(r.summary.hit_local_rate),
+            pct(r.summary.hit_global_rate),
+            pct(r.summary.miss_rate),
+            pct(r.summary.avg_cpu_utilization),
+        ]);
+    }
+    t
+}
+
+/// Registry entry for the eviction-policy ablation.
+pub fn eviction_figure() -> crate::experiments::registry::Figure {
+    use crate::experiments::registry::{Figure, FigureKind, SimSet};
+    fn render(results: &[RunResult]) -> Vec<Table> {
+        vec![eviction_table(results)]
+    }
+    Figure {
+        id: "sweep-eviction",
+        title: "Eviction sweep: LRU/LFU/FIFO/Random on 1GB caches (§6)",
+        deterministic: true,
+        kind: FigureKind::Sims {
+            set: SimSet::Eviction,
+            render,
+        },
+    }
+}
+
+/// Registry entry for the dispatch-policy sweep.
+pub fn dispatch_figure() -> crate::experiments::registry::Figure {
+    use crate::experiments::registry::{Figure, FigureKind, SimSet};
+    fn render(results: &[RunResult]) -> Vec<Table> {
+        vec![dispatch_table(results)]
+    }
+    Figure {
+        id: "sweep-dispatch",
+        title: "Dispatch sweep: all five policies at 4GB caches (§6)",
+        deterministic: true,
+        kind: FigureKind::Sims {
+            set: SimSet::Dispatch,
+            render,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::run_summary_experiment;
+
+    #[test]
+    fn configs_are_named_and_scaled() {
+        let ev = eviction_configs(0.004); // clamps at the 1K-task floor
+        assert_eq!(ev.len(), 4);
+        assert_eq!(ev[0].name, "evict-lru");
+        assert!(ev.iter().all(|c| c.workload.num_tasks == 1_000));
+        let dp = dispatch_configs(0.004);
+        assert_eq!(dp.len(), 5);
+        assert!(dp[0].name.starts_with("dispatch-"));
+    }
+
+    #[test]
+    fn tables_render_one_row_per_config() {
+        let ev: Vec<RunResult> = eviction_configs(0.004)
+            .iter()
+            .map(run_summary_experiment)
+            .collect();
+        let t = eviction_table(&ev);
+        assert_eq!(t.rows.len(), 4);
+        assert_eq!(t.rows[0][0], "lru");
+    }
+}

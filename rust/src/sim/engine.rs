@@ -17,6 +17,15 @@
 //!
 //! The engine is fully deterministic for a given config: integer event
 //! times, seeded PRNG streams, sequence-numbered heap ties.
+//!
+//! Data movement runs on the **batched** flow-net rerate path
+//! ([`FlowNet::new`] defaults to [`super::flow::RerateMode::Batched`]):
+//! same-instant transfer starts/completions (a completion chaining into
+//! the next fetch, a multi-task pickup staging several files) settle and
+//! rerate each touched link once per timestamp instead of once per
+//! event. The per-event path is retained as the executable reference and
+//! proven bit-identical by `rust/tests/flow_parity.rs`, so simulation
+//! results do not depend on the mode.
 
 use super::flow::{FlowNet, LinkId};
 use crate::cache::ObjectCache;
@@ -205,6 +214,17 @@ pub fn run(cfg: &ExperimentConfig) -> RunResult {
 
     eng.run_loop();
 
+    let fs = &eng.flow.stats;
+    crate::debug!(
+        "`{}` flow rerate stats: {} events batched into {} flushes, \
+         {} transfer rerates, {} heap updates ({} dedup skips)",
+        cfg.name,
+        fs.batched_events,
+        fs.flushes,
+        fs.transfer_rerates,
+        fs.heap_updates,
+        fs.dedup_skips
+    );
     let summary = eng.rec.summarize(ideal_wet);
     RunResult {
         name: cfg.name.clone(),

@@ -10,6 +10,39 @@
 //! integrated lazily per transfer and completion times are kept *exact*
 //! in an indexed min-heap (decrease-key, no stale entries) — the engine
 //! interleaves these completions with its own event queue.
+//!
+//! ## §Perf — batched rerating
+//!
+//! Under the 128-concurrent churn regimes of Figs 11–15 every transfer
+//! start/completion rerates all co-flows on the shared GPFS link, and
+//! same-instant event pileups (a completion chained into the next fetch,
+//! a multi-task pickup staging m files at once) repeat that O(active)
+//! work per event. [`RerateMode::Batched`] (the default) coalesces:
+//! membership changes and progress settling stay eager, but the rerate
+//! is deferred and applied **once per touched link per timestamp** at
+//! the next query ([`FlowNet::next_completion`] / [`FlowNet::pop_completion`]),
+//! with a per-flush epoch so a transfer straddling several dirty links
+//! is rerated once, and the completion-heap update skipped whenever the
+//! recomputed key is bit-identical (rate provably unchanged ⇒ completion
+//! time provably unchanged ⇒ heap untouched).
+//!
+//! [`RerateMode::Reference`] retains the per-event path
+//! ([`FlowNet::rerate_reference`]) as the executable specification; the
+//! `flow_parity` differential suite proves both modes produce
+//! **bit-identical completion timestamps** under seeded random churn,
+//! including same-instant pileups.
+//!
+//! To make that equivalence exact (not merely up-to-rounding), both
+//! paths share one normalization: a rerate always recomputes the rate
+//! *and* the completion key `now + remaining/rate` for every transfer on
+//! a touched link. The previous epsilon-skip ("rate unchanged → keep the
+//! old key") made the surviving key's anchor depend on *intermediate*
+//! same-instant states — e.g. a pop+start pair returning a link to its
+//! prior active count re-anchored keys in the per-event path but not in
+//! a coalesced one, and the two anchors can differ by 1 µs of float
+//! rounding. Anchoring every touched key at the current timestamp makes
+//! the final state a pure function of (timestamp, final counts,
+//! remaining bytes), which both modes compute identically.
 
 use crate::util::time::Micros;
 use std::collections::HashSet;
@@ -22,11 +55,49 @@ pub struct LinkId(pub u32);
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct TransferId(pub u32);
 
+/// When rerates are applied relative to membership changes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RerateMode {
+    /// Coalesce same-instant events: settle + rerate each touched link
+    /// once per timestamp, at the next query (§Perf rerate batching).
+    #[default]
+    Batched,
+    /// Rerate at every event — the retained per-event reference path;
+    /// `rust/tests/flow_parity.rs` proves the modes produce bit-identical
+    /// completion timestamps.
+    Reference,
+}
+
+/// §Perf counters for the rerate work (`perf_hotpath` reports these;
+/// the CI bench gate watches the batched-vs-reference ratios).
+#[derive(Debug, Default, Clone)]
+pub struct FlowStats {
+    /// Start/complete events whose rerate was absorbed into a batch.
+    pub batched_events: u64,
+    /// Batched flushes performed (≤ one per distinct query timestamp).
+    pub flushes: u64,
+    /// Per-transfer progress integrations (settle steps).
+    pub settles: u64,
+    /// Per-transfer rate recomputations — the dominant rerate cost.
+    pub transfer_rerates: u64,
+    /// Completion-key heap updates actually applied (keys recomputed to
+    /// a bit-identical value skip the heap entirely).
+    pub heap_updates: u64,
+    /// Transfers skipped by the per-flush dedup (already rerated via an
+    /// earlier dirty link in the same flush).
+    pub dedup_skips: u64,
+}
+
 #[derive(Debug)]
 struct Link {
     capacity_bps: f64,
     /// Transfers currently using this link.
     active: HashSet<u32>,
+    /// Pending-rerate flag (batched mode).
+    dirty: bool,
+    /// Last timestamp this link's co-flows were settled at (settling is
+    /// idempotent per timestamp, so repeats within one instant skip).
+    settled_at: Micros,
 }
 
 #[derive(Debug)]
@@ -38,6 +109,8 @@ struct Transfer {
     nlinks: u8,
     /// Engine-side identity (task id).
     tag: u64,
+    /// Flush epoch this transfer was last rerated in (batched dedup).
+    epoch: u64,
 }
 
 /// Indexed min-heap over (completion time, transfer id) with in-place
@@ -68,16 +141,27 @@ impl IndexedHeap {
         self.sift_up(i);
     }
 
+    #[cfg(test)]
     fn update(&mut self, handle: u32, key: Micros) {
+        let _ = self.update_if_changed(handle, key);
+    }
+
+    /// Set `handle`'s key; returns false (heap untouched) when the new
+    /// key equals the stored one.
+    fn update_if_changed(&mut self, handle: u32, key: Micros) -> bool {
         let i = self.pos[handle as usize] as usize;
         debug_assert_ne!(i as u32, ABSENT);
         let old = self.heap[i].0;
+        if old == key {
+            return false;
+        }
         self.heap[i].0 = key;
         if key < old {
             self.sift_up(i);
         } else {
             self.sift_down(i);
         }
+        true
     }
 
     fn remove(&mut self, handle: u32) {
@@ -154,15 +238,42 @@ pub struct FlowNet {
     completions: IndexedHeap,
     /// Cumulative completed transfer count (stats).
     pub completed: u64,
-    /// Scratch id buffer reused by settle/rerate (§Perf: avoids two Vec
-    /// allocations per transfer event on the engine's hottest path).
+    /// Rerate cost counters (§Perf).
+    pub stats: FlowStats,
+    /// Scratch id buffer reused by settle/rerate (§Perf: avoids a Vec
+    /// allocation per transfer event on the engine's hottest path).
     scratch: Vec<u32>,
+    mode: RerateMode,
+    /// Links with a deferred rerate (batched mode; flag lives on the link).
+    dirty: Vec<u32>,
+    /// Timestamp the pending batch's membership changes happened at.
+    batch_time: Micros,
+    /// Per-flush dedup epoch.
+    epoch: u64,
 }
 
 impl FlowNet {
-    /// Empty network.
+    /// Empty network in the default [`RerateMode::Batched`].
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Empty network on the per-event reference path.
+    pub fn reference() -> Self {
+        Self::with_mode(RerateMode::Reference)
+    }
+
+    /// Empty network with an explicit rerate mode.
+    pub fn with_mode(mode: RerateMode) -> Self {
+        FlowNet {
+            mode,
+            ..Self::default()
+        }
+    }
+
+    /// The rerate mode this network runs in.
+    pub fn mode(&self) -> RerateMode {
+        self.mode
     }
 
     /// Add a link with the given capacity (bytes/second).
@@ -171,11 +282,15 @@ impl FlowNet {
         self.links.push(Link {
             capacity_bps,
             active: HashSet::new(),
+            dirty: false,
+            settled_at: Micros::ZERO,
         });
         LinkId(self.links.len() as u32 - 1)
     }
 
-    /// Active transfer count on a link (release-safety check).
+    /// Active transfer count on a link (release-safety check). Exact at
+    /// all times — membership changes are applied eagerly even in
+    /// batched mode.
     pub fn link_active(&self, link: LinkId) -> usize {
         self.links[link.0 as usize].active.len()
     }
@@ -190,6 +305,7 @@ impl FlowNet {
     /// `now` (still go through the heap for deterministic ordering).
     pub fn start(&mut self, now: Micros, bytes: u64, links: &[LinkId], tag: u64) -> TransferId {
         assert!(!links.is_empty() && links.len() <= 3);
+        self.sync_batch(now);
         let mut arr = [u32::MAX; 3];
         for (i, l) in links.iter().enumerate() {
             arr[i] = l.0;
@@ -208,9 +324,12 @@ impl FlowNet {
             links: arr,
             nlinks: links.len() as u8,
             tag,
+            epoch: 0,
         };
         self.transfers[id as usize] = Some(t);
-        // Settle existing flows on the affected links, add us, re-rate.
+        // Settle existing flows on the affected links (their shares were
+        // real until `now`), add us, then re-rate — immediately on the
+        // reference path, or at the next query on the batched one.
         for l in links {
             self.settle_link(*l, now);
         }
@@ -218,20 +337,34 @@ impl FlowNet {
             self.links[l.0 as usize].active.insert(id);
         }
         self.completions.insert(id, Micros::MAX);
-        for l in links {
-            self.rerate_link(*l, now);
+        match self.mode {
+            RerateMode::Reference => {
+                for l in links {
+                    self.rerate_reference(*l, now);
+                }
+            }
+            RerateMode::Batched => {
+                self.stats.batched_events += 1;
+                self.mark_dirty(links);
+            }
         }
         TransferId(id)
     }
 
-    /// Earliest completion, if any transfers are in flight.
-    pub fn next_completion(&self) -> Option<Micros> {
+    /// Earliest completion, if any transfers are in flight. Flushes any
+    /// pending batched rerates first, so the answer is always exact.
+    pub fn next_completion(&mut self) -> Option<Micros> {
+        self.flush();
         self.completions.peek().map(|(t, _)| t)
     }
 
     /// Pop the transfer completing at `now` (must equal
     /// [`FlowNet::next_completion`]). Returns its tag.
     pub fn pop_completion(&mut self, now: Micros) -> u64 {
+        // Keys must be canonical before choosing the minimum, even when
+        // the pending batch is at this same instant.
+        self.flush();
+        self.sync_batch(now);
         let (t, id) = self.completions.peek().expect("no completion pending");
         debug_assert!(t <= now, "popping future completion {t} at {now}");
         self.completions.remove(id);
@@ -254,14 +387,90 @@ impl FlowNet {
         self.transfers[id as usize] = None;
         self.free.push(id);
         self.completed += 1;
-        for l in &links {
-            self.rerate_link(*l, now);
+        match self.mode {
+            RerateMode::Reference => {
+                for l in &links {
+                    self.rerate_reference(*l, now);
+                }
+            }
+            RerateMode::Batched => {
+                self.stats.batched_events += 1;
+                self.mark_dirty(&links);
+            }
         }
         tag
     }
 
+    /// Apply all deferred rerates of the pending batch (no-op when none
+    /// are pending, i.e. always on the reference path).
+    pub fn flush(&mut self) {
+        if self.dirty.is_empty() {
+            return;
+        }
+        self.stats.flushes += 1;
+        self.epoch += 1;
+        let now = self.batch_time;
+        let mut dirty = std::mem::take(&mut self.dirty);
+        for &l in &dirty {
+            self.links[l as usize].dirty = false;
+        }
+        for &l in &dirty {
+            let mut ids = std::mem::take(&mut self.scratch);
+            ids.clear();
+            ids.extend(self.links[l as usize].active.iter().copied());
+            for &id in &ids {
+                let seen = self.transfers[id as usize]
+                    .as_ref()
+                    .expect("active transfer must live")
+                    .epoch;
+                if seen == self.epoch {
+                    self.stats.dedup_skips += 1;
+                    continue;
+                }
+                self.rerate_one(id, now);
+                self.transfers[id as usize].as_mut().unwrap().epoch = self.epoch;
+            }
+            self.scratch = ids;
+        }
+        dirty.clear();
+        self.dirty = dirty;
+    }
+
+    /// Open (or extend) the batch at `now`, flushing a previous batch
+    /// left pending at an earlier instant.
+    fn sync_batch(&mut self, now: Micros) {
+        debug_assert!(
+            now >= self.batch_time,
+            "time went backwards: {now} < {}",
+            self.batch_time
+        );
+        if now != self.batch_time {
+            self.flush();
+            self.batch_time = now;
+        }
+    }
+
+    fn mark_dirty(&mut self, links: &[LinkId]) {
+        for l in links {
+            let lk = &mut self.links[l.0 as usize];
+            if !lk.dirty {
+                lk.dirty = true;
+                self.dirty.push(l.0);
+            }
+        }
+    }
+
     /// Integrate progress of all transfers on `link` up to `now`.
+    /// Idempotent per timestamp: repeats within one instant return
+    /// immediately ("settle each touched link once per timestamp").
     fn settle_link(&mut self, link: LinkId, now: Micros) {
+        {
+            let lk = &mut self.links[link.0 as usize];
+            if lk.settled_at == now {
+                return;
+            }
+            lk.settled_at = now;
+        }
         let mut ids = std::mem::take(&mut self.scratch);
         ids.clear();
         ids.extend(self.links[link.0 as usize].active.iter().copied());
@@ -273,17 +482,16 @@ impl FlowNet {
                 let dt = (now - tr.last_update).as_secs_f64();
                 tr.remaining_bytes = (tr.remaining_bytes - tr.rate_bps * dt).max(0.0);
                 tr.last_update = now;
+                self.stats.settles += 1;
             }
         }
         self.scratch = ids;
     }
 
-    /// Recompute rates and completion keys for all transfers on `link`.
-    fn rerate_link(&mut self, link: LinkId, now: Micros) {
-        let mut ids = std::mem::take(&mut self.scratch);
-        ids.clear();
-        ids.extend(self.links[link.0 as usize].active.iter().copied());
-        for &id in &ids {
+    /// Recompute one transfer's rate and completion key anchored at
+    /// `now`. The heap is only touched when the key actually changed.
+    fn rerate_one(&mut self, id: u32, now: Micros) {
+        let (rate, remaining) = {
             let tr = self.transfers[id as usize]
                 .as_ref()
                 .expect("active transfer must live");
@@ -292,16 +500,29 @@ impl FlowNet {
                 let lk = &self.links[l as usize];
                 rate = rate.min(lk.capacity_bps / lk.active.len().max(1) as f64);
             }
-            debug_assert!(rate.is_finite() && rate > 0.0);
-            let tr = self.transfers[id as usize].as_mut().unwrap();
-            if (tr.rate_bps - rate).abs() > 1e-9 * rate || tr.rate_bps == 0.0 {
-                tr.rate_bps = rate;
-                let secs = tr.remaining_bytes / rate;
-                let done = now
-                    .checked_add(Micros::from_secs_f64(secs))
-                    .unwrap_or(Micros::MAX);
-                self.completions.update(id, done);
-            }
+            (rate, tr.remaining_bytes)
+        };
+        debug_assert!(rate.is_finite() && rate > 0.0);
+        self.stats.transfer_rerates += 1;
+        let done = now
+            .checked_add(Micros::from_secs_f64(remaining / rate))
+            .unwrap_or(Micros::MAX);
+        self.transfers[id as usize].as_mut().unwrap().rate_bps = rate;
+        if self.completions.update_if_changed(id, done) {
+            self.stats.heap_updates += 1;
+        }
+    }
+
+    /// The retained per-event rerate: recompute rates and completion
+    /// keys for all transfers on `link`, immediately. This is the
+    /// executable specification the batched flush must agree with
+    /// (see `rust/tests/flow_parity.rs`).
+    fn rerate_reference(&mut self, link: LinkId, now: Micros) {
+        let mut ids = std::mem::take(&mut self.scratch);
+        ids.clear();
+        ids.extend(self.links[link.0 as usize].active.iter().copied());
+        for &id in &ids {
+            self.rerate_one(id, now);
         }
         self.scratch = ids;
     }
@@ -422,6 +643,57 @@ mod tests {
         }
         assert_eq!(net.completed, 500);
         assert!(net.transfers.len() <= 8, "slab grew: {}", net.transfers.len());
+    }
+
+    #[test]
+    fn reference_mode_behaves_identically_on_basics() {
+        for mode in [RerateMode::Batched, RerateMode::Reference] {
+            let mut net = FlowNet::with_mode(mode);
+            let l = net.add_link(1000.0);
+            net.start(Micros::ZERO, 1000, &[l], 1);
+            net.start(Micros::from_secs_f64(0.5), 1000, &[l], 2);
+            let d1 = net.next_completion().unwrap();
+            assert_eq!(net.pop_completion(d1), 1, "{mode:?}");
+            let d2 = net.next_completion().unwrap();
+            assert_eq!(net.pop_completion(d2), 2, "{mode:?}");
+            assert!((d1.as_secs_f64() - 1.5).abs() < 1e-6, "{mode:?}: {d1}");
+            assert!((d2.as_secs_f64() - 2.0).abs() < 1e-6, "{mode:?}: {d2}");
+        }
+    }
+
+    #[test]
+    fn batched_mode_rerates_less_than_reference() {
+        // The perf_hotpath churn shape: a shared bottleneck link, one
+        // pop + one start per instant with the query in between — the
+        // batched path must coalesce each pop+start pair into one flush.
+        let run = |mode: RerateMode| -> FlowStats {
+            let mut net = FlowNet::with_mode(mode);
+            let gpfs = net.add_link(5.5e8);
+            let nics: Vec<LinkId> = (0..8).map(|_| net.add_link(1.25e8)).collect();
+            let mut i = 0u64;
+            for _ in 0..32 {
+                net.start(Micros::ZERO, 10_000_000, &[gpfs, nics[(i % 8) as usize]], i);
+                i += 1;
+            }
+            for _ in 0..200 {
+                let t = net.next_completion().expect("in flight");
+                net.pop_completion(t);
+                net.start(t, 10_000_000, &[gpfs, nics[(i % 8) as usize]], i);
+                i += 1;
+            }
+            net.stats.clone()
+        };
+        let batched = run(RerateMode::Batched);
+        let reference = run(RerateMode::Reference);
+        assert!(
+            batched.transfer_rerates * 3 < reference.transfer_rerates * 2,
+            "batched {} !≪ reference {}",
+            batched.transfer_rerates,
+            reference.transfer_rerates
+        );
+        assert!(batched.heap_updates <= reference.heap_updates);
+        assert!(batched.flushes > 0 && batched.batched_events > 0);
+        assert_eq!(reference.flushes, 0);
     }
 
     #[test]

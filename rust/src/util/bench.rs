@@ -150,12 +150,21 @@ impl Bench {
 }
 
 /// Serialize bench groups as a JSON snapshot (the `BENCH_baseline.json`
-/// schema): future PRs regenerate the file with the same bench binary and
-/// diff the numbers to track the perf trajectory.
+/// schema, version 2): future PRs regenerate the file with the same
+/// bench binary and diff the numbers to track the perf trajectory.
+///
+/// `counters` carries deterministic work metrics (tasks inspected per
+/// pickup, boundary-cursor steps, flow rerate counts) — unlike wall
+/// times these are machine-independent, so the CI gate
+/// (`tools/bench_gate.py`) can compare them against the committed
+/// baseline with tight-ish tolerances while treating timings as
+/// within-run ratios only. `"measured": true` marks a snapshot produced
+/// by an actual bench run (the seed baseline was authored without a
+/// toolchain and carries `false`).
 ///
 /// The crate is dependency-free, so the writer is hand-rolled; labels are
 /// plain ASCII and escaped minimally.
-pub fn baseline_json(bench_name: &str, groups: &[&Bench]) -> String {
+pub fn baseline_json(bench_name: &str, groups: &[&Bench], counters: &[(String, f64)]) -> String {
     fn esc(s: &str) -> String {
         s.replace('\\', "\\\\").replace('"', "\\\"")
     }
@@ -168,9 +177,20 @@ pub fn baseline_json(bench_name: &str, groups: &[&Bench]) -> String {
     }
     let mut out = String::new();
     out.push_str("{\n");
-    out.push_str("  \"schema\": 1,\n");
+    out.push_str("  \"schema\": 2,\n");
     out.push_str(&format!("  \"bench\": \"{}\",\n", esc(bench_name)));
     out.push_str("  \"unit\": \"seconds_per_iteration\",\n");
+    out.push_str("  \"measured\": true,\n");
+    out.push_str("  \"counters\": {\n");
+    for (i, (name, value)) in counters.iter().enumerate() {
+        out.push_str(&format!(
+            "    \"{}\": {}{}\n",
+            esc(name),
+            num(*value),
+            if i + 1 < counters.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  },\n");
     out.push_str("  \"groups\": [\n");
     for (gi, g) in groups.iter().enumerate() {
         out.push_str(&format!(
@@ -245,8 +265,16 @@ mod tests {
         b.iter("case \"quoted\"", 10, || {
             acc = black_box(acc.wrapping_add(1));
         });
-        let j = baseline_json("selftest", &[&b]);
+        let counters = vec![
+            ("inspected/per_pickup".to_string(), 3.5),
+            ("bad".to_string(), f64::NAN),
+        ];
+        let j = baseline_json("selftest", &[&b], &counters);
+        assert!(j.contains("\"schema\": 2"));
         assert!(j.contains("\"bench\": \"selftest\""));
+        assert!(j.contains("\"measured\": true"));
+        assert!(j.contains("\"inspected/per_pickup\": 3.5e0"));
+        assert!(j.contains("\"bad\": null"));
         assert!(j.contains("\\\"quoted\\\""));
         assert!(j.contains("\"mean_s\": "));
         assert!(j.trim_end().ends_with('}'));

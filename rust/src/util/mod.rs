@@ -11,6 +11,8 @@
 //! * [`units`] — byte / bandwidth unit helpers and formatting.
 //! * [`bench`] — a micro-benchmark harness (criterion replacement) used by
 //!   the `rust/benches/*` binaries.
+//! * [`par`] — a zero-dependency scoped-thread fan-out (the figure suite
+//!   and policy sweeps run independent experiments across cores).
 //! * [`proptest`] — a miniature property-testing harness with input
 //!   shrinking, used by the test suites.
 //! * [`logger`] — a tiny leveled logging facade writing to stderr (the
@@ -19,6 +21,7 @@
 
 pub mod bench;
 pub mod logger;
+pub mod par;
 pub mod prng;
 pub mod proptest;
 pub mod stats;

@@ -1,0 +1,105 @@
+//! Zero-dependency scoped-thread fan-out for independent work items.
+//!
+//! The figure suite and the policy sweeps run many deterministic,
+//! independent experiments; [`map`] spreads them over `std::thread::scope`
+//! workers pulling from a shared queue and returns the results **in input
+//! order**, so merged tables are byte-identical regardless of the job
+//! count (the `--jobs 1` vs `--jobs N` parity the CI figure gate relies
+//! on). Each item carries its own seed inside its config, so per-run
+//! determinism is untouched by scheduling.
+//!
+//! `jobs <= 1` (or a single item) runs inline on the caller's thread —
+//! no threads are spawned, preserving exact sequential behaviour.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Number of worker threads to use when the caller does not specify one.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Apply `f` to every item on up to `jobs` worker threads; results come
+/// back in input order. A panic in `f` propagates to the caller after
+/// the remaining workers finish their current items.
+pub fn map<T, R, F>(items: Vec<T>, jobs: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    let jobs = jobs.clamp(1, n.max(1));
+    if jobs <= 1 || n <= 1 {
+        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let queue: Mutex<VecDeque<(usize, T)>> = Mutex::new(items.into_iter().enumerate().collect());
+    let done: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(|| loop {
+                let item = queue.lock().expect("worker panicked holding queue").pop_front();
+                let Some((i, t)) = item else { break };
+                let r = f(i, t);
+                done.lock().expect("worker panicked holding results").push((i, r));
+            });
+        }
+    });
+    let mut out = done.into_inner().expect("worker panicked holding results");
+    out.sort_unstable_by_key(|&(i, _)| i);
+    debug_assert_eq!(out.len(), n);
+    out.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<u64> = (0..100).collect();
+        let out = map(items.clone(), 8, |i, x| {
+            assert_eq!(i as u64, x);
+            x * 2
+        });
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn inline_path_matches_threaded() {
+        let items: Vec<u64> = (0..37).collect();
+        let seq = map(items.clone(), 1, |_, x| x * x);
+        let par = map(items, 4, |_, x| x * x);
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn uses_multiple_workers() {
+        // With more items than workers and a tiny sleep, at least two
+        // distinct threads must participate.
+        let seen = Mutex::new(std::collections::HashSet::new());
+        let busy = AtomicUsize::new(0);
+        map((0..64).collect::<Vec<u64>>(), 4, |_, _| {
+            busy.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            seen.lock().unwrap().insert(std::thread::current().id());
+        });
+        assert!(seen.lock().unwrap().len() >= 2);
+    }
+
+    #[test]
+    fn handles_empty_and_oversized_jobs() {
+        let out: Vec<u64> = map(Vec::<u64>::new(), 8, |_, x| x);
+        assert!(out.is_empty());
+        let out = map(vec![7u64], 100, |_, x| x + 1);
+        assert_eq!(out, vec![8]);
+    }
+
+    #[test]
+    fn default_jobs_is_positive() {
+        assert!(default_jobs() >= 1);
+    }
+}

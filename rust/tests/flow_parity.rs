@@ -1,0 +1,240 @@
+//! Differential property tests: the batched flow-net rerating
+//! ([`RerateMode::Batched`], what the engine runs) must produce
+//! **bit-identical completion timestamps** to the retained per-event
+//! reference path ([`RerateMode::Reference`]) — same completion times,
+//! same pop order, same tags — across seeded random start/complete
+//! churn over shared multi-link paths, including same-instant event
+//! pileups (several starts and pops at one timestamp with no query in
+//! between, zero-byte transfers completing at their start instant).
+//!
+//! Both networks receive the exact same op sequence; every observable
+//! (next-completion time, popped tag, in-flight count, completed count)
+//! is compared at every step.
+
+use datadiffusion::sim::flow::{FlowNet, LinkId, RerateMode};
+use datadiffusion::util::proptest::{property, Gen};
+use datadiffusion::util::time::Micros;
+
+/// The two networks under identical drive.
+struct Pair {
+    batched: FlowNet,
+    reference: FlowNet,
+    links: Vec<LinkId>,
+    now: Micros,
+    next_tag: u64,
+}
+
+impl Pair {
+    fn new(g: &mut Gen) -> Pair {
+        let mut batched = FlowNet::new();
+        let mut reference = FlowNet::reference();
+        assert_eq!(batched.mode(), RerateMode::Batched);
+        assert_eq!(reference.mode(), RerateMode::Reference);
+        let n = g.usize_in(2..7);
+        let mut links = Vec::with_capacity(n);
+        for _ in 0..n {
+            // Mixed magnitudes so bottlenecks shift between links.
+            let cap = g.f64_in(100.0, 1e7);
+            let a = batched.add_link(cap);
+            let b = reference.add_link(cap);
+            assert_eq!(a, b);
+            links.push(a);
+        }
+        Pair {
+            batched,
+            reference,
+            links,
+            now: Micros::ZERO,
+            next_tag: 0,
+        }
+    }
+
+    /// Pick 1–3 distinct links for a transfer path.
+    fn pick_path(&self, g: &mut Gen) -> Vec<LinkId> {
+        let n = self.links.len();
+        let want = g.usize_in(1..4).min(n);
+        let mut idx: Vec<usize> = Vec::with_capacity(want);
+        while idx.len() < want {
+            let i = g.usize_in(0..n);
+            if !idx.contains(&i) {
+                idx.push(i);
+            }
+        }
+        idx.into_iter().map(|i| self.links[i]).collect()
+    }
+
+    fn start(&mut self, g: &mut Gen) {
+        let path = self.pick_path(g);
+        // ~15% zero-byte transfers: they complete at the start instant,
+        // creating same-instant completion pileups.
+        let bytes = if g.bool(0.15) {
+            0
+        } else {
+            g.u64_in(1..100_000_000)
+        };
+        let a = self.batched.start(self.now, bytes, &path, self.next_tag);
+        let b = self.reference.start(self.now, bytes, &path, self.next_tag);
+        assert_eq!(a, b, "transfer handle allocation diverged");
+        self.next_tag += 1;
+    }
+
+    fn check_next(&mut self) -> Result<Option<Micros>, String> {
+        let a = self.batched.next_completion();
+        let b = self.reference.next_completion();
+        if a != b {
+            return Err(format!(
+                "next_completion diverged at {}: batched {a:?} vs reference {b:?}",
+                self.now
+            ));
+        }
+        Ok(a)
+    }
+
+    /// Pop the earliest completion from both nets; compare everything.
+    fn pop(&mut self) -> Result<(), String> {
+        let Some(t) = self.check_next()? else {
+            return Ok(());
+        };
+        self.now = self.now.max(t);
+        let ta = self.batched.pop_completion(self.now);
+        let tb = self.reference.pop_completion(self.now);
+        if ta != tb {
+            return Err(format!(
+                "pop at {} diverged: batched tag {ta} vs reference tag {tb}",
+                self.now
+            ));
+        }
+        self.check_counts()
+    }
+
+    fn check_counts(&self) -> Result<(), String> {
+        if self.batched.in_flight() != self.reference.in_flight() {
+            return Err(format!(
+                "in_flight diverged: {} vs {}",
+                self.batched.in_flight(),
+                self.reference.in_flight()
+            ));
+        }
+        if self.batched.completed != self.reference.completed {
+            return Err(format!(
+                "completed diverged: {} vs {}",
+                self.batched.completed, self.reference.completed
+            ));
+        }
+        for &l in &self.links {
+            if self.batched.link_active(l) != self.reference.link_active(l) {
+                return Err(format!("link_active({l:?}) diverged"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Advance time by a random amount, never past the next completion.
+    fn advance(&mut self, g: &mut Gen) -> Result<(), String> {
+        let bound = match self.check_next()? {
+            Some(nc) => (nc - self.now).0,
+            None => 1_000_000,
+        };
+        self.now = self.now + Micros(g.u64_in(0..bound + 1));
+        Ok(())
+    }
+}
+
+/// Random churn: starts, pops, time advances, and same-instant pileups
+/// interleaved arbitrarily; every observable must match at every step.
+#[test]
+fn batched_rerating_matches_reference_under_churn() {
+    property("flow parity churn", 60, |g: &mut Gen| {
+        let mut p = Pair::new(g);
+        for _ in 0..g.usize_in(20..180) {
+            match g.usize_in(0..8) {
+                0..=2 => p.start(g),
+                3 | 4 => p.pop()?,
+                5 => p.advance(g)?,
+                _ => {
+                    // Same-instant pileup: several starts at `now` with
+                    // no query in between, then drain every completion
+                    // landing exactly at `now`.
+                    for _ in 0..g.usize_in(1..5) {
+                        p.start(g);
+                    }
+                    while p.check_next()? == Some(p.now) {
+                        p.pop()?;
+                    }
+                }
+            }
+            p.check_counts()?;
+        }
+        // Drain: the full remaining completion trace must agree.
+        while p.check_next()?.is_some() {
+            p.pop()?;
+        }
+        p.check_counts()
+    });
+}
+
+/// The perf_hotpath churn shape (shared bottleneck + per-node NICs, one
+/// pop + one start per instant): completion times must match exactly
+/// while the batched path provably does less rerate work.
+#[test]
+fn bench_shape_trace_is_identical_and_cheaper() {
+    let drive = |mode: RerateMode| -> (Vec<(u64, Micros)>, u64) {
+        let mut net = FlowNet::with_mode(mode);
+        let gpfs = net.add_link(5.5e8);
+        let nics: Vec<LinkId> = (0..16).map(|_| net.add_link(1.25e8)).collect();
+        let mut i = 0u64;
+        for _ in 0..64 {
+            net.start(Micros::ZERO, 10_000_000, &[gpfs, nics[(i % 16) as usize]], i);
+            i += 1;
+        }
+        let mut trace = Vec::new();
+        for _ in 0..500 {
+            let t = net.next_completion().expect("in flight");
+            let tag = net.pop_completion(t);
+            trace.push((tag, t));
+            net.start(t, 10_000_000, &[gpfs, nics[(i % 16) as usize]], i);
+            i += 1;
+        }
+        (trace, net.stats.transfer_rerates)
+    };
+    let (batched_trace, batched_rerates) = drive(RerateMode::Batched);
+    let (reference_trace, reference_rerates) = drive(RerateMode::Reference);
+    assert_eq!(batched_trace, reference_trace, "completion traces diverged");
+    assert!(
+        batched_rerates * 3 < reference_rerates * 2,
+        "batched rerates {batched_rerates} not ≪ reference {reference_rerates}"
+    );
+}
+
+/// Multi-task pickups stage several transfers at one instant; a released
+/// co-flow at the same instant must not perturb parity. This is the
+/// smallest pileup that exercised the old epsilon-skip divergence
+/// (pop+start returning a link to its prior active count).
+#[test]
+fn pop_start_pileup_at_same_instant() {
+    let drive = |mode: RerateMode| -> Vec<(u64, Micros)> {
+        let mut net = FlowNet::with_mode(mode);
+        let shared = net.add_link(1_000_000.0);
+        let a = net.add_link(300_000.0);
+        let b = net.add_link(7_777_777.0);
+        net.start(Micros::ZERO, 333_333, &[shared, a], 0);
+        net.start(Micros::ZERO, 999_999, &[shared, b], 1);
+        net.start(Micros::ZERO, 123_456, &[shared], 2);
+        let mut trace = Vec::new();
+        let mut tag = 3u64;
+        for _ in 0..40 {
+            let t = net.next_completion().expect("in flight");
+            trace.push((net.pop_completion(t), t));
+            // Same instant: two new transfers and a zero-byte flash.
+            net.start(t, 777_777, &[shared, a], tag);
+            net.start(t, 0, &[b], tag + 1);
+            tag += 2;
+            // The zero-byte transfer completes at t; drain it now.
+            while net.next_completion() == Some(t) {
+                trace.push((net.pop_completion(t), t));
+            }
+        }
+        trace
+    };
+    assert_eq!(drive(RerateMode::Batched), drive(RerateMode::Reference));
+}

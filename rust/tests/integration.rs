@@ -8,7 +8,7 @@
 use datadiffusion::config::{AccessSpec, ArrivalSpec, ExperimentConfig};
 use datadiffusion::coordinator::provisioner::ProvisionerConfig;
 use datadiffusion::coordinator::scheduler::DispatchPolicy;
-use datadiffusion::experiments::{fig02, fig03, throughput_split};
+use datadiffusion::experiments::{fig02, fig03, registry, throughput_split};
 use datadiffusion::sim;
 use datadiffusion::util::units::{GB, MB};
 
@@ -181,6 +181,36 @@ fn model_tracks_simulator_within_tolerance() {
         );
     }
     assert!(mean < 0.20, "mean model error {:.1}%", mean * 100.0);
+}
+
+#[test]
+fn figure_registry_parallel_matches_serial() {
+    // The `figures --jobs N` guarantee: merged tables are byte-identical
+    // for any job count. Deterministic figures only (Figure 3 reports
+    // measured wall-clock throughput and is excluded by contract).
+    let ids = ["fig11", "fig12", "fig15"];
+    let render = |jobs: usize| -> Vec<String> {
+        registry::run_selected(&ids, 0.004, jobs) // 1K-task floor per run
+            .iter()
+            .flat_map(|o| {
+                assert!(o.deterministic, "{} must be deterministic", o.id);
+                o.tables.iter().map(|t| t.render())
+            })
+            .collect()
+    };
+    let serial = render(1);
+    let parallel = render(4);
+    assert_eq!(serial, parallel, "parallel tables diverged from serial");
+    assert_eq!(serial.len(), 3);
+}
+
+#[test]
+fn figure_registry_check_passes_on_quick_sweeps() {
+    // The figures-smoke gate logic over a real (tiny) run.
+    let outs = registry::run_selected(&["fig13", "sweep-dispatch"], 0.004, 4);
+    registry::check_outputs(&outs).expect("quick figures must be NaN-free and non-empty");
+    // fig13 renders the seven paper runs + the static row.
+    assert_eq!(outs[0].tables[0].rows.len(), 8);
 }
 
 #[test]

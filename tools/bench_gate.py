@@ -1,0 +1,156 @@
+#!/usr/bin/env python3
+"""CI gate over perf_hotpath JSON snapshots — ratio metrics only.
+
+Usage: bench_gate.py FRESH.json BASELINE.json
+
+Shared CI runners are too noisy for absolute-time assertions, so the gate
+checks only quantities that noise cannot fake:
+
+1. *Within-run speedups* (fresh snapshot only): the indexed sub-linear
+   pickup must not be slower than the retained reference window scan
+   (speedup >= 1.0 with tolerance), and the batched flow-net rerate must
+   not do more per-event work than the per-event reference.
+2. *Deterministic work counters* (fresh vs committed baseline): tasks
+   inspected per pickup, boundary-cursor steps, flow rerates per event.
+   These are machine-independent, so drift beyond a generous tolerance
+   means the algorithm regressed, not the runner. Skipped (with a
+   warning) while the baseline still carries `"measured": false` — the
+   bench job refreshes it one-shot on the next main push.
+
+Exit status 0 = pass, 1 = fail.
+"""
+
+import json
+import math
+import sys
+
+# Generous: counters are deterministic but fixtures evolve; timing ratios
+# within one run still wobble a little on loaded runners.
+SPEEDUP_TOLERANCE = 0.90  # "indexed >= reference" may sag to 0.9x on noise
+WORK_RATIO_TOLERANCE = 1.05  # batched work must stay <= 1.05x reference
+COUNTER_DRIFT = 1.5  # fresh counter may drift to 1.5x baseline
+
+
+def fail(msg):
+    print(f"bench-gate: FAIL: {msg}")
+    sys.exit(1)
+
+
+def load(path):
+    try:
+        with open(path) as fh:
+            return json.load(fh)
+    except (OSError, ValueError) as e:
+        fail(f"cannot read {path}: {e}")
+
+
+def case_means(snapshot, group_name):
+    for group in snapshot.get("groups", []):
+        if group.get("name") == group_name:
+            return {c["label"]: c.get("mean_s") for c in group.get("cases", [])}
+    return {}
+
+
+def finite(x):
+    return isinstance(x, (int, float)) and math.isfinite(x) and x > 0
+
+
+def main():
+    if len(sys.argv) != 3:
+        fail("usage: bench_gate.py FRESH.json BASELINE.json")
+    fresh = load(sys.argv[1])
+    baseline = load(sys.argv[2])
+
+    groups = fresh.get("groups", [])
+    if not groups:
+        fail("fresh snapshot has no bench groups")
+    for group in groups:
+        if not group.get("cases"):
+            fail(f"group `{group.get('name')}` has no cases")
+        for case in group["cases"]:
+            if not finite(case.get("mean_s")):
+                fail(f"non-finite mean in `{group['name']}` / `{case.get('label')}`")
+
+    counters = fresh.get("counters", {})
+
+    # --- 1. indexed pickup vs reference window scan (within-run). -------
+    indexed = case_means(fresh, "scheduler pick_tasks (64 nodes, warm index)")
+    reference = case_means(fresh, "scheduler reference window scan (64 nodes, warm index)")
+    for policy in ("max-compute-util", "good-cache-compute"):
+        if policy not in indexed or policy not in reference:
+            fail(f"missing scheduler case `{policy}` in fresh snapshot")
+        speedup = reference[policy] / indexed[policy]
+        print(f"bench-gate: indexed-vs-reference speedup [{policy}] = {speedup:.2f}x")
+        if speedup < SPEEDUP_TOLERANCE:
+            fail(
+                f"indexed pickup slower than the reference scan for {policy}: "
+                f"{speedup:.2f}x < {SPEEDUP_TOLERANCE}x"
+            )
+
+    # --- 2. batched vs reference flow rerate work (within-run). ---------
+    for concurrency in (16, 128):
+        for metric in ("rerates", "heap_updates"):
+            b_key = f"flow/batched_{metric}_per_event@{concurrency}"
+            r_key = f"flow/reference_{metric}_per_event@{concurrency}"
+            if b_key not in counters or r_key not in counters:
+                fail(f"missing flow counters {b_key}/{r_key}")
+            ratio = counters[b_key] / max(counters[r_key], 1e-12)
+            print(
+                f"bench-gate: flow {metric}@{concurrency}: batched/reference = {ratio:.3f}"
+            )
+            if ratio > WORK_RATIO_TOLERANCE:
+                fail(
+                    f"batched flow {metric} exceeds the per-event reference at "
+                    f"{concurrency} concurrent: ratio {ratio:.3f} > {WORK_RATIO_TOLERANCE}"
+                )
+
+    # --- 3. inspected-per-pickup sanity (within-run). -------------------
+    for policy in ("max-compute-util", "good-cache-compute"):
+        key = f"inspected_per_pickup/{policy}"
+        if key not in counters:
+            fail(f"missing counter {key}")
+        # The 64-node fixture window is 6400; sub-linear means far below.
+        if counters[key] > 640:
+            fail(
+                f"{key} = {counters[key]:.1f}: pickup cost is tracking the "
+                "window again (sub-linear pickup regressed)"
+            )
+
+    # --- 4. counter drift vs the committed baseline. --------------------
+    if not baseline.get("measured", False):
+        print(
+            "bench-gate: baseline not yet measured "
+            "(`measured: false`) — skipping drift checks; the bench job "
+            "refreshes it one-shot on the next main push"
+        )
+    else:
+        # Only per-unit-of-work counters are machine-independent; raw
+        # totals (boundary/queries, cold_seek_steps, ...) scale with the
+        # wall-clock-sized iteration count Bench::iter picks, so a faster
+        # runner would inflate them with no real regression.
+        ratio_suffixes = ("per_query", "per_event", "per_pickup")
+        base_counters = baseline.get("counters", {})
+        checked = skipped = 0
+        for key, base_value in base_counters.items():
+            if not any(s in key for s in ratio_suffixes):
+                skipped += 1
+                continue
+            if key not in counters or base_value is None or base_value <= 0:
+                continue
+            ratio = counters[key] / base_value
+            checked += 1
+            if ratio > COUNTER_DRIFT:
+                fail(
+                    f"counter `{key}` drifted {ratio:.2f}x above the baseline "
+                    f"({counters[key]:.3f} vs {base_value:.3f})"
+                )
+        print(
+            f"bench-gate: {checked} baseline ratio counters within {COUNTER_DRIFT}x "
+            f"({skipped} machine-dependent totals skipped)"
+        )
+
+    print("bench-gate: PASS")
+
+
+if __name__ == "__main__":
+    main()
