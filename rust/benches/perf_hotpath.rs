@@ -1,10 +1,11 @@
 //! §Perf hot-path microbenchmarks (DESIGN.md §8, EXPERIMENTS.md §Perf).
 //!
 //! Covers the L3 hot paths: scheduler decisions (indexed pickup vs the
-//! retained reference window scan), wait-queue window ops, cache churn,
-//! flow-network transfer churn (batched vs per-event reference rerating),
-//! plus the whole-simulation event rate. Run before/after every
-//! optimization:
+//! retained reference window scan), epoch-lazy pending-index maintenance
+//! vs the eager reference under hot-file churn, memoized notify ranking,
+//! wait-queue window ops, cache churn, flow-network transfer churn
+//! (batched vs per-event reference rerating), plus the whole-simulation
+//! event rate. Run before/after every optimization:
 //!
 //!     cargo bench --bench perf_hotpath
 //!
@@ -13,14 +14,16 @@
 //! `BENCH_baseline.json` at the workspace root (the committed perf
 //! trajectory — see that file's header). Besides wall times, the snapshot
 //! carries **deterministic work counters** (tasks inspected per pickup,
-//! boundary-cursor steps, flow rerates per event); `tools/bench_gate.py`
-//! gates CI on those and on within-run speedup ratios, which shared-runner
-//! noise cannot fake.
+//! boundary-cursor steps, flow rerates per event, pending maintenance ops
+//! lazy-vs-eager, notify memo hits and holder recounts);
+//! `tools/bench_gate.py` gates CI on those and on within-run ratios,
+//! which shared-runner noise cannot fake. README "Benchmarks & CI gates"
+//! documents every counter and its enforced ratio.
 
 use datadiffusion::cache::{CacheConfig, EvictionPolicy, ObjectCache};
 use datadiffusion::config::ExperimentConfig;
 use datadiffusion::coordinator::executor::ExecutorRegistry;
-use datadiffusion::coordinator::pending::PendingIndex;
+use datadiffusion::coordinator::pending::{PendingIndex, PendingStats};
 use datadiffusion::coordinator::queue::{Task, WaitQueue};
 use datadiffusion::coordinator::scheduler::{DispatchPolicy, Scheduler, SchedulerConfig};
 use datadiffusion::ids::{ExecutorId, FileId, TaskId};
@@ -36,6 +39,8 @@ fn main() {
     let groups = vec![
         bench_scheduler_decision(&mut counters),
         bench_scheduler_reference_scan(),
+        bench_pending_maintenance(&mut counters),
+        bench_notify(&mut counters),
         bench_waitqueue(&mut counters),
         bench_cache(),
         bench_flownet(&mut counters),
@@ -174,6 +179,190 @@ fn bench_scheduler_reference_scan() -> Bench {
             }
         });
     }
+    let _ = b.write_csv();
+    b
+}
+
+/// Fixture for the hot-file maintenance contrast: 2 000 queued readers
+/// of one popular file plus 40 medium files (17 readers each — above the
+/// eager-apply cap, so they defer too and can overflow a patch log).
+fn pending_fixture(lazy: bool) -> (WaitQueue, LocationIndex, PendingIndex, Vec<ExecutorId>) {
+    let index = LocationIndex::new();
+    let mut queue = WaitQueue::new();
+    let mut pending = if lazy {
+        PendingIndex::new()
+    } else {
+        PendingIndex::eager()
+    };
+    let mut id = 0u64;
+    for _ in 0..2_000 {
+        let qref = queue.push_back(Task {
+            id: TaskId(id),
+            files: vec![FileId(0)],
+            compute: Micros::ZERO,
+            arrival: Micros::ZERO,
+        });
+        pending.on_push(&queue, qref, &index);
+        id += 1;
+    }
+    for f in 1..=40u32 {
+        for _ in 0..17 {
+            let qref = queue.push_back(Task {
+                id: TaskId(id),
+                files: vec![FileId(f)],
+                compute: Micros::ZERO,
+                arrival: Micros::ZERO,
+            });
+            pending.on_push(&queue, qref, &index);
+            id += 1;
+        }
+    }
+    let execs: Vec<ExecutorId> = (0..8u32).map(ExecutorId).collect();
+    (queue, index, pending, execs)
+}
+
+/// Hot-file candidate maintenance, lazy vs eager (ROADMAP "bound
+/// hot-file pending maintenance"): a cache insert/evict of a file with
+/// 2K pending readers is O(1) bookkeeping on the lazy path and an
+/// O(readers) walk on the eager reference. Wall times are measured per
+/// churn event (including the event's share of consults); the
+/// deterministic op counters below feed the lazy ≤ eager CI gate.
+fn bench_pending_maintenance(counters: &mut Vec<(String, f64)>) -> Bench {
+    let mut b = Bench::new("pending index maintenance (hot file, 2K readers)");
+    let hot = FileId(0);
+    for lazy in [true, false] {
+        let (queue, mut index, mut pending, execs) = pending_fixture(lazy);
+        let mut r = 0u64;
+        let label = if lazy {
+            "lazy churn event (+consult every 7)"
+        } else {
+            "eager churn event (+consult every 7)"
+        };
+        // Consult stride 7 is coprime with the 8-executor rotation, so
+        // refreshes visit every executor (a multiple of 8 would pin all
+        // consults — and hence all lazy patch cost — to execs[0]).
+        b.iter(label, 1, || {
+            let e = execs[(r % execs.len() as u64) as usize];
+            index.add(hot, e);
+            pending.on_index_add(hot, e);
+            index.remove(hot, e);
+            pending.on_index_remove(hot, e, &queue, &index);
+            if r % 7 == 0 {
+                pending.refresh(e, &queue, &index);
+            }
+            r += 1;
+        });
+    }
+
+    // Deterministic pass: a fixed churn trace driven through both modes,
+    // so the counters are machine-independent. 1 000 hot add/evict
+    // cycles (2 000 index events) with a consult every 7 cycles (coprime
+    // with the 8-executor rotation, so every executor pays consult-time
+    // patches), then 40 medium-file inserts at one executor (overflowing
+    // the lazy patch log) and a final settle-everything consult round.
+    let drive = |lazy: bool| -> (PendingStats, u64) {
+        let (queue, mut index, mut pending, execs) = pending_fixture(lazy);
+        let mut events = 0u64;
+        for r in 0..1_000u64 {
+            let e = execs[(r % execs.len() as u64) as usize];
+            index.add(hot, e);
+            pending.on_index_add(hot, e);
+            index.remove(hot, e);
+            pending.on_index_remove(hot, e, &queue, &index);
+            events += 2;
+            if r % 7 == 0 {
+                pending.refresh(e, &queue, &index);
+            }
+        }
+        for f in 1..=40u32 {
+            index.add(FileId(f), execs[0]);
+            pending.on_index_add(FileId(f), execs[0]);
+            events += 1;
+        }
+        for &e in &execs {
+            pending.refresh(e, &queue, &index);
+        }
+        (pending.stats.clone(), events)
+    };
+    let (lazy_stats, events) = drive(true);
+    let (eager_stats, _) = drive(false);
+    println!(
+        "    maintenance ops over {events} events: lazy {} (rebuilds {}, \
+         dirty {}) vs eager {}",
+        lazy_stats.maintenance_ops,
+        lazy_stats.epoch_rebuilds,
+        lazy_stats.dirty_records,
+        eager_stats.maintenance_ops
+    );
+    counters.push((
+        "pending/maintenance_ops".into(),
+        lazy_stats.maintenance_ops as f64,
+    ));
+    counters.push((
+        "pending/eager_maintenance_ops".into(),
+        eager_stats.maintenance_ops as f64,
+    ));
+    counters.push((
+        "pending/maintenance_ops_per_event".into(),
+        lazy_stats.maintenance_ops as f64 / events.max(1) as f64,
+    ));
+    counters.push((
+        "pending/eager_maintenance_ops_per_event".into(),
+        eager_stats.maintenance_ops as f64 / events.max(1) as f64,
+    ));
+    counters.push((
+        "pending/epoch_rebuilds".into(),
+        lazy_stats.epoch_rebuilds as f64,
+    ));
+    let _ = b.write_csv();
+    b
+}
+
+/// Notify-side reuse (ROADMAP "notify-side pending reuse"): repeated
+/// phase-1 decisions for one multi-file head must reuse the memoized
+/// (overlap, id) ranking — `holder_recounts` is the tripwire for the
+/// retired per-call recount and must stay 0.
+fn bench_notify(counters: &mut Vec<(String, f64)>) -> Bench {
+    let mut b = Bench::new("scheduler select_notify (64 nodes, warm index)");
+    let mut fx = sched_fixture(true);
+    let mut sched = Scheduler::new(SchedulerConfig {
+        policy: DispatchPolicy::GoodCacheCompute,
+        ..SchedulerConfig::default()
+    });
+    let single = [FileId(1)];
+    b.iter("single-file head (bitset fast path)", 1, || {
+        black_box(sched.select_notify(&single, &fx.reg, &mut fx.pending, &fx.index));
+    });
+    let multi = [FileId(1), FileId(2), FileId(3)];
+    b.iter("3-file head (memoized ranking)", 1, || {
+        black_box(sched.select_notify(&multi, &fx.reg, &mut fx.pending, &fx.index));
+    });
+
+    // Deterministic pass for the counters.
+    let mut fx = sched_fixture(true);
+    let mut sched = Scheduler::new(SchedulerConfig {
+        policy: DispatchPolicy::GoodCacheCompute,
+        ..SchedulerConfig::default()
+    });
+    for _ in 0..1_000u32 {
+        black_box(sched.select_notify(&multi, &fx.reg, &mut fx.pending, &fx.index));
+    }
+    let hits = fx.pending.stats.notify_memo_hits;
+    let builds = fx.pending.stats.notify_memo_builds;
+    println!(
+        "    1000 decisions, one head: {builds} ranking build(s), {hits} memo hits, \
+         {} holder recounts",
+        sched.stats.holder_recounts
+    );
+    counters.push((
+        "notify/holder_recounts".into(),
+        sched.stats.holder_recounts as f64,
+    ));
+    counters.push(("notify/memo_builds".into(), builds as f64));
+    counters.push((
+        "notify/memo_hits_per_decision".into(),
+        hits as f64 / sched.stats.notify_decisions.max(1) as f64,
+    ));
     let _ = b.write_csv();
     b
 }

@@ -243,6 +243,22 @@ impl WaitQueue {
             .expect("QueueRef already removed")
     }
 
+    /// Sequence number of the task currently occupying `qref`, or `None`
+    /// when the slot is empty (the task was removed). This is the O(1)
+    /// liveness probe for **lazily maintained candidate hints**
+    /// ([`crate::coordinator::pending`]): a hint `(seq, qref)` refers to a
+    /// still-queued task **iff** `live_seq(qref) == Some(seq)` — slots are
+    /// reused but sequence numbers never are, so a reused slot can never
+    /// alias an old hint.
+    pub fn live_seq(&self, qref: QueueRef) -> Option<u64> {
+        let slot = &self.slots[qref.0 as usize];
+        if slot.task.is_some() {
+            Some(slot.seq)
+        } else {
+            None
+        }
+    }
+
     /// Sequence number of a queued task. Sequence order equals queue
     /// order (tasks only enter at the tail), so two tasks' relative queue
     /// positions compare as integers.
@@ -500,6 +516,22 @@ mod tests {
         assert_eq!(q.len(), 1);
         // Arena should not have grown.
         assert_eq!(q.slots.len(), 1);
+    }
+
+    #[test]
+    fn live_seq_detects_removal_and_slot_reuse() {
+        let mut q = WaitQueue::new();
+        let r = q.push_back(task(1));
+        let seq = q.seq_of(r);
+        assert_eq!(q.live_seq(r), Some(seq));
+        q.remove(r);
+        assert_eq!(q.live_seq(r), None);
+        // The slot is reused, but with a fresh (never-reused) seq: an old
+        // (seq, qref) hint can never validate against the new occupant.
+        let r2 = q.push_back(task(2));
+        assert_eq!(r2, r, "slot must be recycled for this test");
+        assert_ne!(q.live_seq(r2), Some(seq));
+        assert_eq!(q.live_seq(r2), Some(q.seq_of(r2)));
     }
 
     #[test]

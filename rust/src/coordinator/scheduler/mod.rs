@@ -49,6 +49,32 @@
 //! queue order). [`Scheduler::pick_refs_reference`] retains the O(W)
 //! scan as the executable specification, and the `sched_parity`
 //! differential property test asserts equality across all five policies.
+//!
+//! ## §Perf iteration 4 — epoch-lazy candidates + notify-side reuse
+//!
+//! Iteration 3 made the pickup sub-linear but left two per-event costs
+//! (ROADMAP items, both closed here):
+//!
+//! * **Candidate maintenance**: a cache insert/evict of a popular file
+//!   walked every pending reader. The pickup now consults the pending
+//!   index through [`PendingIndex::refresh`](crate::coordinator::pending::PendingIndex::refresh)
+//!   — cache events are O(1)-bounded bookkeeping, settled lazily at the
+//!   consult (see [`crate::coordinator::pending`] for the epoch
+//!   invariants). Lazily maintained entries are *hints*: phase A
+//!   validates each against the queue
+//!   ([`WaitQueue::live_seq`](crate::coordinator::queue::WaitQueue::live_seq),
+//!   O(1)) and purges dead ones on encounter, so dispatch decisions stay
+//!   bit-identical to the eager reference.
+//! * **Notify scoring**: [`Scheduler::select_notify`] used to rebuild a
+//!   per-executor overlap count from the holder sets on every call. The
+//!   single-file fast path (the paper's workload shape) never counted;
+//!   the multi-file path now consults
+//!   [`PendingIndex::head_ranked`](crate::coordinator::pending::PendingIndex::head_ranked)
+//!   — a ranking memoized per (head file set, index epoch) — and only
+//!   probes free-ness per call. [`SchedulerStats::holder_recounts`] is a
+//!   tripwire for the retired per-call recount: it stays 0 on the
+//!   indexed path, `perf_hotpath` snapshots it, and the CI bench gate
+//!   fails if it ever moves.
 
 pub mod policy;
 
@@ -59,7 +85,6 @@ use crate::coordinator::pending::{remove_queued, PendingIndex};
 use crate::coordinator::queue::{QueueRef, Task, WaitQueue};
 use crate::ids::{ExecutorId, FileId};
 use crate::index::LocationIndex;
-use std::collections::HashMap;
 
 /// Scheduler tuning knobs (§3.2, §5.1).
 #[derive(Debug, Clone)]
@@ -123,6 +148,13 @@ pub struct SchedulerStats {
     pub tasks_inspected: u64,
     /// Tasks dispatched with a 100 % local-hit score.
     pub full_hit_dispatches: u64,
+    /// Per-call holder-overlap recounts in `select_notify` — the cost the
+    /// memoized ranking retired. Nothing on the indexed path increments
+    /// this; it exists as a tripwire (snapshotted by `perf_hotpath`,
+    /// asserted == 0 by `tools/bench_gate.py`) so a future change that
+    /// reintroduces per-call recounting fails CI instead of silently
+    /// regressing the Fig 3 notify column.
+    pub holder_recounts: u64,
 }
 
 /// The data-aware scheduler. Pure logic: no clocks, no I/O — both the
@@ -135,12 +167,13 @@ pub struct Scheduler {
     next_free_hint: u32,
     /// Cost/behaviour counters.
     pub stats: SchedulerStats,
-    /// Scratch buffer reused across multi-file notify decisions (perf:
-    /// avoids an allocation per decision on the hot path).
-    candidates: HashMap<ExecutorId, usize>,
     /// Scratch buffer for partial candidates — (class, misses, seq, ref)
     /// (perf: §Perf iteration 1 — reuse instead of re-allocating).
     partial_scratch: Vec<(u8, usize, u64, QueueRef)>,
+    /// Scratch for dead candidate hints found during phase A (lazily
+    /// maintained entries whose task already left the queue; purged from
+    /// the pending index after the selection — §Perf iteration 4).
+    dead_scratch: Vec<u64>,
 }
 
 impl Scheduler {
@@ -150,8 +183,8 @@ impl Scheduler {
             config,
             next_free_hint: 0,
             stats: SchedulerStats::default(),
-            candidates: HashMap::new(),
             partial_scratch: Vec::new(),
+            dead_scratch: Vec::new(),
         }
     }
 
@@ -169,10 +202,20 @@ impl Scheduler {
 
     /// **Phase 1 — notification.** Choose an executor to notify for the
     /// task with files `files` at the head of the wait queue.
+    ///
+    /// The decision reuses the pending machinery instead of recounting
+    /// holder overlap per call (§Perf iteration 4): single-file heads
+    /// take the bitset fast path (every holder scores 1 — no counting to
+    /// do), multi-file heads consult the ranking
+    /// [`PendingIndex::head_ranked`] memoizes per (file set, index
+    /// epoch), so repeated notifies for one head — the saturated-cluster
+    /// pattern — only probe free-ness. `pending` is untouched for
+    /// first-available (which never uses it).
     pub fn select_notify(
         &mut self,
         files: &[FileId],
         registry: &ExecutorRegistry,
+        pending: &mut PendingIndex,
         index: &LocationIndex,
     ) -> NotifyOutcome {
         self.stats.notify_decisions += 1;
@@ -187,48 +230,36 @@ impl Scheduler {
             };
         }
 
-        // Score candidates: executors holding any of the task's files,
-        // weighted by how many they hold (the paper's candidate counting).
         let mut any_holder = false;
-        let mut best: Option<(usize, ExecutorId)> = None;
+        let mut best: Option<ExecutorId> = None;
         if let [f] = files {
             // Single-file fast path (the paper's workload shape): every
             // holder scores 1, so the best free candidate is the first
             // free holder in ascending-id bitset order — same tie-break
-            // as the scored path, no hash map involved.
+            // as the ranked path, no ranking needed.
             if let Some(holders) = index.holders(*f) {
                 for e in holders {
                     any_holder = true;
                     if registry.is_free(e) {
-                        best = Some((1, e));
+                        best = Some(e);
                         break;
                     }
                 }
             }
         } else {
-            self.candidates.clear();
-            for &f in files {
-                if let Some(holders) = index.holders(f) {
-                    for e in holders {
-                        any_holder = true;
-                        *self.candidates.entry(e).or_insert(0) += 1;
-                    }
-                }
-            }
-            // Best free candidate, ties broken by id for determinism.
-            for (&e, &score) in self.candidates.iter() {
+            // Multi-file: the memoized (overlap desc, id asc) ranking.
+            // The first free entry is exactly the reference tie-break's
+            // winner; overlap is never recounted here.
+            let ranked = pending.head_ranked(files, index);
+            any_holder = !ranked.is_empty();
+            for &(e, _overlap) in ranked {
                 if registry.is_free(e) {
-                    let better = match best {
-                        None => true,
-                        Some((bs, be)) => score > bs || (score == bs && e < be),
-                    };
-                    if better {
-                        best = Some((score, e));
-                    }
+                    best = Some(e);
+                    break;
                 }
             }
         }
-        if let Some((_, e)) = best {
+        if let Some(e) = best {
             return NotifyOutcome::Preferred(e);
         }
 
@@ -318,7 +349,7 @@ impl Scheduler {
         exec: ExecutorId,
         m: usize,
         queue: &mut WaitQueue,
-        pending: &PendingIndex,
+        pending: &mut PendingIndex,
         registry: &ExecutorRegistry,
         index: &LocationIndex,
     ) -> Vec<QueueRef> {
@@ -328,15 +359,29 @@ impl Scheduler {
         let mcu_mode = self.mcu_mode(registry);
         let mut inspected = 0u64;
 
+        // Settle the epoch-lazy maintenance debt for this executor before
+        // consulting its candidate set (O(1) when nothing changed since
+        // the last consult — see coordinator::pending).
+        pending.refresh(exec, queue, index);
+
         // Phase A — enumerate indexed candidates (tasks with ≥1 file
         // cached at `exec`) in queue order; cost ∝ cache overlap.
         let mut fulls: Vec<QueueRef> = Vec::new();
         let mut partial = std::mem::take(&mut self.partial_scratch);
         partial.clear();
+        let mut dead = std::mem::take(&mut self.dead_scratch);
+        dead.clear();
         if let Some(cands) = pending.candidates(exec) {
             for (&seq, &qref) in cands {
                 if boundary.is_some_and(|b| seq >= b) {
                     break; // past the window boundary; so is everything later
+                }
+                // Refreshed entries are exact for live tasks, but a dead
+                // hint can linger (pending.rs invariant 2): validate in
+                // O(1) and purge on encounter.
+                if queue.live_seq(qref) != Some(seq) {
+                    dead.push(seq);
+                    continue;
                 }
                 inspected += 1;
                 let task = queue.get(qref);
@@ -388,6 +433,14 @@ impl Scheduler {
             }
         }
         self.stats.tasks_inspected += inspected;
+
+        // Drop the dead hints phase A encountered so they are never
+        // revisited (the set may keep others past the early-stop point;
+        // they die at their own encounter or at an overflow rebuild).
+        if !dead.is_empty() {
+            pending.purge_dead(exec, &dead);
+        }
+        self.dead_scratch = dead;
 
         let mut refs = fulls;
         if refs.len() < m && !partial.is_empty() {
@@ -552,11 +605,11 @@ mod tests {
 
     #[test]
     fn first_available_round_robins() {
-        let (reg, index, _, _) = setup(3);
+        let (reg, index, _, mut p) = setup(3);
         let mut s = sched(DispatchPolicy::FirstAvailable);
         let mut picks = Vec::new();
         for _ in 0..3 {
-            match s.select_notify(&[FileId(0)], &reg, &index) {
+            match s.select_notify(&[FileId(0)], &reg, &mut p, &index) {
                 NotifyOutcome::Fallback(e) => picks.push(e.0),
                 other => panic!("unexpected {other:?}"),
             }
@@ -567,78 +620,108 @@ mod tests {
 
     #[test]
     fn notify_prefers_holder() {
-        let (reg, mut index, _, _) = setup(3);
+        let (reg, mut index, _, mut p) = setup(3);
         index.add(FileId(7), ExecutorId(2));
         let mut s = sched(DispatchPolicy::MaxComputeUtil);
         assert_eq!(
-            s.select_notify(&[FileId(7)], &reg, &index),
+            s.select_notify(&[FileId(7)], &reg, &mut p, &index),
             NotifyOutcome::Preferred(ExecutorId(2))
         );
     }
 
     #[test]
     fn notify_multi_file_prefers_highest_score() {
-        let (reg, mut index, _, _) = setup(3);
+        let (reg, mut index, _, mut p) = setup(3);
         index.add(FileId(1), ExecutorId(0));
         index.add(FileId(1), ExecutorId(2));
         index.add(FileId(2), ExecutorId(2));
         let mut s = sched(DispatchPolicy::MaxComputeUtil);
         // Executor 2 holds both files; executor 0 only one.
         assert_eq!(
-            s.select_notify(&[FileId(1), FileId(2)], &reg, &index),
+            s.select_notify(&[FileId(1), FileId(2)], &reg, &mut p, &index),
             NotifyOutcome::Preferred(ExecutorId(2))
         );
     }
 
     #[test]
+    fn notify_memoizes_multifile_ranking_without_recounts() {
+        let (mut reg, mut index, _, mut p) = setup(3);
+        index.add(FileId(1), ExecutorId(0));
+        index.add(FileId(2), ExecutorId(0));
+        index.add(FileId(1), ExecutorId(1));
+        let files = [FileId(1), FileId(2)];
+        let mut s = sched(DispatchPolicy::MaxComputeUtil);
+        assert_eq!(
+            s.select_notify(&files, &reg, &mut p, &index),
+            NotifyOutcome::Preferred(ExecutorId(0))
+        );
+        // Same head, busier cluster: the ranking is reused, only
+        // free-ness is re-probed.
+        reg.start_task(ExecutorId(0), Micros::ZERO);
+        reg.start_task(ExecutorId(0), Micros::ZERO);
+        assert_eq!(
+            s.select_notify(&files, &reg, &mut p, &index),
+            NotifyOutcome::Preferred(ExecutorId(1))
+        );
+        assert_eq!(p.stats.notify_memo_builds, 1);
+        assert_eq!(p.stats.notify_memo_hits, 1);
+        assert_eq!(s.stats.holder_recounts, 0);
+        // An index change invalidates the memo.
+        index.add(FileId(2), ExecutorId(2));
+        p.on_index_add(FileId(2), ExecutorId(2));
+        let _ = s.select_notify(&files, &reg, &mut p, &index);
+        assert_eq!(p.stats.notify_memo_builds, 2);
+    }
+
+    #[test]
     fn mch_waits_for_busy_holder() {
-        let (mut reg, mut index, _, _) = setup(2);
+        let (mut reg, mut index, _, mut p) = setup(2);
         index.add(FileId(7), ExecutorId(0));
         // Make executor 0 fully busy.
         reg.start_task(ExecutorId(0), Micros::ZERO);
         reg.start_task(ExecutorId(0), Micros::ZERO);
         let mut s = sched(DispatchPolicy::MaxCacheHit);
         assert_eq!(
-            s.select_notify(&[FileId(7)], &reg, &index),
+            s.select_notify(&[FileId(7)], &reg, &mut p, &index),
             NotifyOutcome::Wait
         );
         // But a file cached nowhere bootstraps to a free executor.
         assert_eq!(
-            s.select_notify(&[FileId(8)], &reg, &index),
+            s.select_notify(&[FileId(8)], &reg, &mut p, &index),
             NotifyOutcome::Fallback(ExecutorId(1))
         );
     }
 
     #[test]
     fn mcu_falls_back_to_free_executor() {
-        let (mut reg, mut index, _, _) = setup(2);
+        let (mut reg, mut index, _, mut p) = setup(2);
         index.add(FileId(7), ExecutorId(0));
         reg.start_task(ExecutorId(0), Micros::ZERO);
         reg.start_task(ExecutorId(0), Micros::ZERO);
         let mut s = sched(DispatchPolicy::MaxComputeUtil);
         assert!(matches!(
-            s.select_notify(&[FileId(7)], &reg, &index),
+            s.select_notify(&[FileId(7)], &reg, &mut p, &index),
             NotifyOutcome::Fallback(ExecutorId(1))
         ));
     }
 
     #[test]
     fn gcc_switches_on_utilization() {
-        let (mut reg, mut index, _, _) = setup(2);
+        let (mut reg, mut index, _, mut p) = setup(2);
         index.add(FileId(7), ExecutorId(0));
         reg.start_task(ExecutorId(0), Micros::ZERO);
         reg.start_task(ExecutorId(0), Micros::ZERO);
         let mut s = sched(DispatchPolicy::GoodCacheCompute);
         // util = 2/4 = 0.5 < 0.8 → mcu mode → fallback.
         assert!(matches!(
-            s.select_notify(&[FileId(7)], &reg, &index),
+            s.select_notify(&[FileId(7)], &reg, &mut p, &index),
             NotifyOutcome::Fallback(_)
         ));
         // Push util to 0.75… still below. One more task → 3/4 < 0.8; fill all → 1.0.
         reg.start_task(ExecutorId(1), Micros::ZERO);
         reg.start_task(ExecutorId(1), Micros::ZERO);
         assert_eq!(
-            s.select_notify(&[FileId(7)], &reg, &index),
+            s.select_notify(&[FileId(7)], &reg, &mut p, &index),
             NotifyOutcome::NoneFree
         );
     }
@@ -752,6 +835,42 @@ mod tests {
             "inspected {} — expected ~overlap",
             s.stats.tasks_inspected
         );
+    }
+
+    #[test]
+    fn pickup_skips_and_purges_dead_hints() {
+        use crate::coordinator::pending::FANOUT_CAP;
+        // A hot file (fan-out above the cap, so its eviction defers),
+        // whose first reader is dispatched before any consult: the
+        // pickup must skip the resulting dead hint, purge it, and still
+        // agree with the reference scan.
+        let (reg, mut index, mut q, mut p) = setup(2);
+        index.add(FileId(1), ExecutorId(0));
+        let readers = (FANOUT_CAP + 4) as u64;
+        for i in 0..readers {
+            push(&mut q, &mut p, &index, task(i, &[1]));
+        }
+        index.remove(FileId(1), ExecutorId(0));
+        p.on_index_remove(FileId(1), ExecutorId(0), &q, &index);
+        // Head leaves the queue while the eviction is still deferred.
+        let head = q.front_ref().unwrap();
+        crate::coordinator::pending::remove_queued(&mut q, &mut p, head, &index);
+        // A dispatchable task for the asking executor.
+        index.add(FileId(9), ExecutorId(0));
+        p.on_index_add(FileId(9), ExecutorId(0));
+        push(&mut q, &mut p, &index, task(readers, &[9]));
+
+        let mut s = sched(DispatchPolicy::MaxComputeUtil);
+        let expected: Vec<u64> = s
+            .pick_refs_reference(ExecutorId(0), 1, &q, &reg, &index)
+            .iter()
+            .map(|&r| q.get(r).id.0)
+            .collect();
+        let picked = s.pick_tasks(ExecutorId(0), 1, &mut q, &mut p, &reg, &index);
+        let ids: Vec<u64> = picked.iter().map(|t| t.id.0).collect();
+        assert_eq!(ids, expected, "dead hints must not perturb dispatch");
+        assert_eq!(ids, vec![readers], "full hit on file 9 wins");
+        p.check_consistent(&q, &index).unwrap();
     }
 
     #[test]

@@ -60,6 +60,13 @@ impl DispatchPolicy {
 
     /// Does this policy use data diffusion (per-executor caching)?
     /// first-available works directly against persistent storage.
+    ///
+    /// This flag also gates all pending-index upkeep: the engines only
+    /// maintain [`crate::coordinator::pending::PendingIndex`] (pushes,
+    /// cache-event bookkeeping, epoch bumps) when it returns true —
+    /// first-available pops the queue head and never consults candidate
+    /// sets, so paying maintenance for it would be pure overhead. See
+    /// `docs/ARCHITECTURE.md` for the layer map.
     pub fn uses_caching(&self) -> bool {
         !matches!(self, DispatchPolicy::FirstAvailable)
     }

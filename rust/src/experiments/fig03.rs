@@ -112,7 +112,7 @@ pub fn bench_policy(
     while !queue.is_empty() {
         let head_files = queue.front().expect("non-empty").files.clone();
         let tn = Instant::now();
-        let outcome = sched.select_notify(&head_files, &reg, &index);
+        let outcome = sched.select_notify(&head_files, &reg, &mut pend, &index);
         notify_s += tn.elapsed().as_secs_f64();
         let exec = match outcome {
             crate::coordinator::scheduler::NotifyOutcome::Preferred(e)

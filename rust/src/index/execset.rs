@@ -109,6 +109,30 @@ impl ExecSet {
         self.iter().next()
     }
 
+    /// Remove every member, keeping the word allocation (scratch reuse).
+    pub fn clear(&mut self) {
+        self.words.fill(0);
+        self.count = 0;
+    }
+
+    /// Add every member of `other` — a word-wise OR, so the cost is
+    /// O(words), independent of how many members either set has. This is
+    /// the notify-memo union primitive: the candidate executors of a
+    /// multi-file head task are the union of its files' holder sets, and
+    /// building that union must not walk holders one by one (see
+    /// [`crate::coordinator::pending::PendingIndex::head_ranked`]).
+    pub fn union_with(&mut self, other: &ExecSet) {
+        if other.words.len() > self.words.len() {
+            self.words.resize(other.words.len(), 0);
+        }
+        let mut count = 0u32;
+        for (i, w) in self.words.iter_mut().enumerate() {
+            *w |= other.words.get(i).copied().unwrap_or(0);
+            count += w.count_ones();
+        }
+        self.count = count;
+    }
+
     /// Members shared with `other` — a word-wise AND + popcount.
     pub fn intersection_count(&self, other: &ExecSet) -> usize {
         self.words
@@ -214,6 +238,32 @@ mod tests {
         let s: ExecSet = ids.iter().map(|&i| ExecutorId(i)).collect();
         let got: Vec<u32> = s.iter().map(|e| e.0).collect();
         assert_eq!(got, vec![0, 5, 63, 64, 129, 130]);
+    }
+
+    #[test]
+    fn union_with_ors_words_and_recounts() {
+        let mut a: ExecSet = [0u32, 5, 64].iter().map(|&i| ExecutorId(i)).collect();
+        let b: ExecSet = [5u32, 6, 200].iter().map(|&i| ExecutorId(i)).collect();
+        a.union_with(&b);
+        let got: Vec<u32> = a.iter().map(|e| e.0).collect();
+        assert_eq!(got, vec![0, 5, 6, 64, 200]);
+        assert_eq!(a.len(), 5);
+        // Union with a shorter set must keep the long tail intact.
+        let c: ExecSet = [1u32].iter().map(|&i| ExecutorId(i)).collect();
+        a.union_with(&c);
+        assert_eq!(a.len(), 6);
+        assert!(a.contains(ExecutorId(200)));
+    }
+
+    #[test]
+    fn clear_empties_but_keeps_capacity() {
+        let mut s: ExecSet = [3u32, 190].iter().map(|&i| ExecutorId(i)).collect();
+        s.clear();
+        assert!(s.is_empty());
+        assert_eq!(s.iter().count(), 0);
+        assert_eq!(s, ExecSet::new(), "cleared set equals a fresh one");
+        assert!(s.insert(ExecutorId(7)));
+        assert_eq!(s.len(), 1);
     }
 
     #[test]

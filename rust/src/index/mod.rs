@@ -21,6 +21,16 @@
 //! and replica counts ([`LocationIndex::replication`]) are O(1), matching
 //! the paper's O(|θ(κ)| + replication + min(|Q|, W)) scheduling-cost
 //! argument.
+//!
+//! The bitset representation is also what makes the §Perf iteration 4
+//! notify memo cheap: the candidate executors of a multi-file head task
+//! are the word-wise **union** of its files' holder sets
+//! ([`ExecSet::union_with`]), built without iterating holders one by
+//! one. Every mutation here must be mirrored into
+//! [`crate::coordinator::pending::PendingIndex`] by the caller (the
+//! engines' single mutation site is `coordinator::resolve_access` plus
+//! executor deregistration) — the pending index's validity epochs hang
+//! off that discipline.
 
 pub mod execset;
 

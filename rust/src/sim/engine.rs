@@ -143,8 +143,11 @@ struct Engine {
     reg: ExecutorRegistry,
     queue: WaitQueue,
     index: LocationIndex,
-    /// Inverted pending-task index (maintained for caching policies only;
-    /// kept coherent with `queue` + `index` at every mutation site).
+    /// Inverted pending-task index (maintained for caching policies only)
+    /// in its default **epoch-lazy** mode: every `LocationIndex` mutation
+    /// site below reports to it (O(1)-bounded per event), and the
+    /// scheduler settles the deferred candidate maintenance at each
+    /// pickup — see `coordinator::pending` for the invariants.
     pending: PendingIndex,
     prov: Provisioner,
     caches: HashMap<ExecutorId, ObjectCache>,
@@ -409,7 +412,13 @@ impl Engine {
             return;
         };
         let files = head.files.clone();
-        match self.sched.select_notify(&files, &self.reg, &self.index) {
+        // Phase 1 consults the pending index's memoized head ranking, so
+        // repeated notifies for the same head (arrivals while saturated)
+        // never recount holder overlap.
+        match self
+            .sched
+            .select_notify(&files, &self.reg, &mut self.pending, &self.index)
+        {
             NotifyOutcome::Preferred(e) | NotifyOutcome::Fallback(e) => {
                 self.schedule_pickup(e);
             }

@@ -1,8 +1,8 @@
 //! Fluid-flow transfer model — the bandwidth-contention substrate.
 //!
 //! Every shared resource (the GPFS server, each node's local disk, each
-//! node's NIC in/out direction) is a [`Link`] with an ideal capacity ν.
-//! A [`Transfer`] occupies one or more links; its instantaneous rate is
+//! node's NIC in/out direction) is a link with an ideal capacity ν.
+//! A transfer occupies one or more links; its instantaneous rate is
 //! `min over links (capacity / active-count)` — the paper's available-
 //! bandwidth model η(ν,ω) = ν/ω (§4.1) applied along the path.
 //!
@@ -27,7 +27,7 @@
 //! time provably unchanged ⇒ heap untouched).
 //!
 //! [`RerateMode::Reference`] retains the per-event path
-//! ([`FlowNet::rerate_reference`]) as the executable specification; the
+//! (`FlowNet::rerate_reference`) as the executable specification; the
 //! `flow_parity` differential suite proves both modes produce
 //! **bit-identical completion timestamps** under seeded random churn,
 //! including same-instant pileups.
@@ -44,8 +44,21 @@
 //! the final state a pure function of (timestamp, final counts,
 //! remaining bytes), which both modes compute identically.
 
+//! ## Active-set layout
+//!
+//! Each link keeps its active transfers in a **dense `Vec<u32>`** of
+//! slab indices with swap-remove, not a hash set: the settle and rerate
+//! sweeps (the flush's inner loops under 128-concurrent churn) iterate
+//! it cache-linearly in place, with no per-link scratch copy and no
+//! hashing. Removal is a linear scan, but it happens once per transfer
+//! per link at completion and is dominated by the O(active) rerate that
+//! follows anyway. Iteration order is insertion order — deterministic —
+//! and cannot affect results: rates depend only on active *counts*, and
+//! the completion heap orders ties by transfer id (its entries are
+//! `(key, id)` pairs compared lexicographically), so pop order is
+//! layout-independent.
+
 use crate::util::time::Micros;
-use std::collections::HashSet;
 
 /// Handle to a bandwidth link.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -91,8 +104,9 @@ pub struct FlowStats {
 #[derive(Debug)]
 struct Link {
     capacity_bps: f64,
-    /// Transfers currently using this link.
-    active: HashSet<u32>,
+    /// Transfers currently using this link — dense slab-index vec with
+    /// swap-remove (see the module docs on the active-set layout).
+    active: Vec<u32>,
     /// Pending-rerate flag (batched mode).
     dirty: bool,
     /// Last timestamp this link's co-flows were settled at (settling is
@@ -240,9 +254,6 @@ pub struct FlowNet {
     pub completed: u64,
     /// Rerate cost counters (§Perf).
     pub stats: FlowStats,
-    /// Scratch id buffer reused by settle/rerate (§Perf: avoids a Vec
-    /// allocation per transfer event on the engine's hottest path).
-    scratch: Vec<u32>,
     mode: RerateMode,
     /// Links with a deferred rerate (batched mode; flag lives on the link).
     dirty: Vec<u32>,
@@ -281,7 +292,7 @@ impl FlowNet {
         assert!(capacity_bps > 0.0);
         self.links.push(Link {
             capacity_bps,
-            active: HashSet::new(),
+            active: Vec::new(),
             dirty: false,
             settled_at: Micros::ZERO,
         });
@@ -305,6 +316,12 @@ impl FlowNet {
     /// `now` (still go through the heap for deterministic ordering).
     pub fn start(&mut self, now: Micros, bytes: u64, links: &[LinkId], tag: u64) -> TransferId {
         assert!(!links.is_empty() && links.len() <= 3);
+        // Dense active vecs assume each link appears once per path (a
+        // duplicate would double-count the transfer in the fair share).
+        debug_assert!(
+            links.iter().all(|l| links.iter().filter(|&m| m == l).count() == 1),
+            "transfer path must not repeat a link"
+        );
         self.sync_batch(now);
         let mut arr = [u32::MAX; 3];
         for (i, l) in links.iter().enumerate() {
@@ -334,7 +351,7 @@ impl FlowNet {
             self.settle_link(*l, now);
         }
         for l in links {
-            self.links[l.0 as usize].active.insert(id);
+            self.links[l.0 as usize].active.push(id);
         }
         self.completions.insert(id, Micros::MAX);
         match self.mode {
@@ -382,7 +399,12 @@ impl FlowNet {
             self.settle_link(*l, now);
         }
         for l in &links {
-            self.links[l.0 as usize].active.remove(&id);
+            let active = &mut self.links[l.0 as usize].active;
+            let pos = active
+                .iter()
+                .position(|&t| t == id)
+                .expect("completing transfer must be active on its links");
+            active.swap_remove(pos);
         }
         self.transfers[id as usize] = None;
         self.free.push(id);
@@ -415,10 +437,11 @@ impl FlowNet {
             self.links[l as usize].dirty = false;
         }
         for &l in &dirty {
-            let mut ids = std::mem::take(&mut self.scratch);
-            ids.clear();
-            ids.extend(self.links[l as usize].active.iter().copied());
-            for &id in &ids {
+            // Dense active vec: iterate in place (membership cannot
+            // change during a flush; rerating touches rates and the
+            // completion heap only).
+            for k in 0..self.links[l as usize].active.len() {
+                let id = self.links[l as usize].active[k];
                 let seen = self.transfers[id as usize]
                     .as_ref()
                     .expect("active transfer must live")
@@ -430,7 +453,6 @@ impl FlowNet {
                 self.rerate_one(id, now);
                 self.transfers[id as usize].as_mut().unwrap().epoch = self.epoch;
             }
-            self.scratch = ids;
         }
         dirty.clear();
         self.dirty = dirty;
@@ -471,10 +493,8 @@ impl FlowNet {
             }
             lk.settled_at = now;
         }
-        let mut ids = std::mem::take(&mut self.scratch);
-        ids.clear();
-        ids.extend(self.links[link.0 as usize].active.iter().copied());
-        for &id in &ids {
+        for k in 0..self.links[link.0 as usize].active.len() {
+            let id = self.links[link.0 as usize].active[k];
             let tr = self.transfers[id as usize]
                 .as_mut()
                 .expect("active transfer must live");
@@ -485,7 +505,6 @@ impl FlowNet {
                 self.stats.settles += 1;
             }
         }
-        self.scratch = ids;
     }
 
     /// Recompute one transfer's rate and completion key anchored at
@@ -518,13 +537,10 @@ impl FlowNet {
     /// executable specification the batched flush must agree with
     /// (see `rust/tests/flow_parity.rs`).
     fn rerate_reference(&mut self, link: LinkId, now: Micros) {
-        let mut ids = std::mem::take(&mut self.scratch);
-        ids.clear();
-        ids.extend(self.links[link.0 as usize].active.iter().copied());
-        for &id in &ids {
+        for k in 0..self.links[link.0 as usize].active.len() {
+            let id = self.links[link.0 as usize].active[k];
             self.rerate_one(id, now);
         }
-        self.scratch = ids;
     }
 }
 

@@ -7,18 +7,34 @@
 //! dispatch policies, arbitrary queue/index/registry churn, and window
 //! boundaries deep inside the queue.
 //!
+//! Since §Perf iteration 4 the engine-default pending index is
+//! **epoch-lazy** (`PendingIndex::new()`): cache events defer hot-file
+//! candidate maintenance to the next consult. Every scenario here
+//! therefore drives *three* implementations in lockstep — the lazy
+//! index the scheduler consults, an **eager mirror**
+//! (`PendingIndex::eager()`, the always-exact reference) fed the same
+//! events, and the reference window scan — and checks that dispatch
+//! decisions agree and both index flavors match a from-scratch rebuild.
+//! The hot-file test at the bottom is the fig11-regime regression: one
+//! popular file with ~2K queued readers under LRU eviction churn, where
+//! the lazy path must do strictly less maintenance work than the eager
+//! reference while dispatching identically.
+//!
 //! Phase 1 (`select_notify`) is checked against a naive re-derivation of
 //! the notify scoring as well, so both halves of the §3.2 algorithm are
 //! pinned by an executable specification.
 
+use datadiffusion::cache::{CacheConfig, EvictionPolicy, ObjectCache};
 use datadiffusion::coordinator::executor::ExecutorRegistry;
 use datadiffusion::coordinator::pending::{remove_queued, PendingIndex};
 use datadiffusion::coordinator::queue::{Task, WaitQueue};
+use datadiffusion::coordinator::resolve_access;
 use datadiffusion::coordinator::scheduler::{
     DispatchPolicy, NotifyOutcome, Scheduler, SchedulerConfig,
 };
 use datadiffusion::ids::{ExecutorId, FileId, TaskId};
 use datadiffusion::index::LocationIndex;
+use datadiffusion::util::prng::Pcg64;
 use datadiffusion::util::proptest::{property, Gen};
 use datadiffusion::util::time::Micros;
 use std::collections::BTreeMap;
@@ -33,7 +49,9 @@ fn task(i: u64, files: Vec<FileId>) -> Task {
 }
 
 /// Naive re-derivation of the phase-1 notify decision (scores recounted
-/// through a sorted map; rotation read from the scheduler's hint).
+/// through a sorted map; rotation read from the scheduler's hint). This
+/// is exactly the per-call holder-overlap recount the memoized
+/// `PendingIndex::head_ranked` path retired — kept here as the spec.
 fn reference_select_notify(
     sched: &Scheduler,
     files: &[FileId],
@@ -95,14 +113,18 @@ fn reference_select_notify(
 }
 
 /// One evolving scenario: shared queue/index/registry state, every
-/// pickup decision compared between the indexed path and the reference
-/// scan *before* it is applied.
+/// pickup decision compared between the indexed (epoch-lazy) path and
+/// the reference scan *before* it is applied, with an eager pending
+/// index mirrored alongside.
 struct Scenario {
     sched: Scheduler,
     reg: ExecutorRegistry,
     index: LocationIndex,
     queue: WaitQueue,
+    /// What the scheduler consults (engine default: epoch-lazy).
     pending: PendingIndex,
+    /// The always-exact reference, fed the identical event stream.
+    mirror: PendingIndex,
     execs: Vec<ExecutorId>,
     /// Shadow busy counts (slot accounting for start/finish toggles).
     busy: Vec<u32>,
@@ -133,6 +155,7 @@ impl Scenario {
             index,
             queue: WaitQueue::new(),
             pending: PendingIndex::new(),
+            mirror: PendingIndex::eager(),
             execs,
             busy: vec![0; n_exec],
             caching,
@@ -146,6 +169,7 @@ impl Scenario {
         let qref = self.queue.push_back(t);
         if self.caching {
             self.pending.on_push(&self.queue, qref, &self.index);
+            self.mirror.on_push(&self.queue, qref, &self.index);
         }
     }
 
@@ -155,6 +179,7 @@ impl Scenario {
         }
         self.index.add(f, e);
         self.pending.on_index_add(f, e);
+        self.mirror.on_index_add(f, e);
     }
 
     fn index_remove(&mut self, f: FileId, e: ExecutorId) {
@@ -163,6 +188,22 @@ impl Scenario {
         }
         self.index.remove(f, e);
         self.pending.on_index_remove(f, e, &self.queue, &self.index);
+        self.mirror.on_index_remove(f, e, &self.queue, &self.index);
+    }
+
+    /// Route one file access through a real cache (LRU eviction churn),
+    /// mirroring the engines' `resolve_access` maintenance exactly.
+    fn fetch(&mut self, exec_i: usize, f: FileId, cache: &mut ObjectCache, rng: &mut Pcg64) {
+        let e = self.execs[exec_i];
+        let res = resolve_access(e, f, 1, cache, &mut self.index, rng);
+        for &old in &res.evicted {
+            self.pending.on_index_remove(old, e, &self.queue, &self.index);
+            self.mirror.on_index_remove(old, e, &self.queue, &self.index);
+        }
+        if res.inserted {
+            self.pending.on_index_add(f, e);
+            self.mirror.on_index_add(f, e);
+        }
     }
 
     /// Compare phase 1 on the current head-of-queue file set.
@@ -172,7 +213,9 @@ impl Scenario {
         };
         let files = head.files.clone();
         let expected = reference_select_notify(&self.sched, &files, &self.reg, &self.index);
-        let got = self.sched.select_notify(&files, &self.reg, &self.index);
+        let got = self
+            .sched
+            .select_notify(&files, &self.reg, &mut self.pending, &self.index);
         if got != expected {
             return Err(format!(
                 "select_notify diverged: indexed {got:?} vs reference {expected:?}"
@@ -181,14 +224,22 @@ impl Scenario {
         Ok(())
     }
 
-    /// Compare phase 2 for one executor, then apply the dispatch.
+    /// Compare phase 2 for one executor, then apply the dispatch (to the
+    /// queue, the lazy index, and the eager mirror alike).
     fn check_pickup(&mut self, exec_i: usize, limit: usize) -> Result<Vec<Task>, String> {
         let exec = self.execs[exec_i];
-        let expected: Vec<u64> = self
-            .sched
-            .pick_refs_reference(exec, limit, &self.queue, &self.reg, &self.index)
+        let expected_refs =
+            self.sched
+                .pick_refs_reference(exec, limit, &self.queue, &self.reg, &self.index);
+        let expected: Vec<u64> = expected_refs
             .iter()
             .map(|&r| self.queue.get(r).id.0)
+            .collect();
+        // The mirror needs (files, seq) of each removed task; capture
+        // before pick_tasks removes them through the lazy path.
+        let removed: Vec<(Vec<FileId>, u64)> = expected_refs
+            .iter()
+            .map(|&r| (self.queue.get(r).files.clone(), self.queue.seq_of(r)))
             .collect();
         let got = self.sched.pick_tasks(
             exec,
@@ -206,13 +257,19 @@ impl Scenario {
                 self.sched.window_size(&self.reg)
             ));
         }
+        if self.caching {
+            for (files, seq) in &removed {
+                self.mirror.on_remove(files, *seq, &self.index);
+            }
+        }
         Ok(got)
     }
 
-    fn consistent(&self) -> Result<(), String> {
+    fn consistent(&mut self) -> Result<(), String> {
         self.index.check_consistent()?;
         if self.caching {
             self.pending.check_consistent(&self.queue, &self.index)?;
+            self.mirror.check_consistent(&self.queue, &self.index)?;
         }
         Ok(())
     }
@@ -288,7 +345,7 @@ fn indexed_scheduler_matches_reference_under_churn() {
 #[test]
 fn thousand_task_drain_matches_reference_for_every_policy() {
     for policy in DispatchPolicy::ALL {
-        let mut rng = datadiffusion::util::prng::Pcg64::seeded(0xd1ff ^ policy as u64);
+        let mut rng = Pcg64::seeded(0xd1ff ^ policy as u64);
         let n_exec = 6;
         let mut sc = Scenario::new(policy, n_exec, 3); // window = 18 « |Q|
         let n_files = 120u64;
@@ -312,7 +369,10 @@ fn thousand_task_drain_matches_reference_for_every_policy() {
                 spins += 1;
                 if spins > n_exec as u32 {
                     let qref = sc.queue.front_ref().expect("non-empty");
+                    let seq = sc.queue.seq_of(qref);
+                    let files = sc.queue.get(qref).files.clone();
                     let t = remove_queued(&mut sc.queue, &mut sc.pending, qref, &sc.index);
+                    sc.mirror.on_remove(&files, seq, &sc.index);
                     for &f in &t.files {
                         sc.index_add(f, sc.execs[i]);
                         push_cached(&mut cached[i], f, &mut sc, i);
@@ -348,5 +408,80 @@ fn push_cached(cache: &mut Vec<FileId>, f: FileId, sc: &mut Scenario, exec_i: us
         let victim = cache.remove(0);
         let e = sc.execs[exec_i];
         sc.index_remove(victim, e);
+    }
+}
+
+/// The fig11-regime regression (ROADMAP "bound hot-file pending
+/// maintenance"): one popular file with ~2K queued readers while
+/// single-object LRU caches churn it in and out of every executor. The
+/// epoch-lazy path must (a) dispatch bit-identically to the reference
+/// scan, (b) match a from-scratch rebuild after refresh, and (c) do
+/// strictly less candidate maintenance work than the eager mirror —
+/// sub-linear in readers per event, where eager pays O(readers) per
+/// hot-file insert/evict.
+#[test]
+fn hot_file_eviction_churn_stays_bounded_with_identical_dispatch() {
+    for policy in DispatchPolicy::ALL {
+        let n_exec = 6;
+        let mut sc = Scenario::new(policy, n_exec, 100); // window = 600
+        let hot = FileId(0);
+        // ~2K hot readers with a sprinkling of cold single-file tasks
+        // (cold fan-outs stay under the eager-apply cap on purpose).
+        let total = 2_400u64;
+        for i in 0..total {
+            let f = if i % 6 == 5 {
+                FileId(1 + (i % 31) as u32)
+            } else {
+                hot
+            };
+            sc.push_task(vec![f]);
+        }
+        // Single-object LRU caches: every fetch evicts the previous
+        // object, so alternating hot/cold fetches churn the hot file.
+        let mut caches: Vec<ObjectCache> = (0..n_exec)
+            .map(|_| {
+                ObjectCache::new(CacheConfig {
+                    capacity_bytes: 1,
+                    policy: EvictionPolicy::Lru,
+                })
+            })
+            .collect();
+        let mut rng = Pcg64::seeded(0x407f11e);
+        for round in 0..600usize {
+            let i = round % n_exec;
+            if sc.caching {
+                let f = if round % 5 < 3 {
+                    hot
+                } else {
+                    FileId(1 + (round % 31) as u32)
+                };
+                sc.fetch(i, f, &mut caches[i], &mut rng);
+            }
+            if round % 24 == 0 {
+                sc.check_notify()
+                    .unwrap_or_else(|e| panic!("[{policy}] {e}"));
+                sc.check_pickup(i, 1)
+                    .unwrap_or_else(|e| panic!("[{policy}] {e}"));
+            }
+        }
+        sc.consistent().unwrap_or_else(|e| panic!("[{policy}] {e}"));
+        if sc.caching {
+            let lazy = &sc.pending.stats;
+            let eager = &sc.mirror.stats;
+            assert_eq!(
+                lazy.index_events, eager.index_events,
+                "[{policy}] both flavors must see the same event stream"
+            );
+            assert!(
+                lazy.dirty_records > 0,
+                "[{policy}] hot-file events must defer, not fan out"
+            );
+            assert!(
+                lazy.maintenance_ops * 4 < eager.maintenance_ops,
+                "[{policy}] lazy maintenance ({}) not well below eager ({})",
+                lazy.maintenance_ops,
+                eager.maintenance_ops
+            );
+        }
     }
 }

@@ -10,8 +10,15 @@ checks only quantities that noise cannot fake:
    pickup must not be slower than the retained reference window scan
    (speedup >= 1.0 with tolerance), and the batched flow-net rerate must
    not do more per-event work than the per-event reference.
-2. *Deterministic work counters* (fresh vs committed baseline): tasks
-   inspected per pickup, boundary-cursor steps, flow rerates per event.
+2. *Within-run maintenance work* (fresh snapshot only): the epoch-lazy
+   pending-index maintenance must not do more per-entry work than the
+   eager reference on the hot-file churn workload
+   (pending/maintenance_ops <= pending/eager_maintenance_ops), and
+   select_notify must never recount holder overlap per call
+   (notify/holder_recounts == 0 — the memoized-ranking tripwire).
+3. *Deterministic work counters* (fresh vs committed baseline): tasks
+   inspected per pickup, boundary-cursor steps, flow rerates per event,
+   pending maintenance ops per event, notify memo hits per decision.
    These are machine-independent, so drift beyond a generous tolerance
    means the algorithm regressed, not the runner. Skipped (with a
    warning) while the baseline still carries `"measured": false` — the
@@ -104,6 +111,34 @@ def main():
                     f"{concurrency} concurrent: ratio {ratio:.3f} > {WORK_RATIO_TOLERANCE}"
                 )
 
+    # --- 2b. lazy vs eager pending maintenance (within-run). ------------
+    for key in (
+        "pending/maintenance_ops",
+        "pending/eager_maintenance_ops",
+        "pending/maintenance_ops_per_event",
+        "pending/eager_maintenance_ops_per_event",
+        "pending/epoch_rebuilds",
+        "notify/holder_recounts",
+    ):
+        if key not in counters:
+            fail(f"missing counter {key}")
+    ratio = counters["pending/maintenance_ops"] / max(
+        counters["pending/eager_maintenance_ops"], 1e-12
+    )
+    print(f"bench-gate: pending maintenance: lazy/eager = {ratio:.3f}")
+    if ratio > WORK_RATIO_TOLERANCE:
+        fail(
+            "epoch-lazy pending maintenance exceeds the eager reference on the "
+            f"hot-file workload: ratio {ratio:.3f} > {WORK_RATIO_TOLERANCE}"
+        )
+    recounts = counters["notify/holder_recounts"]
+    print(f"bench-gate: notify holder recounts = {recounts:g}")
+    if recounts != 0:
+        fail(
+            f"select_notify recounted holder overlap {recounts:g} time(s): the "
+            "memoized head ranking has been bypassed"
+        )
+
     # --- 3. inspected-per-pickup sanity (within-run). -------------------
     for policy in ("max-compute-util", "good-cache-compute"):
         key = f"inspected_per_pickup/{policy}"
@@ -128,7 +163,7 @@ def main():
         # totals (boundary/queries, cold_seek_steps, ...) scale with the
         # wall-clock-sized iteration count Bench::iter picks, so a faster
         # runner would inflate them with no real regression.
-        ratio_suffixes = ("per_query", "per_event", "per_pickup")
+        ratio_suffixes = ("per_query", "per_event", "per_pickup", "per_decision")
         base_counters = baseline.get("counters", {})
         checked = skipped = 0
         for key, base_value in base_counters.items():
