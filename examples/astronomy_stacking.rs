@@ -14,6 +14,7 @@
 //! cross-checks one stacked image against a pure-Rust reference.
 
 use datadiffusion::cache::{CacheConfig, EvictionPolicy};
+use datadiffusion::coordinator::provisioner::AllocationPolicy;
 use datadiffusion::coordinator::scheduler::DispatchPolicy;
 use datadiffusion::ids::FileId;
 use datadiffusion::live::{self, ComputeKind, LiveConfig, LiveTask};
@@ -35,7 +36,34 @@ fn main() {
     }
 }
 
+/// Parse `--allocation one|add:N|mult:F|all` (the provisioner's
+/// allocation policy, shared with `datadiff run` through the
+/// coordinator core). Defaults to one worker per decision — the gentle
+/// growth the live testbed used before the policy was surfaced.
+fn parse_allocation() -> datadiffusion::Result<AllocationPolicy> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut it = args.iter();
+    let mut alloc = AllocationPolicy::OneAtATime;
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--allocation" => {
+                let v = it.next().ok_or_else(|| {
+                    datadiffusion::Error::Config("--allocation needs a value".into())
+                })?;
+                alloc = AllocationPolicy::parse_flag(v).map_err(datadiffusion::Error::Config)?;
+            }
+            other => {
+                return Err(datadiffusion::Error::Config(format!(
+                    "unexpected argument `{other}` (supported: --allocation one|add:N|mult:F|all)"
+                )));
+            }
+        }
+    }
+    Ok(alloc)
+}
+
 fn real_main() -> datadiffusion::Result<()> {
+    let allocation = parse_allocation()?;
     // --- 0. Verify the AOT artifacts load (fail fast with guidance).
     let artifacts = Artifacts::open_default()?;
     println!(
@@ -109,6 +137,7 @@ fn real_main() -> datadiffusion::Result<()> {
         initial_workers: 1,
         max_workers: 4,
         queue_tasks_per_worker: 8,
+        allocation,
         policy: DispatchPolicy::GoodCacheCompute,
         cache: CacheConfig {
             // Each worker can cache ~1/2 of the dataset: diffusion matters.
@@ -125,8 +154,8 @@ fn real_main() -> datadiffusion::Result<()> {
     };
     println!(
         "running {NUM_TASKS} stacking tasks through the live engine \
-         (good-cache-compute, 1→{} workers) …",
-        cfg.max_workers
+         (good-cache-compute, 1→{} workers, allocation {}) …",
+        cfg.max_workers, cfg.allocation
     );
     let report = live::run(&cfg, &tasks)?;
 

@@ -23,7 +23,7 @@
 use datadiffusion::cache::{CacheConfig, EvictionPolicy, ObjectCache};
 use datadiffusion::config::ExperimentConfig;
 use datadiffusion::coordinator::executor::ExecutorRegistry;
-use datadiffusion::coordinator::pending::{PendingIndex, PendingStats};
+use datadiffusion::coordinator::pending::{remove_queued, PendingIndex, PendingStats};
 use datadiffusion::coordinator::queue::{Task, WaitQueue};
 use datadiffusion::coordinator::scheduler::{DispatchPolicy, Scheduler, SchedulerConfig};
 use datadiffusion::ids::{ExecutorId, FileId, TaskId};
@@ -261,7 +261,7 @@ fn bench_pending_maintenance(counters: &mut Vec<(String, f64)>) -> Bench {
     // patches), then 40 medium-file inserts at one executor (overflowing
     // the lazy patch log) and a final settle-everything consult round.
     let drive = |lazy: bool| -> (PendingStats, u64) {
-        let (queue, mut index, mut pending, execs) = pending_fixture(lazy);
+        let (mut queue, mut index, mut pending, execs) = pending_fixture(lazy);
         let mut events = 0u64;
         for r in 0..1_000u64 {
             let e = execs[(r % execs.len() as u64) as usize];
@@ -282,17 +282,52 @@ fn bench_pending_maintenance(counters: &mut Vec<(String, f64)>) -> Bench {
         for &e in &execs {
             pending.refresh(e, &queue, &index);
         }
+        // Dead-hint phase (ROADMAP "dead-hint accounting"): cache the hot
+        // file at execs[0] and settle its candidate set, evict it again
+        // (deferred on the lazy path), then drain head readers while the
+        // eviction is still pending — their candidate entries die in
+        // place (the file has no holders at removal time, so nothing
+        // sweeps them). One real pickup then purges the dead hints on
+        // encounter. The eager reference retracts at event time, so it
+        // purges nothing — `pending/dead_hints_purged` is a lazy-only
+        // counter and the CI gate asserts it stays live (> 0) here.
+        let e0 = execs[0];
+        index.add(hot, e0);
+        pending.on_index_add(hot, e0);
+        pending.refresh(e0, &queue, &index);
+        index.remove(hot, e0);
+        pending.on_index_remove(hot, e0, &queue, &index);
+        events += 2;
+        for _ in 0..8 {
+            let qref = queue.front_ref().expect("fixture queue is non-empty");
+            remove_queued(&mut queue, &mut pending, qref, &index);
+        }
+        let mut reg = ExecutorRegistry::new();
+        for _ in 0..execs.len() {
+            reg.register(2, Micros::ZERO);
+        }
+        let mut sched = Scheduler::new(SchedulerConfig {
+            policy: DispatchPolicy::MaxComputeUtil,
+            ..SchedulerConfig::default()
+        });
+        black_box(sched.pick_tasks(e0, 1, &mut queue, &mut pending, &reg, &index));
         (pending.stats.clone(), events)
     };
     let (lazy_stats, events) = drive(true);
     let (eager_stats, _) = drive(false);
     println!(
         "    maintenance ops over {events} events: lazy {} (rebuilds {}, \
-         dirty {}) vs eager {}",
+         dirty {}, dead hints purged {}) vs eager {} (purged {})",
         lazy_stats.maintenance_ops,
         lazy_stats.epoch_rebuilds,
         lazy_stats.dirty_records,
-        eager_stats.maintenance_ops
+        lazy_stats.dead_hints_purged,
+        eager_stats.maintenance_ops,
+        eager_stats.dead_hints_purged
+    );
+    assert_eq!(
+        eager_stats.dead_hints_purged, 0,
+        "eager maintenance must never create dead hints"
     );
     counters.push((
         "pending/maintenance_ops".into(),
@@ -313,6 +348,14 @@ fn bench_pending_maintenance(counters: &mut Vec<(String, f64)>) -> Bench {
     counters.push((
         "pending/epoch_rebuilds".into(),
         lazy_stats.epoch_rebuilds as f64,
+    ));
+    counters.push((
+        "pending/dead_hints_purged".into(),
+        lazy_stats.dead_hints_purged as f64,
+    ));
+    counters.push((
+        "pending/dead_hints_purged_per_event".into(),
+        lazy_stats.dead_hints_purged as f64 / events.max(1) as f64,
     ));
     let _ = b.write_csv();
     b

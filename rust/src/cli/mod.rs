@@ -25,6 +25,7 @@ datadiff — data diffusion (Raicu et al. 2008) reproduction
 
 USAGE:
   datadiff run (--fig N | --config FILE) [--view SECS] [--csv]
+               [--allocation one|add:N|mult:F|all]
   datadiff figures [--scale X] [--quick] [--jobs N] [--check]
                                        regenerate Figures 2-15 + sweeps
   datadiff fig2|fig3|fig4-10|fig11|fig12|fig13|fig14|fig15|sweeps
@@ -39,7 +40,10 @@ workloads for quick runs (default 1.0 = paper scale); --quick is shorthand
 for --scale 0.02 (the CI smoke scale). --jobs N fans independent runs out
 across N threads (default: all cores; merged tables are byte-identical for
 any N). --check fails with a non-zero exit on NaN cells or empty tables —
-the CI figures-smoke gate.";
+the CI figures-smoke gate. --allocation overrides the dynamic resource
+provisioner's allocation policy (one node, fixed batch of N, growth
+factor F, or everything at once — §5.2.5); the same policies drive the
+live engine through the shared coordinator core.";
 
 /// Parsed command line.
 #[derive(Debug)]
@@ -85,7 +89,8 @@ pub fn parse(args: &[String]) -> Result<Command> {
     let mut flags: Vec<(&str, Option<&str>)> = Vec::new();
     while let Some(a) = it.next() {
         if let Some(name) = a.strip_prefix("--") {
-            let takes_value = matches!(name, "fig" | "config" | "view" | "scale" | "jobs");
+            let takes_value =
+                matches!(name, "fig" | "config" | "view" | "scale" | "jobs" | "allocation");
             let value = if takes_value {
                 Some(
                     it.next()
@@ -104,7 +109,7 @@ pub fn parse(args: &[String]) -> Result<Command> {
 
     match cmd {
         "run" => {
-            let config = if let Some(Some(fig)) = get("fig") {
+            let mut config = if let Some(Some(fig)) = get("fig") {
                 let n: u32 = fig
                     .parse()
                     .map_err(|_| Error::Config(format!("bad figure `{fig}`")))?;
@@ -115,6 +120,11 @@ pub fn parse(args: &[String]) -> Result<Command> {
             } else {
                 return Err(Error::Config("run needs --fig N or --config FILE".into()));
             };
+            if let Some(Some(alloc)) = get("allocation") {
+                config.provisioner.allocation =
+                    crate::coordinator::provisioner::AllocationPolicy::parse_flag(alloc)
+                        .map_err(Error::Config)?;
+            }
             let view_every_s = match get("view") {
                 Some(Some(v)) => v
                     .parse()
@@ -352,6 +362,28 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn parses_run_allocation_override() {
+        use crate::coordinator::provisioner::AllocationPolicy;
+        match parse(&args("run --fig 7 --allocation all")).unwrap() {
+            Command::Run { config, .. } => {
+                assert_eq!(config.provisioner.allocation, AllocationPolicy::AllAtOnce);
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse(&args("run --fig 7 --allocation mult:1.5")).unwrap() {
+            Command::Run { config, .. } => {
+                assert_eq!(
+                    config.provisioner.allocation,
+                    AllocationPolicy::Multiplicative(1.5)
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(parse(&args("run --fig 7 --allocation banana")).is_err());
+        assert!(parse(&args("run --fig 7 --allocation")).is_err());
     }
 
     #[test]

@@ -1,0 +1,855 @@
+//! The transport-agnostic coordinator core — **one** Falkon coordinator
+//! shared by the discrete-event simulator and the live engine.
+//!
+//! The paper's claim (§3.1, §5.2) is that a single coordinator — wait
+//! queue, data-aware scheduler, location index, per-executor caches,
+//! dynamic resource provisioner — serves both modeled and deployed
+//! workloads. Before this module the repo asserted that only by
+//! convention: [`crate::sim::engine`] and [`crate::live`] each hand-wired
+//! their own copy of the arrival → select → notify/pickup →
+//! access-resolve → fetch → compute → complete loop. [`CoordinatorCore`]
+//! owns that loop outright; the engines shrink to *drivers* that own
+//! nothing but time and data movement:
+//!
+//! * the **sim driver** maps effects onto the fluid-flow network and the
+//!   event heap (virtual clock, dispatcher service model, GRAM latency);
+//! * the **live driver** maps the *same* effects onto worker threads and
+//!   real file copies (wall clock).
+//!
+//! ## The event → effect contract
+//!
+//! Every entry point is a coordinator *event*; the return value is a list
+//! of [`Effect`]s the driver must enact. The core never performs I/O,
+//! reads a clock, or spawns a thread — `now` is always supplied by the
+//! driver, and all randomness flows through the injected PRNG:
+//!
+//! | event                        | effects it can emit                  |
+//! |------------------------------|--------------------------------------|
+//! | [`CoordinatorCore::on_arrival`]      | `Notify`                     |
+//! | [`CoordinatorCore::on_pickup`]       | `Fetch` (one per dispatched task) |
+//! | [`CoordinatorCore::on_fetch_done`]   | `Fetch` (next file) or `Compute` |
+//! | [`CoordinatorCore::on_compute_done`] | `Notify`                     |
+//! | [`CoordinatorCore::on_tick`]         | `Allocate`, `Release`        |
+//! | [`CoordinatorCore::kick`]            | `Notify` (the progress safety net) |
+//! | [`CoordinatorCore::register_node`]   | `Notify` (fresh executor asks for work) |
+//!
+//! A `Notify(e)` carries an implicit contract: the core has already
+//! reserved a pending slot on `e` (§3.2's *pending* state), and the
+//! driver **must** eventually deliver the round-trip by calling
+//! [`CoordinatorCore::on_pickup`] for `e` — the pickup either converts
+//! the reservation into a running task or cancels it.
+//!
+//! ## Single mutation sites
+//!
+//! `resolve_access` (cache admission + location-index update + pending
+//! maintenance), replica accounting, and provisioner enactment each live
+//! in exactly one place — here. The engines contain **no** direct
+//! `WaitQueue`/`Scheduler`/`PendingIndex` mutation; `rust/tests/
+//! core_parity.rs` drives the same deterministic workload through both
+//! drivers and asserts identical dispatch order and access tallies, and
+//! `sched_parity`/`flow_parity` keep pinning the scheduler and flow-net
+//! halves independently.
+//!
+//! Metrics are part of the shared state: the core owns the
+//! [`Recorder`], so hit/miss tallies, arrival/completion accounting and
+//! the 1 Hz samples are produced identically by both engines (the live
+//! engine's old ad-hoc counters are gone — its report reads
+//! [`Recorder::access_counts`]).
+
+use crate::cache::{CacheConfig, ObjectCache};
+use crate::coordinator::executor::ExecutorRegistry;
+use crate::coordinator::pending::PendingIndex;
+use crate::coordinator::provisioner::{Provisioner, ProvisionerConfig};
+use crate::coordinator::queue::{Task, WaitQueue};
+use crate::coordinator::scheduler::{NotifyOutcome, Scheduler, SchedulerConfig, SchedulerStats};
+use crate::coordinator::{resolve_access, AccessKind};
+use crate::ids::{ExecutorId, FileId, TaskId};
+use crate::index::LocationIndex;
+use crate::metrics::Recorder;
+use crate::util::prng::Pcg64;
+use crate::util::time::Micros;
+use std::collections::HashMap;
+
+/// Where the core looks up data-object sizes (cache-admission input).
+#[derive(Debug, Clone)]
+pub enum FileSizes {
+    /// Every object has the same size (the simulator's workloads).
+    Uniform(u64),
+    /// Per-object sizes (the live engine reads them off the store).
+    PerFile(HashMap<FileId, u64>),
+}
+
+impl FileSizes {
+    /// Size of `file` in bytes. Unknown per-file entries resolve to 0
+    /// (a zero-byte object always fits; the driver will surface the
+    /// missing file as an I/O error long before cache accounting cares).
+    pub fn size_of(&self, file: FileId) -> u64 {
+        match self {
+            FileSizes::Uniform(n) => *n,
+            FileSizes::PerFile(m) => m.get(&file).copied().unwrap_or(0),
+        }
+    }
+}
+
+/// Everything the core needs to know about the deployment, shared
+/// verbatim by both drivers.
+#[derive(Debug, Clone)]
+pub struct CoreConfig {
+    /// Scheduler tuning (policy, window, pickup batch size).
+    pub scheduler: SchedulerConfig,
+    /// Provisioner tuning (allocation/release policies).
+    pub provisioner: ProvisionerConfig,
+    /// Per-executor cache configuration.
+    pub cache: CacheConfig,
+    /// Hard cap on provisioned nodes.
+    pub max_nodes: usize,
+    /// Task slots (CPUs) per registered node.
+    pub slots_per_node: u32,
+    /// Data-object sizes for cache admission.
+    pub file_sizes: FileSizes,
+}
+
+/// One resolved file access the driver must enact as a data transfer.
+///
+/// The access has already been *resolved* (§5.2.1 three-way split) and
+/// the coordinator's cache model + location index updated; the plan tells
+/// the driver where the bytes come from.
+#[derive(Debug, Clone)]
+pub struct FetchPlan {
+    /// Task this fetch belongs to.
+    pub task_id: TaskId,
+    /// Executor the data moves to.
+    pub exec: ExecutorId,
+    /// Object being fetched.
+    pub file: FileId,
+    /// Object size in bytes (cache-accounting size; the live driver may
+    /// observe a different on-disk byte count and report it back).
+    pub bytes: u64,
+    /// Local hit / peer (global) hit / persistent-store miss.
+    pub kind: AccessKind,
+    /// For global hits, the peer executor chosen as the source.
+    pub peer: Option<ExecutorId>,
+    /// Objects the coordinator's cache model evicted to admit this one
+    /// (the live driver deletes them from the worker's cache directory).
+    pub evicted: Vec<FileId>,
+}
+
+/// What a driver must do after a coordinator event. See the module docs
+/// for the per-event emission table.
+#[derive(Debug, Clone)]
+pub enum Effect {
+    /// Deliver a dispatch notification to this executor: a pending slot
+    /// is reserved; the driver must route the round-trip back into
+    /// [`CoordinatorCore::on_pickup`].
+    Notify(ExecutorId),
+    /// Start moving one file per the resolved plan.
+    Fetch(FetchPlan),
+    /// All input staged: run the task's compute on the executor.
+    Compute {
+        /// Task to run.
+        task_id: TaskId,
+        /// Executor it was dispatched to.
+        exec: ExecutorId,
+        /// Modeled compute duration μ(κ) (the live driver runs real
+        /// compute instead and ignores this).
+        compute: Micros,
+    },
+    /// Request this many nodes from the resource manager (they register
+    /// via [`CoordinatorCore::on_node_registered`] after the driver's
+    /// allocation latency).
+    Allocate(usize),
+    /// Release these idle executors (the driver may defer an executor
+    /// that is still serving peer transfers and retry next tick).
+    Release(Vec<ExecutorId>),
+}
+
+/// A dispatched task moving through its fetch → compute pipeline.
+#[derive(Debug)]
+struct InFlight {
+    task: Task,
+    exec: ExecutorId,
+    /// Files still to fetch after the current one (reverse order; `pop`
+    /// yields paper order).
+    remaining: Vec<FileId>,
+    /// File currently being transferred.
+    current_file: FileId,
+    /// Resolution of the access currently in flight (recorded when the
+    /// driver reports the transfer done).
+    current_kind: AccessKind,
+    /// Arrival-rate interval (slowdown accounting, Fig 14).
+    interval: u32,
+}
+
+/// The shared coordinator: the full dispatch state machine of §3, pure
+/// decision logic over explicit state. Construct with
+/// [`CoordinatorCore::new`]; drive with the `on_*` event methods; enact
+/// the returned [`Effect`]s.
+#[derive(Debug)]
+pub struct CoordinatorCore {
+    /// Deployment configuration (read-only after construction).
+    pub config: CoreConfig,
+    /// Shared metrics recorder — both engines' summary/report numbers
+    /// come out of this one instance.
+    pub rec: Recorder,
+    sched: Scheduler,
+    reg: ExecutorRegistry,
+    queue: WaitQueue,
+    index: LocationIndex,
+    pending: PendingIndex,
+    prov: Provisioner,
+    caches: HashMap<ExecutorId, ObjectCache>,
+    /// Peer selection + eviction randomness (single injected stream so
+    /// a driver's seeding fully determines coordinator behaviour).
+    rng: Pcg64,
+    inflight: HashMap<u64, InFlight>,
+    /// Arrival-interval of queued tasks (only non-zero intervals are
+    /// stored; consumed at dispatch).
+    interval_of: HashMap<u64, u32>,
+    /// Tasks in dispatch order — the decision trace `core_parity`
+    /// compares across drivers.
+    dispatch_log: Vec<TaskId>,
+}
+
+impl CoordinatorCore {
+    /// New coordinator. `rng` drives peer selection and cache-eviction
+    /// randomness (the sim passes its forked `rng_cache` stream so
+    /// results stay bit-identical to the pre-core engine).
+    pub fn new(config: CoreConfig, rng: Pcg64) -> Self {
+        CoordinatorCore {
+            sched: Scheduler::new(config.scheduler.clone()),
+            reg: ExecutorRegistry::new(),
+            queue: WaitQueue::new(),
+            index: LocationIndex::new(),
+            pending: PendingIndex::new(),
+            prov: Provisioner::new(config.provisioner.clone(), config.max_nodes),
+            caches: HashMap::new(),
+            rng,
+            rec: Recorder::new(),
+            inflight: HashMap::new(),
+            interval_of: HashMap::new(),
+            dispatch_log: Vec::new(),
+            config,
+        }
+    }
+
+    fn caching(&self) -> bool {
+        self.config.scheduler.policy.uses_caching()
+    }
+
+    /// Reserve a pending slot on `exec` for an in-flight notification.
+    /// Returns false when the executor has no free slot.
+    fn reserve(&mut self, exec: ExecutorId) -> bool {
+        if !self.reg.is_free(exec) {
+            return false;
+        }
+        self.reg.mark_pending(exec);
+        true
+    }
+
+    /// Phase-1 notification for the queue head; reserves the chosen
+    /// executor. Mirrors the paper's notify step: holders preferred,
+    /// policy decides the fallback.
+    fn notify_head(&mut self) -> Option<ExecutorId> {
+        if self.reg.free_count() == 0 {
+            return None;
+        }
+        let files = self.queue.front()?.files.clone();
+        match self
+            .sched
+            .select_notify(&files, &self.reg, &mut self.pending, &self.index)
+        {
+            NotifyOutcome::Preferred(e) | NotifyOutcome::Fallback(e) => {
+                let reserved = self.reserve(e);
+                debug_assert!(reserved, "select_notify returned a busy executor");
+                Some(e)
+            }
+            NotifyOutcome::Wait | NotifyOutcome::NoneFree => None,
+        }
+    }
+
+    // ---- node lifecycle -------------------------------------------------
+
+    /// Register a freshly provisioned node (initial fleet or a driver
+    /// enacting [`Effect::Allocate`] without LRM bookkeeping). The new
+    /// executor immediately asks for work, so the effects usually carry
+    /// its `Notify`.
+    pub fn register_node(&mut self, now: Micros) -> (ExecutorId, Vec<Effect>) {
+        let id = self.reg.register(self.config.slots_per_node, now);
+        if self.caching() {
+            self.caches.insert(id, ObjectCache::new(self.config.cache));
+            self.index.register_executor(id);
+        }
+        let effects = if self.reserve(id) {
+            vec![Effect::Notify(id)]
+        } else {
+            Vec::new()
+        };
+        (id, effects)
+    }
+
+    /// A node requested through [`Effect::Allocate`] finished its LRM
+    /// bootstrap: drains the provisioner's pending count, then registers.
+    pub fn on_node_registered(&mut self, now: Micros) -> (ExecutorId, Vec<Effect>) {
+        self.prov.on_node_registered();
+        self.register_node(now)
+    }
+
+    /// Release an idle executor: scrubs its cache, index entries and
+    /// pending candidates, then deregisters it. The driver must only call
+    /// this for executors named in [`Effect::Release`] (and may defer
+    /// ones still serving peer transfers).
+    pub fn release_node(&mut self, id: ExecutorId) {
+        if self.caching() {
+            self.index.deregister_executor(id);
+            self.pending.on_deregister(id);
+            self.caches.remove(&id);
+        }
+        self.reg.deregister(id);
+    }
+
+    // ---- dispatch events ------------------------------------------------
+
+    /// A task arrived (or re-arrived — the live replay policy resubmits
+    /// failed tasks). Queues it, maintains the pending index, and runs
+    /// the phase-1 notification for the queue head. `interval`/`rate`
+    /// feed slowdown accounting; drivers without arrival staging pass
+    /// `0`/`0.0`.
+    pub fn on_arrival(
+        &mut self,
+        task: Task,
+        interval: u32,
+        rate: f64,
+        now: Micros,
+    ) -> Vec<Effect> {
+        self.rec.record_arrival(now, interval, rate);
+        if interval != 0 {
+            self.interval_of.insert(task.id.0, interval);
+        }
+        let qref = self.queue.push_back(task);
+        if self.caching() {
+            self.pending.on_push(&self.queue, qref, &self.index);
+        }
+        match self.notify_head() {
+            Some(e) => vec![Effect::Notify(e)],
+            None => Vec::new(),
+        }
+    }
+
+    /// An executor asks for work (a delivered notification round-trip, or
+    /// a live worker polling). Runs the phase-2 pickup: selects up to
+    /// `max_tasks_per_pickup` (capped by free slots) window tasks,
+    /// converts or cancels the pending reservation, and resolves each
+    /// dispatched task's first file access into a [`Effect::Fetch`].
+    pub fn on_pickup(&mut self, exec: ExecutorId, now: Micros) -> Vec<Effect> {
+        if !self.reg.contains(exec) {
+            return Vec::new(); // released meanwhile
+        }
+        let entry = self.reg.get(exec).expect("contains() checked");
+        let reserved = entry.pending_slots > 0;
+        let free_extra = entry.free_slots() as usize;
+        // The reservation holds one slot; extra free slots allow a larger
+        // batch. Without a reservation (live polling) only free slots count.
+        let cap = if reserved { 1 + free_extra } else { free_extra };
+        if cap == 0 {
+            return Vec::new();
+        }
+        let limit = self.config.scheduler.max_tasks_per_pickup.min(cap).max(1);
+        let tasks = self.sched.pick_tasks(
+            exec,
+            limit,
+            &mut self.queue,
+            &mut self.pending,
+            &self.reg,
+            &self.index,
+        );
+        if tasks.is_empty() {
+            if reserved {
+                self.reg.cancel_pending(exec);
+            }
+            return Vec::new();
+        }
+        let mut effects = Vec::with_capacity(tasks.len());
+        for (i, task) in tasks.into_iter().enumerate() {
+            if i == 0 && reserved {
+                self.reg.pending_to_busy(exec, now);
+            } else {
+                self.reg.start_task(exec, now);
+            }
+            self.dispatch_log.push(task.id);
+            effects.push(self.begin_task(task, exec));
+        }
+        effects
+    }
+
+    /// Start a dispatched task's data phase: resolve its first file.
+    fn begin_task(&mut self, task: Task, exec: ExecutorId) -> Effect {
+        let interval = self.interval_of.remove(&task.id.0).unwrap_or(0);
+        let mut remaining = task.files.clone();
+        remaining.reverse(); // pop() yields paper order
+        let first = remaining.pop().expect("task has ≥1 file");
+        let mut inf = InFlight {
+            task,
+            exec,
+            remaining,
+            current_file: first,
+            current_kind: AccessKind::Miss,
+            interval,
+        };
+        let plan = self.resolve(&mut inf, first);
+        self.inflight.insert(inf.task.id.0, inf);
+        Effect::Fetch(plan)
+    }
+
+    /// Resolve one file access: cache admission, location-index update,
+    /// pending-index maintenance — the single mutation site on the task
+    /// data path for *both* engines.
+    fn resolve(&mut self, inf: &mut InFlight, file: FileId) -> FetchPlan {
+        let exec = inf.exec;
+        let size = self.config.file_sizes.size_of(file);
+        let (kind, peer, evicted) = if self.caching() {
+            let cache = self
+                .caches
+                .get_mut(&exec)
+                .expect("caching policy ⇒ cache exists");
+            let res = resolve_access(exec, file, size, cache, &mut self.index, &mut self.rng);
+            // Keep the inverted pending index coherent with the index
+            // mutations resolve_access just made.
+            for &old in &res.evicted {
+                self.pending
+                    .on_index_remove(old, exec, &self.queue, &self.index);
+            }
+            if res.inserted {
+                self.pending.on_index_add(file, exec);
+            }
+            (res.kind, res.peer, res.evicted)
+        } else {
+            // first-available: every access goes to persistent storage.
+            (AccessKind::Miss, None, Vec::new())
+        };
+        inf.current_file = file;
+        inf.current_kind = kind;
+        FetchPlan {
+            task_id: inf.task.id,
+            exec,
+            file,
+            bytes: size,
+            kind,
+            peer,
+            evicted,
+        }
+    }
+
+    /// The driver finished one file transfer. Records the access in the
+    /// shared recorder and either chains the next fetch or declares the
+    /// data phase complete. `observed` lets the live driver report what
+    /// the worker actually experienced — kind (a peer copy can race the
+    /// peer's eviction and fall back to persistent storage, §3.1) and
+    /// real byte count; the sim passes `None` to record the resolution.
+    pub fn on_fetch_done(
+        &mut self,
+        task_id: TaskId,
+        now: Micros,
+        observed: Option<(AccessKind, u64)>,
+    ) -> Vec<Effect> {
+        let mut inf = self
+            .inflight
+            .remove(&task_id.0)
+            .expect("fetch done for unknown task");
+        let (kind, bytes) = match observed {
+            Some(kb) => kb,
+            None => (
+                inf.current_kind,
+                self.config.file_sizes.size_of(inf.current_file),
+            ),
+        };
+        self.rec.record_access(now, kind, bytes);
+        let effect = if let Some(next) = inf.remaining.pop() {
+            Effect::Fetch(self.resolve(&mut inf, next))
+        } else {
+            Effect::Compute {
+                task_id,
+                exec: inf.exec,
+                compute: inf.task.compute,
+            }
+        };
+        self.inflight.insert(task_id.0, inf);
+        vec![effect]
+    }
+
+    /// The task's compute finished. Frees the slot, records the
+    /// completion (at `completed_at`, which the sim offsets by the result
+    /// delivery latency), and — if work is still queued — notifies the
+    /// now-free executor.
+    pub fn on_compute_done(
+        &mut self,
+        task_id: TaskId,
+        now: Micros,
+        completed_at: Micros,
+    ) -> Vec<Effect> {
+        let inf = self
+            .inflight
+            .remove(&task_id.0)
+            .expect("compute done for unknown task");
+        debug_assert_eq!(inf.task.id, task_id);
+        self.reg.finish_task(inf.exec, now);
+        self.rec
+            .record_completion(completed_at, inf.task.arrival, inf.interval);
+        if !self.queue.is_empty() && self.reserve(inf.exec) {
+            vec![Effect::Notify(inf.exec)]
+        } else {
+            Vec::new()
+        }
+    }
+
+    /// A dispatched task failed on its executor (live-engine worker
+    /// error). Frees the slot without recording an access or completion;
+    /// the driver decides whether to resubmit (the §4.2 replay policy)
+    /// via [`CoordinatorCore::on_arrival`]. Like a successful
+    /// completion, the freed executor is re-notified when work is still
+    /// queued — otherwise a permanently-failed task would idle its
+    /// executor until the backlog drained.
+    pub fn on_task_failed(&mut self, task_id: TaskId, now: Micros) -> Vec<Effect> {
+        let inf = self
+            .inflight
+            .remove(&task_id.0)
+            .expect("failure for unknown task");
+        self.reg.finish_task(inf.exec, now);
+        if !self.queue.is_empty() && self.reserve(inf.exec) {
+            vec![Effect::Notify(inf.exec)]
+        } else {
+            Vec::new()
+        }
+    }
+
+    /// Periodic (1 Hz in the sim, per-completion in the live engine)
+    /// sample + provisioning decision. Emits `Allocate`/`Release`
+    /// effects; the driver adds allocation latency and may defer releases
+    /// of executors still serving transfers.
+    pub fn on_tick(&mut self, now: Micros) -> Vec<Effect> {
+        self.rec.sample(
+            now,
+            self.queue.len(),
+            self.reg.len(),
+            self.reg.busy_slots(),
+            self.reg.total_slots(),
+        );
+        let action = self.prov.on_tick(now, self.queue.len(), &self.reg);
+        let mut effects = Vec::new();
+        if action.allocate > 0 {
+            effects.push(Effect::Allocate(action.allocate));
+        }
+        if !action.release.is_empty() {
+            effects.push(Effect::Release(action.release));
+        }
+        effects
+    }
+
+    /// Progress safety net: if tasks wait and executors are free, notify
+    /// for the head; when the policy declines (max-cache-hit can
+    /// legitimately `Wait` with free executors), force one pickup on the
+    /// first free executor. Drivers call this when no pickup is already
+    /// in flight.
+    pub fn kick(&mut self) -> Vec<Effect> {
+        if self.queue.is_empty() || self.reg.free_count() == 0 {
+            return Vec::new();
+        }
+        if let Some(e) = self.notify_head() {
+            return vec![Effect::Notify(e)];
+        }
+        let first_free = self.reg.free_iter().next();
+        match first_free {
+            Some(e) if self.reserve(e) => vec![Effect::Notify(e)],
+            _ => Vec::new(),
+        }
+    }
+
+    // ---- read-only state queries ---------------------------------------
+
+    /// Queued (not yet dispatched) task count.
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// True when no tasks are waiting.
+    pub fn queue_is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Executors with at least one free slot.
+    pub fn free_count(&self) -> usize {
+        self.reg.free_count()
+    }
+
+    /// Registered executor count.
+    pub fn node_count(&self) -> usize {
+        self.reg.len()
+    }
+
+    /// The executor registry (read-only; state transitions go through
+    /// the event methods).
+    pub fn executors(&self) -> &ExecutorRegistry {
+        &self.reg
+    }
+
+    /// Scheduler behaviour counters.
+    pub fn sched_stats(&self) -> &SchedulerStats {
+        &self.sched.stats
+    }
+
+    /// Pending-index work counters (maintenance ops, dead-hint purges).
+    pub fn pending_stats(&self) -> &crate::coordinator::pending::PendingStats {
+        &self.pending.stats
+    }
+
+    /// Tasks in dispatch order so far — the cross-driver decision trace.
+    pub fn dispatch_order(&self) -> &[TaskId] {
+        &self.dispatch_log
+    }
+
+    /// Take ownership of the dispatch trace (end-of-run reporting).
+    pub fn take_dispatch_log(&mut self) -> Vec<TaskId> {
+        std::mem::take(&mut self.dispatch_log)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::EvictionPolicy;
+    use crate::coordinator::scheduler::DispatchPolicy;
+
+    fn config(policy: DispatchPolicy) -> CoreConfig {
+        CoreConfig {
+            scheduler: SchedulerConfig {
+                policy,
+                ..SchedulerConfig::default()
+            },
+            provisioner: ProvisionerConfig::default(),
+            cache: CacheConfig {
+                capacity_bytes: 100,
+                policy: EvictionPolicy::Lru,
+            },
+            max_nodes: 4,
+            slots_per_node: 1,
+            file_sizes: FileSizes::Uniform(10),
+        }
+    }
+
+    fn core(policy: DispatchPolicy) -> CoordinatorCore {
+        CoordinatorCore::new(config(policy), Pcg64::seeded(1))
+    }
+
+    fn task(i: u64, file: u32) -> Task {
+        Task {
+            id: TaskId(i),
+            files: vec![FileId(file)],
+            compute: Micros::from_millis(5),
+            arrival: Micros::ZERO,
+        }
+    }
+
+    /// Walk one task through the full event loop, checking each effect.
+    #[test]
+    fn arrival_to_completion_round_trip() {
+        let mut c = core(DispatchPolicy::GoodCacheCompute);
+        let (e0, effs) = c.register_node(Micros::ZERO);
+        // A fresh executor asks for work (reservation made).
+        assert!(matches!(effs.as_slice(), [Effect::Notify(e)] if *e == e0));
+        // Nothing queued: the pickup cancels the reservation.
+        assert!(c.on_pickup(e0, Micros::ZERO).is_empty());
+        assert_eq!(c.free_count(), 1);
+
+        // Arrival notifies the free executor again.
+        let effs = c.on_arrival(task(0, 7), 0, 0.0, Micros::ZERO);
+        assert!(matches!(effs.as_slice(), [Effect::Notify(e)] if *e == e0));
+        assert_eq!(c.queue_len(), 1);
+
+        // Pickup dispatches it and resolves the first access (cold miss).
+        let effs = c.on_pickup(e0, Micros::from_millis(1));
+        let plan = match effs.as_slice() {
+            [Effect::Fetch(p)] => p.clone(),
+            other => panic!("expected one fetch, got {other:?}"),
+        };
+        assert_eq!(plan.task_id, TaskId(0));
+        assert_eq!(plan.kind, AccessKind::Miss);
+        assert_eq!(plan.bytes, 10);
+        assert_eq!(c.queue_len(), 0);
+        assert_eq!(c.dispatch_order(), &[TaskId(0)]);
+
+        // Transfer done → compute; compute done → completion recorded.
+        let effs = c.on_fetch_done(TaskId(0), Micros::from_millis(2), None);
+        assert!(matches!(
+            effs.as_slice(),
+            [Effect::Compute { task_id, .. }] if *task_id == TaskId(0)
+        ));
+        let effs = c.on_compute_done(TaskId(0), Micros::from_millis(7), Micros::from_millis(7));
+        assert!(effs.is_empty(), "queue empty: no re-notify");
+        assert_eq!(c.rec.tasks_done(), 1);
+        assert_eq!(c.rec.access_counts(), (0, 0, 1));
+        assert_eq!(c.free_count(), 1);
+    }
+
+    #[test]
+    fn second_access_is_a_local_hit_and_renotifies() {
+        let mut c = core(DispatchPolicy::GoodCacheCompute);
+        let (e0, _) = c.register_node(Micros::ZERO);
+        for i in 0..2 {
+            let _ = c.on_arrival(task(i, 7), 0, 0.0, Micros::ZERO);
+        }
+        let _ = c.on_pickup(e0, Micros::ZERO);
+        let _ = c.on_fetch_done(TaskId(0), Micros::from_millis(1), None);
+        // Completion with work still queued re-notifies the executor.
+        let effs = c.on_compute_done(TaskId(0), Micros::from_millis(6), Micros::from_millis(6));
+        assert!(matches!(effs.as_slice(), [Effect::Notify(e)] if *e == e0));
+        let effs = c.on_pickup(e0, Micros::from_millis(6));
+        match effs.as_slice() {
+            [Effect::Fetch(p)] => assert_eq!(p.kind, AccessKind::HitLocal),
+            other => panic!("expected fetch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn observed_access_overrides_resolution() {
+        let mut c = core(DispatchPolicy::GoodCacheCompute);
+        let (e0, _) = c.register_node(Micros::ZERO);
+        let _ = c.on_arrival(task(0, 7), 0, 0.0, Micros::ZERO);
+        let _ = c.on_pickup(e0, Micros::ZERO);
+        // The live driver reports what the worker actually saw.
+        let _ = c.on_fetch_done(TaskId(0), Micros::ZERO, Some((AccessKind::Miss, 4096)));
+        assert_eq!(c.rec.access_counts(), (0, 0, 1));
+    }
+
+    #[test]
+    fn failed_task_frees_slot_without_recording() {
+        let mut c = core(DispatchPolicy::GoodCacheCompute);
+        let (e0, _) = c.register_node(Micros::ZERO);
+        let _ = c.on_arrival(task(0, 7), 0, 0.0, Micros::ZERO);
+        let _ = c.on_pickup(e0, Micros::ZERO);
+        let effs = c.on_task_failed(TaskId(0), Micros::from_millis(1));
+        assert!(effs.is_empty(), "empty queue: nothing to notify for");
+        assert_eq!(c.free_count(), 1);
+        assert_eq!(c.rec.tasks_done(), 0);
+        // The replay resubmission goes back through on_arrival.
+        let effs = c.on_arrival(task(0, 7), 0, 0.0, Micros::from_millis(1));
+        assert!(matches!(effs.as_slice(), [Effect::Notify(e)] if *e == e0));
+    }
+
+    #[test]
+    fn failure_with_backlog_renotifies_the_freed_executor() {
+        // A permanently-failed task must not idle its executor while
+        // work is still queued (the driver may choose not to resubmit).
+        let mut c = core(DispatchPolicy::GoodCacheCompute);
+        let (e0, _) = c.register_node(Micros::ZERO);
+        for i in 0..2 {
+            let _ = c.on_arrival(task(i, 7), 0, 0.0, Micros::ZERO);
+        }
+        let _ = c.on_pickup(e0, Micros::ZERO); // dispatches task 0
+        let effs = c.on_task_failed(TaskId(0), Micros::from_millis(1));
+        assert!(matches!(effs.as_slice(), [Effect::Notify(e)] if *e == e0));
+        let effs = c.on_pickup(e0, Micros::from_millis(1));
+        assert!(
+            matches!(effs.as_slice(), [Effect::Fetch(p)] if p.task_id == TaskId(1)),
+            "freed executor must pick up the backlog"
+        );
+    }
+
+    #[test]
+    fn tick_allocates_under_queue_pressure() {
+        let mut c = core(DispatchPolicy::GoodCacheCompute);
+        for i in 0..100 {
+            let _ = c.on_arrival(task(i, i as u32), 0, 0.0, Micros::ZERO);
+        }
+        let effs = c.on_tick(Micros::from_secs(1));
+        let n = match effs.as_slice() {
+            [Effect::Allocate(n)] => *n,
+            other => panic!("expected allocate, got {other:?}"),
+        };
+        assert!(n >= 1);
+        let (e, effs) = c.on_node_registered(Micros::from_secs(2));
+        assert!(matches!(effs.as_slice(), [Effect::Notify(x)] if *x == e));
+    }
+
+    #[test]
+    fn kick_forces_progress_when_notify_declines() {
+        // max-cache-hit with the only holder busy: notify says Wait, the
+        // safety net must still force a pickup on a free executor.
+        let mut c = core(DispatchPolicy::MaxCacheHit);
+        let (e0, _) = c.register_node(Micros::ZERO);
+        let (e1, _) = c.register_node(Micros::ZERO);
+        // Cancel the fresh-node reservations so both start free.
+        let _ = c.on_pickup(e0, Micros::ZERO);
+        let _ = c.on_pickup(e1, Micros::ZERO);
+        // e0 caches file 7 and becomes busy with an unrelated task.
+        let _ = c.on_arrival(task(0, 7), 0, 0.0, Micros::ZERO);
+        let _ = c.on_pickup(e0, Micros::ZERO);
+        let _ = c.on_fetch_done(TaskId(0), Micros::ZERO, None);
+        // A second reader of file 7 arrives; holder e0 is busy → Wait.
+        let effs = c.on_arrival(task(1, 7), 0, 0.0, Micros::ZERO);
+        assert!(effs.is_empty(), "mch waits for the busy holder");
+        // The safety net forces a pickup on the free executor.
+        let effs = c.kick();
+        assert!(matches!(effs.as_slice(), [Effect::Notify(e)] if *e == e1));
+        // …but mch still declines foreign work at pickup time.
+        assert!(c.on_pickup(e1, Micros::ZERO).is_empty());
+    }
+
+    #[test]
+    fn release_scrubs_executor_state() {
+        let mut c = core(DispatchPolicy::GoodCacheCompute);
+        let (e0, _) = c.register_node(Micros::ZERO);
+        let _ = c.on_pickup(e0, Micros::ZERO); // cancel reservation
+        let _ = c.on_arrival(task(0, 7), 0, 0.0, Micros::ZERO);
+        let _ = c.on_pickup(e0, Micros::ZERO);
+        let _ = c.on_fetch_done(TaskId(0), Micros::ZERO, None);
+        let _ = c.on_compute_done(TaskId(0), Micros::from_millis(5), Micros::from_millis(5));
+        c.release_node(e0);
+        assert_eq!(c.node_count(), 0);
+        assert_eq!(c.free_count(), 0);
+    }
+
+    #[test]
+    fn multi_file_tasks_chain_fetches() {
+        let mut c = core(DispatchPolicy::GoodCacheCompute);
+        let (e0, _) = c.register_node(Micros::ZERO);
+        let t = Task {
+            id: TaskId(0),
+            files: vec![FileId(1), FileId(2)],
+            compute: Micros::from_millis(1),
+            arrival: Micros::ZERO,
+        };
+        let _ = c.on_arrival(t, 0, 0.0, Micros::ZERO);
+        let effs = c.on_pickup(e0, Micros::ZERO);
+        match effs.as_slice() {
+            [Effect::Fetch(p)] => assert_eq!(p.file, FileId(1), "paper order"),
+            other => panic!("{other:?}"),
+        }
+        let effs = c.on_fetch_done(TaskId(0), Micros::ZERO, None);
+        match effs.as_slice() {
+            [Effect::Fetch(p)] => assert_eq!(p.file, FileId(2)),
+            other => panic!("{other:?}"),
+        }
+        let effs = c.on_fetch_done(TaskId(0), Micros::ZERO, None);
+        assert!(matches!(effs.as_slice(), [Effect::Compute { .. }]));
+        assert_eq!(c.rec.access_counts(), (0, 0, 2));
+    }
+
+    #[test]
+    fn first_available_never_caches() {
+        let mut c = core(DispatchPolicy::FirstAvailable);
+        let (e0, _) = c.register_node(Micros::ZERO);
+        let _ = c.on_pickup(e0, Micros::ZERO);
+        for i in 0..2 {
+            let _ = c.on_arrival(task(i, 7), 0, 0.0, Micros::ZERO);
+        }
+        for i in 0..2u64 {
+            let effs = c.on_pickup(e0, Micros::ZERO);
+            match effs.as_slice() {
+                [Effect::Fetch(p)] => assert_eq!(p.kind, AccessKind::Miss),
+                other => panic!("{other:?}"),
+            }
+            let _ = c.on_fetch_done(TaskId(i), Micros::ZERO, None);
+            let _ = c.on_compute_done(TaskId(i), Micros::ZERO, Micros::ZERO);
+        }
+        assert_eq!(c.rec.access_counts(), (0, 0, 2));
+    }
+}

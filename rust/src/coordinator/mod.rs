@@ -7,6 +7,12 @@
 //! engine ([`crate::live`]). The engines own time and data movement; the
 //! coordinator owns *what happens next*:
 //!
+//! * [`CoordinatorCore`](self::core::CoordinatorCore) — the shared
+//!   dispatch state machine: a typed event API (`on_arrival`,
+//!   `on_pickup`, `on_fetch_done`, `on_compute_done`, `on_tick`)
+//!   returning [`Effect`](self::core::Effect) lists the engines enact.
+//!   Both engines drive *this* type; the parts below are its internals
+//!   (still exported for benches, parity tests and unit composition):
 //! * [`queue::WaitQueue`] — the task wait queue (Q) with O(1) window
 //!   removal and O(1) window-membership tests;
 //! * [`pending::PendingIndex`] — the inverted pending-task index the
@@ -15,6 +21,7 @@
 //! * [`scheduler::Scheduler`] — the two-phase data-aware scheduler;
 //! * [`provisioner::Provisioner`] — DRP allocation/release decisions.
 
+pub mod core;
 pub mod executor;
 pub mod pending;
 pub mod provisioner;

@@ -148,6 +148,14 @@ pub struct PendingStats {
     pub notify_memo_builds: u64,
     /// Notify decisions answered from the memoized ranking.
     pub notify_memo_hits: u64,
+    /// Dead hints dropped by [`PendingIndex::purge_dead`] — lazily
+    /// maintained candidate entries whose task left the queue while its
+    /// eviction was deferred (module-docs invariant 2), purged on
+    /// encounter by the scheduler's phase-A walk. This makes the memory
+    /// argument explicit: dead hints never accumulate past their first
+    /// encounter, and the `sched_parity` leave-queue-churn regression
+    /// bounds the count.
+    pub dead_hints_purged: u64,
 }
 
 /// One executor's lazily maintained candidate set.
@@ -450,7 +458,9 @@ impl PendingIndex {
     pub fn purge_dead(&mut self, executor: ExecutorId, seqs: &[u64]) {
         if let Some(st) = self.execs.get_mut(&executor) {
             for seq in seqs {
-                st.set.remove(seq);
+                if st.set.remove(seq).is_some() {
+                    self.stats.dead_hints_purged += 1;
+                }
             }
         }
     }
@@ -786,9 +796,13 @@ mod tests {
         assert_ne!(q.live_seq(dead_ref), Some(dead_seq), "hint must be dead");
         // The consistency check ignores dead hints…
         p.check_consistent(&q, &ix).unwrap();
-        // …and purge removes them for good.
+        // …and purge removes them for good, counting each drop once
+        // (repeat purges of the same seq are not double-counted).
         p.purge_dead(e, &[dead_seq]);
         assert!(p.candidates(e).unwrap().is_empty());
+        assert_eq!(p.stats.dead_hints_purged, 1);
+        p.purge_dead(e, &[dead_seq]);
+        assert_eq!(p.stats.dead_hints_purged, 1);
     }
 
     #[test]

@@ -29,6 +29,51 @@ pub enum AllocationPolicy {
     AllAtOnce,
 }
 
+impl AllocationPolicy {
+    /// Parse the CLI flag form shared by `datadiff run --allocation` and
+    /// the live-engine drivers: `one`, `add:N`, `mult:F`, or `all`.
+    pub fn parse_flag(s: &str) -> Result<AllocationPolicy, String> {
+        match s {
+            "one" => Ok(AllocationPolicy::OneAtATime),
+            "all" => Ok(AllocationPolicy::AllAtOnce),
+            _ => {
+                if let Some(n) = s.strip_prefix("add:") {
+                    let n: usize = n
+                        .parse()
+                        .map_err(|_| format!("bad additive step in `{s}`"))?;
+                    if n == 0 {
+                        return Err(format!("additive step must be ≥ 1 in `{s}`"));
+                    }
+                    Ok(AllocationPolicy::Additive(n))
+                } else if let Some(f) = s.strip_prefix("mult:") {
+                    let f: f64 = f
+                        .parse()
+                        .map_err(|_| format!("bad multiplicative factor in `{s}`"))?;
+                    if f.is_nan() || f <= 1.0 {
+                        return Err(format!("multiplicative factor must be > 1 in `{s}`"));
+                    }
+                    Ok(AllocationPolicy::Multiplicative(f))
+                } else {
+                    Err(format!(
+                        "unknown allocation policy `{s}` (expected one|add:N|mult:F|all)"
+                    ))
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for AllocationPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AllocationPolicy::OneAtATime => write!(f, "one"),
+            AllocationPolicy::Additive(n) => write!(f, "add:{n}"),
+            AllocationPolicy::Multiplicative(x) => write!(f, "mult:{x}"),
+            AllocationPolicy::AllAtOnce => write!(f, "all"),
+        }
+    }
+}
+
 /// Provisioner tuning.
 #[derive(Debug, Clone)]
 pub struct ProvisionerConfig {
@@ -277,6 +322,21 @@ mod tests {
         let reg = registry(64);
         let a = p.on_tick(Micros::from_secs(1000), 1_000_000, &reg);
         assert_eq!(a, ProvisionAction::default());
+    }
+
+    #[test]
+    fn allocation_flag_round_trips() {
+        for s in ["one", "add:8", "mult:2", "all"] {
+            let p = AllocationPolicy::parse_flag(s).unwrap();
+            assert_eq!(p.to_string(), s, "display must round-trip `{s}`");
+        }
+        assert_eq!(
+            AllocationPolicy::parse_flag("mult:1.5").unwrap(),
+            AllocationPolicy::Multiplicative(1.5)
+        );
+        for bad in ["", "two", "add:0", "add:x", "mult:1", "mult:nan", "mult:"] {
+            assert!(AllocationPolicy::parse_flag(bad).is_err(), "`{bad}`");
+        }
     }
 
     #[test]

@@ -1,35 +1,50 @@
 //! Live execution engine: the coordinator driving *real* work.
 //!
-//! Where [`crate::sim`] substitutes the testbed, this engine runs the
-//! identical coordinator logic (wait queue, data-aware scheduler,
-//! location index, per-executor caches, demand-driven provisioning) over
-//! real worker threads that move real files and run real compute:
+//! Where [`crate::sim`] substitutes the testbed, this engine drives the
+//! **same** [`CoordinatorCore`] — wait queue, data-aware scheduler,
+//! location index, per-executor caches, demand-driven provisioner — over
+//! real worker threads that move real files and run real compute. The
+//! module is a *driver*: it enacts the core's [`Effect`]s on the wall
+//! clock and the filesystem and feeds worker outcomes back into the
+//! core's event API; it contains no dispatch logic of its own
+//! (`rust/tests/core_parity.rs` proves both drivers replay identical
+//! decision sequences on a shared deterministic workload):
 //!
-//! * the **persistent store** is a directory (the GPFS stand-in);
-//! * each worker owns a **local cache directory**; a dispatch tells it
-//!   where to fetch from — its own cache (local hit), a peer worker's
-//!   cache directory (global hit, the GridFTP path), or the persistent
-//!   store (miss) — exactly the three-way split of §5.2.1;
-//! * per-task compute is either a calibrated sleep or the AOT-compiled
-//!   **PJRT stacking pipeline** (`examples/astronomy_stacking.rs`), so
-//!   the full three-layer stack (Rust → HLO → Pallas kernel) is on the
-//!   hot path with Python nowhere in sight;
-//! * **dynamic provisioning**: workers are spawned on demand from the
-//!   wait-queue length and retired when idle, mirroring the DRP.
+//! * [`Effect::Notify`] → an immediate pickup round-trip (no dispatcher
+//!   service model on a local testbed), delivered in FIFO order;
+//! * [`Effect::Fetch`] → an assignment to the executor's worker thread:
+//!   fetch from its own cache directory (local hit), a peer worker's
+//!   cache directory (global hit, the GridFTP path), or the
+//!   **persistent store** directory (miss) — exactly the three-way
+//!   split of §5.2.1 — then run the compute;
+//! * [`Effect::Compute`] → already performed by the worker alongside the
+//!   fetch, so the driver feeds it straight back as `on_compute_done`;
+//! * [`Effect::Allocate`] → spawn worker threads on demand (live DRP —
+//!   no GRAM latency on a local testbed). Workers are not retired
+//!   mid-run (`idle_release_s` is 0), so [`Effect::Release`] never
+//!   fires.
+//!
+//! Per-task compute is either a calibrated sleep or the AOT-compiled
+//! **PJRT stacking pipeline** (`examples/astronomy_stacking.rs`), so the
+//! full three-layer stack (Rust → HLO → Pallas kernel) is on the hot
+//! path with Python nowhere in sight. Hit/miss tallies come from the
+//! core's shared [`Recorder`] (workers report the access kind they
+//! actually experienced — a peer copy can race the peer's eviction and
+//! fall back to persistent storage, which the recorder then counts as
+//! the miss it really was).
 
-use crate::cache::{CacheConfig, ObjectCache};
-use crate::coordinator::pending::PendingIndex;
-use crate::coordinator::queue::{Task, WaitQueue};
-use crate::coordinator::scheduler::{DispatchPolicy, Scheduler, SchedulerConfig};
-use crate::coordinator::executor::ExecutorRegistry;
-use crate::coordinator::{resolve_access, AccessKind};
+use crate::cache::CacheConfig;
+use crate::coordinator::core::{CoordinatorCore, CoreConfig, Effect, FetchPlan, FileSizes};
+use crate::coordinator::provisioner::{AllocationPolicy, ProvisionerConfig};
+use crate::coordinator::queue::Task;
+use crate::coordinator::scheduler::{DispatchPolicy, SchedulerConfig};
+use crate::coordinator::AccessKind;
 use crate::ids::{ExecutorId, FileId, TaskId};
-use crate::index::LocationIndex;
 use crate::metrics::Recorder;
 use crate::util::prng::Pcg64;
 use crate::util::time::Micros;
 use crate::{Error, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::thread;
@@ -54,8 +69,13 @@ pub struct LiveConfig {
     pub initial_workers: usize,
     /// Maximum workers the provisioner may spawn.
     pub max_workers: usize,
-    /// Queue length per worker that triggers growth.
+    /// Queue length per worker that triggers growth (the provisioner's
+    /// `queue_tasks_per_node`).
     pub queue_tasks_per_worker: usize,
+    /// How aggressively the provisioner requests new workers — the same
+    /// allocation policies as the simulated DRP, shared through the
+    /// coordinator core (`one`/`add:N`/`mult:F`/`all`).
+    pub allocation: AllocationPolicy,
     /// Dispatch policy.
     pub policy: DispatchPolicy,
     /// Per-worker cache configuration.
@@ -137,7 +157,7 @@ pub struct LiveReport {
     pub failed: u64,
     /// Wall-clock makespan.
     pub makespan: Duration,
-    /// Local/global/miss access counts.
+    /// Local cache hits (from the shared recorder).
     pub hits_local: u64,
     /// Peer-cache hits.
     pub hits_global: u64,
@@ -151,8 +171,172 @@ pub struct LiveReport {
     pub avg_compute: Duration,
     /// Peak worker count (provisioning).
     pub peak_workers: usize,
-    /// Per-second recorder (same shape as the simulator's).
+    /// Tasks in dispatch order — the coordinator-core decision trace
+    /// `core_parity` compares against the sim driver.
+    pub dispatch_order: Vec<TaskId>,
+    /// Per-second recorder (same instance the coordinator core filled —
+    /// identical shape to the simulator's).
     pub recorder: Recorder,
+}
+
+/// The live driver: the coordinator core plus the worker fleet and the
+/// FIFO notification queue the `Notify` effects drain through.
+struct Driver<'a> {
+    config: &'a LiveConfig,
+    core: CoordinatorCore,
+    workers: HashMap<ExecutorId, WorkerHandle>,
+    /// Reserved-but-undelivered dispatch notifications, FIFO — the live
+    /// stand-in for the sim's dispatcher service queue.
+    notify_q: VecDeque<ExecutorId>,
+    /// Assignments sent to workers and not yet answered.
+    outstanding: usize,
+    next_worker_idx: usize,
+    peak_workers: usize,
+    file_names: HashMap<FileId, String>,
+    done_tx: mpsc::Sender<WorkerMsg>,
+}
+
+impl Driver<'_> {
+    /// Spawn one worker thread and register it with the core; returns the
+    /// registration effects (the fresh executor's `Notify`).
+    fn spawn_worker(&mut self, now: Micros) -> Result<Vec<Effect>> {
+        let (exec, effects) = self.core.register_node(now);
+        self.attach_worker(exec)?;
+        Ok(effects)
+    }
+
+    /// Create the cache directory and worker thread backing `exec`.
+    fn attach_worker(&mut self, exec: ExecutorId) -> Result<()> {
+        let idx = self.next_worker_idx;
+        self.next_worker_idx += 1;
+        let cache_dir = self.config.cache_root.join(format!("worker-{idx}"));
+        std::fs::create_dir_all(&cache_dir)?;
+        let (tx, rx) = mpsc::channel::<ToWorker>();
+        let done = self.done_tx.clone();
+        let persistent = self.config.persistent_dir.clone();
+        let cdir = cache_dir.clone();
+        let compute = self.config.compute.clone();
+        let join = thread::Builder::new()
+            .name(format!("dd-worker-{idx}"))
+            .spawn(move || worker_main(idx, rx, done, persistent, cdir, compute))
+            .map_err(Error::Io)?;
+        self.workers.insert(
+            exec,
+            WorkerHandle {
+                tx,
+                join,
+                cache_dir,
+            },
+        );
+        self.peak_workers = self.peak_workers.max(self.workers.len());
+        Ok(())
+    }
+
+    /// Enact a batch of coordinator effects on the worker fleet. FIFO so
+    /// notification delivery order stays deterministic.
+    fn apply(&mut self, effects: Vec<Effect>, now: Micros) -> Result<()> {
+        let mut queue: VecDeque<Effect> = effects.into();
+        while let Some(effect) = queue.pop_front() {
+            match effect {
+                Effect::Notify(e) => self.notify_q.push_back(e),
+                Effect::Fetch(plan) => self.send_assignment(plan)?,
+                Effect::Compute { task_id, .. } => {
+                    // The worker already ran the compute alongside the
+                    // fetch: close the loop immediately.
+                    for eff in self.core.on_compute_done(task_id, now, now) {
+                        queue.push_back(eff);
+                    }
+                }
+                Effect::Allocate(n) => {
+                    for _ in 0..n {
+                        let effs = self.spawn_worker_registered(now)?;
+                        queue.extend(effs);
+                    }
+                }
+                Effect::Release(execs) => {
+                    // Live workers are never retired mid-run
+                    // (idle_release_s is 0 in the core config, so the
+                    // provisioner cannot emit releases; ROADMAP has the
+                    // thread-shutdown enactment as an open item).
+                    crate::warn!(
+                        "ignoring release of {} worker(s): not enacted by the live driver",
+                        execs.len()
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// An [`Effect::Allocate`] node comes up instantly on a local
+    /// testbed: drain the provisioner's pending count and spawn.
+    fn spawn_worker_registered(&mut self, now: Micros) -> Result<Vec<Effect>> {
+        let (exec, effects) = self.core.on_node_registered(now);
+        self.attach_worker(exec)?;
+        Ok(effects)
+    }
+
+    /// Map a resolved fetch plan onto a worker assignment.
+    fn send_assignment(&mut self, plan: FetchPlan) -> Result<()> {
+        let file_name = self
+            .file_names
+            .get(&plan.file)
+            .cloned()
+            .ok_or_else(|| Error::Runtime(format!("no file name for {}", plan.file)))?;
+        let source = match (plan.kind, plan.peer) {
+            (AccessKind::HitLocal, _) => FetchSource::Local,
+            (AccessKind::HitGlobal, Some(p)) => {
+                FetchSource::Peer(self.workers[&p].cache_dir.clone())
+            }
+            _ => FetchSource::Persistent,
+        };
+        let evict: Vec<String> = plan
+            .evicted
+            .iter()
+            .filter_map(|f| self.file_names.get(f).cloned())
+            .collect();
+        self.workers[&plan.exec]
+            .tx
+            .send(ToWorker::Run(Assignment {
+                task_id: plan.task_id,
+                file_name,
+                source,
+                evict,
+            }))
+            .expect("worker channel closed");
+        self.outstanding += 1;
+        Ok(())
+    }
+
+    /// Deliver queued notifications and keep the cluster busy: the live
+    /// analogue of the sim's dispatcher drain plus tick safety net.
+    fn pump(&mut self, now: Micros) -> Result<()> {
+        loop {
+            while let Some(e) = self.notify_q.pop_front() {
+                let effects = self.core.on_pickup(e, now);
+                self.apply(effects, now)?;
+            }
+            // Safety net: tasks wait, workers are free, nothing is in
+            // flight — force progress (max-cache-hit can decline).
+            if self.outstanding > 0 || self.core.queue_is_empty() || self.core.free_count() == 0 {
+                break;
+            }
+            let queue_before = self.core.queue_len();
+            let effects = self.core.kick();
+            if effects.is_empty() {
+                break;
+            }
+            self.apply(effects, now)?;
+            while let Some(e) = self.notify_q.pop_front() {
+                let effects = self.core.on_pickup(e, now);
+                self.apply(effects, now)?;
+            }
+            if self.outstanding == 0 && self.core.queue_len() == queue_before {
+                break; // the forced pickup declined too; wait for events
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Run `tasks` through the live engine.
@@ -163,19 +347,6 @@ pub fn run(config: &LiveConfig, tasks: &[LiveTask]) -> Result<LiveReport> {
     std::fs::create_dir_all(&config.cache_root)?;
     let t0 = Instant::now();
     let (done_tx, done_rx) = mpsc::channel::<WorkerMsg>();
-
-    let mut rng = Pcg64::seeded(config.seed);
-    let mut sched = Scheduler::new(SchedulerConfig {
-        policy: config.policy,
-        ..SchedulerConfig::default()
-    });
-    let mut reg = ExecutorRegistry::new();
-    let mut index = LocationIndex::new();
-    let mut queue = WaitQueue::new();
-    let mut pending = PendingIndex::new();
-    let mut caches: HashMap<ExecutorId, ObjectCache> = HashMap::new();
-    let mut workers: HashMap<ExecutorId, WorkerHandle> = HashMap::new();
-    let mut rec = Recorder::new();
 
     // File sizes from the persistent store (needed for cache accounting).
     let mut file_sizes: HashMap<FileId, u64> = HashMap::new();
@@ -188,227 +359,146 @@ pub fn run(config: &LiveConfig, tasks: &[LiveTask]) -> Result<LiveReport> {
         }
     }
 
-    let spawn_worker = |idx: usize,
-                        reg: &mut ExecutorRegistry,
-                        index: &mut LocationIndex,
-                        caches: &mut HashMap<ExecutorId, ObjectCache>,
-                        workers: &mut HashMap<ExecutorId, WorkerHandle>|
-     -> Result<ExecutorId> {
-        let exec = reg.register(1, Micros::ZERO);
-        let cache_dir = config.cache_root.join(format!("worker-{idx}"));
-        std::fs::create_dir_all(&cache_dir)?;
-        if config.policy.uses_caching() {
-            index.register_executor(exec);
-            caches.insert(exec, ObjectCache::new(config.cache));
-        }
-        let (tx, rx) = mpsc::channel::<ToWorker>();
-        let done = done_tx.clone();
-        let persistent = config.persistent_dir.clone();
-        let cdir = cache_dir.clone();
-        let compute = config.compute.clone();
-        let join = thread::Builder::new()
-            .name(format!("dd-worker-{idx}"))
-            .spawn(move || worker_main(idx, rx, done, persistent, cdir, compute))
-            .map_err(Error::Io)?;
-        workers.insert(
-            exec,
-            WorkerHandle {
-                tx,
-                join,
-                cache_dir,
+    let max_workers = config.max_workers.max(config.initial_workers).max(1);
+    let core = CoordinatorCore::new(
+        CoreConfig {
+            scheduler: SchedulerConfig {
+                policy: config.policy,
+                ..SchedulerConfig::default()
             },
-        );
-        Ok(exec)
+            provisioner: ProvisionerConfig {
+                allocation: config.allocation,
+                // Workers are never retired mid-run: release enactment
+                // (thread shutdown) is not modeled on the local testbed.
+                idle_release_s: 0.0,
+                static_provisioning: false,
+                initial_nodes: config.initial_workers.max(1),
+                queue_tasks_per_node: config.queue_tasks_per_worker.max(1) as u64,
+            },
+            cache: config.cache,
+            max_nodes: max_workers,
+            slots_per_node: 1,
+            file_sizes: FileSizes::PerFile(file_sizes),
+        },
+        Pcg64::seeded(config.seed),
+    );
+    let mut drv = Driver {
+        config,
+        core,
+        workers: HashMap::new(),
+        notify_q: VecDeque::new(),
+        outstanding: 0,
+        next_worker_idx: 0,
+        peak_workers: 0,
+        file_names,
+        done_tx,
     };
 
-    let mut next_worker_idx = 0usize;
-    let mut exec_by_idx: Vec<ExecutorId> = Vec::new();
+    // Initial fleet, then batch submission (like the §5.1 microbench):
+    // the fresh workers' notifications queue up and deliver after the
+    // whole queue is populated — matching the sim driver, where arrivals
+    // outrun the dispatcher's service latency.
     for _ in 0..config.initial_workers.max(1) {
-        let e = spawn_worker(next_worker_idx, &mut reg, &mut index, &mut caches, &mut workers)?;
-        exec_by_idx.push(e);
-        next_worker_idx += 1;
+        let now = now_micros(t0);
+        let effects = drv.spawn_worker(now)?;
+        drv.apply(effects, now)?;
     }
-    let mut peak_workers = workers.len();
-
-    // Submit everything (batch submission, like the §5.1 microbench).
     for (i, t) in tasks.iter().enumerate() {
-        let qref = queue.push_back(Task {
+        let now = now_micros(t0);
+        let task = Task {
             id: TaskId(i as u64),
             files: vec![t.file],
             compute: Micros::ZERO,
             arrival: Micros::ZERO,
-        });
-        if config.policy.uses_caching() {
-            pending.on_push(&queue, qref, &index);
-        }
-        rec.record_arrival(Micros::ZERO, 0, 0.0);
+        };
+        let effects = drv.core.on_arrival(task, 0, 0.0, now);
+        drv.apply(effects, now)?;
     }
+    drv.pump(now_micros(t0))?;
 
-    // Dispatch helper: assign work to one free worker; returns true if a
-    // task was dispatched.
     let mut retried: HashMap<u64, bool> = HashMap::new();
     let mut completed = 0u64;
     let mut failed = 0u64;
-    let (mut hits_local, mut hits_global, mut misses) = (0u64, 0u64, 0u64);
     let mut bytes_moved = 0u64;
     let mut fetch_total = Duration::ZERO;
     let mut compute_total = Duration::ZERO;
 
-    macro_rules! pump {
-        () => {{
-            loop {
-                let free: Vec<ExecutorId> = reg.free_iter().collect();
-                let mut dispatched_any = false;
-                for exec in free {
-                    if queue.is_empty() {
-                        break;
-                    }
-                    let picked =
-                        sched.pick_tasks(exec, 1, &mut queue, &mut pending, &reg, &index);
-                    for task in picked {
-                        reg.start_task(exec, now_micros(t0));
-                        let file = task.files[0];
-                        let size = file_sizes[&file];
-                        let file_name = file_names[&file].clone();
-                        let (source, evict) = if config.policy.uses_caching() {
-                            let cache = caches.get_mut(&exec).expect("cache");
-                            let res =
-                                resolve_access(exec, file, size, cache, &mut index, &mut rng);
-                            // Keep the inverted pending index coherent
-                            // with the index changes just made.
-                            for &old in &res.evicted {
-                                pending.on_index_remove(old, exec, &queue, &index);
-                            }
-                            if res.inserted {
-                                pending.on_index_add(file, exec);
-                            }
-                            let evicted_names: Vec<String> = res
-                                .evicted
-                                .iter()
-                                .filter_map(|f| file_names.get(f).cloned())
-                                .collect();
-                            let source = match (res.kind, res.peer) {
-                                (AccessKind::HitLocal, _) => FetchSource::Local,
-                                (AccessKind::HitGlobal, Some(p)) => {
-                                    FetchSource::Peer(workers[&p].cache_dir.clone())
-                                }
-                                _ => FetchSource::Persistent,
-                            };
-                            (source, evicted_names)
-                        } else {
-                            (FetchSource::Persistent, Vec::new())
-                        };
-                        workers[&exec]
-                            .tx
-                            .send(ToWorker::Run(Assignment {
-                                task_id: task.id,
-                                file_name,
-                                source,
-                                evict,
-                            }))
-                            .expect("worker channel closed");
-                        dispatched_any = true;
-                    }
-                }
-                if !dispatched_any {
-                    break;
-                }
-            }
-        }};
-    }
-
-    pump!();
-
-    // Main loop: completions drive re-dispatch; the provisioner grows
-    // the fleet while the queue stays long.
+    // Main loop: completions drive re-dispatch through the core; the
+    // shared provisioner grows the fleet while the queue stays long.
     while completed + failed < tasks.len() as u64 {
-        // Provision: spawn a worker if the queue is long and we have
-        // headroom (live DRP — no GRAM latency on a local testbed).
-        if queue.len() > config.queue_tasks_per_worker * workers.len()
-            && workers.len() < config.max_workers
-        {
-            let e =
-                spawn_worker(next_worker_idx, &mut reg, &mut index, &mut caches, &mut workers)?;
-            exec_by_idx.push(e);
-            next_worker_idx += 1;
-            peak_workers = peak_workers.max(workers.len());
-            pump!();
-        }
+        let now = now_micros(t0);
+        // Sample + provisioning decision (the sim's 1 Hz tick, run per
+        // completion here).
+        let effects = drv.core.on_tick(now);
+        drv.apply(effects, now)?;
+        drv.pump(now)?;
+
         let msg = done_rx
             .recv_timeout(Duration::from_secs(60))
             .map_err(|_| Error::Runtime("live engine stalled for 60s".into()))?;
-        let widx_of = |m: &WorkerMsg| match m {
-            WorkerMsg::Done { worker, .. } | WorkerMsg::Failed { worker, .. } => *worker,
-        };
-        let sender_idx = widx_of(&msg);
+        let now = now_micros(t0);
         match msg {
             WorkerMsg::Done {
-                worker: _,
+                worker,
                 task_id,
                 kind,
                 bytes,
                 fetch,
                 compute,
             } => {
-                completed += 1;
-                match kind {
-                    AccessKind::HitLocal => hits_local += 1,
-                    AccessKind::HitGlobal => hits_global += 1,
-                    AccessKind::Miss => misses += 1,
-                }
+                crate::debug!("worker {worker}: task {task_id} done ({kind:?}, {bytes} B)");
+                drv.outstanding -= 1;
                 bytes_moved += bytes;
                 fetch_total += fetch;
                 compute_total += compute;
-                let now = now_micros(t0);
-                rec.record_access(now, kind, bytes);
-                rec.record_completion(now, Micros::ZERO, 0);
-                let _ = task_id;
+                // Report what the worker actually experienced (a peer
+                // copy may have fallen back to the persistent store).
+                let effects = drv.core.on_fetch_done(task_id, now, Some((kind, bytes)));
+                drv.apply(effects, now)?;
+                completed += 1;
             }
             WorkerMsg::Failed {
-                worker: _,
+                worker,
                 task_id,
                 error,
             } => {
+                drv.outstanding -= 1;
+                // Frees the slot and — when a backlog remains — re-notifies
+                // the freed worker, so a permanently-failed task cannot
+                // idle its executor for the rest of the run.
+                let effects = drv.core.on_task_failed(task_id, now);
+                drv.apply(effects, now)?;
                 // Replay policy (§4.2): re-dispatch once, then count as
                 // failed.
                 if !retried.get(&task_id.0).copied().unwrap_or(false) {
                     retried.insert(task_id.0, true);
                     let t = &tasks[task_id.0 as usize];
-                    let qref = queue.push_back(Task {
+                    let task = Task {
                         id: task_id,
                         files: vec![t.file],
                         compute: Micros::ZERO,
-                        arrival: now_micros(t0),
-                    });
-                    if config.policy.uses_caching() {
-                        pending.on_push(&queue, qref, &index);
-                    }
-                    crate::warn!("task {task_id} failed ({error}); replaying");
+                        arrival: now,
+                    };
+                    let effects = drv.core.on_arrival(task, 0, 0.0, now);
+                    drv.apply(effects, now)?;
+                    crate::warn!("task {task_id} failed on worker {worker} ({error}); replaying");
                 } else {
                     failed += 1;
-                    crate::error!("task {task_id} failed twice: {error}");
+                    crate::error!("task {task_id} failed twice (worker {worker}): {error}");
                 }
             }
         }
-        // The sender's slot frees regardless of outcome (worker idx ==
-        // spawn order == exec_by_idx position).
-        reg.finish_task(exec_by_idx[sender_idx], now_micros(t0));
-        rec.sample(
-            now_micros(t0),
-            queue.len(),
-            workers.len(),
-            reg.busy_slots(),
-            reg.total_slots(),
-        );
-        pump!();
+        drv.pump(now)?;
     }
 
     // Shut down workers.
-    for (_, h) in workers.drain() {
+    for (_, h) in drv.workers.drain() {
         let _ = h.tx.send(ToWorker::Shutdown);
         let _ = h.join.join();
     }
 
+    let (hits_local, hits_global, misses) = drv.core.rec.access_counts();
+    let recorder = std::mem::take(&mut drv.core.rec);
     let done_tasks = completed.max(1);
     Ok(LiveReport {
         completed,
@@ -420,8 +510,9 @@ pub fn run(config: &LiveConfig, tasks: &[LiveTask]) -> Result<LiveReport> {
         bytes_moved,
         avg_fetch: fetch_total / done_tasks as u32,
         avg_compute: compute_total / done_tasks as u32,
-        peak_workers,
-        recorder: rec,
+        peak_workers: drv.peak_workers,
+        dispatch_order: drv.core.take_dispatch_log(),
+        recorder,
     })
 }
 
@@ -584,6 +675,7 @@ mod tests {
             initial_workers: 3,
             max_workers: 3,
             queue_tasks_per_worker: 10,
+            allocation: AllocationPolicy::OneAtATime,
             policy: DispatchPolicy::GoodCacheCompute,
             cache: CacheConfig {
                 capacity_bytes: 1 << 20,
@@ -605,6 +697,12 @@ mod tests {
             report.hits_local,
             report.hits_global
         );
+        // The report's tallies are the shared recorder's tallies.
+        assert_eq!(
+            report.recorder.access_counts(),
+            (report.hits_local, report.hits_global, report.misses)
+        );
+        assert_eq!(report.dispatch_order.len(), 30);
         let _ = std::fs::remove_dir_all(&root);
     }
 
@@ -617,6 +715,7 @@ mod tests {
             initial_workers: 2,
             max_workers: 2,
             queue_tasks_per_worker: 10,
+            allocation: AllocationPolicy::OneAtATime,
             policy: DispatchPolicy::FirstAvailable,
             cache: CacheConfig {
                 capacity_bytes: 1 << 20,
@@ -643,6 +742,7 @@ mod tests {
             initial_workers: 1,
             max_workers: 4,
             queue_tasks_per_worker: 5,
+            allocation: AllocationPolicy::Multiplicative(2.0),
             policy: DispatchPolicy::GoodCacheCompute,
             cache: CacheConfig {
                 capacity_bytes: 1 << 20,

@@ -217,6 +217,14 @@ impl Recorder {
         self.tasks_done
     }
 
+    /// Raw access tallies `(hits_local, hits_global, misses)` — the §5.2.1
+    /// three-way split as counts. Both engines' reports read this instead
+    /// of keeping ad-hoc counters (the coordinator core owns the one
+    /// recorder that sees every access).
+    pub fn access_counts(&self) -> (u64, u64, u64) {
+        (self.hits_local, self.hits_global, self.misses)
+    }
+
     /// Finalize into summary metrics.
     pub fn summarize(&self, ideal_wet_s: f64) -> SummaryMetrics {
         let accesses = (self.hits_local + self.hits_global + self.misses).max(1);

@@ -1,22 +1,32 @@
 //! The discrete-event cluster engine — the testbed substitute.
 //!
-//! Drives the pure coordinator logic (queue / scheduler / provisioner /
-//! index / caches) over simulated time, with data movement flowing
-//! through the fluid-flow contention model of [`super::flow`]:
+//! Since the coordinator-core refactor this engine is a **thin driver**:
+//! every dispatch decision — queueing, notification, pickup, access
+//! resolution, cache admission, replica accounting, provisioning — lives
+//! in the shared [`CoordinatorCore`], and this module only maps the
+//! returned [`Effect`]s onto simulated time and the fluid-flow contention
+//! model of [`super::flow`]:
 //!
-//! * **GPFS** is one shared link (≈4.4 Gb/s sustained);
-//! * each node contributes a **local-disk link** and **NIC in/out links**;
-//! * a local cache hit reads `[disk(e)]`; a peer ("global") hit reads
+//! * [`Effect::Notify`] → a dispatch round-trip through a single
+//!   dispatcher service instance with a per-decision service time,
+//!   reproducing Falkon's measured dispatch throughput ceiling (§5.1);
+//! * [`Effect::Fetch`] → a transfer on the flow network. **GPFS** is one
+//!   shared link (≈4.4 Gb/s sustained); each node contributes a
+//!   **local-disk link** and **NIC in/out links**; a local hit reads
+//!   `[disk(e)]`, a peer ("global") hit reads
 //!   `[disk(peer), nic_out(peer), nic_in(e)]` (GridFTP alongside each
-//!   executor, §3.1.1); a miss reads `[gpfs, nic_in(e)]`;
-//! * dispatch passes through a single dispatcher service instance with a
-//!   per-decision service time, reproducing Falkon's measured dispatch
-//!   throughput ceiling (§5.1);
-//! * GRAM/LRM allocation latency delays every provisioning batch
-//!   (30–60 s, §5.2.5).
+//!   executor, §3.1.1) after a session-setup delay, and a miss reads
+//!   `[gpfs, nic_in(e)]`;
+//! * [`Effect::Compute`] → a `ComputeDone` event after the task's μ(κ);
+//! * [`Effect::Allocate`] → `NodesUp` after the GRAM/LRM allocation
+//!   latency (30–60 s, §5.2.5); [`Effect::Release`] → deregistration,
+//!   deferred while the node still serves peer transfers.
 //!
 //! The engine is fully deterministic for a given config: integer event
-//! times, seeded PRNG streams, sequence-numbered heap ties.
+//! times, seeded PRNG streams, sequence-numbered heap ties. The same
+//! effects drive the live engine ([`crate::live`]) over wall clock and
+//! real file copies; `rust/tests/core_parity.rs` asserts both drivers
+//! replay identical decision sequences.
 //!
 //! Data movement runs on the **batched** flow-net rerate path
 //! ([`FlowNet::new`] defaults to [`super::flow::RerateMode::Batched`]):
@@ -28,17 +38,13 @@
 //! results do not depend on the mode.
 
 use super::flow::{FlowNet, LinkId};
-use crate::cache::ObjectCache;
 use crate::config::ExperimentConfig;
-use crate::coordinator::executor::ExecutorRegistry;
-use crate::coordinator::pending::PendingIndex;
-use crate::coordinator::provisioner::Provisioner;
-use crate::coordinator::queue::{Task, WaitQueue};
-use crate::coordinator::scheduler::{NotifyOutcome, Scheduler, SchedulerStats};
-use crate::coordinator::{resolve_access, AccessKind};
-use crate::ids::{ExecutorId, FileId, TaskId};
-use crate::index::LocationIndex;
-use crate::metrics::{IntervalStat, Recorder, SummaryMetrics, TimeSeries};
+use crate::coordinator::core::{CoordinatorCore, CoreConfig, Effect, FetchPlan, FileSizes};
+use crate::coordinator::queue::Task;
+use crate::coordinator::scheduler::SchedulerStats;
+use crate::coordinator::AccessKind;
+use crate::ids::{ExecutorId, TaskId};
+use crate::metrics::{IntervalStat, SummaryMetrics, TimeSeries};
 use crate::util::prng::Pcg64;
 use crate::util::time::Micros;
 use crate::util::units::gbps_to_bps;
@@ -59,6 +65,11 @@ pub struct RunResult {
     pub intervals: Vec<IntervalStat>,
     /// Scheduler behaviour counters.
     pub sched_stats: SchedulerStats,
+    /// Tasks in dispatch order — the coordinator-core decision trace
+    /// `core_parity` compares against the live driver.
+    pub dispatch_order: Vec<TaskId>,
+    /// Raw access tallies `(hits_local, hits_global, misses)`.
+    pub access_counts: (u64, u64, u64),
     /// Working-set size of the generated workload (bytes).
     pub working_set_bytes: u64,
     /// Bytes per file in the workload.
@@ -117,20 +128,6 @@ struct NodeLinks {
     nic_out: LinkId,
 }
 
-/// A dispatched task moving through fetch → compute.
-#[derive(Debug)]
-struct InFlight {
-    task: Task,
-    exec: ExecutorId,
-    /// Files still to fetch after the current transfer.
-    remaining_files: Vec<FileId>,
-    /// Kind of the access currently in flight (recorded on completion).
-    current_kind: AccessKind,
-    /// Path waiting on a delayed start (peer session setup).
-    pending_path: Vec<LinkId>,
-    interval: u32,
-}
-
 /// The engine. Construct via [`run`].
 struct Engine {
     cfg: ExperimentConfig,
@@ -138,33 +135,24 @@ struct Engine {
     clock: Micros,
     heap: BinaryHeap<Reverse<HeapEntry>>,
     seq: u64,
-    // Coordinator state (pure logic).
-    sched: Scheduler,
-    reg: ExecutorRegistry,
-    queue: WaitQueue,
-    index: LocationIndex,
-    /// Inverted pending-task index (maintained for caching policies only)
-    /// in its default **epoch-lazy** mode: every `LocationIndex` mutation
-    /// site below reports to it (O(1)-bounded per event), and the
-    /// scheduler settles the deferred candidate maintenance at each
-    /// pickup — see `coordinator::pending` for the invariants.
-    pending: PendingIndex,
-    prov: Provisioner,
-    caches: HashMap<ExecutorId, ObjectCache>,
+    /// The shared coordinator: all dispatch state transitions go
+    /// through its event API; this driver never touches the wait queue,
+    /// scheduler or pending index directly.
+    core: CoordinatorCore,
     // Cluster substrate.
     flow: FlowNet,
     gpfs: LinkId,
     node_links: HashMap<ExecutorId, NodeLinks>,
-    inflight: HashMap<u64, InFlight>,
+    /// Peer fetches waiting out the GridFTP session setup:
+    /// task id → (bytes, flow path).
+    delayed: HashMap<u64, (u64, Vec<LinkId>)>,
     // Dispatcher service model.
     dispatcher_free_at: Micros,
     pending_pickups: usize,
-    // Randomness streams.
-    rng_cache: Pcg64,
+    // GRAM latency randomness.
     rng_gram: Pcg64,
     // Progress.
     completed: u64,
-    rec: Recorder,
     events: u64,
 }
 
@@ -176,25 +164,32 @@ pub fn run(cfg: &ExperimentConfig) -> RunResult {
     let working_set = wl.working_set_bytes();
     let ideal_wet = workload::ideal_execution_time_s(&cfg.workload);
 
+    // Fork order matters: the coordinator's access-resolution stream is
+    // fork(1), GRAM latency fork(2) — identical to the pre-core engine.
     let mut root = Pcg64::seeded(cfg.seed);
+    let rng_cache = root.fork(1);
+    let rng_gram = root.fork(2);
+    let core = CoordinatorCore::new(
+        CoreConfig {
+            scheduler: cfg.scheduler.clone(),
+            provisioner: cfg.provisioner.clone(),
+            cache: cfg.cache,
+            max_nodes: cfg.cluster.max_nodes,
+            slots_per_node: cfg.cluster.cpus_per_node as u32,
+            file_sizes: FileSizes::Uniform(cfg.workload.file_size_bytes),
+        },
+        rng_cache,
+    );
     let mut eng = Engine {
-        sched: Scheduler::new(cfg.scheduler.clone()),
-        reg: ExecutorRegistry::new(),
-        queue: WaitQueue::new(),
-        index: LocationIndex::new(),
-        pending: PendingIndex::new(),
-        prov: Provisioner::new(cfg.provisioner.clone(), cfg.cluster.max_nodes),
-        caches: HashMap::new(),
+        core,
         flow: FlowNet::new(),
         gpfs: LinkId(0),
         node_links: HashMap::new(),
-        inflight: HashMap::new(),
+        delayed: HashMap::new(),
         dispatcher_free_at: Micros::ZERO,
         pending_pickups: 0,
-        rng_cache: root.fork(1),
-        rng_gram: root.fork(2),
+        rng_gram,
         completed: 0,
-        rec: Recorder::new(),
         events: 0,
         clock: Micros::ZERO,
         heap: BinaryHeap::new(),
@@ -228,13 +223,15 @@ pub fn run(cfg: &ExperimentConfig) -> RunResult {
         fs.heap_updates,
         fs.dedup_skips
     );
-    let summary = eng.rec.summarize(ideal_wet);
+    let summary = eng.core.rec.summarize(ideal_wet);
     RunResult {
         name: cfg.name.clone(),
         summary,
-        ts: std::mem::take(&mut eng.rec.ts),
-        intervals: std::mem::take(&mut eng.rec.intervals),
-        sched_stats: eng.sched.stats.clone(),
+        ts: std::mem::take(&mut eng.core.rec.ts),
+        intervals: std::mem::take(&mut eng.core.rec.intervals),
+        sched_stats: eng.core.sched_stats().clone(),
+        dispatch_order: eng.core.take_dispatch_log(),
+        access_counts: eng.core.rec.access_counts(),
         working_set_bytes: working_set,
         file_size_bytes: cfg.workload.file_size_bytes,
         sim_wall_s: t_wall.elapsed().as_secs_f64(),
@@ -265,18 +262,18 @@ impl Engine {
                 (None, None) => {
                     panic!(
                         "simulation stalled at {} with {} tasks incomplete \
-                         (queue={}, inflight={})",
+                         (queue={})",
                         self.clock,
                         total - self.completed,
-                        self.queue.len(),
-                        self.inflight.len()
+                        self.core.queue_len()
                     );
                 }
                 (m, Some(f)) if m.is_none_or(|m| f <= m) => {
                     self.clock = f;
                     self.events += 1;
                     let tag = self.flow.pop_completion(f);
-                    self.on_transfer_done(tag);
+                    let effects = self.core.on_fetch_done(TaskId(tag), f, None);
+                    self.handle(effects);
                 }
                 _ => {
                     let Reverse(entry) = self.heap.pop().expect("peeked");
@@ -291,33 +288,67 @@ impl Engine {
     fn on_event(&mut self, event: Event) {
         match event {
             Event::Arrival(i) => self.on_arrival(i),
-            Event::Pickup(e) => self.on_pickup(e),
-            Event::ComputeDone(task_id) => self.on_compute_done(task_id),
+            Event::Pickup(e) => {
+                self.pending_pickups -= 1;
+                let effects = self.core.on_pickup(e, self.clock);
+                self.handle(effects);
+            }
+            Event::ComputeDone(task_id) => {
+                let latency = Micros::from_secs_f64(self.cfg.cluster.net_latency_ms / 1e3);
+                let effects =
+                    self.core
+                        .on_compute_done(TaskId(task_id), self.clock, self.clock + latency);
+                self.completed += 1;
+                self.handle(effects);
+            }
             Event::StartTransfer(task_id) => {
-                let inf = self
-                    .inflight
-                    .get_mut(&task_id)
+                let (bytes, path) = self
+                    .delayed
+                    .remove(&task_id)
                     .expect("delayed start for unknown task");
-                let path = std::mem::take(&mut inf.pending_path);
                 debug_assert!(!path.is_empty());
-                self.flow
-                    .start(self.clock, self.wl.file_size_bytes, &path, task_id);
+                self.flow.start(self.clock, bytes, &path, task_id);
             }
             Event::NodesUp(n) => {
                 for _ in 0..n {
-                    self.prov.on_node_registered();
-                    self.register_node();
+                    let (id, effects) = self.core.on_node_registered(self.clock);
+                    self.add_node_links(id);
+                    self.handle(effects);
                 }
             }
             Event::Tick => self.on_tick(),
         }
     }
 
+    /// Enact a batch of coordinator effects on the simulated substrate.
+    fn handle(&mut self, effects: Vec<Effect>) {
+        for effect in effects {
+            match effect {
+                Effect::Notify(e) => self.deliver_pickup(e),
+                Effect::Fetch(plan) => self.start_transfer(plan),
+                Effect::Compute {
+                    task_id, compute, ..
+                } => {
+                    self.push(self.clock + compute, Event::ComputeDone(task_id.0));
+                }
+                Effect::Allocate(n) => {
+                    let (lo, hi) = self.cfg.cluster.gram_latency_s;
+                    let latency =
+                        Micros::from_secs_f64(self.rng_gram.range_f64(lo, hi.max(lo + 1e-9)));
+                    self.push(self.clock + latency, Event::NodesUp(n as u32));
+                }
+                Effect::Release(execs) => {
+                    for e in execs {
+                        self.try_release(e);
+                    }
+                }
+            }
+        }
+    }
+
     // ---- node lifecycle -------------------------------------------------
 
-    fn register_node(&mut self) {
-        let now = self.clock;
-        let id = self.reg.register(self.cfg.cluster.cpus_per_node as u32, now);
+    fn add_node_links(&mut self, id: ExecutorId) {
         let disk = self.flow.add_link(gbps_to_bps(self.cfg.cluster.local_disk_gbps));
         let nic_in = self.flow.add_link(gbps_to_bps(self.cfg.cluster.nic_gbps));
         let nic_out = self.flow.add_link(gbps_to_bps(self.cfg.cluster.nic_gbps));
@@ -329,15 +360,16 @@ impl Engine {
                 nic_out,
             },
         );
-        if self.cfg.scheduler.policy.uses_caching() {
-            self.caches.insert(id, ObjectCache::new(self.cfg.cache));
-            self.index.register_executor(id);
-        }
-        // A fresh executor immediately asks for work.
-        self.schedule_pickup(id);
     }
 
-    fn release_node(&mut self, id: ExecutorId) {
+    fn register_node(&mut self) {
+        let (id, effects) = self.core.register_node(self.clock);
+        self.add_node_links(id);
+        // A fresh executor immediately asks for work.
+        self.handle(effects);
+    }
+
+    fn try_release(&mut self, id: ExecutorId) {
         // Peers may be mid-transfer from this node's cache; skip the
         // release this round if so (retry next tick).
         if let Some(links) = self.node_links.get(&id) {
@@ -348,24 +380,17 @@ impl Engine {
                 return;
             }
         }
-        if self.cfg.scheduler.policy.uses_caching() {
-            self.index.deregister_executor(id);
-            self.pending.on_deregister(id);
-            self.caches.remove(&id);
-        }
+        self.core.release_node(id);
         self.node_links.remove(&id);
-        self.reg.deregister(id);
     }
 
     // ---- dispatch path --------------------------------------------------
 
-    /// Reserve a pending slot on `exec` and schedule its pickup through
-    /// the dispatcher service queue.
-    fn schedule_pickup(&mut self, exec: ExecutorId) {
-        if !self.reg.is_free(exec) {
-            return;
-        }
-        self.reg.mark_pending(exec);
+    /// Route a `Notify` effect through the dispatcher service queue: the
+    /// reservation is already held by the core; this models the
+    /// per-decision service time plus network latency before the executor
+    /// asks for work.
+    fn deliver_pickup(&mut self, exec: ExecutorId) {
         self.pending_pickups += 1;
         let service = Micros::from_secs_f64(self.cfg.cluster.dispatch_service_us / 1e6);
         let start = self.dispatcher_free_at.max(self.clock);
@@ -387,14 +412,8 @@ impl Engine {
             .stages
             .get(spec.interval as usize)
             .map_or(0.0, |&(_, r)| r);
-        self.rec.record_arrival(self.clock, spec.interval, rate);
-        let qref = self.queue.push_back(task);
-        if self.cfg.scheduler.policy.uses_caching() {
-            self.pending.on_push(&self.queue, qref, &self.index);
-        }
-
-        // Phase 1: try to notify an executor for the head task.
-        self.notify_for_head();
+        let effects = self.core.on_arrival(task, spec.interval, rate, self.clock);
+        self.handle(effects);
 
         // Chain the next arrival.
         let next = i as usize + 1;
@@ -404,214 +423,44 @@ impl Engine {
         }
     }
 
-    fn notify_for_head(&mut self) {
-        if self.reg.free_count() == 0 {
-            return;
-        }
-        let Some(head) = self.queue.front() else {
-            return;
-        };
-        let files = head.files.clone();
-        // Phase 1 consults the pending index's memoized head ranking, so
-        // repeated notifies for the same head (arrivals while saturated)
-        // never recount holder overlap.
-        match self
-            .sched
-            .select_notify(&files, &self.reg, &mut self.pending, &self.index)
-        {
-            NotifyOutcome::Preferred(e) | NotifyOutcome::Fallback(e) => {
-                self.schedule_pickup(e);
+    /// Map a resolved fetch onto the flow network. Peer fetches pay a
+    /// GridFTP session-setup cost before bytes flow
+    /// (`cluster.peer_overhead_ms`) — see Fig 10's discussion of remote
+    /// cache access costs.
+    fn start_transfer(&mut self, plan: FetchPlan) {
+        let links = self.node_links[&plan.exec];
+        let path: Vec<LinkId> = match (plan.kind, plan.peer) {
+            (AccessKind::HitLocal, _) => vec![links.disk],
+            (AccessKind::HitGlobal, Some(p)) => {
+                let pl = self.node_links[&p];
+                vec![pl.disk, pl.nic_out, links.nic_in]
             }
-            NotifyOutcome::Wait | NotifyOutcome::NoneFree => {}
-        }
-    }
-
-    fn on_pickup(&mut self, exec: ExecutorId) {
-        self.pending_pickups -= 1;
-        if !self.reg.contains(exec) {
-            return; // released meanwhile (cannot happen while pending, but be safe)
-        }
-        // The pending reservation holds one slot; extra free slots allow a
-        // larger batch.
-        let free_extra = self.reg.get(exec).map_or(0, |e| e.free_slots()) as usize;
-        let limit = self
-            .cfg
-            .scheduler
-            .max_tasks_per_pickup
-            .min(1 + free_extra)
-            .max(1);
-        let tasks = self.sched.pick_tasks(
-            exec,
-            limit,
-            &mut self.queue,
-            &mut self.pending,
-            &self.reg,
-            &self.index,
-        );
-        if tasks.is_empty() {
-            self.reg.cancel_pending(exec);
-            return;
-        }
-        for (i, task) in tasks.into_iter().enumerate() {
-            if i == 0 {
-                self.reg.pending_to_busy(exec, self.clock);
-            } else {
-                self.reg.start_task(exec, self.clock);
-            }
-            self.start_data_phase(task, exec);
-        }
-    }
-
-    /// Begin fetching the task's first file (remaining files chain on
-    /// transfer completion).
-    fn start_data_phase(&mut self, task: Task, exec: ExecutorId) {
-        let mut files = task.files.clone();
-        files.reverse(); // pop() yields paper order
-        let interval = self
-            .wl
-            .tasks
-            .get(task.id.0 as usize)
-            .map_or(0, |t| t.interval);
-        let mut inf = InFlight {
-            task,
-            exec,
-            remaining_files: files,
-            current_kind: AccessKind::Miss,
-            pending_path: Vec::new(),
-            interval,
+            (AccessKind::HitGlobal, None) => unreachable!("global hit needs a peer"),
+            (AccessKind::Miss, _) => vec![self.gpfs, links.nic_in],
         };
-        let first = inf.remaining_files.pop().expect("task has ≥1 file");
-        self.start_fetch(&mut inf, first);
-        self.inflight.insert(inf.task.id.0, inf);
-    }
-
-    /// Resolve one file access and start its transfer.
-    fn start_fetch(&mut self, inf: &mut InFlight, file: FileId) {
-        let exec = inf.exec;
-        let size = self.wl.file_size_bytes;
-        let links = self.node_links[&exec];
-        let (kind, path): (AccessKind, Vec<LinkId>) =
-            if self.cfg.scheduler.policy.uses_caching() {
-                let cache = self
-                    .caches
-                    .get_mut(&exec)
-                    .expect("caching policy ⇒ cache exists");
-                let res = resolve_access(
-                    exec,
-                    file,
-                    size,
-                    cache,
-                    &mut self.index,
-                    &mut self.rng_cache,
-                );
-                // Keep the inverted pending index coherent with the
-                // index mutations resolve_access just made.
-                for &old in &res.evicted {
-                    self.pending
-                        .on_index_remove(old, exec, &self.queue, &self.index);
-                }
-                if res.inserted {
-                    self.pending.on_index_add(file, exec);
-                }
-                let path = match (res.kind, res.peer) {
-                    (AccessKind::HitLocal, _) => vec![links.disk],
-                    (AccessKind::HitGlobal, Some(p)) => {
-                        let pl = self.node_links[&p];
-                        vec![pl.disk, pl.nic_out, links.nic_in]
-                    }
-                    (AccessKind::HitGlobal, None) => unreachable!("global hit needs a peer"),
-                    (AccessKind::Miss, _) => vec![self.gpfs, links.nic_in],
-                };
-                (res.kind, path)
-            } else {
-                // first-available: every access goes to GPFS.
-                (AccessKind::Miss, vec![self.gpfs, links.nic_in])
-            };
-        inf.current_kind = kind;
-        // Peer fetches pay a GridFTP session-setup cost before bytes flow
-        // (cluster.peer_overhead_ms) — see Fig 10's discussion of remote
-        // cache access costs.
         let overhead = self.cfg.cluster.peer_overhead_ms;
-        if kind == AccessKind::HitGlobal && overhead > 0.0 {
-            inf.pending_path = path;
+        if plan.kind == AccessKind::HitGlobal && overhead > 0.0 {
+            self.delayed.insert(plan.task_id.0, (plan.bytes, path));
             self.push(
                 self.clock + Micros::from_secs_f64(overhead / 1e3),
-                Event::StartTransfer(inf.task.id.0),
+                Event::StartTransfer(plan.task_id.0),
             );
         } else {
-            self.flow.start(self.clock, size, &path, inf.task.id.0);
-        }
-    }
-
-    fn on_transfer_done(&mut self, task_id: u64) {
-        let mut inf = self
-            .inflight
-            .remove(&task_id)
-            .expect("transfer for unknown task");
-        self.rec
-            .record_access(self.clock, inf.current_kind, self.wl.file_size_bytes);
-        if let Some(next_file) = inf.remaining_files.pop() {
-            self.start_fetch(&mut inf, next_file);
-            self.inflight.insert(task_id, inf);
-        } else {
-            // All data staged: compute.
-            let done = self.clock + inf.task.compute;
-            self.inflight.insert(task_id, inf);
-            self.push(done, Event::ComputeDone(task_id));
-        }
-    }
-
-    fn on_compute_done(&mut self, task_id: u64) {
-        let inf = self
-            .inflight
-            .remove(&task_id)
-            .expect("compute for unknown task");
-        debug_assert_eq!(inf.task.id, TaskId(task_id));
-        self.reg.finish_task(inf.exec, self.clock);
-        // Result delivery back to the dispatcher.
-        let latency = Micros::from_secs_f64(self.cfg.cluster.net_latency_ms / 1e3);
-        self.rec
-            .record_completion(self.clock + latency, inf.task.arrival, inf.interval);
-        self.completed += 1;
-        // The now-free executor asks for more work.
-        if !self.queue.is_empty() {
-            self.schedule_pickup(inf.exec);
+            self.flow.start(self.clock, plan.bytes, &path, plan.task_id.0);
         }
     }
 
     // ---- provisioning ---------------------------------------------------
 
     fn on_tick(&mut self) {
-        self.rec.sample(
-            self.clock,
-            self.queue.len(),
-            self.reg.len(),
-            self.reg.busy_slots(),
-            self.reg.total_slots(),
-        );
-        let action = self
-            .prov
-            .on_tick(self.clock, self.queue.len(), &self.reg);
-        if action.allocate > 0 {
-            let (lo, hi) = self.cfg.cluster.gram_latency_s;
-            let latency = Micros::from_secs_f64(self.rng_gram.range_f64(lo, hi.max(lo + 1e-9)));
-            self.push(self.clock + latency, Event::NodesUp(action.allocate as u32));
-        }
-        for e in action.release {
-            self.release_node(e);
-        }
+        let effects = self.core.on_tick(self.clock);
+        self.handle(effects);
         // Safety net: if tasks wait, executors are free, and no pickup is
-        // in flight (e.g. every notification was declined), re-notify.
-        if !self.queue.is_empty() && self.reg.free_count() > 0 && self.pending_pickups == 0 {
-            self.notify_for_head();
-            // max-cache-hit can legitimately Wait with free executors;
-            // guarantee progress by forcing one pickup if still none.
-            if self.pending_pickups == 0 {
-                let first_free = self.reg.free_iter().next();
-                if let Some(e) = first_free {
-                    self.schedule_pickup(e);
-                }
-            }
+        // in flight (e.g. every notification was declined), re-notify —
+        // and force one pickup if the policy still declines.
+        if !self.core.queue_is_empty() && self.core.free_count() > 0 && self.pending_pickups == 0 {
+            let effects = self.core.kick();
+            self.handle(effects);
         }
         self.push(self.clock + Micros::from_secs(1), Event::Tick);
     }
@@ -685,6 +534,19 @@ mod tests {
         );
         assert_eq!(a.summary.hit_local_rate, b.summary.hit_local_rate);
         assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.dispatch_order, b.dispatch_order);
+    }
+
+    #[test]
+    fn dispatch_trace_covers_every_task() {
+        let r = run(&small_cfg(DispatchPolicy::GoodCacheCompute));
+        assert_eq!(r.dispatch_order.len(), 2_000);
+        let mut ids: Vec<u64> = r.dispatch_order.iter().map(|t| t.0).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 2_000, "every task dispatched exactly once");
+        let (hl, hg, m) = r.access_counts;
+        assert_eq!(hl + hg + m, 2_000, "one access per single-file task");
     }
 
     #[test]

@@ -411,6 +411,64 @@ fn push_cached(cache: &mut Vec<FileId>, f: FileId, sc: &mut Scenario, exec_i: us
     }
 }
 
+/// Dead-hint accounting (ROADMAP item): adversarial **leave-queue
+/// churn** — a hot file (fan-out above the eager-apply cap, so its
+/// evictions defer) whose readers keep leaving the queue through other
+/// executors while the eviction is still pending. Every such reader
+/// lingers in the first executor's candidate set as a dead hint; the
+/// next consult must skip them without perturbing dispatch (checked
+/// against the reference scan on every pickup), purge them on
+/// encounter, and the purge count must stay within the only bound the
+/// lazy design promises: one hint per (task that left the queue,
+/// executor) pair.
+#[test]
+fn dead_hint_purges_bounded_under_leave_queue_churn() {
+    use datadiffusion::coordinator::pending::FANOUT_CAP;
+    let n_exec = 3usize;
+    let mut sc = Scenario::new(DispatchPolicy::MaxComputeUtil, n_exec, 100);
+    let e0 = sc.execs[0];
+    let hot = FileId(0);
+    let readers = 4 * FANOUT_CAP as u64;
+    for _ in 0..readers {
+        sc.push_task(vec![hot]);
+    }
+    let mut left_queue = 0u64;
+    for _round in 0..10 {
+        if sc.queue.len() < 4 {
+            break;
+        }
+        // Cache the hot file at exec 0 (hot fan-out ⇒ deferred) and
+        // materialize its candidate set through a checked pickup.
+        sc.index_add(hot, e0);
+        left_queue += sc.check_pickup(0, 1).unwrap().len() as u64;
+        // Evict it — deferred again — …
+        sc.index_remove(hot, e0);
+        // … and drain readers from the head through the *other*
+        // executors while the eviction is still pending: their entries
+        // at exec 0 die in place (nothing sweeps them — the hot file has
+        // no holders at removal time).
+        for i in 1..n_exec {
+            left_queue += sc.check_pickup(i, 1).unwrap().len() as u64;
+        }
+        // The next consult of exec 0 skips + purges the dead hints; the
+        // dispatch decision still matches the reference scan (asserted
+        // inside check_pickup).
+        left_queue += sc.check_pickup(0, 1).unwrap().len() as u64;
+    }
+    sc.consistent().unwrap();
+    let purged = sc.pending.stats.dead_hints_purged;
+    assert!(purged > 0, "adversarial churn must produce dead hints");
+    assert!(
+        purged <= left_queue * n_exec as u64,
+        "purged {purged} exceeds the {left_queue}×{n_exec} leave-queue bound"
+    );
+    // The eager mirror never defers, so it can never hold a dead hint.
+    assert_eq!(
+        sc.mirror.stats.dead_hints_purged, 0,
+        "eager maintenance must not create dead hints"
+    );
+}
+
 /// The fig11-regime regression (ROADMAP "bound hot-file pending
 /// maintenance"): one popular file with ~2K queued readers while
 /// single-object LRU caches churn it in and out of every executor. The

@@ -1,7 +1,9 @@
 #!/usr/bin/env python3
 """CI gate over perf_hotpath JSON snapshots — ratio metrics only.
 
-Usage: bench_gate.py FRESH.json BASELINE.json
+Usage:
+    bench_gate.py FRESH.json BASELINE.json
+    bench_gate.py --self-test
 
 Shared CI runners are too noisy for absolute-time assertions, so the gate
 checks only quantities that noise cannot fake:
@@ -13,20 +15,30 @@ checks only quantities that noise cannot fake:
 2. *Within-run maintenance work* (fresh snapshot only): the epoch-lazy
    pending-index maintenance must not do more per-entry work than the
    eager reference on the hot-file churn workload
-   (pending/maintenance_ops <= pending/eager_maintenance_ops), and
+   (pending/maintenance_ops <= pending/eager_maintenance_ops),
    select_notify must never recount holder overlap per call
-   (notify/holder_recounts == 0 — the memoized-ranking tripwire).
+   (notify/holder_recounts == 0 — the memoized-ranking tripwire), and the
+   dead-hint purge path must stay live (pending/dead_hints_purged > 0 —
+   the bench's leave-queue phase deterministically creates dead hints, so
+   a zero means lazily-dropped candidates are leaking instead of being
+   purged on encounter).
 3. *Deterministic work counters* (fresh vs committed baseline): tasks
    inspected per pickup, boundary-cursor steps, flow rerates per event,
-   pending maintenance ops per event, notify memo hits per decision.
-   These are machine-independent, so drift beyond a generous tolerance
-   means the algorithm regressed, not the runner. Skipped (with a
-   warning) while the baseline still carries `"measured": false` — the
-   bench job refreshes it one-shot on the next main push.
+   pending maintenance ops per event, dead hints purged per event, notify
+   memo hits per decision. These are machine-independent, so drift beyond
+   a generous tolerance means the algorithm regressed, not the runner.
+   Skipped (with a warning) while the baseline still carries
+   `"measured": false` — the bench job refreshes it one-shot on the next
+   main push.
+
+`--self-test` drives the gate against synthetic snapshots — one passing
+pair, then one mutation per enforced rule, asserting each mutation is
+caught. Runs as a CI step so the gate itself cannot rot silently.
 
 Exit status 0 = pass, 1 = fail.
 """
 
+import copy
 import json
 import math
 import sys
@@ -38,9 +50,12 @@ WORK_RATIO_TOLERANCE = 1.05  # batched work must stay <= 1.05x reference
 COUNTER_DRIFT = 1.5  # fresh counter may drift to 1.5x baseline
 
 
+class GateFailure(Exception):
+    """One enforced rule was violated."""
+
+
 def fail(msg):
-    print(f"bench-gate: FAIL: {msg}")
-    sys.exit(1)
+    raise GateFailure(msg)
 
 
 def load(path):
@@ -62,12 +77,8 @@ def finite(x):
     return isinstance(x, (int, float)) and math.isfinite(x) and x > 0
 
 
-def main():
-    if len(sys.argv) != 3:
-        fail("usage: bench_gate.py FRESH.json BASELINE.json")
-    fresh = load(sys.argv[1])
-    baseline = load(sys.argv[2])
-
+def run_gate(fresh, baseline):
+    """Apply every enforced rule; raises GateFailure on the first hit."""
     groups = fresh.get("groups", [])
     if not groups:
         fail("fresh snapshot has no bench groups")
@@ -118,6 +129,8 @@ def main():
         "pending/maintenance_ops_per_event",
         "pending/eager_maintenance_ops_per_event",
         "pending/epoch_rebuilds",
+        "pending/dead_hints_purged",
+        "pending/dead_hints_purged_per_event",
         "notify/holder_recounts",
     ):
         if key not in counters:
@@ -137,6 +150,14 @@ def main():
         fail(
             f"select_notify recounted holder overlap {recounts:g} time(s): the "
             "memoized head ranking has been bypassed"
+        )
+    purged = counters["pending/dead_hints_purged"]
+    print(f"bench-gate: dead hints purged = {purged:g}")
+    if purged <= 0:
+        fail(
+            "pending/dead_hints_purged is 0: the bench's leave-queue phase "
+            "deterministically creates dead hints, so the purge-on-encounter "
+            "path has stopped firing (lazily-dropped candidates are leaking)"
         )
 
     # --- 3. inspected-per-pickup sanity (within-run). -------------------
@@ -184,6 +205,140 @@ def main():
             f"({skipped} machine-dependent totals skipped)"
         )
 
+
+# ---------------------------------------------------------------------------
+# Self-test: synthetic snapshots through every enforced rule.
+
+
+def synthetic_fresh():
+    """A minimal snapshot satisfying every rule the gate enforces."""
+    counters = {
+        "pending/maintenance_ops": 100.0,
+        "pending/eager_maintenance_ops": 400.0,
+        "pending/maintenance_ops_per_event": 0.05,
+        "pending/eager_maintenance_ops_per_event": 0.2,
+        "pending/epoch_rebuilds": 1.0,
+        "pending/dead_hints_purged": 8.0,
+        "pending/dead_hints_purged_per_event": 0.004,
+        "notify/holder_recounts": 0.0,
+        "notify/memo_builds": 2.0,
+        "notify/memo_hits_per_decision": 0.9,
+        "inspected_per_pickup/max-compute-util": 2.0,
+        "inspected_per_pickup/good-cache-compute": 2.5,
+    }
+    for concurrency in (16, 128):
+        for metric in ("rerates", "heap_updates"):
+            counters[f"flow/batched_{metric}_per_event@{concurrency}"] = 1.0
+            counters[f"flow/reference_{metric}_per_event@{concurrency}"] = 1.0
+    return {
+        "schema": 2,
+        "measured": True,
+        "groups": [
+            {
+                "name": "scheduler pick_tasks (64 nodes, warm index)",
+                "cases": [
+                    {"label": "max-compute-util", "mean_s": 1e-5},
+                    {"label": "good-cache-compute", "mean_s": 1e-5},
+                ],
+            },
+            {
+                "name": "scheduler reference window scan (64 nodes, warm index)",
+                "cases": [
+                    {"label": "max-compute-util", "mean_s": 1e-4},
+                    {"label": "good-cache-compute", "mean_s": 1e-4},
+                ],
+            },
+        ],
+        "counters": counters,
+    }
+
+
+def self_test():
+    """One passing pair, then one mutation per rule; each must be caught."""
+    fresh = synthetic_fresh()
+    baseline = copy.deepcopy(fresh)
+    run_gate(fresh, baseline)  # must pass
+
+    def mutated(label, mutate):
+        snap = copy.deepcopy(fresh)
+        mutate(snap)
+        try:
+            run_gate(snap, copy.deepcopy(baseline))
+        except GateFailure as e:
+            print(f"bench-gate self-test: `{label}` correctly rejected ({e})")
+            return
+        raise SystemExit(f"bench-gate self-test: `{label}` was NOT rejected")
+
+    def slow_indexed(s):
+        s["groups"][0]["cases"][0]["mean_s"] = 1e-3
+
+    def nan_mean(s):
+        s["groups"][0]["cases"][0]["mean_s"] = float("nan")
+
+    def batched_regresses(s):
+        s["counters"]["flow/batched_rerates_per_event@128"] = 2.0
+
+    def drop_flow_counter(s):
+        del s["counters"]["flow/reference_heap_updates_per_event@16"]
+
+    def lazy_exceeds_eager(s):
+        s["counters"]["pending/maintenance_ops"] = 500.0
+
+    def holder_recount(s):
+        s["counters"]["notify/holder_recounts"] = 1.0
+
+    def dead_hint_leak(s):
+        s["counters"]["pending/dead_hints_purged"] = 0.0
+
+    def missing_dead_hint_counter(s):
+        del s["counters"]["pending/dead_hints_purged_per_event"]
+
+    def window_scan_regression(s):
+        s["counters"]["inspected_per_pickup/max-compute-util"] = 6400.0
+
+    def counter_drift(s):
+        s["counters"]["pending/dead_hints_purged_per_event"] = 0.004 * 2.0
+
+    cases = [
+        ("indexed pickup slower than reference", slow_indexed),
+        ("non-finite case mean", nan_mean),
+        ("batched flow work regresses", batched_regresses),
+        ("missing flow counter", drop_flow_counter),
+        ("lazy maintenance exceeds eager", lazy_exceeds_eager),
+        ("holder overlap recounted", holder_recount),
+        ("dead-hint purge path dead", dead_hint_leak),
+        ("missing dead-hint counter", missing_dead_hint_counter),
+        ("pickup tracks the window again", window_scan_regression),
+        ("ratio counter drifts past baseline", counter_drift),
+    ]
+    for label, mutate in cases:
+        mutated(label, mutate)
+
+    # An unmeasured baseline must skip drift checks (and therefore pass a
+    # drifted counter) without tripping anything else.
+    drifted = copy.deepcopy(fresh)
+    drifted["counters"]["pending/dead_hints_purged_per_event"] = 0.004 * 2.0
+    unmeasured = copy.deepcopy(baseline)
+    unmeasured["measured"] = False
+    run_gate(drifted, unmeasured)
+
+    print(f"bench-gate: SELF-TEST PASS ({len(cases) + 2} scenarios)")
+
+
+def main():
+    if len(sys.argv) == 2 and sys.argv[1] == "--self-test":
+        self_test()
+        return
+    if len(sys.argv) != 3:
+        print("bench-gate: FAIL: usage: bench_gate.py FRESH.json BASELINE.json | --self-test")
+        sys.exit(1)
+    try:
+        fresh = load(sys.argv[1])
+        baseline = load(sys.argv[2])
+        run_gate(fresh, baseline)
+    except GateFailure as e:
+        print(f"bench-gate: FAIL: {e}")
+        sys.exit(1)
     print("bench-gate: PASS")
 
 
