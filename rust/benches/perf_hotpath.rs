@@ -4,8 +4,9 @@
 //! retained reference window scan), epoch-lazy pending-index maintenance
 //! vs the eager reference under hot-file churn, memoized notify ranking,
 //! wait-queue window ops, cache churn, flow-network transfer churn
-//! (batched vs per-event reference rerating), plus the whole-simulation
-//! event rate. Run before/after every optimization:
+//! (batched vs per-event reference rerating), the 4-shard coordinator
+//! router (cross-shard fetch rewrites — `shard/*` counters), plus the
+//! whole-simulation event rate. Run before/after every optimization:
 //!
 //!     cargo bench --bench perf_hotpath
 //!
@@ -22,10 +23,13 @@
 
 use datadiffusion::cache::{CacheConfig, EvictionPolicy, ObjectCache};
 use datadiffusion::config::ExperimentConfig;
+use datadiffusion::coordinator::core::{CoreConfig, FileSizes};
 use datadiffusion::coordinator::executor::ExecutorRegistry;
 use datadiffusion::coordinator::pending::{remove_queued, PendingIndex, PendingStats};
+use datadiffusion::coordinator::provisioner::ProvisionerConfig;
 use datadiffusion::coordinator::queue::{Task, WaitQueue};
 use datadiffusion::coordinator::scheduler::{DispatchPolicy, Scheduler, SchedulerConfig};
+use datadiffusion::coordinator::shard::ShardedCoordinator;
 use datadiffusion::ids::{ExecutorId, FileId, TaskId};
 use datadiffusion::index::LocationIndex;
 use datadiffusion::sim::flow::{FlowNet, RerateMode};
@@ -44,6 +48,7 @@ fn main() {
         bench_waitqueue(&mut counters),
         bench_cache(),
         bench_flownet(&mut counters),
+        bench_sharded_router(&mut counters),
         bench_whole_sim(),
     ];
     println!("\n== counters (deterministic work metrics) ==");
@@ -526,6 +531,140 @@ fn bench_flownet(counters: &mut Vec<(String, f64)>) -> Bench {
             ));
         }
     }
+    let _ = b.write_csv();
+    b
+}
+
+/// A 4-shard router with two nodes per shard and generous caches.
+fn shard_fixture() -> ShardedCoordinator {
+    let mut r = ShardedCoordinator::new(
+        CoreConfig {
+            scheduler: SchedulerConfig::default(),
+            provisioner: ProvisionerConfig::default(),
+            cache: CacheConfig {
+                capacity_bytes: 1 << 30, // no eviction: deterministic crossings
+                policy: EvictionPolicy::Lru,
+            },
+            max_nodes: 8,
+            slots_per_node: 2,
+            file_sizes: FileSizes::Uniform(10_000_000),
+        },
+        4,
+        Pcg64::seeded(9),
+    );
+    for _ in 0..8 {
+        let (_, effs) = r.register_node(Micros::ZERO);
+        r.drain_effects(effs, Micros::ZERO);
+    }
+    r
+}
+
+/// `rounds` per-shard home files: `homes[r][s]` is the r-th file whose
+/// dominant-file hash lands on shard `s`.
+fn shard_home_files(r: &ShardedCoordinator, rounds: usize) -> Vec<Vec<FileId>> {
+    let mut per_shard: Vec<Vec<FileId>> = vec![Vec::new(); 4];
+    let mut f = 0u32;
+    while per_shard.iter().any(|v| v.len() < rounds) {
+        let s = r.shard_of_file(FileId(f));
+        if per_shard[s].len() < rounds {
+            per_shard[s].push(FileId(f));
+        }
+        f += 1;
+    }
+    (0..rounds)
+        .map(|round| (0..4).map(|s| per_shard[s][round]).collect())
+        .collect()
+}
+
+/// Multi-coordinator sharding (ROADMAP "multi-coordinator sharding"): a
+/// 4-shard router fanning a cross-shard workload — every round seeds one
+/// fresh file per shard, then submits every ordered cross-shard pair, so
+/// each secondary fetch must be rewritten from a GPFS miss into a
+/// cross-shard peer fetch. Wall time measures router fan-in overhead;
+/// the deterministic `shard/*` counters feed the CI gate (cross fetches
+/// must fire, and never exceed one per routed task).
+fn bench_sharded_router(counters: &mut Vec<(String, f64)>) -> Bench {
+    let mut b = Bench::new("sharded coordinator router (K=4)");
+    // Timed: steady-state single-file task round trips through the
+    // router (arrival → notify → pickup → fetch → compute → done).
+    let mut r = shard_fixture();
+    let warm = shard_home_files(&r, 1);
+    let mut id = 0u64;
+    b.iter("task round trip through the router", 1, || {
+        let task = Task {
+            id: TaskId(id),
+            files: vec![warm[0][(id % 4) as usize]],
+            compute: Micros::ZERO,
+            arrival: Micros::ZERO,
+        };
+        id += 1;
+        let effs = r.on_arrival(task, 0, 0.0, Micros::ZERO);
+        r.drain_effects(effs, Micros::ZERO);
+    });
+
+    // Deterministic pass: 8 rounds × (4 seed tasks + 12 cross-shard
+    // pair tasks); every pair task's secondary file lives only on a
+    // foreign shard, so each round contributes exactly 12 rewrites.
+    let mut r = shard_fixture();
+    let rounds = shard_home_files(&r, 8);
+    let mut id = 0u64;
+    for homes in &rounds {
+        for &f in homes {
+            let effs = r.on_arrival(
+                Task {
+                    id: TaskId(id),
+                    files: vec![f],
+                    compute: Micros::ZERO,
+                    arrival: Micros::ZERO,
+                },
+                0,
+                0.0,
+                Micros::ZERO,
+            );
+            id += 1;
+            r.drain_effects(effs, Micros::ZERO);
+        }
+        for s in 0..4usize {
+            for t in 0..4usize {
+                if s == t {
+                    continue;
+                }
+                let effs = r.on_arrival(
+                    Task {
+                        id: TaskId(id),
+                        files: vec![homes[s], homes[t]],
+                        compute: Micros::ZERO,
+                        arrival: Micros::ZERO,
+                    },
+                    0,
+                    0.0,
+                    Micros::ZERO,
+                );
+                id += 1;
+                r.drain_effects(effs, Micros::ZERO);
+            }
+        }
+    }
+    let c = r.counters();
+    assert!(
+        c.cross_fetches > 0,
+        "cross-shard fixture produced no rewrites"
+    );
+    println!(
+        "    {} router events, {} cross fetches over {} tasks \
+         ({:.3} per task), {} cross bytes",
+        c.router_events,
+        c.cross_fetches,
+        c.tasks_routed(),
+        c.cross_fetches_per_task(),
+        c.cross_bytes
+    );
+    counters.push(("shard/router_events".into(), c.router_events as f64));
+    counters.push(("shard/cross_fetches".into(), c.cross_fetches as f64));
+    counters.push((
+        "shard/cross_fetches_per_task".into(),
+        c.cross_fetches_per_task(),
+    ));
     let _ = b.write_csv();
     b
 }

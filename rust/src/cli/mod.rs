@@ -25,7 +25,7 @@ datadiff — data diffusion (Raicu et al. 2008) reproduction
 
 USAGE:
   datadiff run (--fig N | --config FILE) [--view SECS] [--csv]
-               [--allocation one|add:N|mult:F|all]
+               [--allocation one|add:N|mult:F|all] [--shards K]
   datadiff figures [--scale X] [--quick] [--jobs N] [--check]
                                        regenerate Figures 2-15 + sweeps
   datadiff fig2|fig3|fig4-10|fig11|fig12|fig13|fig14|fig15|sweeps
@@ -43,7 +43,12 @@ any N). --check fails with a non-zero exit on NaN cells or empty tables —
 the CI figures-smoke gate. --allocation overrides the dynamic resource
 provisioner's allocation policy (one node, fixed batch of N, growth
 factor F, or everything at once — §5.2.5); the same policies drive the
-live engine through the shared coordinator core.";
+live engine through the shared coordinator core. --shards K replicates
+the coordinator K ways behind a router (task stream partitioned by
+dominant-file hash, executors assigned per shard, GPFS misses rewritten
+into cross-shard peer fetches — docs/SHARDING.md); K=1 (default) is
+bit-identical to the single coordinator, and sharded runs print the
+shard/* counter block after the summary.";
 
 /// Parsed command line.
 #[derive(Debug)]
@@ -89,8 +94,10 @@ pub fn parse(args: &[String]) -> Result<Command> {
     let mut flags: Vec<(&str, Option<&str>)> = Vec::new();
     while let Some(a) = it.next() {
         if let Some(name) = a.strip_prefix("--") {
-            let takes_value =
-                matches!(name, "fig" | "config" | "view" | "scale" | "jobs" | "allocation");
+            let takes_value = matches!(
+                name,
+                "fig" | "config" | "view" | "scale" | "jobs" | "allocation" | "shards"
+            );
             let value = if takes_value {
                 Some(
                     it.next()
@@ -125,6 +132,17 @@ pub fn parse(args: &[String]) -> Result<Command> {
                     crate::coordinator::provisioner::AllocationPolicy::parse_flag(alloc)
                         .map_err(Error::Config)?;
             }
+            if let Some(Some(k)) = get("shards") {
+                let n: usize = k
+                    .parse()
+                    .map_err(|_| Error::Config(format!("bad --shards `{k}`")))?;
+                if n == 0 {
+                    return Err(Error::Config("--shards must be >= 1".into()));
+                }
+                config.cluster.shards = n;
+                // Full cross-field validation (quota per shard, static
+                // fleets) happens in ExperimentConfig::validate at run.
+            }
             let view_every_s = match get("view") {
                 Some(Some(v)) => v
                     .parse()
@@ -137,19 +155,25 @@ pub fn parse(args: &[String]) -> Result<Command> {
                 csv: get("csv").is_some(),
             })
         }
-        "figures" => Ok(Command::Figures {
-            which: "all".into(),
-            scale: parse_figures_scale(&get)?,
-            jobs: parse_jobs(get("jobs"))?,
-            check: get("check").is_some(),
-        }),
+        "figures" => {
+            reject_shards_flag(&get)?;
+            Ok(Command::Figures {
+                which: "all".into(),
+                scale: parse_figures_scale(&get)?,
+                jobs: parse_jobs(get("jobs"))?,
+                check: get("check").is_some(),
+            })
+        }
         "fig2" | "fig3" | "fig4-10" | "fig11" | "fig12" | "fig13" | "fig14" | "fig15"
-        | "sweeps" => Ok(Command::Figures {
-            which: cmd.trim_start_matches("fig").into(),
-            scale: parse_figures_scale(&get)?,
-            jobs: parse_jobs(get("jobs"))?,
-            check: get("check").is_some(),
-        }),
+        | "sweeps" => {
+            reject_shards_flag(&get)?;
+            Ok(Command::Figures {
+                which: cmd.trim_start_matches("fig").into(),
+                scale: parse_figures_scale(&get)?,
+                jobs: parse_jobs(get("jobs"))?,
+                check: get("check").is_some(),
+            })
+        }
         "validate-model" => Ok(Command::ValidateModel {
             pjrt: get("pjrt").is_some(),
         }),
@@ -169,6 +193,20 @@ fn parse_figures_scale<'a>(get: &impl Fn(&str) -> Option<Option<&'a str>>) -> Re
             .map_err(|_| Error::Config(format!("bad --scale `{s}`")));
     }
     Ok(if get("quick").is_some() { QUICK_SCALE } else { 1.0 })
+}
+
+/// `--shards` only applies to `run` (figure presets pin their cluster
+/// shape); silently ignoring it would let a user believe they
+/// benchmarked the sharded router. Reject it loudly instead.
+fn reject_shards_flag<'a>(get: &impl Fn(&str) -> Option<Option<&'a str>>) -> Result<()> {
+    if get("shards").is_some() {
+        return Err(Error::Config(
+            "--shards applies to `run` only; use `run --fig N --shards K` \
+             (figure-suite workloads pin their cluster shape)"
+                .into(),
+        ));
+    }
+    Ok(())
 }
 
 fn parse_jobs(v: Option<Option<&str>>) -> Result<Option<usize>> {
@@ -198,11 +236,15 @@ pub fn execute(cmd: Command) -> Result<i32> {
             view_every_s,
             csv,
         } => {
+            // Validate up front so a bad --shards/--config combination is
+            // a clean CLI error, not a panic inside the engine.
+            config.validate()?;
             let r = experiments::run_summary_experiment(&config);
             let view = experiments::summary_view_table(&r, view_every_s);
             view.print();
             let t = experiments::summary_table(std::slice::from_ref(&r));
             t.print();
+            print_shard_counters(&r.shard);
             if csv {
                 let p1 = view.write_csv(&format!("{}_view", r.name))?;
                 let p2 = t.write_csv(&format!("{}_summary", r.name))?;
@@ -257,6 +299,29 @@ pub fn execute(cmd: Command) -> Result<i32> {
             );
             Ok(0)
         }
+    }
+}
+
+/// Print the router's cross-shard accounting after a sharded run (the
+/// counter glossary lives in README "Running sharded"). Quiet for plain
+/// single-coordinator runs.
+fn print_shard_counters(shard: &crate::metrics::ShardCounters) {
+    if shard.shards <= 1 {
+        return;
+    }
+    println!("\nshard counters ({} shards):", shard.shards);
+    println!("  shard/router_events          {:>12}", shard.router_events);
+    println!("  shard/cross_fetches          {:>12}", shard.cross_fetches);
+    println!("  shard/cross_bytes            {:>12}", shard.cross_bytes);
+    println!(
+        "  shard/cross_fetches_per_task {:>12.4}",
+        shard.cross_fetches_per_task()
+    );
+    for (i, t) in shard.per_shard.iter().enumerate() {
+        println!(
+            "  shard {i}: routed {:>8}  dispatched {:>8}  cross in/out {:>6}/{:<6}",
+            t.tasks_routed, t.dispatches, t.cross_in, t.cross_out
+        );
     }
 }
 
@@ -384,6 +449,28 @@ mod tests {
         }
         assert!(parse(&args("run --fig 7 --allocation banana")).is_err());
         assert!(parse(&args("run --fig 7 --allocation")).is_err());
+    }
+
+    #[test]
+    fn parses_run_shards_override() {
+        match parse(&args("run --fig 7 --shards 4")).unwrap() {
+            Command::Run { config, .. } => {
+                assert_eq!(config.cluster.shards, 4);
+                config.validate().unwrap();
+            }
+            other => panic!("{other:?}"),
+        }
+        // Default stays the single coordinator.
+        match parse(&args("run --fig 7")).unwrap() {
+            Command::Run { config, .. } => assert_eq!(config.cluster.shards, 1),
+            other => panic!("{other:?}"),
+        }
+        assert!(parse(&args("run --fig 7 --shards 0")).is_err());
+        assert!(parse(&args("run --fig 7 --shards many")).is_err());
+        assert!(parse(&args("run --fig 7 --shards")).is_err());
+        // Loud rejection instead of silent ignore on figure commands.
+        assert!(parse(&args("figures --quick --shards 4")).is_err());
+        assert!(parse(&args("fig4-10 --shards 4")).is_err());
     }
 
     #[test]

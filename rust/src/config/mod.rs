@@ -43,6 +43,14 @@ pub struct ClusterConfig {
     /// remote traffic loses to good-cache-compute despite 100% CPU
     /// utilization (§5.2.1, Fig 10 discussion).
     pub peer_overhead_ms: f64,
+    /// Coordinator shards K: the dispatch state machine is replicated
+    /// K ways behind a router
+    /// ([`crate::coordinator::shard::ShardedCoordinator`]), with the
+    /// task stream partitioned by dominant-file hash and one dispatcher
+    /// service instance per shard. 1 (the default) is the paper's
+    /// single-coordinator deployment and is bit-identical to a bare
+    /// core; see `docs/SHARDING.md`.
+    pub shards: usize,
 }
 
 impl Default for ClusterConfig {
@@ -57,6 +65,7 @@ impl Default for ClusterConfig {
             gram_latency_s: (30.0, 60.0),
             dispatch_service_us: 600.0,
             peer_overhead_ms: 60.0,
+            shards: 1,
         }
     }
 }
@@ -222,6 +231,7 @@ impl ExperimentConfig {
             "cluster.gram_latency_max_s",
             "cluster.dispatch_service_us",
             "cluster.peer_overhead_ms",
+            "cluster.shards",
             "workload.num_tasks",
             "workload.num_files",
             "workload.file_size_mb",
@@ -293,6 +303,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_float("cluster.peer_overhead_ms") {
             c.peer_overhead_ms = v;
+        }
+        if let Some(v) = doc.get_int("cluster.shards") {
+            c.shards = v as usize;
         }
 
         // [workload]
@@ -493,6 +506,26 @@ impl ExperimentConfig {
         if self.provisioner.initial_nodes > self.cluster.max_nodes {
             return fail("provisioner.initial_nodes > cluster.max_nodes".into());
         }
+        if self.cluster.shards == 0 {
+            return fail("cluster.shards must be ≥ 1".into());
+        }
+        if self.cluster.shards > self.cluster.max_nodes {
+            return fail(format!(
+                "cluster.shards ({}) > cluster.max_nodes ({}): a shard with a \
+                 zero node quota could never run its tasks",
+                self.cluster.shards, self.cluster.max_nodes
+            ));
+        }
+        if self.cluster.shards > 1
+            && self.provisioner.static_provisioning
+            && self.provisioner.initial_nodes < self.cluster.shards
+        {
+            return fail(format!(
+                "static provisioning with {} initial nodes across {} shards \
+                 leaves node-less shards that can never grow",
+                self.provisioner.initial_nodes, self.cluster.shards
+            ));
+        }
         Ok(())
     }
 }
@@ -511,6 +544,29 @@ mod tests {
         // Ideal WET from the arrival function ≈ 1415 s (§5.2).
         let wet = cfg.ideal_wet_s();
         assert!((wet - 1415.0).abs() < 30.0, "ideal WET = {wet}");
+    }
+
+    #[test]
+    fn shard_count_is_validated() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.cluster.shards = 4;
+        cfg.validate().unwrap();
+        cfg.cluster.shards = 0;
+        assert!(cfg.validate().is_err(), "zero shards");
+        cfg.cluster.shards = cfg.cluster.max_nodes + 1;
+        assert!(cfg.validate().is_err(), "more shards than nodes");
+        cfg.cluster.shards = 4;
+        cfg.provisioner = ProvisionerConfig::static_nodes(2);
+        assert!(cfg.validate().is_err(), "static fleet smaller than K");
+        cfg.provisioner = ProvisionerConfig::static_nodes(4);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn shards_parse_from_toml() {
+        let cfg = ExperimentConfig::from_toml("[cluster]\nshards = 4\n").unwrap();
+        assert_eq!(cfg.cluster.shards, 4);
+        assert!(ExperimentConfig::from_toml("[cluster]\nshards = 0\n").is_err());
     }
 
     #[test]

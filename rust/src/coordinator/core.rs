@@ -55,6 +55,19 @@
 //! the 1 Hz samples are produced identically by both engines (the live
 //! engine's old ad-hoc counters are gone — its report reads
 //! [`Recorder::access_counts`]).
+//!
+//! ## Scaling out: the sharding seam
+//!
+//! Because every entry point is an event and every output is an effect,
+//! replicating the coordinator is a routing problem, not a refactor:
+//! [`crate::coordinator::shard::ShardedCoordinator`] runs K cores side by
+//! side, partitions the task stream by dominant-file hash, and fans the
+//! driver's events in through this same API (see `docs/SHARDING.md`).
+//! The only addition the core makes for it is deliberately *read-only*:
+//! [`CoordinatorCore::probe_holder`] answers "does any executor here
+//! cache this file?" without touching caches, index, or PRNG, so the
+//! router can rewrite a GPFS miss into a cross-shard peer fetch while
+//! each core's single-mutation-site invariants stay intact.
 
 use crate::cache::{CacheConfig, ObjectCache};
 use crate::coordinator::executor::ExecutorRegistry;
@@ -565,6 +578,35 @@ impl CoordinatorCore {
 
     // ---- read-only state queries ---------------------------------------
 
+    /// Read-only holder probe: the first executor (ascending id order)
+    /// whose cache holds `file`, per this coordinator's location index.
+    /// O(1) hash probe + one bit scan; mutates nothing and draws no
+    /// randomness. This is the seam the shard router's cross-shard
+    /// fetch rewrite reads — see
+    /// [`crate::coordinator::shard::ShardedCoordinator`] — and it is
+    /// deliberately weaker than [`resolve_access`]: the probe names a
+    /// *source candidate* on a foreign coordinator without perturbing
+    /// either side's cache or index state.
+    ///
+    /// [`resolve_access`]: crate::coordinator::resolve_access
+    pub fn probe_holder(&self, file: FileId) -> Option<ExecutorId> {
+        self.index.holders(file).and_then(|h| h.iter().next())
+    }
+
+    /// Nodes requested via [`Effect::Allocate`] that have not yet come
+    /// back through [`CoordinatorCore::on_node_registered`]. The shard
+    /// router uses this to route a finished node bootstrap to the shard
+    /// whose provisioner asked for it.
+    pub fn pending_allocations(&self) -> usize {
+        self.prov.pending()
+    }
+
+    /// Does the configured policy maintain caches and the location
+    /// index? (False only for first-available, which always reads GPFS.)
+    pub fn caching_enabled(&self) -> bool {
+        self.caching()
+    }
+
     /// Queued (not yet dispatched) task count.
     pub fn queue_len(&self) -> usize {
         self.queue.len()
@@ -831,6 +873,24 @@ mod tests {
         let effs = c.on_fetch_done(TaskId(0), Micros::ZERO, None);
         assert!(matches!(effs.as_slice(), [Effect::Compute { .. }]));
         assert_eq!(c.rec.access_counts(), (0, 0, 2));
+    }
+
+    #[test]
+    fn probe_holder_reads_without_perturbing() {
+        let mut c = core(DispatchPolicy::GoodCacheCompute);
+        let (e0, _) = c.register_node(Micros::ZERO);
+        assert_eq!(c.probe_holder(FileId(7)), None);
+        let _ = c.on_arrival(task(0, 7), 0, 0.0, Micros::ZERO);
+        let _ = c.on_pickup(e0, Micros::ZERO);
+        let _ = c.on_fetch_done(TaskId(0), Micros::ZERO, None);
+        assert_eq!(c.probe_holder(FileId(7)), Some(e0));
+        // Repeated probes never count as accesses or touch the caches.
+        for _ in 0..10 {
+            let _ = c.probe_holder(FileId(7));
+        }
+        assert_eq!(c.rec.access_counts(), (0, 0, 1));
+        assert!(c.caching_enabled());
+        assert_eq!(c.pending_allocations(), 0);
     }
 
     #[test]

@@ -10,9 +10,14 @@
 //! * [`CoordinatorCore`](self::core::CoordinatorCore) — the shared
 //!   dispatch state machine: a typed event API (`on_arrival`,
 //!   `on_pickup`, `on_fetch_done`, `on_compute_done`, `on_tick`)
-//!   returning [`Effect`](self::core::Effect) lists the engines enact.
-//!   Both engines drive *this* type; the parts below are its internals
-//!   (still exported for benches, parity tests and unit composition):
+//!   returning [`Effect`](self::core::Effect) lists the engines enact;
+//! * [`ShardedCoordinator`](self::shard::ShardedCoordinator) — K cores
+//!   behind that same API: the task stream partitioned by dominant-file
+//!   hash, executors assigned per shard, GPFS misses rewritten into
+//!   cross-shard peer fetches (see `docs/SHARDING.md`). The sim engine
+//!   drives this type (K = 1 is a bit-identical pass-through); the parts
+//!   below are the cores' internals (still exported for benches, parity
+//!   tests and unit composition):
 //! * [`queue::WaitQueue`] — the task wait queue (Q) with O(1) window
 //!   removal and O(1) window-membership tests;
 //! * [`pending::PendingIndex`] — the inverted pending-task index the
@@ -27,6 +32,7 @@ pub mod pending;
 pub mod provisioner;
 pub mod queue;
 pub mod scheduler;
+pub mod shard;
 
 use crate::cache::ObjectCache;
 #[cfg(test)]

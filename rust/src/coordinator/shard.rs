@@ -1,0 +1,794 @@
+//! Multi-coordinator sharding behind the effect API — K
+//! [`CoordinatorCore`]s under one router.
+//!
+//! The paper's dispatch throughput is capped by one Falkon dispatcher
+//! (§3, §5.1): every notify, pickup, and index update serializes through
+//! a single service instance, and §5.1 measures the ceiling at 1322–2981
+//! decisions/s. The coordinator-core refactor (PR 4) turned that
+//! singleton into a value — so the scale-out step is not a rewrite but a
+//! *routing problem*: run K cores side by side and fan the driver's
+//! events in. [`ShardedCoordinator`] is that router. It owns K fully
+//! independent dispatch state machines (each with its own wait queue,
+//! scheduler, pending/location index, caches, provisioner, and metrics
+//! recorder) and presents the *same* event → effect API as a single
+//! core, so the engines drive it unchanged.
+//!
+//! ## Routing table
+//!
+//! Every driver event is routed to exactly one shard (or fanned to all),
+//! and every returned effect is rewritten from shard-local executor ids
+//! to the router's global id space before the driver sees it:
+//!
+//! | event | routed by | effect rewrite |
+//! |---|---|---|
+//! | [`on_arrival`](ShardedCoordinator::on_arrival) | dominant-file hash (splitmix64 of `files[0]` mod K) | `Notify` local→global |
+//! | [`on_pickup`](ShardedCoordinator::on_pickup) | executor's owning shard | `Fetch` ids local→global **+ cross-shard rewrite** |
+//! | [`on_fetch_done`](ShardedCoordinator::on_fetch_done) | task's owning shard (recorded at arrival) | as pickup; a rewritten fetch reports back as a global hit |
+//! | [`on_compute_done`](ShardedCoordinator::on_compute_done) | task's owning shard | `Notify` local→global |
+//! | [`on_tick`](ShardedCoordinator::on_tick) / [`kick`](ShardedCoordinator::kick) | fanned to every shard, effects concatenated in shard order | `Release` lists local→global |
+//! | [`register_node`](ShardedCoordinator::register_node) | round-robin over shards | `Notify` local→global |
+//! | [`on_node_registered`](ShardedCoordinator::on_node_registered) | first shard with a pending allocation | `Notify` local→global |
+//!
+//! Tasks are partitioned by **dominant file** — the first entry of
+//! θ(κ) — so all readers of a file meet in one shard and that shard's
+//! scheduler sees the full pending-reader picture for it. Executors are
+//! partitioned at registration (round-robin for the initial fleet;
+//! allocation-demand routing afterwards), and each shard's provisioner
+//! gets a `max_nodes/K` quota so the cluster cap is conserved.
+//!
+//! ## The cross-shard peer-fetch protocol
+//!
+//! Sharding splits the location index, so a file cached on shard B is
+//! invisible to shard A's `resolve_access` — A would send its executor
+//! to GPFS for bytes the transient fleet already holds, exactly the
+//! cross-site waste DIANA-style bulk scheduling warns about. The router
+//! closes the gap at the effect boundary:
+//!
+//! 1. a shard resolves a fetch as a persistent-store **`Miss`**;
+//! 2. the router probes the *other* shards' location indexes through the
+//!    read-only [`CoordinatorCore::probe_holder`] seam (ascending shard
+//!    order, first holder in ascending executor-id order — fully
+//!    deterministic, no PRNG);
+//! 3. on a hit it rewrites the plan to a **remote-peer fetch**
+//!    (`kind = HitGlobal`, `peer =` the foreign holder's global id) and
+//!    remembers the task;
+//! 4. when the driver reports the transfer done, the router overrides
+//!    the observed access as a global hit, so the owning shard's
+//!    recorder tallies what actually moved — and the transfer is
+//!    accounted on **both** shards
+//!    ([`cross_in`](crate::metrics::ShardTally::cross_in) at the
+//!    destination, [`cross_out`](crate::metrics::ShardTally::cross_out)
+//!    at the source).
+//!
+//! The foreign shard's state is never mutated: its executor serves the
+//! bytes (the driver routes the transfer over that node's disk + NIC
+//! links, GridFTP-style), but its cache, index, and scheduler are
+//! untouched. Each core's single-mutation-site invariants survive
+//! sharding intact.
+//!
+//! ## The K = 1 parity contract
+//!
+//! With one shard the router is a **bit-identical pass-through**: ids are
+//! not remapped, no task→shard map is kept, the cross-shard probe never
+//! runs (there is no other shard), and every event method delegates
+//! straight to the single core. `rust/tests/shard_parity.rs` proves it —
+//! identical effect streams, dispatch order, and access tallies against
+//! a bare [`CoordinatorCore`] across all five dispatch policies — and
+//! checks the K = 4 conservation laws (every task dispatched exactly
+//! once, access tallies sum across shards, cross-fetch count ≤ one per
+//! task). `perf_hotpath` snapshots the router's work counters as
+//! `shard/*` and `tools/bench_gate.py` gates them.
+
+use crate::coordinator::core::{CoordinatorCore, CoreConfig, Effect};
+use crate::coordinator::queue::Task;
+use crate::coordinator::scheduler::SchedulerStats;
+use crate::coordinator::AccessKind;
+use crate::ids::{ExecutorId, FileId, TaskId};
+use crate::metrics::{Recorder, ShardCounters};
+use crate::util::prng::Pcg64;
+use crate::util::time::Micros;
+use std::collections::HashMap;
+
+/// K independent [`CoordinatorCore`]s behind the single-core event API.
+/// Construct with [`ShardedCoordinator::new`]; drive exactly like a
+/// core; read the cross-shard accounting from
+/// [`ShardedCoordinator::counters`]. See the module docs for the
+/// routing table and the cross-shard fetch protocol.
+#[derive(Debug)]
+pub struct ShardedCoordinator {
+    cores: Vec<CoordinatorCore>,
+    /// Global executor id → (shard, shard-local id). Empty at K = 1
+    /// (ids pass through untouched).
+    to_local: HashMap<u32, (usize, u32)>,
+    /// Per-shard: shard-local id → global id. Entries are replaced when
+    /// a core recycles a released local id for a new node.
+    to_global: Vec<HashMap<u32, u32>>,
+    next_global: u32,
+    /// Task id → owning shard, recorded at arrival, dropped at
+    /// completion/failure. Not maintained at K = 1.
+    task_shard: HashMap<u64, usize>,
+    /// Tasks whose *current* fetch was rewritten into a cross-shard
+    /// peer transfer (task id → bytes), so the completion reports back
+    /// as a global hit.
+    cross_inflight: HashMap<u64, u64>,
+    /// Round-robin cursor for initial-fleet registration.
+    next_register: usize,
+    /// Router-level tallies (events fanned, cross-shard fetches,
+    /// per-shard routing).
+    counters: ShardCounters,
+}
+
+impl ShardedCoordinator {
+    /// Build a `shards`-way router. Each shard gets a clone of `config`
+    /// with a `max_nodes / shards` provisioner quota (remainder spread
+    /// over the low shards) and its own PRNG stream forked from `rng`.
+    /// With `shards == 1` the single core receives `config` and `rng`
+    /// verbatim — the bit-identical pass-through the parity suite pins.
+    ///
+    /// Callers must keep `shards <= config.max_nodes` (validated by
+    /// [`crate::config::ExperimentConfig::validate`]); a shard with a
+    /// zero node quota could never provision an executor and tasks
+    /// hashed to it would wait forever.
+    pub fn new(config: CoreConfig, shards: usize, mut rng: Pcg64) -> Self {
+        let k = shards.max(1);
+        // Hard assert (not debug): a zero-quota shard can never register
+        // an executor, so tasks hashed to it would stall a release-build
+        // run forever instead of failing here at construction.
+        assert!(
+            k == 1 || config.max_nodes >= k,
+            "{k} shards need {k} node quotas but max_nodes is {}",
+            config.max_nodes
+        );
+        let cores: Vec<CoordinatorCore> = if k == 1 {
+            vec![CoordinatorCore::new(config, rng)]
+        } else {
+            let base = config.max_nodes / k;
+            let rem = config.max_nodes % k;
+            (0..k)
+                .map(|s| {
+                    let mut shard_cfg = config.clone();
+                    shard_cfg.max_nodes = base + usize::from(s < rem);
+                    CoordinatorCore::new(shard_cfg, rng.fork(s as u64))
+                })
+                .collect()
+        };
+        ShardedCoordinator {
+            to_local: HashMap::new(),
+            to_global: vec![HashMap::new(); k],
+            next_global: 0,
+            task_shard: HashMap::new(),
+            cross_inflight: HashMap::new(),
+            next_register: 0,
+            counters: ShardCounters::new(k),
+            cores,
+        }
+    }
+
+    /// Number of shards (coordinator cores).
+    pub fn shards(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Router-level tallies so far.
+    pub fn counters(&self) -> &ShardCounters {
+        &self.counters
+    }
+
+    /// Read access to one shard's core (tests, benches).
+    pub fn core(&self, shard: usize) -> &CoordinatorCore {
+        &self.cores[shard]
+    }
+
+    /// The shard a task with dominant file `file` routes to: a
+    /// splitmix64 finalizer over the file id, mod K. Stateless and
+    /// deterministic; exposed so tests can construct workloads with a
+    /// known cross-shard shape.
+    pub fn shard_of_file(&self, file: FileId) -> usize {
+        let k = self.cores.len();
+        if k == 1 {
+            return 0;
+        }
+        let mut x = (file.0 as u64).wrapping_add(0x9e37_79b9_7f4a_7c15);
+        x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        x ^= x >> 31;
+        (x % k as u64) as usize
+    }
+
+    // ---- id translation -------------------------------------------------
+
+    fn g2l(&self, global: ExecutorId) -> Option<(usize, ExecutorId)> {
+        if self.cores.len() == 1 {
+            return Some((0, global));
+        }
+        self.to_local
+            .get(&global.0)
+            .map(|&(shard, local)| (shard, ExecutorId(local)))
+    }
+
+    fn l2g(&self, shard: usize, local: ExecutorId) -> ExecutorId {
+        if self.cores.len() == 1 {
+            return local;
+        }
+        ExecutorId(self.to_global[shard][&local.0])
+    }
+
+    /// Bind a freshly registered shard-local executor to a new global id.
+    fn bind(&mut self, shard: usize, local: ExecutorId) -> ExecutorId {
+        if self.cores.len() == 1 {
+            return local;
+        }
+        let global = self.next_global;
+        self.next_global += 1;
+        self.to_local.insert(global, (shard, local.0));
+        self.to_global[shard].insert(local.0, global);
+        ExecutorId(global)
+    }
+
+    /// The shard that owns `exec`, if it is registered.
+    pub fn shard_of_exec(&self, exec: ExecutorId) -> Option<usize> {
+        self.g2l(exec).map(|(shard, _)| shard)
+    }
+
+    fn shard_of_task(&self, task_id: TaskId) -> usize {
+        if self.cores.len() == 1 {
+            0
+        } else {
+            *self
+                .task_shard
+                .get(&task_id.0)
+                .expect("event for a task the router never saw arrive")
+        }
+    }
+
+    // ---- effect rewriting -----------------------------------------------
+
+    /// Rewrite one shard's effects into the global id space, applying
+    /// the cross-shard fetch rewrite to GPFS misses. Identity at K = 1.
+    fn rewrite(&mut self, shard: usize, effects: Vec<Effect>) -> Vec<Effect> {
+        if self.cores.len() == 1 {
+            return effects;
+        }
+        effects
+            .into_iter()
+            .map(|e| self.rewrite_one(shard, e))
+            .collect()
+    }
+
+    fn rewrite_one(&mut self, shard: usize, effect: Effect) -> Effect {
+        match effect {
+            Effect::Notify(e) => Effect::Notify(self.l2g(shard, e)),
+            Effect::Fetch(mut plan) => {
+                plan.exec = self.l2g(shard, plan.exec);
+                plan.peer = plan.peer.map(|p| self.l2g(shard, p));
+                if plan.kind == AccessKind::Miss {
+                    if let Some((src, holder)) = self.probe_foreign(shard, plan.file) {
+                        plan.kind = AccessKind::HitGlobal;
+                        plan.peer = Some(self.l2g(src, holder));
+                        self.cross_inflight.insert(plan.task_id.0, plan.bytes);
+                        self.counters.cross_fetches += 1;
+                        self.counters.cross_bytes += plan.bytes;
+                        self.counters.per_shard[shard].cross_in += 1;
+                        self.counters.per_shard[src].cross_out += 1;
+                    }
+                }
+                Effect::Fetch(plan)
+            }
+            Effect::Compute {
+                task_id,
+                exec,
+                compute,
+            } => Effect::Compute {
+                task_id,
+                exec: self.l2g(shard, exec),
+                compute,
+            },
+            Effect::Allocate(n) => Effect::Allocate(n),
+            Effect::Release(execs) => Effect::Release(
+                execs
+                    .into_iter()
+                    .map(|e| self.l2g(shard, e))
+                    .collect(),
+            ),
+        }
+    }
+
+    /// Deterministic foreign-holder probe: ascending shard order
+    /// (skipping the owner), first holder per shard in ascending
+    /// executor-id order. Read-only on every core.
+    fn probe_foreign(&self, owner: usize, file: FileId) -> Option<(usize, ExecutorId)> {
+        if !self.cores[owner].caching_enabled() {
+            // first-available never caches anywhere: nothing to find.
+            return None;
+        }
+        (0..self.cores.len())
+            .filter(|&s| s != owner)
+            .find_map(|s| self.cores[s].probe_holder(file).map(|h| (s, h)))
+    }
+
+    // ---- node lifecycle -------------------------------------------------
+
+    /// Register a node of the initial fleet (or a driver enacting
+    /// [`Effect::Allocate`] without LRM bookkeeping): shards take turns
+    /// in round-robin order so the fleet starts balanced.
+    pub fn register_node(&mut self, now: Micros) -> (ExecutorId, Vec<Effect>) {
+        self.counters.router_events += 1;
+        let shard = self.next_register % self.cores.len();
+        self.next_register += 1;
+        let (local, effects) = self.cores[shard].register_node(now);
+        let global = self.bind(shard, local);
+        let effects = self.rewrite(shard, effects);
+        (global, effects)
+    }
+
+    /// A node requested through [`Effect::Allocate`] finished its LRM
+    /// bootstrap. Routed to the first shard with a pending allocation —
+    /// allocations and registrations pair up by count, not provenance,
+    /// so every shard's pending total drains exactly once per
+    /// registration. Falls back to plain registration on the emptiest
+    /// shard if no shard is waiting (defensive; unreachable under the
+    /// engines' allocate-then-register discipline).
+    pub fn on_node_registered(&mut self, now: Micros) -> (ExecutorId, Vec<Effect>) {
+        self.counters.router_events += 1;
+        let k = self.cores.len();
+        let waiting = (0..k).find(|&s| self.cores[s].pending_allocations() > 0);
+        let (shard, (local, effects)) = match waiting {
+            Some(s) => (s, self.cores[s].on_node_registered(now)),
+            None => {
+                let s = (0..k)
+                    .min_by_key(|&s| self.cores[s].node_count())
+                    .expect("at least one shard");
+                (s, self.cores[s].register_node(now))
+            }
+        };
+        let global = self.bind(shard, local);
+        let effects = self.rewrite(shard, effects);
+        (global, effects)
+    }
+
+    /// Release an idle executor named in [`Effect::Release`]: scrubs it
+    /// from its shard and drops the id binding. Unknown ids are ignored
+    /// (the executor was already released).
+    pub fn release_node(&mut self, exec: ExecutorId) {
+        self.counters.router_events += 1;
+        let Some((shard, local)) = self.g2l(exec) else {
+            return;
+        };
+        self.cores[shard].release_node(local);
+        if self.cores.len() > 1 {
+            self.to_local.remove(&exec.0);
+            self.to_global[shard].remove(&local.0);
+        }
+    }
+
+    // ---- dispatch events ------------------------------------------------
+
+    /// A task arrived: routed to its dominant file's shard (see
+    /// [`ShardedCoordinator::shard_of_file`]).
+    pub fn on_arrival(
+        &mut self,
+        task: Task,
+        interval: u32,
+        rate: f64,
+        now: Micros,
+    ) -> Vec<Effect> {
+        self.counters.router_events += 1;
+        let shard = task.files.first().map_or(0, |&f| self.shard_of_file(f));
+        self.counters.per_shard[shard].tasks_routed += 1;
+        if self.cores.len() > 1 {
+            self.task_shard.insert(task.id.0, shard);
+        }
+        let effects = self.cores[shard].on_arrival(task, interval, rate, now);
+        self.rewrite(shard, effects)
+    }
+
+    /// An executor asks for work: routed to its owning shard. Returns
+    /// nothing if the executor was released meanwhile (mirrors the
+    /// core's own guard).
+    pub fn on_pickup(&mut self, exec: ExecutorId, now: Micros) -> Vec<Effect> {
+        self.counters.router_events += 1;
+        let Some((shard, local)) = self.g2l(exec) else {
+            return Vec::new();
+        };
+        let effects = self.cores[shard].on_pickup(local, now);
+        self.rewrite(shard, effects)
+    }
+
+    /// The driver finished one file transfer. If the router rewrote this
+    /// fetch into a cross-shard peer transfer, the owning shard records
+    /// it as the global hit it actually was (an explicit `observed`
+    /// report from a live driver takes precedence).
+    pub fn on_fetch_done(
+        &mut self,
+        task_id: TaskId,
+        now: Micros,
+        observed: Option<(AccessKind, u64)>,
+    ) -> Vec<Effect> {
+        self.counters.router_events += 1;
+        let shard = self.shard_of_task(task_id);
+        let observed = match (self.cross_inflight.remove(&task_id.0), observed) {
+            (Some(bytes), None) => Some((AccessKind::HitGlobal, bytes)),
+            (_, explicit) => explicit,
+        };
+        let effects = self.cores[shard].on_fetch_done(task_id, now, observed);
+        self.rewrite(shard, effects)
+    }
+
+    /// A task's compute finished on its executor.
+    pub fn on_compute_done(
+        &mut self,
+        task_id: TaskId,
+        now: Micros,
+        completed_at: Micros,
+    ) -> Vec<Effect> {
+        self.counters.router_events += 1;
+        let shard = self.shard_of_task(task_id);
+        self.task_shard.remove(&task_id.0);
+        let effects = self.cores[shard].on_compute_done(task_id, now, completed_at);
+        self.rewrite(shard, effects)
+    }
+
+    /// A dispatched task failed on its executor (live-driver semantics;
+    /// resubmission goes back through [`ShardedCoordinator::on_arrival`]
+    /// and is re-routed by dominant file as usual).
+    pub fn on_task_failed(&mut self, task_id: TaskId, now: Micros) -> Vec<Effect> {
+        self.counters.router_events += 1;
+        let shard = self.shard_of_task(task_id);
+        self.task_shard.remove(&task_id.0);
+        self.cross_inflight.remove(&task_id.0);
+        let effects = self.cores[shard].on_task_failed(task_id, now);
+        self.rewrite(shard, effects)
+    }
+
+    /// Periodic sample + provisioning decision, fanned to every shard;
+    /// effects are concatenated in shard order (deterministic).
+    pub fn on_tick(&mut self, now: Micros) -> Vec<Effect> {
+        self.counters.router_events += 1;
+        let mut out = Vec::new();
+        for shard in 0..self.cores.len() {
+            let effects = self.cores[shard].on_tick(now);
+            out.extend(self.rewrite(shard, effects));
+        }
+        out
+    }
+
+    /// Progress safety net, fanned to every shard (a shard with waiting
+    /// tasks and free executors kicks independently of the others).
+    pub fn kick(&mut self) -> Vec<Effect> {
+        self.counters.router_events += 1;
+        let mut out = Vec::new();
+        for shard in 0..self.cores.len() {
+            let effects = self.cores[shard].kick();
+            out.extend(self.rewrite(shard, effects));
+        }
+        out
+    }
+
+    // ---- read-only aggregates -------------------------------------------
+
+    /// Total queued tasks across shards.
+    pub fn queue_len(&self) -> usize {
+        self.cores.iter().map(|c| c.queue_len()).sum()
+    }
+
+    /// True when no shard has waiting tasks.
+    pub fn queue_is_empty(&self) -> bool {
+        self.cores.iter().all(|c| c.queue_is_empty())
+    }
+
+    /// Executors with a free slot, across shards.
+    pub fn free_count(&self) -> usize {
+        self.cores.iter().map(|c| c.free_count()).sum()
+    }
+
+    /// Registered executors across shards.
+    pub fn node_count(&self) -> usize {
+        self.cores.iter().map(|c| c.node_count()).sum()
+    }
+
+    // ---- end-of-run reporting -------------------------------------------
+
+    /// Take every shard's dispatch trace, concatenated in shard order,
+    /// and fill the per-shard dispatch tallies. At K = 1 this is exactly
+    /// the core's trace. Call before
+    /// [`ShardedCoordinator::take_counters`].
+    pub fn take_dispatch_log(&mut self) -> Vec<TaskId> {
+        let mut out = Vec::new();
+        for (shard, core) in self.cores.iter_mut().enumerate() {
+            let log = core.take_dispatch_log();
+            self.counters.per_shard[shard].dispatches += log.len() as u64;
+            out.extend(log);
+        }
+        out
+    }
+
+    /// Sum of every shard's scheduler counters.
+    pub fn merged_sched_stats(&self) -> SchedulerStats {
+        let mut out = SchedulerStats::default();
+        for core in &self.cores {
+            let s = core.sched_stats();
+            out.notify_decisions += s.notify_decisions;
+            out.pickups += s.pickups;
+            out.tasks_dispatched += s.tasks_dispatched;
+            out.tasks_inspected += s.tasks_inspected;
+            out.full_hit_dispatches += s.full_hit_dispatches;
+            out.holder_recounts += s.holder_recounts;
+        }
+        out
+    }
+
+    /// Take the shards' recorders merged into one cluster view
+    /// ([`Recorder::absorb`]). At K = 1 the single recorder is moved out
+    /// untouched, so single-shard reporting is bit-identical to a bare
+    /// core's.
+    pub fn take_merged_recorder(&mut self) -> Recorder {
+        if self.cores.len() == 1 {
+            return std::mem::take(&mut self.cores[0].rec);
+        }
+        let mut merged = Recorder::new();
+        for core in &mut self.cores {
+            merged.absorb(std::mem::take(&mut core.rec));
+        }
+        merged
+    }
+
+    /// Take the router tallies (call after
+    /// [`ShardedCoordinator::take_dispatch_log`], which fills the
+    /// per-shard dispatch counts).
+    pub fn take_counters(&mut self) -> ShardCounters {
+        std::mem::take(&mut self.counters)
+    }
+
+    /// Test/bench support: the minimal synchronous driver. Enacts
+    /// `effects` depth-first at one instant — notifications become
+    /// immediate pickups, fetches and computes complete instantly,
+    /// allocations register instantly, releases are unconditional — so
+    /// fixtures can run a workload to quiescence without an event loop.
+    /// Real drivers (the engines) model time and data movement instead;
+    /// this exists so the crate's three fixture sites share one
+    /// enactment loop that a new [`Effect`] variant cannot silently
+    /// miss.
+    #[doc(hidden)]
+    pub fn drain_effects(&mut self, effects: Vec<Effect>, now: Micros) {
+        let mut stack = effects;
+        while let Some(effect) = stack.pop() {
+            match effect {
+                Effect::Notify(e) => {
+                    let effs = self.on_pickup(e, now);
+                    stack.extend(effs);
+                }
+                Effect::Fetch(plan) => {
+                    let effs = self.on_fetch_done(plan.task_id, now, None);
+                    stack.extend(effs);
+                }
+                Effect::Compute { task_id, .. } => {
+                    let effs = self.on_compute_done(task_id, now, now);
+                    stack.extend(effs);
+                }
+                Effect::Allocate(n) => {
+                    for _ in 0..n {
+                        let (_, effs) = self.on_node_registered(now);
+                        stack.extend(effs);
+                    }
+                }
+                Effect::Release(execs) => {
+                    for e in execs {
+                        self.release_node(e);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::{CacheConfig, EvictionPolicy};
+    use crate::coordinator::core::FileSizes;
+    use crate::coordinator::scheduler::{DispatchPolicy, SchedulerConfig};
+
+    fn config(policy: DispatchPolicy) -> CoreConfig {
+        CoreConfig {
+            scheduler: SchedulerConfig {
+                policy,
+                ..SchedulerConfig::default()
+            },
+            provisioner: crate::coordinator::provisioner::ProvisionerConfig::default(),
+            cache: CacheConfig {
+                capacity_bytes: 1_000,
+                policy: EvictionPolicy::Lru,
+            },
+            max_nodes: 8,
+            slots_per_node: 1,
+            file_sizes: FileSizes::Uniform(10),
+        }
+    }
+
+    fn router(policy: DispatchPolicy, shards: usize) -> ShardedCoordinator {
+        ShardedCoordinator::new(config(policy), shards, Pcg64::seeded(3))
+    }
+
+    fn task(id: u64, files: &[u32]) -> Task {
+        Task {
+            id: TaskId(id),
+            files: files.iter().map(|&f| FileId(f)).collect(),
+            compute: Micros::from_millis(1),
+            arrival: Micros::ZERO,
+        }
+    }
+
+    /// Two files guaranteed to live on different shards of `r`.
+    fn files_on_distinct_shards(r: &ShardedCoordinator) -> (u32, u32) {
+        let a = 0u32;
+        let sa = r.shard_of_file(FileId(a));
+        let b = (1..1_000u32)
+            .find(|&f| r.shard_of_file(FileId(f)) != sa)
+            .expect("hash spreads over shards");
+        (a, b)
+    }
+
+    #[test]
+    fn single_shard_is_a_pass_through() {
+        let mut r = router(DispatchPolicy::GoodCacheCompute, 1);
+        let mut c = CoordinatorCore::new(config(DispatchPolicy::GoodCacheCompute), Pcg64::seeded(3));
+        let (re, reffs) = r.register_node(Micros::ZERO);
+        let (ce, ceffs) = c.register_node(Micros::ZERO);
+        assert_eq!(re, ce);
+        assert_eq!(format!("{reffs:?}"), format!("{ceffs:?}"));
+        let r_effs = r.on_arrival(task(0, &[7]), 0, 0.0, Micros::ZERO);
+        let c_effs = c.on_arrival(task(0, &[7]), 0, 0.0, Micros::ZERO);
+        assert_eq!(format!("{r_effs:?}"), format!("{c_effs:?}"));
+        let r_effs = r.on_pickup(re, Micros::ZERO);
+        let c_effs = c.on_pickup(ce, Micros::ZERO);
+        assert_eq!(format!("{r_effs:?}"), format!("{c_effs:?}"));
+        assert_eq!(r.counters().cross_fetches, 0);
+        assert_eq!(r.shards(), 1);
+    }
+
+    #[test]
+    fn tasks_route_by_dominant_file() {
+        let mut r = router(DispatchPolicy::GoodCacheCompute, 4);
+        // Register two nodes per shard.
+        for _ in 0..8 {
+            let (e, effs) = r.register_node(Micros::ZERO);
+            assert!(r.shard_of_exec(e).is_some());
+            r.drain_effects(effs, Micros::ZERO); // cancels the fresh reservation
+        }
+        let (a, b) = files_on_distinct_shards(&r);
+        let sa = r.shard_of_file(FileId(a));
+        let sb = r.shard_of_file(FileId(b));
+        let effs = r.on_arrival(task(0, &[a]), 0, 0.0, Micros::ZERO);
+        r.drain_effects(effs, Micros::ZERO);
+        let effs = r.on_arrival(task(1, &[b]), 0, 0.0, Micros::ZERO);
+        r.drain_effects(effs, Micros::ZERO);
+        assert_eq!(r.counters().per_shard[sa].tasks_routed, 1);
+        assert_eq!(r.counters().per_shard[sb].tasks_routed, 1);
+        // Same-shard data never crosses shards.
+        assert_eq!(r.counters().cross_fetches, 0);
+        assert_eq!(r.core(sa).rec.access_counts().2, 1, "miss in shard A");
+        assert_eq!(r.core(sb).rec.access_counts().2, 1, "miss in shard B");
+    }
+
+    #[test]
+    fn gpfs_miss_with_foreign_holder_becomes_cross_shard_peer_fetch() {
+        let mut r = router(DispatchPolicy::GoodCacheCompute, 2);
+        for _ in 0..4 {
+            let (_, effs) = r.register_node(Micros::ZERO);
+            r.drain_effects(effs, Micros::ZERO);
+        }
+        let (a, b) = files_on_distinct_shards(&r);
+        let sb = r.shard_of_file(FileId(b));
+        // Seed file b into its home shard's cache.
+        let effs = r.on_arrival(task(0, &[b]), 0, 0.0, Micros::ZERO);
+        r.drain_effects(effs, Micros::ZERO);
+        assert!(r.core(sb).probe_holder(FileId(b)).is_some());
+
+        // A task dominant in the *other* shard also reads b: its home
+        // shard misses, the router must rewrite to a remote-peer plan.
+        let sa = r.shard_of_file(FileId(a));
+        assert_ne!(sa, sb);
+        let effs = r.on_arrival(task(1, &[a, b]), 0, 0.0, Micros::ZERO);
+        // Walk the effects by hand to inspect the plans.
+        let mut stack = effs;
+        let mut saw_cross = false;
+        while let Some(effect) = stack.pop() {
+            match effect {
+                Effect::Notify(e) => stack.extend(r.on_pickup(e, Micros::ZERO)),
+                Effect::Fetch(p) => {
+                    if p.file == FileId(b) && p.task_id == TaskId(1) {
+                        assert_eq!(p.kind, AccessKind::HitGlobal, "rewritten to peer");
+                        let peer = p.peer.expect("cross-shard plan names its source");
+                        assert_eq!(r.shard_of_exec(peer), Some(sb), "source is foreign");
+                        saw_cross = true;
+                    }
+                    stack.extend(r.on_fetch_done(p.task_id, Micros::ZERO, None));
+                }
+                Effect::Compute { task_id, .. } => {
+                    stack.extend(r.on_compute_done(task_id, Micros::ZERO, Micros::ZERO));
+                }
+                other => panic!("unexpected effect {other:?}"),
+            }
+        }
+        assert!(saw_cross, "the b-fetch never crossed shards");
+        let c = r.counters();
+        assert_eq!(c.cross_fetches, 1);
+        assert_eq!(c.cross_bytes, 10);
+        assert_eq!(c.per_shard[sa].cross_in, 1);
+        assert_eq!(c.per_shard[sb].cross_out, 1);
+        assert!(c.cross_fetches_per_task() <= 1.0);
+        // The transfer is recorded as a *global hit* on the owning shard.
+        assert_eq!(r.core(sa).rec.access_counts().1, 1);
+        // The foreign shard's recorder saw nothing (read-only seam).
+        assert_eq!(r.core(sb).rec.access_counts(), (0, 0, 1));
+    }
+
+    #[test]
+    fn merged_reporting_conserves_totals() {
+        let mut r = router(DispatchPolicy::GoodCacheCompute, 4);
+        for _ in 0..8 {
+            let (_, effs) = r.register_node(Micros::ZERO);
+            r.drain_effects(effs, Micros::ZERO);
+        }
+        let n = 40u64;
+        for i in 0..n {
+            let effs = r.on_arrival(task(i, &[(i % 16) as u32]), 0, 0.0, Micros::ZERO);
+            r.drain_effects(effs, Micros::ZERO);
+        }
+        // Drain any stragglers a declined notify left queued.
+        let mut guard = 0;
+        while !r.queue_is_empty() {
+            guard += 1;
+            assert!(guard < 1_000, "router stalled draining the queue");
+            let effs = r.kick();
+            r.drain_effects(effs, Micros::ZERO);
+        }
+        let log = r.take_dispatch_log();
+        assert_eq!(log.len() as u64, n);
+        let mut ids: Vec<u64> = log.iter().map(|t| t.0).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len() as u64, n, "every task dispatched exactly once");
+        let rec = r.take_merged_recorder();
+        let (hl, hg, m) = rec.access_counts();
+        assert_eq!(hl + hg + m, n, "one access per single-file task");
+        assert_eq!(rec.tasks_done(), n);
+        let counters = r.take_counters();
+        assert_eq!(counters.tasks_routed(), n);
+        assert_eq!(
+            counters.per_shard.iter().map(|t| t.dispatches).sum::<u64>(),
+            n
+        );
+        assert!(counters.router_events > 0);
+    }
+
+    #[test]
+    fn first_available_never_probes_foreign_shards() {
+        let mut r = router(DispatchPolicy::FirstAvailable, 2);
+        for _ in 0..2 {
+            let (_, effs) = r.register_node(Micros::ZERO);
+            r.drain_effects(effs, Micros::ZERO);
+        }
+        for i in 0..6u64 {
+            let effs = r.on_arrival(task(i, &[(i % 3) as u32]), 0, 0.0, Micros::ZERO);
+            r.drain_effects(effs, Micros::ZERO);
+        }
+        assert_eq!(r.counters().cross_fetches, 0, "fa caches nothing anywhere");
+        let rec = r.take_merged_recorder();
+        assert_eq!(rec.access_counts(), (0, 0, 6));
+    }
+
+    #[test]
+    fn release_drops_id_bindings() {
+        let mut r = router(DispatchPolicy::GoodCacheCompute, 2);
+        let (e0, effs) = r.register_node(Micros::ZERO);
+        r.drain_effects(effs, Micros::ZERO);
+        assert_eq!(r.node_count(), 1);
+        r.release_node(e0);
+        assert_eq!(r.node_count(), 0);
+        assert_eq!(r.shard_of_exec(e0), None);
+        // Stale events for the released executor are ignored gracefully.
+        assert!(r.on_pickup(e0, Micros::ZERO).is_empty());
+        r.release_node(e0); // double release is a no-op
+    }
+}

@@ -3,13 +3,15 @@
 //! Since the coordinator-core refactor this engine is a **thin driver**:
 //! every dispatch decision — queueing, notification, pickup, access
 //! resolution, cache admission, replica accounting, provisioning — lives
-//! in the shared [`CoordinatorCore`], and this module only maps the
-//! returned [`Effect`]s onto simulated time and the fluid-flow contention
-//! model of [`super::flow`]:
+//! in the shared
+//! [`CoordinatorCore`](crate::coordinator::core::CoordinatorCore), and
+//! this module only maps the returned [`Effect`]s onto simulated time
+//! and the fluid-flow contention model of [`super::flow`]:
 //!
-//! * [`Effect::Notify`] → a dispatch round-trip through a single
-//!   dispatcher service instance with a per-decision service time,
-//!   reproducing Falkon's measured dispatch throughput ceiling (§5.1);
+//! * [`Effect::Notify`] → a dispatch round-trip through the owning
+//!   shard's dispatcher service instance with a per-decision service
+//!   time, reproducing Falkon's measured dispatch throughput ceiling
+//!   (§5.1);
 //! * [`Effect::Fetch`] → a transfer on the flow network. **GPFS** is one
 //!   shared link (≈4.4 Gb/s sustained); each node contributes a
 //!   **local-disk link** and **NIC in/out links**; a local hit reads
@@ -28,6 +30,16 @@
 //! real file copies; `rust/tests/core_parity.rs` asserts both drivers
 //! replay identical decision sequences.
 //!
+//! Since PR 5 the engine drives a [`ShardedCoordinator`] — K coordinator
+//! cores under one router (`cluster.shards`, default 1) — while keeping
+//! **one flow network** for the whole cluster: cross-shard peer fetches
+//! ride the same per-node disk/NIC links as in-shard ones, and GPFS
+//! stays a single shared bottleneck. Each shard gets its own dispatcher
+//! service instance (the paper's §5.1 throughput ceiling is per
+//! dispatcher, which is exactly what sharding multiplies). At K = 1 the
+//! router is a bit-identical pass-through (`rust/tests/shard_parity.rs`),
+//! so single-shard results are unchanged.
+//!
 //! Data movement runs on the **batched** flow-net rerate path
 //! ([`FlowNet::new`] defaults to [`super::flow::RerateMode::Batched`]):
 //! same-instant transfer starts/completions (a completion chaining into
@@ -39,12 +51,13 @@
 
 use super::flow::{FlowNet, LinkId};
 use crate::config::ExperimentConfig;
-use crate::coordinator::core::{CoordinatorCore, CoreConfig, Effect, FetchPlan, FileSizes};
+use crate::coordinator::core::{CoreConfig, Effect, FetchPlan, FileSizes};
 use crate::coordinator::queue::Task;
 use crate::coordinator::scheduler::SchedulerStats;
+use crate::coordinator::shard::ShardedCoordinator;
 use crate::coordinator::AccessKind;
 use crate::ids::{ExecutorId, TaskId};
-use crate::metrics::{IntervalStat, SummaryMetrics, TimeSeries};
+use crate::metrics::{IntervalStat, ShardCounters, SummaryMetrics, TimeSeries};
 use crate::util::prng::Pcg64;
 use crate::util::time::Micros;
 use crate::util::units::gbps_to_bps;
@@ -66,10 +79,13 @@ pub struct RunResult {
     /// Scheduler behaviour counters.
     pub sched_stats: SchedulerStats,
     /// Tasks in dispatch order — the coordinator-core decision trace
-    /// `core_parity` compares against the live driver.
+    /// `core_parity` compares against the live driver. For sharded runs
+    /// the per-shard traces are concatenated in shard order.
     pub dispatch_order: Vec<TaskId>,
     /// Raw access tallies `(hits_local, hits_global, misses)`.
     pub access_counts: (u64, u64, u64),
+    /// Router-level sharding tallies (`shards == 1` for plain runs).
+    pub shard: ShardCounters,
     /// Working-set size of the generated workload (bytes).
     pub working_set_bytes: u64,
     /// Bytes per file in the workload.
@@ -135,10 +151,11 @@ struct Engine {
     clock: Micros,
     heap: BinaryHeap<Reverse<HeapEntry>>,
     seq: u64,
-    /// The shared coordinator: all dispatch state transitions go
-    /// through its event API; this driver never touches the wait queue,
-    /// scheduler or pending index directly.
-    core: CoordinatorCore,
+    /// The coordinator router: all dispatch state transitions go
+    /// through its event API (K cores at `cluster.shards`; a
+    /// bit-identical pass-through at K = 1); this driver never touches
+    /// a wait queue, scheduler or pending index directly.
+    router: ShardedCoordinator,
     // Cluster substrate.
     flow: FlowNet,
     gpfs: LinkId,
@@ -146,8 +163,10 @@ struct Engine {
     /// Peer fetches waiting out the GridFTP session setup:
     /// task id → (bytes, flow path).
     delayed: HashMap<u64, (u64, Vec<LinkId>)>,
-    // Dispatcher service model.
-    dispatcher_free_at: Micros,
+    /// Dispatcher service model — one service instance *per shard*
+    /// (indexed by shard id), reproducing Falkon's per-dispatcher
+    /// throughput ceiling while letting shards dispatch concurrently.
+    dispatcher_free_at: Vec<Micros>,
     pending_pickups: usize,
     // GRAM latency randomness.
     rng_gram: Pcg64,
@@ -166,10 +185,13 @@ pub fn run(cfg: &ExperimentConfig) -> RunResult {
 
     // Fork order matters: the coordinator's access-resolution stream is
     // fork(1), GRAM latency fork(2) — identical to the pre-core engine.
+    // At K > 1 the router forks per-shard streams from the fork(1)
+    // stream; at K = 1 the single core receives it verbatim.
     let mut root = Pcg64::seeded(cfg.seed);
     let rng_cache = root.fork(1);
     let rng_gram = root.fork(2);
-    let core = CoordinatorCore::new(
+    let shards = cfg.cluster.shards.max(1);
+    let router = ShardedCoordinator::new(
         CoreConfig {
             scheduler: cfg.scheduler.clone(),
             provisioner: cfg.provisioner.clone(),
@@ -178,15 +200,16 @@ pub fn run(cfg: &ExperimentConfig) -> RunResult {
             slots_per_node: cfg.cluster.cpus_per_node as u32,
             file_sizes: FileSizes::Uniform(cfg.workload.file_size_bytes),
         },
+        shards,
         rng_cache,
     );
     let mut eng = Engine {
-        core,
+        router,
         flow: FlowNet::new(),
         gpfs: LinkId(0),
         node_links: HashMap::new(),
         delayed: HashMap::new(),
-        dispatcher_free_at: Micros::ZERO,
+        dispatcher_free_at: vec![Micros::ZERO; shards],
         pending_pickups: 0,
         rng_gram,
         completed: 0,
@@ -223,15 +246,24 @@ pub fn run(cfg: &ExperimentConfig) -> RunResult {
         fs.heap_updates,
         fs.dedup_skips
     );
-    let summary = eng.core.rec.summarize(ideal_wet);
+    // Merged reporting: at K = 1 the recorder is moved out untouched;
+    // at K > 1 per-shard recorders merge losslessly (Recorder::absorb).
+    // The dispatch log must be taken before the counters so the
+    // per-shard dispatch tallies are filled.
+    let sched_stats = eng.router.merged_sched_stats();
+    let dispatch_order = eng.router.take_dispatch_log();
+    let shard = eng.router.take_counters();
+    let mut rec = eng.router.take_merged_recorder();
+    let summary = rec.summarize(ideal_wet);
     RunResult {
         name: cfg.name.clone(),
         summary,
-        ts: std::mem::take(&mut eng.core.rec.ts),
-        intervals: std::mem::take(&mut eng.core.rec.intervals),
-        sched_stats: eng.core.sched_stats().clone(),
-        dispatch_order: eng.core.take_dispatch_log(),
-        access_counts: eng.core.rec.access_counts(),
+        access_counts: rec.access_counts(),
+        ts: std::mem::take(&mut rec.ts),
+        intervals: std::mem::take(&mut rec.intervals),
+        sched_stats,
+        dispatch_order,
+        shard,
         working_set_bytes: working_set,
         file_size_bytes: cfg.workload.file_size_bytes,
         sim_wall_s: t_wall.elapsed().as_secs_f64(),
@@ -265,14 +297,14 @@ impl Engine {
                          (queue={})",
                         self.clock,
                         total - self.completed,
-                        self.core.queue_len()
+                        self.router.queue_len()
                     );
                 }
                 (m, Some(f)) if m.is_none_or(|m| f <= m) => {
                     self.clock = f;
                     self.events += 1;
                     let tag = self.flow.pop_completion(f);
-                    let effects = self.core.on_fetch_done(TaskId(tag), f, None);
+                    let effects = self.router.on_fetch_done(TaskId(tag), f, None);
                     self.handle(effects);
                 }
                 _ => {
@@ -290,13 +322,13 @@ impl Engine {
             Event::Arrival(i) => self.on_arrival(i),
             Event::Pickup(e) => {
                 self.pending_pickups -= 1;
-                let effects = self.core.on_pickup(e, self.clock);
+                let effects = self.router.on_pickup(e, self.clock);
                 self.handle(effects);
             }
             Event::ComputeDone(task_id) => {
                 let latency = Micros::from_secs_f64(self.cfg.cluster.net_latency_ms / 1e3);
                 let effects =
-                    self.core
+                    self.router
                         .on_compute_done(TaskId(task_id), self.clock, self.clock + latency);
                 self.completed += 1;
                 self.handle(effects);
@@ -311,7 +343,7 @@ impl Engine {
             }
             Event::NodesUp(n) => {
                 for _ in 0..n {
-                    let (id, effects) = self.core.on_node_registered(self.clock);
+                    let (id, effects) = self.router.on_node_registered(self.clock);
                     self.add_node_links(id);
                     self.handle(effects);
                 }
@@ -363,7 +395,7 @@ impl Engine {
     }
 
     fn register_node(&mut self) {
-        let (id, effects) = self.core.register_node(self.clock);
+        let (id, effects) = self.router.register_node(self.clock);
         self.add_node_links(id);
         // A fresh executor immediately asks for work.
         self.handle(effects);
@@ -380,23 +412,27 @@ impl Engine {
                 return;
             }
         }
-        self.core.release_node(id);
+        self.router.release_node(id);
         self.node_links.remove(&id);
     }
 
     // ---- dispatch path --------------------------------------------------
 
-    /// Route a `Notify` effect through the dispatcher service queue: the
-    /// reservation is already held by the core; this models the
-    /// per-decision service time plus network latency before the executor
-    /// asks for work.
+    /// Route a `Notify` effect through the owning shard's dispatcher
+    /// service queue: the reservation is already held by the core; this
+    /// models the per-decision service time plus network latency before
+    /// the executor asks for work. One service instance per shard — the
+    /// §5.1 dispatch ceiling is a per-dispatcher property, so K shards
+    /// dispatch concurrently (at K = 1 this is the single pre-shard
+    /// dispatcher, unchanged).
     fn deliver_pickup(&mut self, exec: ExecutorId) {
         self.pending_pickups += 1;
+        let shard = self.router.shard_of_exec(exec).unwrap_or(0);
         let service = Micros::from_secs_f64(self.cfg.cluster.dispatch_service_us / 1e6);
-        let start = self.dispatcher_free_at.max(self.clock);
-        self.dispatcher_free_at = start + service;
+        let start = self.dispatcher_free_at[shard].max(self.clock);
+        self.dispatcher_free_at[shard] = start + service;
         let latency = Micros::from_secs_f64(self.cfg.cluster.net_latency_ms / 1e3);
-        self.push(self.dispatcher_free_at + latency, Event::Pickup(exec));
+        self.push(self.dispatcher_free_at[shard] + latency, Event::Pickup(exec));
     }
 
     fn on_arrival(&mut self, i: u32) {
@@ -412,7 +448,7 @@ impl Engine {
             .stages
             .get(spec.interval as usize)
             .map_or(0.0, |&(_, r)| r);
-        let effects = self.core.on_arrival(task, spec.interval, rate, self.clock);
+        let effects = self.router.on_arrival(task, spec.interval, rate, self.clock);
         self.handle(effects);
 
         // Chain the next arrival.
@@ -453,13 +489,13 @@ impl Engine {
     // ---- provisioning ---------------------------------------------------
 
     fn on_tick(&mut self) {
-        let effects = self.core.on_tick(self.clock);
+        let effects = self.router.on_tick(self.clock);
         self.handle(effects);
         // Safety net: if tasks wait, executors are free, and no pickup is
         // in flight (e.g. every notification was declined), re-notify —
         // and force one pickup if the policy still declines.
-        if !self.core.queue_is_empty() && self.core.free_count() > 0 && self.pending_pickups == 0 {
-            let effects = self.core.kick();
+        if !self.router.queue_is_empty() && self.router.free_count() > 0 && self.pending_pickups == 0 {
+            let effects = self.router.kick();
             self.handle(effects);
         }
         self.push(self.clock + Micros::from_secs(1), Event::Tick);
@@ -565,6 +601,46 @@ mod tests {
         for b in r.ts.buckets().iter().filter(|b| b.total_slots > 0) {
             assert_eq!(b.nodes, 8);
         }
+    }
+
+    #[test]
+    fn sharded_run_completes_and_conserves() {
+        let mut cfg = small_cfg(DispatchPolicy::GoodCacheCompute);
+        cfg.cluster.shards = 4;
+        let r = run(&cfg);
+        assert_eq!(r.summary.tasks_completed, 2_000);
+        assert_eq!(r.shard.shards, 4);
+        assert_eq!(r.shard.tasks_routed(), 2_000);
+        let mut ids: Vec<u64> = r.dispatch_order.iter().map(|t| t.0).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 2_000, "every task dispatched exactly once");
+        let (hl, hg, m) = r.access_counts;
+        assert_eq!(hl + hg + m, 2_000, "one access per single-file task");
+        assert!(r.shard.router_events > 0);
+        // 100 files hash across 4 shards: every shard sees work.
+        assert!(r.shard.per_shard.iter().all(|t| t.tasks_routed > 0));
+        assert_eq!(
+            r.shard.per_shard.iter().map(|t| t.dispatches).sum::<u64>(),
+            2_000
+        );
+        let rates = r.summary.hit_local_rate + r.summary.hit_global_rate + r.summary.miss_rate;
+        assert!((rates - 1.0).abs() < 1e-9, "rates {rates}");
+    }
+
+    #[test]
+    fn sharded_run_is_deterministic() {
+        let mut cfg = small_cfg(DispatchPolicy::GoodCacheCompute);
+        cfg.cluster.shards = 4;
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_eq!(a.dispatch_order, b.dispatch_order);
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.shard, b.shard);
+        assert_eq!(
+            a.summary.workload_execution_time_s,
+            b.summary.workload_execution_time_s
+        );
     }
 
     #[test]

@@ -1,0 +1,407 @@
+//! Shard-router parity: the K = 1 [`ShardedCoordinator`] must be a
+//! **bit-identical pass-through** over a bare [`CoordinatorCore`], and a
+//! K = 4 deployment must obey the conservation laws sharding promises.
+//!
+//! Part 1 (pass-through): a scripted synchronous driver — the minimal
+//! enactment loop over the effect API — runs the *same* seeded workload
+//! (single- and multi-file tasks, eviction churn, periodic ticks, a
+//! kick-drain) against a bare core and a 1-shard router, recording every
+//! event's full effect list as a string trace. The traces, dispatch
+//! orders, and access tallies must be identical across **all five
+//! dispatch policies**. This is what lets the sim engine drive the
+//! router unconditionally: `cluster.shards = 1` provably changes
+//! nothing.
+//!
+//! Part 2 (conservation at K = 4): a seeded run whose multi-file tasks
+//! are constructed to straddle shard boundaries (dominant file on one
+//! shard, secondary file homed on another) must dispatch every task
+//! exactly once, account every file access exactly once across the
+//! merged recorders, and produce a nonzero `shard/cross_fetches` count
+//! bounded by one per routed task — the cross-shard peer-fetch protocol
+//! firing without double-accounting.
+//!
+//! Part 3 (whole engine): `sim::run` at `cluster.shards = 4` on a
+//! fig-style workload completes and conserves the same totals through
+//! the full event-heap/flow-net/GRAM driver.
+
+use datadiffusion::cache::{CacheConfig, EvictionPolicy};
+use datadiffusion::config::{ArrivalSpec, ExperimentConfig};
+use datadiffusion::coordinator::core::{CoordinatorCore, CoreConfig, Effect, FileSizes};
+use datadiffusion::coordinator::provisioner::ProvisionerConfig;
+use datadiffusion::coordinator::queue::Task;
+use datadiffusion::coordinator::scheduler::{DispatchPolicy, SchedulerConfig};
+use datadiffusion::coordinator::shard::ShardedCoordinator;
+use datadiffusion::ids::{ExecutorId, FileId, TaskId};
+use datadiffusion::sim;
+use datadiffusion::util::prng::Pcg64;
+use datadiffusion::util::time::Micros;
+
+const SEED: u64 = 11;
+
+fn core_config(policy: DispatchPolicy) -> CoreConfig {
+    CoreConfig {
+        scheduler: SchedulerConfig {
+            policy,
+            ..SchedulerConfig::default()
+        },
+        provisioner: ProvisionerConfig::default(),
+        cache: CacheConfig {
+            // 5 × 10-byte objects per cache: steady eviction churn.
+            capacity_bytes: 50,
+            policy: EvictionPolicy::Lru,
+        },
+        max_nodes: 8,
+        slots_per_node: 2,
+        file_sizes: FileSizes::Uniform(10),
+    }
+}
+
+/// The event surface both the bare core and the router expose — the
+/// trait exists only so one scripted driver can drive either.
+trait Coordinator {
+    fn register_node(&mut self, now: Micros) -> (ExecutorId, Vec<Effect>);
+    fn on_node_registered(&mut self, now: Micros) -> (ExecutorId, Vec<Effect>);
+    fn release_node(&mut self, id: ExecutorId);
+    fn on_arrival(&mut self, task: Task, now: Micros) -> Vec<Effect>;
+    fn on_pickup(&mut self, exec: ExecutorId, now: Micros) -> Vec<Effect>;
+    fn on_fetch_done(&mut self, task: TaskId, now: Micros) -> Vec<Effect>;
+    fn on_compute_done(&mut self, task: TaskId, now: Micros) -> Vec<Effect>;
+    fn on_tick(&mut self, now: Micros) -> Vec<Effect>;
+    fn kick(&mut self) -> Vec<Effect>;
+    fn queue_len(&self) -> usize;
+    /// End-of-run: `(access tallies, dispatch order)`.
+    fn finish(&mut self) -> ((u64, u64, u64), Vec<TaskId>);
+}
+
+impl Coordinator for CoordinatorCore {
+    fn register_node(&mut self, now: Micros) -> (ExecutorId, Vec<Effect>) {
+        CoordinatorCore::register_node(self, now)
+    }
+    fn on_node_registered(&mut self, now: Micros) -> (ExecutorId, Vec<Effect>) {
+        CoordinatorCore::on_node_registered(self, now)
+    }
+    fn release_node(&mut self, id: ExecutorId) {
+        CoordinatorCore::release_node(self, id);
+    }
+    fn on_arrival(&mut self, task: Task, now: Micros) -> Vec<Effect> {
+        CoordinatorCore::on_arrival(self, task, 0, 0.0, now)
+    }
+    fn on_pickup(&mut self, exec: ExecutorId, now: Micros) -> Vec<Effect> {
+        CoordinatorCore::on_pickup(self, exec, now)
+    }
+    fn on_fetch_done(&mut self, task: TaskId, now: Micros) -> Vec<Effect> {
+        CoordinatorCore::on_fetch_done(self, task, now, None)
+    }
+    fn on_compute_done(&mut self, task: TaskId, now: Micros) -> Vec<Effect> {
+        CoordinatorCore::on_compute_done(self, task, now, now)
+    }
+    fn on_tick(&mut self, now: Micros) -> Vec<Effect> {
+        CoordinatorCore::on_tick(self, now)
+    }
+    fn kick(&mut self) -> Vec<Effect> {
+        CoordinatorCore::kick(self)
+    }
+    fn queue_len(&self) -> usize {
+        CoordinatorCore::queue_len(self)
+    }
+    fn finish(&mut self) -> ((u64, u64, u64), Vec<TaskId>) {
+        (self.rec.access_counts(), self.take_dispatch_log())
+    }
+}
+
+impl Coordinator for ShardedCoordinator {
+    fn register_node(&mut self, now: Micros) -> (ExecutorId, Vec<Effect>) {
+        ShardedCoordinator::register_node(self, now)
+    }
+    fn on_node_registered(&mut self, now: Micros) -> (ExecutorId, Vec<Effect>) {
+        ShardedCoordinator::on_node_registered(self, now)
+    }
+    fn release_node(&mut self, id: ExecutorId) {
+        ShardedCoordinator::release_node(self, id);
+    }
+    fn on_arrival(&mut self, task: Task, now: Micros) -> Vec<Effect> {
+        ShardedCoordinator::on_arrival(self, task, 0, 0.0, now)
+    }
+    fn on_pickup(&mut self, exec: ExecutorId, now: Micros) -> Vec<Effect> {
+        ShardedCoordinator::on_pickup(self, exec, now)
+    }
+    fn on_fetch_done(&mut self, task: TaskId, now: Micros) -> Vec<Effect> {
+        ShardedCoordinator::on_fetch_done(self, task, now, None)
+    }
+    fn on_compute_done(&mut self, task: TaskId, now: Micros) -> Vec<Effect> {
+        ShardedCoordinator::on_compute_done(self, task, now, now)
+    }
+    fn on_tick(&mut self, now: Micros) -> Vec<Effect> {
+        ShardedCoordinator::on_tick(self, now)
+    }
+    fn kick(&mut self) -> Vec<Effect> {
+        ShardedCoordinator::kick(self)
+    }
+    fn queue_len(&self) -> usize {
+        ShardedCoordinator::queue_len(self)
+    }
+    fn finish(&mut self) -> ((u64, u64, u64), Vec<TaskId>) {
+        let log = self.take_dispatch_log();
+        (self.take_merged_recorder().access_counts(), log)
+    }
+}
+
+/// Synchronously enact `effects`, recording every event's effect list.
+fn pump<C: Coordinator>(c: &mut C, effects: Vec<Effect>, now: Micros, trace: &mut Vec<String>) {
+    let mut stack = effects;
+    while let Some(effect) = stack.pop() {
+        match effect {
+            Effect::Notify(e) => {
+                let effs = c.on_pickup(e, now);
+                trace.push(format!("pickup {e:?} -> {effs:?}"));
+                stack.extend(effs);
+            }
+            Effect::Fetch(plan) => {
+                let effs = c.on_fetch_done(plan.task_id, now);
+                trace.push(format!("fetch-done {:?} -> {effs:?}", plan.task_id));
+                stack.extend(effs);
+            }
+            Effect::Compute { task_id, .. } => {
+                let effs = c.on_compute_done(task_id, now);
+                trace.push(format!("compute-done {task_id:?} -> {effs:?}"));
+                stack.extend(effs);
+            }
+            Effect::Allocate(n) => {
+                for _ in 0..n {
+                    let (e, effs) = c.on_node_registered(now);
+                    trace.push(format!("node-up {e:?} -> {effs:?}"));
+                    stack.extend(effs);
+                }
+            }
+            Effect::Release(execs) => {
+                for e in execs {
+                    trace.push(format!("release {e:?}"));
+                    c.release_node(e);
+                }
+            }
+        }
+    }
+}
+
+/// The scripted deterministic workload: register nodes, feed tasks with
+/// periodic ticks, then kick-drain the backlog. Returns the full trace.
+fn drive<C: Coordinator>(c: &mut C, nodes: usize, tasks: &[Task]) -> Vec<String> {
+    let mut trace = Vec::new();
+    for _ in 0..nodes {
+        let (e, effs) = c.register_node(Micros::ZERO);
+        trace.push(format!("register {e:?} -> {effs:?}"));
+        pump(c, effs, Micros::ZERO, &mut trace);
+    }
+    let mut clock = Micros::ZERO;
+    for (i, task) in tasks.iter().enumerate() {
+        clock = Micros::from_millis(i as u64);
+        let effs = c.on_arrival(task.clone(), clock);
+        trace.push(format!("arrival {:?} -> {effs:?}", task.id));
+        pump(c, effs, clock, &mut trace);
+        if i % 7 == 0 {
+            let effs = c.on_tick(clock);
+            trace.push(format!("tick -> {effs:?}"));
+            pump(c, effs, clock, &mut trace);
+        }
+    }
+    let mut guard = 0;
+    while c.queue_len() > 0 {
+        guard += 1;
+        assert!(guard < 10_000, "drain stalled with {} queued", c.queue_len());
+        // Tick first so a fleet the provisioner shrank can re-allocate.
+        let effs = c.on_tick(clock);
+        trace.push(format!("drain-tick -> {effs:?}"));
+        pump(c, effs, clock, &mut trace);
+        let effs = c.kick();
+        trace.push(format!("kick -> {effs:?}"));
+        pump(c, effs, clock, &mut trace);
+    }
+    trace
+}
+
+/// Seeded task stream: 240 tasks over 40 files, 1–3 files each, so the
+/// 5-object caches churn and multi-file scoring paths are exercised.
+fn scripted_tasks() -> Vec<Task> {
+    let mut rng = Pcg64::seeded(SEED);
+    (0..240u64)
+        .map(|i| {
+            // 1–3 distinct files, biased to the paper's single-file shape.
+            let n = match rng.below(4) {
+                0 | 1 => 1,
+                2 => 2,
+                _ => 3,
+            };
+            let mut files: Vec<FileId> = Vec::with_capacity(n);
+            while files.len() < n {
+                let f = FileId(rng.below(40) as u32);
+                if !files.contains(&f) {
+                    files.push(f);
+                }
+            }
+            Task {
+                id: TaskId(i),
+                files,
+                compute: Micros::from_millis(1),
+                arrival: Micros::ZERO,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn k1_router_is_bit_identical_to_the_bare_core() {
+    for policy in DispatchPolicy::ALL {
+        let tasks = scripted_tasks();
+        let mut core = CoordinatorCore::new(core_config(policy), Pcg64::seeded(SEED));
+        let mut router = ShardedCoordinator::new(core_config(policy), 1, Pcg64::seeded(SEED));
+
+        let core_trace = drive(&mut core, 3, &tasks);
+        let router_trace = drive(&mut router, 3, &tasks);
+
+        assert_eq!(
+            core_trace.len(),
+            router_trace.len(),
+            "[{policy}] trace lengths diverged"
+        );
+        for (i, (a, b)) in core_trace.iter().zip(&router_trace).enumerate() {
+            assert_eq!(a, b, "[{policy}] traces diverge at event {i}");
+        }
+        let (core_counts, core_log) = core.finish();
+        let (router_counts, router_log) = router.finish();
+        assert_eq!(core_log, router_log, "[{policy}] dispatch order diverged");
+        assert_eq!(core_counts, router_counts, "[{policy}] tallies diverged");
+        assert_eq!(core_log.len(), tasks.len(), "[{policy}] tasks missing");
+        assert_eq!(
+            router.counters().cross_fetches,
+            0,
+            "[{policy}] K=1 must never cross shards"
+        );
+    }
+}
+
+#[test]
+fn k4_conserves_totals_and_crosses_shards() {
+    let mut router = ShardedCoordinator::new(
+        core_config(DispatchPolicy::GoodCacheCompute),
+        4,
+        Pcg64::seeded(SEED),
+    );
+    let mut trace = Vec::new();
+    for _ in 0..8 {
+        let (_, effs) = router.register_node(Micros::ZERO);
+        pump(&mut router, effs, Micros::ZERO, &mut trace);
+    }
+    // One file homed on each shard (found by probing the partition
+    // function), so the workload provably covers every shard.
+    let home: Vec<FileId> = (0..4)
+        .map(|s| {
+            (0..1_000u32)
+                .map(FileId)
+                .find(|&f| router.shard_of_file(f) == s)
+                .expect("splitmix spreads over 4 shards")
+        })
+        .collect();
+
+    // Phase 1: seed each shard's cache with its home file.
+    let mut tasks: Vec<Task> = Vec::new();
+    for (s, &f) in home.iter().enumerate() {
+        tasks.push(Task {
+            id: TaskId(s as u64),
+            files: vec![f],
+            compute: Micros::from_millis(1),
+            arrival: Micros::ZERO,
+        });
+    }
+    // Phase 2: every ordered cross-shard pair (dominant on s, secondary
+    // homed on t ≠ s) — the secondary fetch must find its bytes on the
+    // foreign shard, not GPFS.
+    let mut id = home.len() as u64;
+    for s in 0..4usize {
+        for t in 0..4usize {
+            if s == t {
+                continue;
+            }
+            tasks.push(Task {
+                id: TaskId(id),
+                files: vec![home[s], home[t]],
+                compute: Micros::from_millis(1),
+                arrival: Micros::ZERO,
+            });
+            id += 1;
+        }
+    }
+    let expected_accesses: u64 = tasks.iter().map(|t| t.files.len() as u64).sum();
+
+    let mut clock = Micros::ZERO;
+    for (i, task) in tasks.iter().enumerate() {
+        clock = Micros::from_millis(i as u64);
+        let effs = router.on_arrival(task.clone(), 0, 0.0, clock);
+        pump(&mut router, effs, clock, &mut trace);
+    }
+    let mut guard = 0;
+    while router.queue_len() > 0 {
+        guard += 1;
+        assert!(guard < 10_000, "drain stalled");
+        let effs = router.on_tick(clock);
+        pump(&mut router, effs, clock, &mut trace);
+        let effs = router.kick();
+        pump(&mut router, effs, clock, &mut trace);
+    }
+
+    // Conservation: every task dispatched exactly once…
+    let log = router.take_dispatch_log();
+    assert_eq!(log.len(), tasks.len());
+    let mut ids: Vec<u64> = log.iter().map(|t| t.0).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), tasks.len(), "duplicate dispatches");
+    // …every access tallied exactly once across the merged recorders…
+    let rec = router.take_merged_recorder();
+    let (hl, hg, m) = rec.access_counts();
+    assert_eq!(hl + hg + m, expected_accesses, "access conservation");
+    assert_eq!(rec.tasks_done(), tasks.len() as u64);
+    // …and the cross-shard protocol actually fired, bounded ≤ 1/task.
+    let counters = router.take_counters();
+    assert!(
+        counters.cross_fetches > 0,
+        "cross-shard workload produced no cross fetches"
+    );
+    // Pair tasks carry at most one foreign-homed file, so ≤ 1 holds here.
+    assert!(counters.cross_fetches_per_task() <= 1.0);
+    assert_eq!(counters.tasks_routed(), tasks.len() as u64);
+    assert!(counters.per_shard.iter().all(|t| t.tasks_routed > 0));
+    let cross_in: u64 = counters.per_shard.iter().map(|t| t.cross_in).sum();
+    let cross_out: u64 = counters.per_shard.iter().map(|t| t.cross_out).sum();
+    assert_eq!(cross_in, counters.cross_fetches, "both-sides accounting");
+    assert_eq!(cross_out, counters.cross_fetches, "both-sides accounting");
+    // Cross-shard transfers are recorded as global hits.
+    assert!(hg >= counters.cross_fetches);
+}
+
+#[test]
+fn k4_full_engine_run_completes_and_conserves() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "shard-parity-engine".into();
+    cfg.seed = 7;
+    cfg.cluster.max_nodes = 8;
+    cfg.cluster.shards = 4;
+    cfg.workload.num_tasks = 1_000;
+    cfg.workload.num_files = 100;
+    cfg.workload.file_size_bytes = 10 * 1024 * 1024;
+    cfg.workload.arrival = ArrivalSpec::IncreasingRate {
+        initial: 4.0,
+        factor: 1.5,
+        interval_s: 10.0,
+        max_rate: 100.0,
+    };
+    cfg.cache.capacity_bytes = 4_000 * 1024 * 1024;
+    let r = sim::run(&cfg);
+    assert_eq!(r.summary.tasks_completed, 1_000);
+    assert_eq!(r.shard.shards, 4);
+    assert_eq!(r.shard.tasks_routed(), 1_000);
+    assert_eq!(r.dispatch_order.len(), 1_000);
+    let (hl, hg, m) = r.access_counts;
+    assert_eq!(hl + hg + m, 1_000);
+    assert!(r.shard.router_events > 0);
+    assert!(r.shard.cross_fetches_per_task() <= 1.0);
+}

@@ -22,14 +22,23 @@ checks only quantities that noise cannot fake:
    the bench's leave-queue phase deterministically creates dead hints, so
    a zero means lazily-dropped candidates are leaking instead of being
    purged on encounter).
-3. *Deterministic work counters* (fresh vs committed baseline): tasks
+3. *Sharded-router accounting* (fresh snapshot only): the K=4 bench
+   fixture submits cross-shard pair tasks, so shard/cross_fetches must be
+   > 0 (a zero means the router stopped rewriting GPFS misses into
+   cross-shard peer fetches), shard/cross_fetches_per_task must stay
+   <= 1.0 (every fixture task has at most ONE foreign-homed file, so on
+   this fixture more than one rewrite per task means the router
+   double-accounted transfers — the bound is fixture-scoped; a workload
+   of tasks with several foreign-homed files could legitimately exceed
+   it), and shard/router_events must be > 0.
+4. *Deterministic work counters* (fresh vs committed baseline): tasks
    inspected per pickup, boundary-cursor steps, flow rerates per event,
    pending maintenance ops per event, dead hints purged per event, notify
-   memo hits per decision. These are machine-independent, so drift beyond
-   a generous tolerance means the algorithm regressed, not the runner.
-   Skipped (with a warning) while the baseline still carries
-   `"measured": false` — the bench job refreshes it one-shot on the next
-   main push.
+   memo hits per decision, cross-shard fetches per task. These are
+   machine-independent, so drift beyond a generous tolerance means the
+   algorithm regressed, not the runner. Skipped (with a warning) while
+   the baseline still carries `"measured": false` — the bench job
+   refreshes it one-shot on the next main push.
 
 `--self-test` drives the gate against synthetic snapshots — one passing
 pair, then one mutation per enforced rule, asserting each mutation is
@@ -160,6 +169,36 @@ def run_gate(fresh, baseline):
             "path has stopped firing (lazily-dropped candidates are leaking)"
         )
 
+    # --- 2c. sharded-router cross-fetch accounting (within-run). --------
+    for key in (
+        "shard/router_events",
+        "shard/cross_fetches",
+        "shard/cross_fetches_per_task",
+    ):
+        if key not in counters:
+            fail(f"missing counter {key}")
+    cross = counters["shard/cross_fetches"]
+    per_task = counters["shard/cross_fetches_per_task"]
+    print(
+        f"bench-gate: shard cross fetches = {cross:g} "
+        f"({per_task:.3f} per task, {counters['shard/router_events']:g} router events)"
+    )
+    if counters["shard/router_events"] <= 0:
+        fail("shard/router_events is 0: the sharded bench fixture never ran")
+    if cross <= 0:
+        fail(
+            "shard/cross_fetches is 0: the K=4 fixture's cross-shard pair tasks "
+            "deterministically require peer-fetch rewrites, so the router has "
+            "stopped rewriting GPFS misses into cross-shard fetches"
+        )
+    if per_task > 1.0:
+        fail(
+            f"shard/cross_fetches_per_task = {per_task:.3f} > 1.0: every "
+            "fixture task has at most one foreign-homed file, so more than "
+            "one rewrite per task on this fixture means the router is "
+            "double-accounting cross-shard transfers"
+        )
+
     # --- 3. inspected-per-pickup sanity (within-run). -------------------
     for policy in ("max-compute-util", "good-cache-compute"):
         key = f"inspected_per_pickup/{policy}"
@@ -184,7 +223,13 @@ def run_gate(fresh, baseline):
         # totals (boundary/queries, cold_seek_steps, ...) scale with the
         # wall-clock-sized iteration count Bench::iter picks, so a faster
         # runner would inflate them with no real regression.
-        ratio_suffixes = ("per_query", "per_event", "per_pickup", "per_decision")
+        ratio_suffixes = (
+            "per_query",
+            "per_event",
+            "per_pickup",
+            "per_decision",
+            "per_task",
+        )
         base_counters = baseline.get("counters", {})
         checked = skipped = 0
         for key, base_value in base_counters.items():
@@ -225,6 +270,9 @@ def synthetic_fresh():
         "notify/memo_hits_per_decision": 0.9,
         "inspected_per_pickup/max-compute-util": 2.0,
         "inspected_per_pickup/good-cache-compute": 2.5,
+        "shard/router_events": 500.0,
+        "shard/cross_fetches": 96.0,
+        "shard/cross_fetches_per_task": 0.75,
     }
     for concurrency in (16, 128):
         for metric in ("rerates", "heap_updates"):
@@ -299,6 +347,18 @@ def self_test():
     def counter_drift(s):
         s["counters"]["pending/dead_hints_purged_per_event"] = 0.004 * 2.0
 
+    def missing_shard_counter(s):
+        del s["counters"]["shard/cross_fetches_per_task"]
+
+    def cross_fetch_path_dead(s):
+        s["counters"]["shard/cross_fetches"] = 0.0
+
+    def cross_fetch_double_accounted(s):
+        s["counters"]["shard/cross_fetches_per_task"] = 1.5
+
+    def shard_fixture_never_ran(s):
+        s["counters"]["shard/router_events"] = 0.0
+
     cases = [
         ("indexed pickup slower than reference", slow_indexed),
         ("non-finite case mean", nan_mean),
@@ -310,6 +370,10 @@ def self_test():
         ("missing dead-hint counter", missing_dead_hint_counter),
         ("pickup tracks the window again", window_scan_regression),
         ("ratio counter drifts past baseline", counter_drift),
+        ("missing shard counter", missing_shard_counter),
+        ("cross-shard fetch path dead", cross_fetch_path_dead),
+        ("cross-shard fetch double-accounted", cross_fetch_double_accounted),
+        ("sharded fixture never ran", shard_fixture_never_ran),
     ]
     for label, mutate in cases:
         mutated(label, mutate)
