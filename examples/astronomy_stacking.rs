@@ -151,6 +151,7 @@ fn real_main() -> datadiffusion::Result<()> {
         cache_root: root.join("caches"),
         compute: ComputeKind::Stacking,
         seed: 42,
+        idle_release_s: 0.0,
     };
     println!(
         "running {NUM_TASKS} stacking tasks through the live engine \

@@ -5,7 +5,8 @@
 //! vs the eager reference under hot-file churn, memoized notify ranking,
 //! wait-queue window ops, cache churn, flow-network transfer churn
 //! (batched vs per-event reference rerating), the 4-shard coordinator
-//! router (cross-shard fetch rewrites — `shard/*` counters), plus the
+//! router (cross-shard fetch rewrites — `shard/*` counters), the seeded
+//! chaos harness with its shadow oracle (`chaos/*` counters), plus the
 //! whole-simulation event rate. Run before/after every optimization:
 //!
 //!     cargo bench --bench perf_hotpath
@@ -49,6 +50,7 @@ fn main() {
         bench_cache(),
         bench_flownet(&mut counters),
         bench_sharded_router(&mut counters),
+        bench_chaos(&mut counters),
         bench_whole_sim(),
     ];
     println!("\n== counters (deterministic work metrics) ==");
@@ -664,6 +666,54 @@ fn bench_sharded_router(counters: &mut Vec<(String, f64)>) -> Bench {
     counters.push((
         "shard/cross_fetches_per_task".into(),
         c.cross_fetches_per_task(),
+    ));
+    let _ = b.write_csv();
+    b
+}
+
+/// Chaos harness end-to-end: a seeded fault schedule through the
+/// coordinator with the shadow-state oracle checking after every event.
+/// The counters gate CI (`tools/bench_gate.py`): every run must inject
+/// faults (`chaos/faults_injected > 0`) and the oracle must stay silent
+/// (`chaos/oracle_violations == 0`).
+fn bench_chaos(counters: &mut Vec<(String, f64)>) -> Bench {
+    use datadiffusion::chaos::{run_chaos, ChaosConfig};
+    let mut b = Bench::new("chaos harness (quick run, shadow oracle)")
+        .samples(3)
+        .min_sample_duration(std::time::Duration::from_millis(1));
+    let mut seed = 0u64;
+    b.iter("seeded quick run (60 events)", 60, || {
+        seed += 1;
+        let r = run_chaos(&ChaosConfig::quick(seed));
+        black_box(r.fingerprint);
+    });
+    // Deterministic pass: a fixed 4-seed block at K=1 and K=4 feeds the
+    // gated counters (the schedule is seed-pure, so these never wobble).
+    let mut faults = 0u64;
+    let mut violations = 0usize;
+    let mut runs = 0u64;
+    for seed in 0..4u64 {
+        for shards in [1usize, 4] {
+            let mut cfg = ChaosConfig::quick(900 + seed);
+            cfg.shards = shards;
+            if shards > 1 {
+                cfg.nodes = 8;
+            }
+            let r = run_chaos(&cfg);
+            assert!(!r.stalled, "chaos bench run stalled (seed {})", r.seed);
+            faults += r.faults_injected;
+            violations += r.oracle_violations;
+            runs += 1;
+        }
+    }
+    println!(
+        "    {runs} chaos runs: {faults} faults injected, {violations} oracle violation(s)"
+    );
+    counters.push(("chaos/faults_injected".into(), faults as f64));
+    counters.push(("chaos/oracle_violations".into(), violations as f64));
+    counters.push((
+        "chaos/faults_injected_per_run".into(),
+        faults as f64 / runs as f64,
     ));
     let _ = b.write_csv();
     b

@@ -1,0 +1,929 @@
+//! Seeded chaos harness for the coordinator core and the shard router.
+//!
+//! The coordinator is *pure decision logic*: events in, [`Effect`]s out
+//! (see [`crate::coordinator::core`]). That boundary is exactly where
+//! faults happen in a real deployment — notifications are lost on the
+//! wire, executors die mid-fetch, GridFTP transfers stall — so the
+//! chaos driver lives there too: it wraps a [`ShardedCoordinator`]
+//! (K = 1 is the plain core) and perturbs the *enactment* of its effect
+//! stream without touching a line of production code.
+//!
+//! ## Fault taxonomy
+//!
+//! Every fault is drawn from one splitmix64 stream seeded by
+//! [`ChaosConfig::seed`], so a seed fully determines the fault
+//! schedule, the dispatch trace and the final tallies — re-running a
+//! seed reproduces a failure bit-for-bit. The kinds:
+//!
+//! | fault | enactment perturbation |
+//! |---|---|
+//! | [`FaultKind::DelayNotify`] | notification delivered 1–5 ms late |
+//! | [`FaultKind::ReorderNotify`] | delivered 5–15 ms late, so later notifies overtake it |
+//! | [`FaultKind::DropNotify`] | lost on the wire; the executor re-polls 50 ms later |
+//! | [`FaultKind::KillMidFetch`] | the destination executor dies 0.2 ms into the transfer |
+//! | [`FaultKind::KillMidCompute`] | the executor dies 0.2 ms into the task's compute |
+//! | [`FaultKind::StallTransfer`] | transfer takes 20–80 ms instead of ~1 ms |
+//! | [`FaultKind::PartialTransfer`] | transfer truncates: the task fails and is re-queued (≤ [`MAX_RETRIES`] times) |
+//! | [`FaultKind::PartitionShard`] | one shard unreachable for 30 ms; its messages deliver after heal |
+//!
+//! A dropped notification is modeled as a *very late* pickup rather
+//! than no pickup at all: the core's notify reserves a pending slot,
+//! and a real Falkon executor whose notification is lost re-polls the
+//! dispatcher — the late poll resolves the reservation exactly like the
+//! recovery path would.
+//!
+//! Executor kills route into
+//! [`CoordinatorCore::on_executor_failed`](crate::coordinator::core::CoordinatorCore::on_executor_failed)
+//! (scrub + §4.2 requeue); partial transfers route into
+//! [`on_task_failed`](crate::coordinator::core::CoordinatorCore::on_task_failed)
+//! with driver-side resubmission, and a retry budget turns repeat
+//! offenders into permanent failures — both terminal paths must be
+//! reached exactly once per task, which the [`oracle`] checks after
+//! every step along with replica accounting and dead-executor hygiene.
+//!
+//! Run it via `datadiff chaos --seed N --events M --shards K` or the
+//! `rust/tests/chaos.rs` sweep; `docs/CHAOS.md` documents the fault
+//! plan format and the reproduce-by-seed workflow.
+
+pub mod oracle;
+
+use crate::cache::CacheConfig;
+use crate::coordinator::core::{CoreConfig, Effect, FetchPlan, FileSizes};
+use crate::coordinator::provisioner::ProvisionerConfig;
+use crate::coordinator::queue::Task;
+use crate::coordinator::scheduler::{DispatchPolicy, SchedulerConfig};
+use crate::coordinator::shard::ShardedCoordinator;
+use crate::coordinator::AccessKind;
+use crate::ids::{ExecutorId, FileId, TaskId};
+use crate::util::prng::Pcg64;
+use crate::util::time::Micros;
+use oracle::Oracle;
+use std::collections::{BinaryHeap, HashMap, HashSet};
+
+/// Uniform data-object size (bytes) in the chaos workload.
+const FILE_BYTES: u64 = 10;
+/// Task submission gap (µs): one arrival every 2 ms.
+const SUBMIT_GAP_US: u64 = 2_000;
+/// Provisioner tick period (ms); each tick also runs the kick safety net.
+const TICK_MS: u64 = 10;
+/// Modeled GRAM/LRM allocation latency (ms) for `Effect::Allocate`.
+const GRAM_MS: u64 = 5;
+/// Length of a shard partition window (ms).
+const PARTITION_MS: u64 = 30;
+/// Resubmissions allowed per task before it fails permanently.
+pub const MAX_RETRIES: u32 = 2;
+
+/// The eight fault kinds the harness injects. See the module docs for
+/// what each does to the effect stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Notification delivered late (1–5 ms).
+    DelayNotify,
+    /// Notification delivered so late (5–15 ms) that later ones overtake.
+    ReorderNotify,
+    /// Notification lost; the executor re-polls 50 ms later.
+    DropNotify,
+    /// Destination executor killed 0.2 ms into a transfer.
+    KillMidFetch,
+    /// Executor killed 0.2 ms into a task's compute.
+    KillMidCompute,
+    /// Transfer stalls for 20–80 ms.
+    StallTransfer,
+    /// Transfer truncates; the task fails and re-queues.
+    PartialTransfer,
+    /// One shard unreachable for a window; messages deliver after heal.
+    PartitionShard,
+}
+
+impl FaultKind {
+    /// All kinds, in tally order.
+    pub const ALL: [FaultKind; 8] = [
+        FaultKind::DelayNotify,
+        FaultKind::ReorderNotify,
+        FaultKind::DropNotify,
+        FaultKind::KillMidFetch,
+        FaultKind::KillMidCompute,
+        FaultKind::StallTransfer,
+        FaultKind::PartialTransfer,
+        FaultKind::PartitionShard,
+    ];
+
+    /// Hyphenated name used in fault plans and tally rendering.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::DelayNotify => "delay-notify",
+            FaultKind::ReorderNotify => "reorder-notify",
+            FaultKind::DropNotify => "drop-notify",
+            FaultKind::KillMidFetch => "kill-mid-fetch",
+            FaultKind::KillMidCompute => "kill-mid-compute",
+            FaultKind::StallTransfer => "stall-transfer",
+            FaultKind::PartialTransfer => "partial-transfer",
+            FaultKind::PartitionShard => "partition-shard",
+        }
+    }
+}
+
+/// Per-kind injection counters for one run.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultTally {
+    counts: [u64; 8],
+}
+
+impl FaultTally {
+    fn bump(&mut self, kind: FaultKind) {
+        self.counts[kind as usize] += 1;
+    }
+
+    /// Injections of one kind.
+    pub fn count(&self, kind: FaultKind) -> u64 {
+        self.counts[kind as usize]
+    }
+
+    /// Total injections across all kinds.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+}
+
+impl std::fmt::Display for FaultTally {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.total() == 0 {
+            return f.write_str("none");
+        }
+        let mut first = true;
+        for kind in FaultKind::ALL {
+            let n = self.count(kind);
+            if n > 0 {
+                if !first {
+                    f.write_str(" ")?;
+                }
+                write!(f, "{}={n}", kind.name())?;
+                first = false;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The splitmix64 generator driving the fault schedule (and, on a
+/// separate stream, the workload shape). Chosen over the crate's
+/// [`Pcg64`] deliberately: the ISSUE's plan format is defined in terms
+/// of splitmix64 so plans are portable across reimplementations, and
+/// keeping the fault stream out of [`Pcg64`] means chaos draws can
+/// never perturb the coordinator's own peer/eviction randomness.
+#[derive(Debug, Clone)]
+struct SplitMix64(u64);
+
+impl SplitMix64 {
+    fn new(seed: u64) -> Self {
+        SplitMix64(seed)
+    }
+
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, bound)`. `bound` must be non-zero.
+    fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0, "below(0)");
+        self.next() % bound
+    }
+
+    /// True with probability `p`.
+    fn chance(&mut self, p: f64) -> bool {
+        ((self.next() >> 11) as f64) / ((1u64 << 53) as f64) < p
+    }
+}
+
+/// Parameters of one chaos run.
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// Seed of the fault plan and the coordinator's own PRNG.
+    pub seed: u64,
+    /// Tasks submitted (one every 2 ms).
+    pub events: usize,
+    /// Coordinator shards (K = 1 is the plain core).
+    pub shards: usize,
+    /// Dispatch policy under test.
+    pub policy: DispatchPolicy,
+    /// Initial fleet size (`max_nodes` is twice this, leaving the
+    /// provisioner room to replace kills).
+    pub nodes: usize,
+    /// Distinct data objects in the workload.
+    pub files: u32,
+    /// Per-decision fault probability.
+    pub fault_rate: f64,
+}
+
+impl ChaosConfig {
+    /// Standard-size run: 200 tasks on 8 nodes.
+    pub fn new(seed: u64) -> Self {
+        ChaosConfig {
+            seed,
+            events: 200,
+            shards: 1,
+            policy: DispatchPolicy::GoodCacheCompute,
+            nodes: 8,
+            files: 24,
+            fault_rate: 0.18,
+        }
+    }
+
+    /// Small run for sweeps and CI smoke (`datadiff chaos --quick`).
+    pub fn quick(seed: u64) -> Self {
+        ChaosConfig {
+            events: 60,
+            nodes: 6,
+            files: 16,
+            ..ChaosConfig::new(seed)
+        }
+    }
+}
+
+/// Outcome of one chaos run. `plan` and `fingerprint` are pure
+/// functions of the config, which is what the reproduce-by-seed tests
+/// assert.
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    /// Seed the run was driven by.
+    pub seed: u64,
+    /// Policy under test.
+    pub policy: DispatchPolicy,
+    /// Shard count.
+    pub shards: usize,
+    /// Tasks submitted.
+    pub events: usize,
+    /// Tasks that completed.
+    pub completed: u64,
+    /// Tasks that failed permanently (retry budget exhausted).
+    pub failed: u64,
+    /// Total faults injected (`chaos/faults_injected`).
+    pub faults_injected: u64,
+    /// Per-kind injection counts.
+    pub tally: FaultTally,
+    /// The injected fault plan, one formatted line per fault.
+    pub plan: Vec<String>,
+    /// Oracle violations detected (`chaos/oracle_violations`).
+    pub oracle_violations: usize,
+    /// The run hit its step budget with tasks still open.
+    pub stalled: bool,
+    /// FNV-1a digest of the dispatch trace, access tallies and fault
+    /// tallies — equal across reruns of the same seed.
+    pub fingerprint: u64,
+    /// Oracle failure report (seed + plan + trailing trace), present
+    /// only when violations were detected.
+    pub dump: Option<String>,
+}
+
+impl ChaosReport {
+    /// Did the run satisfy the robustness gate? Oracle-clean, no
+    /// stall, and at least one fault actually injected (a faultless
+    /// "chaos" run proves nothing).
+    pub fn clean(&self) -> bool {
+        self.oracle_violations == 0 && !self.stalled && self.faults_injected > 0
+    }
+
+    /// One-line summary for sweep output.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "seed={:<5} policy={:<20} shards={} tasks={:<4} completed={:<4} failed={} \
+             faults={:<3} violations={} fingerprint={:016x}{}",
+            self.seed,
+            self.policy.name(),
+            self.shards,
+            self.events,
+            self.completed,
+            self.failed,
+            self.faults_injected,
+            self.oracle_violations,
+            self.fingerprint,
+            if self.stalled { " STALLED" } else { "" },
+        )
+    }
+}
+
+/// Run one seeded chaos schedule to completion.
+pub fn run_chaos(cfg: &ChaosConfig) -> ChaosReport {
+    Driver::new(cfg.clone()).run()
+}
+
+/// Deliberately trip the oracle (a double terminal state) and return
+/// its failure dump — proves the watchdog bites and shows the
+/// reproduce-by-seed report format. Wired to `datadiff chaos
+/// --self-test` and asserted by the integration suite.
+pub fn oracle_self_test() -> String {
+    let mut o = Oracle::new(0xC0FFEE);
+    o.on_submit(1, Micros::ZERO);
+    o.on_register(ExecutorId(0), Micros::ZERO);
+    o.on_terminal(1, "completed", Micros(1_000));
+    o.on_terminal(1, "completed", Micros(2_000));
+    assert!(
+        !o.violations().is_empty(),
+        "oracle self-test failed to trip the oracle"
+    );
+    o.dump(&["#001 0.000ms delay-notify e0 (self-test)".to_string()])
+}
+
+/// One queued driver action. Completion steps carry the task's attempt
+/// number at scheduling time: any re-queue (kill, partial transfer)
+/// bumps the attempt, so completions of a superseded attempt are
+/// recognized as stale and skipped instead of reaching the coordinator.
+#[derive(Debug, Clone)]
+enum Step {
+    /// Submit task `i` from the workload stream.
+    Submit(u64),
+    /// Deliver a (possibly delayed) notification round-trip.
+    Pickup(ExecutorId),
+    /// A transfer finished.
+    FetchDone { task: u64, attempt: u32 },
+    /// A compute finished.
+    ComputeDone { task: u64, attempt: u32 },
+    /// A partial transfer surfaced as a task failure.
+    TaskFailed { task: u64, attempt: u32 },
+    /// An executor dies.
+    ExecFail(ExecutorId),
+    /// An `Effect::Allocate` node finished its LRM bootstrap.
+    NodeUp,
+    /// A shard partition heals.
+    Heal(usize),
+    /// Provisioner tick + kick safety net.
+    Tick,
+}
+
+/// Heap entry ordered by `(at, seq)` — reversed so `BinaryHeap` (a
+/// max-heap) pops the earliest step first. `seq` makes the order total
+/// and deterministic.
+#[derive(Debug)]
+struct Scheduled {
+    at: Micros,
+    seq: u64,
+    step: Step,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (other.at, other.seq).cmp(&(self.at, self.seq))
+    }
+}
+
+struct Driver {
+    cfg: ChaosConfig,
+    router: ShardedCoordinator,
+    heap: BinaryHeap<Scheduled>,
+    seq: u64,
+    faults: SplitMix64,
+    workload: SplitMix64,
+    oracle: Oracle,
+    /// Current attempt per task; bumped on every re-queue so stale
+    /// completion steps are skipped.
+    attempt: HashMap<u64, u32>,
+    /// Partial-transfer resubmissions per task.
+    retries: HashMap<u64, u32>,
+    /// The in-flight fetch per task (attempt-tagged), for dead-source
+    /// fallback at completion time.
+    fetches: HashMap<u64, (u32, FetchPlan)>,
+    /// Executor each dispatched task currently occupies.
+    task_exec: HashMap<u64, ExecutorId>,
+    /// Shard of each executor at registration (partition targeting).
+    exec_shard: HashMap<u32, usize>,
+    /// Executors the driver believes alive.
+    live: HashSet<u32>,
+    /// Open partition window: (shard, heal time).
+    partition: Option<(usize, Micros)>,
+    /// Kill budget; never kills the last node.
+    kills_left: u32,
+    /// Every run injects ≥ 1 fault: the first notification is always
+    /// delayed, so `faults_injected > 0` holds for any seed.
+    forced_first_fault: bool,
+    tally: FaultTally,
+    plan: Vec<String>,
+    /// Original task specs, for resubmission after partial transfers.
+    tasks: HashMap<u64, Task>,
+    completed: u64,
+    failed: u64,
+    terminal: u64,
+}
+
+fn fnv_mix(fp: &mut u64, v: u64) {
+    for b in v.to_le_bytes() {
+        *fp ^= b as u64;
+        *fp = fp.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+}
+
+impl Driver {
+    fn new(cfg: ChaosConfig) -> Self {
+        let core_cfg = CoreConfig {
+            scheduler: SchedulerConfig {
+                policy: cfg.policy,
+                ..SchedulerConfig::default()
+            },
+            provisioner: ProvisionerConfig {
+                // Short idle-release so the Release/deferral machinery
+                // is exercised while transfers are still in flight.
+                idle_release_s: 0.5,
+                ..ProvisionerConfig::default()
+            },
+            cache: CacheConfig::lru(cfg.files as u64 * FILE_BYTES / 3),
+            max_nodes: cfg.nodes * 2,
+            slots_per_node: 1,
+            file_sizes: FileSizes::Uniform(FILE_BYTES),
+        };
+        let router = ShardedCoordinator::new(core_cfg, cfg.shards, Pcg64::seeded(cfg.seed));
+        Driver {
+            faults: SplitMix64::new(cfg.seed),
+            workload: SplitMix64::new(cfg.seed ^ 0x5eed_0f_da7a),
+            oracle: Oracle::new(cfg.seed),
+            kills_left: cfg.nodes as u32,
+            router,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            attempt: HashMap::new(),
+            retries: HashMap::new(),
+            fetches: HashMap::new(),
+            task_exec: HashMap::new(),
+            exec_shard: HashMap::new(),
+            live: HashSet::new(),
+            partition: None,
+            forced_first_fault: false,
+            tally: FaultTally::default(),
+            plan: Vec::new(),
+            tasks: HashMap::new(),
+            completed: 0,
+            failed: 0,
+            terminal: 0,
+            cfg,
+        }
+    }
+
+    fn schedule(&mut self, at: Micros, step: Step) {
+        self.seq += 1;
+        self.heap.push(Scheduled {
+            at,
+            seq: self.seq,
+            step,
+        });
+    }
+
+    fn inject(&mut self, kind: FaultKind, now: Micros, detail: String) {
+        self.tally.bump(kind);
+        self.plan.push(format!(
+            "#{:03} {now} {} {detail}",
+            self.plan.len() + 1,
+            kind.name()
+        ));
+    }
+
+    fn make_task(&mut self, i: u64, now: Micros) -> Task {
+        let dominant = FileId(self.workload.below(self.cfg.files as u64) as u32);
+        let mut files = vec![dominant];
+        if self.workload.chance(0.35) {
+            let second = FileId(self.workload.below(self.cfg.files as u64) as u32);
+            if second != dominant {
+                files.push(second);
+            }
+        }
+        Task {
+            id: TaskId(i),
+            files,
+            compute: Micros::from_millis(5),
+            arrival: now,
+        }
+    }
+
+    /// The shard a step's messages traverse, for partition targeting.
+    fn step_shard(&self, step: &Step) -> Option<usize> {
+        match step {
+            Step::Pickup(e) | Step::ExecFail(e) => self.exec_shard.get(&e.0).copied(),
+            Step::FetchDone { task, .. }
+            | Step::ComputeDone { task, .. }
+            | Step::TaskFailed { task, .. } => self
+                .task_exec
+                .get(task)
+                .and_then(|e| self.exec_shard.get(&e.0))
+                .copied(),
+            Step::Submit(_) | Step::NodeUp | Step::Heal(_) | Step::Tick => None,
+        }
+    }
+
+    fn run(mut self) -> ChaosReport {
+        for _ in 0..self.cfg.nodes {
+            let (exec, effs) = self.router.register_node(Micros::ZERO);
+            self.live.insert(exec.0);
+            self.exec_shard
+                .insert(exec.0, self.router.shard_of_exec(exec).expect("registered"));
+            self.oracle.on_register(exec, Micros::ZERO);
+            self.enact(effs, Micros::ZERO);
+        }
+        for i in 0..self.cfg.events as u64 {
+            self.schedule(Micros(i * SUBMIT_GAP_US), Step::Submit(i));
+        }
+        self.schedule(Micros::ZERO, Step::Tick);
+
+        let max_steps = 1_000 + self.cfg.events * 120;
+        let mut steps = 0usize;
+        let mut stalled = false;
+        while let Some(s) = self.heap.pop() {
+            if self.terminal as usize >= self.cfg.events {
+                break;
+            }
+            steps += 1;
+            if steps > max_steps {
+                stalled = true;
+                break;
+            }
+            // Open partition window: messages to/from the cut shard are
+            // held back and delivered after heal.
+            if let Some((shard, heal)) = self.partition {
+                if s.at < heal && self.step_shard(&s.step) == Some(shard) {
+                    self.schedule(heal, s.step);
+                    continue;
+                }
+            }
+            self.process(s.at, s.step);
+        }
+        stalled |= (self.terminal as usize) < self.cfg.events;
+
+        let mut fp = 0xcbf2_9ce4_8422_2325u64;
+        for t in self.router.take_dispatch_log() {
+            fnv_mix(&mut fp, t.0);
+        }
+        let (hl, hg, miss) = self.router.take_merged_recorder().access_counts();
+        for v in [self.completed, self.failed, hl, hg, miss] {
+            fnv_mix(&mut fp, v);
+        }
+        for kind in FaultKind::ALL {
+            fnv_mix(&mut fp, self.tally.count(kind));
+        }
+        if stalled {
+            let open = self.oracle.non_terminal();
+            crate::warn!(
+                "chaos seed {} stalled with {} open task(s): {open:?}",
+                self.cfg.seed,
+                open.len()
+            );
+        }
+        let violations = self.oracle.violations().len();
+        let dump = if violations > 0 {
+            Some(self.oracle.dump(&self.plan))
+        } else {
+            None
+        };
+        ChaosReport {
+            seed: self.cfg.seed,
+            policy: self.cfg.policy,
+            shards: self.cfg.shards,
+            events: self.cfg.events,
+            completed: self.completed,
+            failed: self.failed,
+            faults_injected: self.tally.total(),
+            tally: self.tally,
+            plan: self.plan,
+            oracle_violations: violations,
+            stalled,
+            fingerprint: fp,
+            dump,
+        }
+    }
+
+    fn process(&mut self, now: Micros, step: Step) {
+        match step {
+            Step::Submit(i) => {
+                let task = self.make_task(i, now);
+                self.tasks.insert(i, task.clone());
+                self.attempt.insert(i, 0);
+                self.oracle.on_submit(i, now);
+                let effs = self.router.on_arrival(task, 0, 0.0, now);
+                self.enact(effs, now);
+            }
+            Step::Pickup(e) => {
+                if !self.live.contains(&e.0) {
+                    return; // died while the notification was in flight
+                }
+                let effs = self.router.on_pickup(e, now);
+                self.enact(effs, now);
+            }
+            Step::FetchDone { task, attempt } => {
+                if self.attempt.get(&task) != Some(&attempt) {
+                    return; // superseded by a re-queue
+                }
+                // Dead-source fallback: if the serving peer died while
+                // the transfer was in flight, the driver re-reads from
+                // persistent storage and reports the observed miss.
+                let observed = match self.fetches.remove(&task) {
+                    Some((a, plan)) if a == attempt => match plan.peer {
+                        Some(p) if !self.live.contains(&p.0) => {
+                            Some((AccessKind::Miss, plan.bytes))
+                        }
+                        _ => None,
+                    },
+                    _ => None,
+                };
+                self.oracle.on_fetch_complete(task, now);
+                let effs = self.router.on_fetch_done(TaskId(task), now, observed);
+                self.enact(effs, now);
+            }
+            Step::ComputeDone { task, attempt } => {
+                if self.attempt.get(&task) != Some(&attempt) {
+                    return;
+                }
+                self.oracle.on_terminal(task, "completed", now);
+                self.terminal += 1;
+                self.completed += 1;
+                self.task_exec.remove(&task);
+                let effs = self.router.on_compute_done(TaskId(task), now, now);
+                self.enact(effs, now);
+            }
+            Step::TaskFailed { task, attempt } => {
+                if self.attempt.get(&task) != Some(&attempt) {
+                    return;
+                }
+                *self.attempt.get_mut(&task).expect("guard above") += 1;
+                self.fetches.remove(&task);
+                self.task_exec.remove(&task);
+                self.oracle.on_fetch_complete(task, now);
+                let effs = self.router.on_task_failed(TaskId(task), now);
+                self.enact(effs, now);
+                let tries = self.retries.entry(task).or_insert(0);
+                *tries += 1;
+                if *tries <= MAX_RETRIES {
+                    // §4.2 replay: resubmit through the normal arrival
+                    // path so the task re-routes and re-diffuses.
+                    self.oracle.on_requeue(task, now);
+                    let mut t = self.tasks[&task].clone();
+                    t.arrival = now;
+                    let effs = self.router.on_arrival(t, 0, 0.0, now);
+                    self.enact(effs, now);
+                } else {
+                    self.oracle.on_terminal(task, "failed", now);
+                    self.terminal += 1;
+                    self.failed += 1;
+                }
+            }
+            Step::ExecFail(e) => {
+                if !self.live.remove(&e.0) {
+                    return; // already dead or released
+                }
+                self.exec_shard.remove(&e.0);
+                // Bump every victim's attempt so completions scheduled
+                // for the dead node are recognized as stale.
+                let mut victims: Vec<u64> = self
+                    .task_exec
+                    .iter()
+                    .filter(|&(_, &x)| x == e)
+                    .map(|(&t, _)| t)
+                    .collect();
+                victims.sort_unstable();
+                for t in &victims {
+                    *self.attempt.get_mut(t).expect("dispatched task has an attempt") += 1;
+                    self.fetches.remove(t);
+                    self.task_exec.remove(t);
+                }
+                self.oracle.on_kill(e, &victims, now);
+                let effs = self.router.on_executor_failed(e, now);
+                self.enact(effs, now);
+            }
+            Step::NodeUp => {
+                let (exec, effs) = self.router.on_node_registered(now);
+                self.live.insert(exec.0);
+                self.exec_shard
+                    .insert(exec.0, self.router.shard_of_exec(exec).expect("registered"));
+                self.oracle.on_register(exec, now);
+                self.enact(effs, now);
+            }
+            Step::Heal(shard) => {
+                if matches!(self.partition, Some((s, _)) if s == shard) {
+                    self.partition = None;
+                }
+            }
+            Step::Tick => {
+                if self.cfg.shards > 1
+                    && self.partition.is_none()
+                    && self.faults.chance(self.cfg.fault_rate * 0.25)
+                {
+                    let shard = self.faults.below(self.cfg.shards as u64) as usize;
+                    let heal = now + Micros::from_millis(PARTITION_MS);
+                    self.partition = Some((shard, heal));
+                    self.inject(
+                        FaultKind::PartitionShard,
+                        now,
+                        format!("shard {shard} until {heal}"),
+                    );
+                    self.schedule(heal, Step::Heal(shard));
+                }
+                let effs = self.router.on_tick(now);
+                self.enact(effs, now);
+                let effs = self.router.kick();
+                self.enact(effs, now);
+                if (self.terminal as usize) < self.cfg.events {
+                    self.schedule(now + Micros::from_millis(TICK_MS), Step::Tick);
+                }
+            }
+        }
+        self.oracle.check_router(&self.router, now);
+    }
+
+    /// Enact one effect batch, rolling the fault stream at every
+    /// perturbable point.
+    fn enact(&mut self, effects: Vec<Effect>, now: Micros) {
+        for eff in effects {
+            self.oracle.observe_effect(&eff, now);
+            match eff {
+                Effect::Notify(e) => {
+                    let delay_us = if !self.forced_first_fault {
+                        self.forced_first_fault = true;
+                        self.inject(FaultKind::DelayNotify, now, format!("{e} (forced)"));
+                        1_000 + self.faults.below(4_000)
+                    } else if self.faults.chance(self.cfg.fault_rate) {
+                        match self.faults.below(3) {
+                            0 => {
+                                self.inject(FaultKind::DelayNotify, now, format!("{e}"));
+                                1_000 + self.faults.below(4_000)
+                            }
+                            1 => {
+                                self.inject(FaultKind::ReorderNotify, now, format!("{e}"));
+                                5_000 + self.faults.below(10_000)
+                            }
+                            _ => {
+                                self.inject(FaultKind::DropNotify, now, format!("{e}"));
+                                50_000
+                            }
+                        }
+                    } else {
+                        100
+                    };
+                    self.schedule(now + Micros(delay_us), Step::Pickup(e));
+                }
+                Effect::Fetch(plan) => {
+                    let task = plan.task_id.0;
+                    let attempt = *self.attempt.get(&task).unwrap_or(&0);
+                    self.task_exec.insert(task, plan.exec);
+                    let roll = self.faults.chance(self.cfg.fault_rate);
+                    let kill = roll
+                        && self.kills_left > 0
+                        && self.router.node_count() > 1
+                        && self.faults.chance(0.35);
+                    if kill {
+                        self.kills_left -= 1;
+                        self.inject(
+                            FaultKind::KillMidFetch,
+                            now,
+                            format!("{} fetching {} for t{task}", plan.exec, plan.file),
+                        );
+                        // The transfer dies with the executor: no
+                        // FetchDone; on_executor_failed re-queues.
+                        self.schedule(now + Micros(200), Step::ExecFail(plan.exec));
+                        continue;
+                    }
+                    let partial = roll && self.faults.chance(0.4);
+                    self.fetches.insert(task, (attempt, plan.clone()));
+                    if partial {
+                        self.inject(
+                            FaultKind::PartialTransfer,
+                            now,
+                            format!("t{task} reading {}", plan.file),
+                        );
+                        self.schedule(now + Micros(1_000), Step::TaskFailed { task, attempt });
+                    } else if roll {
+                        self.inject(
+                            FaultKind::StallTransfer,
+                            now,
+                            format!("t{task} reading {}", plan.file),
+                        );
+                        let stall = 20_000 + self.faults.below(60_000);
+                        self.schedule(now + Micros(stall), Step::FetchDone { task, attempt });
+                    } else {
+                        let xfer = 500 + self.faults.below(1_500);
+                        self.schedule(now + Micros(xfer), Step::FetchDone { task, attempt });
+                    }
+                }
+                Effect::Compute {
+                    task_id,
+                    exec,
+                    compute,
+                } => {
+                    let task = task_id.0;
+                    let attempt = *self.attempt.get(&task).unwrap_or(&0);
+                    self.task_exec.insert(task, exec);
+                    if self.kills_left > 0
+                        && self.router.node_count() > 1
+                        && self.faults.chance(self.cfg.fault_rate * 0.5)
+                    {
+                        self.kills_left -= 1;
+                        self.inject(
+                            FaultKind::KillMidCompute,
+                            now,
+                            format!("{exec} running t{task}"),
+                        );
+                        self.schedule(now + Micros(200), Step::ExecFail(exec));
+                    } else {
+                        self.schedule(now + compute, Step::ComputeDone { task, attempt });
+                    }
+                }
+                Effect::Allocate(n) => {
+                    for _ in 0..n {
+                        self.schedule(now + Micros::from_millis(GRAM_MS), Step::NodeUp);
+                    }
+                }
+                Effect::Release(execs) => {
+                    for e in execs {
+                        self.oracle.on_release(e, now);
+                        self.live.remove(&e.0);
+                        self.exec_shard.remove(&e.0);
+                        self.router.release_node(e);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_matches_reference_vector() {
+        // Canonical splitmix64 test vector: first outputs for seed 0
+        // (Vigna's reference implementation).
+        let mut s = SplitMix64::new(0);
+        assert_eq!(s.next(), 0xe220_a839_7b1d_cdaf);
+        assert_eq!(s.next(), 0x6e78_9e6a_a1b9_65f4);
+        assert_eq!(s.next(), 0x06c4_5d18_8009_454f);
+    }
+
+    #[test]
+    fn same_seed_reproduces_schedule_and_tallies() {
+        let cfg = ChaosConfig::quick(11);
+        let a = run_chaos(&cfg);
+        let b = run_chaos(&cfg);
+        assert_eq!(a.plan, b.plan, "fault schedule must reproduce from the seed");
+        assert_eq!(a.tally, b.tally);
+        assert_eq!(a.fingerprint, b.fingerprint);
+        assert_eq!((a.completed, a.failed), (b.completed, b.failed));
+    }
+
+    #[test]
+    fn quick_runs_are_clean_and_always_inject() {
+        for seed in 1..=4 {
+            let r = run_chaos(&ChaosConfig::quick(seed));
+            assert!(r.faults_injected > 0, "seed {seed} injected nothing");
+            assert_eq!(
+                r.oracle_violations, 0,
+                "seed {seed}:\n{}",
+                r.dump.as_deref().unwrap_or("")
+            );
+            assert!(!r.stalled, "seed {seed} stalled");
+            assert_eq!(
+                r.completed + r.failed,
+                r.events as u64,
+                "seed {seed}: every task reaches a terminal state exactly once"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_runs_survive_partitions() {
+        let mut cfg = ChaosConfig::quick(5);
+        cfg.shards = 4;
+        cfg.nodes = 8;
+        let r = run_chaos(&cfg);
+        assert!(r.clean(), "{}", r.dump.as_deref().unwrap_or("stalled"));
+        assert_eq!(r.completed + r.failed, r.events as u64);
+    }
+
+    #[test]
+    fn self_test_produces_seed_and_trace() {
+        let dump = oracle_self_test();
+        assert!(dump.contains("seed="));
+        assert!(dump.contains("fault plan"));
+        assert!(dump.contains("trailing event trace"));
+        assert!(dump.contains("terminal state twice"));
+    }
+
+    #[test]
+    fn tally_renders_nonzero_kinds() {
+        let mut t = FaultTally::default();
+        assert_eq!(t.to_string(), "none");
+        t.bump(FaultKind::DelayNotify);
+        t.bump(FaultKind::DelayNotify);
+        t.bump(FaultKind::KillMidFetch);
+        assert_eq!(t.to_string(), "delay-notify=2 kill-mid-fetch=1");
+        assert_eq!(t.total(), 3);
+    }
+}

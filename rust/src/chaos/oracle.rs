@@ -1,0 +1,407 @@
+//! Shadow-state oracle for the chaos harness.
+//!
+//! The oracle mirrors the coordinator's externally visible promises in a
+//! deliberately *independent* model — plain maps, no scheduler logic —
+//! and checks them after every event the [`driver`](super) processes:
+//!
+//! 1. **Exactly-once terminal states** — every submitted task reaches
+//!    `completed` or `failed permanently` exactly once, across any
+//!    number of re-queues and retries (§4.2 replay policy).
+//! 2. **Replica accounting** — the location index, the per-executor
+//!    cache models and the peer-serving refcounts agree, checked via
+//!    [`ShardedCoordinator::check_integrity`] (which in turn runs every
+//!    shard's [`CoordinatorCore::check_integrity`]).
+//! 3. **No dispatch to the dead** — no `Notify`/`Fetch`/`Compute`
+//!    effect may name an executor the driver has killed or released.
+//! 4. **No effect references a scrubbed cache slot** — a fetch may only
+//!    name a live peer as its source, and no executor is released while
+//!    it is still the in-flight source of somebody's transfer (the
+//!    `Effect::Release` deferral contract).
+//!
+//! On violation the oracle records the failure and keeps going (one bad
+//! run should surface *all* its symptoms); [`Oracle::dump`] renders the
+//! seed, the injected fault plan and a minimal trailing event trace so
+//! any failure reproduces from its seed alone.
+//!
+//! [`ShardedCoordinator::check_integrity`]:
+//!     crate::coordinator::shard::ShardedCoordinator::check_integrity
+//! [`CoordinatorCore::check_integrity`]:
+//!     crate::coordinator::core::CoordinatorCore::check_integrity
+
+use crate::coordinator::core::Effect;
+use crate::coordinator::shard::ShardedCoordinator;
+use crate::ids::ExecutorId;
+use crate::util::time::Micros;
+use std::collections::{HashMap, HashSet, VecDeque};
+
+/// Ring-buffer capacity of the trailing event trace.
+const TRACE_CAP: usize = 64;
+
+/// Shadow lifecycle of one task, tracked independently of the
+/// coordinator's own queue/in-flight state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Shadow {
+    /// Submitted or re-queued; not on any executor.
+    Queued,
+    /// Dispatched: fetching or computing on this (global) executor id.
+    Running(u32),
+    /// Reached a terminal state (completed or permanently failed).
+    Terminal,
+}
+
+/// The shadow model. Construct once per chaos run, feed every event and
+/// effect, and read [`Oracle::violations`] at the end.
+#[derive(Debug)]
+pub struct Oracle {
+    seed: u64,
+    tasks: HashMap<u64, Shadow>,
+    live: HashSet<u32>,
+    /// In-flight transfer sources: task id → the peer executor serving
+    /// its current fetch. An executor appearing as a value here must
+    /// not be released.
+    serving: HashMap<u64, u32>,
+    trace: VecDeque<String>,
+    violations: Vec<String>,
+}
+
+impl Oracle {
+    /// Fresh oracle for a run seeded with `seed` (recorded for dumps).
+    pub fn new(seed: u64) -> Self {
+        Oracle {
+            seed,
+            tasks: HashMap::new(),
+            live: HashSet::new(),
+            serving: HashMap::new(),
+            trace: VecDeque::with_capacity(TRACE_CAP),
+            violations: Vec::new(),
+        }
+    }
+
+    fn note(&mut self, line: String) {
+        if self.trace.len() == TRACE_CAP {
+            self.trace.pop_front();
+        }
+        self.trace.push_back(line);
+    }
+
+    fn violate(&mut self, now: Micros, msg: String) {
+        self.note(format!("{now} VIOLATION {msg}"));
+        self.violations.push(msg);
+    }
+
+    /// A task entered the system for the first time.
+    pub fn on_submit(&mut self, task: u64, now: Micros) {
+        self.note(format!("{now} submit t{task}"));
+        if self.tasks.insert(task, Shadow::Queued).is_some() {
+            self.violate(now, format!("task t{task} submitted twice"));
+        }
+    }
+
+    /// An executor registered (initial fleet or `Effect::Allocate`).
+    pub fn on_register(&mut self, exec: ExecutorId, now: Micros) {
+        self.note(format!("{now} register {exec}"));
+        self.live.insert(exec.0);
+    }
+
+    /// The driver is about to enact a release named in
+    /// [`Effect::Release`]. The executor must be idle in the shadow
+    /// model *and* must not be serving anybody's in-flight transfer.
+    pub fn on_release(&mut self, exec: ExecutorId, now: Micros) {
+        self.note(format!("{now} release {exec}"));
+        let running: Vec<u64> = self
+            .tasks
+            .iter()
+            .filter(|&(_, s)| *s == Shadow::Running(exec.0))
+            .map(|(&t, _)| t)
+            .collect();
+        if !running.is_empty() {
+            self.violate(now, format!("released busy executor {exec} (running {running:?})"));
+        }
+        if self.serving.values().any(|&p| p == exec.0) {
+            self.violate(
+                now,
+                format!("released {exec} while it is serving an in-flight peer transfer"),
+            );
+        }
+        self.live.remove(&exec.0);
+    }
+
+    /// An executor was killed by a fault. Its running tasks (per the
+    /// shadow model) fall back to queued — mirroring the coordinator's
+    /// §4.2 requeue — and any transfer it was sourcing loses its peer
+    /// (drivers fall back to persistent storage).
+    pub fn on_kill(&mut self, exec: ExecutorId, victims: &[u64], now: Micros) {
+        self.note(format!("{now} kill {exec} (victims {victims:?})"));
+        self.live.remove(&exec.0);
+        for s in self.tasks.values_mut() {
+            if *s == Shadow::Running(exec.0) {
+                *s = Shadow::Queued;
+            }
+        }
+        // A dead executor stops serving (value side) and its victims'
+        // in-flight transfers abort, freeing *their* sources (key side).
+        self.serving.retain(|_, &mut p| p != exec.0);
+        for t in victims {
+            self.serving.remove(t);
+        }
+    }
+
+    /// A failed (partial-transfer) task is re-queued for another attempt.
+    pub fn on_requeue(&mut self, task: u64, now: Micros) {
+        self.note(format!("{now} requeue t{task}"));
+        match self.tasks.get_mut(&task) {
+            Some(s @ (Shadow::Queued | Shadow::Running(_))) => *s = Shadow::Queued,
+            Some(Shadow::Terminal) => {
+                self.violate(now, format!("re-queued terminal task t{task}"))
+            }
+            None => self.violate(now, format!("re-queued unknown task t{task}")),
+        }
+    }
+
+    /// A task's current transfer drained (done or failed): its source,
+    /// if any, stops serving.
+    pub fn on_fetch_complete(&mut self, task: u64, now: Micros) {
+        if let Some(p) = self.serving.remove(&task) {
+            self.note(format!("{now} fetch-complete t{task} (source e{p})"));
+        }
+    }
+
+    /// A task reached a terminal state (`"completed"` / `"failed"`).
+    /// Exactly-once is the headline invariant.
+    pub fn on_terminal(&mut self, task: u64, outcome: &str, now: Micros) {
+        self.note(format!("{now} terminal t{task} {outcome}"));
+        match self.tasks.get_mut(&task) {
+            Some(s @ (Shadow::Queued | Shadow::Running(_))) => *s = Shadow::Terminal,
+            Some(Shadow::Terminal) => self.violate(
+                now,
+                format!("task t{task} reached a terminal state twice ({outcome})"),
+            ),
+            None => self.violate(now, format!("terminal state for unknown task t{task}")),
+        }
+    }
+
+    /// Inspect one coordinator effect before the driver enacts it:
+    /// invariants 3 (no dispatch to the dead) and 4 (no scrubbed
+    /// source) live here.
+    pub fn observe_effect(&mut self, eff: &Effect, now: Micros) {
+        match eff {
+            Effect::Notify(e) => {
+                self.note(format!("{now} effect notify {e}"));
+                if !self.live.contains(&e.0) {
+                    self.violate(now, format!("notify targets dead executor {e}"));
+                }
+            }
+            Effect::Fetch(plan) => {
+                let t = plan.task_id.0;
+                self.note(format!(
+                    "{now} effect fetch t{t} {} on {} ({:?} peer {:?})",
+                    plan.file, plan.exec, plan.kind, plan.peer
+                ));
+                if !self.live.contains(&plan.exec.0) {
+                    self.violate(now, format!("fetch dispatched to dead executor {}", plan.exec));
+                }
+                match self.tasks.get_mut(&t) {
+                    Some(Shadow::Terminal) => {
+                        self.violate(now, format!("fetch for terminal task t{t}"))
+                    }
+                    Some(s) => *s = Shadow::Running(plan.exec.0),
+                    None => self.violate(now, format!("fetch for unknown task t{t}")),
+                }
+                if let Some(p) = plan.peer {
+                    if self.live.contains(&p.0) {
+                        self.serving.insert(t, p.0);
+                    } else {
+                        self.violate(
+                            now,
+                            format!("fetch for t{t} sources scrubbed cache slot on dead {p}"),
+                        );
+                    }
+                }
+            }
+            Effect::Compute { task_id, exec, .. } => {
+                let t = task_id.0;
+                self.note(format!("{now} effect compute t{t} on {exec}"));
+                if !self.live.contains(&exec.0) {
+                    self.violate(now, format!("compute dispatched to dead executor {exec}"));
+                }
+                match self.tasks.get_mut(&t) {
+                    Some(Shadow::Terminal) => {
+                        self.violate(now, format!("compute for terminal task t{t}"))
+                    }
+                    Some(s) => *s = Shadow::Running(exec.0),
+                    None => self.violate(now, format!("compute for unknown task t{t}")),
+                }
+            }
+            Effect::Allocate(n) => self.note(format!("{now} effect allocate {n}")),
+            Effect::Release(list) => self.note(format!("{now} effect release {list:?}")),
+        }
+    }
+
+    /// Invariant 2: cross-check the coordinator's own books — index vs
+    /// cache contents vs serving refcounts — via its integrity seam.
+    pub fn check_router(&mut self, router: &ShardedCoordinator, now: Micros) {
+        if let Err(msg) = router.check_integrity() {
+            self.violate(now, format!("replica accounting diverged: {msg}"));
+        }
+    }
+
+    /// Every task submitted so far that has not reached a terminal
+    /// state (end-of-run liveness reporting).
+    pub fn non_terminal(&self) -> Vec<u64> {
+        let mut open: Vec<u64> = self
+            .tasks
+            .iter()
+            .filter(|&(_, s)| *s != Shadow::Terminal)
+            .map(|(&t, _)| t)
+            .collect();
+        open.sort_unstable();
+        open
+    }
+
+    /// All recorded violations, in detection order.
+    pub fn violations(&self) -> &[String] {
+        &self.violations
+    }
+
+    /// Render the reproduce-by-seed failure report: seed, the injected
+    /// fault plan and the minimal trailing event trace (last
+    /// `TRACE_CAP` events before the violation).
+    pub fn dump(&self, plan: &[String]) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "chaos oracle: {} violation(s), seed={}\n",
+            self.violations.len(),
+            self.seed
+        ));
+        out.push_str(&format!("fault plan ({} injected):\n", plan.len()));
+        for line in plan {
+            out.push_str(&format!("  {line}\n"));
+        }
+        out.push_str(&format!("trailing event trace (last {}):\n", self.trace.len()));
+        for line in &self.trace {
+            out.push_str(&format!("  {line}\n"));
+        }
+        out.push_str("violations:\n");
+        for v in &self.violations {
+            out.push_str(&format!("  - {v}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::core::FetchPlan;
+    use crate::coordinator::AccessKind;
+    use crate::ids::{FileId, TaskId};
+
+    #[test]
+    fn double_terminal_is_a_violation() {
+        let mut o = Oracle::new(7);
+        o.on_submit(1, Micros::ZERO);
+        o.on_terminal(1, "completed", Micros(10));
+        assert!(o.violations().is_empty());
+        o.on_terminal(1, "completed", Micros(20));
+        assert_eq!(o.violations().len(), 1);
+        assert!(o.violations()[0].contains("terminal state twice"));
+    }
+
+    #[test]
+    fn dispatch_to_dead_executor_is_a_violation() {
+        let mut o = Oracle::new(7);
+        o.on_submit(1, Micros::ZERO);
+        o.on_register(ExecutorId(0), Micros::ZERO);
+        o.on_kill(ExecutorId(0), &[], Micros(5));
+        o.observe_effect(
+            &Effect::Compute {
+                task_id: TaskId(1),
+                exec: ExecutorId(0),
+                compute: Micros(1),
+            },
+            Micros(6),
+        );
+        assert_eq!(o.violations().len(), 1);
+        assert!(o.violations()[0].contains("dead executor"));
+    }
+
+    #[test]
+    fn releasing_a_serving_source_is_a_violation() {
+        let mut o = Oracle::new(7);
+        o.on_submit(1, Micros::ZERO);
+        o.on_register(ExecutorId(0), Micros::ZERO);
+        o.on_register(ExecutorId(1), Micros::ZERO);
+        o.observe_effect(
+            &Effect::Fetch(FetchPlan {
+                task_id: TaskId(1),
+                exec: ExecutorId(1),
+                file: FileId(3),
+                bytes: 10,
+                kind: AccessKind::HitGlobal,
+                peer: Some(ExecutorId(0)),
+                evicted: Vec::new(),
+            }),
+            Micros(5),
+        );
+        o.on_release(ExecutorId(0), Micros(6));
+        assert_eq!(o.violations().len(), 1);
+        assert!(o.violations()[0].contains("serving"));
+        // After the fetch drains the release would have been fine.
+        let mut o2 = Oracle::new(7);
+        o2.on_submit(1, Micros::ZERO);
+        o2.on_register(ExecutorId(0), Micros::ZERO);
+        o2.on_fetch_complete(1, Micros(7));
+        o2.on_release(ExecutorId(0), Micros(8));
+        assert!(o2.violations().is_empty());
+    }
+
+    #[test]
+    fn kill_requeues_shadow_tasks_and_scrubs_serving() {
+        let mut o = Oracle::new(7);
+        o.on_submit(1, Micros::ZERO);
+        o.on_submit(2, Micros::ZERO);
+        o.on_register(ExecutorId(0), Micros::ZERO);
+        o.on_register(ExecutorId(1), Micros::ZERO);
+        o.observe_effect(
+            &Effect::Fetch(FetchPlan {
+                task_id: TaskId(2),
+                exec: ExecutorId(1),
+                file: FileId(3),
+                bytes: 10,
+                kind: AccessKind::HitGlobal,
+                peer: Some(ExecutorId(0)),
+                evicted: Vec::new(),
+            }),
+            Micros(5),
+        );
+        o.on_kill(ExecutorId(0), &[], Micros(6));
+        // The dead source no longer blocks anything; t2 still runs.
+        o.on_terminal(2, "completed", Micros(9));
+        o.on_terminal(1, "completed", Micros(10));
+        assert!(o.violations().is_empty(), "{:?}", o.violations());
+        assert!(o.non_terminal().is_empty());
+    }
+
+    #[test]
+    fn dump_names_seed_plan_and_trace() {
+        let mut o = Oracle::new(42);
+        o.on_submit(1, Micros::ZERO);
+        o.on_terminal(1, "completed", Micros(10));
+        o.on_terminal(1, "completed", Micros(20));
+        let dump = o.dump(&["#001 0.000ms delay-notify e0".to_string()]);
+        assert!(dump.contains("seed=42"));
+        assert!(dump.contains("delay-notify e0"));
+        assert!(dump.contains("submit t1"), "trace present: {dump}");
+        assert!(dump.contains("terminal state twice"));
+    }
+
+    #[test]
+    fn trace_is_a_bounded_ring() {
+        let mut o = Oracle::new(1);
+        for i in 0..(TRACE_CAP as u64 + 10) {
+            o.on_submit(i, Micros(i));
+        }
+        assert_eq!(o.trace.len(), TRACE_CAP);
+        assert!(o.trace.front().unwrap().contains("submit t10"));
+    }
+}

@@ -13,6 +13,10 @@
 //! * `validate-model [--pjrt]` — model-vs-simulator validation, with
 //!   `--pjrt` evaluating the model through the AOT JAX/Pallas artifact;
 //! * `artifacts-check` — verify the AOT artifacts load and execute;
+//! * `chaos [--seed N] [--events M] [--shards K] [--policy P] [--sweep N]
+//!   [--quick] [--self-test]` — seeded fault injection against the
+//!   shadow-state oracle (docs/CHAOS.md); non-zero exit on any oracle
+//!   violation, stall, or fault-free run;
 //! * `help` — usage.
 
 use crate::config::ExperimentConfig;
@@ -32,6 +36,9 @@ USAGE:
                                        one figure (same flags as figures)
   datadiff validate-model [--pjrt]     model vs simulator (Figure 2 core)
   datadiff artifacts-check             verify AOT artifacts (PJRT)
+  datadiff chaos [--seed N] [--events M] [--shards K] [--policy P]
+                 [--sweep N] [--quick] [--self-test]
+                                       seeded fault injection vs the oracle
   datadiff help
 
 Figures 4-10 presets: 4=first-available/GPFS, 5-8=good-cache-compute with
@@ -48,7 +55,18 @@ the coordinator K ways behind a router (task stream partitioned by
 dominant-file hash, executors assigned per shard, GPFS misses rewritten
 into cross-shard peer fetches — docs/SHARDING.md); K=1 (default) is
 bit-identical to the single coordinator, and sharded runs print the
-shard/* counter block after the summary.";
+shard/* counter block after the summary.
+
+chaos runs a seeded fault-injection schedule (dropped/delayed/reordered
+notifications, executors killed mid-fetch/mid-compute, stalled and partial
+transfers, shard partitions) through the coordinator while a shadow-state
+oracle checks exactly-once terminals, replica accounting, and that no
+dispatch or fetch touches a dead executor. --sweep N runs N consecutive
+seeds cycling through all 5 policies x shards 1 and 4; --quick shrinks
+each run to the CI smoke size; --self-test breaks an invariant on purpose
+and prints the seed + fault plan + trailing trace dump. Exit is non-zero
+if any run violates the oracle, stalls, or injects zero faults —
+reproduce any failure with `datadiff chaos --seed N` (docs/CHAOS.md).";
 
 /// Parsed command line.
 #[derive(Debug)]
@@ -80,6 +98,25 @@ pub enum Command {
     },
     /// Artifact smoke test.
     ArtifactsCheck,
+    /// Seeded chaos run(s) against the shadow-state oracle.
+    Chaos {
+        /// Base seed (`--sweep` runs seed, seed+1, …).
+        seed: u64,
+        /// Events per run (None = the chaos config's default).
+        events: Option<usize>,
+        /// Shard count (None = default; ignored under --sweep, which
+        /// pins its own K ∈ {1, 4} cycle).
+        shards: Option<usize>,
+        /// Dispatch policy (None = default; ignored under --sweep).
+        policy: Option<crate::coordinator::scheduler::DispatchPolicy>,
+        /// Sweep width: N consecutive seeds cycling through all five
+        /// policies × shards {1, 4}.
+        sweep: Option<usize>,
+        /// CI smoke size (fewer events, smaller fleet).
+        quick: bool,
+        /// Deliberately break an invariant and print the oracle dump.
+        self_test: bool,
+    },
     /// Print usage.
     Help,
 }
@@ -97,6 +134,7 @@ pub fn parse(args: &[String]) -> Result<Command> {
             let takes_value = matches!(
                 name,
                 "fig" | "config" | "view" | "scale" | "jobs" | "allocation" | "shards"
+                    | "seed" | "events" | "policy" | "sweep"
             );
             let value = if takes_value {
                 Some(
@@ -178,6 +216,42 @@ pub fn parse(args: &[String]) -> Result<Command> {
             pjrt: get("pjrt").is_some(),
         }),
         "artifacts-check" => Ok(Command::ArtifactsCheck),
+        "chaos" => {
+            let seed = match get("seed") {
+                Some(Some(s)) => s
+                    .parse()
+                    .map_err(|_| Error::Config(format!("bad --seed `{s}`")))?,
+                _ => 1,
+            };
+            let events = match get("events") {
+                Some(Some(s)) => Some(parse_positive(s, "events")?),
+                _ => None,
+            };
+            let shards = match get("shards") {
+                Some(Some(s)) => Some(parse_positive(s, "shards")?),
+                _ => None,
+            };
+            let policy = match get("policy") {
+                Some(Some(s)) => Some(
+                    crate::coordinator::scheduler::DispatchPolicy::parse(s)
+                        .ok_or_else(|| Error::Config(format!("bad --policy `{s}`")))?,
+                ),
+                _ => None,
+            };
+            let sweep = match get("sweep") {
+                Some(Some(s)) => Some(parse_positive(s, "sweep")?),
+                _ => None,
+            };
+            Ok(Command::Chaos {
+                seed,
+                events,
+                shards,
+                policy,
+                sweep,
+                quick: get("quick").is_some(),
+                self_test: get("self-test").is_some(),
+            })
+        }
         other => Err(Error::Config(format!("unknown command `{other}`"))),
     }
 }
@@ -207,6 +281,16 @@ fn reject_shards_flag<'a>(get: &impl Fn(&str) -> Option<Option<&'a str>>) -> Res
         ));
     }
     Ok(())
+}
+
+fn parse_positive(s: &str, flag: &str) -> Result<usize> {
+    let n: usize = s
+        .parse()
+        .map_err(|_| Error::Config(format!("bad --{flag} `{s}`")))?;
+    if n == 0 {
+        return Err(Error::Config(format!("--{flag} must be >= 1")));
+    }
+    Ok(n)
 }
 
 fn parse_jobs(v: Option<Option<&str>>) -> Result<Option<usize>> {
@@ -299,7 +383,99 @@ pub fn execute(cmd: Command) -> Result<i32> {
             );
             Ok(0)
         }
+        Command::Chaos {
+            seed,
+            events,
+            shards,
+            policy,
+            sweep,
+            quick,
+            self_test,
+        } => run_chaos_command(seed, events, shards, policy, sweep, quick, self_test),
     }
+}
+
+/// `datadiff chaos`: seeded fault schedules against the shadow-state
+/// oracle, one summary line per run. Exit 1 on any non-clean run (oracle
+/// violation, stall, or a schedule that injected zero faults).
+fn run_chaos_command(
+    seed: u64,
+    events: Option<usize>,
+    shards: Option<usize>,
+    policy: Option<crate::coordinator::scheduler::DispatchPolicy>,
+    sweep: Option<usize>,
+    quick: bool,
+    self_test: bool,
+) -> Result<i32> {
+    use crate::chaos::{self, ChaosConfig};
+    use crate::coordinator::scheduler::DispatchPolicy;
+    if self_test {
+        println!("{}", chaos::oracle_self_test());
+        println!("\noracle self-test OK: the broken invariant was caught and dumped");
+        return Ok(0);
+    }
+    let base = |s: u64| {
+        let mut c = if quick {
+            ChaosConfig::quick(s)
+        } else {
+            ChaosConfig::new(s)
+        };
+        if let Some(m) = events {
+            c.events = m;
+        }
+        c
+    };
+    let mut reports = Vec::new();
+    if let Some(n) = sweep {
+        // N consecutive seeds cycling through all 5 policies × K ∈ {1, 4},
+        // so any sweep of >= 10 seeds covers every combination.
+        let combos: Vec<(DispatchPolicy, usize)> = DispatchPolicy::ALL
+            .iter()
+            .flat_map(|&p| [(p, 1usize), (p, 4)])
+            .collect();
+        for i in 0..n as u64 {
+            let (p, k) = combos[i as usize % combos.len()];
+            let mut c = base(seed + i);
+            c.policy = p;
+            c.shards = k;
+            reports.push(chaos::run_chaos(&c));
+        }
+    } else {
+        let mut c = base(seed);
+        if let Some(k) = shards {
+            c.shards = k;
+        }
+        if let Some(p) = policy {
+            c.policy = p;
+        }
+        reports.push(chaos::run_chaos(&c));
+    }
+    let mut bad = 0usize;
+    for r in &reports {
+        println!("{}", r.summary_line());
+        if !r.clean() {
+            bad += 1;
+            if let Some(d) = &r.dump {
+                eprintln!("{d}");
+            } else if r.stalled {
+                eprintln!(
+                    "chaos: seed {} stalled before every event reached a terminal state",
+                    r.seed
+                );
+            } else {
+                eprintln!("chaos: seed {} injected zero faults (schedule bug)", r.seed);
+            }
+        }
+    }
+    if bad > 0 {
+        eprintln!("chaos: {bad}/{} run(s) NOT clean", reports.len());
+        return Ok(1);
+    }
+    println!(
+        "chaos: {} run(s) clean — reproduce any schedule with --seed N",
+        reports.len()
+    );
+    Ok(0)
 }
 
 /// Print the router's cross-shard accounting after a sharded run (the
@@ -317,6 +493,11 @@ fn print_shard_counters(shard: &crate::metrics::ShardCounters) {
         "  shard/cross_fetches_per_task {:>12.4}",
         shard.cross_fetches_per_task()
     );
+    println!(
+        "  shard/cross_release_deferrals {:>11}",
+        shard.cross_release_deferrals
+    );
+    println!("  shard/exec_failures          {:>12}", shard.exec_failures);
     for (i, t) in shard.per_shard.iter().enumerate() {
         println!(
             "  shard {i}: routed {:>8}  dispatched {:>8}  cross in/out {:>6}/{:<6}",
@@ -516,6 +697,57 @@ mod tests {
         ));
         assert!(parse(&args("figures --jobs 0")).is_err());
         assert!(parse(&args("figures --jobs many")).is_err());
+    }
+
+    #[test]
+    fn parses_chaos() {
+        use crate::coordinator::scheduler::DispatchPolicy;
+        match parse(&args("chaos --seed 9 --events 100 --shards 4 --policy mch --quick")).unwrap()
+        {
+            Command::Chaos {
+                seed,
+                events,
+                shards,
+                policy,
+                sweep,
+                quick,
+                self_test,
+            } => {
+                assert_eq!(seed, 9);
+                assert_eq!(events, Some(100));
+                assert_eq!(shards, Some(4));
+                assert_eq!(policy, Some(DispatchPolicy::MaxCacheHit));
+                assert_eq!(sweep, None);
+                assert!(quick);
+                assert!(!self_test);
+            }
+            other => panic!("{other:?}"),
+        }
+        // Defaults: seed 1, everything else inherited from ChaosConfig.
+        match parse(&args("chaos")).unwrap() {
+            Command::Chaos {
+                seed,
+                events,
+                shards,
+                policy,
+                sweep,
+                quick,
+                self_test,
+            } => {
+                assert_eq!(seed, 1);
+                assert!(events.is_none() && shards.is_none() && policy.is_none());
+                assert!(sweep.is_none() && !quick && !self_test);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(
+            parse(&args("chaos --sweep 32 --self-test")).unwrap(),
+            Command::Chaos { sweep: Some(32), self_test: true, .. }
+        ));
+        assert!(parse(&args("chaos --seed banana")).is_err());
+        assert!(parse(&args("chaos --events 0")).is_err());
+        assert!(parse(&args("chaos --sweep 0")).is_err());
+        assert!(parse(&args("chaos --policy banana")).is_err());
     }
 
     #[test]

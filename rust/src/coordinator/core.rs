@@ -171,8 +171,11 @@ pub enum Effect {
     /// via [`CoordinatorCore::on_node_registered`] after the driver's
     /// allocation latency).
     Allocate(usize),
-    /// Release these idle executors (the driver may defer an executor
-    /// that is still serving peer transfers and retry next tick).
+    /// Release these idle executors. The core itself withholds any
+    /// executor still serving peer transfers (its peer-serving refcount
+    /// is non-zero) and retries next tick, so the list only ever names
+    /// safe-to-release nodes; `CoordinatorCore::release_deferrals`
+    /// counts the withheld decisions.
     Release(Vec<ExecutorId>),
 }
 
@@ -189,6 +192,9 @@ struct InFlight {
     /// Resolution of the access currently in flight (recorded when the
     /// driver reports the transfer done).
     current_kind: AccessKind,
+    /// Peer executor sourcing the current transfer (global hits only);
+    /// holds one peer-serving reference until the fetch drains.
+    current_peer: Option<ExecutorId>,
     /// Arrival-rate interval (slowdown accounting, Fig 14).
     interval: u32,
 }
@@ -215,6 +221,12 @@ pub struct CoordinatorCore {
     /// a driver's seeding fully determines coordinator behaviour).
     rng: Pcg64,
     inflight: HashMap<u64, InFlight>,
+    /// Active peer transfers per source executor (keyed by raw id).
+    /// While an executor's refcount is non-zero it must not be released
+    /// — the §3.1 GridFTP source is mid-session.
+    peer_serving: HashMap<u32, u32>,
+    /// Release decisions withheld because the executor was serving.
+    release_deferrals: u64,
     /// Arrival-interval of queued tasks (only non-zero intervals are
     /// stored; consumed at dispatch).
     interval_of: HashMap<u64, u32>,
@@ -239,6 +251,8 @@ impl CoordinatorCore {
             rng,
             rec: Recorder::new(),
             inflight: HashMap::new(),
+            peer_serving: HashMap::new(),
+            release_deferrals: 0,
             interval_of: HashMap::new(),
             dispatch_log: Vec::new(),
             config,
@@ -308,16 +322,30 @@ impl CoordinatorCore {
     }
 
     /// Release an idle executor: scrubs its cache, index entries and
-    /// pending candidates, then deregisters it. The driver must only call
-    /// this for executors named in [`Effect::Release`] (and may defer
-    /// ones still serving peer transfers).
+    /// pending candidates, then deregisters it. The driver must only
+    /// call this for executors named in [`Effect::Release`] — the core
+    /// has already withheld any executor still serving peer transfers.
     pub fn release_node(&mut self, id: ExecutorId) {
         if self.caching() {
             self.index.deregister_executor(id);
             self.pending.on_deregister(id);
             self.caches.remove(&id);
         }
+        self.peer_serving.remove(&id.0);
         self.reg.deregister(id);
+    }
+
+    /// Drop one peer-serving reference on `peer`. Tolerates a missing
+    /// entry: a failed source's refcounts are dropped wholesale by
+    /// [`CoordinatorCore::on_executor_failed`] while its destinations'
+    /// fetches are still draining.
+    fn peer_release(&mut self, peer: ExecutorId) {
+        if let Some(n) = self.peer_serving.get_mut(&peer.0) {
+            *n -= 1;
+            if *n == 0 {
+                self.peer_serving.remove(&peer.0);
+            }
+        }
     }
 
     // ---- dispatch events ------------------------------------------------
@@ -406,6 +434,7 @@ impl CoordinatorCore {
             remaining,
             current_file: first,
             current_kind: AccessKind::Miss,
+            current_peer: None,
             interval,
         };
         let plan = self.resolve(&mut inf, first);
@@ -441,6 +470,15 @@ impl CoordinatorCore {
         };
         inf.current_file = file;
         inf.current_kind = kind;
+        // A chosen peer is mid-serve until the driver reports the fetch
+        // done; the refcount blocks its release for that window.
+        if let Some(prev) = inf.current_peer.take() {
+            self.peer_release(prev);
+        }
+        if let Some(p) = peer {
+            *self.peer_serving.entry(p.0).or_insert(0) += 1;
+        }
+        inf.current_peer = peer;
         FetchPlan {
             task_id: inf.task.id,
             exec,
@@ -468,6 +506,9 @@ impl CoordinatorCore {
             .inflight
             .remove(&task_id.0)
             .expect("fetch done for unknown task");
+        if let Some(peer) = inf.current_peer.take() {
+            self.peer_release(peer);
+        }
         let (kind, bytes) = match observed {
             Some(kb) => kb,
             None => (
@@ -522,16 +563,101 @@ impl CoordinatorCore {
     /// queued — otherwise a permanently-failed task would idle its
     /// executor until the backlog drained.
     pub fn on_task_failed(&mut self, task_id: TaskId, now: Micros) -> Vec<Effect> {
-        let inf = self
+        let mut inf = self
             .inflight
             .remove(&task_id.0)
             .expect("failure for unknown task");
+        if let Some(peer) = inf.current_peer.take() {
+            self.peer_release(peer);
+        }
         self.reg.finish_task(inf.exec, now);
         if !self.queue.is_empty() && self.reserve(inf.exec) {
             vec![Effect::Notify(inf.exec)]
         } else {
             Vec::new()
         }
+    }
+
+    /// An executor crashed (chaos fault or live worker death), possibly
+    /// with tasks mid-fetch or mid-compute. Unlike
+    /// [`CoordinatorCore::release_node`] — which refuses busy executors
+    /// — this scrubs the dead node outright: its cache model, location-
+    /// index replicas and pending candidates are dropped (replica
+    /// accounting stays exact), and every task in flight on it is
+    /// re-queued per the §4.2 replay policy so its data re-diffuses from
+    /// surviving replicas. Returns the re-queued task ids (the shard
+    /// router scrubs cross-shard bookkeeping with them) plus `Notify`
+    /// effects for the re-queued backlog. A no-op for executors already
+    /// released or failed.
+    pub fn on_executor_failed(
+        &mut self,
+        exec: ExecutorId,
+        now: Micros,
+    ) -> (Vec<TaskId>, Vec<Effect>) {
+        if !self.reg.contains(exec) {
+            return (Vec::new(), Vec::new());
+        }
+        // Victims: every task in flight on the dead executor, in task-id
+        // order (HashMap iteration is nondeterministic; the replay order
+        // must be seed-reproducible).
+        let mut victims: Vec<u64> = self
+            .inflight
+            .iter()
+            .filter(|(_, inf)| inf.exec == exec)
+            .map(|(&id, _)| id)
+            .collect();
+        victims.sort_unstable();
+        let mut tasks = Vec::with_capacity(victims.len());
+        for id in &victims {
+            let mut inf = self.inflight.remove(id).expect("collected above");
+            if let Some(peer) = inf.current_peer.take() {
+                self.peer_release(peer);
+            }
+            tasks.push((inf.task, inf.interval));
+        }
+        // Transfers *sourced from* the dead executor can no longer be
+        // served by it; the drivers fall back to persistent storage
+        // (§3.1 peer-copy race) and report the observed kind, so the
+        // serving references die with the source.
+        for inf in self.inflight.values_mut() {
+            if inf.current_peer == Some(exec) {
+                inf.current_peer = None;
+            }
+        }
+        self.peer_serving.remove(&exec.0);
+        // Scrub replicas, pending candidates and the cache model before
+        // re-queuing, so the replayed tasks' candidate sets never name
+        // the dead node.
+        if self.caching() {
+            self.index.deregister_executor(exec);
+            self.pending.on_deregister(exec);
+            self.caches.remove(&exec);
+        }
+        self.reg.fail(exec);
+        crate::debug!(
+            "executor {exec} failed at {now:?}: requeueing {} task(s)",
+            tasks.len()
+        );
+        let mut requeued = Vec::with_capacity(tasks.len());
+        for (task, interval) in tasks {
+            requeued.push(task.id);
+            if interval != 0 {
+                self.interval_of.insert(task.id.0, interval);
+            }
+            let qref = self.queue.push_back(task);
+            if self.caching() {
+                self.pending.on_push(&self.queue, qref, &self.index);
+            }
+        }
+        // One notification per re-queued task, mirroring on_arrival.
+        let mut effects = Vec::new();
+        for _ in 0..requeued.len() {
+            match self.notify_head() {
+                Some(e) => effects.push(Effect::Notify(e)),
+                None => break,
+            }
+        }
+        (requeued, effects)
     }
 
     /// Periodic (1 Hz in the sim, per-completion in the live engine)
@@ -552,7 +678,18 @@ impl CoordinatorCore {
             effects.push(Effect::Allocate(action.allocate));
         }
         if !action.release.is_empty() {
-            effects.push(Effect::Release(action.release));
+            // Enforce the Release contract: an executor still serving
+            // peer transfers is withheld this tick. Its idle timestamp
+            // is untouched, so the provisioner re-lists it once the
+            // transfers drain.
+            let (release, deferred): (Vec<_>, Vec<_>) = action
+                .release
+                .into_iter()
+                .partition(|e| !self.peer_serving.contains_key(&e.0));
+            self.release_deferrals += deferred.len() as u64;
+            if !release.is_empty() {
+                effects.push(Effect::Release(release));
+            }
         }
         effects
     }
@@ -591,6 +728,88 @@ impl CoordinatorCore {
     /// [`resolve_access`]: crate::coordinator::resolve_access
     pub fn probe_holder(&self, file: FileId) -> Option<ExecutorId> {
         self.index.holders(file).and_then(|h| h.iter().next())
+    }
+
+    /// Holder count for `file` (read-only, O(1) cached popcount). With
+    /// [`CoordinatorCore::probe_holder_nth`] this lets the shard router
+    /// rotate cross-shard source selection over *all* of a file's
+    /// foreign holders instead of always drafting the first.
+    pub fn probe_holder_count(&self, file: FileId) -> usize {
+        self.index.holders(file).map_or(0, |h| h.len())
+    }
+
+    /// The `n`-th executor (ascending id order) caching `file`, if any.
+    /// Read-only like [`CoordinatorCore::probe_holder`].
+    pub fn probe_holder_nth(&self, file: FileId, n: usize) -> Option<ExecutorId> {
+        self.index.holders(file).and_then(|h| h.iter().nth(n))
+    }
+
+    /// Release decisions withheld because the named executor was still
+    /// serving peer transfers.
+    pub fn release_deferrals(&self) -> u64 {
+        self.release_deferrals
+    }
+
+    /// Active peer transfers currently sourced from `exec` — the
+    /// Release-deferral input, exposed for drivers, tests and the chaos
+    /// oracle.
+    pub fn peer_serving_on(&self, exec: ExecutorId) -> u32 {
+        self.peer_serving.get(&exec.0).copied().unwrap_or(0)
+    }
+
+    /// Cross-check coordinator state against itself — the chaos
+    /// oracle's replica-accounting invariant. Verifies the registry's
+    /// slot sums, both location-index maps, cache contents against the
+    /// index, in-flight tasks against registered executors, and the
+    /// peer-serving refcounts against the in-flight plans. Read-only;
+    /// `Err` describes the first violation found.
+    #[doc(hidden)]
+    pub fn check_integrity(&self) -> Result<(), String> {
+        self.reg.check_consistent()?;
+        self.index.check_consistent()?;
+        if self.caching() {
+            if self.index.executors() != self.caches.len() {
+                return Err(format!(
+                    "index tracks {} executor(s), {} cache(s) exist",
+                    self.index.executors(),
+                    self.caches.len()
+                ));
+            }
+            for (&e, cache) in &self.caches {
+                let indexed = self.index.cached_at(e);
+                let indexed_len = indexed.map_or(0, |s| s.len());
+                if cache.len() != indexed_len {
+                    return Err(format!(
+                        "{e}: cache holds {} object(s), index says {indexed_len}",
+                        cache.len()
+                    ));
+                }
+                for f in cache.files() {
+                    if !indexed.is_some_and(|s| s.contains(&f)) {
+                        return Err(format!("{e} caches {f} but the index disagrees"));
+                    }
+                }
+            }
+        }
+        let mut serving: HashMap<u32, u32> = HashMap::new();
+        for inf in self.inflight.values() {
+            if !self.reg.contains(inf.exec) {
+                return Err(format!(
+                    "task {} in flight on unregistered executor {}",
+                    inf.task.id, inf.exec
+                ));
+            }
+            if let Some(p) = inf.current_peer {
+                *serving.entry(p.0).or_insert(0) += 1;
+            }
+        }
+        if serving != self.peer_serving {
+            return Err(format!(
+                "peer-serving refcounts {:?} disagree with in-flight plans {:?}",
+                self.peer_serving, serving
+            ));
+        }
+        Ok(())
     }
 
     /// Nodes requested via [`Effect::Allocate`] that have not yet come
@@ -911,5 +1130,104 @@ mod tests {
             let _ = c.on_compute_done(TaskId(i), Micros::ZERO, Micros::ZERO);
         }
         assert_eq!(c.rec.access_counts(), (0, 0, 2));
+    }
+
+    #[test]
+    fn release_defers_while_serving_peer_transfer() {
+        // e0 caches file 7 and goes idle; a task on e1 fetches the file
+        // peer-to-peer. While that transfer is in flight the
+        // provisioner's release of the idle source must be withheld.
+        let mut cfg = config(DispatchPolicy::MaxComputeUtil);
+        cfg.provisioner.idle_release_s = 1.0;
+        let mut c = CoordinatorCore::new(cfg, Pcg64::seeded(1));
+        let (e0, _) = c.register_node(Micros::ZERO);
+        let (e1, _) = c.register_node(Micros::ZERO);
+        let _ = c.on_pickup(e0, Micros::ZERO);
+        let _ = c.on_pickup(e1, Micros::ZERO);
+        // Seed file 7 into e0's cache; keep e0 busy so the second
+        // reader lands on e1.
+        let _ = c.on_arrival(task(0, 7), 0, 0.0, Micros::ZERO);
+        let _ = c.on_pickup(e0, Micros::ZERO);
+        let _ = c.on_fetch_done(TaskId(0), Micros::ZERO, None);
+        let _ = c.on_arrival(task(1, 7), 0, 0.0, Micros::ZERO);
+        let effs = c.on_pickup(e1, Micros::ZERO);
+        match effs.as_slice() {
+            [Effect::Fetch(p)] => {
+                assert_eq!(p.kind, AccessKind::HitGlobal);
+                assert_eq!(p.peer, Some(e0));
+            }
+            other => panic!("expected a peer fetch, got {other:?}"),
+        }
+        assert_eq!(c.peer_serving_on(e0), 1);
+        // e0 finishes its own task and goes idle well past the cutoff…
+        let _ = c.on_compute_done(TaskId(0), Micros::from_millis(5), Micros::from_millis(5));
+        // …but the tick must withhold its release: e1's fetch is still
+        // sourced from it.
+        let effs = c.on_tick(Micros::from_secs(10));
+        assert!(
+            !effs
+                .iter()
+                .any(|e| matches!(e, Effect::Release(v) if v.contains(&e0))),
+            "serving peer must not be released: {effs:?}"
+        );
+        assert_eq!(c.release_deferrals(), 1);
+        c.check_integrity().unwrap();
+        // Transfer drains → the next tick releases the idle source.
+        let _ = c.on_fetch_done(TaskId(1), Micros::from_secs(10), None);
+        assert_eq!(c.peer_serving_on(e0), 0);
+        let effs = c.on_tick(Micros::from_secs(20));
+        assert!(
+            effs.iter()
+                .any(|e| matches!(e, Effect::Release(v) if v.contains(&e0))),
+            "drained source must be released: {effs:?}"
+        );
+    }
+
+    #[test]
+    fn executor_failure_requeues_and_scrubs() {
+        let mut c = core(DispatchPolicy::FirstCacheAvailable);
+        let (e0, _) = c.register_node(Micros::ZERO);
+        let (e1, _) = c.register_node(Micros::ZERO);
+        let _ = c.on_pickup(e0, Micros::ZERO);
+        let _ = c.on_pickup(e1, Micros::ZERO);
+        // Warm e0's cache with file 7, then kill it mid-fetch of task 1
+        // (a second reader of file 7: notify prefers the holder, so the
+        // dispatch deterministically lands on e0).
+        let _ = c.on_arrival(task(0, 7), 0, 0.0, Micros::ZERO);
+        let _ = c.on_pickup(e0, Micros::ZERO);
+        let _ = c.on_fetch_done(TaskId(0), Micros::ZERO, None);
+        let _ = c.on_compute_done(TaskId(0), Micros::ZERO, Micros::ZERO);
+        let effs = c.on_arrival(task(1, 7), 0, 0.0, Micros::ZERO);
+        assert!(matches!(effs.as_slice(), [Effect::Notify(e)] if *e == e0));
+        let _ = c.on_pickup(e0, Micros::ZERO);
+        assert_eq!(c.dispatch_order(), &[TaskId(0), TaskId(1)]);
+
+        let (requeued, effs) = c.on_executor_failed(e0, Micros::from_millis(1));
+        assert_eq!(requeued, vec![TaskId(1)]);
+        assert_eq!(c.node_count(), 1);
+        // Replica accounting: e0's cached copy of file 7 is gone.
+        assert_eq!(c.probe_holder(FileId(7)), None);
+        // The re-queued task notifies the surviving executor.
+        assert!(matches!(effs.as_slice(), [Effect::Notify(e)] if *e == e1));
+        c.check_integrity().unwrap();
+
+        // Replay: e1 picks the task up and runs it to completion.
+        let effs = c.on_pickup(e1, Micros::from_millis(1));
+        match effs.as_slice() {
+            [Effect::Fetch(p)] => {
+                assert_eq!(p.task_id, TaskId(1));
+                assert_eq!(p.kind, AccessKind::Miss, "no surviving replica");
+            }
+            other => panic!("expected a re-dispatch fetch, got {other:?}"),
+        }
+        let _ = c.on_fetch_done(TaskId(1), Micros::from_millis(2), None);
+        let _ = c.on_compute_done(TaskId(1), Micros::from_millis(7), Micros::from_millis(7));
+        assert_eq!(c.rec.tasks_done(), 2);
+        c.check_integrity().unwrap();
+
+        // Events aimed at the dead executor are no-ops.
+        assert!(c.on_pickup(e0, Micros::from_millis(8)).is_empty());
+        let (r, e) = c.on_executor_failed(e0, Micros::from_millis(8));
+        assert!(r.is_empty() && e.is_empty());
     }
 }

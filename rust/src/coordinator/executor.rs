@@ -98,6 +98,21 @@ impl ExecutorRegistry {
         entry
     }
 
+    /// Forcibly remove a **failed** executor, busy or not — the crash
+    /// path [`deregister`](ExecutorRegistry::deregister) refuses. Slots
+    /// the dead node was running or holding pending vanish with it (the
+    /// caller requeues the affected tasks per the §4.2 replay policy);
+    /// aggregate slot counters are corrected accordingly. Returns the
+    /// removed entry for accounting.
+    pub fn fail(&mut self, id: ExecutorId) -> ExecutorEntry {
+        let entry = self.entries.remove(&id).expect("unknown executor");
+        self.free.remove(&id);
+        self.total_slots -= entry.slots as u64;
+        self.busy_slots -= entry.busy_slots as u64;
+        self.recycled_ids.push(id.0);
+        entry
+    }
+
     /// Look up an executor.
     pub fn get(&self, id: ExecutorId) -> Option<&ExecutorEntry> {
         self.entries.get(&id)
@@ -315,6 +330,30 @@ mod tests {
         let e = reg.register(1, Micros::ZERO);
         reg.start_task(e, Micros::ZERO);
         reg.deregister(e);
+    }
+
+    #[test]
+    fn fail_removes_busy_executor_and_fixes_slot_sums() {
+        let mut reg = ExecutorRegistry::new();
+        let a = reg.register(2, Micros::ZERO);
+        let b = reg.register(2, Micros::ZERO);
+        reg.start_task(a, Micros::ZERO);
+        reg.mark_pending(a);
+        assert_eq!(reg.total_slots(), 4);
+        assert_eq!(reg.busy_slots(), 1);
+        // deregister() would panic here; fail() force-removes.
+        let entry = reg.fail(a);
+        assert_eq!(entry.busy_slots, 1);
+        assert_eq!(entry.pending_slots, 1);
+        assert!(!reg.contains(a));
+        assert_eq!(reg.total_slots(), 2);
+        assert_eq!(reg.busy_slots(), 0);
+        assert!(reg.contains(b));
+        reg.check_consistent().unwrap();
+        // The dead id is recycled like a released one.
+        let c = reg.register(1, Micros::ZERO);
+        assert_eq!(c, a);
+        reg.check_consistent().unwrap();
     }
 
     #[test]

@@ -45,10 +45,13 @@
 //! closes the gap at the effect boundary:
 //!
 //! 1. a shard resolves a fetch as a persistent-store **`Miss`**;
-//! 2. the router probes the *other* shards' location indexes through the
-//!    read-only [`CoordinatorCore::probe_holder`] seam (ascending shard
-//!    order, first holder in ascending executor-id order — fully
-//!    deterministic, no PRNG);
+//! 2. the router probes the *other* shards' location indexes through
+//!    the read-only `CoordinatorCore::probe_holder_count`/
+//!    [`probe_holder_nth`](CoordinatorCore::probe_holder_nth) seams and
+//!    **rotates** a cursor over the full foreign-holder list (ascending
+//!    shard order, ascending executor-id order within a shard), so a
+//!    hot file's cross-shard reads spread over all of its sources —
+//!    fully deterministic, no PRNG;
 //! 3. on a hit it rewrites the plan to a **remote-peer fetch**
 //!    (`kind = HitGlobal`, `peer =` the foreign holder's global id) and
 //!    remembers the task;
@@ -108,9 +111,18 @@ pub struct ShardedCoordinator {
     /// completion/failure. Not maintained at K = 1.
     task_shard: HashMap<u64, usize>,
     /// Tasks whose *current* fetch was rewritten into a cross-shard
-    /// peer transfer (task id → bytes), so the completion reports back
-    /// as a global hit.
-    cross_inflight: HashMap<u64, u64>,
+    /// peer transfer (task id → (bytes, global source id)), so the
+    /// completion reports back as a global hit and the source's serving
+    /// refcount drains.
+    cross_inflight: HashMap<u64, (u64, ExecutorId)>,
+    /// Active cross-shard transfers per *source* executor (global id).
+    /// The source's own shard cannot see this serving window — the plan
+    /// lives on the destination shard — so the router filters its
+    /// `Release` effects with it.
+    cross_serving: HashMap<u32, u32>,
+    /// Rotation cursor for cross-shard source balancing: consecutive
+    /// rewrites of the same hot file draw successive foreign holders.
+    probe_cursor: u64,
     /// Round-robin cursor for initial-fleet registration.
     next_register: usize,
     /// Router-level tallies (events fanned, cross-shard fetches,
@@ -158,6 +170,8 @@ impl ShardedCoordinator {
             next_global: 0,
             task_shard: HashMap::new(),
             cross_inflight: HashMap::new(),
+            cross_serving: HashMap::new(),
+            probe_cursor: 0,
             next_register: 0,
             counters: ShardCounters::new(k),
             cores,
@@ -263,9 +277,12 @@ impl ShardedCoordinator {
                 plan.peer = plan.peer.map(|p| self.l2g(shard, p));
                 if plan.kind == AccessKind::Miss {
                     if let Some((src, holder)) = self.probe_foreign(shard, plan.file) {
+                        let peer = self.l2g(src, holder);
                         plan.kind = AccessKind::HitGlobal;
-                        plan.peer = Some(self.l2g(src, holder));
-                        self.cross_inflight.insert(plan.task_id.0, plan.bytes);
+                        plan.peer = Some(peer);
+                        self.cross_inflight
+                            .insert(plan.task_id.0, (plan.bytes, peer));
+                        *self.cross_serving.entry(peer.0).or_insert(0) += 1;
                         self.counters.cross_fetches += 1;
                         self.counters.cross_bytes += plan.bytes;
                         self.counters.per_shard[shard].cross_in += 1;
@@ -284,26 +301,78 @@ impl ShardedCoordinator {
                 compute,
             },
             Effect::Allocate(n) => Effect::Allocate(n),
-            Effect::Release(execs) => Effect::Release(
-                execs
-                    .into_iter()
-                    .map(|e| self.l2g(shard, e))
-                    .collect(),
-            ),
+            Effect::Release(execs) => {
+                // The owning core already withheld executors serving
+                // *its own* peer transfers; the router additionally
+                // withholds sources of cross-shard transfers, which the
+                // owning shard cannot see. Withheld executors stay
+                // idle-listed and are retried next tick.
+                let mut out = Vec::with_capacity(execs.len());
+                for e in execs {
+                    let g = self.l2g(shard, e);
+                    if self.cross_serving.contains_key(&g.0) {
+                        self.counters.cross_release_deferrals += 1;
+                    } else {
+                        out.push(g);
+                    }
+                }
+                Effect::Release(out)
+            }
         }
     }
 
-    /// Deterministic foreign-holder probe: ascending shard order
-    /// (skipping the owner), first holder per shard in ascending
-    /// executor-id order. Read-only on every core.
-    fn probe_foreign(&self, owner: usize, file: FileId) -> Option<(usize, ExecutorId)> {
+    /// Foreign-holder probe with **source balancing**: the candidate
+    /// list is every foreign holder of `file` (concatenated in
+    /// ascending shard order, ascending executor-id order within a
+    /// shard), and a rotating cursor picks among them, so consecutive
+    /// cross-shard fetches of a hot file spread load over all of its
+    /// sources instead of always drafting the first. Deterministic (no
+    /// PRNG) and read-only on every core; the cursor advances only when
+    /// a source is drafted.
+    fn probe_foreign(&mut self, owner: usize, file: FileId) -> Option<(usize, ExecutorId)> {
         if !self.cores[owner].caching_enabled() {
             // first-available never caches anywhere: nothing to find.
             return None;
         }
-        (0..self.cores.len())
-            .filter(|&s| s != owner)
-            .find_map(|s| self.cores[s].probe_holder(file).map(|h| (s, h)))
+        let k = self.cores.len();
+        let mut counts = vec![0usize; k];
+        let mut total = 0usize;
+        for (s, count) in counts.iter_mut().enumerate() {
+            if s != owner {
+                *count = self.cores[s].probe_holder_count(file);
+                total += *count;
+            }
+        }
+        if total == 0 {
+            return None;
+        }
+        let mut pick = (self.probe_cursor % total as u64) as usize;
+        self.probe_cursor = self.probe_cursor.wrapping_add(1);
+        for (s, &count) in counts.iter().enumerate() {
+            if pick < count {
+                let holder = self.cores[s]
+                    .probe_holder_nth(file, pick)
+                    .expect("holder counted above");
+                return Some((s, holder));
+            }
+            pick -= count;
+        }
+        unreachable!("cursor reduced below total")
+    }
+
+    /// Drain one task's cross-shard bookkeeping: drops the in-flight
+    /// entry and one serving reference on its source. Tolerates a
+    /// source whose refcounts were already dropped wholesale by
+    /// [`ShardedCoordinator::on_executor_failed`].
+    fn cross_done(&mut self, task_id: TaskId) -> Option<u64> {
+        let (bytes, peer) = self.cross_inflight.remove(&task_id.0)?;
+        if let Some(n) = self.cross_serving.get_mut(&peer.0) {
+            *n -= 1;
+            if *n == 0 {
+                self.cross_serving.remove(&peer.0);
+            }
+        }
+        Some(bytes)
     }
 
     // ---- node lifecycle -------------------------------------------------
@@ -406,7 +475,7 @@ impl ShardedCoordinator {
     ) -> Vec<Effect> {
         self.counters.router_events += 1;
         let shard = self.shard_of_task(task_id);
-        let observed = match (self.cross_inflight.remove(&task_id.0), observed) {
+        let observed = match (self.cross_done(task_id), observed) {
             (Some(bytes), None) => Some((AccessKind::HitGlobal, bytes)),
             (_, explicit) => explicit,
         };
@@ -435,8 +504,36 @@ impl ShardedCoordinator {
         self.counters.router_events += 1;
         let shard = self.shard_of_task(task_id);
         self.task_shard.remove(&task_id.0);
-        self.cross_inflight.remove(&task_id.0);
+        self.cross_done(task_id);
         let effects = self.cores[shard].on_task_failed(task_id, now);
+        self.rewrite(shard, effects)
+    }
+
+    /// An executor crashed. Routed to its owning shard's
+    /// [`CoordinatorCore::on_executor_failed`] (scrub + §4.2 requeue);
+    /// the router additionally drops the dead node's id bindings, the
+    /// cross-shard bookkeeping of every re-queued task, and — since a
+    /// dead source can no longer serve — its whole serving refcount
+    /// (destination drivers fall back to persistent storage and report
+    /// the observed access). Unknown ids are no-ops.
+    pub fn on_executor_failed(&mut self, exec: ExecutorId, now: Micros) -> Vec<Effect> {
+        self.counters.router_events += 1;
+        let Some((shard, local)) = self.g2l(exec) else {
+            return Vec::new();
+        };
+        self.counters.exec_failures += 1;
+        self.cross_serving.remove(&exec.0);
+        let (requeued, effects) = self.cores[shard].on_executor_failed(local, now);
+        for t in &requeued {
+            // Requeued tasks stay routed to the same shard (their
+            // task_shard entry survives); only the dead fetch's
+            // cross-shard leg is scrubbed.
+            self.cross_done(*t);
+        }
+        if self.cores.len() > 1 {
+            self.to_local.remove(&exec.0);
+            self.to_global[shard].remove(&local.0);
+        }
         self.rewrite(shard, effects)
     }
 
@@ -484,6 +581,40 @@ impl ShardedCoordinator {
     /// Registered executors across shards.
     pub fn node_count(&self) -> usize {
         self.cores.iter().map(|c| c.node_count()).sum()
+    }
+
+    /// Release decisions withheld across all shards (core-level
+    /// peer-serving deferrals; the router's own cross-shard deferrals
+    /// are in [`ShardCounters::cross_release_deferrals`]).
+    pub fn release_deferrals(&self) -> u64 {
+        self.cores.iter().map(|c| c.release_deferrals()).sum()
+    }
+
+    /// Cross-check every shard's coordinator state plus the router's
+    /// own bookkeeping — the chaos oracle's replica-accounting
+    /// invariant. Read-only; `Err` names the offending shard.
+    #[doc(hidden)]
+    pub fn check_integrity(&self) -> Result<(), String> {
+        for (s, core) in self.cores.iter().enumerate() {
+            core.check_integrity().map_err(|e| format!("shard {s}: {e}"))?;
+        }
+        let mut serving: HashMap<u32, u32> = HashMap::new();
+        for &(_, peer) in self.cross_inflight.values() {
+            *serving.entry(peer.0).or_insert(0) += 1;
+        }
+        // A failed source's refcounts are dropped wholesale while its
+        // destinations' fetches drain, so live entries may undercount
+        // the in-flight plans — but never the reverse, and never for a
+        // registered source.
+        for (&e, &n) in &self.cross_serving {
+            let actual = serving.get(&e).copied().unwrap_or(0);
+            if n > actual {
+                return Err(format!(
+                    "cross-serving refcount {n} on e{e} exceeds {actual} in-flight plan(s)"
+                ));
+            }
+        }
+        Ok(())
     }
 
     // ---- end-of-run reporting -------------------------------------------
@@ -776,6 +907,188 @@ mod tests {
         assert_eq!(r.counters().cross_fetches, 0, "fa caches nothing anywhere");
         let rec = r.take_merged_recorder();
         assert_eq!(rec.access_counts(), (0, 0, 6));
+    }
+
+    /// Drive `task(id, [a, b])` (dominant `a`, foreign-held `b`) to the
+    /// point where its cross-shard fetch of `b` is in flight; returns
+    /// the (destination, source) global executor ids.
+    fn start_cross_fetch(
+        r: &mut ShardedCoordinator,
+        id: u64,
+        a: u32,
+        b: u32,
+    ) -> (ExecutorId, ExecutorId) {
+        let effs = r.on_arrival(task(id, &[a, b]), 0, 0.0, Micros::ZERO);
+        let exec = match effs.as_slice() {
+            [Effect::Notify(e)] => *e,
+            other => panic!("expected a notify, got {other:?}"),
+        };
+        let effs = r.on_pickup(exec, Micros::ZERO);
+        match effs.as_slice() {
+            [Effect::Fetch(p)] if p.file == FileId(a) => {}
+            other => panic!("expected the dominant-file fetch, got {other:?}"),
+        }
+        let effs = r.on_fetch_done(TaskId(id), Micros::ZERO, None);
+        match effs.as_slice() {
+            [Effect::Fetch(p)] => {
+                assert_eq!(p.file, FileId(b));
+                assert_eq!(p.kind, AccessKind::HitGlobal, "rewritten to peer");
+                (p.exec, p.peer.expect("cross-shard plan names its source"))
+            }
+            other => panic!("expected the cross fetch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cross_shard_sources_rotate_over_foreign_holders() {
+        let mut r = router(DispatchPolicy::FirstCacheAvailable, 3);
+        for _ in 0..6 {
+            let (_, effs) = r.register_node(Micros::ZERO);
+            r.drain_effects(effs, Micros::ZERO);
+        }
+        let a = 0u32;
+        let sa = r.shard_of_file(FileId(a));
+        let b = (1..1_000u32)
+            .find(|&f| r.shard_of_file(FileId(f)) != sa)
+            .expect("hash spreads over shards");
+        let sb = r.shard_of_file(FileId(b));
+        let c = (1..1_000u32)
+            .find(|&f| {
+                let s = r.shard_of_file(FileId(f));
+                s != sa && s != sb
+            })
+            .expect("all three shards are reachable");
+        let sc = r.shard_of_file(FileId(c));
+        // Seed b into shard B, then replicate it into shard C via a
+        // cross-shard read (a [c, b] task homes in C and admits b
+        // there), so b has foreign holders on two shards.
+        let effs = r.on_arrival(task(0, &[b]), 0, 0.0, Micros::ZERO);
+        r.drain_effects(effs, Micros::ZERO);
+        let effs = r.on_arrival(task(1, &[c, b]), 0, 0.0, Micros::ZERO);
+        r.drain_effects(effs, Micros::ZERO);
+        assert!(r.core(sb).probe_holder(FileId(b)).is_some());
+        assert!(r.core(sc).probe_holder(FileId(b)).is_some());
+        // Two readers homed in shard A fetch b concurrently: the
+        // rotating cursor must draft *different* sources for them.
+        let a2 = (1..1_000u32)
+            .find(|&f| r.shard_of_file(FileId(f)) == sa)
+            .expect("a second shard-A file exists");
+        let (_, p1) = start_cross_fetch(&mut r, 2, a, b);
+        let (_, p2) = start_cross_fetch(&mut r, 3, a2, b);
+        let s1 = r.shard_of_exec(p1).expect("source is registered");
+        let s2 = r.shard_of_exec(p2).expect("source is registered");
+        assert_ne!(s1, s2, "consecutive cross fetches must rotate sources");
+        assert!([sb, sc].contains(&s1) && [sb, sc].contains(&s2));
+        // Both foreign shards show up in the shard/cross_* counters.
+        assert!(r.counters().per_shard[sb].cross_out >= 1);
+        assert!(r.counters().per_shard[sc].cross_out >= 1);
+        assert_eq!(r.counters().cross_fetches, 3);
+        r.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn cross_shard_source_release_is_deferred_while_serving() {
+        let mut cfg = config(DispatchPolicy::FirstCacheAvailable);
+        cfg.provisioner.idle_release_s = 0.5;
+        let mut r = ShardedCoordinator::new(cfg, 2, Pcg64::seeded(3));
+        for _ in 0..4 {
+            let (_, effs) = r.register_node(Micros::ZERO);
+            r.drain_effects(effs, Micros::ZERO);
+        }
+        let (a, b) = files_on_distinct_shards(&r);
+        let sb = r.shard_of_file(FileId(b));
+        let effs = r.on_arrival(task(0, &[b]), 0, 0.0, Micros::ZERO);
+        r.drain_effects(effs, Micros::ZERO);
+        let (_, src) = start_cross_fetch(&mut r, 1, a, b);
+        assert_eq!(r.shard_of_exec(src), Some(sb));
+        // The source's own shard lists it idle, but the router must
+        // withhold its release while the cross-shard transfer is in
+        // flight — the owning shard cannot see that serving window.
+        let effs = r.on_tick(Micros::from_secs(10));
+        assert!(
+            !effs
+                .iter()
+                .any(|e| matches!(e, Effect::Release(v) if v.contains(&src))),
+            "serving source must not be released: {effs:?}"
+        );
+        assert!(r.counters().cross_release_deferrals >= 1);
+        r.check_integrity().unwrap();
+        // Transfer drains → the next tick releases the idle source.
+        let effs = r.on_fetch_done(TaskId(1), Micros::from_secs(10), None);
+        assert!(matches!(effs.as_slice(), [Effect::Compute { .. }]));
+        let _ = r.on_compute_done(TaskId(1), Micros::from_secs(10), Micros::from_secs(10));
+        let effs = r.on_tick(Micros::from_secs(20));
+        assert!(
+            effs.iter()
+                .any(|e| matches!(e, Effect::Release(v) if v.contains(&src))),
+            "drained source must be released: {effs:?}"
+        );
+    }
+
+    #[test]
+    fn destination_failure_requeues_and_scrubs_cross_state() {
+        let mut r = router(DispatchPolicy::FirstCacheAvailable, 2);
+        for _ in 0..4 {
+            let (_, effs) = r.register_node(Micros::ZERO);
+            r.drain_effects(effs, Micros::ZERO);
+        }
+        let (a, b) = files_on_distinct_shards(&r);
+        let effs = r.on_arrival(task(0, &[b]), 0, 0.0, Micros::ZERO);
+        r.drain_effects(effs, Micros::ZERO);
+        let (dest, _) = start_cross_fetch(&mut r, 1, a, b);
+        // Kill the destination mid-fetch: the task requeues in its own
+        // shard and the cross-shard bookkeeping is scrubbed.
+        let effs = r.on_executor_failed(dest, Micros::from_millis(1));
+        assert_eq!(r.counters().exec_failures, 1);
+        assert_eq!(r.node_count(), 3);
+        assert_eq!(r.shard_of_exec(dest), None);
+        r.check_integrity().unwrap();
+        // The replay notifies the surviving home-shard executor; the
+        // drain runs it to completion (crossing shards again).
+        r.drain_effects(effs, Micros::from_millis(1));
+        assert!(r.queue_is_empty());
+        assert_eq!(r.counters().cross_fetches, 2);
+        r.check_integrity().unwrap();
+        let rec = r.take_merged_recorder();
+        assert_eq!(rec.tasks_done(), 2);
+        // Stale events for the dead executor are no-ops.
+        assert!(r.on_pickup(dest, Micros::from_millis(2)).is_empty());
+        assert!(r
+            .on_executor_failed(dest, Micros::from_millis(2))
+            .is_empty());
+    }
+
+    #[test]
+    fn source_failure_lets_the_fetch_fall_back_to_gpfs() {
+        let mut r = router(DispatchPolicy::FirstCacheAvailable, 2);
+        for _ in 0..4 {
+            let (_, effs) = r.register_node(Micros::ZERO);
+            r.drain_effects(effs, Micros::ZERO);
+        }
+        let (a, b) = files_on_distinct_shards(&r);
+        let sa = r.shard_of_file(FileId(a));
+        let sb = r.shard_of_file(FileId(b));
+        let effs = r.on_arrival(task(0, &[b]), 0, 0.0, Micros::ZERO);
+        r.drain_effects(effs, Micros::ZERO);
+        let (_, src) = start_cross_fetch(&mut r, 1, a, b);
+        // Kill the serving source mid-transfer: its replicas scrub and
+        // its serving refcount dies with it.
+        let effs = r.on_executor_failed(src, Micros::from_millis(1));
+        assert!(effs.is_empty(), "idle source: nothing to requeue");
+        assert_eq!(r.shard_of_exec(src), None);
+        assert_eq!(r.core(sb).probe_holder(FileId(b)), None, "replica scrubbed");
+        r.check_integrity().unwrap();
+        // The destination's driver falls back to persistent storage and
+        // reports what it observed — the global-hit override is gone.
+        let effs = r.on_fetch_done(TaskId(1), Micros::from_millis(2), Some((AccessKind::Miss, 10)));
+        assert!(matches!(effs.as_slice(), [Effect::Compute { .. }]));
+        let _ = r.on_compute_done(TaskId(1), Micros::from_millis(3), Micros::from_millis(3));
+        r.check_integrity().unwrap();
+        assert_eq!(
+            r.core(sa).rec.access_counts(),
+            (0, 0, 2),
+            "both of task 1's accesses ended up as misses"
+        );
     }
 
     #[test]

@@ -26,7 +26,11 @@
 //!   path), shipped with a dependency-free pure-Rust reference backend
 //!   so offline builds stay green ([`runtime`]);
 //! * **workload generators**, **metrics**, **report renderers** and one
-//!   [`experiments`] entry point per figure of the paper's evaluation.
+//!   [`experiments`] entry point per figure of the paper's evaluation;
+//! * a seeded **chaos harness** with a shadow-state oracle that
+//!   perturbs the coordinator's effect stream (dropped notifications,
+//!   executor kills, stalled transfers, shard partitions) and gates the
+//!   §4.2 failure/replay path in CI ([`chaos`]).
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
@@ -44,6 +48,7 @@
 //! ```
 
 pub mod cache;
+pub mod chaos;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -20,9 +20,14 @@
 //! * [`Effect::Compute`] → already performed by the worker alongside the
 //!   fetch, so the driver feeds it straight back as `on_compute_done`;
 //! * [`Effect::Allocate`] → spawn worker threads on demand (live DRP —
-//!   no GRAM latency on a local testbed). Workers are not retired
-//!   mid-run (`idle_release_s` is 0), so [`Effect::Release`] never
-//!   fires.
+//!   no GRAM latency on a local testbed);
+//! * [`Effect::Release`] → retire an idle worker: scrub it from the
+//!   core, shut its thread down and delete its cache directory (the
+//!   transient resource and the replicas it held are gone, as on a
+//!   deallocated node). Enabled by `LiveConfig::idle_release_s > 0`;
+//!   the core withholds executors still serving peer transfers, and a
+//!   racing peer *copy* from a vanished directory falls back to the
+//!   persistent store.
 //!
 //! Per-task compute is either a calibrated sleep or the AOT-compiled
 //! **PJRT stacking pipeline** (`examples/astronomy_stacking.rs`), so the
@@ -88,6 +93,11 @@ pub struct LiveConfig {
     pub compute: ComputeKind,
     /// PRNG seed (peer selection, eviction randomness).
     pub seed: u64,
+    /// Seconds of idleness before the provisioner retires a worker
+    /// mid-run ([`Effect::Release`] → thread shutdown + cache-dir
+    /// removal). `0.0` disables mid-run retirement — the right choice
+    /// for short benchmark runs, where the fleet should stay warm.
+    pub idle_release_s: f64,
 }
 
 /// One task for the live engine: read `file`, compute.
@@ -171,6 +181,8 @@ pub struct LiveReport {
     pub avg_compute: Duration,
     /// Peak worker count (provisioning).
     pub peak_workers: usize,
+    /// Workers retired mid-run by [`Effect::Release`] enactment.
+    pub workers_released: u64,
     /// Tasks in dispatch order — the coordinator-core decision trace
     /// `core_parity` compares against the sim driver.
     pub dispatch_order: Vec<TaskId>,
@@ -192,6 +204,7 @@ struct Driver<'a> {
     outstanding: usize,
     next_worker_idx: usize,
     peak_workers: usize,
+    workers_released: u64,
     file_names: HashMap<FileId, String>,
     done_tx: mpsc::Sender<WorkerMsg>,
 }
@@ -254,14 +267,9 @@ impl Driver<'_> {
                     }
                 }
                 Effect::Release(execs) => {
-                    // Live workers are never retired mid-run
-                    // (idle_release_s is 0 in the core config, so the
-                    // provisioner cannot emit releases; ROADMAP has the
-                    // thread-shutdown enactment as an open item).
-                    crate::warn!(
-                        "ignoring release of {} worker(s): not enacted by the live driver",
-                        execs.len()
-                    );
+                    for e in execs {
+                        self.release_worker(e);
+                    }
                 }
             }
         }
@@ -274,6 +282,28 @@ impl Driver<'_> {
         let (exec, effects) = self.core.on_node_registered(now);
         self.attach_worker(exec)?;
         Ok(effects)
+    }
+
+    /// Enact one [`Effect::Release`]: scrub the executor from the core,
+    /// shut its worker thread down and delete its cache directory — the
+    /// transient resource, and every replica it held, are gone, exactly
+    /// like a deallocated node in the sim. The core only names idle
+    /// executors with no pending reservation and no in-flight peer
+    /// transfer, so no undelivered work targets this worker; a racing
+    /// peer *copy* from the vanished directory falls back to the
+    /// persistent store in `run_one` and is recorded as the miss it was.
+    fn release_worker(&mut self, exec: ExecutorId) {
+        self.core.release_node(exec);
+        if let Some(h) = self.workers.remove(&exec) {
+            let _ = h.tx.send(ToWorker::Shutdown);
+            let _ = h.join.join();
+            let _ = std::fs::remove_dir_all(&h.cache_dir);
+            self.workers_released += 1;
+            crate::debug!("released idle worker {exec}");
+        }
+        // Belt and braces: reserved executors are never named in a
+        // release, so this should find nothing.
+        self.notify_q.retain(|&e| e != exec);
     }
 
     /// Map a resolved fetch plan onto a worker assignment.
@@ -368,9 +398,7 @@ pub fn run(config: &LiveConfig, tasks: &[LiveTask]) -> Result<LiveReport> {
             },
             provisioner: ProvisionerConfig {
                 allocation: config.allocation,
-                // Workers are never retired mid-run: release enactment
-                // (thread shutdown) is not modeled on the local testbed.
-                idle_release_s: 0.0,
+                idle_release_s: config.idle_release_s,
                 static_provisioning: false,
                 initial_nodes: config.initial_workers.max(1),
                 queue_tasks_per_node: config.queue_tasks_per_worker.max(1) as u64,
@@ -390,6 +418,7 @@ pub fn run(config: &LiveConfig, tasks: &[LiveTask]) -> Result<LiveReport> {
         outstanding: 0,
         next_worker_idx: 0,
         peak_workers: 0,
+        workers_released: 0,
         file_names,
         done_tx,
     };
@@ -511,6 +540,7 @@ pub fn run(config: &LiveConfig, tasks: &[LiveTask]) -> Result<LiveReport> {
         avg_fetch: fetch_total / done_tasks as u32,
         avg_compute: compute_total / done_tasks as u32,
         peak_workers: drv.peak_workers,
+        workers_released: drv.workers_released,
         dispatch_order: drv.core.take_dispatch_log(),
         recorder,
     })
@@ -685,6 +715,7 @@ mod tests {
             cache_root: root.join("caches"),
             compute: ComputeKind::Sleep(Duration::from_millis(1)),
             seed: 7,
+            idle_release_s: 0.0,
         };
         let report = run(&cfg, &tasks).expect("live run");
         assert_eq!(report.completed, 30);
@@ -725,11 +756,95 @@ mod tests {
             cache_root: root.join("caches"),
             compute: ComputeKind::Sleep(Duration::from_millis(1)),
             seed: 7,
+            idle_release_s: 0.0,
         };
         let report = run(&cfg, &tasks).expect("live run");
         assert_eq!(report.completed, 15);
         assert_eq!(report.misses, 15);
         assert_eq!(report.hits_local + report.hits_global, 0);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn release_effect_retires_worker_and_scrubs_cache_dir() {
+        // Drive the Driver directly with core-time stamps so the test
+        // is deterministic: two idle workers, a tick far in the future,
+        // and the resulting Release must shut threads down, delete
+        // cache directories and scrub the core.
+        let root = tmp("release");
+        let data = root.join("store");
+        let _tasks = setup_dataset(&data, 2, 512);
+        let cfg = LiveConfig {
+            initial_workers: 2,
+            max_workers: 2,
+            queue_tasks_per_worker: 10,
+            allocation: AllocationPolicy::OneAtATime,
+            policy: DispatchPolicy::GoodCacheCompute,
+            cache: CacheConfig {
+                capacity_bytes: 1 << 20,
+                policy: EvictionPolicy::Lru,
+            },
+            persistent_dir: data,
+            cache_root: root.join("caches"),
+            compute: ComputeKind::Sleep(Duration::from_millis(1)),
+            seed: 7,
+            idle_release_s: 0.5,
+        };
+        std::fs::create_dir_all(&cfg.cache_root).unwrap();
+        let (done_tx, _done_rx) = mpsc::channel::<WorkerMsg>();
+        let core = CoordinatorCore::new(
+            CoreConfig {
+                scheduler: SchedulerConfig {
+                    policy: cfg.policy,
+                    ..SchedulerConfig::default()
+                },
+                provisioner: ProvisionerConfig {
+                    allocation: cfg.allocation,
+                    idle_release_s: cfg.idle_release_s,
+                    static_provisioning: false,
+                    initial_nodes: 2,
+                    queue_tasks_per_node: 10,
+                },
+                cache: cfg.cache,
+                max_nodes: 2,
+                slots_per_node: 1,
+                file_sizes: FileSizes::Uniform(512),
+            },
+            Pcg64::seeded(cfg.seed),
+        );
+        let mut drv = Driver {
+            config: &cfg,
+            core,
+            workers: HashMap::new(),
+            notify_q: VecDeque::new(),
+            outstanding: 0,
+            next_worker_idx: 0,
+            peak_workers: 0,
+            workers_released: 0,
+            file_names: HashMap::new(),
+            done_tx,
+        };
+        drv.spawn_worker(Micros::ZERO).unwrap();
+        drv.spawn_worker(Micros::ZERO).unwrap();
+        assert_eq!(drv.workers.len(), 2);
+        let dirs: Vec<PathBuf> = drv.workers.values().map(|h| h.cache_dir.clone()).collect();
+        assert!(dirs.iter().all(|d| d.exists()));
+
+        // Ten idle seconds later the provisioner must want them gone.
+        let now = Micros::from_secs(10);
+        let effects = drv.core.on_tick(now);
+        assert!(
+            effects
+                .iter()
+                .any(|e| matches!(e, Effect::Release(v) if !v.is_empty())),
+            "expected a release of idle workers, got {effects:?}"
+        );
+        drv.apply(effects, now).unwrap();
+        assert!(drv.workers_released >= 1, "no worker was retired");
+        assert_eq!(drv.workers.len(), 2 - drv.workers_released as usize);
+        // Retired workers' cache directories are gone; survivors' remain.
+        let gone = dirs.iter().filter(|d| !d.exists()).count();
+        assert_eq!(gone as u64, drv.workers_released);
         let _ = std::fs::remove_dir_all(&root);
     }
 
@@ -752,6 +867,7 @@ mod tests {
             cache_root: root.join("caches"),
             compute: ComputeKind::Sleep(Duration::from_millis(2)),
             seed: 7,
+            idle_release_s: 0.0,
         };
         let report = run(&cfg, &tasks).expect("live run");
         assert_eq!(report.completed, 60);

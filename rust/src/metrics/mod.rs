@@ -204,6 +204,13 @@ pub struct ShardCounters {
     pub cross_fetches: u64,
     /// Bytes moved by those cross-shard fetches.
     pub cross_bytes: u64,
+    /// Release decisions the router withheld because the executor was
+    /// serving a cross-shard peer transfer (its own shard cannot see
+    /// that serving window — the plan lives on the destination shard).
+    pub cross_release_deferrals: u64,
+    /// Executor crash events the router fanned into
+    /// `on_executor_failed` (chaos harness / live worker deaths).
+    pub exec_failures: u64,
     /// Per-shard breakdown, indexed by shard id.
     pub per_shard: Vec<ShardTally>,
 }

@@ -144,6 +144,25 @@ struct NodeLinks {
     nic_out: LinkId,
 }
 
+/// Does any transfer — live on the flow net, or parked in the GridFTP
+/// session-setup window — touch one of this node's links?
+///
+/// Parked transfers (`delayed`) have reserved their path but hold no
+/// flow-link capacity yet, so `link_active` alone misses them; a source
+/// released during the setup window would have its transfer start over
+/// the links of a node that no longer exists.
+fn node_serving(
+    flow: &FlowNet,
+    delayed: &HashMap<u64, (u64, Vec<LinkId>)>,
+    links: &NodeLinks,
+) -> bool {
+    let lids = [links.disk, links.nic_in, links.nic_out];
+    lids.iter().any(|&l| flow.link_active(l) > 0)
+        || delayed
+            .values()
+            .any(|(_, path)| path.iter().any(|l| lids.contains(l)))
+}
+
 /// The engine. Construct via [`run`].
 struct Engine {
     cfg: ExperimentConfig,
@@ -403,12 +422,15 @@ impl Engine {
 
     fn try_release(&mut self, id: ExecutorId) {
         // Peers may be mid-transfer from this node's cache; skip the
-        // release this round if so (retry next tick).
+        // release this round if so (retry next tick). The coordinator
+        // core already withholds serving sources via its peer-serving
+        // refcounts; this driver-side check is the engine's own guard
+        // for anything the core cannot see — in particular transfers
+        // still parked in the GridFTP session-setup window (`delayed`),
+        // which hold no flow-link capacity yet but name this node's
+        // links in their path.
         if let Some(links) = self.node_links.get(&id) {
-            if self.flow.link_active(links.disk) > 0
-                || self.flow.link_active(links.nic_in) > 0
-                || self.flow.link_active(links.nic_out) > 0
-            {
+            if node_serving(&self.flow, &self.delayed, links) {
                 return;
             }
         }
@@ -641,6 +663,59 @@ mod tests {
             a.summary.workload_execution_time_s,
             b.summary.workload_execution_time_s
         );
+    }
+
+    #[test]
+    fn node_serving_sees_parked_session_setup_transfers() {
+        let mut flow = FlowNet::new();
+        let gpfs = flow.add_link(1e9);
+        let links = NodeLinks {
+            disk: flow.add_link(1e9),
+            nic_in: flow.add_link(1e9),
+            nic_out: flow.add_link(1e9),
+        };
+        let mut delayed: HashMap<u64, (u64, Vec<LinkId>)> = HashMap::new();
+
+        // Idle node, nothing parked: releasable.
+        assert!(!node_serving(&flow, &delayed, &links));
+
+        // A peer fetch parked in the GridFTP session-setup window names
+        // this node's nic_out in its path but holds no flow capacity:
+        // link_active alone would say "idle", node_serving must not.
+        delayed.insert(7, (10, vec![links.nic_out, LinkId(99)]));
+        assert_eq!(flow.link_active(links.nic_out), 0);
+        assert!(node_serving(&flow, &delayed, &links));
+
+        // A parked transfer on unrelated links doesn't pin this node.
+        delayed.clear();
+        delayed.insert(8, (10, vec![gpfs, LinkId(99)]));
+        assert!(!node_serving(&flow, &delayed, &links));
+
+        // A live transfer on the disk link still defers, as before.
+        flow.start(Micros::ZERO, 10, &[links.disk], 1);
+        assert!(node_serving(&flow, &delayed, &links));
+    }
+
+    #[test]
+    fn release_under_cross_fetch_load_loses_no_transfers() {
+        // Aggressive idle release + small caches (peer fetches on most
+        // tasks) + a long GridFTP session-setup window: releases race
+        // parked transfers constantly. Every task must still complete
+        // and the run must stay deterministic.
+        let mut cfg = small_cfg(DispatchPolicy::GoodCacheCompute);
+        cfg.workload.num_tasks = 1_000;
+        cfg.cache.capacity_bytes = 150 * MB;
+        cfg.cluster.peer_overhead_ms = 60.0;
+        cfg.provisioner.idle_release_s = 0.5;
+        let a = run(&cfg);
+        assert_eq!(a.summary.tasks_completed, 1_000);
+        assert!(
+            a.summary.hit_global_rate > 0.0,
+            "no peer fetches — the test exercised nothing"
+        );
+        let b = run(&cfg);
+        assert_eq!(a.dispatch_order, b.dispatch_order);
+        assert_eq!(a.events_processed, b.events_processed);
     }
 
     #[test]

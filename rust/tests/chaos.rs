@@ -1,0 +1,230 @@
+//! Chaos-harness acceptance gates.
+//!
+//! * a 40-run seeded sweep — all five dispatch policies × shards
+//!   ∈ {1, 4} × four seeds each — must finish oracle-clean with at
+//!   least one injected fault per run;
+//! * re-running any seed must reproduce the identical fault schedule,
+//!   tallies and state fingerprint;
+//! * the §4.2 failure/replay path (`on_task_failed` → resubmit) keeps
+//!   replica accounting exact and terminal states exactly-once under
+//!   every policy, checked both directly against the core and through
+//!   the harness with the failure rate cranked up;
+//! * the oracle's self-test proves a deliberately broken invariant is
+//!   caught and dumped with its seed, fault plan and trailing trace.
+
+use datadiffusion::cache::CacheConfig;
+use datadiffusion::chaos::{oracle_self_test, run_chaos, ChaosConfig, FaultKind};
+use datadiffusion::coordinator::core::{
+    CoordinatorCore, CoreConfig, Effect, FileSizes,
+};
+use datadiffusion::coordinator::provisioner::ProvisionerConfig;
+use datadiffusion::coordinator::queue::Task;
+use datadiffusion::coordinator::scheduler::{DispatchPolicy, SchedulerConfig};
+use datadiffusion::ids::{FileId, TaskId};
+use datadiffusion::util::prng::Pcg64;
+use datadiffusion::util::time::Micros;
+use std::collections::VecDeque;
+
+#[test]
+fn forty_run_sweep_is_oracle_clean_across_policies_and_shards() {
+    let mut runs = 0u64;
+    for policy in DispatchPolicy::ALL {
+        for shards in [1usize, 4] {
+            for _ in 0..4 {
+                let mut cfg = ChaosConfig::quick(1_000 + runs);
+                cfg.policy = policy;
+                cfg.shards = shards;
+                if shards > 1 {
+                    cfg.nodes = 8; // every shard starts with real capacity
+                }
+                let r = run_chaos(&cfg);
+                assert!(
+                    r.faults_injected > 0,
+                    "[{policy} K={shards} seed={}] injected no faults",
+                    r.seed
+                );
+                assert!(
+                    r.clean(),
+                    "[{policy} K={shards} seed={}] not clean:\n{}",
+                    r.seed,
+                    r.dump.as_deref().unwrap_or("(stalled, no oracle dump)")
+                );
+                assert_eq!(
+                    r.completed + r.failed,
+                    r.events as u64,
+                    "[{policy} K={shards} seed={}] terminal conservation",
+                    r.seed
+                );
+                runs += 1;
+            }
+        }
+    }
+    assert_eq!(runs, 40);
+}
+
+#[test]
+fn reruns_reproduce_schedule_tallies_and_fingerprint() {
+    for (seed, shards) in [(3u64, 1usize), (17, 4), (99, 1), (7_777, 4)] {
+        let mut cfg = ChaosConfig::quick(seed);
+        cfg.shards = shards;
+        if shards > 1 {
+            cfg.nodes = 8;
+        }
+        let a = run_chaos(&cfg);
+        let b = run_chaos(&cfg);
+        assert_eq!(a.plan, b.plan, "seed {seed}: fault schedule diverged");
+        assert_eq!(a.tally, b.tally, "seed {seed}: tallies diverged");
+        assert_eq!(
+            a.fingerprint, b.fingerprint,
+            "seed {seed}: state fingerprint diverged"
+        );
+        assert_eq!((a.completed, a.failed), (b.completed, b.failed));
+    }
+}
+
+#[test]
+fn harness_exercises_the_replay_path_under_every_policy() {
+    // Crank the fault rate so partial transfers (→ on_task_failed →
+    // resubmit) occur under every policy; clean() means the oracle
+    // verified exactly-once terminals and replica accounting after
+    // every one of those replays.
+    for (i, policy) in DispatchPolicy::ALL.into_iter().enumerate() {
+        let mut cfg = ChaosConfig::quick(50 + i as u64);
+        cfg.policy = policy;
+        cfg.fault_rate = 0.45;
+        let r = run_chaos(&cfg);
+        assert!(
+            r.tally.count(FaultKind::PartialTransfer) > 0,
+            "[{policy}] no partial transfers at rate {}: {}",
+            cfg.fault_rate,
+            r.tally
+        );
+        assert!(
+            r.clean(),
+            "[{policy}] replay stress not clean:\n{}",
+            r.dump.as_deref().unwrap_or("(stalled)")
+        );
+        assert_eq!(r.completed + r.failed, r.events as u64, "[{policy}]");
+    }
+}
+
+#[test]
+fn self_test_dump_names_seed_plan_and_trace() {
+    let dump = oracle_self_test();
+    assert!(dump.contains("seed="), "no seed in dump:\n{dump}");
+    assert!(dump.contains("fault plan"), "no plan in dump:\n{dump}");
+    assert!(
+        dump.contains("trailing event trace"),
+        "no trace in dump:\n{dump}"
+    );
+    assert!(
+        dump.contains("terminal state twice"),
+        "broken invariant not named:\n{dump}"
+    );
+}
+
+// ---- direct §4.2 replay coverage against the core ----------------------
+
+fn replay_core(policy: DispatchPolicy) -> CoordinatorCore {
+    CoordinatorCore::new(
+        CoreConfig {
+            scheduler: SchedulerConfig {
+                policy,
+                ..SchedulerConfig::default()
+            },
+            provisioner: ProvisionerConfig::default(),
+            cache: CacheConfig::lru(1_000),
+            max_nodes: 4,
+            slots_per_node: 1,
+            file_sizes: FileSizes::Uniform(10),
+        },
+        Pcg64::seeded(42),
+    )
+}
+
+fn mk_task(id: u64, files: &[u32], arrival: Micros) -> Task {
+    Task {
+        id: TaskId(id),
+        files: files.iter().map(|&f| FileId(f)).collect(),
+        compute: Micros::from_millis(1),
+        arrival,
+    }
+}
+
+/// Synchronous mini-pump: enact effects depth-first, failing the first
+/// fetch of `fail_task` once and resubmitting it per §4.2. Returns the
+/// number of Compute completions fed back.
+fn pump_with_one_failure(
+    c: &mut CoordinatorCore,
+    effects: Vec<Effect>,
+    fail_task: TaskId,
+    failed_once: &mut bool,
+    now: Micros,
+) -> u64 {
+    let mut done = 0u64;
+    let mut q: VecDeque<Effect> = effects.into();
+    while let Some(eff) = q.pop_front() {
+        match eff {
+            Effect::Notify(e) => q.extend(c.on_pickup(e, now)),
+            Effect::Fetch(plan) => {
+                if plan.task_id == fail_task && !*failed_once {
+                    *failed_once = true;
+                    let files: Vec<u32> = vec![plan.file.0];
+                    q.extend(c.on_task_failed(plan.task_id, now));
+                    q.extend(c.on_arrival(mk_task(plan.task_id.0, &files, now), 0, 0.0, now));
+                } else {
+                    q.extend(c.on_fetch_done(plan.task_id, now, None));
+                }
+            }
+            Effect::Compute { task_id, .. } => {
+                done += 1;
+                q.extend(c.on_compute_done(task_id, now, now));
+            }
+            Effect::Allocate(_) | Effect::Release(_) => {}
+        }
+    }
+    done
+}
+
+#[test]
+fn task_failure_replay_is_exactly_once_for_every_policy() {
+    for policy in DispatchPolicy::ALL {
+        let mut c = replay_core(policy);
+        c.register_node(Micros::ZERO);
+        c.register_node(Micros::ZERO);
+
+        let mut failed_once = false;
+        let mut done = 0u64;
+        let mut effects = c.on_arrival(mk_task(0, &[5], Micros::ZERO), 0, 0.0, Micros::ZERO);
+        // Drain with the kick safety net (max-cache-hit may decline the
+        // first notify); bounded so a regression stalls loudly.
+        for round in 0u64.. {
+            done += pump_with_one_failure(
+                &mut c,
+                effects,
+                TaskId(0),
+                &mut failed_once,
+                Micros::from_millis(round),
+            );
+            if c.queue_is_empty() {
+                break;
+            }
+            effects = c.kick();
+            assert!(
+                round < 16,
+                "[{policy}] replay never drained (round {round})"
+            );
+        }
+        assert!(failed_once, "[{policy}] the fetch was never failed");
+        assert_eq!(done, 1, "[{policy}] task must reach Compute exactly once");
+        assert_eq!(
+            c.rec.tasks_done(),
+            1,
+            "[{policy}] exactly one recorded completion"
+        );
+        c.check_integrity()
+            .unwrap_or_else(|m| panic!("[{policy}] replica accounting diverged: {m}"));
+        assert!(c.queue_is_empty(), "[{policy}] queue not drained");
+        assert_eq!(c.free_count(), 2, "[{policy}] slot not freed");
+    }
+}

@@ -110,6 +110,7 @@ fn sim_and_live_drivers_replay_identical_decisions() {
             cache_root: root.join("caches"),
             compute: ComputeKind::Sleep(Duration::ZERO),
             seed: 999, // different stream on purpose: must not matter
+            idle_release_s: 0.0,
         };
         let report = live::run(&live_cfg, &tasks).expect("live run");
         assert_eq!(report.completed, NUM_TASKS, "[{policy}] live incomplete");

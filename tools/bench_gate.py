@@ -31,6 +31,12 @@ checks only quantities that noise cannot fake:
    double-accounted transfers — the bound is fixture-scoped; a workload
    of tasks with several foreign-homed files could legitimately exceed
    it), and shard/router_events must be > 0.
+3b. *Chaos-harness accounting* (fresh snapshot only): the bench's seeded
+   chaos block must keep injecting faults (chaos/faults_injected > 0 — a
+   zero means the fault schedule went vacuous and the robustness gate
+   guards nothing) and the shadow-state oracle must stay silent
+   (chaos/oracle_violations == 0 — any violation is a real invariant
+   break, reproducible with `datadiff chaos --seed N`).
 4. *Deterministic work counters* (fresh vs committed baseline): tasks
    inspected per pickup, boundary-cursor steps, flow rerates per event,
    pending maintenance ops per event, dead hints purged per event, notify
@@ -199,6 +205,29 @@ def run_gate(fresh, baseline):
             "double-accounting cross-shard transfers"
         )
 
+    # --- 2d. chaos-harness accounting (within-run). ---------------------
+    for key in ("chaos/faults_injected", "chaos/oracle_violations"):
+        if key not in counters:
+            fail(f"missing counter {key}")
+    faults = counters["chaos/faults_injected"]
+    violations = counters["chaos/oracle_violations"]
+    print(
+        f"bench-gate: chaos faults injected = {faults:g}, "
+        f"oracle violations = {violations:g}"
+    )
+    if faults <= 0:
+        fail(
+            "chaos/faults_injected is 0: the seeded fault schedule went "
+            "vacuous, so the chaos gate no longer exercises the "
+            "failure/replay path"
+        )
+    if violations != 0:
+        fail(
+            f"chaos/oracle_violations = {violations:g}: the shadow-state "
+            "oracle caught real invariant breaks; reproduce with "
+            "`datadiff chaos --seed N` using the seed in the bench output"
+        )
+
     # --- 3. inspected-per-pickup sanity (within-run). -------------------
     for policy in ("max-compute-util", "good-cache-compute"):
         key = f"inspected_per_pickup/{policy}"
@@ -273,6 +302,9 @@ def synthetic_fresh():
         "shard/router_events": 500.0,
         "shard/cross_fetches": 96.0,
         "shard/cross_fetches_per_task": 0.75,
+        "chaos/faults_injected": 64.0,
+        "chaos/oracle_violations": 0.0,
+        "chaos/faults_injected_per_run": 8.0,
     }
     for concurrency in (16, 128):
         for metric in ("rerates", "heap_updates"):
@@ -359,6 +391,15 @@ def self_test():
     def shard_fixture_never_ran(s):
         s["counters"]["shard/router_events"] = 0.0
 
+    def chaos_schedule_vacuous(s):
+        s["counters"]["chaos/faults_injected"] = 0.0
+
+    def chaos_oracle_tripped(s):
+        s["counters"]["chaos/oracle_violations"] = 2.0
+
+    def missing_chaos_counter(s):
+        del s["counters"]["chaos/oracle_violations"]
+
     cases = [
         ("indexed pickup slower than reference", slow_indexed),
         ("non-finite case mean", nan_mean),
@@ -374,6 +415,9 @@ def self_test():
         ("cross-shard fetch path dead", cross_fetch_path_dead),
         ("cross-shard fetch double-accounted", cross_fetch_double_accounted),
         ("sharded fixture never ran", shard_fixture_never_ran),
+        ("chaos fault schedule vacuous", chaos_schedule_vacuous),
+        ("chaos oracle caught violations", chaos_oracle_tripped),
+        ("missing chaos counter", missing_chaos_counter),
     ]
     for label, mutate in cases:
         mutated(label, mutate)
