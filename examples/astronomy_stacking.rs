@@ -48,12 +48,14 @@ fn parse_allocation() -> datadiffusion::Result<AllocationPolicy> {
         match a.as_str() {
             "--allocation" => {
                 let v = it.next().ok_or_else(|| {
-                    datadiffusion::Error::Config("--allocation needs a value".into())
+                    datadiffusion::Error::config("--allocation needs a value")
                 })?;
-                alloc = AllocationPolicy::parse_flag(v).map_err(datadiffusion::Error::Config)?;
+                alloc = v
+                    .parse::<AllocationPolicy>()
+                    .map_err(datadiffusion::Error::config)?;
             }
             other => {
-                return Err(datadiffusion::Error::Config(format!(
+                return Err(datadiffusion::Error::config(format!(
                     "unexpected argument `{other}` (supported: --allocation one|add:N|mult:F|all)"
                 )));
             }

@@ -6,8 +6,9 @@
 //! wait-queue window ops, cache churn, flow-network transfer churn
 //! (batched vs per-event reference rerating), the 4-shard coordinator
 //! router (cross-shard fetch rewrites — `shard/*` counters), the seeded
-//! chaos harness with its shadow oracle (`chaos/*` counters), plus the
-//! whole-simulation event rate. Run before/after every optimization:
+//! chaos harness with its shadow oracle (`chaos/*` counters), the
+//! workload scenario library generators (`workload/*` counters), plus
+//! the whole-simulation event rate. Run before/after every optimization:
 //!
 //!     cargo bench --bench perf_hotpath
 //!
@@ -51,6 +52,7 @@ fn main() {
         bench_flownet(&mut counters),
         bench_sharded_router(&mut counters),
         bench_chaos(&mut counters),
+        bench_scenario_generation(&mut counters),
         bench_whole_sim(),
     ];
     println!("\n== counters (deterministic work metrics) ==");
@@ -714,6 +716,61 @@ fn bench_chaos(counters: &mut Vec<(String, f64)>) -> Bench {
     counters.push((
         "chaos/faults_injected_per_run".into(),
         faults as f64 / runs as f64,
+    ));
+    let _ = b.write_csv();
+    b
+}
+
+/// Workload scenario generation: all four seeded families from the
+/// scenario library (zipf-churn, diurnal, bulk-batch, pipeline) at a
+/// fixed size. Wall times track the generator cost per family; the
+/// deterministic `workload/*` counters feed the CI gate — the library
+/// must keep producing tasks (`workload/tasks_generated > 0`) and the
+/// pipeline family must keep emitting dependency edges
+/// (`workload/dep_edges > 0`, else arrival gating is vacuously dead);
+/// `workload/dep_edges_per_task` is baseline-gated against drift.
+fn bench_scenario_generation(counters: &mut Vec<(String, f64)>) -> Bench {
+    use datadiffusion::config::{ScenarioSpec, WorkloadConfig};
+    use datadiffusion::workload::{self, Workload};
+
+    let generate = |name: &str, num_tasks: u64| -> Workload {
+        let spec = ScenarioSpec::preset(name).expect("catalog name");
+        let mut wcfg = WorkloadConfig::default();
+        wcfg.num_tasks = num_tasks;
+        wcfg.num_files = 400;
+        wcfg.scenario = Some(spec);
+        workload::generate(&wcfg, 42)
+    };
+
+    let mut b = Bench::new("workload scenario generation (4 families)")
+        .samples(3)
+        .min_sample_duration(std::time::Duration::from_millis(1));
+    for name in ScenarioSpec::CATALOG {
+        b.iter(&format!("{name} (5K tasks)"), 5_000, || {
+            black_box(generate(name, 5_000).fingerprint());
+        });
+    }
+
+    // Deterministic pass: the counters aggregate one fixed-seed
+    // generation per family, so they never wobble across machines.
+    let mut tasks_generated = 0u64;
+    let mut dep_edges = 0u64;
+    for name in ScenarioSpec::CATALOG {
+        let wl = generate(name, 5_000);
+        assert!(!wl.tasks.is_empty(), "{name} generated no tasks");
+        tasks_generated += wl.tasks.len() as u64;
+        dep_edges += wl.dep_edges;
+    }
+    println!(
+        "    4 families: {tasks_generated} tasks, {dep_edges} dep edges \
+         ({:.4} per task)",
+        dep_edges as f64 / tasks_generated.max(1) as f64
+    );
+    counters.push(("workload/tasks_generated".into(), tasks_generated as f64));
+    counters.push(("workload/dep_edges".into(), dep_edges as f64));
+    counters.push((
+        "workload/dep_edges_per_task".into(),
+        dep_edges as f64 / tasks_generated.max(1) as f64,
     ));
     let _ = b.write_csv();
     b

@@ -62,6 +62,24 @@ impl EvictionPolicy {
     }
 }
 
+impl std::fmt::Display for EvictionPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for EvictionPolicy {
+    type Err = String;
+
+    /// The `FromStr` face of [`EvictionPolicy::parse`]; the `run`,
+    /// `chaos`, and `scenarios` subcommands all parse `--cache` through
+    /// this. Round-trips with `Display`.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        EvictionPolicy::parse(s)
+            .ok_or_else(|| format!("unknown eviction policy `{s}` (expected random|fifo|lru|lfu)"))
+    }
+}
+
 /// Cache sizing + policy configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct CacheConfig {
@@ -236,6 +254,20 @@ mod tests {
             capacity_bytes: cap,
             policy,
         })
+    }
+
+    #[test]
+    fn eviction_policy_round_trips_from_str_and_display() {
+        for p in [
+            EvictionPolicy::Random,
+            EvictionPolicy::Fifo,
+            EvictionPolicy::Lru,
+            EvictionPolicy::Lfu,
+        ] {
+            assert_eq!(p.to_string().parse::<EvictionPolicy>(), Ok(p));
+            assert_eq!(p.to_string(), p.name());
+        }
+        assert!("arc".parse::<EvictionPolicy>().is_err());
     }
 
     #[test]

@@ -41,13 +41,27 @@
 //! reached exactly once per task, which the [`oracle`] checks after
 //! every step along with replica accounting and dead-executor hygiene.
 //!
-//! Run it via `datadiff chaos --seed N --events M --shards K` or the
-//! `rust/tests/chaos.rs` sweep; `docs/CHAOS.md` documents the fault
-//! plan format and the reproduce-by-seed workflow.
+//! ## Task streams
+//!
+//! The built-in stream draws uniform 1–2-file tasks from a dedicated
+//! splitmix64 workload stream (byte-identical to the pre-scenario
+//! harness). Setting [`ChaosConfig::scenario`] instead pre-generates a
+//! [`Workload`] from the scenario library (`docs/WORKLOADS.md`) at the
+//! chaos seed and feeds its task stream — inputs, and for pipelines
+//! dependency edges — through the same fault schedule. A dependency-
+//! gated task is held until every predecessor reaches a terminal
+//! state; a *failed* predecessor still satisfies the edge (the chaos
+//! harness is probing coordinator invariants, not DAG semantics, and
+//! cascading the failure would stall the run by design).
+//!
+//! Run it via `datadiff chaos --seed N --events M --shards K
+//! [--scenario F]` or the `rust/tests/chaos.rs` sweep; `docs/CHAOS.md`
+//! documents the fault plan format and the reproduce-by-seed workflow.
 
 pub mod oracle;
 
 use crate::cache::CacheConfig;
+use crate::config::ScenarioSpec;
 use crate::coordinator::core::{CoreConfig, Effect, FetchPlan, FileSizes};
 use crate::coordinator::provisioner::ProvisionerConfig;
 use crate::coordinator::queue::Task;
@@ -217,6 +231,11 @@ pub struct ChaosConfig {
     pub files: u32,
     /// Per-decision fault probability.
     pub fault_rate: f64,
+    /// Draw the task stream from a scenario-library workload instead of
+    /// the built-in uniform stream (None = built-in, byte-identical to
+    /// the pre-scenario harness). `events` is clamped to the generated
+    /// stream length (pipelines emit whole pipelines).
+    pub scenario: Option<ScenarioSpec>,
 }
 
 impl ChaosConfig {
@@ -230,6 +249,7 @@ impl ChaosConfig {
             nodes: 8,
             files: 24,
             fault_rate: 0.18,
+            scenario: None,
         }
     }
 
@@ -414,6 +434,13 @@ struct Driver {
     plan: Vec<String>,
     /// Original task specs, for resubmission after partial transfers.
     tasks: HashMap<u64, Task>,
+    /// Pre-generated scenario workload (None = built-in stream).
+    scenario_wl: Option<crate::workload::Workload>,
+    /// Dependency gating over the scenario stream (empty otherwise):
+    /// unmet-predecessor counts, reverse edges, and the held set.
+    dep_remaining: Vec<u32>,
+    dep_children: Vec<Vec<u64>>,
+    held: HashSet<u64>,
     completed: u64,
     failed: u64,
     terminal: u64,
@@ -427,7 +454,32 @@ fn fnv_mix(fp: &mut u64, v: u64) {
 }
 
 impl Driver {
-    fn new(cfg: ChaosConfig) -> Self {
+    fn new(mut cfg: ChaosConfig) -> Self {
+        // Scenario streams are pre-generated from the chaos seed; the
+        // event count follows the stream (pipelines emit whole
+        // pipelines, so the generator may round `events` down).
+        let mut scenario_wl = None;
+        let (mut dep_remaining, mut dep_children) = (Vec::new(), Vec::new());
+        if let Some(spec) = &cfg.scenario {
+            let mut wcfg = crate::config::WorkloadConfig::default();
+            wcfg.num_tasks = cfg.events as u64;
+            wcfg.num_files = cfg.files;
+            wcfg.file_size_bytes = FILE_BYTES;
+            wcfg.scenario = Some(spec.clone());
+            let wl = crate::workload::generate(&wcfg, cfg.seed);
+            cfg.events = wl.tasks.len();
+            if wl.dep_edges > 0 {
+                dep_remaining = vec![0u32; wl.tasks.len()];
+                dep_children = vec![Vec::new(); wl.tasks.len()];
+                for (i, t) in wl.tasks.iter().enumerate() {
+                    dep_remaining[i] = t.deps.len() as u32;
+                    for d in &t.deps {
+                        dep_children[d.0 as usize].push(i as u64);
+                    }
+                }
+            }
+            scenario_wl = Some(wl);
+        }
         let core_cfg = CoreConfig {
             scheduler: SchedulerConfig {
                 policy: cfg.policy,
@@ -464,6 +516,10 @@ impl Driver {
             tally: FaultTally::default(),
             plan: Vec::new(),
             tasks: HashMap::new(),
+            scenario_wl,
+            dep_remaining,
+            dep_children,
+            held: HashSet::new(),
             completed: 0,
             failed: 0,
             terminal: 0,
@@ -490,6 +546,16 @@ impl Driver {
     }
 
     fn make_task(&mut self, i: u64, now: Micros) -> Task {
+        // Scenario stream: the pre-generated input set (the chaos tempo
+        // and compute time stay the harness's own).
+        if let Some(wl) = &self.scenario_wl {
+            return Task {
+                id: TaskId(i),
+                files: wl.tasks[i as usize].inputs.clone(),
+                compute: Micros::from_millis(5),
+                arrival: now,
+            };
+        }
         let dominant = FileId(self.workload.below(self.cfg.files as u64) as u32);
         let mut files = vec![dominant];
         if self.workload.chance(0.35) {
@@ -503,6 +569,34 @@ impl Driver {
             files,
             compute: Micros::from_millis(5),
             arrival: now,
+        }
+    }
+
+    /// Submit task `i` to the router — at its Submit step, or when the
+    /// last gating predecessor reaches a terminal state.
+    fn submit_task(&mut self, i: u64, now: Micros) {
+        let task = self.make_task(i, now);
+        self.tasks.insert(i, task.clone());
+        self.attempt.insert(i, 0);
+        self.oracle.on_submit(i, now);
+        let effs = self.router.on_arrival(task, 0, 0.0, now);
+        self.enact(effs, now);
+    }
+
+    /// A task reached a terminal state (completed *or* permanently
+    /// failed — see the module docs): decrement each dependent's
+    /// unmet-predecessor count and submit any dependent whose Submit
+    /// step already passed while it was held.
+    fn release_children(&mut self, task: u64, now: Micros) {
+        if self.dep_children.is_empty() {
+            return;
+        }
+        let children = self.dep_children[task as usize].clone();
+        for c in children {
+            self.dep_remaining[c as usize] -= 1;
+            if self.dep_remaining[c as usize] == 0 && self.held.remove(&c) {
+                self.submit_task(c, now);
+            }
         }
     }
 
@@ -604,12 +698,15 @@ impl Driver {
     fn process(&mut self, now: Micros, step: Step) {
         match step {
             Step::Submit(i) => {
-                let task = self.make_task(i, now);
-                self.tasks.insert(i, task.clone());
-                self.attempt.insert(i, 0);
-                self.oracle.on_submit(i, now);
-                let effs = self.router.on_arrival(task, 0, 0.0, now);
-                self.enact(effs, now);
+                if self
+                    .dep_remaining
+                    .get(i as usize)
+                    .is_some_and(|&r| r > 0)
+                {
+                    self.held.insert(i);
+                    return;
+                }
+                self.submit_task(i, now);
             }
             Step::Pickup(e) => {
                 if !self.live.contains(&e.0) {
@@ -648,6 +745,7 @@ impl Driver {
                 self.task_exec.remove(&task);
                 let effs = self.router.on_compute_done(TaskId(task), now, now);
                 self.enact(effs, now);
+                self.release_children(task, now);
             }
             Step::TaskFailed { task, attempt } => {
                 if self.attempt.get(&task) != Some(&attempt) {
@@ -673,6 +771,8 @@ impl Driver {
                     self.oracle.on_terminal(task, "failed", now);
                     self.terminal += 1;
                     self.failed += 1;
+                    // A dead predecessor still unblocks its dependents.
+                    self.release_children(task, now);
                 }
             }
             Step::ExecFail(e) => {
@@ -905,6 +1005,24 @@ mod tests {
         let r = run_chaos(&cfg);
         assert!(r.clean(), "{}", r.dump.as_deref().unwrap_or("stalled"));
         assert_eq!(r.completed + r.failed, r.events as u64);
+    }
+
+    #[test]
+    fn pipeline_scenario_stream_reproduces_and_gates_deps() {
+        // Scenario stream with real dependency edges under faults:
+        // every task still reaches exactly one terminal state (failed
+        // predecessors satisfy edges), and the seed reproduces the
+        // schedule bit-for-bit.
+        let mut cfg = ChaosConfig::quick(21);
+        cfg.scenario = Some(ScenarioSpec::preset("pipeline").unwrap());
+        let a = run_chaos(&cfg);
+        assert!(a.clean(), "{}", a.dump.as_deref().unwrap_or("stalled"));
+        // Whole pipelines: the driver clamps events to the stream.
+        assert!(a.events > 0 && a.events <= 60);
+        assert_eq!(a.completed + a.failed, a.events as u64);
+        let b = run_chaos(&cfg);
+        assert_eq!(a.plan, b.plan);
+        assert_eq!(a.fingerprint, b.fingerprint);
     }
 
     #[test]

@@ -17,7 +17,18 @@
 //!   [--quick] [--self-test]` — seeded fault injection against the
 //!   shadow-state oracle (docs/CHAOS.md); non-zero exit on any oracle
 //!   violation, stall, or fault-free run;
+//! * `scenarios [--name N] [--quick] [--scale X] [--jobs N] [--check]` —
+//!   run the workload scenario library (docs/WORKLOADS.md) acceptance
+//!   tables, all four families or one by name;
 //! * `help` — usage.
+//!
+//! Flag values parse through the typed `FromStr` impls
+//! ([`DispatchPolicy`](crate::coordinator::scheduler::DispatchPolicy),
+//! [`AllocationPolicy`](crate::coordinator::provisioner::AllocationPolicy),
+//! [`EvictionPolicy`](crate::cache::EvictionPolicy)) — the same parsing
+//! path the `run`, `chaos`, and `scenarios` commands and the examples
+//! share — and every CLI error renders uniformly through
+//! [`ConfigError`](crate::config::ConfigError).
 
 use crate::config::ExperimentConfig;
 use crate::experiments::{self, fig02, registry};
@@ -30,14 +41,19 @@ datadiff — data diffusion (Raicu et al. 2008) reproduction
 USAGE:
   datadiff run (--fig N | --config FILE) [--view SECS] [--csv]
                [--allocation one|add:N|mult:F|all] [--shards K]
+               [--cache random|fifo|lru|lfu]
   datadiff figures [--scale X] [--quick] [--jobs N] [--check]
                                        regenerate Figures 2-15 + sweeps
   datadiff fig2|fig3|fig4-10|fig11|fig12|fig13|fig14|fig15|sweeps
                                        one figure (same flags as figures)
+  datadiff scenarios [--name N] [--quick] [--scale X] [--jobs N] [--check]
+                                       workload scenario library acceptance
+                                       (zipf-churn, diurnal, bulk-batch,
+                                       pipeline — docs/WORKLOADS.md)
   datadiff validate-model [--pjrt]     model vs simulator (Figure 2 core)
   datadiff artifacts-check             verify AOT artifacts (PJRT)
   datadiff chaos [--seed N] [--events M] [--shards K] [--policy P]
-                 [--sweep N] [--quick] [--self-test]
+                 [--sweep N] [--scenario F] [--quick] [--self-test]
                                        seeded fault injection vs the oracle
   datadiff help
 
@@ -64,9 +80,20 @@ oracle checks exactly-once terminals, replica accounting, and that no
 dispatch or fetch touches a dead executor. --sweep N runs N consecutive
 seeds cycling through all 5 policies x shards 1 and 4; --quick shrinks
 each run to the CI smoke size; --self-test breaks an invariant on purpose
-and prints the seed + fault plan + trailing trace dump. Exit is non-zero
-if any run violates the oracle, stalls, or injects zero faults —
-reproduce any failure with `datadiff chaos --seed N` (docs/CHAOS.md).";
+and prints the seed + fault plan + trailing trace dump. --scenario F
+draws the task stream from a scenario-library family instead of the
+built-in uniform stream (dependency-gated for pipelines). Exit is
+non-zero if any run violates the oracle, stalls, or injects zero
+faults — reproduce any failure with `datadiff chaos --seed N
+[--scenario F]` (docs/CHAOS.md).
+
+scenarios runs each workload family (heavy-tailed popularity with hot-set
+churn, diurnal multi-user traffic with flash crowds, bulk batch
+submission, multi-stage pipelines with dependency edges) end-to-end at
+shards 1 and 4 and prints an acceptance table per family: task/edge
+counts, the workload fingerprint, and the run's efficiency and hit-rate
+split. --name picks one family; --quick/--scale/--jobs/--check behave as
+for `figures` (docs/WORKLOADS.md).";
 
 /// Parsed command line.
 #[derive(Debug)]
@@ -112,10 +139,23 @@ pub enum Command {
         /// Sweep width: N consecutive seeds cycling through all five
         /// policies × shards {1, 4}.
         sweep: Option<usize>,
+        /// Scenario-library task stream (None = the built-in stream).
+        scenario: Option<crate::config::ScenarioSpec>,
         /// CI smoke size (fewer events, smaller fleet).
         quick: bool,
         /// Deliberately break an invariant and print the oracle dump.
         self_test: bool,
+    },
+    /// Run the workload scenario library acceptance tables.
+    Scenarios {
+        /// One family by name (None = all four).
+        name: Option<String>,
+        /// Workload scale factor (as for `figures`).
+        scale: f64,
+        /// Fan-out width (None = all cores).
+        jobs: Option<usize>,
+        /// Fail on NaN cells / empty tables (the CI smoke gate).
+        check: bool,
     },
     /// Print usage.
     Help,
@@ -134,12 +174,12 @@ pub fn parse(args: &[String]) -> Result<Command> {
             let takes_value = matches!(
                 name,
                 "fig" | "config" | "view" | "scale" | "jobs" | "allocation" | "shards"
-                    | "seed" | "events" | "policy" | "sweep"
+                    | "seed" | "events" | "policy" | "sweep" | "name" | "cache" | "scenario"
             );
             let value = if takes_value {
                 Some(
                     it.next()
-                        .ok_or_else(|| Error::Config(format!("--{name} needs a value")))?
+                        .ok_or_else(|| Error::config(format!("--{name} needs a value")))?
                         .as_str(),
                 )
             } else {
@@ -147,7 +187,7 @@ pub fn parse(args: &[String]) -> Result<Command> {
             };
             flags.push((name, value));
         } else {
-            return Err(Error::Config(format!("unexpected argument `{a}`")));
+            return Err(Error::config(format!("unexpected argument `{a}`")));
         }
     }
     let get = |name: &str| flags.iter().find(|(n, _)| *n == name).map(|(_, v)| *v);
@@ -157,25 +197,30 @@ pub fn parse(args: &[String]) -> Result<Command> {
             let mut config = if let Some(Some(fig)) = get("fig") {
                 let n: u32 = fig
                     .parse()
-                    .map_err(|_| Error::Config(format!("bad figure `{fig}`")))?;
+                    .map_err(|_| Error::config(format!("bad figure `{fig}`")))?;
                 ExperimentConfig::paper_fig(n)
-                    .ok_or_else(|| Error::Config(format!("no preset for figure {n}")))?
+                    .ok_or_else(|| Error::config(format!("no preset for figure {n}")))?
             } else if let Some(Some(path)) = get("config") {
                 ExperimentConfig::from_file(std::path::Path::new(path))?
             } else {
-                return Err(Error::Config("run needs --fig N or --config FILE".into()));
+                return Err(Error::config("run needs --fig N or --config FILE"));
             };
             if let Some(Some(alloc)) = get("allocation") {
-                config.provisioner.allocation =
-                    crate::coordinator::provisioner::AllocationPolicy::parse_flag(alloc)
-                        .map_err(Error::Config)?;
+                config.provisioner.allocation = alloc
+                    .parse::<crate::coordinator::provisioner::AllocationPolicy>()
+                    .map_err(Error::config)?;
+            }
+            if let Some(Some(cache)) = get("cache") {
+                config.cache.policy = cache
+                    .parse::<crate::cache::EvictionPolicy>()
+                    .map_err(Error::config)?;
             }
             if let Some(Some(k)) = get("shards") {
                 let n: usize = k
                     .parse()
-                    .map_err(|_| Error::Config(format!("bad --shards `{k}`")))?;
+                    .map_err(|_| Error::config(format!("bad --shards `{k}`")))?;
                 if n == 0 {
-                    return Err(Error::Config("--shards must be >= 1".into()));
+                    return Err(Error::config("--shards must be >= 1"));
                 }
                 config.cluster.shards = n;
                 // Full cross-field validation (quota per shard, static
@@ -184,7 +229,7 @@ pub fn parse(args: &[String]) -> Result<Command> {
             let view_every_s = match get("view") {
                 Some(Some(v)) => v
                     .parse()
-                    .map_err(|_| Error::Config(format!("bad --view `{v}`")))?,
+                    .map_err(|_| Error::config(format!("bad --view `{v}`")))?,
                 _ => 120,
             };
             Ok(Command::Run {
@@ -216,11 +261,17 @@ pub fn parse(args: &[String]) -> Result<Command> {
             pjrt: get("pjrt").is_some(),
         }),
         "artifacts-check" => Ok(Command::ArtifactsCheck),
+        "scenarios" => Ok(Command::Scenarios {
+            name: get("name").flatten().map(String::from),
+            scale: parse_figures_scale(&get)?,
+            jobs: parse_jobs(get("jobs"))?,
+            check: get("check").is_some(),
+        }),
         "chaos" => {
             let seed = match get("seed") {
                 Some(Some(s)) => s
                     .parse()
-                    .map_err(|_| Error::Config(format!("bad --seed `{s}`")))?,
+                    .map_err(|_| Error::config(format!("bad --seed `{s}`")))?,
                 _ => 1,
             };
             let events = match get("events") {
@@ -233,13 +284,22 @@ pub fn parse(args: &[String]) -> Result<Command> {
             };
             let policy = match get("policy") {
                 Some(Some(s)) => Some(
-                    crate::coordinator::scheduler::DispatchPolicy::parse(s)
-                        .ok_or_else(|| Error::Config(format!("bad --policy `{s}`")))?,
+                    s.parse::<crate::coordinator::scheduler::DispatchPolicy>()
+                        .map_err(Error::config)?,
                 ),
                 _ => None,
             };
             let sweep = match get("sweep") {
                 Some(Some(s)) => Some(parse_positive(s, "sweep")?),
+                _ => None,
+            };
+            let scenario = match get("scenario") {
+                Some(Some(s)) => Some(crate::config::ScenarioSpec::preset(s).ok_or_else(|| {
+                    Error::config(format!(
+                        "unknown scenario `{s}` (expected one of: {})",
+                        crate::config::ScenarioSpec::CATALOG.join(", ")
+                    ))
+                })?),
                 _ => None,
             };
             Ok(Command::Chaos {
@@ -248,11 +308,12 @@ pub fn parse(args: &[String]) -> Result<Command> {
                 shards,
                 policy,
                 sweep,
+                scenario,
                 quick: get("quick").is_some(),
                 self_test: get("self-test").is_some(),
             })
         }
-        other => Err(Error::Config(format!("unknown command `{other}`"))),
+        other => Err(Error::config(format!("unknown command `{other}`"))),
     }
 }
 
@@ -264,7 +325,7 @@ fn parse_figures_scale<'a>(get: &impl Fn(&str) -> Option<Option<&'a str>>) -> Re
     if let Some(Some(s)) = get("scale") {
         return s
             .parse()
-            .map_err(|_| Error::Config(format!("bad --scale `{s}`")));
+            .map_err(|_| Error::config(format!("bad --scale `{s}`")));
     }
     Ok(if get("quick").is_some() { QUICK_SCALE } else { 1.0 })
 }
@@ -274,10 +335,9 @@ fn parse_figures_scale<'a>(get: &impl Fn(&str) -> Option<Option<&'a str>>) -> Re
 /// benchmarked the sharded router. Reject it loudly instead.
 fn reject_shards_flag<'a>(get: &impl Fn(&str) -> Option<Option<&'a str>>) -> Result<()> {
     if get("shards").is_some() {
-        return Err(Error::Config(
+        return Err(Error::config(
             "--shards applies to `run` only; use `run --fig N --shards K` \
-             (figure-suite workloads pin their cluster shape)"
-                .into(),
+             (figure-suite workloads pin their cluster shape)",
         ));
     }
     Ok(())
@@ -286,9 +346,9 @@ fn reject_shards_flag<'a>(get: &impl Fn(&str) -> Option<Option<&'a str>>) -> Res
 fn parse_positive(s: &str, flag: &str) -> Result<usize> {
     let n: usize = s
         .parse()
-        .map_err(|_| Error::Config(format!("bad --{flag} `{s}`")))?;
+        .map_err(|_| Error::config(format!("bad --{flag} `{s}`")))?;
     if n == 0 {
-        return Err(Error::Config(format!("--{flag} must be >= 1")));
+        return Err(Error::config(format!("--{flag} must be >= 1")));
     }
     Ok(n)
 }
@@ -298,9 +358,9 @@ fn parse_jobs(v: Option<Option<&str>>) -> Result<Option<usize>> {
         Some(Some(s)) => {
             let n: usize = s
                 .parse()
-                .map_err(|_| Error::Config(format!("bad --jobs `{s}`")))?;
+                .map_err(|_| Error::config(format!("bad --jobs `{s}`")))?;
             if n == 0 {
-                return Err(Error::Config("--jobs must be >= 1".into()));
+                return Err(Error::config("--jobs must be >= 1"));
             }
             Ok(Some(n))
         }
@@ -389,21 +449,82 @@ pub fn execute(cmd: Command) -> Result<i32> {
             shards,
             policy,
             sweep,
+            scenario,
             quick,
             self_test,
-        } => run_chaos_command(seed, events, shards, policy, sweep, quick, self_test),
+        } => run_chaos_command(seed, events, shards, policy, sweep, scenario, quick, self_test),
+        Command::Scenarios {
+            name,
+            scale,
+            jobs,
+            check,
+        } => {
+            run_scenarios_command(name.as_deref(), scale, jobs, check)?;
+            Ok(0)
+        }
     }
+}
+
+/// `datadiff scenarios`: run the workload scenario library's acceptance
+/// figures (all four families, or one via `--name`), printing one table
+/// per family. `--check` applies the same output gate as `figures
+/// --check` — the CI `scenarios-smoke` command.
+fn run_scenarios_command(
+    name: Option<&str>,
+    scale: f64,
+    jobs: Option<usize>,
+    check: bool,
+) -> Result<()> {
+    use crate::config::ScenarioSpec;
+    let ids: Vec<String> = match name {
+        Some(n) => {
+            let spec = ScenarioSpec::preset(n).ok_or_else(|| {
+                Error::config(format!(
+                    "unknown scenario `{n}` (expected one of: {})",
+                    ScenarioSpec::CATALOG.join(", ")
+                ))
+            })?;
+            vec![experiments::scenarios::figure_id(&spec)]
+        }
+        None => ScenarioSpec::CATALOG
+            .iter()
+            .map(|n| format!("scenario-{n}"))
+            .collect(),
+    };
+    let ids: Vec<&str> = ids.iter().map(String::as_str).collect();
+    let jobs = jobs.unwrap_or_else(crate::util::par::default_jobs);
+    crate::info!(
+        "scenario suite: {} famil(ies) at scale {scale} with {jobs} job(s)",
+        ids.len()
+    );
+    let outputs = registry::run_selected(&ids, scale, jobs);
+    for o in &outputs {
+        for t in &o.tables {
+            t.print();
+        }
+    }
+    if check {
+        registry::check_outputs(&outputs).map_err(Error::SimInvariant)?;
+        println!(
+            "scenario check OK: {} famil(ies), {} tables, no NaN/empty output",
+            outputs.len(),
+            outputs.iter().map(|o| o.tables.len()).sum::<usize>()
+        );
+    }
+    Ok(())
 }
 
 /// `datadiff chaos`: seeded fault schedules against the shadow-state
 /// oracle, one summary line per run. Exit 1 on any non-clean run (oracle
 /// violation, stall, or a schedule that injected zero faults).
+#[allow(clippy::too_many_arguments)]
 fn run_chaos_command(
     seed: u64,
     events: Option<usize>,
     shards: Option<usize>,
     policy: Option<crate::coordinator::scheduler::DispatchPolicy>,
     sweep: Option<usize>,
+    scenario: Option<crate::config::ScenarioSpec>,
     quick: bool,
     self_test: bool,
 ) -> Result<i32> {
@@ -423,6 +544,7 @@ fn run_chaos_command(
         if let Some(m) = events {
             c.events = m;
         }
+        c.scenario = scenario.clone();
         c
     };
     let mut reports = Vec::new();
@@ -508,7 +630,12 @@ fn print_shard_counters(shard: &crate::metrics::ShardCounters) {
 
 fn run_figures(which: &str, scale: f64, jobs: Option<usize>, check: bool) -> Result<()> {
     let ids: Vec<&str> = match which {
-        "all" => registry::all_ids(),
+        // `figures` keeps its paper-reproduction contract: the workload
+        // scenario acceptance figures run via `datadiff scenarios`.
+        "all" => registry::all_ids()
+            .into_iter()
+            .filter(|id| !id.starts_with("scenario-"))
+            .collect(),
         "2" => vec!["fig02"],
         "3" => vec!["fig03"],
         "4-10" => vec!["fig04-10"],
@@ -518,7 +645,7 @@ fn run_figures(which: &str, scale: f64, jobs: Option<usize>, check: bool) -> Res
         "14" => vec!["fig14"],
         "15" => vec!["fig15"],
         "sweeps" => vec!["sweep-eviction", "sweep-dispatch"],
-        other => return Err(Error::Config(format!("unknown figure set `{other}`"))),
+        other => return Err(Error::config(format!("unknown figure set `{other}`"))),
     };
     let jobs = jobs.unwrap_or_else(crate::util::par::default_jobs);
     crate::info!(
@@ -710,6 +837,7 @@ mod tests {
                 shards,
                 policy,
                 sweep,
+                scenario,
                 quick,
                 self_test,
             } => {
@@ -718,6 +846,7 @@ mod tests {
                 assert_eq!(shards, Some(4));
                 assert_eq!(policy, Some(DispatchPolicy::MaxCacheHit));
                 assert_eq!(sweep, None);
+                assert_eq!(scenario, None);
                 assert!(quick);
                 assert!(!self_test);
             }
@@ -731,12 +860,13 @@ mod tests {
                 shards,
                 policy,
                 sweep,
+                scenario,
                 quick,
                 self_test,
             } => {
                 assert_eq!(seed, 1);
                 assert!(events.is_none() && shards.is_none() && policy.is_none());
-                assert!(sweep.is_none() && !quick && !self_test);
+                assert!(sweep.is_none() && scenario.is_none() && !quick && !self_test);
             }
             other => panic!("{other:?}"),
         }
@@ -744,10 +874,56 @@ mod tests {
             parse(&args("chaos --sweep 32 --self-test")).unwrap(),
             Command::Chaos { sweep: Some(32), self_test: true, .. }
         ));
+        // Scenario streams parse through the catalog presets.
+        match parse(&args("chaos --scenario zipf_churn")).unwrap() {
+            Command::Chaos { scenario, .. } => {
+                assert_eq!(scenario.map(|s| s.name()), Some("zipf-churn"));
+            }
+            other => panic!("{other:?}"),
+        }
         assert!(parse(&args("chaos --seed banana")).is_err());
         assert!(parse(&args("chaos --events 0")).is_err());
         assert!(parse(&args("chaos --sweep 0")).is_err());
         assert!(parse(&args("chaos --policy banana")).is_err());
+        assert!(parse(&args("chaos --scenario banana")).is_err());
+    }
+
+    #[test]
+    fn parses_run_cache_override() {
+        use crate::cache::EvictionPolicy;
+        match parse(&args("run --fig 7 --cache lfu")).unwrap() {
+            Command::Run { config, .. } => {
+                assert_eq!(config.cache.policy, EvictionPolicy::Lfu);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(parse(&args("run --fig 7 --cache banana")).is_err());
+    }
+
+    #[test]
+    fn parses_scenarios() {
+        match parse(&args("scenarios --name zipf-churn --quick --jobs 2 --check")).unwrap() {
+            Command::Scenarios {
+                name,
+                scale,
+                jobs,
+                check,
+            } => {
+                assert_eq!(name.as_deref(), Some("zipf-churn"));
+                assert!((scale - QUICK_SCALE).abs() < 1e-12);
+                assert_eq!(jobs, Some(2));
+                assert!(check);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(
+            parse(&args("scenarios")).unwrap(),
+            Command::Scenarios { name: None, jobs: None, check: false, .. }
+        ));
+        // Family names resolve lazily at execute time; a bogus one is a
+        // uniform typed config error there.
+        assert!(run_scenarios_command(Some("banana"), 0.02, Some(1), false).is_err());
+        assert!(parse(&args("scenarios --name")).is_err());
     }
 
     #[test]

@@ -13,7 +13,72 @@ use crate::coordinator::provisioner::{AllocationPolicy, ProvisionerConfig};
 use crate::coordinator::scheduler::{DispatchPolicy, SchedulerConfig};
 use crate::util::units::{GB, MB};
 use crate::{Error, Result};
+use std::fmt;
 use toml_lite::Document;
+
+/// A typed configuration error: which field, which value, what was
+/// expected. [`Error::Config`] wraps this, so every config failure —
+/// TOML loading, validation, CLI flag parsing — renders uniformly.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ConfigError {
+    /// A key outside the schema (typos fail loudly).
+    UnknownKey {
+        /// The offending key.
+        key: String,
+    },
+    /// A key whose value failed to parse or is outside its domain.
+    InvalidValue {
+        /// Dotted key or flag name.
+        key: String,
+        /// The offending value, verbatim.
+        value: String,
+        /// What would have been accepted.
+        expected: String,
+    },
+    /// A key another setting requires is absent.
+    MissingKey {
+        /// The absent key.
+        key: String,
+        /// Which setting needs it.
+        context: String,
+    },
+    /// A cross-field invariant violation from [`ExperimentConfig::validate`].
+    Invariant {
+        /// Field (dotted path) the invariant is anchored to.
+        field: String,
+        /// Human-readable violation.
+        message: String,
+    },
+    /// TOML-subset syntax error from [`toml_lite`].
+    Toml(String),
+    /// Free-form configuration error (CLI usage and similar callers).
+    Message(String),
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::UnknownKey { key } => write!(f, "unknown config key `{key}`"),
+            ConfigError::InvalidValue {
+                key,
+                value,
+                expected,
+            } => write!(f, "invalid value `{value}` for `{key}`: expected {expected}"),
+            ConfigError::MissingKey { key, context } => {
+                write!(f, "missing key `{key}`: required by {context}")
+            }
+            ConfigError::Invariant { field, message } => write!(f, "{field}: {message}"),
+            ConfigError::Toml(m) => write!(f, "TOML: {m}"),
+            ConfigError::Message(m) => f.write_str(m),
+        }
+    }
+}
+
+impl From<ConfigError> for Error {
+    fn from(e: ConfigError) -> Error {
+        Error::Config(e)
+    }
+}
 
 /// Physical testbed parameters (the simulated ANL/UC TeraGrid site).
 #[derive(Debug, Clone)]
@@ -104,6 +169,201 @@ pub enum AccessSpec {
     Locality(f64),
 }
 
+/// A workload scenario from the scenario library
+/// (`rust/src/workload/scenarios/`; catalog in `docs/WORKLOADS.md`).
+///
+/// When [`WorkloadConfig::scenario`] is set, the scenario's own arrival
+/// and access model replaces [`ArrivalSpec`]/[`AccessSpec`]; task count,
+/// catalog size, file size, and compute time still come from the
+/// surrounding [`WorkloadConfig`]. Each variant has a named preset
+/// ([`ScenarioSpec::preset`]) whose parameters TOML `scenario.*` keys
+/// override.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScenarioSpec {
+    /// Zipf popularity by rank with the rank→file map rewired every
+    /// churn interval.
+    ZipfChurn {
+        /// Zipf exponent over ranks.
+        s: f64,
+        /// Seconds between hot-set rewires.
+        churn_interval_s: f64,
+        /// Fraction of the catalog rewired per churn (the hot head).
+        churn_fraction: f64,
+        /// Constant arrival rate, tasks/s.
+        rate: f64,
+    },
+    /// Diurnal multi-user traffic with seeded flash crowds.
+    Diurnal {
+        /// Simulated user population size.
+        users: u32,
+        /// Day/night cycle length, seconds.
+        period_s: f64,
+        /// Rate at the cycle peak, tasks/s.
+        peak_rate: f64,
+        /// Rate at the cycle trough, tasks/s.
+        trough_rate: f64,
+        /// Number of flash-crowd windows.
+        flash_crowds: u32,
+        /// Rate multiplier inside a flash window.
+        flash_factor: f64,
+        /// Flash window length, seconds.
+        flash_duration_s: f64,
+    },
+    /// DIANA-style at-once batch submission over per-batch datasets.
+    BulkBatch {
+        /// Number of batches.
+        batches: u32,
+        /// Seconds between batch submissions.
+        batch_gap_s: f64,
+    },
+    /// Pilot-Data-style fan-in pipelines (outputs feed downstream
+    /// inputs; dependency edges gate submission).
+    Pipeline {
+        /// Stages per pipeline.
+        stages: u32,
+        /// Stage-0 width; later stages halve it.
+        fanin: u32,
+        /// Seconds between pipeline submissions.
+        submit_gap_s: f64,
+    },
+}
+
+impl ScenarioSpec {
+    /// Every scenario family's preset name, in catalog order.
+    pub const CATALOG: [&'static str; 4] =
+        ["zipf-churn", "diurnal", "bulk-batch", "pipeline"];
+
+    /// The family's preset name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScenarioSpec::ZipfChurn { .. } => "zipf-churn",
+            ScenarioSpec::Diurnal { .. } => "diurnal",
+            ScenarioSpec::BulkBatch { .. } => "bulk-batch",
+            ScenarioSpec::Pipeline { .. } => "pipeline",
+        }
+    }
+
+    /// Default parameters for a named family (hyphens and underscores
+    /// both accepted). `None` for names outside [`Self::CATALOG`].
+    pub fn preset(name: &str) -> Option<ScenarioSpec> {
+        match name.replace('_', "-").as_str() {
+            "zipf-churn" => Some(ScenarioSpec::ZipfChurn {
+                s: 1.1,
+                churn_interval_s: 4.0,
+                churn_fraction: 0.1,
+                rate: 250.0,
+            }),
+            "diurnal" => Some(ScenarioSpec::Diurnal {
+                users: 64,
+                period_s: 60.0,
+                peak_rate: 50.0,
+                trough_rate: 5.0,
+                flash_crowds: 2,
+                flash_factor: 4.0,
+                flash_duration_s: 10.0,
+            }),
+            "bulk-batch" => Some(ScenarioSpec::BulkBatch {
+                batches: 8,
+                batch_gap_s: 30.0,
+            }),
+            "pipeline" => Some(ScenarioSpec::Pipeline {
+                stages: 3,
+                fanin: 4,
+                submit_gap_s: 0.05,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Apply `scenario.*` overrides from a parsed document.
+    fn apply_overrides(&mut self, doc: &Document) {
+        match self {
+            ScenarioSpec::ZipfChurn {
+                s,
+                churn_interval_s,
+                churn_fraction,
+                rate,
+            } => {
+                if let Some(v) = doc.get_float("scenario.zipf_s") {
+                    *s = v;
+                }
+                if let Some(v) = doc.get_float("scenario.churn_interval_s") {
+                    *churn_interval_s = v;
+                }
+                if let Some(v) = doc.get_float("scenario.churn_fraction") {
+                    *churn_fraction = v;
+                }
+                if let Some(v) = doc.get_float("scenario.rate") {
+                    *rate = v;
+                }
+            }
+            ScenarioSpec::Diurnal {
+                users,
+                period_s,
+                peak_rate,
+                trough_rate,
+                flash_crowds,
+                flash_factor,
+                flash_duration_s,
+            } => {
+                if let Some(v) = doc.get_int("scenario.users") {
+                    *users = v as u32;
+                }
+                if let Some(v) = doc.get_float("scenario.period_s") {
+                    *period_s = v;
+                }
+                if let Some(v) = doc.get_float("scenario.peak_rate") {
+                    *peak_rate = v;
+                }
+                if let Some(v) = doc.get_float("scenario.trough_rate") {
+                    *trough_rate = v;
+                }
+                if let Some(v) = doc.get_int("scenario.flash_crowds") {
+                    *flash_crowds = v as u32;
+                }
+                if let Some(v) = doc.get_float("scenario.flash_factor") {
+                    *flash_factor = v;
+                }
+                if let Some(v) = doc.get_float("scenario.flash_duration_s") {
+                    *flash_duration_s = v;
+                }
+            }
+            ScenarioSpec::BulkBatch {
+                batches,
+                batch_gap_s,
+            } => {
+                if let Some(v) = doc.get_int("scenario.batches") {
+                    *batches = v as u32;
+                }
+                if let Some(v) = doc.get_float("scenario.batch_gap_s") {
+                    *batch_gap_s = v;
+                }
+            }
+            ScenarioSpec::Pipeline {
+                stages,
+                fanin,
+                submit_gap_s,
+            } => {
+                if let Some(v) = doc.get_int("scenario.stages") {
+                    *stages = v as u32;
+                }
+                if let Some(v) = doc.get_int("scenario.fanin") {
+                    *fanin = v as u32;
+                }
+                if let Some(v) = doc.get_float("scenario.submit_gap_s") {
+                    *submit_gap_s = v;
+                }
+            }
+        }
+    }
+}
+
+impl fmt::Display for ScenarioSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Workload description (task count, dataset, arrival, access pattern).
 #[derive(Debug, Clone)]
 pub struct WorkloadConfig {
@@ -115,10 +375,13 @@ pub struct WorkloadConfig {
     pub file_size_bytes: u64,
     /// Per-task compute time μ(κ), milliseconds (paper: 10 ms).
     pub compute_ms: f64,
-    /// Arrival process.
+    /// Arrival process (ignored when a scenario is configured).
     pub arrival: ArrivalSpec,
-    /// File access pattern.
+    /// File access pattern (ignored when a scenario is configured).
     pub access: AccessSpec,
+    /// Scenario-library workload; `None` is the paper's generator,
+    /// bit-identical to its pre-scenario form.
+    pub scenario: Option<ScenarioSpec>,
 }
 
 impl Default for WorkloadConfig {
@@ -136,6 +399,7 @@ impl Default for WorkloadConfig {
                 max_rate: 1000.0,
             },
             access: AccessSpec::Uniform,
+            scenario: None,
         }
     }
 }
@@ -215,7 +479,7 @@ impl ExperimentConfig {
     /// Parse from TOML-subset text. Unknown keys are rejected so typos in
     /// experiment files fail loudly.
     pub fn from_toml(text: &str) -> Result<ExperimentConfig> {
-        let doc = Document::parse(text).map_err(Error::Config)?;
+        let doc = Document::parse(text).map_err(|e| Error::Config(ConfigError::Toml(e)))?;
         let mut cfg = ExperimentConfig::default();
 
         const KNOWN: &[&str] = &[
@@ -245,6 +509,23 @@ impl ExperimentConfig {
             "workload.access",
             "workload.zipf_s",
             "workload.locality",
+            "workload.scenario",
+            "scenario.zipf_s",
+            "scenario.churn_interval_s",
+            "scenario.churn_fraction",
+            "scenario.rate",
+            "scenario.users",
+            "scenario.period_s",
+            "scenario.peak_rate",
+            "scenario.trough_rate",
+            "scenario.flash_crowds",
+            "scenario.flash_factor",
+            "scenario.flash_duration_s",
+            "scenario.batches",
+            "scenario.batch_gap_s",
+            "scenario.stages",
+            "scenario.fanin",
+            "scenario.submit_gap_s",
             "scheduler.policy",
             "scheduler.window_multiplier",
             "scheduler.cpu_util_threshold",
@@ -261,7 +542,7 @@ impl ExperimentConfig {
         ];
         for key in doc.keys() {
             if !KNOWN.contains(&key) {
-                return Err(Error::Config(format!("unknown config key `{key}`")));
+                return Err(ConfigError::UnknownKey { key: key.into() }.into());
             }
         }
 
@@ -346,14 +627,22 @@ impl ExperimentConfig {
                 }
             }
             Some("constant") => {
-                let rate = doc
-                    .get_float("workload.arrival_rate")
-                    .ok_or_else(|| Error::Config("constant arrival needs workload.arrival_rate".into()))?;
+                let rate = doc.get_float("workload.arrival_rate").ok_or_else(|| {
+                    ConfigError::MissingKey {
+                        key: "workload.arrival_rate".into(),
+                        context: "workload.arrival = \"constant\"".into(),
+                    }
+                })?;
                 w.arrival = ArrivalSpec::Constant(rate);
             }
             Some("batch") => w.arrival = ArrivalSpec::Batch,
             Some(other) => {
-                return Err(Error::Config(format!("unknown arrival spec `{other}`")));
+                return Err(ConfigError::InvalidValue {
+                    key: "workload.arrival".into(),
+                    value: other.into(),
+                    expected: "increasing, constant, or batch".into(),
+                }
+                .into());
             }
         }
         match doc.get_str("workload.access") {
@@ -363,21 +652,41 @@ impl ExperimentConfig {
                 w.access = AccessSpec::Zipf(s);
             }
             Some("locality") => {
-                let l = doc
-                    .get_float("workload.locality")
-                    .ok_or_else(|| Error::Config("locality access needs workload.locality".into()))?;
+                let l = doc.get_float("workload.locality").ok_or_else(|| {
+                    ConfigError::MissingKey {
+                        key: "workload.locality".into(),
+                        context: "workload.access = \"locality\"".into(),
+                    }
+                })?;
                 w.access = AccessSpec::Locality(l);
             }
             Some(other) => {
-                return Err(Error::Config(format!("unknown access spec `{other}`")));
+                return Err(ConfigError::InvalidValue {
+                    key: "workload.access".into(),
+                    value: other.into(),
+                    expected: "uniform, zipf, or locality".into(),
+                }
+                .into());
             }
+        }
+        if let Some(name) = doc.get_str("workload.scenario") {
+            let mut spec = ScenarioSpec::preset(name).ok_or_else(|| ConfigError::InvalidValue {
+                key: "workload.scenario".into(),
+                value: name.into(),
+                expected: format!("one of {}", ScenarioSpec::CATALOG.join(", ")),
+            })?;
+            spec.apply_overrides(&doc);
+            w.scenario = Some(spec);
         }
 
         // [scheduler]
         let s = &mut cfg.scheduler;
         if let Some(p) = doc.get_str("scheduler.policy") {
-            s.policy = DispatchPolicy::parse(p)
-                .ok_or_else(|| Error::Config(format!("unknown dispatch policy `{p}`")))?;
+            s.policy = DispatchPolicy::parse(p).ok_or_else(|| ConfigError::InvalidValue {
+                key: "scheduler.policy".into(),
+                value: p.into(),
+                expected: "a dispatch policy name (see docs)".into(),
+            })?;
         }
         if let Some(v) = doc.get_int("scheduler.window_multiplier") {
             s.window_multiplier = v as usize;
@@ -407,7 +716,12 @@ impl ExperimentConfig {
             }
             Some("all") => p.allocation = AllocationPolicy::AllAtOnce,
             Some(other) => {
-                return Err(Error::Config(format!("unknown allocation policy `{other}`")));
+                return Err(ConfigError::InvalidValue {
+                    key: "provisioner.allocation".into(),
+                    value: other.into(),
+                    expected: "one, additive, multiplicative, or all".into(),
+                }
+                .into());
             }
         }
         if let Some(v) = doc.get_float("provisioner.idle_release_s") {
@@ -425,8 +739,11 @@ impl ExperimentConfig {
             cfg.cache.capacity_bytes = (v * GB as f64) as u64;
         }
         if let Some(v) = doc.get_str("cache.policy") {
-            cfg.cache.policy = EvictionPolicy::parse(v)
-                .ok_or_else(|| Error::Config(format!("unknown eviction policy `{v}`")))?;
+            cfg.cache.policy = EvictionPolicy::parse(v).ok_or_else(|| ConfigError::InvalidValue {
+                key: "cache.policy".into(),
+                value: v.into(),
+                expected: "random, fifo, lru, or lfu".into(),
+            })?;
         }
 
         cfg.validate()?;
@@ -439,32 +756,42 @@ impl ExperimentConfig {
         Self::from_toml(&text)
     }
 
-    /// Sanity-check invariants; returns a config error on violation.
+    /// Sanity-check invariants; returns a typed
+    /// [`ConfigError::Invariant`] (field + violation) on the first one
+    /// broken.
     pub fn validate(&self) -> Result<()> {
-        let fail = |msg: String| Err(Error::Config(msg));
+        let fail = |field: &str, message: String| {
+            Err(Error::Config(ConfigError::Invariant {
+                field: field.into(),
+                message,
+            }))
+        };
         if self.cluster.max_nodes == 0 {
-            return fail("cluster.max_nodes must be ≥ 1".into());
+            return fail("cluster.max_nodes", "must be ≥ 1".into());
         }
         if self.cluster.cpus_per_node == 0 {
-            return fail("cluster.cpus_per_node must be ≥ 1".into());
+            return fail("cluster.cpus_per_node", "must be ≥ 1".into());
         }
         for (name, v) in [
-            ("gpfs_gbps", self.cluster.gpfs_gbps),
-            ("local_disk_gbps", self.cluster.local_disk_gbps),
-            ("nic_gbps", self.cluster.nic_gbps),
+            ("cluster.gpfs_gbps", self.cluster.gpfs_gbps),
+            ("cluster.local_disk_gbps", self.cluster.local_disk_gbps),
+            ("cluster.nic_gbps", self.cluster.nic_gbps),
         ] {
             if v <= 0.0 {
-                return fail(format!("cluster.{name} must be > 0"));
+                return fail(name, format!("must be > 0, got {v}"));
             }
         }
         if self.cluster.gram_latency_s.0 > self.cluster.gram_latency_s.1 {
-            return fail("gram latency min > max".into());
+            return fail("cluster.gram_latency_s", "min > max".into());
         }
         if self.workload.num_tasks == 0 || self.workload.num_files == 0 {
-            return fail("workload must have tasks and files".into());
+            return fail("workload", "must have tasks and files".into());
         }
         if self.workload.compute_ms < 0.0 {
-            return fail("workload.compute_ms must be ≥ 0".into());
+            return fail(
+                "workload.compute_ms",
+                format!("must be ≥ 0, got {}", self.workload.compute_ms),
+            );
         }
         match self.workload.arrival {
             ArrivalSpec::IncreasingRate {
@@ -474,59 +801,192 @@ impl ExperimentConfig {
                 max_rate,
             } => {
                 if initial <= 0.0 || factor <= 1.0 || interval_s <= 0.0 || max_rate < initial {
-                    return fail("invalid increasing-rate arrival parameters".into());
+                    return fail(
+                        "workload.arrival",
+                        "invalid increasing-rate parameters".into(),
+                    );
                 }
             }
             ArrivalSpec::Constant(rate) => {
                 if rate <= 0.0 {
-                    return fail("constant arrival rate must be > 0".into());
+                    return fail("workload.arrival_rate", format!("must be > 0, got {rate}"));
                 }
             }
             ArrivalSpec::Batch => {}
         }
         if let AccessSpec::Locality(l) = self.workload.access {
             if l < 1.0 {
-                return fail("locality must be ≥ 1".into());
+                return fail("workload.locality", format!("must be ≥ 1, got {l}"));
             }
         }
+        self.validate_scenario()?;
         if !(0.0..=1.0).contains(&self.scheduler.cpu_util_threshold) {
-            return fail("cpu_util_threshold must be in [0,1]".into());
+            return fail(
+                "scheduler.cpu_util_threshold",
+                format!(
+                    "must be in [0,1], got {}",
+                    self.scheduler.cpu_util_threshold
+                ),
+            );
         }
         if self.scheduler.max_tasks_per_pickup == 0 {
-            return fail("max_tasks_per_pickup must be ≥ 1".into());
+            return fail("scheduler.max_tasks_per_pickup", "must be ≥ 1".into());
         }
         if self.scheduler.policy != DispatchPolicy::FirstAvailable
             && self.cache.capacity_bytes < self.workload.file_size_bytes
         {
-            return fail(format!(
-                "cache capacity {} cannot hold even one file of {}",
-                self.cache.capacity_bytes, self.workload.file_size_bytes
-            ));
+            return fail(
+                "cache.capacity_gb",
+                format!(
+                    "cache capacity {} cannot hold even one file of {}",
+                    self.cache.capacity_bytes, self.workload.file_size_bytes
+                ),
+            );
         }
         if self.provisioner.initial_nodes > self.cluster.max_nodes {
-            return fail("provisioner.initial_nodes > cluster.max_nodes".into());
+            return fail(
+                "provisioner.initial_nodes",
+                format!(
+                    "{} > cluster.max_nodes ({})",
+                    self.provisioner.initial_nodes, self.cluster.max_nodes
+                ),
+            );
         }
         if self.cluster.shards == 0 {
-            return fail("cluster.shards must be ≥ 1".into());
+            return fail("cluster.shards", "must be ≥ 1".into());
         }
         if self.cluster.shards > self.cluster.max_nodes {
-            return fail(format!(
-                "cluster.shards ({}) > cluster.max_nodes ({}): a shard with a \
-                 zero node quota could never run its tasks",
-                self.cluster.shards, self.cluster.max_nodes
-            ));
+            return fail(
+                "cluster.shards",
+                format!(
+                    "({}) > cluster.max_nodes ({}): a shard with a zero node \
+                     quota could never run its tasks",
+                    self.cluster.shards, self.cluster.max_nodes
+                ),
+            );
         }
         if self.cluster.shards > 1
             && self.provisioner.static_provisioning
             && self.provisioner.initial_nodes < self.cluster.shards
         {
-            return fail(format!(
-                "static provisioning with {} initial nodes across {} shards \
-                 leaves node-less shards that can never grow",
-                self.provisioner.initial_nodes, self.cluster.shards
-            ));
+            return fail(
+                "provisioner.initial_nodes",
+                format!(
+                    "static provisioning with {} initial nodes across {} shards \
+                     leaves node-less shards that can never grow",
+                    self.provisioner.initial_nodes, self.cluster.shards
+                ),
+            );
         }
         Ok(())
+    }
+
+    /// Scenario-parameter invariants (a no-op for legacy workloads).
+    fn validate_scenario(&self) -> Result<()> {
+        let fail = |field: &str, message: String| {
+            Err(Error::Config(ConfigError::Invariant {
+                field: field.into(),
+                message,
+            }))
+        };
+        match &self.workload.scenario {
+            None => Ok(()),
+            Some(ScenarioSpec::ZipfChurn {
+                s,
+                churn_interval_s,
+                churn_fraction,
+                rate,
+            }) => {
+                if *s < 0.0 {
+                    return fail("scenario.zipf_s", format!("must be ≥ 0, got {s}"));
+                }
+                if *churn_interval_s <= 0.0 {
+                    return fail(
+                        "scenario.churn_interval_s",
+                        format!("must be > 0, got {churn_interval_s}"),
+                    );
+                }
+                if !(0.0..=1.0).contains(churn_fraction) {
+                    return fail(
+                        "scenario.churn_fraction",
+                        format!("must be in [0,1], got {churn_fraction}"),
+                    );
+                }
+                if *rate <= 0.0 {
+                    return fail("scenario.rate", format!("must be > 0, got {rate}"));
+                }
+                Ok(())
+            }
+            Some(ScenarioSpec::Diurnal {
+                users,
+                period_s,
+                peak_rate,
+                trough_rate,
+                flash_factor,
+                flash_duration_s,
+                ..
+            }) => {
+                if *users == 0 {
+                    return fail("scenario.users", "must be ≥ 1".into());
+                }
+                if *period_s <= 0.0 {
+                    return fail("scenario.period_s", format!("must be > 0, got {period_s}"));
+                }
+                if *trough_rate <= 0.0 || peak_rate < trough_rate {
+                    return fail(
+                        "scenario.peak_rate",
+                        format!("need 0 < trough ({trough_rate}) ≤ peak ({peak_rate})"),
+                    );
+                }
+                if *flash_factor < 1.0 {
+                    return fail(
+                        "scenario.flash_factor",
+                        format!("must be ≥ 1, got {flash_factor}"),
+                    );
+                }
+                if *flash_duration_s < 0.0 {
+                    return fail(
+                        "scenario.flash_duration_s",
+                        format!("must be ≥ 0, got {flash_duration_s}"),
+                    );
+                }
+                Ok(())
+            }
+            Some(ScenarioSpec::BulkBatch {
+                batches,
+                batch_gap_s,
+            }) => {
+                if *batches == 0 {
+                    return fail("scenario.batches", "must be ≥ 1".into());
+                }
+                if *batch_gap_s < 0.0 {
+                    return fail(
+                        "scenario.batch_gap_s",
+                        format!("must be ≥ 0, got {batch_gap_s}"),
+                    );
+                }
+                Ok(())
+            }
+            Some(ScenarioSpec::Pipeline {
+                stages,
+                fanin,
+                submit_gap_s,
+            }) => {
+                if *stages == 0 {
+                    return fail("scenario.stages", "must be ≥ 1".into());
+                }
+                if *fanin == 0 {
+                    return fail("scenario.fanin", "must be ≥ 1".into());
+                }
+                if *submit_gap_s <= 0.0 {
+                    return fail(
+                        "scenario.submit_gap_s",
+                        format!("must be > 0, got {submit_gap_s}"),
+                    );
+                }
+                Ok(())
+            }
+        }
     }
 }
 
@@ -622,5 +1082,77 @@ mod tests {
         assert!(ExperimentConfig::from_toml("[cluster]\ngpfs_gbps = -1.0").is_err());
         assert!(ExperimentConfig::from_toml("[scheduler]\npolicy = \"bogus\"").is_err());
         assert!(ExperimentConfig::from_toml("[workload]\narrival = \"constant\"").is_err());
+    }
+
+    #[test]
+    fn scenario_parses_from_toml_with_overrides() {
+        let cfg = ExperimentConfig::from_toml(
+            "[workload]\nscenario = \"zipf-churn\"\n[scenario]\nzipf_s = 0.9\nrate = 100.0\n",
+        )
+        .unwrap();
+        match cfg.workload.scenario {
+            Some(ScenarioSpec::ZipfChurn { s, rate, .. }) => {
+                assert_eq!(s, 0.9);
+                assert_eq!(rate, 100.0);
+            }
+            other => panic!("wrong scenario: {other:?}"),
+        }
+        // Underscores are accepted in family names; unknown names fail.
+        assert!(
+            ExperimentConfig::from_toml("[workload]\nscenario = \"bulk_batch\"\n").is_ok()
+        );
+        let err =
+            ExperimentConfig::from_toml("[workload]\nscenario = \"nope\"\n").unwrap_err();
+        match err {
+            Error::Config(ConfigError::InvalidValue { key, value, .. }) => {
+                assert_eq!(key, "workload.scenario");
+                assert_eq!(value, "nope");
+            }
+            other => panic!("untyped error: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn config_errors_are_typed() {
+        match ExperimentConfig::from_toml("typo_key = 1").unwrap_err() {
+            Error::Config(ConfigError::UnknownKey { key }) => assert_eq!(key, "typo_key"),
+            other => panic!("untyped error: {other:?}"),
+        }
+        match ExperimentConfig::from_toml("[cluster]\ngpfs_gbps = -1.0").unwrap_err() {
+            Error::Config(ConfigError::Invariant { field, message }) => {
+                assert_eq!(field, "cluster.gpfs_gbps");
+                assert!(message.contains("-1"), "offending value in message: {message}");
+            }
+            other => panic!("untyped error: {other:?}"),
+        }
+        match ExperimentConfig::from_toml("[scheduler]\npolicy = \"bogus\"").unwrap_err() {
+            Error::Config(ConfigError::InvalidValue { key, value, .. }) => {
+                assert_eq!(key, "scheduler.policy");
+                assert_eq!(value, "bogus");
+            }
+            other => panic!("untyped error: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn scenario_params_validated() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload.scenario = Some(ScenarioSpec::ZipfChurn {
+            s: 1.0,
+            churn_interval_s: 0.0,
+            churn_fraction: 0.1,
+            rate: 10.0,
+        });
+        assert!(cfg.validate().is_err(), "zero churn interval");
+        cfg.workload.scenario = Some(ScenarioSpec::Pipeline {
+            stages: 0,
+            fanin: 4,
+            submit_gap_s: 1.0,
+        });
+        assert!(cfg.validate().is_err(), "zero stages");
+        for name in ScenarioSpec::CATALOG {
+            cfg.workload.scenario = ScenarioSpec::preset(name);
+            cfg.validate().unwrap();
+        }
     }
 }

@@ -734,12 +734,14 @@ impl CoordinatorCore {
     /// [`CoordinatorCore::probe_holder_nth`] this lets the shard router
     /// rotate cross-shard source selection over *all* of a file's
     /// foreign holders instead of always drafting the first.
+    #[doc(hidden)]
     pub fn probe_holder_count(&self, file: FileId) -> usize {
         self.index.holders(file).map_or(0, |h| h.len())
     }
 
     /// The `n`-th executor (ascending id order) caching `file`, if any.
     /// Read-only like [`CoordinatorCore::probe_holder`].
+    #[doc(hidden)]
     pub fn probe_holder_nth(&self, file: FileId, n: usize) -> Option<ExecutorId> {
         self.index.holders(file).and_then(|h| h.iter().nth(n))
     }

@@ -74,6 +74,17 @@ impl std::fmt::Display for AllocationPolicy {
     }
 }
 
+impl std::str::FromStr for AllocationPolicy {
+    type Err = String;
+
+    /// The `FromStr` face of [`AllocationPolicy::parse_flag`] — one
+    /// parser shared by every CLI subcommand and example. Round-trips
+    /// with `Display`.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        AllocationPolicy::parse_flag(s)
+    }
+}
+
 /// Provisioner tuning.
 #[derive(Debug, Clone)]
 pub struct ProvisionerConfig {
@@ -329,6 +340,8 @@ mod tests {
         for s in ["one", "add:8", "mult:2", "all"] {
             let p = AllocationPolicy::parse_flag(s).unwrap();
             assert_eq!(p.to_string(), s, "display must round-trip `{s}`");
+            // FromStr is the same parser.
+            assert_eq!(s.parse::<AllocationPolicy>(), Ok(p));
         }
         assert_eq!(
             AllocationPolicy::parse_flag("mult:1.5").unwrap(),

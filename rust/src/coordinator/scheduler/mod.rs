@@ -465,6 +465,7 @@ impl Scheduler {
     /// [`Scheduler::pick_tasks`] must agree with this function on every
     /// state (same tasks, same order); the `sched_parity` differential
     /// property test drives both across all five policies.
+    #[doc(hidden)]
     pub fn pick_refs_reference(
         &self,
         exec: ExecutorId,

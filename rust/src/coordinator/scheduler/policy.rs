@@ -78,6 +78,17 @@ impl std::fmt::Display for DispatchPolicy {
     }
 }
 
+impl std::str::FromStr for DispatchPolicy {
+    type Err = String;
+
+    /// The `FromStr` face of [`DispatchPolicy::parse`]. Round-trips
+    /// with `Display`.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        DispatchPolicy::parse(s)
+            .ok_or_else(|| format!("unknown dispatch policy `{s}` (fa|fca|mch|mcu|gcc)"))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -90,6 +101,14 @@ mod tests {
         assert_eq!(DispatchPolicy::parse("GCC"), Some(DispatchPolicy::GoodCacheCompute));
         assert_eq!(DispatchPolicy::parse("max_cache_hit"), Some(DispatchPolicy::MaxCacheHit));
         assert_eq!(DispatchPolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn from_str_round_trips_with_display() {
+        for p in DispatchPolicy::ALL {
+            assert_eq!(p.to_string().parse::<DispatchPolicy>(), Ok(p));
+        }
+        assert!("nope".parse::<DispatchPolicy>().is_err());
     }
 
     #[test]

@@ -18,7 +18,7 @@
 //! tables and non-finite cells, so a regression that silently produces
 //! NaN efficiency or an empty sweep fails the build.
 
-use super::{fig02, fig03, fig04_10, fig11, fig12, fig13, fig14, fig15, sweeps};
+use super::{fig02, fig03, fig04_10, fig11, fig12, fig13, fig14, fig15, scenarios, sweeps};
 use crate::config::ExperimentConfig;
 use crate::report::Table;
 use crate::sim::RunResult;
@@ -76,9 +76,10 @@ pub struct FigureOutput {
     pub tables: Vec<Table>,
 }
 
-/// All registered figures, in paper order (sweeps last).
+/// All registered figures, in paper order (sweeps, then the workload
+/// scenario library's acceptance figures, last).
 pub fn registry() -> Vec<Figure> {
-    vec![
+    let mut v = vec![
         fig02::figure(),
         fig03::figure(),
         fig04_10::figure(),
@@ -89,7 +90,9 @@ pub fn registry() -> Vec<Figure> {
         fig15::figure(),
         sweeps::eviction_figure(),
         sweeps::dispatch_figure(),
-    ]
+    ];
+    v.extend(scenarios::figures());
+    v
 }
 
 /// Ids of every registered figure, in registry order.
@@ -225,7 +228,18 @@ mod tests {
         dedup.sort_unstable();
         dedup.dedup();
         assert_eq!(dedup.len(), ids.len(), "duplicate figure ids");
-        for id in ["fig02", "fig03", "fig04-10", "fig11", "fig15", "sweep-eviction"] {
+        for id in [
+            "fig02",
+            "fig03",
+            "fig04-10",
+            "fig11",
+            "fig15",
+            "sweep-eviction",
+            "scenario-zipf-churn",
+            "scenario-diurnal",
+            "scenario-bulk-batch",
+            "scenario-pipeline",
+        ] {
             assert!(ids.contains(&id), "missing {id}");
         }
     }

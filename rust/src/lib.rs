@@ -73,8 +73,9 @@ pub type Result<T> = std::result::Result<T, Error>;
 /// `thiserror`).
 #[derive(Debug)]
 pub enum Error {
-    /// Configuration parse/validation failure.
-    Config(String),
+    /// Configuration parse/validation failure — a typed
+    /// [`config::ConfigError`] naming the field and offending value.
+    Config(config::ConfigError),
     /// Artifact (AOT HLO) missing or failed to load/compile.
     Runtime(String),
     /// Simulation invariant violated (a bug, not a user error).
@@ -84,6 +85,14 @@ pub enum Error {
     /// XLA/PJRT failure (kept for API stability; the in-tree runtime
     /// backend is pure Rust and never produces it).
     Xla(String),
+}
+
+impl Error {
+    /// Free-form configuration error (CLI usage messages and other
+    /// callers without a structured field to point at).
+    pub fn config(msg: impl Into<String>) -> Error {
+        Error::Config(config::ConfigError::Message(msg.into()))
+    }
 }
 
 impl std::fmt::Display for Error {
@@ -144,14 +153,30 @@ pub mod ids {
     }
 }
 
-/// Convenient re-exports for downstream users and the examples.
+/// Convenient re-exports for downstream users and the examples — the
+/// driver-facing surface: configs (including the scenario library),
+/// workload types, the coordinator's event→effect vocabulary, and run
+/// outputs. Test/bench seams (`probe_*`, `drain_effects`, reference
+/// scheduler paths) are deliberately *not* here and carry
+/// `#[doc(hidden)]`.
 pub mod prelude {
     pub use crate::cache::{CacheConfig, EvictionPolicy};
-    pub use crate::config::ExperimentConfig;
+    pub use crate::chaos::{ChaosConfig, ChaosReport};
+    pub use crate::config::{
+        AccessSpec, ArrivalSpec, ClusterConfig, ConfigError, ExperimentConfig, ScenarioSpec,
+        WorkloadConfig,
+    };
+    pub use crate::coordinator::core::{
+        CoordinatorCore, CoreConfig, Effect, FetchPlan, FileSizes,
+    };
     pub use crate::coordinator::provisioner::{AllocationPolicy, ProvisionerConfig};
-    pub use crate::coordinator::scheduler::DispatchPolicy;
+    pub use crate::coordinator::queue::Task;
+    pub use crate::coordinator::scheduler::{DispatchPolicy, SchedulerConfig};
+    pub use crate::coordinator::shard::ShardedCoordinator;
     pub use crate::ids::{ExecutorId, FileId, TaskId};
     pub use crate::metrics::{SummaryMetrics, TimeSeries};
+    pub use crate::sim::RunResult;
     pub use crate::util::time::Micros;
+    pub use crate::workload::{TaskSpec, Workload};
     pub use crate::{Error, Result};
 }

@@ -372,7 +372,7 @@ impl Driver<'_> {
 /// Run `tasks` through the live engine.
 pub fn run(config: &LiveConfig, tasks: &[LiveTask]) -> Result<LiveReport> {
     if tasks.is_empty() {
-        return Err(Error::Config("live run needs at least one task".into()));
+        return Err(Error::config("live run needs at least one task"));
     }
     std::fs::create_dir_all(&config.cache_root)?;
     let t0 = Instant::now();

@@ -189,6 +189,12 @@ struct Engine {
     pending_pickups: usize,
     // GRAM latency randomness.
     rng_gram: Pcg64,
+    /// Dependency gating (scenario workloads with dep edges only; all
+    /// three stay empty for flat workloads, so the legacy arrival path
+    /// pays nothing). Indexed by workload task index (== task id).
+    dep_remaining: Vec<u32>,
+    dep_children: Vec<Vec<u32>>,
+    held: Vec<bool>,
     // Progress.
     completed: u64,
     events: u64,
@@ -200,7 +206,14 @@ pub fn run(cfg: &ExperimentConfig) -> RunResult {
     let t_wall = std::time::Instant::now();
     let wl = workload::generate(&cfg.workload, cfg.seed);
     let working_set = wl.working_set_bytes();
-    let ideal_wet = workload::ideal_execution_time_s(&cfg.workload);
+    // Scenario workloads can carry dependency edges, so their ideal WET
+    // comes from the generated DAG; flat workloads keep the closed-form
+    // path (bit-identical to the pre-scenario engine).
+    let ideal_wet = if cfg.workload.scenario.is_some() {
+        wl.ideal_execution_time_s()
+    } else {
+        workload::ideal_execution_time_s(&cfg.workload)
+    };
 
     // Fork order matters: the coordinator's access-resolution stream is
     // fork(1), GRAM latency fork(2) — identical to the pre-core engine.
@@ -222,6 +235,22 @@ pub fn run(cfg: &ExperimentConfig) -> RunResult {
         shards,
         rng_cache,
     );
+    // Dependency bookkeeping only materializes when the workload
+    // actually carries edges (pipeline scenarios).
+    let (dep_remaining, dep_children, held) = if wl.dep_edges > 0 {
+        let n = wl.tasks.len();
+        let mut remaining = vec![0u32; n];
+        let mut children: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for (i, t) in wl.tasks.iter().enumerate() {
+            remaining[i] = t.deps.len() as u32;
+            for d in &t.deps {
+                children[d.0 as usize].push(i as u32);
+            }
+        }
+        (remaining, children, vec![false; n])
+    } else {
+        (Vec::new(), Vec::new(), Vec::new())
+    };
     let mut eng = Engine {
         router,
         flow: FlowNet::new(),
@@ -231,6 +260,9 @@ pub fn run(cfg: &ExperimentConfig) -> RunResult {
         dispatcher_free_at: vec![Micros::ZERO; shards],
         pending_pickups: 0,
         rng_gram,
+        dep_remaining,
+        dep_children,
+        held,
         completed: 0,
         events: 0,
         clock: Micros::ZERO,
@@ -351,6 +383,8 @@ impl Engine {
                         .on_compute_done(TaskId(task_id), self.clock, self.clock + latency);
                 self.completed += 1;
                 self.handle(effects);
+                // Task ids equal workload indices in every generator.
+                self.on_task_done(task_id as usize);
             }
             Event::StartTransfer(task_id) => {
                 let (bytes, path) = self
@@ -458,26 +492,60 @@ impl Engine {
     }
 
     fn on_arrival(&mut self, i: u32) {
-        let spec = &self.wl.tasks[i as usize];
-        let task = Task {
-            id: spec.id,
-            files: vec![spec.file],
-            compute: self.wl.compute,
-            arrival: spec.arrival,
-        };
-        let rate = self
-            .wl
-            .stages
-            .get(spec.interval as usize)
-            .map_or(0.0, |&(_, r)| r);
-        let effects = self.router.on_arrival(task, spec.interval, rate, self.clock);
-        self.handle(effects);
-
-        // Chain the next arrival.
+        // Chain the next arrival first: a dependency-gated task must
+        // not stall the arrival stream behind it.
         let next = i as usize + 1;
         if next < self.wl.tasks.len() {
             let t = self.wl.tasks[next].arrival;
             self.push(t.max(self.clock), Event::Arrival(next as u32));
+        }
+        if !self.dep_remaining.is_empty() && self.dep_remaining[i as usize] > 0 {
+            // Unmet predecessors: hold the task until the last one
+            // completes (`on_task_done` submits it then).
+            self.held[i as usize] = true;
+            return;
+        }
+        self.submit(i);
+    }
+
+    /// Hand task `i` to the coordinator — at its arrival event, or (for
+    /// dependency-gated tasks) when the last predecessor completes. For
+    /// sorted, ungated streams `clock == spec.arrival`, so the clamp is
+    /// a no-op and the legacy path is bit-identical; a released task's
+    /// effective arrival is the instant it became runnable.
+    fn submit(&mut self, i: u32) {
+        let spec = &self.wl.tasks[i as usize];
+        let task = Task {
+            id: spec.id,
+            files: spec.inputs.clone(),
+            compute: self.wl.compute,
+            arrival: spec.arrival.max(self.clock),
+        };
+        let interval = spec.interval;
+        let rate = self
+            .wl
+            .stages
+            .get(interval as usize)
+            .map_or(0.0, |&(_, r)| r);
+        let effects = self.router.on_arrival(task, interval, rate, self.clock);
+        self.handle(effects);
+    }
+
+    /// Release dependency-gated children of a finished task: decrement
+    /// each child's unmet-predecessor count, and submit any child whose
+    /// own arrival event already passed while it was held.
+    fn on_task_done(&mut self, idx: usize) {
+        if self.dep_children.is_empty() {
+            return;
+        }
+        let children = self.dep_children[idx].clone();
+        for c in children {
+            let c = c as usize;
+            self.dep_remaining[c] -= 1;
+            if self.dep_remaining[c] == 0 && self.held[c] {
+                self.held[c] = false;
+                self.submit(c as u32);
+            }
         }
     }
 
@@ -716,6 +784,46 @@ mod tests {
         let b = run(&cfg);
         assert_eq!(a.dispatch_order, b.dispatch_order);
         assert_eq!(a.events_processed, b.events_processed);
+    }
+
+    #[test]
+    fn pipeline_scenario_completes_with_dep_gating() {
+        // The pipeline scenario carries real dependency edges: every
+        // task must still complete (held tasks released on predecessor
+        // completion), at K = 1 and K = 4, deterministically.
+        let mut cfg = small_cfg(DispatchPolicy::GoodCacheCompute);
+        cfg.name = "test-pipeline".into();
+        cfg.workload.num_tasks = 700;
+        cfg.workload.scenario = Some(crate::config::ScenarioSpec::preset("pipeline").unwrap());
+        let wl = workload::generate(&cfg.workload, cfg.seed);
+        assert!(wl.dep_edges > 0, "pipeline scenario must carry dep edges");
+        let expect = wl.tasks.len() as u64;
+        let a = run(&cfg);
+        assert_eq!(a.summary.tasks_completed, expect);
+        let b = run(&cfg);
+        assert_eq!(a.dispatch_order, b.dispatch_order);
+        assert_eq!(a.events_processed, b.events_processed);
+        cfg.cluster.shards = 4;
+        let r4 = run(&cfg);
+        assert_eq!(r4.summary.tasks_completed, expect);
+        assert_eq!(r4.shard.tasks_routed(), expect);
+    }
+
+    #[test]
+    fn zipf_churn_scenario_runs_end_to_end() {
+        // A flat (no-deps) scenario exercises the multi-input task
+        // build and per-epoch stage table through the whole engine.
+        let mut cfg = small_cfg(DispatchPolicy::GoodCacheCompute);
+        cfg.name = "test-zipf-churn".into();
+        cfg.workload.num_tasks = 1_500;
+        cfg.workload.scenario = Some(crate::config::ScenarioSpec::preset("zipf-churn").unwrap());
+        let r = run(&cfg);
+        assert_eq!(r.summary.tasks_completed, 1_500);
+        assert!(
+            r.summary.hit_local_rate > 0.3,
+            "heavy-tailed reuse should cache well: {}",
+            r.summary.hit_local_rate
+        );
     }
 
     #[test]

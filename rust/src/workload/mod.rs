@@ -1,4 +1,5 @@
-//! Workload generation — arrival processes and file-access patterns.
+//! Workload generation — arrival processes, file-access patterns, and the
+//! scenario library.
 //!
 //! The paper's provisioning workload (§5.2): 250K tasks, each reading one
 //! of 10K × 10 MB files chosen uniformly at random and computing for
@@ -7,6 +8,22 @@
 //! micro-benchmark (§5.1) uses the same shape with 1-byte files submitted
 //! in batch. The astronomy model-validation workloads (§4.4) sweep a
 //! *data locality* parameter from 1 to 30 (mean accesses per file).
+//!
+//! Beyond the paper's uniform-random stream, the [`scenarios`] module
+//! generates heavy-tailed, bursty, batched, and dependency-structured
+//! workloads (see `docs/WORKLOADS.md`). Every generator funnels through
+//! the single [`generate`] entry point: a [`WorkloadConfig`] without a
+//! scenario takes the legacy path — bit-identical to the pre-scenario
+//! generator, which the four parity suites assert — while a configured
+//! [`ScenarioSpec`](crate::config::ScenarioSpec) dispatches into the
+//! library.
+//!
+//! The task shape is a file *set*: [`TaskSpec::inputs`] holds every file
+//! the task reads, [`TaskSpec::outputs`] the files it produces (visible
+//! in persistent storage once the task completes), and [`TaskSpec::deps`]
+//! the predecessor tasks whose completion gates its submission.
+
+pub mod scenarios;
 
 use crate::config::{AccessSpec, ArrivalSpec, WorkloadConfig};
 use crate::ids::{FileId, TaskId};
@@ -16,15 +33,31 @@ use crate::util::time::Micros;
 /// One generated task.
 #[derive(Debug, Clone)]
 pub struct TaskSpec {
-    /// Task id (stream position).
+    /// Task id (stream position; equals the task's index in
+    /// [`Workload::tasks`]).
     pub id: TaskId,
-    /// Submission time.
+    /// Nominal submission time. Tasks with unmet [`deps`](Self::deps) are
+    /// held past this instant until every predecessor completes.
     pub arrival: Micros,
-    /// File the task reads (θ(κ); the paper's workloads read one file).
-    pub file: FileId,
-    /// Index of the arrival-rate interval this task belongs to (slowdown
-    /// accounting, Fig 14); 0 for non-staged arrivals.
+    /// Files the task reads (θ(κ)); the paper's workloads read exactly
+    /// one, pipeline stages read several.
+    pub inputs: Vec<FileId>,
+    /// Files the task produces. Outputs land in persistent storage when
+    /// the task completes and may appear as later tasks' inputs.
+    pub outputs: Vec<FileId>,
+    /// Predecessor tasks (by id) whose completion gates submission.
+    /// Generators only emit edges pointing at earlier stream positions.
+    pub deps: Vec<TaskId>,
+    /// Index of the arrival-rate interval this task belongs to (indexes
+    /// [`Workload::stages`]; slowdown accounting, Fig 14).
     pub interval: u32,
+}
+
+impl TaskSpec {
+    /// The task's dominant file — first input; shard routing key.
+    pub fn dominant(&self) -> Option<FileId> {
+        self.inputs.first().copied()
+    }
 }
 
 /// A fully materialized workload.
@@ -37,20 +70,24 @@ pub struct Workload {
     /// Per-task compute time.
     pub compute: Micros,
     /// Arrival-rate stages: `(start, rate_tasks_per_s)` per interval
-    /// (one entry for non-staged arrivals).
+    /// (one entry for non-staged arrivals). [`TaskSpec::interval`] indexes
+    /// this table.
     pub stages: Vec<(Micros, f64)>,
-    /// Number of distinct files actually referenced.
+    /// Number of distinct input files actually referenced.
     pub distinct_files: u32,
+    /// Total dependency edges across all tasks (0 for flat workloads).
+    pub dep_edges: u64,
 }
 
 impl Workload {
-    /// Total workload bytes if every task read from scratch.
+    /// Total input bytes if every access read from scratch.
     pub fn total_bytes(&self) -> u64 {
-        self.tasks.len() as u64 * self.file_size_bytes
+        let accesses: u64 = self.tasks.iter().map(|t| t.inputs.len() as u64).sum();
+        accesses * self.file_size_bytes
     }
 
-    /// Working-set size in bytes (distinct files × file size) — the |Ω|
-    /// the caches must exceed for diffusion to reach steady state.
+    /// Working-set size in bytes (distinct input files × file size) — the
+    /// |Ω| the caches must exceed for diffusion to reach steady state.
     pub fn working_set_bytes(&self) -> u64 {
         self.distinct_files as u64 * self.file_size_bytes
     }
@@ -72,10 +109,68 @@ impl Workload {
         }
         rate
     }
+
+    /// Ideal execution time (s) with infinite resources and free data:
+    /// each task starts at `max(arrival, latest dep completion)` and runs
+    /// for the compute time. Reduces to `span + compute` for flat
+    /// workloads; for pipelines it is the critical path.
+    pub fn ideal_execution_time_s(&self) -> f64 {
+        let mut done: Vec<Micros> = Vec::with_capacity(self.tasks.len());
+        let mut latest = Micros::ZERO;
+        for (i, t) in self.tasks.iter().enumerate() {
+            let mut start = t.arrival;
+            for d in &t.deps {
+                debug_assert!((d.0 as usize) < i, "dep edge must point backwards");
+                if let Some(&fin) = done.get(d.0 as usize) {
+                    start = start.max(fin);
+                }
+            }
+            let fin = start + self.compute;
+            latest = latest.max(fin);
+            done.push(fin);
+        }
+        latest.as_secs_f64()
+    }
+
+    /// FNV-1a fingerprint of the full task stream (ids, arrivals,
+    /// intervals, input/output sets, dependency edges). Golden
+    /// determinism tests assert same-seed generations collide and
+    /// different seeds diverge.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut put = |h: &mut u64, v: u64| {
+            for b in v.to_le_bytes() {
+                *h ^= b as u64;
+                *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        put(&mut h, self.tasks.len() as u64);
+        for t in &self.tasks {
+            put(&mut h, t.id.0);
+            put(&mut h, t.arrival.0);
+            put(&mut h, t.interval as u64);
+            put(&mut h, t.inputs.len() as u64);
+            for f in &t.inputs {
+                put(&mut h, f.0 as u64);
+            }
+            put(&mut h, t.outputs.len() as u64);
+            for f in &t.outputs {
+                put(&mut h, f.0 as u64);
+            }
+            put(&mut h, t.deps.len() as u64);
+            for d in &t.deps {
+                put(&mut h, d.0);
+            }
+        }
+        h
+    }
 }
 
-/// The ideal workload execution time (s): infinite resources, zero-cost
-/// communication — tasks finish as they arrive (§5.2.5's 1415 s).
+/// The ideal workload execution time (s) for the *legacy* arrival
+/// processes: infinite resources, zero-cost communication — tasks finish
+/// as they arrive (§5.2.5's 1415 s). Scenario workloads derive the same
+/// quantity from the generated stream via
+/// [`Workload::ideal_execution_time_s`].
 pub fn ideal_execution_time_s(cfg: &WorkloadConfig) -> f64 {
     let arrivals = arrival_times(cfg);
     match arrivals.last() {
@@ -84,8 +179,21 @@ pub fn ideal_execution_time_s(cfg: &WorkloadConfig) -> f64 {
     }
 }
 
-/// Generate the full workload deterministically from `seed`.
+/// Generate the full workload deterministically from `seed` — the single
+/// entry point for every workload shape. Without a configured scenario
+/// this is the paper's generator, bit-identical to its pre-scenario
+/// form; with one it dispatches into [`scenarios`].
 pub fn generate(cfg: &WorkloadConfig, seed: u64) -> Workload {
+    match &cfg.scenario {
+        None => generate_legacy(cfg, seed),
+        Some(spec) => scenarios::generate(cfg, spec, seed),
+    }
+}
+
+/// The paper's generator (uniform/zipf/locality access over the
+/// configured arrival process). Draw order is frozen: one PRNG stream,
+/// arrivals first, then the access sequence.
+fn generate_legacy(cfg: &WorkloadConfig, seed: u64) -> Workload {
     let mut rng = Pcg64::new(seed, 0x6f72_6b6c); // "workl" stream
     let arrivals = arrival_times(cfg);
     let files = access_sequence(cfg, arrivals.len(), &mut rng);
@@ -101,7 +209,9 @@ pub fn generate(cfg: &WorkloadConfig, seed: u64) -> Workload {
             TaskSpec {
                 id: TaskId(i as u64),
                 arrival,
-                file,
+                inputs: vec![file],
+                outputs: Vec::new(),
+                deps: Vec::new(),
                 interval,
             }
         })
@@ -113,6 +223,7 @@ pub fn generate(cfg: &WorkloadConfig, seed: u64) -> Workload {
         file_size_bytes: cfg.file_size_bytes,
         compute: Micros::from_secs_f64(cfg.compute_ms / 1e3),
         distinct_files: distinct.len() as u32,
+        dep_edges: 0,
     }
 }
 
@@ -252,6 +363,8 @@ mod tests {
         assert_eq!(w.file_size_bytes, 10 * MB);
         // 24 arrival intervals (§5.2).
         assert_eq!(w.stages.len(), 24, "stages: {}", w.stages.len());
+        // Flat workload: the stream-derived ideal matches the config one.
+        assert!((w.ideal_execution_time_s() - ideal).abs() < 1e-6);
     }
 
     #[test]
@@ -273,7 +386,10 @@ mod tests {
         cfg.num_files = 100;
         let w = generate(&cfg, 3);
         assert_eq!(w.distinct_files, 100);
-        assert!(w.tasks.iter().all(|t| t.file.0 < 100));
+        assert!(w.tasks.iter().all(|t| t.inputs.len() == 1));
+        assert!(w.tasks.iter().all(|t| t.inputs[0].0 < 100));
+        assert!(w.tasks.iter().all(|t| t.outputs.is_empty() && t.deps.is_empty()));
+        assert_eq!(w.dep_edges, 0);
     }
 
     #[test]
@@ -282,9 +398,11 @@ mod tests {
         let b = generate(&paper_cfg(), 5);
         assert_eq!(a.tasks.len(), b.tasks.len());
         for (x, y) in a.tasks.iter().zip(&b.tasks) {
-            assert_eq!(x.file, y.file);
+            assert_eq!(x.inputs, y.inputs);
             assert_eq!(x.arrival, y.arrival);
         }
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), generate(&paper_cfg(), 6).fingerprint());
     }
 
     #[test]
@@ -311,7 +429,7 @@ mod tests {
         cfg.num_files = 1000;
         cfg.access = AccessSpec::Zipf(1.2);
         let w = generate(&cfg, 13);
-        let head = w.tasks.iter().filter(|t| t.file.0 < 100).count();
+        let head = w.tasks.iter().filter(|t| t.inputs[0].0 < 100).count();
         assert!(head > w.tasks.len() / 2);
     }
 

@@ -1,0 +1,49 @@
+//! DIANA-style bulk batch submission.
+//!
+//! Bulk scheduling (cs/0602026) submits whole job collections at once,
+//! each collection sharing a dataset. Here `batches` batches arrive
+//! `batch_gap_s` apart; every task of a batch lands at the same instant
+//! (the legacy `ArrivalSpec::Batch` shape, repeated), and each batch
+//! reads uniformly from its own contiguous window of the file catalog —
+//! the at-once queue pressure and dataset reuse that stress the
+//! wait-queue, notify, and pickup paths.
+
+use crate::config::WorkloadConfig;
+use crate::ids::{FileId, TaskId};
+use crate::util::prng::Pcg64;
+use crate::util::time::Micros;
+use crate::workload::{scenarios::finish, TaskSpec, Workload};
+
+/// Generate the bulk-batch stream.
+pub fn generate(cfg: &WorkloadConfig, batches: u32, batch_gap_s: f64, seed: u64) -> Workload {
+    let mut rng = Pcg64::new(seed, 0x62_756c_6b); // "bulk" stream
+    let b = batches.max(1) as u64;
+    let n = cfg.num_tasks;
+    let nf = cfg.num_files as u64;
+    let window = (nf / b).max(1);
+
+    let mut tasks = Vec::with_capacity(n as usize);
+    let mut stages = Vec::with_capacity(b as usize);
+    let mut remaining = n;
+    for bi in 0..b {
+        let share = remaining / (b - bi);
+        let start = Micros::from_secs_f64(bi as f64 * batch_gap_s);
+        // At-once submission: within the batch the instantaneous rate is
+        // unbounded, matching the legacy batch stage convention.
+        stages.push((start, f64::INFINITY));
+        let w0 = rng.below(nf - window + 1);
+        for _ in 0..share {
+            let file = FileId((w0 + rng.below(window)) as u32);
+            tasks.push(TaskSpec {
+                id: TaskId(tasks.len() as u64),
+                arrival: start,
+                inputs: vec![file],
+                outputs: Vec::new(),
+                deps: Vec::new(),
+                interval: bi as u32,
+            });
+        }
+        remaining -= share;
+    }
+    finish(cfg, tasks, stages)
+}

@@ -1,0 +1,100 @@
+//! Diurnal multi-user traffic with flash crowds.
+//!
+//! A simulated population of users submits tasks at a rate that follows
+//! a day/night sinusoid between `trough_rate` and `peak_rate` with
+//! period `period_s`. Seeded flash-crowd windows multiply the
+//! instantaneous rate by `flash_factor`. Each user owns a small
+//! favourite file set; 30% of accesses instead hit a shared Zipf head,
+//! so caches see both per-user locality and global skew. The rate
+//! schedule stresses the provisioner's allocate/release hysteresis the
+//! way the paper's monotone §5.2 ramp cannot.
+
+use crate::config::WorkloadConfig;
+use crate::ids::{FileId, TaskId};
+use crate::util::prng::{Pcg64, Zipf};
+use crate::util::time::Micros;
+use crate::workload::{scenarios::finish, TaskSpec, Workload};
+
+/// Files per simulated user's favourite set.
+const FAVES_PER_USER: usize = 16;
+/// Fraction of accesses that hit the shared Zipf head instead of the
+/// submitting user's favourites.
+const SHARED_HEAD_P: f64 = 0.3;
+
+/// Generate the diurnal stream: 1 s rate slots with fractional carry,
+/// arrivals spread evenly within each slot.
+#[allow(clippy::too_many_arguments)]
+pub fn generate(
+    cfg: &WorkloadConfig,
+    users: u32,
+    period_s: f64,
+    peak_rate: f64,
+    trough_rate: f64,
+    flash_crowds: u32,
+    flash_factor: f64,
+    flash_duration_s: f64,
+    seed: u64,
+) -> Workload {
+    let mut rng = Pcg64::new(seed, 0x6469_7572); // "diur" stream
+    let n = cfg.num_tasks as usize;
+    let nf = cfg.num_files as u64;
+    let users = users.max(1) as usize;
+
+    let faves: Vec<Vec<FileId>> = (0..users)
+        .map(|_| {
+            (0..FAVES_PER_USER.min(nf as usize))
+                .map(|_| FileId(rng.below(nf) as u32))
+                .collect()
+        })
+        .collect();
+    let head = Zipf::new(nf as usize, 1.1);
+
+    // Flash-crowd windows land inside the stream's expected duration so
+    // small (--quick) streams still see them.
+    let mean_rate = 0.5 * (peak_rate + trough_rate);
+    let est_duration_s = n as f64 / mean_rate.max(1e-9);
+    let mut flashes: Vec<(f64, f64)> = (0..flash_crowds)
+        .map(|_| {
+            let t0 = rng.range_f64(0.0, (0.6 * est_duration_s).max(1.0));
+            (t0, t0 + flash_duration_s)
+        })
+        .collect();
+    flashes.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+    let mut tasks = Vec::with_capacity(n);
+    let mut stages = Vec::new();
+    let mut acc = 0.0f64;
+    let mut slot: u64 = 0;
+    while tasks.len() < n {
+        let t = slot as f64;
+        let phase = (t % period_s) / period_s;
+        let mut r = trough_rate
+            + (peak_rate - trough_rate) * 0.5 * (1.0 - (phase * std::f64::consts::TAU).cos());
+        if flashes.iter().any(|&(a, b)| t >= a && t < b) {
+            r *= flash_factor;
+        }
+        stages.push((Micros::from_secs(slot), r));
+        acc += r;
+        let emit = (acc.floor() as usize).min(n - tasks.len());
+        acc -= acc.floor();
+        for j in 0..emit {
+            let arrival = Micros::from_secs_f64(t + (j as f64 + 0.5) / emit as f64);
+            let user = rng.below(users as u64) as usize;
+            let file = if rng.chance(SHARED_HEAD_P) {
+                FileId(head.sample(&mut rng) as u32)
+            } else {
+                *rng.choose(&faves[user])
+            };
+            tasks.push(TaskSpec {
+                id: TaskId(tasks.len() as u64),
+                arrival,
+                inputs: vec![file],
+                outputs: Vec::new(),
+                deps: Vec::new(),
+                interval: slot as u32,
+            });
+        }
+        slot += 1;
+    }
+    finish(cfg, tasks, stages)
+}

@@ -1,0 +1,293 @@
+//! The workload scenario library — seeded generators beyond the paper's
+//! uniform-random stream (catalog and TOML schema in `docs/WORKLOADS.md`).
+//!
+//! Four families, each a [`ScenarioSpec`] variant with its own PRNG
+//! stream constant so families never share draws:
+//!
+//! | family | models | stresses |
+//! |---|---|---|
+//! | [`zipf_churn`] | heavy-tailed popularity whose hot set rotates | cache eviction + shard skew |
+//! | [`diurnal`] | a user population with day/night cycles and flash crowds | provisioning hysteresis |
+//! | [`bulk`] | DIANA-style at-once batch submission over shared datasets | queue + notify paths |
+//! | [`pipeline`] | Pilot-Data-style multi-stage pipelines (outputs feed inputs) | dependency gating + locality compounding |
+//!
+//! Determinism contract: a scenario workload is a pure function of
+//! `(WorkloadConfig, ScenarioSpec, seed)`. Same seed → bit-identical
+//! stream (asserted via [`Workload::fingerprint`] in the golden tests
+//! below); different seeds diverge. Generators draw from
+//! [`Pcg64`](crate::util::prng::Pcg64) streams distinct from the legacy
+//! generator's, so adding a scenario can never perturb the paper
+//! workloads.
+
+pub mod bulk;
+pub mod diurnal;
+pub mod pipeline;
+pub mod zipf_churn;
+
+use super::{TaskSpec, Workload};
+use crate::config::{ScenarioSpec, WorkloadConfig};
+use crate::util::time::Micros;
+
+/// Generate a scenario workload — the dispatch behind
+/// [`workload::generate`](super::generate).
+pub fn generate(cfg: &WorkloadConfig, spec: &ScenarioSpec, seed: u64) -> Workload {
+    match *spec {
+        ScenarioSpec::ZipfChurn {
+            s,
+            churn_interval_s,
+            churn_fraction,
+            rate,
+        } => zipf_churn::generate(cfg, s, churn_interval_s, churn_fraction, rate, seed),
+        ScenarioSpec::Diurnal {
+            users,
+            period_s,
+            peak_rate,
+            trough_rate,
+            flash_crowds,
+            flash_factor,
+            flash_duration_s,
+        } => diurnal::generate(
+            cfg,
+            users,
+            period_s,
+            peak_rate,
+            trough_rate,
+            flash_crowds,
+            flash_factor,
+            flash_duration_s,
+            seed,
+        ),
+        ScenarioSpec::BulkBatch {
+            batches,
+            batch_gap_s,
+        } => bulk::generate(cfg, batches, batch_gap_s, seed),
+        ScenarioSpec::Pipeline {
+            stages,
+            fanin,
+            submit_gap_s,
+        } => pipeline::generate(cfg, stages, fanin, submit_gap_s, seed),
+    }
+}
+
+/// Assemble a [`Workload`] from generated tasks + stage table, deriving
+/// the distinct-input count and dependency-edge total.
+pub(crate) fn finish(
+    cfg: &WorkloadConfig,
+    tasks: Vec<TaskSpec>,
+    stages: Vec<(Micros, f64)>,
+) -> Workload {
+    let mut distinct = std::collections::HashSet::new();
+    let mut dep_edges = 0u64;
+    for t in &tasks {
+        for f in &t.inputs {
+            distinct.insert(*f);
+        }
+        dep_edges += t.deps.len() as u64;
+    }
+    Workload {
+        stages,
+        tasks,
+        file_size_bytes: cfg.file_size_bytes,
+        compute: Micros::from_secs_f64(cfg.compute_ms / 1e3),
+        distinct_files: distinct.len() as u32,
+        dep_edges,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::{ScenarioSpec, WorkloadConfig};
+    use crate::util::units::MB;
+    use crate::workload::generate;
+
+    fn cfg_for(spec: ScenarioSpec) -> WorkloadConfig {
+        let mut cfg = WorkloadConfig::default();
+        cfg.num_tasks = 4_000;
+        cfg.num_files = 400;
+        cfg.file_size_bytes = MB;
+        cfg.compute_ms = 10.0;
+        cfg.scenario = Some(spec);
+        cfg
+    }
+
+    /// Golden determinism: same seed → identical stream fingerprint,
+    /// different seed → different fingerprint — for every family.
+    #[test]
+    fn golden_determinism_per_scenario() {
+        for name in ScenarioSpec::CATALOG {
+            let spec = ScenarioSpec::preset(name).expect("catalog name");
+            let cfg = cfg_for(spec);
+            let a = generate(&cfg, 42);
+            let b = generate(&cfg, 42);
+            assert_eq!(
+                a.fingerprint(),
+                b.fingerprint(),
+                "{name}: same seed must reproduce the stream"
+            );
+            let c = generate(&cfg, 43);
+            assert_ne!(
+                a.fingerprint(),
+                c.fingerprint(),
+                "{name}: different seeds must diverge"
+            );
+            assert_eq!(a.tasks.len() as u64, a.tasks.last().unwrap().id.0 + 1);
+        }
+    }
+
+    #[test]
+    fn all_scenarios_emit_sorted_well_formed_streams() {
+        for name in ScenarioSpec::CATALOG {
+            let spec = ScenarioSpec::preset(name).expect("catalog name");
+            let cfg = cfg_for(spec);
+            let w = generate(&cfg, 7);
+            assert!(!w.tasks.is_empty(), "{name}: empty stream");
+            for (i, t) in w.tasks.iter().enumerate() {
+                assert_eq!(t.id.0, i as u64, "{name}: id must equal index");
+                assert!(!t.inputs.is_empty(), "{name}: task without inputs");
+                assert!(
+                    (t.interval as usize) < w.stages.len(),
+                    "{name}: interval must index stages"
+                );
+                for d in &t.deps {
+                    assert!(d.0 < t.id.0, "{name}: dep edge must point backwards");
+                }
+                if i > 0 {
+                    assert!(
+                        w.tasks[i - 1].arrival <= t.arrival,
+                        "{name}: arrivals must be sorted"
+                    );
+                }
+            }
+            assert!(w.distinct_files > 0);
+        }
+    }
+
+    #[test]
+    fn zipf_churn_concentrates_and_rotates_the_hot_set() {
+        let spec = ScenarioSpec::preset("zipf-churn").unwrap();
+        let cfg = cfg_for(spec);
+        let w = generate(&cfg, 11);
+        assert_eq!(w.dep_edges, 0);
+        // Heavy tail *within an epoch*: the top-10% of files carry well
+        // over half of the epoch's accesses (churn rotates the hot set
+        // between epochs, so the global histogram is flatter).
+        let epoch0: Vec<u32> = w
+            .tasks
+            .iter()
+            .filter(|t| t.interval == 0)
+            .map(|t| t.inputs[0].0)
+            .collect();
+        let mut counts = vec![0u32; cfg.num_files as usize];
+        for f in &epoch0 {
+            counts[*f as usize] += 1;
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let head: u32 = counts.iter().take(cfg.num_files as usize / 10).sum();
+        assert!(
+            head as usize > epoch0.len() / 2,
+            "head carries {head} of {}",
+            epoch0.len()
+        );
+        // Churn: the most popular file differs across epochs for at
+        // least one epoch boundary.
+        let last_epoch = w.tasks.last().unwrap().interval;
+        assert!(last_epoch >= 1, "stream must span multiple churn epochs");
+        let top_of = |epoch: u32| {
+            let mut c = vec![0u32; cfg.num_files as usize];
+            for t in w.tasks.iter().filter(|t| t.interval == epoch) {
+                c[t.inputs[0].0 as usize] += 1;
+            }
+            c.iter().enumerate().max_by_key(|&(_, n)| n).unwrap().0
+        };
+        let tops: Vec<usize> = (0..=last_epoch).map(top_of).collect();
+        assert!(
+            tops.windows(2).any(|p| p[0] != p[1]),
+            "hot set never churned: {tops:?}"
+        );
+    }
+
+    #[test]
+    fn diurnal_rates_cycle_and_flash_crowds_spike() {
+        let spec = ScenarioSpec::preset("diurnal").unwrap();
+        let cfg = cfg_for(spec);
+        let w = generate(&cfg, 5);
+        let rates: Vec<f64> = w.stages.iter().map(|&(_, r)| r).collect();
+        let lo = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = rates.iter().cloned().fold(0.0, f64::max);
+        assert!(hi > 2.0 * lo, "no diurnal swing: lo={lo} hi={hi}");
+        if let Some(ScenarioSpec::Diurnal {
+            peak_rate,
+            flash_factor,
+            ..
+        }) = cfg.scenario
+        {
+            // A flash crowd pushes past the plain diurnal peak.
+            assert!(
+                hi > peak_rate,
+                "no flash crowd spike: hi={hi} peak={peak_rate} factor={flash_factor}"
+            );
+        }
+    }
+
+    #[test]
+    fn bulk_batches_arrive_at_once() {
+        let spec = ScenarioSpec::preset("bulk-batch").unwrap();
+        let cfg = cfg_for(spec);
+        let w = generate(&cfg, 3);
+        let mut arrivals: Vec<u64> = w.tasks.iter().map(|t| t.arrival.0).collect();
+        arrivals.dedup();
+        if let Some(ScenarioSpec::BulkBatch { batches, .. }) = cfg.scenario {
+            assert_eq!(arrivals.len(), batches as usize, "one arrival instant per batch");
+        }
+        // Each batch reads from a narrow dataset window.
+        for interval in 0..arrivals.len() as u32 {
+            let files: std::collections::HashSet<u32> = w
+                .tasks
+                .iter()
+                .filter(|t| t.interval == interval)
+                .map(|t| t.inputs[0].0)
+                .collect();
+            assert!(
+                files.len() <= (cfg.num_files as usize) / 4,
+                "batch {interval} touches {} files",
+                files.len()
+            );
+        }
+    }
+
+    #[test]
+    fn pipeline_outputs_feed_downstream_inputs() {
+        let spec = ScenarioSpec::preset("pipeline").unwrap();
+        let cfg = cfg_for(spec);
+        let w = generate(&cfg, 9);
+        assert!(w.dep_edges > 0, "pipelines must carry dependency edges");
+        let mut produced = std::collections::HashMap::new();
+        for t in &w.tasks {
+            for o in &t.outputs {
+                assert!(
+                    o.0 >= cfg.num_files,
+                    "outputs live past the raw catalog: {o:?}"
+                );
+                assert!(
+                    produced.insert(*o, t.id).is_none(),
+                    "output {o:?} produced twice"
+                );
+            }
+        }
+        // Every dep edge is mirrored by an input that the dep produced.
+        let mut gated = 0u64;
+        for t in &w.tasks {
+            for d in &t.deps {
+                assert!(
+                    t.inputs.iter().any(|f| produced.get(f) == Some(d)),
+                    "dep {d:?} of {:?} has no matching produced input",
+                    t.id
+                );
+                gated += 1;
+            }
+        }
+        assert_eq!(gated, w.dep_edges);
+        // Dependencies stretch the ideal WET past the bare span.
+        assert!(w.ideal_execution_time_s() > w.span().as_secs_f64() + 0.0105);
+    }
+}

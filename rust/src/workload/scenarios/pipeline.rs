@@ -1,0 +1,81 @@
+//! Pilot-Data-style multi-stage pipelines.
+//!
+//! Each pipeline is a fan-in DAG (1301.6228's compute/data affinity
+//! chains): stage 0 runs `fanin` tasks reading raw catalog files, each
+//! producing one intermediate file; stage *k* halves the width and each
+//! task consumes a partition of the previous stage's outputs (dependency
+//! edges gate its submission on their completion) plus one shared
+//! reference file. Locality decisions compound across stages: an
+//! intermediate produced on one node is cheapest to consume there.
+//!
+//! The pipeline count is derived from `WorkloadConfig::num_tasks`, so
+//! `--quick` scaling shrinks the stream without changing its shape.
+
+use crate::config::WorkloadConfig;
+use crate::ids::{FileId, TaskId};
+use crate::util::prng::Pcg64;
+use crate::util::time::Micros;
+use crate::workload::{scenarios::finish, TaskSpec, Workload};
+
+/// Generate the pipeline stream.
+pub fn generate(
+    cfg: &WorkloadConfig,
+    stages_n: u32,
+    fanin: u32,
+    submit_gap_s: f64,
+    seed: u64,
+) -> Workload {
+    let mut rng = Pcg64::new(seed, 0x7069_7065); // "pipe" stream
+    let fanin = fanin.max(1);
+    let widths: Vec<u32> = (0..stages_n.max(1)).map(|k| (fanin >> k).max(1)).collect();
+    let per: u64 = widths.iter().map(|&w| w as u64).sum();
+    let npipes = (cfg.num_tasks / per).max(1);
+    let nf = cfg.num_files as u64;
+
+    let mut tasks: Vec<TaskSpec> = Vec::with_capacity((npipes * per) as usize);
+    let mut next_out = cfg.num_files; // intermediates live past the raw catalog
+    for p in 0..npipes {
+        let t0 = Micros::from_secs_f64(p as f64 * submit_gap_s);
+        let mut prev: Vec<(TaskId, FileId)> = Vec::new();
+        for (k, &w) in widths.iter().enumerate() {
+            let mut cur = Vec::with_capacity(w as usize);
+            for j in 0..w {
+                let id = TaskId(tasks.len() as u64);
+                let mut inputs = Vec::new();
+                let mut deps = Vec::new();
+                if k == 0 {
+                    inputs.push(FileId(rng.below(nf) as u32));
+                    if rng.chance(0.5) {
+                        inputs.push(FileId(rng.below(nf) as u32));
+                    }
+                } else {
+                    // Consume a partition of the previous stage's
+                    // outputs; the producing tasks gate this one.
+                    for (i, &(dep, out)) in prev.iter().enumerate() {
+                        if i as u32 % w == j {
+                            inputs.push(out);
+                            deps.push(dep);
+                        }
+                    }
+                    // Plus one shared reference file from the catalog.
+                    inputs.push(FileId(rng.below(nf) as u32));
+                }
+                let out = FileId(next_out);
+                next_out += 1;
+                tasks.push(TaskSpec {
+                    id,
+                    arrival: t0,
+                    inputs,
+                    outputs: vec![out],
+                    deps,
+                    interval: 0,
+                });
+                cur.push((id, out));
+            }
+            prev = cur;
+        }
+    }
+    // One stage entry: the long-run submission rate.
+    let stage_tbl = vec![(Micros::ZERO, per as f64 / submit_gap_s.max(1e-9))];
+    finish(cfg, tasks, stage_tbl)
+}

@@ -1,0 +1,63 @@
+//! Zipf/heavy-tail popularity with hot-set churn.
+//!
+//! File popularity follows a Zipf law over *ranks*; a seeded permutation
+//! maps ranks to concrete files. Every `churn_interval_s` the head of
+//! the permutation (a `churn_fraction` of the catalog) is rewired to
+//! random files, so the hot set rotates while the popularity *shape*
+//! stays fixed — the pattern that defeats pure-LFU caching and skews
+//! dominant-file shard routing over time.
+
+use crate::config::WorkloadConfig;
+use crate::ids::{FileId, TaskId};
+use crate::util::prng::{Pcg64, Zipf};
+use crate::util::time::Micros;
+use crate::workload::{scenarios::finish, TaskSpec, Workload};
+
+/// Generate the churned-Zipf stream: constant-rate arrivals, one input
+/// per task drawn Zipf-by-rank through the churned permutation.
+pub fn generate(
+    cfg: &WorkloadConfig,
+    s: f64,
+    churn_interval_s: f64,
+    churn_fraction: f64,
+    rate: f64,
+    seed: u64,
+) -> Workload {
+    let mut rng = Pcg64::new(seed, 0x7a69_7063); // "zipc" stream
+    let n = cfg.num_tasks;
+    let nf = cfg.num_files as usize;
+    let z = Zipf::new(nf, s);
+    let mut perm: Vec<u32> = (0..nf as u32).collect();
+    rng.shuffle(&mut perm);
+
+    let gap = 1e6 / rate;
+    let epoch_us = (churn_interval_s * 1e6).round().max(1.0) as u64;
+    let churn = ((churn_fraction * nf as f64).ceil() as usize).min(nf);
+
+    let mut tasks = Vec::with_capacity(n as usize);
+    let mut stages = vec![(Micros::ZERO, rate)];
+    let mut epoch: u32 = 0;
+    for i in 0..n {
+        let arrival = Micros((i as f64 * gap).round() as u64);
+        while arrival.0 >= (epoch as u64 + 1) * epoch_us {
+            epoch += 1;
+            stages.push((Micros(epoch as u64 * epoch_us), rate));
+            // Rewire the hot head: each of the top `churn` ranks swaps
+            // with a uniformly random catalog slot.
+            for r in 0..churn {
+                let j = rng.below(nf as u64) as usize;
+                perm.swap(r, j);
+            }
+        }
+        let rank = z.sample(&mut rng);
+        tasks.push(TaskSpec {
+            id: TaskId(i),
+            arrival,
+            inputs: vec![FileId(perm[rank])],
+            outputs: Vec::new(),
+            deps: Vec::new(),
+            interval: epoch,
+        });
+    }
+    finish(cfg, tasks, stages)
+}

@@ -87,10 +87,13 @@ fn sim_and_live_drivers_replay_identical_decisions() {
         std::fs::create_dir_all(&store).expect("store dir");
         let mut tasks: Vec<LiveTask> = Vec::with_capacity(wl.tasks.len());
         for spec in &wl.tasks {
-            let name = format!("f{}.bin", spec.file.0);
+            // Legacy workloads are single-input; the live harness reads
+            // the task's dominant file.
+            let file = spec.inputs[0];
+            let name = format!("f{}.bin", file.0);
             tasks.push(LiveTask {
                 file_name: name,
-                file: spec.file,
+                file,
             });
         }
         for f in 0..NUM_FILES {

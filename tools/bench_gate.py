@@ -37,6 +37,13 @@ checks only quantities that noise cannot fake:
    guards nothing) and the shadow-state oracle must stay silent
    (chaos/oracle_violations == 0 — any violation is a real invariant
    break, reproducible with `datadiff chaos --seed N`).
+3c. *Scenario-library generation* (fresh snapshot only): the fixed-seed
+   pass over all four workload families must keep producing tasks
+   (workload/tasks_generated > 0) and dependency edges
+   (workload/dep_edges > 0 — the pipeline family deterministically
+   links stages, so a zero means arrival gating is vacuously dead);
+   workload/dep_edges_per_task additionally rides the baseline drift
+   rule below.
 4. *Deterministic work counters* (fresh vs committed baseline): tasks
    inspected per pickup, boundary-cursor steps, flow rerates per event,
    pending maintenance ops per event, dead hints purged per event, notify
@@ -228,6 +235,32 @@ def run_gate(fresh, baseline):
             "`datadiff chaos --seed N` using the seed in the bench output"
         )
 
+    # --- 2e. scenario-library generation accounting (within-run). -------
+    for key in (
+        "workload/tasks_generated",
+        "workload/dep_edges",
+        "workload/dep_edges_per_task",
+    ):
+        if key not in counters:
+            fail(f"missing counter {key}")
+    tasks_generated = counters["workload/tasks_generated"]
+    dep_edges = counters["workload/dep_edges"]
+    print(
+        f"bench-gate: scenario library generated {tasks_generated:g} tasks, "
+        f"{dep_edges:g} dep edges"
+    )
+    if tasks_generated <= 0:
+        fail(
+            "workload/tasks_generated is 0: the scenario-library bench pass "
+            "produced no tasks, so every family's generator is dead"
+        )
+    if dep_edges <= 0:
+        fail(
+            "workload/dep_edges is 0: the pipeline family deterministically "
+            "links stage outputs to downstream inputs, so a zero means the "
+            "dependency-gated arrival path is no longer exercised"
+        )
+
     # --- 3. inspected-per-pickup sanity (within-run). -------------------
     for policy in ("max-compute-util", "good-cache-compute"):
         key = f"inspected_per_pickup/{policy}"
@@ -305,6 +338,9 @@ def synthetic_fresh():
         "chaos/faults_injected": 64.0,
         "chaos/oracle_violations": 0.0,
         "chaos/faults_injected_per_run": 8.0,
+        "workload/tasks_generated": 20_000.0,
+        "workload/dep_edges": 4_000.0,
+        "workload/dep_edges_per_task": 0.2,
     }
     for concurrency in (16, 128):
         for metric in ("rerates", "heap_updates"):
@@ -400,6 +436,18 @@ def self_test():
     def missing_chaos_counter(s):
         del s["counters"]["chaos/oracle_violations"]
 
+    def scenario_generators_dead(s):
+        s["counters"]["workload/tasks_generated"] = 0.0
+
+    def dep_edges_vanished(s):
+        s["counters"]["workload/dep_edges"] = 0.0
+
+    def missing_workload_counter(s):
+        del s["counters"]["workload/dep_edges_per_task"]
+
+    def dep_edges_per_task_drifts(s):
+        s["counters"]["workload/dep_edges_per_task"] = 0.2 * 2.0
+
     cases = [
         ("indexed pickup slower than reference", slow_indexed),
         ("non-finite case mean", nan_mean),
@@ -418,6 +466,10 @@ def self_test():
         ("chaos fault schedule vacuous", chaos_schedule_vacuous),
         ("chaos oracle caught violations", chaos_oracle_tripped),
         ("missing chaos counter", missing_chaos_counter),
+        ("scenario generators dead", scenario_generators_dead),
+        ("pipeline dep edges vanished", dep_edges_vanished),
+        ("missing workload counter", missing_workload_counter),
+        ("dep edges per task drifts past baseline", dep_edges_per_task_drifts),
     ]
     for label, mutate in cases:
         mutated(label, mutate)
