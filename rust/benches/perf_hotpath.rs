@@ -7,7 +7,8 @@
 //! (batched vs per-event reference rerating), the 4-shard coordinator
 //! router (cross-shard fetch rewrites — `shard/*` counters), the seeded
 //! chaos harness with its shadow oracle (`chaos/*` counters), the
-//! workload scenario library generators (`workload/*` counters), plus
+//! workload scenario library generators (`workload/*` counters), the
+//! model-predictive provisioning controller (`model/*` counters), plus
 //! the whole-simulation event rate. Run before/after every optimization:
 //!
 //!     cargo bench --bench perf_hotpath
@@ -28,7 +29,7 @@ use datadiffusion::config::ExperimentConfig;
 use datadiffusion::coordinator::core::{CoreConfig, FileSizes};
 use datadiffusion::coordinator::executor::ExecutorRegistry;
 use datadiffusion::coordinator::pending::{remove_queued, PendingIndex, PendingStats};
-use datadiffusion::coordinator::provisioner::ProvisionerConfig;
+use datadiffusion::coordinator::provisioner::{AllocationPolicy, ProvisionerConfig};
 use datadiffusion::coordinator::queue::{Task, WaitQueue};
 use datadiffusion::coordinator::scheduler::{DispatchPolicy, Scheduler, SchedulerConfig};
 use datadiffusion::coordinator::shard::ShardedCoordinator;
@@ -53,6 +54,7 @@ fn main() {
         bench_sharded_router(&mut counters),
         bench_chaos(&mut counters),
         bench_scenario_generation(&mut counters),
+        bench_model_controller(&mut counters),
         bench_whole_sim(),
     ];
     println!("\n== counters (deterministic work metrics) ==");
@@ -772,6 +774,131 @@ fn bench_scenario_generation(counters: &mut Vec<(String, f64)>) -> Bench {
         "workload/dep_edges_per_task".into(),
         dep_edges as f64 / tasks_generated.max(1) as f64,
     ));
+    let _ = b.write_csv();
+    b
+}
+
+/// Model-predictive provisioning (`--allocation model`,
+/// docs/PROVISIONING.md): one timed control step (estimate over the
+/// recorder window + the §3 solve over a 64-node range), then two
+/// deterministic passes feeding the gated `model/*` counters — a seeded
+/// regime shift that must move the adopted target through the deadband
+/// (`model/target_changes > 0`), and a K=4 router under one-sided load
+/// that must move per-shard quotas toward the pressure
+/// (`model/shard_rebalances > 0`).
+fn bench_model_controller(counters: &mut Vec<(String, f64)>) -> Bench {
+    use datadiffusion::coordinator::model::{ModelController, ModelControllerConfig};
+    use datadiffusion::metrics::Recorder;
+
+    let mut b = Bench::new("model-predictive controller (estimate + solve)");
+    // Timed: a full control step over a warm 120 s signal window.
+    let mut rec = Recorder::default();
+    for s in 0..120u64 {
+        let now = Micros::from_secs(s);
+        let bkt = rec.ts.bucket_mut(s);
+        bkt.arrivals += 40;
+        bkt.bytes_local += 6_000_000;
+        bkt.bytes_gpfs += 1_000_000;
+        rec.sample(now, 100, 8, 10, 16);
+    }
+    let mut ctl = ModelController::new(ModelControllerConfig::default(), 2, 1e7);
+    b.iter("decide (64-node range, warm window)", 1, || {
+        black_box(ctl.decide(&rec, 100, 64));
+    });
+
+    // Deterministic pass 1: 30 s at 40 tasks/s then a 10x surge
+    // (window_s = 1 so the estimate follows each bucket, as in the unit
+    // suite). The surge must punch through the deadband and move the
+    // adopted target — a frozen controller would hold it forever.
+    let mut ctl = ModelController::new(
+        ModelControllerConfig {
+            window_s: 1,
+            ..ModelControllerConfig::default()
+        },
+        2,
+        1e7,
+    );
+    let mut rec = Recorder::default();
+    for s in 0..60u64 {
+        let now = Micros::from_secs(s);
+        rec.ts.bucket_mut(s).arrivals += if s < 30 { 40 } else { 400 };
+        rec.sample(now, 50, 4, 4, 8);
+        black_box(ctl.decide(&rec, 50, 64));
+    }
+    let stats = ctl.stats.clone();
+    assert!(
+        stats.target_changes > 0,
+        "the 10x arrival surge must move the adopted target"
+    );
+
+    // Deterministic pass 2: a K = 4 router under `--allocation model`
+    // with every task homed on one shard; the pre-tick rebalance must
+    // move quota toward the loaded shard.
+    let mut r = ShardedCoordinator::new(
+        CoreConfig {
+            scheduler: SchedulerConfig::default(),
+            provisioner: ProvisionerConfig {
+                allocation: AllocationPolicy::Model,
+                ..ProvisionerConfig::default()
+            },
+            cache: CacheConfig {
+                capacity_bytes: 1 << 30,
+                policy: EvictionPolicy::Lru,
+            },
+            max_nodes: 8,
+            slots_per_node: 2,
+            file_sizes: FileSizes::Uniform(10_000_000),
+        },
+        4,
+        Pcg64::seeded(11),
+    );
+    for _ in 0..8 {
+        let (_, effs) = r.register_node(Micros::ZERO);
+        r.drain_effects(effs, Micros::ZERO);
+    }
+    let hot = shard_home_files(&r, 1)[0][0];
+    let mut id = 0u64;
+    for s in 0..4u64 {
+        let now = Micros::from_secs(s);
+        for _ in 0..40 {
+            let effs = r.on_arrival(
+                Task {
+                    id: TaskId(id),
+                    files: vec![hot],
+                    compute: Micros::from_millis(100),
+                    arrival: now,
+                },
+                0,
+                0.0,
+                now,
+            );
+            id += 1;
+            r.drain_effects(effs, now);
+        }
+        let effs = r.on_tick(now);
+        r.drain_effects(effs, now);
+    }
+    let merged = r.merged_model_stats().expect("model allocation is on");
+    let rebalances = r.quota_rebalances();
+    assert!(
+        rebalances > 0,
+        "one-sided load must move quota between shards"
+    );
+    let solves = stats.solves + merged.solves;
+    let changes = stats.target_changes + merged.target_changes;
+    let holds = stats.deadband_holds + merged.deadband_holds;
+    println!(
+        "    controller: {solves} solves, {changes} target changes, \
+         {holds} deadband holds; router: {rebalances} quota rebalances"
+    );
+    counters.push(("model/solves".into(), solves as f64));
+    counters.push(("model/target_changes".into(), changes as f64));
+    counters.push(("model/deadband_holds".into(), holds as f64));
+    counters.push((
+        "model/target_changes_per_decision".into(),
+        changes as f64 / solves.max(1) as f64,
+    ));
+    counters.push(("model/shard_rebalances".into(), rebalances as f64));
     let _ = b.write_csv();
     b
 }

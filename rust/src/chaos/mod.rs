@@ -63,7 +63,7 @@ pub mod oracle;
 use crate::cache::CacheConfig;
 use crate::config::ScenarioSpec;
 use crate::coordinator::core::{CoreConfig, Effect, FetchPlan, FileSizes};
-use crate::coordinator::provisioner::ProvisionerConfig;
+use crate::coordinator::provisioner::{AllocationPolicy, ProvisionerConfig};
 use crate::coordinator::queue::Task;
 use crate::coordinator::scheduler::{DispatchPolicy, SchedulerConfig};
 use crate::coordinator::shard::ShardedCoordinator;
@@ -231,6 +231,11 @@ pub struct ChaosConfig {
     pub files: u32,
     /// Per-decision fault probability.
     pub fault_rate: f64,
+    /// Provisioner allocation policy under test. The default matches
+    /// the pre-model harness (`mult:2`), so existing seed fingerprints
+    /// are unchanged; sweeps also cycle `model` through here to pin
+    /// the closed-loop controller against the oracle.
+    pub allocation: AllocationPolicy,
     /// Draw the task stream from a scenario-library workload instead of
     /// the built-in uniform stream (None = built-in, byte-identical to
     /// the pre-scenario harness). `events` is clamped to the generated
@@ -249,6 +254,7 @@ impl ChaosConfig {
             nodes: 8,
             files: 24,
             fault_rate: 0.18,
+            allocation: AllocationPolicy::Multiplicative(2.0),
             scenario: None,
         }
     }
@@ -486,6 +492,7 @@ impl Driver {
                 ..SchedulerConfig::default()
             },
             provisioner: ProvisionerConfig {
+                allocation: cfg.allocation,
                 // Short idle-release so the Release/deferral machinery
                 // is exercised while transfers are still in flight.
                 idle_release_s: 0.5,

@@ -40,7 +40,7 @@ datadiff — data diffusion (Raicu et al. 2008) reproduction
 
 USAGE:
   datadiff run (--fig N | --config FILE) [--view SECS] [--csv]
-               [--allocation one|add:N|mult:F|all] [--shards K]
+               [--allocation one|add:N|mult:F|all|model] [--shards K]
                [--cache random|fifo|lru|lfu]
   datadiff figures [--scale X] [--quick] [--jobs N] [--check]
                                        regenerate Figures 2-15 + sweeps
@@ -65,8 +65,10 @@ across N threads (default: all cores; merged tables are byte-identical for
 any N). --check fails with a non-zero exit on NaN cells or empty tables —
 the CI figures-smoke gate. --allocation overrides the dynamic resource
 provisioner's allocation policy (one node, fixed batch of N, growth
-factor F, or everything at once — §5.2.5); the same policies drive the
-live engine through the shared coordinator core. --shards K replicates
+factor F, everything at once — §5.2.5 — or `model`, which runs the §3
+performance model online as a closed-loop controller and tracks its
+solved node target each tick, docs/PROVISIONING.md); the same policies
+drive the live engine through the shared coordinator core. --shards K replicates
 the coordinator K ways behind a router (task stream partitioned by
 dominant-file hash, executors assigned per shard, GPFS misses rewritten
 into cross-shard peer fetches — docs/SHARDING.md); K=1 (default) is
@@ -78,7 +80,8 @@ notifications, executors killed mid-fetch/mid-compute, stalled and partial
 transfers, shard partitions) through the coordinator while a shadow-state
 oracle checks exactly-once terminals, replica accounting, and that no
 dispatch or fetch touches a dead executor. --sweep N runs N consecutive
-seeds cycling through all 5 policies x shards 1 and 4; --quick shrinks
+seeds cycling through all 5 policies x shards 1 and 4 x allocation
+mult:2 and model; --quick shrinks
 each run to the CI smoke size; --self-test breaks an invariant on purpose
 and prints the seed + fault plan + trailing trace dump. --scenario F
 draws the task stream from a scenario-library family instead of the
@@ -549,17 +552,27 @@ fn run_chaos_command(
     };
     let mut reports = Vec::new();
     if let Some(n) = sweep {
-        // N consecutive seeds cycling through all 5 policies × K ∈ {1, 4},
-        // so any sweep of >= 10 seeds covers every combination.
-        let combos: Vec<(DispatchPolicy, usize)> = DispatchPolicy::ALL
+        // N consecutive seeds cycling through all 5 policies × K ∈ {1, 4}
+        // × allocation ∈ {mult:2, model}, so any sweep of >= 20 seeds
+        // covers every combination.
+        use crate::coordinator::provisioner::AllocationPolicy;
+        let combos: Vec<(DispatchPolicy, usize, AllocationPolicy)> = DispatchPolicy::ALL
             .iter()
-            .flat_map(|&p| [(p, 1usize), (p, 4)])
+            .flat_map(|&p| {
+                [
+                    (p, 1usize, AllocationPolicy::Multiplicative(2.0)),
+                    (p, 4, AllocationPolicy::Multiplicative(2.0)),
+                    (p, 1, AllocationPolicy::Model),
+                    (p, 4, AllocationPolicy::Model),
+                ]
+            })
             .collect();
         for i in 0..n as u64 {
-            let (p, k) = combos[i as usize % combos.len()];
+            let (p, k, a) = combos[i as usize % combos.len()];
             let mut c = base(seed + i);
             c.policy = p;
             c.shards = k;
+            c.allocation = a;
             reports.push(chaos::run_chaos(&c));
         }
     } else {
@@ -644,7 +657,7 @@ fn run_figures(which: &str, scale: f64, jobs: Option<usize>, check: bool) -> Res
         "13" => vec!["fig13"],
         "14" => vec!["fig14"],
         "15" => vec!["fig15"],
-        "sweeps" => vec!["sweep-eviction", "sweep-dispatch"],
+        "sweeps" => vec!["sweep-eviction", "sweep-dispatch", "sweep-allocation"],
         other => return Err(Error::config(format!("unknown figure set `{other}`"))),
     };
     let jobs = jobs.unwrap_or_else(crate::util::par::default_jobs);
@@ -752,6 +765,12 @@ mod tests {
                     config.provisioner.allocation,
                     AllocationPolicy::Multiplicative(1.5)
                 );
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse(&args("run --fig 7 --allocation model")).unwrap() {
+            Command::Run { config, .. } => {
+                assert_eq!(config.provisioner.allocation, AllocationPolicy::Model);
             }
             other => panic!("{other:?}"),
         }

@@ -715,11 +715,12 @@ impl ExperimentConfig {
                 p.allocation = AllocationPolicy::Multiplicative(f);
             }
             Some("all") => p.allocation = AllocationPolicy::AllAtOnce,
+            Some("model") => p.allocation = AllocationPolicy::Model,
             Some(other) => {
                 return Err(ConfigError::InvalidValue {
                     key: "provisioner.allocation".into(),
                     value: other.into(),
-                    expected: "one, additive, multiplicative, or all".into(),
+                    expected: "one, additive, multiplicative, all, or model".into(),
                 }
                 .into());
             }
@@ -1069,6 +1070,19 @@ mod tests {
         assert_eq!(cfg.workload.access, AccessSpec::Zipf(1.1));
         assert_eq!(cfg.scheduler.policy, DispatchPolicy::MaxCacheHit);
         assert_eq!(cfg.cache.policy, EvictionPolicy::Lfu);
+    }
+
+    #[test]
+    fn model_allocation_parses_from_toml() {
+        let cfg =
+            ExperimentConfig::from_toml("[provisioner]\nallocation = \"model\"\n").unwrap();
+        assert_eq!(cfg.provisioner.allocation, AllocationPolicy::Model);
+        let err = ExperimentConfig::from_toml("[provisioner]\nallocation = \"bogus\"\n")
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("model"),
+            "rejection lists the model policy: {err}"
+        );
     }
 
     #[test]

@@ -71,8 +71,9 @@
 
 use crate::cache::{CacheConfig, ObjectCache};
 use crate::coordinator::executor::ExecutorRegistry;
+use crate::coordinator::model::{ModelController, ModelControllerConfig, ModelStats};
 use crate::coordinator::pending::PendingIndex;
-use crate::coordinator::provisioner::{Provisioner, ProvisionerConfig};
+use crate::coordinator::provisioner::{AllocationPolicy, Provisioner, ProvisionerConfig};
 use crate::coordinator::queue::{Task, WaitQueue};
 use crate::coordinator::scheduler::{NotifyOutcome, Scheduler, SchedulerConfig, SchedulerStats};
 use crate::coordinator::{resolve_access, AccessKind};
@@ -100,6 +101,21 @@ impl FileSizes {
         match self {
             FileSizes::Uniform(n) => *n,
             FileSizes::PerFile(m) => m.get(&file).copied().unwrap_or(0),
+        }
+    }
+
+    /// Mean object size (the model controller's per-task transfer
+    /// estimate). Zero for an empty per-file map.
+    pub fn mean_bytes(&self) -> f64 {
+        match self {
+            FileSizes::Uniform(n) => *n as f64,
+            FileSizes::PerFile(m) => {
+                if m.is_empty() {
+                    0.0
+                } else {
+                    m.values().map(|&b| b as f64).sum::<f64>() / m.len() as f64
+                }
+            }
         }
     }
 }
@@ -216,6 +232,9 @@ pub struct CoordinatorCore {
     index: LocationIndex,
     pending: PendingIndex,
     prov: Provisioner,
+    /// The §3 model run online (only under `AllocationPolicy::Model`):
+    /// installs the provisioner's fleet target each tick.
+    model: Option<ModelController>,
     caches: HashMap<ExecutorId, ObjectCache>,
     /// Peer selection + eviction randomness (single injected stream so
     /// a driver's seeding fully determines coordinator behaviour).
@@ -240,6 +259,13 @@ impl CoordinatorCore {
     /// randomness (the sim passes its forked `rng_cache` stream so
     /// results stay bit-identical to the pre-core engine).
     pub fn new(config: CoreConfig, rng: Pcg64) -> Self {
+        let model = (config.provisioner.allocation == AllocationPolicy::Model).then(|| {
+            ModelController::new(
+                ModelControllerConfig::default(),
+                config.slots_per_node,
+                config.file_sizes.mean_bytes(),
+            )
+        });
         CoordinatorCore {
             sched: Scheduler::new(config.scheduler.clone()),
             reg: ExecutorRegistry::new(),
@@ -247,6 +273,7 @@ impl CoordinatorCore {
             index: LocationIndex::new(),
             pending: PendingIndex::new(),
             prov: Provisioner::new(config.provisioner.clone(), config.max_nodes),
+            model,
             caches: HashMap::new(),
             rng,
             rec: Recorder::new(),
@@ -363,6 +390,11 @@ impl CoordinatorCore {
         now: Micros,
     ) -> Vec<Effect> {
         self.rec.record_arrival(now, interval, rate);
+        if let Some(ctl) = self.model.as_mut() {
+            // Declared compute feeds the controller's μ estimate ahead
+            // of the first completion.
+            ctl.observe_compute(task.compute.as_secs_f64());
+        }
         if interval != 0 {
             self.interval_of.insert(task.id.0, interval);
         }
@@ -672,6 +704,13 @@ impl CoordinatorCore {
             self.reg.busy_slots(),
             self.reg.total_slots(),
         );
+        // Model-predictive step: the controller reads the sample that
+        // was just recorded, solves for the PI-maximizing fleet, and
+        // installs the target the provisioner tracks below.
+        if let Some(ctl) = self.model.as_mut() {
+            let target = ctl.decide(&self.rec, self.queue.len(), self.prov.max_nodes());
+            self.prov.set_model_target(target);
+        }
         let action = self.prov.on_tick(now, self.queue.len(), &self.reg);
         let mut effects = Vec::new();
         if action.allocate > 0 {
@@ -820,6 +859,42 @@ impl CoordinatorCore {
     /// whose provisioner asked for it.
     pub fn pending_allocations(&self) -> usize {
         self.prov.pending()
+    }
+
+    /// Override the model controller's tuning (the sim engine wires the
+    /// experiment's actual cluster rates in; defaults otherwise). No-op
+    /// unless the core runs under `AllocationPolicy::Model`.
+    pub fn set_model_config(&mut self, cfg: ModelControllerConfig) {
+        if let Some(ctl) = self.model.as_mut() {
+            ctl.config = cfg;
+        }
+    }
+
+    /// The model controller's decision counters, when one is running.
+    pub fn model_stats(&self) -> Option<&ModelStats> {
+        self.model.as_ref().map(|c| &c.stats)
+    }
+
+    /// The model controller's standing fleet target, when one is
+    /// running and has solved at least once.
+    pub fn model_target(&self) -> Option<usize> {
+        self.model.as_ref().and_then(|c| c.target())
+    }
+
+    /// This core's node quota (its provisioner cap; `config.max_nodes`
+    /// at construction, possibly rebalanced since by the shard router).
+    pub fn node_quota(&self) -> usize {
+        self.prov.max_nodes()
+    }
+
+    /// Rebalance this core's node quota (the sharded router's model-
+    /// driven apportionment — docs/PROVISIONING.md). Never drops below
+    /// what is already registered-or-pending of its own accord; the
+    /// provisioner simply stops allocating and releases idles toward
+    /// the new cap.
+    pub fn set_node_quota(&mut self, quota: usize) {
+        self.config.max_nodes = quota;
+        self.prov.set_max_nodes(quota);
     }
 
     /// Does the configured policy maintain caches and the location
@@ -1030,6 +1105,82 @@ mod tests {
         assert!(n >= 1);
         let (e, effs) = c.on_node_registered(Micros::from_secs(2));
         assert!(matches!(effs.as_slice(), [Effect::Notify(x)] if *x == e));
+    }
+
+    #[test]
+    fn model_allocation_closes_the_loop() {
+        let mut cfg = config(DispatchPolicy::GoodCacheCompute);
+        cfg.provisioner.allocation = AllocationPolicy::Model;
+        let mut c = CoordinatorCore::new(cfg, Pcg64::seeded(1));
+        assert_eq!(c.model_target(), None, "no solve before the first tick");
+        for i in 0..100 {
+            let _ = c.on_arrival(task(i, i as u32), 0, 0.0, Micros::ZERO);
+        }
+        let effs = c.on_tick(Micros::from_secs(1));
+        let n = match effs.as_slice() {
+            [Effect::Allocate(n)] => *n,
+            other => panic!("expected allocate, got {other:?}"),
+        };
+        let target = c.model_target().expect("tick ran a solve");
+        assert!((1..=4).contains(&target), "target within quota: {target}");
+        assert_eq!(n, target, "empty fleet allocates straight to target");
+        assert_eq!(c.model_stats().unwrap().solves, 1);
+
+        // A killed executor re-enters the solved target: register one,
+        // fail it, and the next tick re-requests toward the target.
+        let (e, _) = c.on_node_registered(Micros::from_secs(2));
+        let _ = c.on_executor_failed(e, Micros::from_secs(3));
+        let effs = c.on_tick(Micros::from_secs(4));
+        assert!(
+            effs.iter()
+                .any(|eff| matches!(eff, Effect::Allocate(k) if *k >= 1)),
+            "lost capacity must be re-requested: {effs:?}"
+        );
+        c.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn model_release_defers_while_serving_peer_transfer() {
+        // Same serving-source setup as the static-policy deferral test,
+        // but with the controller driving releases toward its target:
+        // the mid-serve source must still be withheld.
+        let mut cfg = config(DispatchPolicy::MaxComputeUtil);
+        cfg.provisioner.allocation = AllocationPolicy::Model;
+        cfg.provisioner.idle_release_s = 1.0;
+        let mut c = CoordinatorCore::new(cfg, Pcg64::seeded(1));
+        let (e0, _) = c.register_node(Micros::ZERO);
+        let (e1, _) = c.register_node(Micros::ZERO);
+        let _ = c.on_pickup(e0, Micros::ZERO);
+        let _ = c.on_pickup(e1, Micros::ZERO);
+        let _ = c.on_arrival(task(0, 7), 0, 0.0, Micros::ZERO);
+        let _ = c.on_pickup(e0, Micros::ZERO);
+        let _ = c.on_fetch_done(TaskId(0), Micros::ZERO, None);
+        let _ = c.on_arrival(task(1, 7), 0, 0.0, Micros::ZERO);
+        let effs = c.on_pickup(e1, Micros::ZERO);
+        assert!(
+            matches!(effs.as_slice(), [Effect::Fetch(p)] if p.peer == Some(e0)),
+            "second reader fetches peer-to-peer: {effs:?}"
+        );
+        let _ = c.on_compute_done(TaskId(0), Micros::from_millis(5), Micros::from_millis(5));
+        // Idle stream → the target collapses below the fleet, but the
+        // serving source is withheld.
+        let effs = c.on_tick(Micros::from_secs(10));
+        assert!(
+            !effs
+                .iter()
+                .any(|e| matches!(e, Effect::Release(v) if v.contains(&e0))),
+            "serving peer must not be released: {effs:?}"
+        );
+        assert!(c.release_deferrals() >= 1);
+        c.check_integrity().unwrap();
+        // Transfer drains → the source becomes releasable.
+        let _ = c.on_fetch_done(TaskId(1), Micros::from_secs(10), None);
+        let effs = c.on_tick(Micros::from_secs(20));
+        assert!(
+            effs.iter()
+                .any(|e| matches!(e, Effect::Release(v) if v.contains(&e0))),
+            "drained source must be released toward target: {effs:?}"
+        );
     }
 
     #[test]

@@ -24,10 +24,15 @@
 //!   sub-linear pickup enumerates instead of scanning the window;
 //! * [`executor::ExecutorRegistry`] — E_set with free/busy/pending state;
 //! * [`scheduler::Scheduler`] — the two-phase data-aware scheduler;
-//! * [`provisioner::Provisioner`] — DRP allocation/release decisions.
+//! * [`provisioner::Provisioner`] — DRP allocation/release decisions;
+//! * [`model::ModelController`] — the §3 model run online: estimates
+//!   workload signals from the recorder and installs the performance-
+//!   index-maximizing fleet target (`--allocation model`,
+//!   docs/PROVISIONING.md).
 
 pub mod core;
 pub mod executor;
+pub mod model;
 pub mod pending;
 pub mod provisioner;
 pub mod queue;

@@ -1,0 +1,552 @@
+//! Model-predictive provisioning — the §3 model as a closed-loop
+//! controller (`--allocation model`, docs/PROVISIONING.md).
+//!
+//! The offline model ([`crate::model::predict`]) maps a workload
+//! description (arrival rate, per-task compute, object size, hit-rate
+//! split) and a fleet size to a predicted makespan `W`. Fig 2 validates
+//! that mapping against the simulator; this module *acts* on it: each
+//! provisioner tick, [`ModelController::decide`] estimates the workload
+//! signals from the [`Recorder`](crate::metrics::Recorder)'s per-second
+//! time series, calls the pure solver [`solve`] for the node count that
+//! maximizes the performance index, and installs the result as the
+//! [`Provisioner`](crate::coordinator::provisioner::Provisioner)'s fleet
+//! target. Allocate/Release still flow through the existing effect API —
+//! the controller only moves the target.
+//!
+//! ## The objective
+//!
+//! The summary's performance index is `PI = speedup / cpu_hours` where
+//! `speedup = W_base / W` for a workload-fixed baseline and `cpu_hours`
+//! integrates *registered* slot capacity over the run — so for a fleet
+//! of `n` nodes held for the makespan, `cpu_hours ∝ n·W`. Hence
+//! `PI ∝ 1 / (n · W²)` with the baseline cancelling in the argmax: the
+//! solver scans `n ∈ [min_nodes, max_nodes]`, predicts `W(n)` through
+//! the §3 fixed point (store contention included), and picks the
+//! smallest `n` maximizing `1/(n·W²)`. Below the arrival-saturation
+//! knee `W` shrinks like `1/n` so the score grows; above it `W` is
+//! pinned by the arrival rate and the score decays like `1/n` — the
+//! optimum sits exactly at the knee, which moves up with arrival
+//! pressure (the monotonicity property pinned in the unit suite).
+//!
+//! ## Stability
+//!
+//! A feedback controller that re-solves every second will oscillate if
+//! the adopted target chases every ±1 wobble of the estimate. Two
+//! mechanisms damp it: signals are averaged over a sliding window
+//! (`window_s`), and a new solve only displaces the standing target
+//! when it moves by more than the deadband (`deadband` fraction of the
+//! current target, at least 1 node). On a steady-state workload the
+//! solve is a pure function of converged inputs, so the target is a
+//! fixed point — asserted bit-for-bit by the property tests below.
+
+use crate::metrics::Recorder;
+use crate::model::{predict, ModelInputs};
+use crate::util::units::gbps_to_bps;
+
+/// Per-task compute assumed before the first completion feeds the EWMA
+/// (the fig02 workload's 100 ms).
+const DEFAULT_MU_S: f64 = 0.1;
+
+/// EWMA smoothing for observed per-task compute times.
+const MU_ALPHA: f64 = 0.2;
+
+/// Controller tuning. Defaults mirror
+/// [`ClusterConfig`](crate::config::ClusterConfig) (ANL/UC TeraGrid
+/// rates); the sim engine overwrites them from the experiment's actual
+/// cluster description.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelControllerConfig {
+    /// Persistent-store (GPFS) aggregate bandwidth, Gb/s.
+    pub persistent_gbps: f64,
+    /// Local-disk read bandwidth, Gb/s.
+    pub local_disk_gbps: f64,
+    /// Per-task dispatch + network overhead, seconds.
+    pub overhead_s: f64,
+    /// Never target fewer nodes than this (the coordinator itself needs
+    /// a fleet to measure).
+    pub min_nodes: usize,
+    /// Sliding signal-estimation window, seconds (recorder buckets).
+    pub window_s: usize,
+    /// Deadband as a fraction of the standing target: a new solve is
+    /// adopted only when it moves by more than `max(1, ceil(cur·band))`
+    /// nodes.
+    pub deadband: f64,
+}
+
+impl Default for ModelControllerConfig {
+    fn default() -> Self {
+        ModelControllerConfig {
+            persistent_gbps: 4.4,
+            local_disk_gbps: 1.6,
+            // 600 µs dispatch + one 2 ms network round trip each way.
+            overhead_s: 600.0 / 1e6 + 2.0 * 2.0 / 1e3,
+            min_nodes: 1,
+            window_s: 30,
+            deadband: 0.15,
+        }
+    }
+}
+
+/// Everything the pure solver looks at. Constructed by
+/// [`ModelController::decide`]; exposed so tests (and the fig02
+/// consistency suite) can drive the solver directly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SolveInputs {
+    /// Current wait-queue length (the model's outstanding `|K|`).
+    pub queue_len: usize,
+    /// Estimated task arrival rate, tasks/s (`f64::INFINITY` = batch:
+    /// everything already queued).
+    pub arrival_rate: f64,
+    /// Mean per-task compute, seconds.
+    pub mu_s: f64,
+    /// Per-task dispatch + network overhead, seconds.
+    pub overhead_s: f64,
+    /// Mean object size, bytes.
+    pub object_bytes: f64,
+    /// Fraction of accessed bytes missing to persistent storage.
+    pub p_miss: f64,
+    /// Fraction of accessed bytes served from the local cache.
+    pub p_local: f64,
+    /// Persistent-store bandwidth, bits/s.
+    pub persistent_bps: f64,
+    /// Local-disk bandwidth, bits/s.
+    pub transient_bps: f64,
+    /// CPU slots per node.
+    pub cpus_per_node: u32,
+    /// Smallest admissible fleet.
+    pub min_nodes: usize,
+    /// Largest admissible fleet (the cluster/shard quota).
+    pub max_nodes: usize,
+}
+
+/// The solver's answer for one set of inputs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SolveDecision {
+    /// Fleet size maximizing the performance-index score.
+    pub nodes: usize,
+    /// The winning score, `1 / (n · W²)` (0.0 on the idle fast path).
+    pub score: f64,
+    /// Predicted makespan at `nodes`, seconds.
+    pub w: f64,
+    /// Predicted efficiency at `nodes`.
+    pub efficiency: f64,
+}
+
+/// Solve the §3 model for the performance-index-maximizing fleet size.
+///
+/// Pure and deterministic: bit-equal outputs for bit-equal inputs (no
+/// ambient state, no randomness — the property suite asserts this). An
+/// idle stream (`queue_len == 0` and no measurable arrivals) short-
+/// circuits to `min_nodes`. Ties break to the smallest fleet.
+pub fn solve(inp: &SolveInputs) -> SolveDecision {
+    let lo = inp.min_nodes.max(1).min(inp.max_nodes.max(1));
+    let hi = inp.max_nodes.max(lo);
+    if inp.queue_len == 0 && !(inp.arrival_rate > 0.0) {
+        return SolveDecision {
+            nodes: lo,
+            score: 0.0,
+            w: 0.0,
+            efficiency: 0.0,
+        };
+    }
+    // A vanished arrival estimate with work still queued is a drained
+    // burst: batch semantics (everything outstanding, nothing more
+    // coming) keep the store-saturation knee meaningful.
+    let arrival_rate = if inp.arrival_rate > 0.0 {
+        inp.arrival_rate
+    } else {
+        f64::INFINITY
+    };
+    let mut best: Option<SolveDecision> = None;
+    for n in lo..=hi {
+        let m = ModelInputs {
+            num_tasks: inp.queue_len.max(1) as f64,
+            cpus: (n as f64 * inp.cpus_per_node.max(1) as f64).max(1.0),
+            mu_s: inp.mu_s,
+            overhead_s: inp.overhead_s,
+            object_bytes: inp.object_bytes,
+            arrival_rate,
+            persistent_bps: inp.persistent_bps,
+            transient_bps: inp.transient_bps,
+            p_miss: inp.p_miss,
+            p_local: inp.p_local,
+        };
+        let p = predict(&m);
+        let w = p.w.max(1e-12);
+        let score = 1.0 / (n as f64 * w * w);
+        // Strict > keeps the smallest node count on score plateaus.
+        if best.is_none_or(|b| score > b.score) {
+            best = Some(SolveDecision {
+                nodes: n,
+                score,
+                w: p.w,
+                efficiency: p.efficiency,
+            });
+        }
+    }
+    best.expect("solve scans at least one candidate")
+}
+
+/// Largest-remainder apportionment of `total` nodes across shards by
+/// non-negative weight, each shard floored at `floor` (reduced if
+/// `total` cannot cover it). The result always sums to exactly `total`;
+/// zero total weight degrades to an even split. Ties in the remainder
+/// go to the lowest shard index, so the split is deterministic.
+pub fn apportion(total: usize, weights: &[f64], floor: usize) -> Vec<usize> {
+    let k = weights.len();
+    if k == 0 {
+        return Vec::new();
+    }
+    let floor = floor.min(total / k);
+    let pool = total - floor * k;
+    let mut out = vec![floor; k];
+    if pool == 0 {
+        return out;
+    }
+    let wsum: f64 = weights.iter().map(|w| w.max(0.0)).sum();
+    let shares: Vec<f64> = if wsum > 0.0 {
+        weights
+            .iter()
+            .map(|w| w.max(0.0) / wsum * pool as f64)
+            .collect()
+    } else {
+        vec![pool as f64 / k as f64; k]
+    };
+    let mut assigned = 0usize;
+    let mut rem: Vec<(usize, f64)> = Vec::with_capacity(k);
+    for (i, s) in shares.iter().enumerate() {
+        let fl = s.floor() as usize;
+        out[i] += fl;
+        assigned += fl;
+        rem.push((i, s - fl));
+    }
+    rem.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    for &(i, _) in rem.iter().take(pool - assigned) {
+        out[i] += 1;
+    }
+    out
+}
+
+/// Per-decision counters, surfaced as `model/*` bench counters and the
+/// run summary's controller line.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct ModelStats {
+    /// Solver invocations (one per provisioner tick once signals exist).
+    pub solves: u64,
+    /// Adopted-target movements (the churn the deadband is damping).
+    pub target_changes: u64,
+    /// Solves whose answer was inside the deadband and ignored.
+    pub deadband_holds: u64,
+}
+
+/// The online controller: signal estimation + solver + deadband, one
+/// instance per [`CoordinatorCore`](crate::coordinator::core) running
+/// under [`AllocationPolicy::Model`](super::provisioner::AllocationPolicy).
+#[derive(Debug, Clone)]
+pub struct ModelController {
+    /// Tuning (rates, window, deadband).
+    pub config: ModelControllerConfig,
+    cpus_per_node: u32,
+    object_bytes: f64,
+    mu_ewma: Option<f64>,
+    target: Option<usize>,
+    /// Decision counters.
+    pub stats: ModelStats,
+}
+
+impl ModelController {
+    /// New controller for nodes exposing `cpus_per_node` slots over
+    /// objects of `object_bytes` mean size.
+    pub fn new(config: ModelControllerConfig, cpus_per_node: u32, object_bytes: f64) -> Self {
+        ModelController {
+            config,
+            cpus_per_node,
+            object_bytes,
+            mu_ewma: None,
+            target: None,
+            stats: ModelStats::default(),
+        }
+    }
+
+    /// Feed one observed per-task compute time (seconds) into the μ
+    /// estimate. The core calls this on every arrival with the task's
+    /// declared compute, so the estimate leads the completions.
+    pub fn observe_compute(&mut self, compute_s: f64) {
+        if !(compute_s > 0.0) {
+            return;
+        }
+        self.mu_ewma = Some(match self.mu_ewma {
+            None => compute_s,
+            Some(prev) => MU_ALPHA * compute_s + (1.0 - MU_ALPHA) * prev,
+        });
+    }
+
+    /// The standing adopted target, if any solve has happened.
+    pub fn target(&self) -> Option<usize> {
+        self.target
+    }
+
+    /// Estimate workload signals from the recorder's trailing window.
+    /// Exposed for the fig02 consistency test.
+    pub fn estimate(&self, rec: &Recorder, queue_len: usize, max_nodes: usize) -> SolveInputs {
+        let buckets = rec.ts.buckets();
+        let start = buckets.len().saturating_sub(self.config.window_s.max(1));
+        let win = &buckets[start..];
+        let secs = win.len().max(1) as f64;
+        let arrivals: u64 = win.iter().map(|b| b.arrivals as u64).sum();
+        let (mut local, mut remote, mut gpfs) = (0u64, 0u64, 0u64);
+        for b in win {
+            local += b.bytes_local;
+            remote += b.bytes_remote;
+            gpfs += b.bytes_gpfs;
+        }
+        let total = local + remote + gpfs;
+        // Before any byte moves, assume everything misses — the model
+        // then provisions for cold caches, the conservative direction.
+        let (p_local, p_miss) = if total == 0 {
+            (0.0, 1.0)
+        } else {
+            (local as f64 / total as f64, gpfs as f64 / total as f64)
+        };
+        SolveInputs {
+            queue_len,
+            arrival_rate: arrivals as f64 / secs,
+            mu_s: self.mu_ewma.unwrap_or(DEFAULT_MU_S),
+            overhead_s: self.config.overhead_s,
+            object_bytes: self.object_bytes,
+            p_miss,
+            p_local,
+            persistent_bps: gbps_to_bps(self.config.persistent_gbps),
+            transient_bps: gbps_to_bps(self.config.local_disk_gbps),
+            cpus_per_node: self.cpus_per_node,
+            min_nodes: self.config.min_nodes,
+            max_nodes,
+        }
+    }
+
+    /// One control step: estimate → solve → deadband → adopted target.
+    /// `max_nodes` is the caller's current quota (the sharded router
+    /// rebalances it between ticks).
+    pub fn decide(&mut self, rec: &Recorder, queue_len: usize, max_nodes: usize) -> usize {
+        let inputs = self.estimate(rec, queue_len, max_nodes);
+        let solved = solve(&inputs).nodes;
+        self.stats.solves += 1;
+        let adopted = match self.target {
+            None => solved,
+            Some(cur) => {
+                let band = ((cur as f64 * self.config.deadband).ceil() as usize).max(1);
+                if solved.abs_diff(cur) > band {
+                    solved
+                } else {
+                    cur
+                }
+            }
+        };
+        // The quota may have shrunk under a standing target.
+        let adopted = adopted.min(max_nodes).max(inputs.min_nodes.min(max_nodes));
+        if self.target != Some(adopted) {
+            if self.target.is_some() {
+                self.stats.target_changes += 1;
+            }
+            self.target = Some(adopted);
+        } else if adopted != solved {
+            self.stats.deadband_holds += 1;
+        }
+        adopted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_inputs() -> SolveInputs {
+        SolveInputs {
+            queue_len: 500,
+            arrival_rate: 50.0,
+            mu_s: 0.1,
+            overhead_s: 0.0046,
+            object_bytes: 1e7,
+            p_miss: 0.3,
+            p_local: 0.6,
+            persistent_bps: gbps_to_bps(4.4),
+            transient_bps: gbps_to_bps(1.6),
+            cpus_per_node: 2,
+            min_nodes: 1,
+            max_nodes: 64,
+        }
+    }
+
+    /// Satellite: more arrival pressure never lowers the solved fleet.
+    #[test]
+    fn solved_nodes_are_monotone_in_arrival_rate() {
+        let mut prev = 0usize;
+        for rate in [1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0] {
+            let d = solve(&SolveInputs {
+                arrival_rate: rate,
+                ..base_inputs()
+            });
+            assert!(
+                d.nodes >= prev,
+                "rate {rate}: solved {} < previous {prev}",
+                d.nodes
+            );
+            prev = d.nodes;
+        }
+        // And the pressure actually moves the knee somewhere in range.
+        assert!(prev > 1, "high arrival pressure should grow the fleet");
+    }
+
+    /// Satellite: min/max clamping.
+    #[test]
+    fn solve_clamps_to_the_admissible_range() {
+        // Batch pressure wants everything; the cap binds.
+        let d = solve(&SolveInputs {
+            arrival_rate: f64::INFINITY,
+            max_nodes: 8,
+            ..base_inputs()
+        });
+        assert!(d.nodes <= 8);
+        // An idle stream collapses to min_nodes.
+        let d = solve(&SolveInputs {
+            queue_len: 0,
+            arrival_rate: 0.0,
+            min_nodes: 3,
+            ..base_inputs()
+        });
+        assert_eq!(d.nodes, 3);
+        // min_nodes floors even under mild load.
+        let d = solve(&SolveInputs {
+            arrival_rate: 0.001,
+            queue_len: 1,
+            min_nodes: 5,
+            ..base_inputs()
+        });
+        assert!(d.nodes >= 5);
+        // Degenerate range: min > max resolves to max.
+        let d = solve(&SolveInputs {
+            min_nodes: 100,
+            max_nodes: 8,
+            ..base_inputs()
+        });
+        assert_eq!(d.nodes, 8);
+    }
+
+    /// Satellite: the solver is a pure function — bit-equal outputs
+    /// across repeated calls on the same inputs.
+    #[test]
+    fn solve_is_bit_equal_across_repeated_calls() {
+        let inp = base_inputs();
+        let first = solve(&inp);
+        for _ in 0..100 {
+            let again = solve(&inp);
+            assert_eq!(again.nodes, first.nodes);
+            assert_eq!(again.score.to_bits(), first.score.to_bits());
+            assert_eq!(again.w.to_bits(), first.w.to_bits());
+            assert_eq!(again.efficiency.to_bits(), first.efficiency.to_bits());
+        }
+    }
+
+    /// Satellite: fixed-point stability — on a steady-state workload the
+    /// adopted target settles and never oscillates.
+    #[test]
+    fn steady_state_target_does_not_oscillate() {
+        let mut rec = Recorder::default();
+        let mut ctl = ModelController::new(ModelControllerConfig::default(), 2, 1e7);
+        // A steady 40 tasks/s stream with a stable byte mix.
+        for s in 0..120u64 {
+            let now = crate::util::time::Micros::from_secs(s);
+            let b = rec.ts.bucket_mut(s);
+            b.arrivals += 40;
+            b.bytes_local += 6_000;
+            b.bytes_gpfs += 1_000;
+            rec.sample(now, 100, 8, 10, 16);
+        }
+        let first = ctl.decide(&rec, 100, 64);
+        for _ in 0..200 {
+            let again = ctl.decide(&rec, 100, 64);
+            assert_eq!(again, first, "steady inputs must hold the target");
+        }
+        assert_eq!(ctl.stats.target_changes, 0, "no churn after adoption");
+        assert_eq!(ctl.target(), Some(first));
+    }
+
+    /// The deadband swallows ±1 estimate wobble but passes real shifts.
+    #[test]
+    fn deadband_damps_small_wobble_and_admits_regime_changes() {
+        let mut ctl = ModelController::new(
+            ModelControllerConfig {
+                window_s: 1,
+                ..ModelControllerConfig::default()
+            },
+            2,
+            1e7,
+        );
+        let mut rec = Recorder::default();
+        let mk = |rec: &mut Recorder, sec: u64, rate: u32| {
+            let now = crate::util::time::Micros::from_secs(sec);
+            rec.ts.bucket_mut(sec).arrivals += rate;
+            rec.sample(now, 50, 4, 4, 8);
+        };
+        mk(&mut rec, 0, 40);
+        let t1 = ctl.decide(&rec, 50, 64);
+        // 10x the arrival pressure: the target must move despite the
+        // deadband.
+        mk(&mut rec, 1, 400);
+        let t2 = ctl.decide(&rec, 50, 64);
+        assert!(t2 > t1, "regime change must punch through ({t1} → {t2})");
+        assert!(ctl.stats.target_changes >= 1);
+    }
+
+    #[test]
+    fn compute_ewma_tracks_observations() {
+        let mut ctl = ModelController::new(ModelControllerConfig::default(), 2, 1e7);
+        let rec = Recorder::default();
+        // Default μ before any observation.
+        let inp = ctl.estimate(&rec, 10, 64);
+        assert_eq!(inp.mu_s, DEFAULT_MU_S);
+        ctl.observe_compute(2.0);
+        assert_eq!(ctl.estimate(&rec, 10, 64).mu_s, 2.0);
+        ctl.observe_compute(1.0);
+        let mu = ctl.estimate(&rec, 10, 64).mu_s;
+        assert!(mu < 2.0 && mu > 1.0, "EWMA blends: {mu}");
+        // Garbage observations are ignored.
+        ctl.observe_compute(0.0);
+        ctl.observe_compute(-5.0);
+        ctl.observe_compute(f64::NAN);
+        assert_eq!(ctl.estimate(&rec, 10, 64).mu_s, mu);
+    }
+
+    #[test]
+    fn cold_start_assumes_all_misses() {
+        let ctl = ModelController::new(ModelControllerConfig::default(), 2, 1e7);
+        let rec = Recorder::default();
+        let inp = ctl.estimate(&rec, 10, 64);
+        assert_eq!(inp.p_miss, 1.0);
+        assert_eq!(inp.p_local, 0.0);
+    }
+
+    #[test]
+    fn apportion_conserves_total_and_respects_floor() {
+        let q = apportion(8, &[3.0, 1.0, 0.0, 0.0], 1);
+        assert_eq!(q.iter().sum::<usize>(), 8);
+        assert!(q.iter().all(|&n| n >= 1), "floor of one per shard: {q:?}");
+        assert!(q[0] > q[1], "weight orders the split: {q:?}");
+        // Zero weights degrade to an even split.
+        let q = apportion(8, &[0.0; 4], 1);
+        assert_eq!(q, vec![2, 2, 2, 2]);
+        // Floor infeasible for the total: reduced, never panics.
+        let q = apportion(2, &[1.0; 4], 1);
+        assert_eq!(q.iter().sum::<usize>(), 2);
+        // Deterministic across calls.
+        assert_eq!(
+            apportion(13, &[0.2, 0.2, 0.3], 1),
+            apportion(13, &[0.2, 0.2, 0.3], 1)
+        );
+        assert!(apportion(4, &[], 1).is_empty());
+    }
+}

@@ -16,7 +16,8 @@ use crate::ids::ExecutorId;
 use crate::util::time::Micros;
 
 /// How aggressively new nodes are requested (the paper's tunable
-/// allocation policies; `one`/`additive`/`multiplicative`/`all`).
+/// allocation policies; `one`/`additive`/`multiplicative`/`all`, plus
+/// the closed-loop `model` controller of docs/PROVISIONING.md).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum AllocationPolicy {
     /// Request one node per decision.
@@ -27,15 +28,21 @@ pub enum AllocationPolicy {
     Multiplicative(f64),
     /// Request everything still needed at once.
     AllAtOnce,
+    /// Model-predictive: track the node target solved from the §3
+    /// performance model each tick
+    /// ([`ModelController`](crate::coordinator::model::ModelController)).
+    Model,
 }
 
 impl AllocationPolicy {
     /// Parse the CLI flag form shared by `datadiff run --allocation` and
-    /// the live-engine drivers: `one`, `add:N`, `mult:F`, or `all`.
+    /// the live-engine drivers: `one`, `add:N`, `mult:F`, `all`, or
+    /// `model`.
     pub fn parse_flag(s: &str) -> Result<AllocationPolicy, String> {
         match s {
             "one" => Ok(AllocationPolicy::OneAtATime),
             "all" => Ok(AllocationPolicy::AllAtOnce),
+            "model" => Ok(AllocationPolicy::Model),
             _ => {
                 if let Some(n) = s.strip_prefix("add:") {
                     let n: usize = n
@@ -55,7 +62,7 @@ impl AllocationPolicy {
                     Ok(AllocationPolicy::Multiplicative(f))
                 } else {
                     Err(format!(
-                        "unknown allocation policy `{s}` (expected one|add:N|mult:F|all)"
+                        "unknown allocation policy `{s}` (expected one|add:N|mult:F|all|model)"
                     ))
                 }
             }
@@ -70,6 +77,7 @@ impl std::fmt::Display for AllocationPolicy {
             AllocationPolicy::Additive(n) => write!(f, "add:{n}"),
             AllocationPolicy::Multiplicative(x) => write!(f, "mult:{x}"),
             AllocationPolicy::AllAtOnce => write!(f, "all"),
+            AllocationPolicy::Model => write!(f, "model"),
         }
     }
 }
@@ -156,6 +164,9 @@ pub struct Provisioner {
     max_nodes: usize,
     /// Nodes requested but not yet registered (in GRAM limbo).
     pending: usize,
+    /// Fleet target for [`AllocationPolicy::Model`], set by the model
+    /// controller just before each tick; `None` until the first solve.
+    model_target: Option<usize>,
     /// Counters.
     pub stats: ProvisionerStats,
 }
@@ -167,6 +178,7 @@ impl Provisioner {
             config,
             max_nodes,
             pending: 0,
+            model_target: None,
             stats: ProvisionerStats::default(),
         }
     }
@@ -174,6 +186,32 @@ impl Provisioner {
     /// Nodes requested but not yet registered.
     pub fn pending(&self) -> usize {
         self.pending
+    }
+
+    /// Cluster node cap.
+    pub fn max_nodes(&self) -> usize {
+        self.max_nodes
+    }
+
+    /// Resize the node cap (the sharded router's model-driven quota
+    /// rebalancing — docs/PROVISIONING.md). A standing model target is
+    /// re-clamped to the new cap.
+    pub fn set_max_nodes(&mut self, max_nodes: usize) {
+        self.max_nodes = max_nodes;
+        if let Some(t) = self.model_target {
+            self.model_target = Some(t.min(max_nodes));
+        }
+    }
+
+    /// Install the model controller's solved fleet target (clamped to
+    /// `max_nodes`). Only consulted under [`AllocationPolicy::Model`].
+    pub fn set_model_target(&mut self, target: usize) {
+        self.model_target = Some(target.min(self.max_nodes));
+    }
+
+    /// The current model target, if a solve has happened.
+    pub fn model_target(&self) -> Option<usize> {
+        self.model_target
     }
 
     /// The engine must call this when a requested node finishes GRAM
@@ -200,6 +238,35 @@ impl Provisioner {
         let registered = registry.len();
         let capacity = registered + self.pending;
 
+        // --- Model-predictive: track the solved target directly. The
+        // controller already folded arrival pressure into the target, so
+        // allocation happens even on a momentarily empty queue; release
+        // stays idle-based and backlog-suppressed so the mid-serve and
+        // about-to-work invariants of the static policies carry over.
+        if self.config.allocation == AllocationPolicy::Model {
+            if let Some(target) = self.model_target {
+                if capacity < target {
+                    action.allocate = (target - capacity).min(self.max_nodes - capacity);
+                    if action.allocate > 0 {
+                        self.pending += action.allocate;
+                        self.stats.nodes_requested += action.allocate as u64;
+                        self.stats.allocation_decisions += 1;
+                    }
+                }
+                if queue_len == 0 && capacity > target && self.config.idle_release_s > 0.0 {
+                    let cutoff =
+                        now.saturating_sub(Micros::from_secs_f64(self.config.idle_release_s));
+                    let mut idle = registry.idle_since(cutoff);
+                    idle.truncate(capacity - target);
+                    self.stats.nodes_released += idle.len() as u64;
+                    action.release = idle;
+                }
+                return action;
+            }
+            // No solve yet (first tick): fall through to the
+            // queue-pressure heuristic below.
+        }
+
         // --- Allocation: queue pressure → desired fleet size.
         if queue_len > 0 && capacity < self.max_nodes {
             let desired = (queue_len as u64)
@@ -214,7 +281,9 @@ impl Provisioner {
                         let grown = ((capacity.max(1)) as f64 * (f - 1.0)).ceil() as usize;
                         grown.max(1)
                     }
-                    AllocationPolicy::AllAtOnce => deficit,
+                    // Pre-solve fallback only (a standing target returns
+                    // above): cover the visible deficit.
+                    AllocationPolicy::AllAtOnce | AllocationPolicy::Model => deficit,
                 };
                 action.allocate = step.min(deficit).min(self.max_nodes - capacity);
                 if action.allocate > 0 {
@@ -336,8 +405,61 @@ mod tests {
     }
 
     #[test]
+    fn model_policy_tracks_the_installed_target() {
+        let mut p = Provisioner::new(
+            ProvisionerConfig {
+                allocation: AllocationPolicy::Model,
+                idle_release_s: 10.0,
+                ..ProvisionerConfig::default()
+            },
+            64,
+        );
+        let reg = registry(2);
+        // Below target: allocate the difference, even with an empty queue.
+        p.set_model_target(6);
+        let a = p.on_tick(Micros::from_secs(1), 0, &reg);
+        assert_eq!(a.allocate, 4);
+        assert_eq!(p.pending(), 4);
+        // At target (counting pending): no churn either way.
+        let a = p.on_tick(Micros::from_secs(2), 50, &reg);
+        assert_eq!(a, ProvisionAction::default());
+        // Above target with an empty queue: release idles down to target,
+        // not all of them.
+        for _ in 0..4 {
+            p.on_node_registered();
+        }
+        let reg6 = registry(6);
+        p.set_model_target(4);
+        let a = p.on_tick(Micros::from_secs(100), 0, &reg6);
+        assert_eq!(a.allocate, 0);
+        assert_eq!(a.release.len(), 2, "releases only the excess over target");
+        // Backlog suppresses release entirely.
+        let a = p.on_tick(Micros::from_secs(100), 3, &reg6);
+        assert!(a.release.is_empty());
+    }
+
+    #[test]
+    fn model_target_clamps_to_max_nodes() {
+        let mut p = Provisioner::new(
+            ProvisionerConfig {
+                allocation: AllocationPolicy::Model,
+                ..ProvisionerConfig::default()
+            },
+            8,
+        );
+        p.set_model_target(1_000);
+        assert_eq!(p.model_target(), Some(8));
+        let reg = registry(0);
+        assert_eq!(p.on_tick(Micros::from_secs(1), 0, &reg).allocate, 8);
+        // Shrinking the cap re-clamps a standing target.
+        p.set_max_nodes(4);
+        assert_eq!(p.model_target(), Some(4));
+        assert_eq!(p.max_nodes(), 4);
+    }
+
+    #[test]
     fn allocation_flag_round_trips() {
-        for s in ["one", "add:8", "mult:2", "all"] {
+        for s in ["one", "add:8", "mult:2", "all", "model"] {
             let p = AllocationPolicy::parse_flag(s).unwrap();
             assert_eq!(p.to_string(), s, "display must round-trip `{s}`");
             // FromStr is the same parser.

@@ -83,6 +83,8 @@
 //! `shard/*` and `tools/bench_gate.py` gates them.
 
 use crate::coordinator::core::{CoordinatorCore, CoreConfig, Effect};
+use crate::coordinator::model::apportion;
+use crate::coordinator::provisioner::AllocationPolicy;
 use crate::coordinator::queue::Task;
 use crate::coordinator::scheduler::SchedulerStats;
 use crate::coordinator::AccessKind;
@@ -125,10 +127,23 @@ pub struct ShardedCoordinator {
     probe_cursor: u64,
     /// Round-robin cursor for initial-fleet registration.
     next_register: usize,
+    /// True when the shards run `--allocation model`: the router then
+    /// rebalances per-shard node quotas by observed arrival pressure
+    /// each tick (see [`ShardedCoordinator::rebalance_quotas`]).
+    model_allocation: bool,
+    /// Quota-rebalance rounds that actually moved at least one shard's
+    /// quota (surfaced as the `model/shard_rebalances` bench counter).
+    quota_rebalances: u64,
     /// Router-level tallies (events fanned, cross-shard fetches,
     /// per-shard routing).
     counters: ShardCounters,
 }
+
+/// Trailing window (seconds) over which [`rebalance_quotas`]
+/// (ShardedCoordinator::rebalance_quotas) sums per-shard arrivals —
+/// matches the model controller's default signal window so quota moves
+/// and target moves see the same history.
+const REBALANCE_WINDOW_S: u64 = 30;
 
 impl ShardedCoordinator {
     /// Build a `shards`-way router. Each shard gets a clone of `config`
@@ -143,6 +158,7 @@ impl ShardedCoordinator {
     /// hashed to it would wait forever.
     pub fn new(config: CoreConfig, shards: usize, mut rng: Pcg64) -> Self {
         let k = shards.max(1);
+        let model_allocation = config.provisioner.allocation == AllocationPolicy::Model;
         // Hard assert (not debug): a zero-quota shard can never register
         // an executor, so tasks hashed to it would stall a release-build
         // run forever instead of failing here at construction.
@@ -173,9 +189,43 @@ impl ShardedCoordinator {
             cross_serving: HashMap::new(),
             probe_cursor: 0,
             next_register: 0,
+            model_allocation,
+            quota_rebalances: 0,
             counters: ShardCounters::new(k),
             cores,
         }
+    }
+
+    /// Quota-rebalance rounds that moved at least one shard's quota.
+    pub fn quota_rebalances(&self) -> u64 {
+        self.quota_rebalances
+    }
+
+    /// Install cluster-calibrated model-controller parameters on every
+    /// shard (no-op on shards without a controller, i.e. any allocation
+    /// policy but `model`). The engines call this right after
+    /// construction so the online §3 solve uses the same store/disk
+    /// rates and per-task overhead the offline model was validated
+    /// with.
+    pub fn set_model_config(&mut self, cfg: crate::coordinator::model::ModelControllerConfig) {
+        for core in &mut self.cores {
+            core.set_model_config(cfg);
+        }
+    }
+
+    /// Sum of every shard's model-controller decision counters; `None`
+    /// when no shard runs the model policy.
+    pub fn merged_model_stats(&self) -> Option<crate::coordinator::model::ModelStats> {
+        let mut out: Option<crate::coordinator::model::ModelStats> = None;
+        for core in &self.cores {
+            if let Some(s) = core.model_stats() {
+                let acc = out.get_or_insert_with(Default::default);
+                acc.solves += s.solves;
+                acc.target_changes += s.target_changes;
+                acc.deadband_holds += s.deadband_holds;
+            }
+        }
+        out
     }
 
     /// Number of shards (coordinator cores).
@@ -538,15 +588,64 @@ impl ShardedCoordinator {
     }
 
     /// Periodic sample + provisioning decision, fanned to every shard;
-    /// effects are concatenated in shard order (deterministic).
+    /// effects are concatenated in shard order (deterministic). Under
+    /// `--allocation model` at K > 1 the router first rebalances the
+    /// shards' node quotas by observed arrival pressure, so each
+    /// shard's controller solves against a share of the cluster cap
+    /// proportional to its recent load.
     pub fn on_tick(&mut self, now: Micros) -> Vec<Effect> {
         self.counters.router_events += 1;
+        if self.model_allocation && self.cores.len() > 1 {
+            self.rebalance_quotas(now);
+        }
         let mut out = Vec::new();
         for shard in 0..self.cores.len() {
             let effects = self.cores[shard].on_tick(now);
             out.extend(self.rewrite(shard, effects));
         }
         out
+    }
+
+    /// Re-apportion the cluster's node cap over the shards by recent
+    /// arrival pressure: each shard's weight is its queued backlog plus
+    /// the arrivals its recorder saw in the trailing
+    /// [`REBALANCE_WINDOW_S`] seconds, and
+    /// [`apportion`](crate::coordinator::model::apportion) splits the
+    /// conserved total (largest-remainder, floor 1 — no shard is ever
+    /// starved to a zero quota). Deterministic: weights are read in
+    /// shard order from state the driver already advanced. K = 1 never
+    /// calls this, preserving the pass-through contract.
+    fn rebalance_quotas(&mut self, now: Micros) {
+        let total: usize = self.cores.iter().map(|c| c.node_quota()).sum();
+        if total < self.cores.len() {
+            return;
+        }
+        let sec = now.as_secs();
+        let from = sec.saturating_sub(REBALANCE_WINDOW_S) as usize;
+        let weights: Vec<f64> = self
+            .cores
+            .iter()
+            .map(|c| {
+                let buckets = c.rec.ts.buckets();
+                let to = buckets.len().min(sec as usize + 1);
+                let arrivals: u64 = buckets[from.min(to)..to]
+                    .iter()
+                    .map(|b| u64::from(b.arrivals))
+                    .sum();
+                (arrivals + c.queue_len() as u64) as f64
+            })
+            .collect();
+        let quotas = apportion(total, &weights, 1);
+        let mut moved = false;
+        for (core, &quota) in self.cores.iter_mut().zip(&quotas) {
+            if core.node_quota() != quota {
+                core.set_node_quota(quota);
+                moved = true;
+            }
+        }
+        if moved {
+            self.quota_rebalances += 1;
+        }
     }
 
     /// Progress safety net, fanned to every shard (a shard with waiting
@@ -1089,6 +1188,64 @@ mod tests {
             (0, 0, 2),
             "both of task 1's accesses ended up as misses"
         );
+    }
+
+    #[test]
+    fn model_allocation_rebalances_quotas_toward_the_loaded_shard() {
+        let mut cfg = config(DispatchPolicy::GoodCacheCompute);
+        cfg.provisioner.allocation = AllocationPolicy::Model;
+        let mut r = ShardedCoordinator::new(cfg, 2, Pcg64::seeded(3));
+        let (a, b) = files_on_distinct_shards(&r);
+        let sa = r.shard_of_file(FileId(a));
+        let sb = r.shard_of_file(FileId(b));
+        assert_eq!(r.core(sa).node_quota() + r.core(sb).node_quota(), 8);
+        // All arrival pressure lands on shard A (no executors: the
+        // backlog and the recorded arrivals both count as weight).
+        for i in 0..12u64 {
+            let effs = r.on_arrival(task(i, &[a]), 0, 1.0, Micros::ZERO);
+            assert!(effs.is_empty(), "no executors: tasks must queue");
+        }
+        let _ = r.on_tick(Micros::from_secs(1));
+        assert!(r.quota_rebalances() >= 1, "loaded shard must attract quota");
+        assert!(
+            r.core(sa).node_quota() > r.core(sb).node_quota(),
+            "quota follows arrival pressure: {} vs {}",
+            r.core(sa).node_quota(),
+            r.core(sb).node_quota()
+        );
+        assert!(r.core(sb).node_quota() >= 1, "idle shard keeps its floor");
+        assert_eq!(
+            r.core(sa).node_quota() + r.core(sb).node_quota(),
+            8,
+            "the cluster cap is conserved"
+        );
+        r.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn single_shard_model_runs_never_rebalance() {
+        let mut cfg = config(DispatchPolicy::GoodCacheCompute);
+        cfg.provisioner.allocation = AllocationPolicy::Model;
+        let mut r = ShardedCoordinator::new(cfg, 1, Pcg64::seeded(3));
+        for i in 0..6u64 {
+            let _ = r.on_arrival(task(i, &[0]), 0, 1.0, Micros::ZERO);
+        }
+        let _ = r.on_tick(Micros::from_secs(1));
+        let _ = r.on_tick(Micros::from_secs(2));
+        assert_eq!(r.quota_rebalances(), 0, "K = 1 is a pass-through");
+        assert_eq!(r.core(0).node_quota(), 8, "single core keeps the full cap");
+    }
+
+    #[test]
+    fn static_policies_never_rebalance_quotas() {
+        let mut r = router(DispatchPolicy::GoodCacheCompute, 4);
+        for i in 0..12u64 {
+            let _ = r.on_arrival(task(i, &[(i % 3) as u32]), 0, 1.0, Micros::ZERO);
+        }
+        let _ = r.on_tick(Micros::from_secs(1));
+        assert_eq!(r.quota_rebalances(), 0);
+        let total: usize = (0..4).map(|s| r.core(s).node_quota()).sum();
+        assert_eq!(total, 8, "static quotas stay at the construction split");
     }
 
     #[test]

@@ -53,7 +53,8 @@ pub enum FigureKind {
 
 /// One registry entry.
 pub struct Figure {
-    /// Stable id (`fig02` … `fig15`, `sweep-eviction`, `sweep-dispatch`).
+    /// Stable id (`fig02` … `fig15`, `sweep-eviction`, `sweep-dispatch`,
+    /// `sweep-allocation`).
     pub id: &'static str,
     /// Human title for logs and reports.
     pub title: &'static str,
@@ -90,6 +91,7 @@ pub fn registry() -> Vec<Figure> {
         fig15::figure(),
         sweeps::eviction_figure(),
         sweeps::dispatch_figure(),
+        sweeps::allocation_figure(),
     ];
     v.extend(scenarios::figures());
     v
@@ -235,6 +237,7 @@ mod tests {
             "fig11",
             "fig15",
             "sweep-eviction",
+            "sweep-allocation",
             "scenario-zipf-churn",
             "scenario-diurnal",
             "scenario-bulk-batch",

@@ -5,13 +5,20 @@
 //!   choice matters most).
 //! * **Dispatch sweep**: all five dispatch policies at 4 GB caches
 //!   (the Figure 8 configuration).
+//! * **Allocation sweep**: all five provisioner allocation policies
+//!   (one / add:8 / mult:2 / all / model) × the four scenario families —
+//!   the divergence table ROADMAP item 2 asks for, and the benchmark
+//!   that shows the closed-loop `model` controller matching the best
+//!   static policy's performance index at a fraction of `all`'s
+//!   node-seconds (docs/PROVISIONING.md).
 //!
-//! Both are plain config lists + table renderers so the figure registry
+//! All are plain config lists + table renderers so the figure registry
 //! fans the runs out with the rest of the suite and
 //! `examples/policy_sweep.rs` stays a thin wrapper.
 
 use crate::cache::EvictionPolicy;
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, ScenarioSpec};
+use crate::coordinator::provisioner::AllocationPolicy;
 use crate::coordinator::scheduler::DispatchPolicy;
 use crate::report::{f, pct, Table};
 use crate::sim::RunResult;
@@ -104,6 +111,95 @@ pub fn dispatch_table(results: &[RunResult]) -> Table {
     t
 }
 
+/// The five allocation policies, in sweep order. `one` comes first so
+/// each scenario family's first run doubles as the speedup/PI baseline.
+pub const ALLOCATION_POLICIES: [(&str, AllocationPolicy); 5] = [
+    ("one", AllocationPolicy::OneAtATime),
+    ("add:8", AllocationPolicy::Additive(8)),
+    ("mult:2", AllocationPolicy::Multiplicative(2.0)),
+    ("all", AllocationPolicy::AllAtOnce),
+    ("model", AllocationPolicy::Model),
+];
+
+/// Node-seconds a run held registered capacity for: the per-second
+/// fleet-size series integrated at 1 Hz — the provisioning *cost* axis
+/// of the divergence table (CPU-hours scales it by `cpus_per_node`).
+pub fn node_seconds(r: &RunResult) -> u64 {
+    r.ts.buckets().iter().map(|b| u64::from(b.nodes)).sum()
+}
+
+/// Configs for the allocation divergence sweep at `scale`:
+/// family-major over [`ScenarioSpec::CATALOG`], then
+/// [`ALLOCATION_POLICIES`] within each family (20 runs).
+pub fn allocation_configs(scale: f64) -> Vec<ExperimentConfig> {
+    let mut out = Vec::new();
+    for name in ScenarioSpec::CATALOG {
+        let spec = ScenarioSpec::preset(name).expect("catalog name");
+        for (label, policy) in ALLOCATION_POLICIES {
+            let mut cfg = crate::experiments::scenarios::scenario_config(&spec, scale, 1);
+            cfg.name = format!("alloc-{name}-{label}");
+            cfg.provisioner.allocation = policy;
+            out.push(cfg);
+        }
+    }
+    out
+}
+
+/// Render the allocation divergence table from its runs (same order as
+/// [`allocation_configs`]). Speedup and PI are measured against each
+/// family's own `one` run, so the columns compare provisioning policies
+/// on identical workloads, not workloads against each other.
+pub fn allocation_table(results: &[RunResult]) -> Table {
+    let mut t = Table::new(
+        "allocation divergence: 5 provisioning policies x 4 scenario families (seed 42)",
+        &[
+            "family",
+            "allocation",
+            "WET(s)",
+            "node-sec",
+            "cpu-h",
+            "speedup",
+            "PI",
+            "efficiency",
+        ],
+    );
+    for (fam_i, name) in ScenarioSpec::CATALOG.iter().enumerate() {
+        let base = fam_i * ALLOCATION_POLICIES.len();
+        let baseline_wet = results[base].summary.workload_execution_time_s;
+        for (j, (label, _)) in ALLOCATION_POLICIES.iter().enumerate() {
+            let r = &results[base + j];
+            t.row(vec![
+                (*name).into(),
+                (*label).into(),
+                f(r.summary.workload_execution_time_s, 1),
+                node_seconds(r).to_string(),
+                f(r.summary.cpu_time_hours, 3),
+                f(r.summary.speedup_vs(baseline_wet), 2),
+                f(r.summary.performance_index_raw(baseline_wet), 2),
+                pct(r.summary.efficiency),
+            ]);
+        }
+    }
+    t
+}
+
+// `FigureKind::Standalone` carries a non-capturing fn pointer.
+fn run_allocation(scale: f64, jobs: usize) -> Vec<Table> {
+    let results = crate::experiments::registry::run_configs(allocation_configs(scale), jobs);
+    vec![allocation_table(&results)]
+}
+
+/// Registry entry for the allocation divergence sweep.
+pub fn allocation_figure() -> crate::experiments::registry::Figure {
+    use crate::experiments::registry::{Figure, FigureKind};
+    Figure {
+        id: "sweep-allocation",
+        title: "Allocation sweep: one/add/mult/all/model x 4 scenario families",
+        deterministic: true,
+        kind: FigureKind::Standalone(run_allocation),
+    }
+}
+
 /// Registry entry for the eviction-policy ablation.
 pub fn eviction_figure() -> crate::experiments::registry::Figure {
     use crate::experiments::registry::{Figure, FigureKind, SimSet};
@@ -152,6 +248,17 @@ mod tests {
         let dp = dispatch_configs(0.004);
         assert_eq!(dp.len(), 5);
         assert!(dp[0].name.starts_with("dispatch-"));
+        let al = allocation_configs(0.004);
+        assert_eq!(al.len(), 20, "4 families x 5 allocation policies");
+        assert_eq!(al[0].name, "alloc-zipf-churn-one");
+        assert_eq!(
+            al[4].provisioner.allocation,
+            AllocationPolicy::Model,
+            "model closes each family's block"
+        );
+        for c in &al {
+            c.validate().unwrap();
+        }
     }
 
     #[test]

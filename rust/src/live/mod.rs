@@ -79,7 +79,9 @@ pub struct LiveConfig {
     pub queue_tasks_per_worker: usize,
     /// How aggressively the provisioner requests new workers — the same
     /// allocation policies as the simulated DRP, shared through the
-    /// coordinator core (`one`/`add:N`/`mult:F`/`all`).
+    /// coordinator core (`one`/`add:N`/`mult:F`/`all`/`model`; under
+    /// `model` the core runs the §3 performance model online and the
+    /// provisioner tracks its solved worker target).
     pub allocation: AllocationPolicy,
     /// Dispatch policy.
     pub policy: DispatchPolicy,
@@ -733,6 +735,34 @@ mod tests {
             report.recorder.access_counts(),
             (report.hits_local, report.hits_global, report.misses)
         );
+        assert_eq!(report.dispatch_order.len(), 30);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn model_allocation_runs_live() {
+        let root = tmp("model");
+        let data = root.join("store");
+        let tasks = setup_dataset(&data, 10, 4096);
+        let cfg = LiveConfig {
+            initial_workers: 1,
+            max_workers: 3,
+            queue_tasks_per_worker: 10,
+            allocation: AllocationPolicy::Model,
+            policy: DispatchPolicy::GoodCacheCompute,
+            cache: CacheConfig {
+                capacity_bytes: 1 << 20,
+                policy: EvictionPolicy::Lru,
+            },
+            persistent_dir: data,
+            cache_root: root.join("caches"),
+            compute: ComputeKind::Sleep(Duration::from_millis(1)),
+            seed: 7,
+            idle_release_s: 0.0,
+        };
+        let report = run(&cfg, &tasks).expect("live run under --allocation model");
+        assert_eq!(report.completed, 30);
+        assert_eq!(report.failed, 0);
         assert_eq!(report.dispatch_order.len(), 30);
         let _ = std::fs::remove_dir_all(&root);
     }

@@ -223,7 +223,7 @@ pub fn run(cfg: &ExperimentConfig) -> RunResult {
     let rng_cache = root.fork(1);
     let rng_gram = root.fork(2);
     let shards = cfg.cluster.shards.max(1);
-    let router = ShardedCoordinator::new(
+    let mut router = ShardedCoordinator::new(
         CoreConfig {
             scheduler: cfg.scheduler.clone(),
             provisioner: cfg.provisioner.clone(),
@@ -235,6 +235,16 @@ pub fn run(cfg: &ExperimentConfig) -> RunResult {
         shards,
         rng_cache,
     );
+    // Calibrate the online §3 controller (if `--allocation model`) with
+    // the same cluster rates and per-task overhead the offline model
+    // uses, so fig02's validation transfers to the closed loop.
+    router.set_model_config(crate::coordinator::model::ModelControllerConfig {
+        persistent_gbps: cfg.cluster.gpfs_gbps,
+        local_disk_gbps: cfg.cluster.local_disk_gbps,
+        overhead_s: cfg.cluster.dispatch_service_us / 1e6
+            + 2.0 * cfg.cluster.net_latency_ms / 1e3,
+        ..Default::default()
+    });
     // Dependency bookkeeping only materializes when the workload
     // actually carries edges (pipeline scenarios).
     let (dep_remaining, dep_children, held) = if wl.dep_edges > 0 {
@@ -731,6 +741,35 @@ mod tests {
             a.summary.workload_execution_time_s,
             b.summary.workload_execution_time_s
         );
+    }
+
+    #[test]
+    fn model_allocation_completes_and_grows_under_load() {
+        let mut cfg = small_cfg(DispatchPolicy::GoodCacheCompute);
+        cfg.provisioner.allocation =
+            crate::coordinator::provisioner::AllocationPolicy::Model;
+        // 100 ms/task at up to 100 tasks/s saturates several nodes, so
+        // the solved target must climb above the single seed node.
+        cfg.workload.compute_ms = 100.0;
+        let r = run(&cfg);
+        assert_eq!(r.summary.tasks_completed, 2_000);
+        let peak = r.ts.buckets().iter().map(|b| b.nodes).max().unwrap_or(0);
+        assert!(peak >= 2, "controller never grew the fleet: {peak}");
+        assert!(peak as usize <= cfg.cluster.max_nodes, "cap respected");
+    }
+
+    #[test]
+    fn sharded_model_allocation_run_is_deterministic() {
+        let mut cfg = small_cfg(DispatchPolicy::GoodCacheCompute);
+        cfg.provisioner.allocation =
+            crate::coordinator::provisioner::AllocationPolicy::Model;
+        cfg.cluster.shards = 4;
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_eq!(a.summary.tasks_completed, 2_000);
+        assert_eq!(a.dispatch_order, b.dispatch_order);
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.shard, b.shard);
     }
 
     #[test]

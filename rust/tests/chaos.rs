@@ -148,6 +148,65 @@ fn heavy_tailed_scenario_sweep_is_oracle_clean() {
 }
 
 #[test]
+fn model_allocation_sweep_is_oracle_clean() {
+    // The closed-loop controller (`--allocation model`) through the
+    // fault schedule at K ∈ {1, 4}: the solved target shrinks and grows
+    // while executors are killed mid-fetch/mid-compute, so this pins
+    // (a) the controller never releases a mid-serve source — any such
+    // release would break the oracle's replica accounting — and (b)
+    // killed executors re-enter through Allocate/on_node_registered
+    // until the fleet tracks the solved target again.
+    use datadiffusion::coordinator::provisioner::AllocationPolicy;
+    let mut runs = 0u64;
+    for policy in DispatchPolicy::ALL {
+        for shards in [1usize, 4] {
+            let mut cfg = ChaosConfig::quick(21_000 + runs);
+            cfg.policy = policy;
+            cfg.shards = shards;
+            cfg.allocation = AllocationPolicy::Model;
+            if shards > 1 {
+                cfg.nodes = 8;
+            }
+            let r = run_chaos(&cfg);
+            assert!(
+                r.faults_injected > 0,
+                "[{policy} K={shards} seed={}] injected no faults",
+                r.seed
+            );
+            assert!(
+                r.clean(),
+                "[{policy} K={shards} seed={}] model run not clean:\n{}",
+                r.seed,
+                r.dump.as_deref().unwrap_or("(stalled, no oracle dump)")
+            );
+            assert_eq!(
+                r.completed + r.failed,
+                r.events as u64,
+                "[{policy} K={shards}] killed executors must re-enter the \
+                 solved target until every task reaches a terminal state"
+            );
+            // Same seed reproduces bit-for-bit under the controller too.
+            let b = run_chaos(&cfg);
+            assert_eq!(r.fingerprint, b.fingerprint, "[{policy} K={shards}]");
+            runs += 1;
+        }
+    }
+    assert_eq!(runs, 10);
+}
+
+#[test]
+fn model_allocation_fingerprint_default_is_unchanged() {
+    // Adding the allocation knob must not move existing seeds: the
+    // default config still runs mult:2 and reproduces itself.
+    use datadiffusion::coordinator::provisioner::AllocationPolicy;
+    let cfg = ChaosConfig::quick(3);
+    assert_eq!(cfg.allocation, AllocationPolicy::Multiplicative(2.0));
+    let a = run_chaos(&cfg);
+    let b = run_chaos(&cfg);
+    assert_eq!(a.fingerprint, b.fingerprint);
+}
+
+#[test]
 fn self_test_dump_names_seed_plan_and_trace() {
     let dump = oracle_self_test();
     assert!(dump.contains("seed="), "no seed in dump:\n{dump}");

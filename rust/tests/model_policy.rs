@@ -1,0 +1,176 @@
+//! Acceptance gates for the model-predictive provisioner
+//! (`--allocation model`).
+//!
+//! * **Offline ↔ online consistency**: the online solver's optimum over
+//!   fig02's validation points must equal a brute-force argmax over the
+//!   offline `model::predict` — fig02 is the golden oracle for the
+//!   controller, not a dead table;
+//! * **Scenario divergence** (ROADMAP item 2's measurable claim): on
+//!   the two bursty families (zipf-churn, diurnal) the `model` policy
+//!   achieves a performance index at least as high as the best static
+//!   policy while holding strictly fewer node-seconds than `all`, with
+//!   seeds pinned and the workload fingerprint stable per family;
+//! * **End-to-end**: `--allocation model` completes a sharded scenario
+//!   run (K = 4) deterministically.
+
+use datadiffusion::config::ScenarioSpec;
+use datadiffusion::coordinator::model::{solve, SolveInputs};
+use datadiffusion::coordinator::provisioner::AllocationPolicy;
+use datadiffusion::experiments::registry::run_configs;
+use datadiffusion::experiments::sweeps::{node_seconds, ALLOCATION_POLICIES};
+use datadiffusion::experiments::{fig02, scenarios};
+use datadiffusion::model::{self, ModelInputs};
+use datadiffusion::workload;
+
+/// Brute-force best-PI fleet over the *offline* model: scan every
+/// admissible node count, call `model::predict` directly, and keep the
+/// smallest fleet maximizing `1 / (n · W²)` — the §3 performance-index
+/// score with the constant workload factors cancelled.
+fn offline_best_pi(offline: &ModelInputs, cpus_per_node: usize, max_nodes: usize) -> usize {
+    let mut best_n = 0usize;
+    let mut best = f64::NEG_INFINITY;
+    for n in 1..=max_nodes {
+        let m = ModelInputs {
+            cpus: (n * cpus_per_node) as f64,
+            ..*offline
+        };
+        let w = model::predict(&m).w.max(1e-12);
+        let score = 1.0 / (n as f64 * w * w);
+        if score > best {
+            best = score;
+            best_n = n;
+        }
+    }
+    best_n
+}
+
+#[test]
+fn solver_optima_match_the_offline_models_best_pi_entries() {
+    // The fig02 grid: the CPU panel's localities × a batch workload,
+    // plus finite arrival rates layered on top so the online knee
+    // (arrival saturation) is exercised, not just the batch limit.
+    let max_nodes = 64usize;
+    for &locality in &[1.0, 1.38, 5.0, 30.0] {
+        for &tasks in &[2_000u64, 23_000] {
+            let cfg = fig02::validation_config(128, locality, tasks);
+            let offline = ModelInputs::from_config(&cfg);
+            for &rate in &[f64::INFINITY, 5.0, 50.0, 500.0] {
+                let offline = ModelInputs {
+                    arrival_rate: rate,
+                    ..offline
+                };
+                let inp = SolveInputs {
+                    queue_len: offline.num_tasks as usize,
+                    arrival_rate: offline.arrival_rate,
+                    mu_s: offline.mu_s,
+                    overhead_s: offline.overhead_s,
+                    object_bytes: offline.object_bytes,
+                    p_miss: offline.p_miss,
+                    p_local: offline.p_local,
+                    persistent_bps: offline.persistent_bps,
+                    transient_bps: offline.transient_bps,
+                    cpus_per_node: cfg.cluster.cpus_per_node as u32,
+                    min_nodes: 1,
+                    max_nodes,
+                };
+                let solved = solve(&inp);
+                let oracle = offline_best_pi(&offline, cfg.cluster.cpus_per_node, max_nodes);
+                assert_eq!(
+                    solved.nodes, oracle,
+                    "locality {locality}, {tasks} tasks, rate {rate}: \
+                     online solve diverged from the offline best-PI entry"
+                );
+                // And the solver's reported makespan is the offline
+                // model's prediction at that fleet, bit for bit.
+                let m = ModelInputs {
+                    cpus: (oracle * cfg.cluster.cpus_per_node) as f64,
+                    ..offline
+                };
+                assert_eq!(
+                    solved.w.to_bits(),
+                    model::predict(&m).w.to_bits(),
+                    "solver must report the offline model's W verbatim"
+                );
+            }
+        }
+    }
+}
+
+/// Run one scenario family through all five allocation policies at
+/// smoke scale (seed 42 via `scenario_config`); returns the results in
+/// [`ALLOCATION_POLICIES`] order.
+fn family_results(family: &str) -> Vec<datadiffusion::sim::RunResult> {
+    let spec = ScenarioSpec::preset(family).expect("catalog name");
+    let cfgs: Vec<_> = ALLOCATION_POLICIES
+        .iter()
+        .map(|(label, policy)| {
+            let mut cfg = scenarios::scenario_config(&spec, 0.02, 1);
+            cfg.name = format!("divergence-{family}-{label}");
+            cfg.provisioner.allocation = *policy;
+            cfg
+        })
+        .collect();
+    // The task stream is a property of the workload config alone: every
+    // policy consumes the identical pinned stream (the family's golden
+    // fingerprint), so the runs differ only in provisioning.
+    let fp = workload::generate(&cfgs[0].workload, cfgs[0].seed).fingerprint();
+    for cfg in &cfgs {
+        assert_eq!(
+            workload::generate(&cfg.workload, cfg.seed).fingerprint(),
+            fp,
+            "{family}: the pinned stream drifted across policy configs"
+        );
+    }
+    run_configs(cfgs, 2)
+}
+
+#[test]
+fn model_matches_best_static_pi_with_fewer_node_seconds_on_bursty_families() {
+    for family in ["zipf-churn", "diurnal"] {
+        let results = family_results(family);
+        assert_eq!(results.len(), ALLOCATION_POLICIES.len());
+        let expected = results[0].summary.tasks_completed;
+        for (r, (label, _)) in results.iter().zip(ALLOCATION_POLICIES.iter()) {
+            assert_eq!(
+                r.summary.tasks_completed, expected,
+                "{family}/{label}: incomplete run"
+            );
+        }
+        // PI against the family's own `one` baseline (results[0]).
+        let base_wet = results[0].summary.workload_execution_time_s;
+        let pi: Vec<f64> = results
+            .iter()
+            .map(|r| r.summary.performance_index_raw(base_wet))
+            .collect();
+        let best_static = pi[..4].iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let model_pi = pi[4];
+        assert!(
+            model_pi >= best_static,
+            "{family}: model PI {model_pi:.4} below best static {best_static:.4} \
+             (per-policy PI: {pi:?})"
+        );
+        // The controller must hold strictly fewer node-seconds than the
+        // allocate-everything policy (index 3 = `all`).
+        let ns_all = node_seconds(&results[3]);
+        let ns_model = node_seconds(&results[4]);
+        assert!(
+            ns_model < ns_all,
+            "{family}: model node-seconds {ns_model} not below all's {ns_all}"
+        );
+    }
+}
+
+#[test]
+fn sharded_model_scenario_run_is_deterministic_end_to_end() {
+    let spec = ScenarioSpec::preset("diurnal").expect("catalog name");
+    let mut cfg = scenarios::scenario_config(&spec, 0.02, 4);
+    cfg.name = "model-k4-diurnal".into();
+    cfg.provisioner.allocation = AllocationPolicy::Model;
+    let expected = workload::generate(&cfg.workload, cfg.seed).tasks.len() as u64;
+    let a = datadiffusion::sim::run(&cfg);
+    let b = datadiffusion::sim::run(&cfg);
+    assert_eq!(a.summary.tasks_completed, expected, "sharded model run incomplete");
+    assert_eq!(a.dispatch_order, b.dispatch_order, "rerun diverged");
+    assert_eq!(a.events_processed, b.events_processed);
+    assert_eq!(a.shard, b.shard, "router counters diverged across reruns");
+}

@@ -44,6 +44,17 @@ checks only quantities that noise cannot fake:
    links stages, so a zero means arrival gating is vacuously dead);
    workload/dep_edges_per_task additionally rides the baseline drift
    rule below.
+3d. *Model-predictive controller accounting* (fresh snapshot only): the
+   bench's regime-shift pass must keep the §3 solver alive
+   (model/solves > 0) and its 10x arrival surge must move the adopted
+   fleet target (model/target_changes > 0 — a zero means the controller
+   is frozen and `--allocation model` degenerates to a static fleet),
+   and the K=4 one-sided-load fixture must shift provisioner quota
+   between shards (model/shard_rebalances > 0 — a zero means the
+   router's pressure-weighted apportionment went dead);
+   model/deadband_holds is reported for visibility, and
+   model/target_changes_per_decision rides the baseline drift rule
+   below (a churn spike means the deadband stopped damping).
 4. *Deterministic work counters* (fresh vs committed baseline): tasks
    inspected per pickup, boundary-cursor steps, flow rerates per event,
    pending maintenance ops per event, dead hints purged per event, notify
@@ -261,6 +272,43 @@ def run_gate(fresh, baseline):
             "dependency-gated arrival path is no longer exercised"
         )
 
+    # --- 2f. model-predictive controller accounting (within-run). -------
+    for key in (
+        "model/solves",
+        "model/target_changes",
+        "model/deadband_holds",
+        "model/target_changes_per_decision",
+        "model/shard_rebalances",
+    ):
+        if key not in counters:
+            fail(f"missing counter {key}")
+    solves = counters["model/solves"]
+    target_changes = counters["model/target_changes"]
+    rebalances = counters["model/shard_rebalances"]
+    print(
+        f"bench-gate: model solves = {solves:g}, target changes = "
+        f"{target_changes:g} (deadband holds = "
+        f"{counters['model/deadband_holds']:g}), shard rebalances = "
+        f"{rebalances:g}"
+    )
+    if solves <= 0:
+        fail(
+            "model/solves is 0: the model-predictive controller never ran "
+            "its §3 solve, so `--allocation model` is not being exercised"
+        )
+    if target_changes <= 0:
+        fail(
+            "model/target_changes is 0: the bench's 10x arrival surge must "
+            "move the adopted fleet target, so the controller is frozen "
+            "(deadband stuck or solver ignoring its inputs)"
+        )
+    if rebalances <= 0:
+        fail(
+            "model/shard_rebalances is 0: the K=4 one-sided-load fixture "
+            "deterministically concentrates pressure on one shard, so the "
+            "router's pressure-weighted quota apportionment has gone dead"
+        )
+
     # --- 3. inspected-per-pickup sanity (within-run). -------------------
     for policy in ("max-compute-util", "good-cache-compute"):
         key = f"inspected_per_pickup/{policy}"
@@ -341,6 +389,11 @@ def synthetic_fresh():
         "workload/tasks_generated": 20_000.0,
         "workload/dep_edges": 4_000.0,
         "workload/dep_edges_per_task": 0.2,
+        "model/solves": 120.0,
+        "model/target_changes": 3.0,
+        "model/deadband_holds": 10.0,
+        "model/target_changes_per_decision": 0.025,
+        "model/shard_rebalances": 4.0,
     }
     for concurrency in (16, 128):
         for metric in ("rerates", "heap_updates"):
@@ -448,6 +501,21 @@ def self_test():
     def dep_edges_per_task_drifts(s):
         s["counters"]["workload/dep_edges_per_task"] = 0.2 * 2.0
 
+    def model_solver_dead(s):
+        s["counters"]["model/solves"] = 0.0
+
+    def model_target_frozen(s):
+        s["counters"]["model/target_changes"] = 0.0
+
+    def shard_rebalancing_dead(s):
+        s["counters"]["model/shard_rebalances"] = 0.0
+
+    def missing_model_counter(s):
+        del s["counters"]["model/deadband_holds"]
+
+    def target_churn_drifts(s):
+        s["counters"]["model/target_changes_per_decision"] = 0.025 * 2.0
+
     cases = [
         ("indexed pickup slower than reference", slow_indexed),
         ("non-finite case mean", nan_mean),
@@ -470,6 +538,11 @@ def self_test():
         ("pipeline dep edges vanished", dep_edges_vanished),
         ("missing workload counter", missing_workload_counter),
         ("dep edges per task drifts past baseline", dep_edges_per_task_drifts),
+        ("model solver dead", model_solver_dead),
+        ("model target frozen", model_target_frozen),
+        ("shard quota rebalancing dead", shard_rebalancing_dead),
+        ("missing model counter", missing_model_counter),
+        ("target churn drifts past baseline", target_churn_drifts),
     ]
     for label, mutate in cases:
         mutated(label, mutate)
