@@ -8,8 +8,11 @@
 //! router (cross-shard fetch rewrites — `shard/*` counters), the seeded
 //! chaos harness with its shadow oracle (`chaos/*` counters), the
 //! workload scenario library generators (`workload/*` counters), the
-//! model-predictive provisioning controller (`model/*` counters), plus
-//! the whole-simulation event rate. Run before/after every optimization:
+//! model-predictive provisioning controller (`model/*` counters), the
+//! million-task arena/SoA scale drive (`scale/*` counters;
+//! `DATADIFF_SCALE_QUICK=1` shrinks it to 100K × 128 for CI smoke),
+//! plus the whole-simulation event rate. Run before/after every
+//! optimization:
 //!
 //!     cargo bench --bench perf_hotpath
 //!
@@ -26,7 +29,7 @@
 
 use datadiffusion::cache::{CacheConfig, EvictionPolicy, ObjectCache};
 use datadiffusion::config::ExperimentConfig;
-use datadiffusion::coordinator::core::{CoreConfig, FileSizes};
+use datadiffusion::coordinator::core::{CoordinatorCore, CoreConfig, Effect, FileSizes};
 use datadiffusion::coordinator::executor::ExecutorRegistry;
 use datadiffusion::coordinator::pending::{remove_queued, PendingIndex, PendingStats};
 use datadiffusion::coordinator::provisioner::{AllocationPolicy, ProvisionerConfig};
@@ -56,6 +59,7 @@ fn main() {
         bench_scenario_generation(&mut counters),
         bench_model_controller(&mut counters),
         bench_whole_sim(),
+        bench_scale(&mut counters),
     ];
     println!("\n== counters (deterministic work metrics) ==");
     for (k, v) in &counters {
@@ -313,6 +317,21 @@ fn bench_pending_maintenance(counters: &mut Vec<(String, f64)>) -> Bench {
             let qref = queue.front_ref().expect("fixture queue is non-empty");
             remove_queued(&mut queue, &mut pending, qref, &index);
         }
+        // Slab-churn phase (ROADMAP "arena slab reuse"): executors leave
+        // and rejoin while the hot file still has pending readers. Each
+        // deregistration parks the freed candidate set in the pool, and
+        // the rejoin's first index event must re-register through that
+        // pool instead of allocating — `pending/slab_reuse` counts the
+        // recycled sets and the CI gate asserts it stays live (> 0).
+        for round in 0..4usize {
+            let e = execs[1 + (round % 3)];
+            pending.on_deregister(e);
+            index.add(hot, e);
+            pending.on_index_add(hot, e);
+            index.remove(hot, e);
+            pending.on_index_remove(hot, e, &queue, &index);
+            events += 2;
+        }
         let mut reg = ExecutorRegistry::new();
         for _ in 0..execs.len() {
             reg.register(2, Micros::ZERO);
@@ -368,6 +387,7 @@ fn bench_pending_maintenance(counters: &mut Vec<(String, f64)>) -> Bench {
         "pending/dead_hints_purged_per_event".into(),
         lazy_stats.dead_hints_purged as f64 / events.max(1) as f64,
     ));
+    counters.push(("pending/slab_reuse".into(), lazy_stats.slab_reuse as f64));
     let _ = b.write_csv();
     b
 }
@@ -899,6 +919,171 @@ fn bench_model_controller(counters: &mut Vec<(String, f64)>) -> Bench {
         changes as f64 / solves.max(1) as f64,
     ));
     counters.push(("model/shard_rebalances".into(), rebalances as f64));
+    let _ = b.write_csv();
+    b
+}
+
+/// Uniform data-object size (bytes) in the million-task scale drive.
+const SCALE_FILE_BYTES: u64 = 1_000_000;
+
+/// Pump the effect queue to quiescence: enact every effect through the
+/// matching handler, returning each drained `Vec` to the core's scratch
+/// pool, and fall back to `kick()` while tasks remain queued (a notify
+/// may decline; the safety net re-notifies). Mirrors the engines'
+/// recycle discipline, so `alloc_events` measures real pool behavior.
+fn scale_drain(core: &mut CoordinatorCore, q: &mut std::collections::VecDeque<Effect>, now: Micros) {
+    let mut kicks = 0u32;
+    loop {
+        while let Some(eff) = q.pop_front() {
+            let mut effs = match eff {
+                Effect::Notify(e) => core.on_pickup(e, now),
+                Effect::Fetch(plan) => core.on_fetch_done(plan.task_id, now, None),
+                Effect::Compute { task_id, .. } => core.on_compute_done(task_id, now, now),
+                // The fleet is fully registered up front and never
+                // idle-released (no ticks), so these are no-ops here.
+                Effect::Allocate(_) | Effect::Release(_) => continue,
+            };
+            q.extend(effs.drain(..));
+            core.recycle_effects(effs);
+        }
+        if core.queue_is_empty() {
+            return;
+        }
+        kicks += 1;
+        assert!(kicks < 64, "scale drive stalled: queue non-empty after 64 kicks");
+        let mut effs = core.kick();
+        q.extend(effs.drain(..));
+        core.recycle_effects(effs);
+    }
+}
+
+/// The tentpole's proof: a seeded million-task × 1K-executor drive
+/// through the arena/SoA dispatch path (100K × 128 with
+/// `DATADIFF_SCALE_QUICK=1`, the CI smoke shape). Every arrival →
+/// notify → pickup → fetch → compute round trip runs synchronously with
+/// the engines' buffer-recycling discipline, and three gated `scale/*`
+/// counters prove the budget holds:
+///
+/// * `scale/events_per_sec` — handler-event throughput (wall-clock; the
+///   gate only requires it to be present and positive);
+/// * `scale/allocs_per_event` — scratch-pool misses per handler event,
+///   a deterministic allocation-rate proxy that must stay under the
+///   gate's constant (a recycling regression shows up here regardless
+///   of machine noise);
+/// * `scale/peak_table_bytes` — peak arena table footprint (index +
+///   pending + caches) sampled once per submission batch.
+fn bench_scale(counters: &mut Vec<(String, f64)>) -> Bench {
+    use std::collections::VecDeque;
+    use std::time::Instant;
+
+    let quick = std::env::var("DATADIFF_SCALE_QUICK").as_deref() == Ok("1");
+    let (tasks, nodes, files) = if quick {
+        (100_000u64, 128usize, 10_000u64)
+    } else {
+        (1_000_000u64, 1_000usize, 100_000u64)
+    };
+    let mut b = Bench::new(if quick {
+        "million-task scale drive (quick: 100K tasks, 128 executors)"
+    } else {
+        "million-task scale drive (1M tasks, 1K executors)"
+    });
+    let mut core = CoordinatorCore::new(
+        CoreConfig {
+            scheduler: SchedulerConfig::default(),
+            provisioner: ProvisionerConfig::default(),
+            // ~200 objects per node: eviction churn is part of the load.
+            cache: CacheConfig::lru(200 * SCALE_FILE_BYTES),
+            max_nodes: nodes,
+            slots_per_node: 2,
+            file_sizes: FileSizes::Uniform(SCALE_FILE_BYTES),
+        },
+        Pcg64::seeded(4242),
+    );
+    let mut q: VecDeque<Effect> = VecDeque::new();
+    for _ in 0..nodes {
+        let (_, mut effs) = core.register_node(Micros::ZERO);
+        q.extend(effs.drain(..));
+        core.recycle_effects(effs);
+    }
+    scale_drain(&mut core, &mut q, Micros::ZERO);
+
+    // The chaos workload shape at scale: 1–2 uniform files per task,
+    // submitted in batches with a full drain (and a footprint sample)
+    // after each.
+    let mut rng = Pcg64::seeded(77);
+    let batch = 10_000u64;
+    let mut peak_bytes = core.table_bytes();
+    let mut submitted = 0u64;
+    let t0 = Instant::now();
+    while submitted < tasks {
+        let now = Micros::from_millis(submitted / batch);
+        let end = (submitted + batch).min(tasks);
+        while submitted < end {
+            let dominant = FileId(rng.below(files) as u32);
+            let mut tfiles = vec![dominant];
+            if rng.below(100) < 35 {
+                let second = FileId(rng.below(files) as u32);
+                if second != dominant {
+                    tfiles.push(second);
+                }
+            }
+            let mut effs = core.on_arrival(
+                Task {
+                    id: TaskId(submitted),
+                    files: tfiles,
+                    compute: Micros::ZERO,
+                    arrival: now,
+                },
+                0,
+                0.0,
+                now,
+            );
+            submitted += 1;
+            q.extend(effs.drain(..));
+            core.recycle_effects(effs);
+        }
+        scale_drain(&mut core, &mut q, now);
+        peak_bytes = peak_bytes.max(core.table_bytes());
+    }
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    assert!(core.queue_is_empty(), "scale drive left tasks queued");
+
+    let events = core.effect_events();
+    let allocs = core.alloc_events();
+    let allocs_per_event = allocs as f64 / events.max(1) as f64;
+    println!(
+        "    {tasks} tasks / {nodes} executors: {events} handler events in {elapsed:.2}s \
+         ({:.2}M events/s), {allocs} pool misses ({allocs_per_event:.6}/event), \
+         peak tables {peak_bytes} bytes",
+        events as f64 / elapsed / 1e6
+    );
+    counters.push(("scale/events_per_sec".into(), events as f64 / elapsed));
+    counters.push(("scale/allocs_per_event".into(), allocs_per_event));
+    counters.push(("scale/peak_table_bytes".into(), peak_bytes as f64));
+
+    // Timed steady-state case on the warm tables (the drive itself runs
+    // once; repeating a 1M-task pump through `iter`'s warm-up/sampling
+    // would dominate the whole bench binary).
+    let mut id = tasks;
+    let now = Micros::from_millis(tasks / batch + 1);
+    b.iter("steady-state round trip (warm tables)", 1, || {
+        let f = FileId(rng.below(files) as u32);
+        let mut effs = core.on_arrival(
+            Task {
+                id: TaskId(id),
+                files: vec![f],
+                compute: Micros::ZERO,
+                arrival: now,
+            },
+            0,
+            0.0,
+            now,
+        );
+        id += 1;
+        q.extend(effs.drain(..));
+        core.recycle_effects(effs);
+        scale_drain(&mut core, &mut q, now);
+    });
     let _ = b.write_csv();
     b
 }

@@ -2,16 +2,17 @@
 //! ignored.
 
 use super::EvictionState;
-use crate::ids::FileId;
 use crate::util::prng::Pcg64;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 
-/// FIFO book-keeping (insertion-ordered set).
+/// FIFO book-keeping (insertion-ordered set). The per-slot stamp lives in
+/// a dense `Vec` indexed by the owning cache's slot id (0 = untracked).
 #[derive(Debug, Default)]
 pub struct FifoState {
     clock: u64,
-    by_seq: BTreeMap<u64, FileId>,
-    seq_of: HashMap<FileId, u64>,
+    by_seq: BTreeMap<u64, u32>,
+    /// slot → insertion stamp (0 = untracked).
+    seq_of: Vec<u64>,
 }
 
 impl FifoState {
@@ -22,28 +23,33 @@ impl FifoState {
 }
 
 impl EvictionState for FifoState {
-    fn on_insert(&mut self, file: FileId) {
-        // Re-insert of an evicted-then-refetched file gets a new slot;
-        // on_insert of a resident file never happens (ObjectCache treats
-        // that as an access).
+    fn on_insert(&mut self, slot: u32) {
+        // A freed-then-reused slot gets a fresh stamp for its new
+        // occupant; on_insert of a live slot never happens (ObjectCache
+        // treats a resident re-insert as an access).
+        if self.seq_of.len() <= slot as usize {
+            self.seq_of.resize(slot as usize + 1, 0);
+        }
         self.clock += 1;
-        if let Some(old) = self.seq_of.insert(file, self.clock) {
+        let old = std::mem::replace(&mut self.seq_of[slot as usize], self.clock);
+        if old != 0 {
             self.by_seq.remove(&old);
         }
-        self.by_seq.insert(self.clock, file);
+        self.by_seq.insert(self.clock, slot);
     }
 
-    fn on_access(&mut self, _file: FileId) {
+    fn on_access(&mut self, _slot: u32) {
         // FIFO ignores recency.
     }
 
-    fn pick_victim(&mut self, _rng: &mut Pcg64) -> Option<FileId> {
-        self.by_seq.first_key_value().map(|(_, &f)| f)
+    fn pick_victim(&mut self, _rng: &mut Pcg64) -> Option<u32> {
+        self.by_seq.first_key_value().map(|(_, &s)| s)
     }
 
-    fn on_remove(&mut self, file: FileId) {
-        if let Some(seq) = self.seq_of.remove(&file) {
-            self.by_seq.remove(&seq);
+    fn on_remove(&mut self, slot: u32) {
+        let old = std::mem::replace(&mut self.seq_of[slot as usize], 0);
+        if old != 0 {
+            self.by_seq.remove(&old);
         }
     }
 }
@@ -56,9 +62,9 @@ mod tests {
     fn insertion_order_victims() {
         let mut rng = Pcg64::seeded(0);
         let mut s = FifoState::new();
-        s.on_insert(FileId(1));
-        s.on_insert(FileId(2));
-        s.on_access(FileId(1)); // ignored
-        assert_eq!(s.pick_victim(&mut rng), Some(FileId(1)));
+        s.on_insert(1);
+        s.on_insert(2);
+        s.on_access(1); // ignored
+        assert_eq!(s.pick_victim(&mut rng), Some(1));
     }
 }

@@ -1,20 +1,23 @@
 //! Least-Frequently-Used eviction, ties broken by least recency.
 //!
 //! Ordered set keyed on `(access_count, last_access_seq)` so the victim is
-//! always the coldest object; all operations O(log n).
+//! always the coldest object; all operations O(log n). The per-slot key
+//! lives in a dense `Vec` indexed by the owning cache's slot id
+//! (`(0, 0)` = untracked; real keys have count ≥ 1), replacing the old
+//! `HashMap<FileId, (u64, u64)>` probe.
 
 use super::EvictionState;
-use crate::ids::FileId;
 use crate::util::prng::Pcg64;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 
 /// LFU book-keeping.
 #[derive(Debug, Default)]
 pub struct LfuState {
     clock: u64,
-    /// (count, last-seq) → file; BTreeMap iteration order = eviction order.
-    by_key: BTreeMap<(u64, u64), FileId>,
-    key_of: HashMap<FileId, (u64, u64)>,
+    /// (count, last-seq) → slot; BTreeMap iteration order = eviction order.
+    by_key: BTreeMap<(u64, u64), u32>,
+    /// slot → (count, last-seq) ((0, 0) = untracked).
+    key_of: Vec<(u64, u64)>,
 }
 
 impl LfuState {
@@ -23,36 +26,40 @@ impl LfuState {
         Self::default()
     }
 
-    fn bump(&mut self, file: FileId, start_count: u64) {
+    fn bump(&mut self, slot: u32, start_count: u64) {
+        if self.key_of.len() <= slot as usize {
+            self.key_of.resize(slot as usize + 1, (0, 0));
+        }
         self.clock += 1;
-        let new_key = match self.key_of.get(&file) {
-            Some(&old) => {
-                self.by_key.remove(&old);
-                (old.0 + 1, self.clock)
-            }
-            None => (start_count, self.clock),
+        let old = self.key_of[slot as usize];
+        let new_key = if old != (0, 0) {
+            self.by_key.remove(&old);
+            (old.0 + 1, self.clock)
+        } else {
+            (start_count, self.clock)
         };
-        self.key_of.insert(file, new_key);
-        self.by_key.insert(new_key, file);
+        self.key_of[slot as usize] = new_key;
+        self.by_key.insert(new_key, slot);
     }
 }
 
 impl EvictionState for LfuState {
-    fn on_insert(&mut self, file: FileId) {
-        self.bump(file, 1);
+    fn on_insert(&mut self, slot: u32) {
+        self.bump(slot, 1);
     }
 
-    fn on_access(&mut self, file: FileId) {
-        self.bump(file, 1);
+    fn on_access(&mut self, slot: u32) {
+        self.bump(slot, 1);
     }
 
-    fn pick_victim(&mut self, _rng: &mut Pcg64) -> Option<FileId> {
-        self.by_key.first_key_value().map(|(_, &f)| f)
+    fn pick_victim(&mut self, _rng: &mut Pcg64) -> Option<u32> {
+        self.by_key.first_key_value().map(|(_, &s)| s)
     }
 
-    fn on_remove(&mut self, file: FileId) {
-        if let Some(key) = self.key_of.remove(&file) {
-            self.by_key.remove(&key);
+    fn on_remove(&mut self, slot: u32) {
+        let old = std::mem::replace(&mut self.key_of[slot as usize], (0, 0));
+        if old != (0, 0) {
+            self.by_key.remove(&old);
         }
     }
 }
@@ -65,19 +72,33 @@ mod tests {
     fn coldest_object_is_victim() {
         let mut rng = Pcg64::seeded(0);
         let mut s = LfuState::new();
-        s.on_insert(FileId(1));
-        s.on_insert(FileId(2));
-        s.on_access(FileId(1)); // f1 count=2, f2 count=1
-        assert_eq!(s.pick_victim(&mut rng), Some(FileId(2)));
+        s.on_insert(1);
+        s.on_insert(2);
+        s.on_access(1); // slot 1 count=2, slot 2 count=1
+        assert_eq!(s.pick_victim(&mut rng), Some(2));
     }
 
     #[test]
     fn frequency_ties_break_by_recency() {
         let mut rng = Pcg64::seeded(0);
         let mut s = LfuState::new();
-        s.on_insert(FileId(1));
-        s.on_insert(FileId(2));
-        // Both count=1; f1 was inserted earlier → evict f1.
-        assert_eq!(s.pick_victim(&mut rng), Some(FileId(1)));
+        s.on_insert(1);
+        s.on_insert(2);
+        // Both count=1; slot 1 was inserted earlier → evict slot 1.
+        assert_eq!(s.pick_victim(&mut rng), Some(1));
+    }
+
+    #[test]
+    fn reused_slot_forgets_old_frequency() {
+        let mut rng = Pcg64::seeded(0);
+        let mut s = LfuState::new();
+        s.on_insert(0);
+        s.on_access(0);
+        s.on_access(0); // hot occupant: count=3
+        s.on_insert(1);
+        s.on_remove(0);
+        s.on_insert(0); // new occupant must restart at count=1
+        s.on_access(1); // slot 1: count=2
+        assert_eq!(s.pick_victim(&mut rng), Some(0));
     }
 }

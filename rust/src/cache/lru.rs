@@ -1,22 +1,23 @@
 //! Least-Recently-Used eviction (the paper's default policy).
 //!
-//! Implemented as a monotone "clock" per file: each access stamps the file
-//! with a fresh sequence number kept in a `BTreeMap<seq, file>` ordered
+//! Implemented as a monotone "clock" per slot: each access stamps the slot
+//! with a fresh sequence number kept in a `BTreeMap<seq, slot>` ordered
 //! set, so victim selection is O(log n) (`first_key_value`) and accesses
-//! are O(log n) re-stampings — the same hash-map + sorted-set shape the
-//! paper's §3.2 complexity argument relies on.
+//! are O(log n) re-stampings. The per-slot stamp lives in a dense `Vec`
+//! indexed by the owning cache's slot id (0 = untracked; real stamps start
+//! at 1), replacing the old `HashMap<FileId, u64>` probe.
 
 use super::EvictionState;
-use crate::ids::FileId;
 use crate::util::prng::Pcg64;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 
 /// LRU book-keeping.
 #[derive(Debug, Default)]
 pub struct LruState {
     clock: u64,
-    by_seq: BTreeMap<u64, FileId>,
-    seq_of: HashMap<FileId, u64>,
+    by_seq: BTreeMap<u64, u32>,
+    /// slot → stamp (0 = untracked).
+    seq_of: Vec<u64>,
 }
 
 impl LruState {
@@ -25,31 +26,36 @@ impl LruState {
         Self::default()
     }
 
-    fn stamp(&mut self, file: FileId) {
+    fn stamp(&mut self, slot: u32) {
+        if self.seq_of.len() <= slot as usize {
+            self.seq_of.resize(slot as usize + 1, 0);
+        }
         self.clock += 1;
-        if let Some(old) = self.seq_of.insert(file, self.clock) {
+        let old = std::mem::replace(&mut self.seq_of[slot as usize], self.clock);
+        if old != 0 {
             self.by_seq.remove(&old);
         }
-        self.by_seq.insert(self.clock, file);
+        self.by_seq.insert(self.clock, slot);
     }
 }
 
 impl EvictionState for LruState {
-    fn on_insert(&mut self, file: FileId) {
-        self.stamp(file);
+    fn on_insert(&mut self, slot: u32) {
+        self.stamp(slot);
     }
 
-    fn on_access(&mut self, file: FileId) {
-        self.stamp(file);
+    fn on_access(&mut self, slot: u32) {
+        self.stamp(slot);
     }
 
-    fn pick_victim(&mut self, _rng: &mut Pcg64) -> Option<FileId> {
-        self.by_seq.first_key_value().map(|(_, &f)| f)
+    fn pick_victim(&mut self, _rng: &mut Pcg64) -> Option<u32> {
+        self.by_seq.first_key_value().map(|(_, &s)| s)
     }
 
-    fn on_remove(&mut self, file: FileId) {
-        if let Some(seq) = self.seq_of.remove(&file) {
-            self.by_seq.remove(&seq);
+    fn on_remove(&mut self, slot: u32) {
+        let old = std::mem::replace(&mut self.seq_of[slot as usize], 0);
+        if old != 0 {
+            self.by_seq.remove(&old);
         }
     }
 }
@@ -62,13 +68,13 @@ mod tests {
     fn victim_is_least_recent() {
         let mut rng = Pcg64::seeded(0);
         let mut s = LruState::new();
-        s.on_insert(FileId(1));
-        s.on_insert(FileId(2));
-        s.on_insert(FileId(3));
-        s.on_access(FileId(1));
-        assert_eq!(s.pick_victim(&mut rng), Some(FileId(2)));
-        s.on_remove(FileId(2));
-        assert_eq!(s.pick_victim(&mut rng), Some(FileId(3)));
+        s.on_insert(1);
+        s.on_insert(2);
+        s.on_insert(3);
+        s.on_access(1);
+        assert_eq!(s.pick_victim(&mut rng), Some(2));
+        s.on_remove(2);
+        assert_eq!(s.pick_victim(&mut rng), Some(3));
     }
 
     #[test]
@@ -76,8 +82,19 @@ mod tests {
         let mut rng = Pcg64::seeded(0);
         let mut s = LruState::new();
         assert_eq!(s.pick_victim(&mut rng), None);
-        s.on_insert(FileId(7));
-        s.on_remove(FileId(7));
+        s.on_insert(7);
+        s.on_remove(7);
         assert_eq!(s.pick_victim(&mut rng), None);
+    }
+
+    #[test]
+    fn reused_slot_starts_fresh() {
+        let mut rng = Pcg64::seeded(0);
+        let mut s = LruState::new();
+        s.on_insert(0);
+        s.on_insert(1);
+        s.on_remove(0);
+        s.on_insert(0); // slot reused by a new occupant → most recent now
+        assert_eq!(s.pick_victim(&mut rng), Some(1));
     }
 }

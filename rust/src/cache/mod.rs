@@ -11,6 +11,18 @@
 //! Because the paper assumes data is *never modified after creation*
 //! (§3.1.1), there is no coherence protocol: a cache entry is just
 //! `(FileId, size)` plus policy book-keeping.
+//!
+//! ## Slot-slab layout (§Perf arena/SoA iteration)
+//!
+//! Entries live in a dense slab: each resident object occupies a **slot**
+//! (`u32` index into [`ObjectCache::entries`]); freed slots go on a free
+//! list and are reused. Policy state ([`EvictionState`]) is keyed by slot,
+//! so the per-policy recency/frequency maps become `Vec`s indexed by slot
+//! (bounded by peak residency) instead of `HashMap<FileId, _>` probes.
+//! Every slot carries a **generation** counter (odd = live, even = free,
+//! bumped on every transition) so a stale handle from a previous occupant
+//! can never alias the current one — [`ObjectCache::handle_live`] is the
+//! check, and the byzantine chaos faults lean on it (docs/PERFORMANCE.md).
 
 mod fifo;
 mod lfu;
@@ -102,16 +114,22 @@ impl CacheConfig {
 /// Policy-specific state: the ordering/recency structure that picks a
 /// victim. Implementations must be O(log n) or better per operation — the
 /// scheduler touches caches on every dispatch decision.
+///
+/// Operations are keyed by the owning [`ObjectCache`]'s dense **slot id**
+/// (not `FileId`): slots are allocated contiguously and reused via a free
+/// list, so implementations store per-slot state in plain `Vec`s whose
+/// length is bounded by peak residency.
 pub trait EvictionState: std::fmt::Debug {
-    /// Record that `file` was inserted.
-    fn on_insert(&mut self, file: FileId);
-    /// Record an access (hit) on `file`.
-    fn on_access(&mut self, file: FileId);
-    /// Pick the victim to evict; `rng` is supplied for Random.
-    /// Must only return currently-resident files.
-    fn pick_victim(&mut self, rng: &mut Pcg64) -> Option<FileId>;
-    /// Record that `file` was removed (evicted or invalidated).
-    fn on_remove(&mut self, file: FileId);
+    /// Record that the object in `slot` was inserted.
+    fn on_insert(&mut self, slot: u32);
+    /// Record an access (hit) on the object in `slot`.
+    fn on_access(&mut self, slot: u32);
+    /// Pick the victim slot to evict; `rng` is supplied for Random.
+    /// Must only return currently-occupied slots.
+    fn pick_victim(&mut self, rng: &mut Pcg64) -> Option<u32>;
+    /// Record that the object in `slot` was removed (evicted or
+    /// invalidated). Always called before the slot is freed for reuse.
+    fn on_remove(&mut self, slot: u32);
 }
 
 fn new_state(policy: EvictionPolicy) -> Box<dyn EvictionState + Send> {
@@ -123,6 +141,26 @@ fn new_state(policy: EvictionPolicy) -> Box<dyn EvictionState + Send> {
     }
 }
 
+/// One slab slot. `gen` is odd while the slot is live and even while it is
+/// free; it bumps on every transition, so a `(slot, gen)` handle taken
+/// while live can be validated after arbitrary churn.
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    file: FileId,
+    size: u64,
+    gen: u32,
+}
+
+/// A generation-checked handle to a cache slot (see
+/// [`ObjectCache::slot_handle`] / [`ObjectCache::handle_live`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheSlot {
+    /// Dense slot index.
+    pub slot: u32,
+    /// Generation observed when the handle was taken.
+    pub gen: u32,
+}
+
 /// A byte-capacity object cache with pluggable eviction.
 ///
 /// `insert` returns the list of evicted objects so the owner can propagate
@@ -132,7 +170,11 @@ fn new_state(policy: EvictionPolicy) -> Box<dyn EvictionState + Send> {
 pub struct ObjectCache {
     capacity: u64,
     used: u64,
-    sizes: HashMap<FileId, u64>,
+    /// Dense slot slab; `free` holds reusable indices.
+    entries: Vec<Entry>,
+    free: Vec<u32>,
+    /// Resident file → slot.
+    slot_of: HashMap<FileId, u32>,
     state: Box<dyn EvictionState + Send>,
     policy: EvictionPolicy,
     /// Cumulative eviction count (for ablation reporting).
@@ -145,7 +187,9 @@ impl ObjectCache {
         ObjectCache {
             capacity: config.capacity_bytes,
             used: 0,
-            sizes: HashMap::new(),
+            entries: Vec::new(),
+            free: Vec::new(),
+            slot_of: HashMap::new(),
             state: new_state(config.policy),
             policy: config.policy,
             evictions: 0,
@@ -169,28 +213,54 @@ impl ObjectCache {
 
     /// Number of resident objects.
     pub fn len(&self) -> usize {
-        self.sizes.len()
+        self.slot_of.len()
     }
 
     /// True when nothing is resident.
     pub fn is_empty(&self) -> bool {
-        self.sizes.is_empty()
+        self.slot_of.is_empty()
     }
 
     /// Is `file` resident? (Does *not* count as an access.)
     pub fn contains(&self, file: FileId) -> bool {
-        self.sizes.contains_key(&file)
+        self.slot_of.contains_key(&file)
+    }
+
+    /// Generation-checked handle to `file`'s current slot, if resident.
+    pub fn slot_handle(&self, file: FileId) -> Option<CacheSlot> {
+        self.slot_of.get(&file).map(|&s| CacheSlot {
+            slot: s,
+            gen: self.entries[s as usize].gen,
+        })
+    }
+
+    /// Does `handle` still refer to the occupant it was taken for? False
+    /// once the slot was freed — even if it has since been reused for
+    /// another file (the generation moved on in both transitions).
+    pub fn handle_live(&self, handle: CacheSlot) -> bool {
+        self.entries
+            .get(handle.slot as usize)
+            .is_some_and(|e| e.gen == handle.gen && handle.gen % 2 == 1)
     }
 
     /// Record a read of a resident object (updates recency/frequency).
     /// Returns false if the object was not resident.
     pub fn touch(&mut self, file: FileId) -> bool {
-        if self.sizes.contains_key(&file) {
-            self.state.on_access(file);
+        if let Some(&slot) = self.slot_of.get(&file) {
+            self.state.on_access(slot);
             true
         } else {
             false
         }
+    }
+
+    /// Free `slot` (policy already notified), bumping its generation.
+    fn release_slot(&mut self, slot: u32) {
+        let e = &mut self.entries[slot as usize];
+        debug_assert!(e.gen % 2 == 1, "releasing a free slot");
+        e.gen += 1;
+        self.used -= e.size;
+        self.free.push(slot);
     }
 
     /// Insert `file` of `size` bytes, evicting as needed.
@@ -202,9 +272,9 @@ impl ObjectCache {
         if size > self.capacity {
             return None;
         }
-        if self.sizes.contains_key(&file) {
+        if let Some(&slot) = self.slot_of.get(&file) {
             // Re-insert of a resident object is just an access.
-            self.state.on_access(file);
+            self.state.on_access(slot);
             return Some(Vec::new());
         }
         let mut evicted = Vec::new();
@@ -213,35 +283,63 @@ impl ObjectCache {
                 .state
                 .pick_victim(rng)
                 .expect("cache accounting: used > 0 implies a victim exists");
-            let vsize = self
-                .sizes
-                .remove(&victim)
+            let vfile = self.entries[victim as usize].file;
+            self.slot_of
+                .remove(&vfile)
                 .expect("victim must be resident");
             self.state.on_remove(victim);
-            self.used -= vsize;
+            self.release_slot(victim);
             self.evictions += 1;
-            evicted.push(victim);
+            evicted.push(vfile);
         }
-        self.sizes.insert(file, size);
-        self.state.on_insert(file);
+        let slot = match self.free.pop() {
+            Some(s) => {
+                let e = &mut self.entries[s as usize];
+                debug_assert!(e.gen % 2 == 0, "free-list slot must be free");
+                *e = Entry {
+                    file,
+                    size,
+                    gen: e.gen + 1,
+                };
+                s
+            }
+            None => {
+                self.entries.push(Entry { file, size, gen: 1 });
+                (self.entries.len() - 1) as u32
+            }
+        };
+        self.slot_of.insert(file, slot);
+        self.state.on_insert(slot);
         self.used += size;
         Some(evicted)
     }
 
     /// Remove a specific object (e.g. on executor deregistration cleanup).
     pub fn remove(&mut self, file: FileId) -> bool {
-        if let Some(size) = self.sizes.remove(&file) {
-            self.state.on_remove(file);
-            self.used -= size;
+        if let Some(slot) = self.slot_of.remove(&file) {
+            self.state.on_remove(slot);
+            self.release_slot(slot);
             true
         } else {
             false
         }
     }
 
-    /// Iterate over resident objects.
+    /// Iterate over resident objects (ascending slot order).
     pub fn files(&self) -> impl Iterator<Item = FileId> + '_ {
-        self.sizes.keys().copied()
+        self.entries
+            .iter()
+            .filter(|e| e.gen % 2 == 1)
+            .map(|e| e.file)
+    }
+
+    /// Approximate bytes held by the slab tables (capacity, not length —
+    /// the `scale/peak_table_bytes` bench counter sums this across
+    /// executors). Deterministic for a deterministic drive.
+    pub fn table_bytes(&self) -> u64 {
+        (self.entries.capacity() * std::mem::size_of::<Entry>()
+            + self.free.capacity() * std::mem::size_of::<u32>()
+            + self.slot_of.capacity() * std::mem::size_of::<(FileId, u32)>()) as u64
     }
 }
 
@@ -375,6 +473,42 @@ mod tests {
     }
 
     #[test]
+    fn slots_are_reused_not_grown() {
+        let mut rng = Pcg64::seeded(1);
+        let mut c = cache(EvictionPolicy::Lru, 100);
+        // Steady-state churn: capacity holds 2 objects, insert 50.
+        for i in 0..50 {
+            c.insert(FileId(i), 50, &mut rng).unwrap();
+        }
+        assert_eq!(c.len(), 2);
+        assert!(
+            c.entries.len() <= 3,
+            "slab grew to {} slots under steady churn",
+            c.entries.len()
+        );
+    }
+
+    #[test]
+    fn generation_check_rejects_stale_handles() {
+        let mut rng = Pcg64::seeded(1);
+        let mut c = cache(EvictionPolicy::Lru, 100);
+        c.insert(FileId(1), 100, &mut rng).unwrap();
+        let h = c.slot_handle(FileId(1)).unwrap();
+        assert!(c.handle_live(h));
+        // Evict 1 by inserting 2; the slot is freed...
+        c.insert(FileId(2), 100, &mut rng).unwrap();
+        assert!(!c.handle_live(h), "freed slot must invalidate the handle");
+        // ...and reused for file 2 — the old handle must still be stale.
+        let h2 = c.slot_handle(FileId(2)).unwrap();
+        assert_eq!(h2.slot, h.slot, "slot must be recycled for this test");
+        assert_ne!(h2.gen, h.gen);
+        assert!(!c.handle_live(h));
+        assert!(c.handle_live(h2));
+        // An out-of-range slot is never live.
+        assert!(!c.handle_live(CacheSlot { slot: 999, gen: 1 }));
+    }
+
+    #[test]
     fn accounting_invariant_under_all_policies() {
         use crate::util::proptest::{property, Gen};
         for policy in [
@@ -405,9 +539,21 @@ mod tests {
                     if c.used() > c.capacity() {
                         return Err(format!("used {} > cap {}", c.used(), c.capacity()));
                     }
-                    let sum: u64 = c.sizes.values().sum();
+                    let live: Vec<_> =
+                        c.entries.iter().filter(|e| e.gen % 2 == 1).collect();
+                    let sum: u64 = live.iter().map(|e| e.size).sum();
                     if sum != c.used() {
                         return Err(format!("sum {} != used {}", sum, c.used()));
+                    }
+                    if live.len() != c.slot_of.len() {
+                        return Err(format!(
+                            "live slots {} != map {}",
+                            live.len(),
+                            c.slot_of.len()
+                        ));
+                    }
+                    if live.len() + c.free.len() != c.entries.len() {
+                        return Err("free list disagrees with slab".into());
                     }
                 }
                 Ok(())

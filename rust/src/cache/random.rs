@@ -1,17 +1,22 @@
 //! Random eviction: victim chosen uniformly among resident objects.
 //!
-//! Swap-remove vector + position map gives O(1) insert/remove/pick.
+//! Swap-remove vector + dense position table gives O(1)
+//! insert/remove/pick. `items` preserves the insertion/swap-remove order
+//! the pre-slab `Vec<FileId>` implementation had — one slot per resident
+//! file, same positions — so the single `rng.below(len)` draw per victim
+//! lands on the same object (the sched/core parity contract).
 
 use super::EvictionState;
-use crate::ids::FileId;
 use crate::util::prng::Pcg64;
-use std::collections::HashMap;
+
+const ABSENT: u32 = u32::MAX;
 
 /// Random-eviction book-keeping.
 #[derive(Debug, Default)]
 pub struct RandomState {
-    items: Vec<FileId>,
-    pos: HashMap<FileId, usize>,
+    items: Vec<u32>,
+    /// slot → position in `items` (`ABSENT` = untracked).
+    pos: Vec<u32>,
 }
 
 impl RandomState {
@@ -22,18 +27,21 @@ impl RandomState {
 }
 
 impl EvictionState for RandomState {
-    fn on_insert(&mut self, file: FileId) {
-        if !self.pos.contains_key(&file) {
-            self.pos.insert(file, self.items.len());
-            self.items.push(file);
+    fn on_insert(&mut self, slot: u32) {
+        if self.pos.len() <= slot as usize {
+            self.pos.resize(slot as usize + 1, ABSENT);
+        }
+        if self.pos[slot as usize] == ABSENT {
+            self.pos[slot as usize] = self.items.len() as u32;
+            self.items.push(slot);
         }
     }
 
-    fn on_access(&mut self, _file: FileId) {
+    fn on_access(&mut self, _slot: u32) {
         // Random eviction ignores access patterns.
     }
 
-    fn pick_victim(&mut self, rng: &mut Pcg64) -> Option<FileId> {
+    fn pick_victim(&mut self, rng: &mut Pcg64) -> Option<u32> {
         if self.items.is_empty() {
             None
         } else {
@@ -42,12 +50,13 @@ impl EvictionState for RandomState {
         }
     }
 
-    fn on_remove(&mut self, file: FileId) {
-        if let Some(i) = self.pos.remove(&file) {
+    fn on_remove(&mut self, slot: u32) {
+        let i = std::mem::replace(&mut self.pos[slot as usize], ABSENT);
+        if i != ABSENT {
             let last = self.items.pop().expect("pos implies non-empty");
-            if i < self.items.len() {
-                self.items[i] = last;
-                self.pos.insert(last, i);
+            if (i as usize) < self.items.len() {
+                self.items[i as usize] = last;
+                self.pos[last as usize] = i;
             }
         }
     }
@@ -62,11 +71,11 @@ mod tests {
         let mut rng = Pcg64::seeded(0);
         let mut s = RandomState::new();
         for i in 0..10 {
-            s.on_insert(FileId(i));
+            s.on_insert(i);
         }
         for _ in 0..10 {
             let v = s.pick_victim(&mut rng).unwrap();
-            assert!(v.0 < 10);
+            assert!(v < 10);
             s.on_remove(v);
         }
         assert_eq!(s.pick_victim(&mut rng), None);
@@ -77,11 +86,11 @@ mod tests {
         let mut rng = Pcg64::seeded(1);
         let mut s = RandomState::new();
         for i in 0..4 {
-            s.on_insert(FileId(i));
+            s.on_insert(i);
         }
         let mut seen = [false; 4];
         for _ in 0..200 {
-            seen[s.pick_victim(&mut rng).unwrap().0 as usize] = true;
+            seen[s.pick_victim(&mut rng).unwrap() as usize] = true;
         }
         assert!(seen.iter().all(|&b| b));
     }

@@ -25,6 +25,20 @@
 //! | [`FaultKind::StallTransfer`] | transfer takes 20–80 ms instead of ~1 ms |
 //! | [`FaultKind::PartialTransfer`] | transfer truncates: the task fails and is re-queued (≤ [`MAX_RETRIES`] times) |
 //! | [`FaultKind::PartitionShard`] | one shard unreachable for 30 ms; its messages deliver after heal |
+//! | [`FaultKind::DuplicateNotify`] | the same notification delivered twice; the second pickup is a plain poll |
+//! | [`FaultKind::CorruptCompletion`] | a completion report forged with a task id the coordinator never issued |
+//!
+//! The last two are *byzantine*: they exercise the coordinator's input
+//! validation rather than its recovery machinery. A duplicated
+//! notification must behave like any redundant poll (dispatch stays
+//! exactly-once because the queue hand-off is atomic), and a forged
+//! completion must be rejected at the id tables — the router bounces
+//! ids absent from its task→shard map, and each core bounces ids
+//! absent from its in-flight slab — producing *zero* effects. The
+//! driver enacts whatever the rejection returns, so if a forged id
+//! ever leaked through, the oracle's unknown-task checks would trip;
+//! [`ChaosReport::stale_rejected`] additionally pins the rejection
+//! count to the injection count exactly.
 //!
 //! A dropped notification is modeled as a *very late* pickup rather
 //! than no pickup at all: the core's notify reserves a pending slot,
@@ -87,7 +101,12 @@ const PARTITION_MS: u64 = 30;
 /// Resubmissions allowed per task before it fails permanently.
 pub const MAX_RETRIES: u32 = 2;
 
-/// The eight fault kinds the harness injects. See the module docs for
+/// Bit OR-ed into a real task id to forge a [`FaultKind::CorruptCompletion`]
+/// report. Real ids are dense from zero, so a forged id can never
+/// collide with a task the coordinator knows about.
+const FORGED_TASK_BIT: u64 = 1 << 40;
+
+/// The ten fault kinds the harness injects. See the module docs for
 /// what each does to the effect stream.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FaultKind {
@@ -107,11 +126,16 @@ pub enum FaultKind {
     PartialTransfer,
     /// One shard unreachable for a window; messages deliver after heal.
     PartitionShard,
+    /// The same notification delivered twice (byzantine duplicate).
+    DuplicateNotify,
+    /// A completion report forged with a never-issued task id
+    /// (byzantine corruption); must be rejected with zero effects.
+    CorruptCompletion,
 }
 
 impl FaultKind {
     /// All kinds, in tally order.
-    pub const ALL: [FaultKind; 8] = [
+    pub const ALL: [FaultKind; 10] = [
         FaultKind::DelayNotify,
         FaultKind::ReorderNotify,
         FaultKind::DropNotify,
@@ -120,6 +144,8 @@ impl FaultKind {
         FaultKind::StallTransfer,
         FaultKind::PartialTransfer,
         FaultKind::PartitionShard,
+        FaultKind::DuplicateNotify,
+        FaultKind::CorruptCompletion,
     ];
 
     /// Hyphenated name used in fault plans and tally rendering.
@@ -133,6 +159,8 @@ impl FaultKind {
             FaultKind::StallTransfer => "stall-transfer",
             FaultKind::PartialTransfer => "partial-transfer",
             FaultKind::PartitionShard => "partition-shard",
+            FaultKind::DuplicateNotify => "duplicate-notify",
+            FaultKind::CorruptCompletion => "corrupt-completion",
         }
     }
 }
@@ -140,7 +168,7 @@ impl FaultKind {
 /// Per-kind injection counters for one run.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct FaultTally {
-    counts: [u64; 8],
+    counts: [u64; 10],
 }
 
 impl FaultTally {
@@ -295,6 +323,10 @@ pub struct ChaosReport {
     pub plan: Vec<String>,
     /// Oracle violations detected (`chaos/oracle_violations`).
     pub oracle_violations: usize,
+    /// Forged (byzantine) reports the router/core rejected at the id
+    /// tables. Equals the [`FaultKind::CorruptCompletion`] tally when
+    /// rejection is airtight.
+    pub stale_rejected: u64,
     /// The run hit its step budget with tasks still open.
     pub stalled: bool,
     /// FNV-1a digest of the dispatch trace, access tallies and fault
@@ -374,6 +406,9 @@ enum Step {
     ExecFail(ExecutorId),
     /// An `Effect::Allocate` node finished its LRM bootstrap.
     NodeUp,
+    /// A forged completion report (byzantine): `task` carries
+    /// [`FORGED_TASK_BIT`], so the coordinator must reject it.
+    Byzantine { task: u64, compute: bool },
     /// A shard partition heals.
     Heal(usize),
     /// Provisioner tick + kick safety net.
@@ -619,6 +654,9 @@ impl Driver {
                 .and_then(|e| self.exec_shard.get(&e.0))
                 .copied(),
             Step::Submit(_) | Step::NodeUp | Step::Heal(_) | Step::Tick => None,
+            // Forged ids resolve to no shard; delivery is unaffected by
+            // partitions (an attacker is not bound by our cut).
+            Step::Byzantine { .. } => None,
         }
     }
 
@@ -671,6 +709,8 @@ impl Driver {
         for kind in FaultKind::ALL {
             fnv_mix(&mut fp, self.tally.count(kind));
         }
+        let stale_rejected = self.router.stale_events();
+        fnv_mix(&mut fp, stale_rejected);
         if stalled {
             let open = self.oracle.non_terminal();
             crate::warn!(
@@ -696,6 +736,7 @@ impl Driver {
             tally: self.tally,
             plan: self.plan,
             oracle_violations: violations,
+            stale_rejected,
             stalled,
             fingerprint: fp,
             dump,
@@ -813,6 +854,18 @@ impl Driver {
                 self.oracle.on_register(exec, now);
                 self.enact(effs, now);
             }
+            Step::Byzantine { task, compute } => {
+                // The forged id names a task the coordinator never
+                // issued. Rejection must produce zero effects; we enact
+                // the result anyway so that if a forged id ever leaked
+                // through, the oracle's unknown-task checks would trip.
+                let effs = if compute {
+                    self.router.on_compute_done(TaskId(task), now, now)
+                } else {
+                    self.router.on_fetch_done(TaskId(task), now, None)
+                };
+                self.enact(effs, now);
+            }
             Step::Heal(shard) => {
                 if matches!(self.partition, Some((s, _)) if s == shard) {
                     self.partition = None;
@@ -875,6 +928,14 @@ impl Driver {
                         100
                     };
                     self.schedule(now + Micros(delay_us), Step::Pickup(e));
+                    if self.faults.chance(self.cfg.fault_rate * 0.5) {
+                        // Byzantine duplicate: the same notification
+                        // arrives twice. The second pickup must behave
+                        // like a redundant poll, never a double grant.
+                        self.inject(FaultKind::DuplicateNotify, now, format!("{e}"));
+                        let echo = delay_us + 300 + self.faults.below(700);
+                        self.schedule(now + Micros(echo), Step::Pickup(e));
+                    }
                 }
                 Effect::Fetch(plan) => {
                     let task = plan.task_id.0;
@@ -918,6 +979,21 @@ impl Driver {
                         let xfer = 500 + self.faults.below(1_500);
                         self.schedule(now + Micros(xfer), Step::FetchDone { task, attempt });
                     }
+                    if self.faults.chance(self.cfg.fault_rate * 0.25) {
+                        let forged = task | FORGED_TASK_BIT;
+                        self.inject(
+                            FaultKind::CorruptCompletion,
+                            now,
+                            format!("fetch-done t{task} forged as t{forged}"),
+                        );
+                        self.schedule(
+                            now + Micros(300),
+                            Step::Byzantine {
+                                task: forged,
+                                compute: false,
+                            },
+                        );
+                    }
                 }
                 Effect::Compute {
                     task_id,
@@ -940,6 +1016,21 @@ impl Driver {
                         self.schedule(now + Micros(200), Step::ExecFail(exec));
                     } else {
                         self.schedule(now + compute, Step::ComputeDone { task, attempt });
+                        if self.faults.chance(self.cfg.fault_rate * 0.25) {
+                            let forged = task | FORGED_TASK_BIT;
+                            self.inject(
+                                FaultKind::CorruptCompletion,
+                                now,
+                                format!("compute-done t{task} forged as t{forged}"),
+                            );
+                            self.schedule(
+                                now + Micros(250),
+                                Step::Byzantine {
+                                    task: forged,
+                                    compute: true,
+                                },
+                            );
+                        }
                     }
                 }
                 Effect::Allocate(n) => {
@@ -1030,6 +1121,37 @@ mod tests {
         let b = run_chaos(&cfg);
         assert_eq!(a.plan, b.plan);
         assert_eq!(a.fingerprint, b.fingerprint);
+    }
+
+    #[test]
+    fn byzantine_reports_are_rejected_and_accounted() {
+        // Forged completions must bounce off the id tables — exactly as
+        // many rejections as injections, no effects, oracle clean — and
+        // duplicated notifications must not double-grant work. Covers
+        // both the K = 1 core path and the K > 1 router path.
+        let mut forged_total = 0;
+        let mut dup_total = 0;
+        for (seed, shards, nodes) in [(3u64, 1usize, 6), (7, 1, 6), (9, 4, 8), (13, 4, 8)] {
+            let mut cfg = ChaosConfig::quick(seed);
+            cfg.shards = shards;
+            cfg.nodes = nodes;
+            let r = run_chaos(&cfg);
+            assert!(
+                r.clean(),
+                "seed {seed} shards {shards}:\n{}",
+                r.dump.as_deref().unwrap_or("stalled")
+            );
+            assert_eq!(r.completed + r.failed, r.events as u64);
+            assert_eq!(
+                r.stale_rejected,
+                r.tally.count(FaultKind::CorruptCompletion),
+                "seed {seed}: every forged report is rejected, nothing else is"
+            );
+            forged_total += r.tally.count(FaultKind::CorruptCompletion);
+            dup_total += r.tally.count(FaultKind::DuplicateNotify);
+        }
+        assert!(forged_total > 0, "no seed forged a completion");
+        assert!(dup_total > 0, "no seed duplicated a notification");
     }
 
     #[test]

@@ -89,31 +89,49 @@ use std::collections::HashMap;
 pub enum FileSizes {
     /// Every object has the same size (the simulator's workloads).
     Uniform(u64),
-    /// Per-object sizes (the live engine reads them off the store).
-    PerFile(HashMap<FileId, u64>),
+    /// Per-object sizes in a dense table indexed by `FileId.0` (the live
+    /// engine reads them off the store). File ids are arena indices, so
+    /// the lookup is one bounds-checked load instead of a hash probe on
+    /// the per-access hot path; `0` marks an unknown id.
+    PerFile(Vec<u64>),
 }
 
 impl FileSizes {
+    /// Build a per-file table from `(file, bytes)` pairs. Ids absent from
+    /// the input read back as 0 (unknown).
+    pub fn per_file(pairs: impl IntoIterator<Item = (FileId, u64)>) -> Self {
+        let mut table = Vec::new();
+        for (file, bytes) in pairs {
+            let i = file.0 as usize;
+            if table.len() <= i {
+                table.resize(i + 1, 0);
+            }
+            table[i] = bytes;
+        }
+        FileSizes::PerFile(table)
+    }
+
     /// Size of `file` in bytes. Unknown per-file entries resolve to 0
     /// (a zero-byte object always fits; the driver will surface the
     /// missing file as an I/O error long before cache accounting cares).
     pub fn size_of(&self, file: FileId) -> u64 {
         match self {
             FileSizes::Uniform(n) => *n,
-            FileSizes::PerFile(m) => m.get(&file).copied().unwrap_or(0),
+            FileSizes::PerFile(t) => t.get(file.0 as usize).copied().unwrap_or(0),
         }
     }
 
     /// Mean object size (the model controller's per-task transfer
-    /// estimate). Zero for an empty per-file map.
+    /// estimate), over known (non-zero) entries. Zero for an empty table.
     pub fn mean_bytes(&self) -> f64 {
         match self {
             FileSizes::Uniform(n) => *n as f64,
-            FileSizes::PerFile(m) => {
-                if m.is_empty() {
+            FileSizes::PerFile(t) => {
+                let known = t.iter().filter(|&&b| b != 0).count();
+                if known == 0 {
                     0.0
                 } else {
-                    m.values().map(|&b| b as f64).sum::<f64>() / m.len() as f64
+                    t.iter().map(|&b| b as f64).sum::<f64>() / known as f64
                 }
             }
         }
@@ -215,6 +233,35 @@ struct InFlight {
     interval: u32,
 }
 
+/// Reusable scratch buffers for the event path. Every coordinator event
+/// used to allocate its effect `Vec` (and every dispatch its
+/// remaining-files `Vec`) fresh; the pools recycle those buffers so a
+/// steady-state run allocates near zero per event. `alloc_events` counts
+/// the pool misses — it is deterministic (a pure function of the event
+/// stream and the drivers' recycling discipline), and feeds the
+/// `scale/allocs_per_event` bench counter.
+///
+/// Excluded from `Debug` on purpose: pooled *capacity* depends on how
+/// diligently a driver recycles, and state comparisons (the shard
+/// pass-through parity test formats whole cores) must not see it.
+#[derive(Default)]
+struct Scratch {
+    effects: Vec<Vec<Effect>>,
+    files: Vec<Vec<FileId>>,
+    alloc_events: u64,
+    events: u64,
+}
+
+impl std::fmt::Debug for Scratch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Scratch { .. }")
+    }
+}
+
+/// Cap on pooled buffers of each kind — a burst (mass executor failure)
+/// must not pin its high-water allocation forever.
+const SCRATCH_POOL_CAP: usize = 64;
+
 /// The shared coordinator: the full dispatch state machine of §3, pure
 /// decision logic over explicit state. Construct with
 /// [`CoordinatorCore::new`]; drive with the `on_*` event methods; enact
@@ -246,12 +293,18 @@ pub struct CoordinatorCore {
     peer_serving: HashMap<u32, u32>,
     /// Release decisions withheld because the executor was serving.
     release_deferrals: u64,
+    /// Fetch/compute/failure reports for tasks not in flight — rejected
+    /// byzantine duplicates and corrupted completions (see
+    /// `docs/CHAOS.md`). A healthy driver keeps this at zero.
+    stale_events: u64,
     /// Arrival-interval of queued tasks (only non-zero intervals are
     /// stored; consumed at dispatch).
     interval_of: HashMap<u64, u32>,
     /// Tasks in dispatch order — the decision trace `core_parity`
     /// compares across drivers.
     dispatch_log: Vec<TaskId>,
+    /// Recycled effect/file buffers + the allocation counter.
+    scratch: Scratch,
 }
 
 impl CoordinatorCore {
@@ -280,10 +333,76 @@ impl CoordinatorCore {
             inflight: HashMap::new(),
             peer_serving: HashMap::new(),
             release_deferrals: 0,
+            stale_events: 0,
             interval_of: HashMap::new(),
             dispatch_log: Vec::new(),
+            scratch: Scratch::default(),
             config,
         }
+    }
+
+    // ---- scratch reuse --------------------------------------------------
+
+    /// An effect buffer for the current event: pooled when a driver has
+    /// recycled one, freshly allocated (and counted) otherwise.
+    fn take_effects(&mut self) -> Vec<Effect> {
+        self.scratch.events += 1;
+        match self.scratch.effects.pop() {
+            Some(v) => v,
+            None => {
+                self.scratch.alloc_events += 1;
+                Vec::new()
+            }
+        }
+    }
+
+    /// Return an enacted effect buffer to the pool. Drivers call this
+    /// after draining the effects of an event; skipping it is always
+    /// correct, just slower (the next event allocates fresh).
+    pub fn recycle_effects(&mut self, mut effects: Vec<Effect>) {
+        if self.scratch.effects.len() < SCRATCH_POOL_CAP {
+            effects.clear();
+            self.scratch.effects.push(effects);
+        }
+    }
+
+    fn take_files(&mut self) -> Vec<FileId> {
+        match self.scratch.files.pop() {
+            Some(v) => v,
+            None => {
+                self.scratch.alloc_events += 1;
+                Vec::new()
+            }
+        }
+    }
+
+    fn recycle_files(&mut self, mut files: Vec<FileId>) {
+        if self.scratch.files.len() < SCRATCH_POOL_CAP {
+            files.clear();
+            self.scratch.files.push(files);
+        }
+    }
+
+    /// Fresh scratch-buffer allocations so far (pool misses on the event
+    /// path). Deterministic for a given event stream + recycling
+    /// discipline; the `scale/allocs_per_event` numerator.
+    pub fn alloc_events(&self) -> u64 {
+        self.scratch.alloc_events
+    }
+
+    /// Events that took an effect buffer so far — the
+    /// `scale/allocs_per_event` denominator.
+    pub fn effect_events(&self) -> u64 {
+        self.scratch.events
+    }
+
+    /// Bytes behind the coordinator's dense dispatch tables (location
+    /// index, pending index, per-executor cache slabs) — capacity-based,
+    /// so it tracks the high-water footprint `scale/peak_table_bytes`
+    /// reports.
+    pub fn table_bytes(&self) -> u64 {
+        let caches: u64 = self.caches.values().map(ObjectCache::table_bytes).sum();
+        self.index.table_bytes() + self.pending.table_bytes() + caches
     }
 
     fn caching(&self) -> bool {
@@ -304,14 +423,20 @@ impl CoordinatorCore {
     /// executor. Mirrors the paper's notify step: holders preferred,
     /// policy decides the fallback.
     fn notify_head(&mut self) -> Option<ExecutorId> {
-        if self.reg.free_count() == 0 {
+        if self.reg.free_count() == 0 || self.queue.is_empty() {
             return None;
         }
-        let files = self.queue.front()?.files.clone();
-        match self
+        // Scratch-copy the head's file list so the selector can mutate
+        // the pending index while reading it (no per-call allocation).
+        let mut files = self.take_files();
+        if let Some(t) = self.queue.front() {
+            files.extend_from_slice(&t.files);
+        }
+        let outcome = self
             .sched
-            .select_notify(&files, &self.reg, &mut self.pending, &self.index)
-        {
+            .select_notify(&files, &self.reg, &mut self.pending, &self.index);
+        self.recycle_files(files);
+        match outcome {
             NotifyOutcome::Preferred(e) | NotifyOutcome::Fallback(e) => {
                 let reserved = self.reserve(e);
                 debug_assert!(reserved, "select_notify returned a busy executor");
@@ -333,11 +458,10 @@ impl CoordinatorCore {
             self.caches.insert(id, ObjectCache::new(self.config.cache));
             self.index.register_executor(id);
         }
-        let effects = if self.reserve(id) {
-            vec![Effect::Notify(id)]
-        } else {
-            Vec::new()
-        };
+        let mut effects = self.take_effects();
+        if self.reserve(id) {
+            effects.push(Effect::Notify(id));
+        }
         (id, effects)
     }
 
@@ -402,10 +526,11 @@ impl CoordinatorCore {
         if self.caching() {
             self.pending.on_push(&self.queue, qref, &self.index);
         }
-        match self.notify_head() {
-            Some(e) => vec![Effect::Notify(e)],
-            None => Vec::new(),
+        let mut effects = self.take_effects();
+        if let Some(e) = self.notify_head() {
+            effects.push(Effect::Notify(e));
         }
+        effects
     }
 
     /// An executor asks for work (a delivered notification round-trip, or
@@ -441,7 +566,7 @@ impl CoordinatorCore {
             }
             return Vec::new();
         }
-        let mut effects = Vec::with_capacity(tasks.len());
+        let mut effects = self.take_effects();
         for (i, task) in tasks.into_iter().enumerate() {
             if i == 0 && reserved {
                 self.reg.pending_to_busy(exec, now);
@@ -457,7 +582,8 @@ impl CoordinatorCore {
     /// Start a dispatched task's data phase: resolve its first file.
     fn begin_task(&mut self, task: Task, exec: ExecutorId) -> Effect {
         let interval = self.interval_of.remove(&task.id.0).unwrap_or(0);
-        let mut remaining = task.files.clone();
+        let mut remaining = self.take_files();
+        remaining.extend_from_slice(&task.files);
         remaining.reverse(); // pop() yields paper order
         let first = remaining.pop().expect("task has ≥1 file");
         let mut inf = InFlight {
@@ -534,10 +660,13 @@ impl CoordinatorCore {
         now: Micros,
         observed: Option<(AccessKind, u64)>,
     ) -> Vec<Effect> {
-        let mut inf = self
-            .inflight
-            .remove(&task_id.0)
-            .expect("fetch done for unknown task");
+        let Some(mut inf) = self.inflight.remove(&task_id.0) else {
+            // Not in flight: a duplicated or corrupted report (byzantine
+            // driver/worker). Rejecting it here keeps the slot ledger and
+            // replica accounting exact — see `stale_events`.
+            self.stale_events += 1;
+            return Vec::new();
+        };
         if let Some(peer) = inf.current_peer.take() {
             self.peer_release(peer);
         }
@@ -559,7 +688,9 @@ impl CoordinatorCore {
             }
         };
         self.inflight.insert(task_id.0, inf);
-        vec![effect]
+        let mut effects = self.take_effects();
+        effects.push(effect);
+        effects
     }
 
     /// The task's compute finished. Frees the slot, records the
@@ -572,19 +703,20 @@ impl CoordinatorCore {
         now: Micros,
         completed_at: Micros,
     ) -> Vec<Effect> {
-        let inf = self
-            .inflight
-            .remove(&task_id.0)
-            .expect("compute done for unknown task");
+        let Some(mut inf) = self.inflight.remove(&task_id.0) else {
+            self.stale_events += 1;
+            return Vec::new();
+        };
         debug_assert_eq!(inf.task.id, task_id);
+        self.recycle_files(std::mem::take(&mut inf.remaining));
         self.reg.finish_task(inf.exec, now);
         self.rec
             .record_completion(completed_at, inf.task.arrival, inf.interval);
+        let mut effects = self.take_effects();
         if !self.queue.is_empty() && self.reserve(inf.exec) {
-            vec![Effect::Notify(inf.exec)]
-        } else {
-            Vec::new()
+            effects.push(Effect::Notify(inf.exec));
         }
+        effects
     }
 
     /// A dispatched task failed on its executor (live-engine worker
@@ -595,19 +727,20 @@ impl CoordinatorCore {
     /// queued — otherwise a permanently-failed task would idle its
     /// executor until the backlog drained.
     pub fn on_task_failed(&mut self, task_id: TaskId, now: Micros) -> Vec<Effect> {
-        let mut inf = self
-            .inflight
-            .remove(&task_id.0)
-            .expect("failure for unknown task");
+        let Some(mut inf) = self.inflight.remove(&task_id.0) else {
+            self.stale_events += 1;
+            return Vec::new();
+        };
         if let Some(peer) = inf.current_peer.take() {
             self.peer_release(peer);
         }
+        self.recycle_files(std::mem::take(&mut inf.remaining));
         self.reg.finish_task(inf.exec, now);
+        let mut effects = self.take_effects();
         if !self.queue.is_empty() && self.reserve(inf.exec) {
-            vec![Effect::Notify(inf.exec)]
-        } else {
-            Vec::new()
+            effects.push(Effect::Notify(inf.exec));
         }
+        effects
     }
 
     /// An executor crashed (chaos fault or live worker death), possibly
@@ -645,6 +778,7 @@ impl CoordinatorCore {
             if let Some(peer) = inf.current_peer.take() {
                 self.peer_release(peer);
             }
+            self.recycle_files(std::mem::take(&mut inf.remaining));
             tasks.push((inf.task, inf.interval));
         }
         // Transfers *sourced from* the dead executor can no longer be
@@ -682,7 +816,7 @@ impl CoordinatorCore {
             }
         }
         // One notification per re-queued task, mirroring on_arrival.
-        let mut effects = Vec::new();
+        let mut effects = self.take_effects();
         for _ in 0..requeued.len() {
             match self.notify_head() {
                 Some(e) => effects.push(Effect::Notify(e)),
@@ -712,7 +846,7 @@ impl CoordinatorCore {
             self.prov.set_model_target(target);
         }
         let action = self.prov.on_tick(now, self.queue.len(), &self.reg);
-        let mut effects = Vec::new();
+        let mut effects = self.take_effects();
         if action.allocate > 0 {
             effects.push(Effect::Allocate(action.allocate));
         }
@@ -742,14 +876,18 @@ impl CoordinatorCore {
         if self.queue.is_empty() || self.reg.free_count() == 0 {
             return Vec::new();
         }
+        let mut effects = self.take_effects();
         if let Some(e) = self.notify_head() {
-            return vec![Effect::Notify(e)];
+            effects.push(Effect::Notify(e));
+            return effects;
         }
         let first_free = self.reg.free_iter().next();
-        match first_free {
-            Some(e) if self.reserve(e) => vec![Effect::Notify(e)],
-            _ => Vec::new(),
+        if let Some(e) = first_free {
+            if self.reserve(e) {
+                effects.push(Effect::Notify(e));
+            }
         }
+        effects
     }
 
     // ---- read-only state queries ---------------------------------------
@@ -789,6 +927,12 @@ impl CoordinatorCore {
     /// serving peer transfers.
     pub fn release_deferrals(&self) -> u64 {
         self.release_deferrals
+    }
+
+    /// Reports rejected because they named a task not in flight
+    /// (byzantine duplicates / corrupted completions).
+    pub fn stale_events(&self) -> u64 {
+        self.stale_events
     }
 
     /// Active peer transfers currently sourced from `exec` — the

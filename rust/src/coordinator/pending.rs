@@ -1,5 +1,6 @@
 //! Inverted pending-task index with **epoch-lazy candidate maintenance**
-//! (§Perf iterations 3–4).
+//! (§Perf iterations 3–4) over **arena-indexed, struct-of-arrays storage**
+//! (§Perf iteration 5).
 //!
 //! The O(min(|Q|, W)) window scan of §3.2 is the paper's *upper bound*
 //! per scheduling decision, and at W = 100×nodes (3200–6400 entries) it
@@ -19,6 +20,28 @@
 //!   100 %-hit task, so its cost tracks the executor's **actual cache
 //!   overlap with the window**, not the window size.
 //!
+//! ## Arena + SoA layout (§Perf iteration 5)
+//!
+//! Both sides of the index are dense arenas, not hash maps:
+//!
+//! * `by_file` is a `Vec<SeqSet>` indexed by `FileId.0` — file ids are
+//!   handed out densely by the workloads, so the slot for a file is a
+//!   direct offset, no hashing on the push/remove path.
+//! * `execs` is a `Vec<Option<ExecState>>` indexed by `ExecutorId.0`.
+//! * [`SeqSet`] itself is struct-of-arrays: parallel sorted `Vec<u64>` /
+//!   `Vec<QueueRef>` columns. Candidate iteration — the hottest loop in
+//!   dispatch — is a linear scan over a dense `u64` column instead of a
+//!   B-tree walk, and the dominant insert (queue seqs are monotone) is
+//!   an append. Iteration order (ascending seq) is identical to the
+//!   `BTreeMap` it replaced, so dispatch is bit-for-bit unchanged.
+//!
+//! Candidate sets freed by executor deregistration park in a small pool
+//! and are handed back — cleared, capacity intact — to the next
+//! executor that registers; `PendingStats::slab_reuse` counts the
+//! recycles so churn tests can assert the arena does not grow without
+//! bound ([`PendingIndex::table_bytes`] is the capacity-based footprint
+//! the `perf_hotpath` scale group snapshots).
+//!
 //! ## Epoch-lazy maintenance (§Perf iteration 4)
 //!
 //! Keeping the candidate sets exact at every cache event is where the
@@ -37,12 +60,12 @@
 //!   reconciled at ([`PendingIndex::epoch_of`]); a set whose epoch lags
 //!   the global epoch **may be stale** and must not be consulted without
 //!   a [`PendingIndex::refresh`].
-//! * A cache event touching a file with at most [`FANOUT_CAP`] pending
-//!   readers is applied immediately (bounded work — the *capped per-file
-//!   fan-out*). A hotter file is recorded as an O(1) **dirty record** on
-//!   the executor instead; at most [`DIRTY_CAP`] distinct dirty files are
-//!   kept, beyond which the patch log is abandoned and the set marked for
-//!   a full **overflow rebuild**.
+//! * A cache event touching a file with at most the **fan-out cap**
+//!   pending readers is applied immediately (bounded work — the *capped
+//!   per-file fan-out*). A hotter file is recorded as an O(1) **dirty
+//!   record** on the executor instead; at most the **dirty budget** of
+//!   distinct dirty files are kept, beyond which the patch log is
+//!   abandoned and the set marked for a full **overflow rebuild**.
 //! * [`PendingIndex::refresh`] — called once per consult (the scheduler's
 //!   pickup, [`crate::coordinator::scheduler::Scheduler::pick_tasks`]) —
 //!   settles the debt: dirty files are patched against the *current*
@@ -50,6 +73,23 @@
 //!   to a no-op membership check), and an overflowed set is rebuilt from
 //!   `E_map(executor) × by_file` — the *lazy overflow scan*, proportional
 //!   to the executor's overlap, not the queue.
+//!
+//! ## Adaptive caps (§Perf iteration 5)
+//!
+//! The fan-out cap and dirty budget start at [`FANOUT_CAP`] /
+//! [`DIRTY_CAP`] but adapt to the observed **consult rate**: every
+//! adaptation window of consults, the index-event count over the same
+//! span is compared against it. Event-heavy regimes (caches churning far
+//! faster than the scheduler consults — the Fig 11 shape) shift toward
+//! deferral: the fan-out cap halves, the dirty budget doubles, so more
+//! work coalesces before a consult pays it. Consult-heavy regimes shift
+//! the other way. Caps move by powers of two inside
+//! [`FANOUT_CAP_MIN`]..=[`FANOUT_CAP_MAX`] and
+//! [`DIRTY_CAP_MIN`]..=[`DIRTY_CAP_MAX`]. Because `refresh()` always
+//! reconciles to the exact live set before a consult, cap choice affects
+//! *when* maintenance happens, never *what* the candidate set contains —
+//! dispatch stays bit-identical under any cap schedule (pinned by the
+//! `adapted_caps_keep_dispatch_bit_identical` property below).
 //!
 //! ### Invariants (what the parity suite pins down)
 //!
@@ -68,7 +108,7 @@
 //! 3. `by_file` is always exact; only candidate sets are lazy.
 //!
 //! This is why eviction is O(1) on the hot path: the event does a length
-//! probe, bumps the epoch, and either applies a ≤ [`FANOUT_CAP`] fan-out
+//! probe, bumps the epoch, and either applies a ≤ fan-out-cap fan-out
 //! or pushes one dirty record. The deferred work is paid once per
 //! consult, after coalescing — [`PendingStats`] counts it so the
 //! `perf_hotpath` bench and the CI gate can assert lazy ≤ eager.
@@ -101,20 +141,142 @@
 use crate::coordinator::queue::{QueueRef, WaitQueue};
 use crate::ids::{ExecutorId, FileId};
 use crate::index::{ExecSet, LocationIndex};
-use std::collections::{BTreeMap, HashMap};
-
-/// Per-key pending sets, ordered by queue sequence number so iteration
-/// yields tasks in queue order (seq order == queue order).
-pub type SeqSet = BTreeMap<u64, QueueRef>;
 
 /// Cache events touching a file with at most this many pending readers
 /// are applied to the executor's candidate set immediately (the capped
 /// per-file fan-out); hotter files defer to a dirty record instead.
+/// This is the *initial* value — the cap adapts within
+/// [`FANOUT_CAP_MIN`]..=[`FANOUT_CAP_MAX`] (see the module docs).
 pub const FANOUT_CAP: usize = 16;
 
 /// Distinct deferred files per executor before the incremental patch log
-/// is abandoned for a full overflow rebuild at the next consult.
+/// is abandoned for a full overflow rebuild at the next consult. Initial
+/// value; adapts within [`DIRTY_CAP_MIN`]..=[`DIRTY_CAP_MAX`].
 pub const DIRTY_CAP: usize = 32;
+
+/// Adaptive floor for the fan-out cap.
+pub const FANOUT_CAP_MIN: usize = 8;
+/// Adaptive ceiling for the fan-out cap.
+pub const FANOUT_CAP_MAX: usize = 64;
+/// Adaptive floor for the dirty budget.
+pub const DIRTY_CAP_MIN: usize = 16;
+/// Adaptive ceiling for the dirty budget.
+pub const DIRTY_CAP_MAX: usize = 128;
+
+/// Consults per adaptation decision. Long enough that unit tests pinning
+/// exact maintenance counters never see an adaptation; tests exercising
+/// the adaptive path shrink it via [`PendingIndex::set_adapt_window`].
+const ADAPT_WINDOW: u64 = 1024;
+
+/// Candidate sets parked by deregistration, kept for reuse.
+const SET_POOL_CAP: usize = 64;
+
+/// Sorted struct-of-arrays set of `(seq, QueueRef)` pairs — the storage
+/// behind both `by_file` slots and per-executor candidate sets.
+///
+/// Two parallel columns sorted by seq. The dominant insert (queue seqs
+/// are handed out monotonically) is an O(1) append; out-of-order inserts
+/// are an O(n) memmove, removals a binary search plus memmove. Iteration
+/// is a pair of linear column scans in ascending-seq order — identical
+/// to the `BTreeMap<u64, QueueRef>` this replaced, so every downstream
+/// tie-break is unchanged.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct SeqSet {
+    seqs: Vec<u64>,
+    refs: Vec<QueueRef>,
+}
+
+impl SeqSet {
+    /// Number of entries.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// True when there are no entries.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.seqs.is_empty()
+    }
+
+    /// Insert (or overwrite) an entry; returns true if `seq` was new.
+    pub fn insert(&mut self, seq: u64, qref: QueueRef) -> bool {
+        match self.seqs.last() {
+            Some(&last) if last < seq => {
+                self.seqs.push(seq);
+                self.refs.push(qref);
+                true
+            }
+            Some(&last) if last == seq => {
+                *self.refs.last_mut().expect("columns in sync") = qref;
+                false
+            }
+            _ => match self.seqs.binary_search(&seq) {
+                Ok(i) => {
+                    self.refs[i] = qref;
+                    false
+                }
+                Err(i) => {
+                    self.seqs.insert(i, seq);
+                    self.refs.insert(i, qref);
+                    true
+                }
+            },
+        }
+    }
+
+    /// Remove an entry; returns true if it was present.
+    pub fn remove(&mut self, seq: u64) -> bool {
+        match self.seqs.binary_search(&seq) {
+            Ok(i) => {
+                self.seqs.remove(i);
+                self.refs.remove(i);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Membership test — O(log n).
+    #[inline]
+    pub fn contains(&self, seq: u64) -> bool {
+        self.seqs.binary_search(&seq).is_ok()
+    }
+
+    /// Entries in ascending seq (= queue) order.
+    #[inline]
+    pub fn iter(&self) -> impl Iterator<Item = (u64, QueueRef)> + '_ {
+        self.seqs.iter().copied().zip(self.refs.iter().copied())
+    }
+
+    /// Smallest entry, if any.
+    pub fn first(&self) -> Option<(u64, QueueRef)> {
+        Some((*self.seqs.first()?, *self.refs.first()?))
+    }
+
+    /// Drop every entry, keeping both columns' capacity (slab reuse).
+    pub fn clear(&mut self) {
+        self.seqs.clear();
+        self.refs.clear();
+    }
+
+    /// Heap bytes behind both columns (capacity-based; feeds
+    /// `scale/peak_table_bytes`).
+    pub fn heap_bytes(&self) -> usize {
+        self.seqs.capacity() * std::mem::size_of::<u64>()
+            + self.refs.capacity() * std::mem::size_of::<QueueRef>()
+    }
+}
+
+impl FromIterator<(u64, QueueRef)> for SeqSet {
+    fn from_iter<T: IntoIterator<Item = (u64, QueueRef)>>(iter: T) -> Self {
+        let mut s = SeqSet::default();
+        for (seq, qref) in iter {
+            s.insert(seq, qref);
+        }
+        s
+    }
+}
 
 /// How the per-executor candidate sets are maintained.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -156,6 +318,14 @@ pub struct PendingStats {
     /// encounter, and the `sched_parity` leave-queue-churn regression
     /// bounds the count.
     pub dead_hints_purged: u64,
+    /// Candidate sets recycled from the deregistration pool instead of
+    /// freshly allocated (the `pending/slab_reuse` gate counter).
+    pub slab_reuse: u64,
+    /// Times the adaptive caps actually changed value.
+    pub cap_adaptations: u64,
+    /// Candidate-set consults ([`PendingIndex::refresh`] calls) — the
+    /// denominator of the adaptation ratio.
+    pub consults: u64,
 }
 
 /// One executor's lazily maintained candidate set.
@@ -167,7 +337,7 @@ struct ExecState {
     /// Global epoch this set was last reconciled at (diagnostic: a set
     /// is *possibly stale* while this lags [`PendingIndex::epoch`]).
     epoch: u64,
-    /// Distinct files with a deferred membership change (≤ [`DIRTY_CAP`]).
+    /// Distinct files with a deferred membership change (≤ dirty budget).
     dirty: Vec<FileId>,
     /// Patch log abandoned; rebuild from scratch at the next refresh.
     overflow: bool,
@@ -189,16 +359,30 @@ struct NotifyMemo {
 /// The inverted pending index. See the module docs for the invariants.
 #[derive(Debug)]
 pub struct PendingIndex {
-    /// Pending tasks by file read (always exact).
-    by_file: HashMap<FileId, SeqSet>,
-    /// Per-executor candidate state (lazy or eager per `mode`).
-    execs: HashMap<ExecutorId, ExecState>,
+    /// Pending tasks by file read, indexed by `FileId.0` (always exact).
+    by_file: Vec<SeqSet>,
+    /// Files with a non-empty `by_file` slot (O(1) distinct-count).
+    nonempty_by_file: usize,
+    /// Per-executor candidate state, indexed by `ExecutorId.0`.
+    execs: Vec<Option<ExecState>>,
+    /// Cleared candidate sets parked by deregistration, ready for reuse.
+    set_pool: Vec<SeqSet>,
     /// Maintenance mode (lazy = engine default).
     mode: Maintenance,
     /// Global location-index mutation counter — the validity epoch for
     /// candidate sets and the notify memo.
     epoch: u64,
     memo: NotifyMemo,
+    /// Current adaptive fan-out cap (starts at [`FANOUT_CAP`]).
+    fanout_cap: usize,
+    /// Current adaptive dirty budget (starts at [`DIRTY_CAP`]).
+    dirty_cap: usize,
+    /// Consults per adaptation decision.
+    adapt_window: u64,
+    /// Consults accumulated in the current window.
+    window_consults: u64,
+    /// `stats.index_events` at the start of the current window.
+    window_events_mark: u64,
     /// Deterministic work counters (see [`PendingStats`]).
     pub stats: PendingStats,
 }
@@ -206,11 +390,18 @@ pub struct PendingIndex {
 impl Default for PendingIndex {
     fn default() -> Self {
         PendingIndex {
-            by_file: HashMap::new(),
-            execs: HashMap::new(),
+            by_file: Vec::new(),
+            nonempty_by_file: 0,
+            execs: Vec::new(),
+            set_pool: Vec::new(),
             mode: Maintenance::Lazy,
             epoch: 0,
             memo: NotifyMemo::default(),
+            fanout_cap: FANOUT_CAP,
+            dirty_cap: DIRTY_CAP,
+            adapt_window: ADAPT_WINDOW,
+            window_consults: 0,
+            window_events_mark: 0,
             stats: PendingStats::default(),
         }
     }
@@ -244,7 +435,85 @@ impl PendingIndex {
     /// Epoch `executor`'s candidate set was last reconciled at, if it has
     /// one. Lagging [`PendingIndex::epoch`] means *possibly stale*.
     pub fn epoch_of(&self, executor: ExecutorId) -> Option<u64> {
-        self.execs.get(&executor).map(|st| st.epoch)
+        self.execs
+            .get(executor.0 as usize)?
+            .as_ref()
+            .map(|st| st.epoch)
+    }
+
+    /// Current fan-out cap (adaptive; see the module docs).
+    pub fn fanout_cap(&self) -> usize {
+        self.fanout_cap
+    }
+
+    /// Current dirty budget (adaptive; see the module docs).
+    pub fn dirty_cap(&self) -> usize {
+        self.dirty_cap
+    }
+
+    /// Shrink the adaptation window so tests can drive the adaptive path
+    /// without thousands of consults.
+    #[doc(hidden)]
+    pub fn set_adapt_window(&mut self, consults: u64) {
+        self.adapt_window = consults.max(1);
+    }
+
+    /// Heap bytes behind the index's tables — arena capacity, per-set
+    /// columns, dirty logs, and the parked pool (capacity-based
+    /// estimate; feeds `scale/peak_table_bytes`).
+    pub fn table_bytes(&self) -> u64 {
+        let mut total = self.by_file.capacity() * std::mem::size_of::<SeqSet>()
+            + self.execs.capacity() * std::mem::size_of::<Option<ExecState>>()
+            + self.set_pool.capacity() * std::mem::size_of::<SeqSet>();
+        for set in &self.by_file {
+            total += set.heap_bytes();
+        }
+        for st in self.execs.iter().flatten() {
+            total += st.set.heap_bytes() + st.dirty.capacity() * std::mem::size_of::<FileId>();
+        }
+        for set in &self.set_pool {
+            total += set.heap_bytes();
+        }
+        total as u64
+    }
+
+    /// Grow-on-demand slot accessor for `by_file`.
+    fn by_file_slot(&mut self, file: FileId) -> &mut SeqSet {
+        let i = file.0 as usize;
+        if self.by_file.len() <= i {
+            self.by_file.resize_with(i + 1, SeqSet::default);
+        }
+        &mut self.by_file[i]
+    }
+
+    /// Dense-slot accessor for an executor's candidate state,
+    /// registering it (with a pooled or fresh set) on first touch.
+    ///
+    /// Associated fn — not `&mut self` — so callers can hold a disjoint
+    /// borrow of `by_file` alongside the returned state.
+    fn exec_slot<'a>(
+        execs: &'a mut Vec<Option<ExecState>>,
+        pool: &mut Vec<SeqSet>,
+        stats: &mut PendingStats,
+        executor: ExecutorId,
+    ) -> &'a mut ExecState {
+        let i = executor.0 as usize;
+        if execs.len() <= i {
+            execs.resize_with(i + 1, || None);
+        }
+        execs[i].get_or_insert_with(|| {
+            let set = match pool.pop() {
+                Some(s) => {
+                    stats.slab_reuse += 1;
+                    s
+                }
+                None => SeqSet::default(),
+            };
+            ExecState {
+                set,
+                ..ExecState::default()
+            }
+        })
     }
 
     /// Record a task just pushed onto the wait queue. Must be called
@@ -256,10 +525,20 @@ impl PendingIndex {
         let seq = queue.seq_of(qref);
         let task = queue.get(qref);
         for &f in &task.files {
-            self.by_file.entry(f).or_default().insert(seq, qref);
+            let slot = self.by_file_slot(f);
+            let was_empty = slot.is_empty();
+            if slot.insert(seq, qref) && was_empty {
+                self.nonempty_by_file += 1;
+            }
             if let Some(holders) = index.holders(f) {
                 for e in holders {
-                    self.execs.entry(e).or_default().set.insert(seq, qref);
+                    let st = Self::exec_slot(
+                        &mut self.execs,
+                        &mut self.set_pool,
+                        &mut self.stats,
+                        e,
+                    );
+                    st.set.insert(seq, qref);
                 }
             }
         }
@@ -275,16 +554,15 @@ impl PendingIndex {
     /// is caught by read-time validation (module docs, invariant 2).
     pub fn on_remove(&mut self, files: &[FileId], seq: u64, index: &LocationIndex) {
         for &f in files {
-            if let Some(set) = self.by_file.get_mut(&f) {
-                set.remove(&seq);
-                if set.is_empty() {
-                    self.by_file.remove(&f);
+            if let Some(set) = self.by_file.get_mut(f.0 as usize) {
+                if set.remove(seq) && set.is_empty() {
+                    self.nonempty_by_file -= 1;
                 }
             }
             if let Some(holders) = index.holders(f) {
                 for e in holders {
-                    if let Some(st) = self.execs.get_mut(&e) {
-                        st.set.remove(&seq);
+                    if let Some(st) = self.execs.get_mut(e.0 as usize).and_then(Option::as_mut) {
+                        st.set.remove(seq);
                     }
                 }
             }
@@ -294,35 +572,40 @@ impl PendingIndex {
     /// Record that the location index just **added** (file, executor) —
     /// a cache insert. Call after [`LocationIndex::add`].
     ///
-    /// Lazy mode: O([`FANOUT_CAP`]) worst case — a small fan-out applies
+    /// Lazy mode: O(fan-out cap) worst case — a small fan-out applies
     /// immediately, a hot file becomes one dirty record.
     pub fn on_index_add(&mut self, file: FileId, executor: ExecutorId) {
         self.epoch += 1;
         self.stats.index_events += 1;
-        let Some(pending) = self.by_file.get(&file) else {
-            return; // no pending readers: nothing can change
+        let fanout_cap = self.fanout_cap;
+        let dirty_cap = self.dirty_cap;
+        let pending = match self.by_file.get(file.0 as usize) {
+            Some(s) if !s.is_empty() => s,
+            _ => return, // no pending readers: nothing can change
         };
         match self.mode {
             Maintenance::Eager => {
-                let st = self.execs.entry(executor).or_default();
-                for (&seq, &qref) in pending {
+                let st =
+                    Self::exec_slot(&mut self.execs, &mut self.set_pool, &mut self.stats, executor);
+                for (seq, qref) in pending.iter() {
                     st.set.insert(seq, qref);
                     self.stats.maintenance_ops += 1;
                 }
             }
             Maintenance::Lazy => {
-                let st = self.execs.entry(executor).or_default();
+                let st =
+                    Self::exec_slot(&mut self.execs, &mut self.set_pool, &mut self.stats, executor);
                 if st.overflow {
                     return; // rebuild at next consult covers this event
                 }
-                if pending.len() <= FANOUT_CAP {
-                    for (&seq, &qref) in pending {
+                if pending.len() <= fanout_cap {
+                    for (seq, qref) in pending.iter() {
                         st.set.insert(seq, qref);
                         self.stats.maintenance_ops += 1;
                     }
                 } else {
                     self.stats.dirty_records += 1;
-                    Self::defer(st, file);
+                    Self::defer(st, file, dirty_cap);
                 }
             }
         }
@@ -333,7 +616,7 @@ impl PendingIndex {
     /// task reading `file` stays a candidate only if another of its
     /// files is still cached there.
     ///
-    /// Lazy mode: O([`FANOUT_CAP`]) worst case, like
+    /// Lazy mode: O(fan-out cap) worst case, like
     /// [`PendingIndex::on_index_add`] — this is the call that used to pay
     /// O(pending readers) per eviction of a popular file.
     pub fn on_index_remove(
@@ -345,19 +628,22 @@ impl PendingIndex {
     ) {
         self.epoch += 1;
         self.stats.index_events += 1;
-        let Some(pending) = self.by_file.get(&file) else {
-            return;
+        let fanout_cap = self.fanout_cap;
+        let dirty_cap = self.dirty_cap;
+        let pending = match self.by_file.get(file.0 as usize) {
+            Some(s) if !s.is_empty() => s,
+            _ => return,
         };
-        let Some(st) = self.execs.get_mut(&executor) else {
+        let Some(st) = self.execs.get_mut(executor.0 as usize).and_then(Option::as_mut) else {
             return; // never had candidates: nothing to retract
         };
         match self.mode {
             Maintenance::Eager => {
-                for (&seq, &qref) in pending {
+                for (seq, qref) in pending.iter() {
                     self.stats.maintenance_ops += 1;
                     let task = queue.get(qref);
                     if !task.files.iter().any(|&f2| index.holds(f2, executor)) {
-                        st.set.remove(&seq);
+                        st.set.remove(seq);
                     }
                 }
             }
@@ -365,30 +651,30 @@ impl PendingIndex {
                 if st.overflow {
                     return;
                 }
-                if pending.len() <= FANOUT_CAP {
-                    for (&seq, &qref) in pending {
+                if pending.len() <= fanout_cap {
+                    for (seq, qref) in pending.iter() {
                         self.stats.maintenance_ops += 1;
                         let task = queue.get(qref);
                         if !task.files.iter().any(|&f2| index.holds(f2, executor)) {
-                            st.set.remove(&seq);
+                            st.set.remove(seq);
                         }
                     }
                 } else {
                     self.stats.dirty_records += 1;
-                    Self::defer(st, file);
+                    Self::defer(st, file, dirty_cap);
                 }
             }
         }
     }
 
     /// Enqueue a dirty record, overflowing into a rebuild when the patch
-    /// log is full. The `contains` probe is O([`DIRTY_CAP`]) — repeated
+    /// log is full. The `contains` probe is O(dirty budget) — repeated
     /// churn on the same hot file coalesces into one record.
-    fn defer(st: &mut ExecState, file: FileId) {
+    fn defer(st: &mut ExecState, file: FileId, dirty_cap: usize) {
         if st.dirty.contains(&file) {
             return;
         }
-        if st.dirty.len() >= DIRTY_CAP {
+        if st.dirty.len() >= dirty_cap {
             st.overflow = true;
             st.dirty.clear();
         } else {
@@ -406,7 +692,8 @@ impl PendingIndex {
     /// set from `E_map(executor) × by_file` instead — proportional to the
     /// executor's overlap with the pending set, never to |Q|.
     pub fn refresh(&mut self, executor: ExecutorId, queue: &WaitQueue, index: &LocationIndex) {
-        let Some(st) = self.execs.get_mut(&executor) else {
+        self.note_consult();
+        let Some(st) = self.execs.get_mut(executor.0 as usize).and_then(Option::as_mut) else {
             return;
         };
         if st.overflow {
@@ -416,8 +703,8 @@ impl PendingIndex {
             st.set.clear();
             if let Some(cached) = index.cached_at(executor) {
                 for &f in cached {
-                    if let Some(pending) = self.by_file.get(&f) {
-                        for (&seq, &qref) in pending {
+                    if let Some(pending) = self.by_file.get(f.0 as usize) {
+                        for (seq, qref) in pending.iter() {
                             st.set.insert(seq, qref);
                             self.stats.maintenance_ops += 1;
                         }
@@ -428,20 +715,21 @@ impl PendingIndex {
             let mut dirty = std::mem::take(&mut st.dirty);
             for &f in &dirty {
                 self.stats.patched_files += 1;
-                let Some(pending) = self.by_file.get(&f) else {
+                let Some(pending) = self.by_file.get(f.0 as usize).filter(|s| !s.is_empty())
+                else {
                     continue; // last reader dispatched meanwhile
                 };
                 if index.holds(f, executor) {
-                    for (&seq, &qref) in pending {
+                    for (seq, qref) in pending.iter() {
                         st.set.insert(seq, qref);
                         self.stats.maintenance_ops += 1;
                     }
                 } else {
-                    for (&seq, &qref) in pending {
+                    for (seq, qref) in pending.iter() {
                         self.stats.maintenance_ops += 1;
                         let task = queue.get(qref);
                         if !task.files.iter().any(|&f2| index.holds(f2, executor)) {
-                            st.set.remove(&seq);
+                            st.set.remove(seq);
                         }
                     }
                 }
@@ -452,13 +740,40 @@ impl PendingIndex {
         st.epoch = self.epoch;
     }
 
+    /// Count a consult and, once per adaptation window, retune the caps
+    /// against the observed event/consult ratio (see the module docs).
+    fn note_consult(&mut self) {
+        self.stats.consults += 1;
+        self.window_consults += 1;
+        if self.window_consults < self.adapt_window {
+            return;
+        }
+        let consults = self.window_consults;
+        let events = self.stats.index_events - self.window_events_mark;
+        let old = (self.fanout_cap, self.dirty_cap);
+        if events >= consults.saturating_mul(4) {
+            // Event-heavy: defer harder so refreshes coalesce more churn.
+            self.fanout_cap = (self.fanout_cap / 2).max(FANOUT_CAP_MIN);
+            self.dirty_cap = (self.dirty_cap * 2).min(DIRTY_CAP_MAX);
+        } else if events * 2 <= consults {
+            // Consult-heavy: apply eagerly, keep the patch log short.
+            self.fanout_cap = (self.fanout_cap * 2).min(FANOUT_CAP_MAX);
+            self.dirty_cap = (self.dirty_cap / 2).max(DIRTY_CAP_MIN);
+        }
+        if (self.fanout_cap, self.dirty_cap) != old {
+            self.stats.cap_adaptations += 1;
+        }
+        self.window_consults = 0;
+        self.window_events_mark = self.stats.index_events;
+    }
+
     /// Drop dead hints the consumer found while iterating `executor`'s
     /// candidate set (entries failing the
     /// [`WaitQueue::live_seq`] validation — module-docs invariant 2).
     pub fn purge_dead(&mut self, executor: ExecutorId, seqs: &[u64]) {
-        if let Some(st) = self.execs.get_mut(&executor) {
-            for seq in seqs {
-                if st.set.remove(seq).is_some() {
+        if let Some(st) = self.execs.get_mut(executor.0 as usize).and_then(Option::as_mut) {
+            for &seq in seqs {
+                if st.set.remove(seq) {
                     self.stats.dead_hints_purged += 1;
                 }
             }
@@ -470,7 +785,10 @@ impl PendingIndex {
     /// [`PendingIndex::refresh`] first and validate entries with
     /// [`WaitQueue::live_seq`] while iterating — see the module docs.
     pub fn candidates(&self, executor: ExecutorId) -> Option<&SeqSet> {
-        self.execs.get(&executor).map(|st| &st.set)
+        self.execs
+            .get(executor.0 as usize)?
+            .as_ref()
+            .map(|st| &st.set)
     }
 
     /// Memoized phase-1 ranking for a head task reading `files`: every
@@ -510,20 +828,27 @@ impl PendingIndex {
         &memo.ranked
     }
 
-    /// Drop an executor's candidate state (provisioner release).
+    /// Drop an executor's candidate state (provisioner release), parking
+    /// its set — cleared, capacity intact — for the next registration.
     pub fn on_deregister(&mut self, executor: ExecutorId) {
         self.epoch += 1; // holder sets changed: invalidate the memo
-        self.execs.remove(&executor);
+        if let Some(st) = self.execs.get_mut(executor.0 as usize).and_then(Option::take) {
+            if self.set_pool.len() < SET_POOL_CAP {
+                let mut set = st.set;
+                set.clear();
+                self.set_pool.push(set);
+            }
+        }
     }
 
     /// Pending tasks referencing `file`, in queue order.
     pub fn pending_for_file(&self, file: FileId) -> Option<&SeqSet> {
-        self.by_file.get(&file)
+        self.by_file.get(file.0 as usize).filter(|s| !s.is_empty())
     }
 
-    /// Distinct files with ≥1 pending reader.
+    /// Distinct files with ≥1 pending reader — O(1) (maintained count).
     pub fn distinct_pending_files(&self) -> usize {
-        self.by_file.len()
+        self.nonempty_by_file
     }
 
     /// Rebuild from scratch — the executable spec of the incremental
@@ -550,30 +875,55 @@ impl PendingIndex {
         index: &LocationIndex,
     ) -> Result<(), String> {
         let fresh = PendingIndex::rebuild(queue, index);
-        if self.by_file != fresh.by_file {
-            return Err("by_file drifted from rebuild".into());
+        let empty = SeqSet::default();
+        let width = self.by_file.len().max(fresh.by_file.len());
+        let mut nonempty = 0usize;
+        for i in 0..width {
+            let got = self.by_file.get(i).unwrap_or(&empty);
+            let want = fresh.by_file.get(i).unwrap_or(&empty);
+            if got != want {
+                return Err(format!("by_file[{i}] drifted from rebuild"));
+            }
+            if !got.is_empty() {
+                nonempty += 1;
+            }
         }
-        let mut keys: Vec<ExecutorId> = self.execs.keys().copied().collect();
-        keys.extend(fresh.execs.keys().copied());
+        if nonempty != self.nonempty_by_file {
+            return Err(format!(
+                "nonempty_by_file {} != recount {nonempty}",
+                self.nonempty_by_file
+            ));
+        }
+        let mut keys: Vec<ExecutorId> = self
+            .execs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_some())
+            .map(|(i, _)| ExecutorId(i as u32))
+            .collect();
+        keys.extend(
+            fresh
+                .execs
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.is_some())
+                .map(|(i, _)| ExecutorId(i as u32)),
+        );
         keys.sort_unstable();
         keys.dedup();
         for e in keys {
             self.refresh(e, queue, index);
             let live: SeqSet = self
-                .execs
-                .get(&e)
-                .map(|st| {
-                    st.set
-                        .iter()
-                        .filter(|&(&s, &q)| queue.live_seq(q) == Some(s))
-                        .map(|(&s, &q)| (s, q))
+                .candidates(e)
+                .map(|set| {
+                    set.iter()
+                        .filter(|&(s, q)| queue.live_seq(q) == Some(s))
                         .collect()
                 })
                 .unwrap_or_default();
             let expect = fresh
-                .execs
-                .get(&e)
-                .map(|st| st.set.clone())
+                .candidates(e)
+                .cloned()
                 .unwrap_or_default();
             if live != expect {
                 return Err(format!(
@@ -626,6 +976,47 @@ mod tests {
         let r = q.push_back(t);
         p.on_push(q, r, ix);
         r
+    }
+
+    #[test]
+    fn seqset_matches_btreemap_semantics() {
+        use crate::util::proptest::{property, Gen};
+        use std::collections::BTreeMap;
+        property("seqset vs btreemap", 100, |g: &mut Gen| {
+            let mut q = WaitQueue::new();
+            let refs: Vec<QueueRef> = (0..8)
+                .map(|i| q.push_back(task(i, &[0])))
+                .collect();
+            let mut fast = SeqSet::default();
+            let mut slow: BTreeMap<u64, QueueRef> = BTreeMap::new();
+            for _ in 0..g.usize_in(1..300) {
+                let seq = g.u64_in(0..32);
+                let r = refs[g.usize_in(0..refs.len())];
+                if g.bool(0.6) {
+                    if fast.insert(seq, r) != slow.insert(seq, r).is_none() {
+                        return Err(format!("insert({seq}) disagreed"));
+                    }
+                } else if fast.remove(seq) != slow.remove(&seq).is_some() {
+                    return Err(format!("remove({seq}) disagreed"));
+                }
+                if fast.len() != slow.len() {
+                    return Err(format!("len {} != {}", fast.len(), slow.len()));
+                }
+                let a: Vec<(u64, QueueRef)> = fast.iter().collect();
+                let b: Vec<(u64, QueueRef)> = slow.iter().map(|(&s, &r)| (s, r)).collect();
+                if a != b {
+                    return Err(format!("order {a:?} != {b:?}"));
+                }
+                if fast.first() != b.first().copied() {
+                    return Err("first() disagreed".into());
+                }
+                let probe = g.u64_in(0..32);
+                if fast.contains(probe) != slow.contains_key(&probe) {
+                    return Err(format!("contains({probe}) disagreed"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]
@@ -791,7 +1182,7 @@ mod tests {
         p.refresh(e, &q, &ix);
         let set = p.candidates(e).unwrap();
         assert_eq!(set.len(), 1, "only the dead hint survives the patch");
-        let (&dead_seq, &dead_ref) = set.iter().next().unwrap();
+        let (dead_seq, dead_ref) = set.iter().next().unwrap();
         assert_eq!(dead_seq, seq);
         assert_ne!(q.live_seq(dead_ref), Some(dead_seq), "hint must be dead");
         // The consistency check ignores dead hints…
@@ -803,6 +1194,68 @@ mod tests {
         assert_eq!(p.stats.dead_hints_purged, 1);
         p.purge_dead(e, &[dead_seq]);
         assert_eq!(p.stats.dead_hints_purged, 1);
+    }
+
+    /// Satellite: deregistration parks the candidate set (capacity and
+    /// all) and the next registration recycles it instead of allocating.
+    #[test]
+    fn deregister_parks_set_for_reuse() {
+        let mut q = WaitQueue::new();
+        let mut p = PendingIndex::new();
+        let mut ix = LocationIndex::new();
+        let e0 = ExecutorId(0);
+        ix.add(FileId(3), e0);
+        push(&mut q, &mut p, &ix, task(0, &[3]));
+        assert_eq!(p.candidates(e0).unwrap().len(), 1);
+        assert_eq!(p.stats.slab_reuse, 0);
+
+        ix.deregister_executor(e0);
+        p.on_deregister(e0);
+        assert!(p.candidates(e0).is_none(), "state dropped");
+
+        // A different executor registering pops the pooled set.
+        let e1 = ExecutorId(1);
+        ix.add(FileId(3), e1);
+        p.on_index_add(FileId(3), e1);
+        assert_eq!(p.stats.slab_reuse, 1, "pooled set recycled");
+        assert_eq!(p.candidates(e1).unwrap().len(), 1);
+        p.check_consistent(&q, &ix).unwrap();
+    }
+
+    /// Satellite: leave-queue churn must not grow the tables — removed
+    /// entries hand their slots back in place, so the capacity-based
+    /// footprint plateaus at the first round's high-water mark.
+    #[test]
+    fn churn_does_not_grow_tables() {
+        let mut q = WaitQueue::new();
+        let mut p = PendingIndex::new();
+        let mut ix = LocationIndex::new();
+        let e = ExecutorId(0);
+        ix.add(FileId(1), e);
+        let mut id = 0u64;
+        let mut high_water = 0u64;
+        for round in 0..50 {
+            let refs: Vec<QueueRef> = (0..12)
+                .map(|_| {
+                    id += 1;
+                    push(&mut q, &mut p, &ix, task(id, &[1]))
+                })
+                .collect();
+            for r in refs {
+                remove_queued(&mut q, &mut p, r, &ix);
+            }
+            let bytes = p.table_bytes();
+            if round < 2 {
+                high_water = high_water.max(bytes);
+            } else {
+                assert!(
+                    bytes <= high_water,
+                    "round {round}: tables grew {bytes} > {high_water}"
+                );
+            }
+        }
+        assert!(p.candidates(e).unwrap().is_empty());
+        p.check_consistent(&q, &ix).unwrap();
     }
 
     #[test]
@@ -914,5 +1367,191 @@ mod tests {
                 Ok(())
             });
         }
+    }
+
+    // ---- adaptive-caps suite ----
+
+    /// Drive many cache events per consult: caps must walk monotonically
+    /// to (FANOUT_CAP_MIN, DIRTY_CAP_MAX) and stop at the bounds.
+    #[test]
+    fn event_heavy_regime_defers_harder() {
+        let q = WaitQueue::new();
+        let mut p = PendingIndex::new();
+        let mut ix = LocationIndex::new();
+        let e = ExecutorId(0);
+        p.set_adapt_window(4);
+        assert_eq!(p.fanout_cap(), FANOUT_CAP);
+        assert_eq!(p.dirty_cap(), DIRTY_CAP);
+        let mut last = (p.fanout_cap(), p.dirty_cap());
+        for round in 0..8 {
+            // 40 events per 4 consults: ratio 10 ≥ 4 → defer harder.
+            for i in 0..20u32 {
+                let f = FileId(i % 6);
+                ix.add(f, e);
+                p.on_index_add(f, e);
+                ix.remove(f, e);
+                p.on_index_remove(f, e, &q, &ix);
+            }
+            for _ in 0..4 {
+                p.refresh(e, &q, &ix);
+            }
+            assert!(p.fanout_cap() <= last.0, "round {round}: fan-out cap rose");
+            assert!(p.dirty_cap() >= last.1, "round {round}: dirty budget fell");
+            assert!(p.fanout_cap() >= FANOUT_CAP_MIN, "below floor");
+            assert!(p.dirty_cap() <= DIRTY_CAP_MAX, "above ceiling");
+            last = (p.fanout_cap(), p.dirty_cap());
+        }
+        assert_eq!(p.fanout_cap(), FANOUT_CAP_MIN, "converged to floor");
+        assert_eq!(p.dirty_cap(), DIRTY_CAP_MAX, "converged to ceiling");
+        // fanout 16→8 in one step; dirty 32→64→128 in two; at the bounds
+        // further windows change nothing (and are not counted).
+        assert_eq!(p.stats.cap_adaptations, 2);
+    }
+
+    /// Consults with no events: caps must walk the other way, to
+    /// (FANOUT_CAP_MAX, DIRTY_CAP_MIN), and stay bounded.
+    #[test]
+    fn consult_heavy_regime_applies_eagerly() {
+        let q = WaitQueue::new();
+        let mut p = PendingIndex::new();
+        let ix = LocationIndex::new();
+        let e = ExecutorId(0);
+        p.set_adapt_window(4);
+        for _ in 0..6 {
+            for _ in 0..4 {
+                p.refresh(e, &q, &ix);
+            }
+            assert!(p.fanout_cap() <= FANOUT_CAP_MAX);
+            assert!(p.dirty_cap() >= DIRTY_CAP_MIN);
+        }
+        assert_eq!(p.fanout_cap(), FANOUT_CAP_MAX, "converged to ceiling");
+        assert_eq!(p.dirty_cap(), DIRTY_CAP_MIN, "converged to floor");
+        assert_eq!(p.stats.cap_adaptations, 2);
+    }
+
+    /// Between the thresholds (½ < events/consults < 4) nothing adapts.
+    #[test]
+    fn balanced_regime_leaves_caps_alone() {
+        let q = WaitQueue::new();
+        let mut p = PendingIndex::new();
+        let mut ix = LocationIndex::new();
+        let e = ExecutorId(0);
+        p.set_adapt_window(4);
+        for _ in 0..6 {
+            // 8 events per 4 consults: ratio 2 — inside the dead band.
+            for i in 0..4u32 {
+                let f = FileId(i);
+                ix.add(f, e);
+                p.on_index_add(f, e);
+                ix.remove(f, e);
+                p.on_index_remove(f, e, &q, &ix);
+            }
+            for _ in 0..4 {
+                p.refresh(e, &q, &ix);
+            }
+        }
+        assert_eq!(p.fanout_cap(), FANOUT_CAP);
+        assert_eq!(p.dirty_cap(), DIRTY_CAP);
+        assert_eq!(p.stats.cap_adaptations, 0);
+    }
+
+    /// An adapting index and a fixed-cap index driven by the same op
+    /// stream must expose identical live candidate sets at every consult
+    /// — caps reschedule maintenance, they never change results.
+    #[test]
+    fn adapted_caps_keep_dispatch_bit_identical() {
+        use crate::util::proptest::{property, Gen};
+
+        fn live(p: &PendingIndex, e: ExecutorId, q: &WaitQueue) -> Vec<u64> {
+            p.candidates(e)
+                .map(|set| {
+                    set.iter()
+                        .filter(|&(s, r)| q.live_seq(r) == Some(s))
+                        .map(|(s, _)| s)
+                        .collect()
+                })
+                .unwrap_or_default()
+        }
+
+        property("adaptive caps parity", 40, |g: &mut Gen| {
+            let mut q = WaitQueue::new();
+            let mut adapting = PendingIndex::new();
+            adapting.set_adapt_window(3);
+            let mut fixed = PendingIndex::new();
+            let mut ix = LocationIndex::new();
+            let mut live_refs: Vec<QueueRef> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..g.usize_in(20..150) {
+                match g.usize_in(0..6) {
+                    0 | 1 => {
+                        let f = g.u64_in(0..8) as u32;
+                        let r = q.push_back(task(next_id, &[f]));
+                        next_id += 1;
+                        adapting.on_push(&q, r, &ix);
+                        fixed.on_push(&q, r, &ix);
+                        live_refs.push(r);
+                    }
+                    2 if !live_refs.is_empty() => {
+                        let i = g.usize_in(0..live_refs.len());
+                        let r = live_refs.swap_remove(i);
+                        let seq = q.seq_of(r);
+                        let t = q.remove(r);
+                        adapting.on_remove(&t.files, seq, &ix);
+                        fixed.on_remove(&t.files, seq, &ix);
+                    }
+                    3 => {
+                        let f = FileId(g.u64_in(0..8) as u32);
+                        let e = ExecutorId(g.u64_in(0..3) as u32);
+                        ix.add(f, e);
+                        adapting.on_index_add(f, e);
+                        fixed.on_index_add(f, e);
+                    }
+                    4 => {
+                        let f = FileId(g.u64_in(0..8) as u32);
+                        let e = ExecutorId(g.u64_in(0..3) as u32);
+                        ix.remove(f, e);
+                        adapting.on_index_remove(f, e, &q, &ix);
+                        fixed.on_index_remove(f, e, &q, &ix);
+                    }
+                    _ => {
+                        let e = ExecutorId(g.u64_in(0..3) as u32);
+                        adapting.refresh(e, &q, &ix);
+                        fixed.refresh(e, &q, &ix);
+                        let a = live(&adapting, e, &q);
+                        let b = live(&fixed, e, &q);
+                        if a != b {
+                            return Err(format!(
+                                "consult diverged for {e}: adaptive {a:?} != fixed {b:?} \
+                                 (caps {}/{})",
+                                adapting.fanout_cap(),
+                                adapting.dirty_cap()
+                            ));
+                        }
+                    }
+                }
+                let fc = adapting.fanout_cap();
+                let dc = adapting.dirty_cap();
+                if !(FANOUT_CAP_MIN..=FANOUT_CAP_MAX).contains(&fc) {
+                    return Err(format!("fan-out cap {fc} out of bounds"));
+                }
+                if !(DIRTY_CAP_MIN..=DIRTY_CAP_MAX).contains(&dc) {
+                    return Err(format!("dirty budget {dc} out of bounds"));
+                }
+            }
+            for i in 0..3 {
+                let e = ExecutorId(i);
+                adapting.refresh(e, &q, &ix);
+                fixed.refresh(e, &q, &ix);
+                let a = live(&adapting, e, &q);
+                let b = live(&fixed, e, &q);
+                if a != b {
+                    return Err(format!("final diverged for {e}: {a:?} != {b:?}"));
+                }
+            }
+            adapting
+                .check_consistent(&q, &ix)
+                .map_err(|err| format!("adaptive inconsistent: {err}"))?;
+            Ok(())
+        });
     }
 }

@@ -372,7 +372,7 @@ impl Scheduler {
         let mut dead = std::mem::take(&mut self.dead_scratch);
         dead.clear();
         if let Some(cands) = pending.candidates(exec) {
-            for (&seq, &qref) in cands {
+            for (seq, qref) in cands.iter() {
                 if boundary.is_some_and(|b| seq >= b) {
                     break; // past the window boundary; so is everything later
                 }
@@ -417,7 +417,7 @@ impl Scheduler {
             let cands = pending.candidates(exec);
             for (qref, task) in queue.window(window) {
                 let seq = queue.seq_of(qref);
-                if cands.is_some_and(|c| c.contains_key(&seq)) {
+                if cands.is_some_and(|c| c.contains(seq)) {
                     continue;
                 }
                 inspected += 1;

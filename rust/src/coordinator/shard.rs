@@ -125,6 +125,9 @@ pub struct ShardedCoordinator {
     /// Rotation cursor for cross-shard source balancing: consecutive
     /// rewrites of the same hot file draw successive foreign holders.
     probe_cursor: u64,
+    /// Round-robin cursor for returning recycled effect buffers, so
+    /// every shard's scratch pool refills (not just shard 0's).
+    next_recycle: usize,
     /// Round-robin cursor for initial-fleet registration.
     next_register: usize,
     /// True when the shards run `--allocation model`: the router then
@@ -188,6 +191,7 @@ impl ShardedCoordinator {
             cross_inflight: HashMap::new(),
             cross_serving: HashMap::new(),
             probe_cursor: 0,
+            next_recycle: 0,
             next_register: 0,
             model_allocation,
             quota_rebalances: 0,
@@ -236,6 +240,39 @@ impl ShardedCoordinator {
     /// Router-level tallies so far.
     pub fn counters(&self) -> &ShardCounters {
         &self.counters
+    }
+
+    /// Return an enacted effect buffer to a shard's scratch pool (see
+    /// [`CoordinatorCore::recycle_effects`]). Buffers round-robin over
+    /// the shards so every pool refills; skipping this is always
+    /// correct, just slower. Deterministic (cursor, no PRNG).
+    pub fn recycle_effects(&mut self, effects: Vec<Effect>) {
+        let k = self.cores.len();
+        self.cores[self.next_recycle % k].recycle_effects(effects);
+        self.next_recycle = (self.next_recycle + 1) % k;
+    }
+
+    /// Fresh scratch-buffer allocations across all shards (pool misses
+    /// on the event path) — the `scale/allocs_per_event` numerator.
+    pub fn alloc_events(&self) -> u64 {
+        self.cores.iter().map(|c| c.alloc_events()).sum()
+    }
+
+    /// Events that took an effect buffer, across all shards — the
+    /// `scale/allocs_per_event` denominator.
+    pub fn effect_events(&self) -> u64 {
+        self.cores.iter().map(|c| c.effect_events()).sum()
+    }
+
+    /// Stale reports rejected by the cores (tasks not in flight) plus
+    /// those the router bounced before reaching a core.
+    pub fn stale_events(&self) -> u64 {
+        self.counters.stale_events + self.cores.iter().map(|c| c.stale_events()).sum::<u64>()
+    }
+
+    /// Bytes behind every shard's dense dispatch tables.
+    pub fn table_bytes(&self) -> u64 {
+        self.cores.iter().map(|c| c.table_bytes()).sum()
     }
 
     /// Read access to one shard's core (tests, benches).
@@ -294,35 +331,38 @@ impl ShardedCoordinator {
         self.g2l(exec).map(|(shard, _)| shard)
     }
 
-    fn shard_of_task(&self, task_id: TaskId) -> usize {
+    /// The shard that owns `task_id`, or `None` when the router never
+    /// saw it arrive (a stale or byzantine event). At K = 1 the single
+    /// core is always the owner — its own in-flight table makes the
+    /// staleness call instead.
+    fn shard_of_task(&self, task_id: TaskId) -> Option<usize> {
         if self.cores.len() == 1 {
-            0
+            Some(0)
         } else {
-            *self
-                .task_shard
-                .get(&task_id.0)
-                .expect("event for a task the router never saw arrive")
+            self.task_shard.get(&task_id.0).copied()
         }
     }
 
     // ---- effect rewriting -----------------------------------------------
 
-    /// Rewrite one shard's effects into the global id space, applying
-    /// the cross-shard fetch rewrite to GPFS misses. Identity at K = 1.
-    fn rewrite(&mut self, shard: usize, effects: Vec<Effect>) -> Vec<Effect> {
+    /// Rewrite one shard's effects into the global id space **in
+    /// place**, applying the cross-shard fetch rewrite to GPFS misses.
+    /// Identity at K = 1. The buffer the core handed over is mutated and
+    /// passed through — the router allocates nothing per event.
+    fn rewrite(&mut self, shard: usize, mut effects: Vec<Effect>) -> Vec<Effect> {
         if self.cores.len() == 1 {
             return effects;
         }
+        for e in &mut effects {
+            self.rewrite_one(shard, e);
+        }
         effects
-            .into_iter()
-            .map(|e| self.rewrite_one(shard, e))
-            .collect()
     }
 
-    fn rewrite_one(&mut self, shard: usize, effect: Effect) -> Effect {
+    fn rewrite_one(&mut self, shard: usize, effect: &mut Effect) {
         match effect {
-            Effect::Notify(e) => Effect::Notify(self.l2g(shard, e)),
-            Effect::Fetch(mut plan) => {
+            Effect::Notify(e) => *e = self.l2g(shard, *e),
+            Effect::Fetch(plan) => {
                 plan.exec = self.l2g(shard, plan.exec);
                 plan.peer = plan.peer.map(|p| self.l2g(shard, p));
                 if plan.kind == AccessKind::Miss {
@@ -339,34 +379,29 @@ impl ShardedCoordinator {
                         self.counters.per_shard[src].cross_out += 1;
                     }
                 }
-                Effect::Fetch(plan)
             }
-            Effect::Compute {
-                task_id,
-                exec,
-                compute,
-            } => Effect::Compute {
-                task_id,
-                exec: self.l2g(shard, exec),
-                compute,
-            },
-            Effect::Allocate(n) => Effect::Allocate(n),
+            Effect::Compute { exec, .. } => *exec = self.l2g(shard, *exec),
+            Effect::Allocate(_) => {}
             Effect::Release(execs) => {
                 // The owning core already withheld executors serving
                 // *its own* peer transfers; the router additionally
                 // withholds sources of cross-shard transfers, which the
                 // owning shard cannot see. Withheld executors stay
-                // idle-listed and are retried next tick.
-                let mut out = Vec::with_capacity(execs.len());
-                for e in execs {
-                    let g = self.l2g(shard, e);
-                    if self.cross_serving.contains_key(&g.0) {
-                        self.counters.cross_release_deferrals += 1;
-                    } else {
-                        out.push(g);
-                    }
+                // idle-listed and are retried next tick. Same list
+                // order as before, filtered in place.
+                for e in execs.iter_mut() {
+                    *e = self.l2g(shard, *e);
                 }
-                Effect::Release(out)
+                let cross_serving = &self.cross_serving;
+                let counters = &mut self.counters;
+                execs.retain(|g| {
+                    if cross_serving.contains_key(&g.0) {
+                        counters.cross_release_deferrals += 1;
+                        false
+                    } else {
+                        true
+                    }
+                });
             }
         }
     }
@@ -524,7 +559,10 @@ impl ShardedCoordinator {
         observed: Option<(AccessKind, u64)>,
     ) -> Vec<Effect> {
         self.counters.router_events += 1;
-        let shard = self.shard_of_task(task_id);
+        let Some(shard) = self.shard_of_task(task_id) else {
+            self.counters.stale_events += 1;
+            return Vec::new();
+        };
         let observed = match (self.cross_done(task_id), observed) {
             (Some(bytes), None) => Some((AccessKind::HitGlobal, bytes)),
             (_, explicit) => explicit,
@@ -541,7 +579,10 @@ impl ShardedCoordinator {
         completed_at: Micros,
     ) -> Vec<Effect> {
         self.counters.router_events += 1;
-        let shard = self.shard_of_task(task_id);
+        let Some(shard) = self.shard_of_task(task_id) else {
+            self.counters.stale_events += 1;
+            return Vec::new();
+        };
         self.task_shard.remove(&task_id.0);
         let effects = self.cores[shard].on_compute_done(task_id, now, completed_at);
         self.rewrite(shard, effects)
@@ -552,7 +593,10 @@ impl ShardedCoordinator {
     /// and is re-routed by dominant file as usual).
     pub fn on_task_failed(&mut self, task_id: TaskId, now: Micros) -> Vec<Effect> {
         self.counters.router_events += 1;
-        let shard = self.shard_of_task(task_id);
+        let Some(shard) = self.shard_of_task(task_id) else {
+            self.counters.stale_events += 1;
+            return Vec::new();
+        };
         self.task_shard.remove(&task_id.0);
         self.cross_done(task_id);
         let effects = self.cores[shard].on_task_failed(task_id, now);
@@ -598,10 +642,15 @@ impl ShardedCoordinator {
         if self.model_allocation && self.cores.len() > 1 {
             self.rebalance_quotas(now);
         }
+        if self.cores.len() == 1 {
+            return self.cores[0].on_tick(now);
+        }
         let mut out = Vec::new();
         for shard in 0..self.cores.len() {
             let effects = self.cores[shard].on_tick(now);
-            out.extend(self.rewrite(shard, effects));
+            let mut effects = self.rewrite(shard, effects);
+            out.extend(effects.drain(..));
+            self.cores[shard].recycle_effects(effects);
         }
         out
     }
@@ -652,10 +701,15 @@ impl ShardedCoordinator {
     /// tasks and free executors kicks independently of the others).
     pub fn kick(&mut self) -> Vec<Effect> {
         self.counters.router_events += 1;
+        if self.cores.len() == 1 {
+            return self.cores[0].kick();
+        }
         let mut out = Vec::new();
         for shard in 0..self.cores.len() {
             let effects = self.cores[shard].kick();
-            out.extend(self.rewrite(shard, effects));
+            let mut effects = self.rewrite(shard, effects);
+            out.extend(effects.drain(..));
+            self.cores[shard].recycle_effects(effects);
         }
         out
     }
@@ -784,21 +838,25 @@ impl ShardedCoordinator {
         while let Some(effect) = stack.pop() {
             match effect {
                 Effect::Notify(e) => {
-                    let effs = self.on_pickup(e, now);
-                    stack.extend(effs);
+                    let mut effs = self.on_pickup(e, now);
+                    stack.extend(effs.drain(..));
+                    self.recycle_effects(effs);
                 }
                 Effect::Fetch(plan) => {
-                    let effs = self.on_fetch_done(plan.task_id, now, None);
-                    stack.extend(effs);
+                    let mut effs = self.on_fetch_done(plan.task_id, now, None);
+                    stack.extend(effs.drain(..));
+                    self.recycle_effects(effs);
                 }
                 Effect::Compute { task_id, .. } => {
-                    let effs = self.on_compute_done(task_id, now, now);
-                    stack.extend(effs);
+                    let mut effs = self.on_compute_done(task_id, now, now);
+                    stack.extend(effs.drain(..));
+                    self.recycle_effects(effs);
                 }
                 Effect::Allocate(n) => {
                     for _ in 0..n {
-                        let (_, effs) = self.on_node_registered(now);
-                        stack.extend(effs);
+                        let (_, mut effs) = self.on_node_registered(now);
+                        stack.extend(effs.drain(..));
+                        self.recycle_effects(effs);
                     }
                 }
                 Effect::Release(execs) => {
@@ -1246,6 +1304,43 @@ mod tests {
         assert_eq!(r.quota_rebalances(), 0);
         let total: usize = (0..4).map(|s| r.core(s).node_quota()).sum();
         assert_eq!(total, 8, "static quotas stay at the construction split");
+    }
+
+    #[test]
+    fn stale_task_reports_are_rejected_not_fatal() {
+        // Byzantine reports — duplicated or corrupted completions naming
+        // tasks that are not in flight — must bounce off the router (or
+        // the core, at K = 1) without panicking or perturbing state.
+        let mut r = router(DispatchPolicy::GoodCacheCompute, 2);
+        for _ in 0..2 {
+            let (_, effs) = r.register_node(Micros::ZERO);
+            r.drain_effects(effs, Micros::ZERO);
+        }
+        assert!(r.on_fetch_done(TaskId(99), Micros::ZERO, None).is_empty());
+        assert!(r
+            .on_compute_done(TaskId(99), Micros::ZERO, Micros::ZERO)
+            .is_empty());
+        assert!(r.on_task_failed(TaskId(99), Micros::ZERO).is_empty());
+        assert_eq!(r.counters().stale_events, 3, "router bounced all three");
+        r.check_integrity().unwrap();
+
+        // A real task, then a duplicated completion: the first report
+        // retires the routing entry, so the replay is stale.
+        let effs = r.on_arrival(task(0, &[3]), 0, 0.0, Micros::ZERO);
+        r.drain_effects(effs, Micros::ZERO);
+        assert!(r
+            .on_compute_done(TaskId(0), Micros::ZERO, Micros::ZERO)
+            .is_empty());
+        assert_eq!(r.counters().stale_events, 4);
+        let rec = r.take_merged_recorder();
+        assert_eq!(rec.tasks_done(), 1, "the duplicate recorded nothing");
+
+        // K = 1 has no routing table: the single core itself rejects.
+        let mut r1 = router(DispatchPolicy::GoodCacheCompute, 1);
+        assert!(r1.on_fetch_done(TaskId(99), Micros::ZERO, None).is_empty());
+        assert_eq!(r1.stale_events(), 1);
+        assert_eq!(r1.counters().stale_events, 0, "the core made the call");
+        r1.check_integrity().unwrap();
     }
 
     #[test]

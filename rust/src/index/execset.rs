@@ -142,6 +142,12 @@ impl ExecSet {
             .sum()
     }
 
+    /// Bytes of heap behind the word array (capacity-based; feeds the
+    /// `scale/peak_table_bytes` table estimate).
+    pub fn heap_bytes(&self) -> usize {
+        self.words.capacity() * std::mem::size_of::<u64>()
+    }
+
     /// Iterate members in ascending id order.
     pub fn iter(&self) -> ExecSetIter<'_> {
         ExecSetIter {

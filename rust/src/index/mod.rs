@@ -16,11 +16,22 @@
 //!   cache-hit scoring (§Perf iteration 3 replaced the per-probe
 //!   `BTreeSet` descent with a single hash lookup).
 //!
+//! ## Arena layout (§Perf arena/SoA iteration)
+//!
+//! `FileId`/`ExecutorId` are dense `u32`s assigned from 0 by the
+//! coordinator, so both maps are direct-indexed `Vec`s rather than hash
+//! maps: `I_map` is `Vec<ExecSet>` indexed by `FileId.0` (an empty bitset
+//! means "no replicas"; [`LocationIndex::holders`] still reports `None`
+//! then, preserving the pre-arena `Option` contract), and `E_map` is
+//! `Vec<Option<HashSet<FileId>>>` indexed by `ExecutorId.0`. The hot
+//! probes ([`LocationIndex::holds`], [`LocationIndex::replication`],
+//! [`LocationIndex::hit_count`]'s outer lookup) drop their hash of the key
+//! entirely — one bounds check + one mask test.
+//!
 //! Both directions are kept mutually consistent by construction (asserted
-//! by a property test). Per-file holder probes ([`LocationIndex::holds`])
-//! and replica counts ([`LocationIndex::replication`]) are O(1), matching
-//! the paper's O(|θ(κ)| + replication + min(|Q|, W)) scheduling-cost
-//! argument.
+//! by a property test). Per-file holder probes and replica counts are
+//! O(1), matching the paper's O(|θ(κ)| + replication + min(|Q|, W))
+//! scheduling-cost argument.
 //!
 //! The bitset representation is also what makes the §Perf iteration 4
 //! notify memo cheap: the candidate executors of a multi-file head task
@@ -37,15 +48,19 @@ pub mod execset;
 pub use execset::ExecSet;
 
 use crate::ids::{ExecutorId, FileId};
-use std::collections::{HashMap, HashSet};
+use std::collections::HashSet;
 
 /// The dispatcher's central file-location index (`I_map` + `E_map`).
 #[derive(Debug, Default)]
 pub struct LocationIndex {
-    /// I_map: file → executors holding it (bitset).
-    holders: HashMap<FileId, ExecSet>,
-    /// E_map: executor → files it holds.
-    cached: HashMap<ExecutorId, HashSet<FileId>>,
+    /// I_map: `FileId.0` → executors holding it (bitset; empty = none).
+    holders: Vec<ExecSet>,
+    /// Files with at least one replica (live entries in `holders`).
+    nonempty_files: usize,
+    /// E_map: `ExecutorId.0` → files it holds (`None` = not registered).
+    cached: Vec<Option<HashSet<FileId>>>,
+    /// Registered executors (`Some` entries in `cached`).
+    registered: usize,
     /// Total (file, executor) replica pairs — cheap global replication stat.
     replicas: u64,
 }
@@ -56,26 +71,48 @@ impl LocationIndex {
         Self::default()
     }
 
+    fn holder_slot(&mut self, file: FileId) -> &mut ExecSet {
+        let i = file.0 as usize;
+        if self.holders.len() <= i {
+            self.holders.resize_with(i + 1, ExecSet::default);
+        }
+        &mut self.holders[i]
+    }
+
+    fn cached_slot(&mut self, executor: ExecutorId) -> &mut HashSet<FileId> {
+        let i = executor.0 as usize;
+        if self.cached.len() <= i {
+            self.cached.resize_with(i + 1, || None);
+        }
+        let slot = &mut self.cached[i];
+        if slot.is_none() {
+            *slot = Some(HashSet::new());
+            self.registered += 1;
+        }
+        slot.as_mut().expect("just registered")
+    }
+
     /// Register an executor with an empty cache (no-op if present).
     pub fn register_executor(&mut self, executor: ExecutorId) {
-        self.cached.entry(executor).or_default();
+        let _ = self.cached_slot(executor);
     }
 
     /// Remove an executor and all its entries (deregistration / release by
     /// the provisioner). Returns the files it held, for accounting.
     pub fn deregister_executor(&mut self, executor: ExecutorId) -> Vec<FileId> {
-        let files: Vec<FileId> = self
-            .cached
-            .remove(&executor)
-            .map(|set| set.into_iter().collect())
-            .unwrap_or_default();
+        let i = executor.0 as usize;
+        let Some(set) = self.cached.get_mut(i).and_then(Option::take) else {
+            return Vec::new();
+        };
+        self.registered -= 1;
+        let files: Vec<FileId> = set.into_iter().collect();
         for &f in &files {
-            if let Some(set) = self.holders.get_mut(&f) {
+            if let Some(set) = self.holders.get_mut(f.0 as usize) {
                 if set.remove(executor) {
                     self.replicas -= 1;
-                }
-                if set.is_empty() {
-                    self.holders.remove(&f);
+                    if set.is_empty() {
+                        self.nonempty_files -= 1;
+                    }
                 }
             }
         }
@@ -83,59 +120,69 @@ impl LocationIndex {
     }
 
     /// Record that `executor` now caches `file` (an executor cache-content
-    /// update message). One probe per map: both sides use the entry API.
+    /// update message).
     pub fn add(&mut self, file: FileId, executor: ExecutorId) {
-        let inserted = self.holders.entry(file).or_default().insert(executor);
-        self.cached.entry(executor).or_default().insert(file);
+        let set = self.holder_slot(file);
+        let was_empty = set.is_empty();
+        let inserted = set.insert(executor);
+        self.cached_slot(executor).insert(file);
         if inserted {
             self.replicas += 1;
+            if was_empty {
+                self.nonempty_files += 1;
+            }
         }
     }
 
     /// Record that `executor` evicted `file`.
     pub fn remove(&mut self, file: FileId, executor: ExecutorId) {
-        if let Some(set) = self.holders.get_mut(&file) {
+        if let Some(set) = self.holders.get_mut(file.0 as usize) {
             if set.remove(executor) {
                 self.replicas -= 1;
-            }
-            if set.is_empty() {
-                self.holders.remove(&file);
+                if set.is_empty() {
+                    self.nonempty_files -= 1;
+                }
             }
         }
-        if let Some(set) = self.cached.get_mut(&executor) {
+        if let Some(Some(set)) = self.cached.get_mut(executor.0 as usize) {
             set.remove(&file);
         }
     }
 
-    /// I_map lookup: executors currently caching `file`.
+    /// I_map lookup: executors currently caching `file`. `None` when no
+    /// executor holds it (the dense slot may exist but be empty).
     pub fn holders(&self, file: FileId) -> Option<&ExecSet> {
-        self.holders.get(&file)
+        self.holders
+            .get(file.0 as usize)
+            .filter(|s| !s.is_empty())
     }
 
-    /// Does `executor` cache `file`? One hash probe + one mask test —
+    /// Does `executor` cache `file`? One bounds check + one mask test —
     /// the scheduler's per-candidate hit-scoring primitive.
     #[inline]
     pub fn holds(&self, file: FileId, executor: ExecutorId) -> bool {
         self.holders
-            .get(&file)
+            .get(file.0 as usize)
             .is_some_and(|set| set.contains(executor))
     }
 
     /// Number of replicas of `file` (the scheduler's replication-factor
     /// input for good-cache-compute). O(1): cached popcount.
     pub fn replication(&self, file: FileId) -> usize {
-        self.holders.get(&file).map_or(0, |s| s.len())
+        self.holders.get(file.0 as usize).map_or(0, |s| s.len())
     }
 
     /// E_map lookup: files cached at `executor`.
     pub fn cached_at(&self, executor: ExecutorId) -> Option<&HashSet<FileId>> {
-        self.cached.get(&executor)
+        self.cached
+            .get(executor.0 as usize)
+            .and_then(|o| o.as_ref())
     }
 
     /// How many of `files` are cached at `executor` — the scheduling-window
     /// cache-hit score of §3.2 (|fileSet ∩ E_map(executor)|).
     pub fn hit_count(&self, executor: ExecutorId, files: &[FileId]) -> usize {
-        match self.cached.get(&executor) {
+        match self.cached_at(executor) {
             Some(set) => files.iter().filter(|f| set.contains(f)).count(),
             None => 0,
         }
@@ -143,12 +190,12 @@ impl LocationIndex {
 
     /// Registered executors count.
     pub fn executors(&self) -> usize {
-        self.cached.len()
+        self.registered
     }
 
     /// Distinct files with at least one replica.
     pub fn distinct_files(&self) -> usize {
-        self.holders.len()
+        self.nonempty_files
     }
 
     /// Total replica pairs across the cluster.
@@ -156,30 +203,58 @@ impl LocationIndex {
         self.replicas
     }
 
+    /// Approximate bytes held by the dense tables (capacity-based; the
+    /// `scale/peak_table_bytes` bench counter sums this).
+    pub fn table_bytes(&self) -> u64 {
+        let holder_heap: usize = self.holders.iter().map(ExecSet::heap_bytes).sum();
+        (self.holders.capacity() * std::mem::size_of::<ExecSet>()
+            + holder_heap
+            + self.cached.capacity() * std::mem::size_of::<Option<HashSet<FileId>>>()) as u64
+            + self.replicas * std::mem::size_of::<FileId>() as u64
+    }
+
     /// Debug-check the two maps agree; used by tests.
     #[doc(hidden)]
     pub fn check_consistent(&self) -> Result<(), String> {
         let mut pairs = 0u64;
-        for (&f, execs) in &self.holders {
-            if execs.is_empty() {
-                return Err(format!("empty holder set for {f}"));
+        let mut nonempty = 0usize;
+        for (i, execs) in self.holders.iter().enumerate() {
+            let f = FileId(i as u32);
+            if !execs.is_empty() {
+                nonempty += 1;
             }
             for e in execs {
                 pairs += 1;
-                if !self.cached.get(&e).is_some_and(|s| s.contains(&f)) {
+                if !self.cached_at(e).is_some_and(|s| s.contains(&f)) {
                     return Err(format!("I_map has ({f},{e}) but E_map does not"));
                 }
             }
         }
-        for (&e, files) in &self.cached {
+        let mut registered = 0usize;
+        for (i, slot) in self.cached.iter().enumerate() {
+            let Some(files) = slot else { continue };
+            registered += 1;
+            let e = ExecutorId(i as u32);
             for &f in files {
-                if !self.holders.get(&f).is_some_and(|s| s.contains(e)) {
+                if !self.holds(f, e) {
                     return Err(format!("E_map has ({e},{f}) but I_map does not"));
                 }
             }
         }
         if pairs != self.replicas {
             return Err(format!("replica count {} != actual {}", self.replicas, pairs));
+        }
+        if nonempty != self.nonempty_files {
+            return Err(format!(
+                "nonempty_files {} != actual {}",
+                self.nonempty_files, nonempty
+            ));
+        }
+        if registered != self.registered {
+            return Err(format!(
+                "registered {} != actual {}",
+                self.registered, registered
+            ));
         }
         Ok(())
     }
@@ -250,6 +325,24 @@ mod tests {
         assert_eq!(files, vec![FileId(1), FileId(2)]);
         assert_eq!(ix.replication(FileId(1)), 1);
         assert_eq!(ix.replication(FileId(2)), 0);
+        ix.check_consistent().unwrap();
+    }
+
+    #[test]
+    fn emptied_slots_report_like_missing_files() {
+        // Arena slots outlive their last replica; the read API must not
+        // tell the difference from a never-seen file.
+        let mut ix = LocationIndex::new();
+        ix.add(FileId(3), ExecutorId(0));
+        ix.remove(FileId(3), ExecutorId(0));
+        assert_eq!(ix.holders(FileId(3)), None);
+        assert_eq!(ix.replication(FileId(3)), 0);
+        assert!(!ix.holds(FileId(3), ExecutorId(0)));
+        assert_eq!(ix.distinct_files(), 0);
+        // Re-adding revives the same slot.
+        ix.add(FileId(3), ExecutorId(1));
+        assert_eq!(ix.distinct_files(), 1);
+        assert_eq!(ix.replication(FileId(3)), 1);
         ix.check_consistent().unwrap();
     }
 

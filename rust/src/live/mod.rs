@@ -258,14 +258,15 @@ impl Driver<'_> {
                 Effect::Compute { task_id, .. } => {
                     // The worker already ran the compute alongside the
                     // fetch: close the loop immediately.
-                    for eff in self.core.on_compute_done(task_id, now, now) {
-                        queue.push_back(eff);
-                    }
+                    let mut effs = self.core.on_compute_done(task_id, now, now);
+                    queue.extend(effs.drain(..));
+                    self.core.recycle_effects(effs);
                 }
                 Effect::Allocate(n) => {
                     for _ in 0..n {
-                        let effs = self.spawn_worker_registered(now)?;
-                        queue.extend(effs);
+                        let mut effs = self.spawn_worker_registered(now)?;
+                        queue.extend(effs.drain(..));
+                        self.core.recycle_effects(effs);
                     }
                 }
                 Effect::Release(execs) => {
@@ -408,7 +409,7 @@ pub fn run(config: &LiveConfig, tasks: &[LiveTask]) -> Result<LiveReport> {
             cache: config.cache,
             max_nodes: max_workers,
             slots_per_node: 1,
-            file_sizes: FileSizes::PerFile(file_sizes),
+            file_sizes: FileSizes::per_file(file_sizes),
         },
         Pcg64::seeded(config.seed),
     );

@@ -211,6 +211,10 @@ pub struct ShardCounters {
     /// Executor crash events the router fanned into
     /// `on_executor_failed` (chaos harness / live worker deaths).
     pub exec_failures: u64,
+    /// Events the router rejected because they named a task it never
+    /// saw arrive (or one already completed) — byzantine duplicates and
+    /// corrupted completions bounce off here without reaching a core.
+    pub stale_events: u64,
     /// Per-shard breakdown, indexed by shard id.
     pub per_shard: Vec<ShardTally>,
 }

@@ -44,7 +44,7 @@
 //! the final state a pure function of (timestamp, final counts,
 //! remaining bytes), which both modes compute identically.
 
-//! ## Active-set layout
+//! ## Active-set and SoA layout
 //!
 //! Each link keeps its active transfers in a **dense `Vec<u32>`** of
 //! slab indices with swap-remove, not a hash set: the settle and rerate
@@ -57,6 +57,18 @@
 //! the completion heap orders ties by transfer id (its entries are
 //! `(key, id)` pairs compared lexicographically), so pop order is
 //! layout-independent.
+//!
+//! Link and transfer state are **struct-of-arrays**: parallel `Vec`s
+//! indexed by the link/transfer id instead of `Vec<Link>` /
+//! `Vec<Option<Transfer>>` structs. The settle sweep reads exactly
+//! three transfer columns (`remaining`, `rate`, `updated`) and the
+//! rerate reads two link columns (`cap`, active length), so the inner
+//! loops stride over tightly packed floats instead of pulling whole
+//! mixed-field structs (tags, link paths, epochs) through the cache —
+//! and slot liveness is a plain `bool` column checked in debug builds
+//! rather than an `Option` discriminant branched on every access.
+//! Completion no longer allocates: the fixed `[u32; 3]` link path is
+//! copied out of the column instead of collected into a `Vec`.
 
 use crate::util::time::Micros;
 
@@ -99,32 +111,6 @@ pub struct FlowStats {
     /// Transfers skipped by the per-flush dedup (already rerated via an
     /// earlier dirty link in the same flush).
     pub dedup_skips: u64,
-}
-
-#[derive(Debug)]
-struct Link {
-    capacity_bps: f64,
-    /// Transfers currently using this link — dense slab-index vec with
-    /// swap-remove (see the module docs on the active-set layout).
-    active: Vec<u32>,
-    /// Pending-rerate flag (batched mode).
-    dirty: bool,
-    /// Last timestamp this link's co-flows were settled at (settling is
-    /// idempotent per timestamp, so repeats within one instant skip).
-    settled_at: Micros,
-}
-
-#[derive(Debug)]
-struct Transfer {
-    remaining_bytes: f64,
-    rate_bps: f64,
-    last_update: Micros,
-    links: [u32; 3],
-    nlinks: u8,
-    /// Engine-side identity (task id).
-    tag: u64,
-    /// Flush epoch this transfer was last rerated in (batched dedup).
-    epoch: u64,
 }
 
 /// Indexed min-heap over (completion time, transfer id) with in-place
@@ -244,10 +230,40 @@ impl IndexedHeap {
 }
 
 /// The flow network: links + in-flight transfers + exact completion heap.
+///
+/// All link and transfer state lives in parallel SoA columns indexed by
+/// [`LinkId`] / [`TransferId`] (see the module docs on layout).
 #[derive(Debug, Default)]
 pub struct FlowNet {
-    links: Vec<Link>,
-    transfers: Vec<Option<Transfer>>,
+    // ---- links (SoA, indexed by LinkId) ----
+    /// Ideal capacity ν per link (bytes/second).
+    link_cap: Vec<f64>,
+    /// Transfers currently using each link — dense slab-index vecs with
+    /// swap-remove (see the module docs on the active-set layout).
+    active: Vec<Vec<u32>>,
+    /// Pending-rerate flag per link (batched mode).
+    link_dirty: Vec<bool>,
+    /// Last timestamp each link's co-flows were settled at (settling is
+    /// idempotent per timestamp, so repeats within one instant skip).
+    settled_at: Vec<Micros>,
+    // ---- transfers (SoA slab, indexed by TransferId; `free` lists
+    //      dead slots for reuse) ----
+    /// Bytes left to move (hot: settle + rerate).
+    tr_remaining: Vec<f64>,
+    /// Current fair-share rate (hot: settle).
+    tr_rate: Vec<f64>,
+    /// Timestamp progress was last integrated to (hot: settle).
+    tr_updated: Vec<Micros>,
+    /// Flush epoch last rerated in (batched dedup).
+    tr_epoch: Vec<u64>,
+    /// Link path, `[u32::MAX; 3]`-padded (cold: rerate + completion).
+    tr_links: Vec<[u32; 3]>,
+    /// Live prefix length of `tr_links`.
+    tr_nlinks: Vec<u8>,
+    /// Engine-side identity (task id), returned on completion.
+    tr_tag: Vec<u64>,
+    /// Slot liveness (debug-asserted; the free list is authoritative).
+    tr_live: Vec<bool>,
     free: Vec<u32>,
     completions: IndexedHeap,
     /// Cumulative completed transfer count (stats).
@@ -290,20 +306,18 @@ impl FlowNet {
     /// Add a link with the given capacity (bytes/second).
     pub fn add_link(&mut self, capacity_bps: f64) -> LinkId {
         assert!(capacity_bps > 0.0);
-        self.links.push(Link {
-            capacity_bps,
-            active: Vec::new(),
-            dirty: false,
-            settled_at: Micros::ZERO,
-        });
-        LinkId(self.links.len() as u32 - 1)
+        self.link_cap.push(capacity_bps);
+        self.active.push(Vec::new());
+        self.link_dirty.push(false);
+        self.settled_at.push(Micros::ZERO);
+        LinkId(self.link_cap.len() as u32 - 1)
     }
 
     /// Active transfer count on a link (release-safety check). Exact at
     /// all times — membership changes are applied eagerly even in
     /// batched mode.
     pub fn link_active(&self, link: LinkId) -> usize {
-        self.links[link.0 as usize].active.len()
+        self.active[link.0 as usize].len()
     }
 
     /// In-flight transfer count.
@@ -330,20 +344,28 @@ impl FlowNet {
         let id = match self.free.pop() {
             Some(i) => i,
             None => {
-                self.transfers.push(None);
-                self.transfers.len() as u32 - 1
+                let i = self.tr_remaining.len() as u32;
+                self.tr_remaining.push(0.0);
+                self.tr_rate.push(0.0);
+                self.tr_updated.push(Micros::ZERO);
+                self.tr_epoch.push(0);
+                self.tr_links.push([u32::MAX; 3]);
+                self.tr_nlinks.push(0);
+                self.tr_tag.push(0);
+                self.tr_live.push(false);
+                i
             }
         };
-        let t = Transfer {
-            remaining_bytes: bytes as f64,
-            rate_bps: 0.0,
-            last_update: now,
-            links: arr,
-            nlinks: links.len() as u8,
-            tag,
-            epoch: 0,
-        };
-        self.transfers[id as usize] = Some(t);
+        let i = id as usize;
+        debug_assert!(!self.tr_live[i], "slab slot double-booked");
+        self.tr_remaining[i] = bytes as f64;
+        self.tr_rate[i] = 0.0;
+        self.tr_updated[i] = now;
+        self.tr_epoch[i] = 0;
+        self.tr_links[i] = arr;
+        self.tr_nlinks[i] = links.len() as u8;
+        self.tr_tag[i] = tag;
+        self.tr_live[i] = true;
         // Settle existing flows on the affected links (their shares were
         // real until `now`), add us, then re-rate — immediately on the
         // reference path, or at the next query on the batched one.
@@ -351,7 +373,7 @@ impl FlowNet {
             self.settle_link(*l, now);
         }
         for l in links {
-            self.links[l.0 as usize].active.push(id);
+            self.active[l.0 as usize].push(id);
         }
         self.completions.insert(id, Micros::MAX);
         match self.mode {
@@ -385,39 +407,39 @@ impl FlowNet {
         let (t, id) = self.completions.peek().expect("no completion pending");
         debug_assert!(t <= now, "popping future completion {t} at {now}");
         self.completions.remove(id);
-        let (links, tag) = {
-            let tr = self.transfers[id as usize].as_ref().expect("live transfer");
-            let links: Vec<LinkId> = tr.links[..tr.nlinks as usize]
-                .iter()
-                .map(|&l| LinkId(l))
-                .collect();
-            (links, tr.tag)
-        };
+        let i = id as usize;
+        debug_assert!(self.tr_live[i], "live transfer");
+        // Fixed-width path copy — no per-completion Vec.
+        let path = self.tr_links[i];
+        let nl = self.tr_nlinks[i] as usize;
+        let tag = self.tr_tag[i];
         // Settle co-flows while this transfer is still a link member (its
         // share was real until `now`), then remove it and re-rate.
-        for l in &links {
-            self.settle_link(*l, now);
+        for &l in &path[..nl] {
+            self.settle_link(LinkId(l), now);
         }
-        for l in &links {
-            let active = &mut self.links[l.0 as usize].active;
+        for &l in &path[..nl] {
+            let active = &mut self.active[l as usize];
             let pos = active
                 .iter()
                 .position(|&t| t == id)
                 .expect("completing transfer must be active on its links");
             active.swap_remove(pos);
         }
-        self.transfers[id as usize] = None;
+        self.tr_live[i] = false;
         self.free.push(id);
         self.completed += 1;
         match self.mode {
             RerateMode::Reference => {
-                for l in &links {
-                    self.rerate_reference(*l, now);
+                for &l in &path[..nl] {
+                    self.rerate_reference(LinkId(l), now);
                 }
             }
             RerateMode::Batched => {
                 self.stats.batched_events += 1;
-                self.mark_dirty(&links);
+                for &l in &path[..nl] {
+                    self.mark_dirty_one(l);
+                }
             }
         }
         tag
@@ -434,24 +456,21 @@ impl FlowNet {
         let now = self.batch_time;
         let mut dirty = std::mem::take(&mut self.dirty);
         for &l in &dirty {
-            self.links[l as usize].dirty = false;
+            self.link_dirty[l as usize] = false;
         }
         for &l in &dirty {
             // Dense active vec: iterate in place (membership cannot
             // change during a flush; rerating touches rates and the
             // completion heap only).
-            for k in 0..self.links[l as usize].active.len() {
-                let id = self.links[l as usize].active[k];
-                let seen = self.transfers[id as usize]
-                    .as_ref()
-                    .expect("active transfer must live")
-                    .epoch;
-                if seen == self.epoch {
+            for k in 0..self.active[l as usize].len() {
+                let id = self.active[l as usize][k];
+                debug_assert!(self.tr_live[id as usize], "active transfer must live");
+                if self.tr_epoch[id as usize] == self.epoch {
                     self.stats.dedup_skips += 1;
                     continue;
                 }
                 self.rerate_one(id, now);
-                self.transfers[id as usize].as_mut().unwrap().epoch = self.epoch;
+                self.tr_epoch[id as usize] = self.epoch;
             }
         }
         dirty.clear();
@@ -472,36 +491,36 @@ impl FlowNet {
         }
     }
 
+    fn mark_dirty_one(&mut self, l: u32) {
+        if !self.link_dirty[l as usize] {
+            self.link_dirty[l as usize] = true;
+            self.dirty.push(l);
+        }
+    }
+
     fn mark_dirty(&mut self, links: &[LinkId]) {
         for l in links {
-            let lk = &mut self.links[l.0 as usize];
-            if !lk.dirty {
-                lk.dirty = true;
-                self.dirty.push(l.0);
-            }
+            self.mark_dirty_one(l.0);
         }
     }
 
     /// Integrate progress of all transfers on `link` up to `now`.
     /// Idempotent per timestamp: repeats within one instant return
     /// immediately ("settle each touched link once per timestamp").
+    /// The inner loop reads exactly three SoA columns.
     fn settle_link(&mut self, link: LinkId, now: Micros) {
-        {
-            let lk = &mut self.links[link.0 as usize];
-            if lk.settled_at == now {
-                return;
-            }
-            lk.settled_at = now;
+        let li = link.0 as usize;
+        if self.settled_at[li] == now {
+            return;
         }
-        for k in 0..self.links[link.0 as usize].active.len() {
-            let id = self.links[link.0 as usize].active[k];
-            let tr = self.transfers[id as usize]
-                .as_mut()
-                .expect("active transfer must live");
-            if tr.last_update < now {
-                let dt = (now - tr.last_update).as_secs_f64();
-                tr.remaining_bytes = (tr.remaining_bytes - tr.rate_bps * dt).max(0.0);
-                tr.last_update = now;
+        self.settled_at[li] = now;
+        for k in 0..self.active[li].len() {
+            let id = self.active[li][k] as usize;
+            debug_assert!(self.tr_live[id], "active transfer must live");
+            if self.tr_updated[id] < now {
+                let dt = (now - self.tr_updated[id]).as_secs_f64();
+                self.tr_remaining[id] = (self.tr_remaining[id] - self.tr_rate[id] * dt).max(0.0);
+                self.tr_updated[id] = now;
                 self.stats.settles += 1;
             }
         }
@@ -510,23 +529,19 @@ impl FlowNet {
     /// Recompute one transfer's rate and completion key anchored at
     /// `now`. The heap is only touched when the key actually changed.
     fn rerate_one(&mut self, id: u32, now: Micros) {
-        let (rate, remaining) = {
-            let tr = self.transfers[id as usize]
-                .as_ref()
-                .expect("active transfer must live");
-            let mut rate = f64::INFINITY;
-            for &l in &tr.links[..tr.nlinks as usize] {
-                let lk = &self.links[l as usize];
-                rate = rate.min(lk.capacity_bps / lk.active.len().max(1) as f64);
-            }
-            (rate, tr.remaining_bytes)
-        };
+        let i = id as usize;
+        debug_assert!(self.tr_live[i], "active transfer must live");
+        let mut rate = f64::INFINITY;
+        for &l in &self.tr_links[i][..self.tr_nlinks[i] as usize] {
+            let li = l as usize;
+            rate = rate.min(self.link_cap[li] / self.active[li].len().max(1) as f64);
+        }
         debug_assert!(rate.is_finite() && rate > 0.0);
         self.stats.transfer_rerates += 1;
         let done = now
-            .checked_add(Micros::from_secs_f64(remaining / rate))
+            .checked_add(Micros::from_secs_f64(self.tr_remaining[i] / rate))
             .unwrap_or(Micros::MAX);
-        self.transfers[id as usize].as_mut().unwrap().rate_bps = rate;
+        self.tr_rate[i] = rate;
         if self.completions.update_if_changed(id, done) {
             self.stats.heap_updates += 1;
         }
@@ -537,8 +552,8 @@ impl FlowNet {
     /// executable specification the batched flush must agree with
     /// (see `rust/tests/flow_parity.rs`).
     fn rerate_reference(&mut self, link: LinkId, now: Micros) {
-        for k in 0..self.links[link.0 as usize].active.len() {
-            let id = self.links[link.0 as usize].active[k];
+        for k in 0..self.active[link.0 as usize].len() {
+            let id = self.active[link.0 as usize][k];
             self.rerate_one(id, now);
         }
     }
@@ -658,7 +673,7 @@ mod tests {
             }
         }
         assert_eq!(net.completed, 500);
-        assert!(net.transfers.len() <= 8, "slab grew: {}", net.transfers.len());
+        assert!(net.tr_tag.len() <= 8, "slab grew: {}", net.tr_tag.len());
     }
 
     #[test]

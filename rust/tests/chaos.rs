@@ -55,6 +55,13 @@ fn forty_run_sweep_is_oracle_clean_across_policies_and_shards() {
                     "[{policy} K={shards} seed={}] terminal conservation",
                     r.seed
                 );
+                assert_eq!(
+                    r.stale_rejected,
+                    r.tally.count(FaultKind::CorruptCompletion),
+                    "[{policy} K={shards} seed={}] every forged completion \
+                     must bounce off the id tables, and nothing else may",
+                    r.seed
+                );
                 runs += 1;
             }
         }

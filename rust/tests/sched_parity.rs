@@ -543,3 +543,70 @@ fn hot_file_eviction_churn_stays_bounded_with_identical_dispatch() {
         }
     }
 }
+
+/// Slab-growth regression (the arena/SoA satellite): 2.4K queued tasks
+/// while executors repeatedly leave and rejoin. Each deregistration
+/// parks the freed candidate set — cleared, capacity intact — in the
+/// pool, and every rejoin must recycle a pooled set instead of
+/// allocating a fresh one, so the capacity-based table footprint
+/// plateaus after a warm-up instead of growing one slab per churn
+/// cycle. Dispatch parity is re-checked inside every cycle, so the
+/// recycling cannot buy its bound by perturbing decisions.
+#[test]
+fn slab_footprint_plateaus_under_leave_rejoin_churn() {
+    let n_exec = 4usize;
+    let mut sc = Scenario::new(DispatchPolicy::MaxComputeUtil, n_exec, 100);
+    let execs = sc.execs.clone();
+    let hot = FileId(0);
+    for i in 0..2_400u64 {
+        let f = if i % 8 == 7 {
+            FileId(1 + (i % 13) as u32)
+        } else {
+            hot
+        };
+        sc.push_task(vec![f]);
+    }
+    let cycles = 12usize;
+    let warm_up = 6usize;
+    let mut plateau = (0u64, 0u64);
+    for cycle in 0..cycles {
+        // Executors 1..n leave (their candidate sets park in the pool)…
+        for &e in &execs[1..] {
+            sc.pending.on_deregister(e);
+            sc.mirror.on_deregister(e);
+        }
+        // …and rejoin through real index events against the hot file,
+        // which re-registers their candidate state (pool first).
+        for &e in &execs[1..] {
+            sc.index_add(hot, e);
+            sc.index_remove(hot, e);
+        }
+        // Dispatch must stay bit-identical to the reference mid-churn.
+        sc.check_pickup(0, 1)
+            .unwrap_or_else(|e| panic!("cycle {cycle}: {e}"));
+        let bytes = (sc.pending.table_bytes(), sc.mirror.table_bytes());
+        if cycle < warm_up {
+            plateau = (plateau.0.max(bytes.0), plateau.1.max(bytes.1));
+        } else {
+            assert!(
+                bytes.0 <= plateau.0 && bytes.1 <= plateau.1,
+                "cycle {cycle}: table footprint still growing after warm-up \
+                 (lazy {} vs plateau {}, eager {} vs plateau {}) — rejoins \
+                 are allocating instead of recycling pooled sets",
+                bytes.0,
+                plateau.0,
+                bytes.1,
+                plateau.1
+            );
+        }
+    }
+    assert!(
+        sc.pending.stats.slab_reuse > 0,
+        "leave/rejoin churn never recycled a pooled candidate set"
+    );
+    assert_eq!(
+        sc.pending.stats.slab_reuse, sc.mirror.stats.slab_reuse,
+        "both flavors see the same churn, so reuse counts must agree"
+    );
+    sc.consistent().unwrap();
+}

@@ -21,7 +21,10 @@ checks only quantities that noise cannot fake:
    dead-hint purge path must stay live (pending/dead_hints_purged > 0 —
    the bench's leave-queue phase deterministically creates dead hints, so
    a zero means lazily-dropped candidates are leaking instead of being
-   purged on encounter).
+   purged on encounter), and candidate-set recycling must stay live
+   (pending/slab_reuse > 0 — the bench's leave/rejoin churn parks freed
+   sets in the pool, so a zero means every re-registration allocates a
+   fresh set and the slab grows without bound under provisioner churn).
 3. *Sharded-router accounting* (fresh snapshot only): the K=4 bench
    fixture submits cross-shard pair tasks, so shard/cross_fetches must be
    > 0 (a zero means the router stopped rewriting GPFS misses into
@@ -55,6 +58,15 @@ checks only quantities that noise cannot fake:
    model/deadband_holds is reported for visibility, and
    model/target_changes_per_decision rides the baseline drift rule
    below (a churn spike means the deadband stopped damping).
+3e. *Million-task scale drive* (fresh snapshot only): the arena/SoA
+   scale group must run and stay within its allocation budget —
+   scale/events_per_sec must be present and positive (a wall-clock
+   throughput, reported but not compared across machines),
+   scale/allocs_per_event (scratch-pool misses per handler event, a
+   deterministic recycling-regression proxy) must stay below
+   SCALE_ALLOC_RATE_MAX, and scale/peak_table_bytes must be positive
+   (a zero means the arena tables report no footprint, i.e. the
+   accounting went dead).
 4. *Deterministic work counters* (fresh vs committed baseline): tasks
    inspected per pickup, boundary-cursor steps, flow rerates per event,
    pending maintenance ops per event, dead hints purged per event, notify
@@ -81,6 +93,11 @@ import sys
 SPEEDUP_TOLERANCE = 0.90  # "indexed >= reference" may sag to 0.9x on noise
 WORK_RATIO_TOLERANCE = 1.05  # batched work must stay <= 1.05x reference
 COUNTER_DRIFT = 1.5  # fresh counter may drift to 1.5x baseline
+# The scale drive recycles every effect Vec through the core's scratch
+# pool, so allocs_per_event sits near 1e-5 (pool warm-up only). 0.05
+# still passes a cold pool on the CI quick fixture; a recycling
+# regression jumps straight to ~1.0 (one fresh Vec per event).
+SCALE_ALLOC_RATE_MAX = 0.05
 
 
 class GateFailure(Exception):
@@ -164,6 +181,7 @@ def run_gate(fresh, baseline):
         "pending/epoch_rebuilds",
         "pending/dead_hints_purged",
         "pending/dead_hints_purged_per_event",
+        "pending/slab_reuse",
         "notify/holder_recounts",
     ):
         if key not in counters:
@@ -191,6 +209,15 @@ def run_gate(fresh, baseline):
             "pending/dead_hints_purged is 0: the bench's leave-queue phase "
             "deterministically creates dead hints, so the purge-on-encounter "
             "path has stopped firing (lazily-dropped candidates are leaking)"
+        )
+    slab_reuse = counters["pending/slab_reuse"]
+    print(f"bench-gate: pending slab reuse = {slab_reuse:g}")
+    if slab_reuse <= 0:
+        fail(
+            "pending/slab_reuse is 0: the bench's leave/rejoin churn "
+            "deterministically parks freed candidate sets in the pool, so "
+            "re-registration has stopped recycling them (every rejoin "
+            "allocates a fresh set)"
         )
 
     # --- 2c. sharded-router cross-fetch accounting (within-run). --------
@@ -309,6 +336,39 @@ def run_gate(fresh, baseline):
             "router's pressure-weighted quota apportionment has gone dead"
         )
 
+    # --- 2g. million-task scale-drive accounting (within-run). ----------
+    for key in (
+        "scale/events_per_sec",
+        "scale/allocs_per_event",
+        "scale/peak_table_bytes",
+    ):
+        if key not in counters:
+            fail(f"missing counter {key}")
+    events_per_sec = counters["scale/events_per_sec"]
+    allocs_per_event = counters["scale/allocs_per_event"]
+    peak_table_bytes = counters["scale/peak_table_bytes"]
+    print(
+        f"bench-gate: scale drive = {events_per_sec:g} events/s, "
+        f"{allocs_per_event:g} allocs/event, peak tables = "
+        f"{peak_table_bytes:g} bytes"
+    )
+    if events_per_sec <= 0:
+        fail(
+            "scale/events_per_sec is 0: the million-task drive processed no "
+            "events, so the arena/SoA hot path was never exercised at scale"
+        )
+    if allocs_per_event > SCALE_ALLOC_RATE_MAX:
+        fail(
+            f"scale/allocs_per_event = {allocs_per_event:g} exceeds "
+            f"{SCALE_ALLOC_RATE_MAX}: the effect path is allocating per "
+            "event again (scratch-pool recycling regressed)"
+        )
+    if peak_table_bytes <= 0:
+        fail(
+            "scale/peak_table_bytes is 0: the arena tables report no "
+            "footprint, so table_bytes() accounting went dead"
+        )
+
     # --- 3. inspected-per-pickup sanity (within-run). -------------------
     for policy in ("max-compute-util", "good-cache-compute"):
         key = f"inspected_per_pickup/{policy}"
@@ -375,6 +435,7 @@ def synthetic_fresh():
         "pending/epoch_rebuilds": 1.0,
         "pending/dead_hints_purged": 8.0,
         "pending/dead_hints_purged_per_event": 0.004,
+        "pending/slab_reuse": 4.0,
         "notify/holder_recounts": 0.0,
         "notify/memo_builds": 2.0,
         "notify/memo_hits_per_decision": 0.9,
@@ -394,6 +455,9 @@ def synthetic_fresh():
         "model/deadband_holds": 10.0,
         "model/target_changes_per_decision": 0.025,
         "model/shard_rebalances": 4.0,
+        "scale/events_per_sec": 2_000_000.0,
+        "scale/allocs_per_event": 0.0001,
+        "scale/peak_table_bytes": 5e7,
     }
     for concurrency in (16, 128):
         for metric in ("rerates", "heap_updates"):
@@ -462,6 +526,9 @@ def self_test():
     def missing_dead_hint_counter(s):
         del s["counters"]["pending/dead_hints_purged_per_event"]
 
+    def slab_pool_dead(s):
+        s["counters"]["pending/slab_reuse"] = 0.0
+
     def window_scan_regression(s):
         s["counters"]["inspected_per_pickup/max-compute-util"] = 6400.0
 
@@ -516,6 +583,18 @@ def self_test():
     def target_churn_drifts(s):
         s["counters"]["model/target_changes_per_decision"] = 0.025 * 2.0
 
+    def missing_scale_counter(s):
+        del s["counters"]["scale/peak_table_bytes"]
+
+    def scale_drive_never_ran(s):
+        s["counters"]["scale/events_per_sec"] = 0.0
+
+    def scale_allocates_per_event(s):
+        s["counters"]["scale/allocs_per_event"] = 1.0
+
+    def table_accounting_dead(s):
+        s["counters"]["scale/peak_table_bytes"] = 0.0
+
     cases = [
         ("indexed pickup slower than reference", slow_indexed),
         ("non-finite case mean", nan_mean),
@@ -525,6 +604,7 @@ def self_test():
         ("holder overlap recounted", holder_recount),
         ("dead-hint purge path dead", dead_hint_leak),
         ("missing dead-hint counter", missing_dead_hint_counter),
+        ("slab pool recycling dead", slab_pool_dead),
         ("pickup tracks the window again", window_scan_regression),
         ("ratio counter drifts past baseline", counter_drift),
         ("missing shard counter", missing_shard_counter),
@@ -543,6 +623,10 @@ def self_test():
         ("shard quota rebalancing dead", shard_rebalancing_dead),
         ("missing model counter", missing_model_counter),
         ("target churn drifts past baseline", target_churn_drifts),
+        ("missing scale counter", missing_scale_counter),
+        ("scale drive never ran", scale_drive_never_ran),
+        ("scale drive allocates per event", scale_allocates_per_event),
+        ("arena table accounting dead", table_accounting_dead),
     ]
     for label, mutate in cases:
         mutated(label, mutate)
