@@ -104,10 +104,10 @@ fn real_main() -> datadiffusion::Result<()> {
     let zipf = Zipf::new(NUM_OBJECTS, 0.9);
     for _ in 0..NUM_TASKS {
         let obj = zipf.sample(&mut rng);
-        tasks.push(LiveTask {
-            file_name: format!("object-{obj}.stack"),
-            file: FileId(obj as u32),
-        });
+        tasks.push(LiveTask::single(
+            format!("object-{obj}.stack"),
+            FileId(obj as u32),
+        ));
     }
 
     // --- 2. Sanity-check the compute path once, against a Rust oracle.
@@ -154,6 +154,8 @@ fn real_main() -> datadiffusion::Result<()> {
         compute: ComputeKind::Stacking,
         seed: 42,
         idle_release_s: 0.0,
+        shards: 1,
+        faults: live::LiveFaults::default(),
     };
     println!(
         "running {NUM_TASKS} stacking tasks through the live engine \

@@ -55,6 +55,7 @@ fn main() {
         bench_cache(),
         bench_flownet(&mut counters),
         bench_sharded_router(&mut counters),
+        bench_live(&mut counters),
         bench_chaos(&mut counters),
         bench_scenario_generation(&mut counters),
         bench_model_controller(&mut counters),
@@ -691,6 +692,117 @@ fn bench_sharded_router(counters: &mut Vec<(String, f64)>) -> Bench {
         "shard/cross_fetches_per_task".into(),
         c.cross_fetches_per_task(),
     ));
+    let _ = b.write_csv();
+    b
+}
+
+/// The sharded live engine end-to-end: K=2 real worker pools behind the
+/// router over an on-disk dataset, with one multi-input task per shard
+/// whose secondary file is homed on the *other* shard — every run
+/// performs real cross-shard worker-to-worker copies. Wall time tracks
+/// thread/filesystem overhead per run; the deterministic `live/*`
+/// counters feed the CI gate (every shard's pool must be staffed,
+/// cross-shard copies must move real bytes).
+fn bench_live(counters: &mut Vec<(String, f64)>) -> Bench {
+    use datadiffusion::live::{self, ComputeKind, LiveConfig, LiveFaults, LiveTask};
+    let mut b = Bench::new("live engine (K=2 sharded worker pools)")
+        .samples(2)
+        .min_sample_duration(std::time::Duration::from_millis(1));
+
+    const K: usize = 2;
+    const BYTES: u64 = 4096;
+    // The router's home hash is a pure function of K: probe it for one
+    // file id per shard.
+    let probe = ShardedCoordinator::new(
+        CoreConfig {
+            scheduler: SchedulerConfig::default(),
+            provisioner: ProvisionerConfig::default(),
+            cache: CacheConfig::lru(1 << 20),
+            max_nodes: K,
+            slots_per_node: 1,
+            file_sizes: FileSizes::Uniform(BYTES),
+        },
+        K,
+        Pcg64::seeded(1),
+    );
+    let mut homes: Vec<Option<FileId>> = vec![None; K];
+    for raw in 0..4096u32 {
+        let f = FileId(raw);
+        let s = probe.shard_of_file(f);
+        if homes[s].is_none() {
+            homes[s] = Some(f);
+        }
+        if homes.iter().all(Option::is_some) {
+            break;
+        }
+    }
+    let homes: Vec<FileId> = homes.into_iter().map(|h| h.expect("home file")).collect();
+
+    let root = std::env::temp_dir().join(format!("dd-bench-live-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let store = root.join("store");
+    std::fs::create_dir_all(&store).expect("store dir");
+    let name_of = |f: FileId| format!("f{}.bin", f.0);
+    for &f in &homes {
+        std::fs::write(store.join(name_of(f)), vec![f.0 as u8; BYTES as usize])
+            .expect("dataset");
+    }
+    // Singles seed each shard's cache; the trailing pairs then chain a
+    // fetch of the other shard's (cached) file — a cross-shard copy.
+    let mut tasks: Vec<LiveTask> = Vec::new();
+    for _ in 0..3 {
+        for &f in &homes {
+            tasks.push(LiveTask::single(name_of(f), f));
+        }
+    }
+    for s in 0..K {
+        let foreign = homes[(s + 1) % K];
+        tasks.push(LiveTask {
+            file_name: name_of(homes[s]),
+            file: homes[s],
+            extra: vec![(foreign, name_of(foreign))],
+        });
+    }
+    let cfg_for = |cache_root: std::path::PathBuf| LiveConfig {
+        initial_workers: K,
+        max_workers: K,
+        queue_tasks_per_worker: usize::MAX >> 8,
+        allocation: AllocationPolicy::OneAtATime,
+        policy: DispatchPolicy::GoodCacheCompute,
+        cache: CacheConfig::lru(1 << 20),
+        persistent_dir: store.clone(),
+        cache_root,
+        compute: ComputeKind::Sleep(std::time::Duration::from_millis(2)),
+        seed: 77,
+        idle_release_s: 0.0,
+        shards: K,
+        faults: LiveFaults::default(),
+    };
+    let mut runs = 0u64;
+    b.iter("sharded live run (8 tasks, 2 pools)", 1, || {
+        runs += 1;
+        let r = live::run(&cfg_for(root.join(format!("c{runs}"))), &tasks)
+            .expect("live bench run");
+        black_box(r.completed);
+    });
+
+    // Deterministic pass: one more run feeds the gated counters.
+    let report = live::run(&cfg_for(root.join("final")), &tasks).expect("live bench run");
+    assert_eq!(report.completed, tasks.len() as u64, "live bench lost tasks");
+    assert!(
+        report.shard.cross_fetches > 0,
+        "live bench produced no cross-shard copies"
+    );
+    let min_pool = report.workers_per_shard.iter().copied().min().unwrap_or(0);
+    println!(
+        "    {} tasks, {} cross fetches moving {} bytes, pools {:?}",
+        report.completed, report.shard.cross_fetches, report.shard.cross_bytes,
+        report.workers_per_shard
+    );
+    counters.push(("live/workers_per_shard".into(), min_pool as f64));
+    counters.push(("live/cross_copy_bytes".into(), report.shard.cross_bytes as f64));
+    counters.push(("live/cross_fetches".into(), report.shard.cross_fetches as f64));
+    let _ = std::fs::remove_dir_all(&root);
     let _ = b.write_csv();
     b
 }

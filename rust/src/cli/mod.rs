@@ -7,7 +7,10 @@
 //!   experiment and print its summary view;
 //! * `figures [--scale X] [--quick] [--jobs N] [--check]` — regenerate
 //!   every paper figure (2–15) plus the §6 sweeps through the figure
-//!   registry, fanning independent runs out across `N` workers;
+//!   registry, fanning independent runs out across `N` workers; with
+//!   `--emit-shards DIR [--shards K]` it instead writes one recorder
+//!   snapshot per coordinator shard, and `--merge DIR` recombines the
+//!   envelopes losslessly (docs/LIVE.md);
 //! * `fig2|fig3|fig4-10|fig11|fig12|fig13|fig14|fig15|sweeps` —
 //!   regenerate a single figure (same flags);
 //! * `validate-model [--pjrt]` — model-vs-simulator validation, with
@@ -44,6 +47,12 @@ USAGE:
                [--cache random|fifo|lru|lfu]
   datadiff figures [--scale X] [--quick] [--jobs N] [--check]
                                        regenerate Figures 2-15 + sweeps
+  datadiff figures --emit-shards DIR [--shards K] [--scale X] [--quick]
+                                       run Figures 4-10 and write one
+                                       recorder snapshot per coordinator
+                                       shard (JSON-lines envelopes)
+  datadiff figures --merge DIR         recombine emitted snapshots and
+                                       print the merged summary table
   datadiff fig2|fig3|fig4-10|fig11|fig12|fig13|fig14|fig15|sweeps
                                        one figure (same flags as figures)
   datadiff scenarios [--name N] [--quick] [--scale X] [--jobs N] [--check]
@@ -73,7 +82,12 @@ the coordinator K ways behind a router (task stream partitioned by
 dominant-file hash, executors assigned per shard, GPFS misses rewritten
 into cross-shard peer fetches — docs/SHARDING.md); K=1 (default) is
 bit-identical to the single coordinator, and sharded runs print the
-shard/* counter block after the summary.
+shard/* counter block after the summary. figures --emit-shards DIR runs
+the Figure 4-10 set and writes each coordinator shard's recorder as a
+JSON-lines snapshot envelope (one file per shard); figures --merge DIR
+reads the envelopes back and recombines them losslessly, so the merged
+summary is bit-identical to the in-process run — the file transport a
+multi-process coordinator deployment rides on (docs/LIVE.md).
 
 chaos runs a seeded fault-injection schedule (dropped/delayed/reordered
 notifications, executors killed mid-fetch/mid-compute, stalled and partial
@@ -120,6 +134,15 @@ pub enum Command {
         jobs: Option<usize>,
         /// Fail on NaN cells / empty tables (the CI smoke gate).
         check: bool,
+        /// Coordinator shards for `--emit-shards` runs (None = preset).
+        shards: Option<usize>,
+        /// Run Figures 4-10 and write one recorder snapshot per
+        /// coordinator shard into this directory (JSON-lines envelopes,
+        /// docs/LIVE.md) instead of printing tables.
+        emit_shards: Option<std::path::PathBuf>,
+        /// Recombine previously emitted snapshots from this directory
+        /// and print the merged summary table.
+        merge: Option<std::path::PathBuf>,
     },
     /// Model validation.
     ValidateModel {
@@ -178,6 +201,7 @@ pub fn parse(args: &[String]) -> Result<Command> {
                 name,
                 "fig" | "config" | "view" | "scale" | "jobs" | "allocation" | "shards"
                     | "seed" | "events" | "policy" | "sweep" | "name" | "cache" | "scenario"
+                    | "emit-shards" | "merge"
             );
             let value = if takes_value {
                 Some(
@@ -242,22 +266,48 @@ pub fn parse(args: &[String]) -> Result<Command> {
             })
         }
         "figures" => {
-            reject_shards_flag(&get)?;
+            let emit_shards = get("emit-shards").flatten().map(std::path::PathBuf::from);
+            let merge = get("merge").flatten().map(std::path::PathBuf::from);
+            if emit_shards.is_some() && merge.is_some() {
+                return Err(Error::config(
+                    "--emit-shards and --merge are mutually exclusive",
+                ));
+            }
+            let shards = match get("shards") {
+                Some(Some(s)) => Some(parse_positive(s, "shards")?),
+                _ => None,
+            };
+            // `--shards` is meaningful here only as the fan-out width of
+            // an `--emit-shards` run; otherwise keep the loud rejection.
+            if shards.is_some() && emit_shards.is_none() {
+                reject_shards_flag(&get)?;
+            }
             Ok(Command::Figures {
                 which: "all".into(),
                 scale: parse_figures_scale(&get)?,
                 jobs: parse_jobs(get("jobs"))?,
                 check: get("check").is_some(),
+                shards,
+                emit_shards,
+                merge,
             })
         }
         "fig2" | "fig3" | "fig4-10" | "fig11" | "fig12" | "fig13" | "fig14" | "fig15"
         | "sweeps" => {
             reject_shards_flag(&get)?;
+            if get("emit-shards").is_some() || get("merge").is_some() {
+                return Err(Error::config(
+                    "--emit-shards/--merge apply to `figures` only",
+                ));
+            }
             Ok(Command::Figures {
                 which: cmd.trim_start_matches("fig").into(),
                 scale: parse_figures_scale(&get)?,
                 jobs: parse_jobs(get("jobs"))?,
                 check: get("check").is_some(),
+                shards: None,
+                emit_shards: None,
+                merge: None,
             })
         }
         "validate-model" => Ok(Command::ValidateModel {
@@ -404,8 +454,17 @@ pub fn execute(cmd: Command) -> Result<i32> {
             scale,
             jobs,
             check,
+            shards,
+            emit_shards,
+            merge,
         } => {
-            run_figures(&which, scale, jobs, check)?;
+            if let Some(dir) = merge {
+                run_merge(&dir)?;
+            } else if let Some(dir) = emit_shards {
+                run_emit_shards(scale, shards, &dir)?;
+            } else {
+                run_figures(&which, scale, jobs, check)?;
+            }
             Ok(0)
         }
         Command::ValidateModel { pjrt } => {
@@ -641,6 +700,63 @@ fn print_shard_counters(shard: &crate::metrics::ShardCounters) {
     }
 }
 
+/// `datadiff figures --emit-shards DIR`: run the Figure 4-10 experiment
+/// set (at `--scale`, optionally re-sharded to `--shards K`) and write
+/// one recorder snapshot envelope per coordinator shard — the file leg
+/// of the shard fan-out/merge transport (docs/LIVE.md).
+fn run_emit_shards(scale: f64, shards: Option<usize>, dir: &std::path::Path) -> Result<()> {
+    let mut cfgs = experiments::fig04_10::configs(scale);
+    if let Some(k) = shards {
+        for c in &mut cfgs {
+            c.cluster.shards = k;
+        }
+    }
+    // Validate up front so a bad --shards value is a clean CLI error.
+    for c in &cfgs {
+        c.validate()?;
+    }
+    let paths = experiments::shardio::emit_shards(&cfgs, dir)?;
+    println!("wrote {} shard snapshot(s) under {}", paths.len(), dir.display());
+    Ok(())
+}
+
+/// `datadiff figures --merge DIR`: recombine emitted shard snapshots
+/// (lossless `Recorder::absorb`) and print one merged summary row per
+/// run — bit-identical to the same run merged in-process.
+fn run_merge(dir: &std::path::Path) -> Result<()> {
+    use crate::report::{f, pct, Table};
+    let merged = experiments::shardio::merge_dir(dir)?;
+    let mut t = Table::new(
+        "merged shard snapshots",
+        &[
+            "run",
+            "shards",
+            "WET(s)",
+            "eff",
+            "hit-local",
+            "hit-global",
+            "miss",
+            "tasks",
+        ],
+    );
+    for m in &merged {
+        let s = m.recorder.summarize(m.ideal_wet_s);
+        t.row(vec![
+            m.name.clone(),
+            m.shards.to_string(),
+            f(s.workload_execution_time_s, 0),
+            pct(s.efficiency),
+            pct(s.hit_local_rate),
+            pct(s.hit_global_rate),
+            pct(s.miss_rate),
+            s.tasks_completed.to_string(),
+        ]);
+    }
+    t.print();
+    println!("merged {} run(s) from {}", merged.len(), dir.display());
+    Ok(())
+}
+
 fn run_figures(which: &str, scale: f64, jobs: Option<usize>, check: bool) -> Result<()> {
     let ids: Vec<&str> = match which {
         // `figures` keeps its paper-reproduction contract: the workload
@@ -824,11 +940,15 @@ mod tests {
                 scale,
                 jobs,
                 check,
+                shards,
+                emit_shards,
+                merge,
             } => {
                 assert_eq!(which, "all");
                 assert!((scale - QUICK_SCALE).abs() < 1e-12);
                 assert_eq!(jobs, Some(4));
                 assert!(check);
+                assert!(shards.is_none() && emit_shards.is_none() && merge.is_none());
             }
             other => panic!("{other:?}"),
         }
@@ -843,6 +963,44 @@ mod tests {
         ));
         assert!(parse(&args("figures --jobs 0")).is_err());
         assert!(parse(&args("figures --jobs many")).is_err());
+    }
+
+    #[test]
+    fn parses_figures_emit_and_merge() {
+        use std::path::Path;
+        // --shards is allowed alongside --emit-shards (it is the
+        // fan-out width of the emitted runs)…
+        match parse(&args("figures --quick --emit-shards out --shards 4")).unwrap() {
+            Command::Figures {
+                shards,
+                emit_shards,
+                merge,
+                ..
+            } => {
+                assert_eq!(shards, Some(4));
+                assert_eq!(emit_shards.as_deref(), Some(Path::new("out")));
+                assert!(merge.is_none());
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse(&args("figures --merge out")).unwrap() {
+            Command::Figures {
+                emit_shards, merge, ..
+            } => {
+                assert!(emit_shards.is_none());
+                assert_eq!(merge.as_deref(), Some(Path::new("out")));
+            }
+            other => panic!("{other:?}"),
+        }
+        // …but stays rejected without it (see parses_run_shards_override),
+        // and the modes are mutually exclusive.
+        assert!(parse(&args("figures --emit-shards out --merge out")).is_err());
+        assert!(parse(&args("figures --emit-shards out --shards 0")).is_err());
+        assert!(parse(&args("figures --emit-shards")).is_err());
+        assert!(parse(&args("figures --merge")).is_err());
+        // Single-figure commands reject the transport flags loudly.
+        assert!(parse(&args("fig4-10 --emit-shards out")).is_err());
+        assert!(parse(&args("fig14 --merge out")).is_err());
     }
 
     #[test]

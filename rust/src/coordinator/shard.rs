@@ -816,6 +816,19 @@ impl ShardedCoordinator {
         merged
     }
 
+    /// Take every shard's recorder *unmerged*, in shard order — the
+    /// emit-shards seam (`figures --emit-shards`, docs/LIVE.md). Each
+    /// entry is exactly what [`ShardedCoordinator::take_merged_recorder`]
+    /// would have absorbed, so absorbing the returned recorders into a
+    /// fresh one in order reproduces the merged view bit-for-bit
+    /// (`Recorder::absorb` is lossless and absorb-into-fresh is exact).
+    pub fn take_shard_recorders(&mut self) -> Vec<Recorder> {
+        self.cores
+            .iter_mut()
+            .map(|core| std::mem::take(&mut core.rec))
+            .collect()
+    }
+
     /// Take the router tallies (call after
     /// [`ShardedCoordinator::take_dispatch_log`], which fills the
     /// per-shard dispatch counts).

@@ -23,6 +23,7 @@ pub mod fig14;
 pub mod fig15;
 pub mod registry;
 pub mod scenarios;
+pub mod shardio;
 pub mod sweeps;
 
 pub use registry::{run_all_figures, FigureOutput};

@@ -1,0 +1,198 @@
+//! File-based shard fan-out/merge (ROADMAP item 1, step 1).
+//!
+//! A sharded run's per-shard [`Recorder`]s can leave the process as
+//! JSON-lines snapshot envelopes ([`crate::metrics::snapshot`]) and be
+//! recombined later — the transport seam a multi-process coordinator
+//! deployment needs. [`emit_shards`] runs experiment configs through
+//! the simulator and writes one `NAME.shard-I.jsonl` file per
+//! coordinator shard; [`merge_dir`] reads a directory of envelopes back
+//! and recombines each run via the lossless [`Recorder::absorb`], so a
+//! merged run's summary is **bit-identical** to the same run merged
+//! in-process (asserted by `rust/tests/integration.rs`).
+
+use crate::config::{ConfigError, ExperimentConfig};
+use crate::metrics::snapshot::{self, SnapshotMeta};
+use crate::metrics::Recorder;
+use crate::sim;
+use crate::workload;
+use crate::Result;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One run recombined from its per-shard snapshot envelopes.
+#[derive(Debug)]
+pub struct MergedRun {
+    /// Experiment name (shared by all shard files of the run).
+    pub name: String,
+    /// Coordinator shard count the run was recorded with.
+    pub shards: usize,
+    /// Ideal workload execution time carried through the envelopes, so
+    /// the merge side can summarize without re-deriving the workload.
+    pub ideal_wet_s: f64,
+    /// The losslessly recombined recorder.
+    pub recorder: Recorder,
+}
+
+/// The engine's ideal-WET derivation (see `sim::engine::run`): scenario
+/// workloads read it off the generated DAG, flat workloads keep the
+/// closed form.
+fn ideal_wet_s(cfg: &ExperimentConfig) -> f64 {
+    if cfg.workload.scenario.is_some() {
+        workload::generate(&cfg.workload, cfg.seed).ideal_execution_time_s()
+    } else {
+        workload::ideal_execution_time_s(&cfg.workload)
+    }
+}
+
+/// Run each config and write one snapshot envelope per coordinator
+/// shard into `dir` (created if missing) as `NAME.shard-I.jsonl`.
+/// Returns the written paths in run order, shard-major.
+pub fn emit_shards(cfgs: &[ExperimentConfig], dir: &Path) -> Result<Vec<PathBuf>> {
+    std::fs::create_dir_all(dir)?;
+    let mut written = Vec::new();
+    for cfg in cfgs {
+        let ideal = ideal_wet_s(cfg);
+        let (result, shard_recs) = sim::run_with_shard_recorders(cfg);
+        let k = shard_recs.len();
+        crate::info!("`{}`: emitting {k} shard snapshot(s)", result.name);
+        for (i, rec) in shard_recs.iter().enumerate() {
+            let meta = SnapshotMeta {
+                run: result.name.clone(),
+                shard: i,
+                shards: k,
+                ideal_wet_s: ideal,
+            };
+            let path = dir.join(format!("{}.shard-{i}.jsonl", result.name));
+            std::fs::write(&path, snapshot::to_jsonl(&meta, rec))?;
+            written.push(path);
+        }
+    }
+    Ok(written)
+}
+
+/// Read every `*.jsonl` envelope under `dir`, group by run name, and
+/// recombine each run's shards with [`Recorder::absorb`]. Returns runs
+/// in name order. Incomplete shard sets, duplicate shards, and
+/// disagreeing metadata are typed [`ConfigError`]s, never panics.
+pub fn merge_dir(dir: &Path) -> Result<Vec<MergedRun>> {
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .collect::<std::io::Result<Vec<_>>>()?
+        .into_iter()
+        .map(|e| e.path())
+        .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("jsonl"))
+        .collect();
+    paths.sort();
+    if paths.is_empty() {
+        return Err(ConfigError::MissingKey {
+            key: "*.jsonl".into(),
+            context: format!("no shard snapshots in {}", dir.display()),
+        }
+        .into());
+    }
+    let mut runs: BTreeMap<String, Vec<(SnapshotMeta, Recorder)>> = BTreeMap::new();
+    for path in &paths {
+        let text = std::fs::read_to_string(path)?;
+        let (meta, rec) = snapshot::from_jsonl(&text)?;
+        runs.entry(meta.run.clone()).or_default().push((meta, rec));
+    }
+    let mut out = Vec::new();
+    for (name, mut parts) in runs {
+        parts.sort_by_key(|(m, _)| m.shard);
+        let shards = parts[0].0.shards;
+        let ideal_bits = parts[0].0.ideal_wet_s.to_bits();
+        let ok = parts.len() == shards
+            && parts.iter().enumerate().all(|(i, (m, _))| {
+                m.shard == i && m.shards == shards && m.ideal_wet_s.to_bits() == ideal_bits
+            });
+        if !ok {
+            let found: Vec<usize> = parts.iter().map(|(m, _)| m.shard).collect();
+            return Err(ConfigError::Invariant {
+                field: "snapshot set".into(),
+                message: format!(
+                    "run `{name}` promises {shards} shard(s) but the directory \
+                     holds shards {found:?} (missing, duplicate, or mixed-run files)"
+                ),
+            }
+            .into());
+        }
+        let mut recorder = Recorder::new();
+        for (_, r) in parts {
+            recorder.absorb(r);
+        }
+        out.push(MergedRun {
+            name,
+            shards,
+            ideal_wet_s: f64::from_bits(ideal_bits),
+            recorder,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::DispatchPolicy;
+    use crate::experiments::tests::tiny_cfg;
+
+    fn tmp(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("dd-shardio-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        p
+    }
+
+    #[test]
+    fn emit_then_merge_matches_in_process_run() {
+        let mut cfg = tiny_cfg("shardio-rt", DispatchPolicy::GoodCacheCompute);
+        cfg.cluster.shards = 2;
+        let dir = tmp("rt");
+        let paths = emit_shards(std::slice::from_ref(&cfg), &dir).expect("emit");
+        assert_eq!(paths.len(), 2, "one envelope per shard");
+        let merged = merge_dir(&dir).expect("merge");
+        assert_eq!(merged.len(), 1);
+        let m = &merged[0];
+        assert_eq!(m.name, "shardio-rt");
+        assert_eq!(m.shards, 2);
+
+        let reference = sim::run(&cfg);
+        assert_eq!(m.recorder.access_counts(), reference.access_counts);
+        let s = m.recorder.summarize(m.ideal_wet_s);
+        assert_eq!(
+            format!("{s:?}"),
+            format!("{:?}", reference.summary),
+            "file-merged summary must be bit-identical to the in-process one"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_shard_is_a_typed_error() {
+        let mut cfg = tiny_cfg("shardio-miss", DispatchPolicy::FirstAvailable);
+        cfg.cluster.shards = 2;
+        let dir = tmp("miss");
+        let paths = emit_shards(std::slice::from_ref(&cfg), &dir).expect("emit");
+        std::fs::remove_file(&paths[1]).unwrap();
+        let err = merge_dir(&dir).expect_err("incomplete set must fail");
+        assert!(
+            matches!(
+                err,
+                crate::Error::Config(ConfigError::Invariant { ref field, .. })
+                    if field == "snapshot set"
+            ),
+            "unexpected error: {err:?}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_dir_is_a_typed_error() {
+        let dir = tmp("empty");
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = merge_dir(&dir).expect_err("empty dir must fail");
+        assert!(matches!(
+            err,
+            crate::Error::Config(ConfigError::MissingKey { .. })
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,55 +1,72 @@
-//! Live execution engine: the coordinator driving *real* work.
+//! Live execution engine: the sharded coordinator driving *real* work.
 //!
 //! Where [`crate::sim`] substitutes the testbed, this engine drives the
-//! **same** [`CoordinatorCore`] — wait queue, data-aware scheduler,
-//! location index, per-executor caches, demand-driven provisioner — over
-//! real worker threads that move real files and run real compute. The
-//! module is a *driver*: it enacts the core's [`Effect`]s on the wall
-//! clock and the filesystem and feeds worker outcomes back into the
-//! core's event API; it contains no dispatch logic of its own
-//! (`rust/tests/core_parity.rs` proves both drivers replay identical
-//! decision sequences on a shared deterministic workload):
+//! **same** [`ShardedCoordinator`] — K coordinator cores behind the
+//! hash router, each with its wait queue, data-aware scheduler,
+//! location index, per-executor caches and demand-driven provisioner —
+//! over real worker threads that move real files and run real compute.
+//! The module is a *driver*: it enacts the router's [`Effect`]s on the
+//! wall clock and the filesystem and feeds worker outcomes back into
+//! the router's event API; it contains no dispatch logic of its own
+//! (`rust/tests/live_parity.rs` proves the K=1 live driver replays the
+//! bare core's decision sequence bit-for-bit on a shared deterministic
+//! workload, and that K=4 runs conserve every tally):
 //!
 //! * [`Effect::Notify`] → an immediate pickup round-trip (no dispatcher
-//!   service model on a local testbed), delivered in FIFO order;
+//!   service model on a local testbed), delivered through a **per-shard
+//!   FIFO queue** so each shard's notification order is deterministic;
 //! * [`Effect::Fetch`] → an assignment to the executor's worker thread:
 //!   fetch from its own cache directory (local hit), a peer worker's
-//!   cache directory (global hit, the GridFTP path), or the
+//!   cache directory (global hit — the GridFTP path; under the router a
+//!   peer may live in a *different shard*, making the copy a real
+//!   cross-shard transfer accounted as `cross_in`/`cross_out`), or the
 //!   **persistent store** directory (miss) — exactly the three-way
 //!   split of §5.2.1 — then run the compute;
 //! * [`Effect::Compute`] → already performed by the worker alongside the
 //!   fetch, so the driver feeds it straight back as `on_compute_done`;
 //! * [`Effect::Allocate`] → spawn worker threads on demand (live DRP —
-//!   no GRAM latency on a local testbed);
+//!   no GRAM latency on a local testbed); the router grants allocations
+//!   to the shard that requested them, so every shard can regrow its
+//!   own pool;
 //! * [`Effect::Release`] → retire an idle worker: scrub it from the
-//!   core, shut its thread down and delete its cache directory (the
+//!   router, shut its thread down and delete its cache directory (the
 //!   transient resource and the replicas it held are gone, as on a
 //!   deallocated node). Enabled by `LiveConfig::idle_release_s > 0`;
-//!   the core withholds executors still serving peer transfers, and a
-//!   racing peer *copy* from a vanished directory falls back to the
+//!   the router withholds executors still serving **cross-shard** peer
+//!   transfers (counted as `cross_release_deferrals`), and a racing
+//!   peer *copy* from a vanished directory falls back to the
 //!   persistent store.
+//!
+//! [`LiveFaults`] injects the chaos harness's fault menu into a live
+//! run — a worker thread killed mid-run (the router requeues its tasks
+//! via `on_executor_failed`; late messages from the dead thread are
+//! dropped) and a shard partition (cross-shard copies refused, workers
+//! fall back to the persistent store and report the miss they really
+//! experienced). Every live run ends with the router's
+//! [`ShardedCoordinator::check_integrity`] oracle.
 //!
 //! Per-task compute is either a calibrated sleep or the AOT-compiled
 //! **PJRT stacking pipeline** (`examples/astronomy_stacking.rs`), so the
 //! full three-layer stack (Rust → HLO → Pallas kernel) is on the hot
 //! path with Python nowhere in sight. Hit/miss tallies come from the
-//! core's shared [`Recorder`] (workers report the access kind they
-//! actually experienced — a peer copy can race the peer's eviction and
-//! fall back to persistent storage, which the recorder then counts as
-//! the miss it really was).
+//! per-shard [`Recorder`]s merged losslessly at the end of the run
+//! (workers report the access kind they actually experienced — a peer
+//! copy can race the peer's eviction and fall back to persistent
+//! storage, which the recorder then counts as the miss it really was).
 
 use crate::cache::CacheConfig;
-use crate::coordinator::core::{CoordinatorCore, CoreConfig, Effect, FetchPlan, FileSizes};
+use crate::coordinator::core::{CoreConfig, Effect, FetchPlan, FileSizes};
 use crate::coordinator::provisioner::{AllocationPolicy, ProvisionerConfig};
 use crate::coordinator::queue::Task;
 use crate::coordinator::scheduler::{DispatchPolicy, SchedulerConfig};
+use crate::coordinator::shard::ShardedCoordinator;
 use crate::coordinator::AccessKind;
 use crate::ids::{ExecutorId, FileId, TaskId};
-use crate::metrics::Recorder;
+use crate::metrics::{Recorder, ShardCounters};
 use crate::util::prng::Pcg64;
 use crate::util::time::Micros;
 use crate::{Error, Result};
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::thread;
@@ -65,6 +82,26 @@ pub enum ComputeKind {
     /// [`crate::runtime::StackingExecutable`]). Each worker compiles its
     /// own executable (PJRT handles are not Sync).
     Stacking,
+}
+
+/// Seeded fault plan for a live run — the chaos harness's live
+/// counterpart. Triggers are **completion counts**, not wall-clock
+/// times, so a plan reproduces across machines regardless of timing.
+#[derive(Debug, Clone, Default)]
+pub struct LiveFaults {
+    /// After this many task completions, kill one worker thread as if
+    /// its node died. Coordinator-side this is a kill-mid-fetch: the
+    /// router requeues the victim's in-flight work and any message the
+    /// dead thread already sent is dropped. The victim is chosen from
+    /// shards with ≥ 2 workers (no shard is emptied); if none is
+    /// eligible yet, the kill retries on later completions.
+    pub kill_worker_after: Option<u64>,
+    /// After this many task completions, partition the shards:
+    /// cross-shard peer copies are refused at assignment time and fall
+    /// back to the persistent store (counted in
+    /// [`LiveReport::partition_fallbacks`]; the worker reports the miss
+    /// it really experienced).
+    pub partition_after: Option<u64>,
 }
 
 /// Live-engine configuration.
@@ -100,15 +137,47 @@ pub struct LiveConfig {
     /// removal). `0.0` disables mid-run retirement — the right choice
     /// for short benchmark runs, where the fleet should stay warm.
     pub idle_release_s: f64,
+    /// Coordinator shards (K cores behind the hash router). `0` and `1`
+    /// both mean the unsharded single-core layout.
+    pub shards: usize,
+    /// Fault-injection plan (default: no faults).
+    pub faults: LiveFaults,
 }
 
-/// One task for the live engine: read `file`, compute.
+/// One task for the live engine: stage its input files, compute.
 #[derive(Debug, Clone)]
 pub struct LiveTask {
-    /// File name inside `persistent_dir`.
+    /// Primary input's file name inside `persistent_dir`. The primary
+    /// input determines the task's home shard under the router.
     pub file_name: String,
-    /// Logical file id (for the scheduler/index).
+    /// Primary input's logical file id (for the scheduler/index).
     pub file: FileId,
+    /// Additional inputs `(id, name)`. The coordinator fetches inputs
+    /// in declaration order — primary first — chaining one fetch per
+    /// file before the compute; an extra homed on a *different* shard
+    /// is what makes a live cross-shard transfer happen.
+    pub extra: Vec<(FileId, String)>,
+}
+
+impl LiveTask {
+    /// A single-input task (the common case).
+    pub fn single(file_name: impl Into<String>, file: FileId) -> Self {
+        LiveTask {
+            file_name: file_name.into(),
+            file,
+            extra: Vec::new(),
+        }
+    }
+
+    /// All inputs, primary first.
+    fn inputs(&self) -> impl Iterator<Item = (FileId, &str)> {
+        std::iter::once((self.file, self.file_name.as_str()))
+            .chain(self.extra.iter().map(|(f, n)| (*f, n.as_str())))
+    }
+
+    fn file_ids(&self) -> Vec<FileId> {
+        self.inputs().map(|(f, _)| f).collect()
+    }
 }
 
 /// Where the worker should fetch its input from.
@@ -158,6 +227,10 @@ struct WorkerHandle {
     tx: mpsc::Sender<ToWorker>,
     join: thread::JoinHandle<()>,
     cache_dir: PathBuf,
+    /// Thread index (names the cache dir and tags worker messages).
+    idx: usize,
+    /// Assignments sent and not yet answered by this worker.
+    inflight: u32,
 }
 
 /// End-of-run report from the live engine.
@@ -169,7 +242,7 @@ pub struct LiveReport {
     pub failed: u64,
     /// Wall-clock makespan.
     pub makespan: Duration,
-    /// Local cache hits (from the shared recorder).
+    /// Local cache hits (from the merged per-shard recorders).
     pub hits_local: u64,
     /// Peer-cache hits.
     pub hits_global: u64,
@@ -185,37 +258,95 @@ pub struct LiveReport {
     pub peak_workers: usize,
     /// Workers retired mid-run by [`Effect::Release`] enactment.
     pub workers_released: u64,
-    /// Tasks in dispatch order — the coordinator-core decision trace
-    /// `core_parity` compares against the sim driver.
+    /// Tasks in dispatch order — the coordinator decision trace
+    /// `live_parity` compares against the bare core.
     pub dispatch_order: Vec<TaskId>,
-    /// Per-second recorder (same instance the coordinator core filled —
+    /// Per-second recorder (the per-shard recorders merged losslessly —
     /// identical shape to the simulator's).
     pub recorder: Recorder,
+    /// Router counters: per-shard routing/dispatch tallies plus
+    /// cross-shard fetches, bytes, deferrals and executor failures.
+    pub shard: ShardCounters,
+    /// Peak live workers per shard.
+    pub workers_per_shard: Vec<usize>,
+    /// Cross-shard copies refused by an injected partition (each fell
+    /// back to the persistent store).
+    pub partition_fallbacks: u64,
 }
 
-/// The live driver: the coordinator core plus the worker fleet and the
-/// FIFO notification queue the `Notify` effects drain through.
+/// The live driver: the sharded coordinator plus the worker fleet and
+/// the per-shard FIFO notification queues the `Notify` effects drain
+/// through.
 struct Driver<'a> {
     config: &'a LiveConfig,
-    core: CoordinatorCore,
+    router: ShardedCoordinator,
     workers: HashMap<ExecutorId, WorkerHandle>,
-    /// Reserved-but-undelivered dispatch notifications, FIFO — the live
-    /// stand-in for the sim's dispatcher service queue.
-    notify_q: VecDeque<ExecutorId>,
+    /// Thread index → executor, for workers still alive (reverse of
+    /// [`WorkerHandle::idx`]; worker messages carry the thread index).
+    exec_of_idx: HashMap<usize, ExecutorId>,
+    /// Thread indices killed by fault injection. Late messages from
+    /// these workers are dropped by the main loop — the router already
+    /// requeued their tasks via `on_executor_failed`.
+    dead_workers: HashSet<usize>,
+    /// Reserved-but-undelivered dispatch notifications, one FIFO per
+    /// shard — the live stand-in for the sim's dispatcher service queue.
+    notify_q: Vec<VecDeque<ExecutorId>>,
     /// Assignments sent to workers and not yet answered.
     outstanding: usize,
+    /// Tasks whose compute has closed (`Effect::Compute` enacted). With
+    /// multi-input tasks a task spans several fetch round-trips, so
+    /// completion is counted here, not per worker message.
+    tasks_finished: u64,
     next_worker_idx: usize,
     peak_workers: usize,
     workers_released: u64,
+    /// Live workers per shard, and the per-shard peaks.
+    shard_counts: Vec<usize>,
+    shard_peaks: Vec<usize>,
+    /// Injected partition active? (Cross-shard copies refused.)
+    partitioned: bool,
+    partition_fallbacks: u64,
     file_names: HashMap<FileId, String>,
     done_tx: mpsc::Sender<WorkerMsg>,
 }
 
-impl Driver<'_> {
-    /// Spawn one worker thread and register it with the core; returns the
-    /// registration effects (the fresh executor's `Notify`).
+impl<'a> Driver<'a> {
+    fn new(
+        config: &'a LiveConfig,
+        router: ShardedCoordinator,
+        done_tx: mpsc::Sender<WorkerMsg>,
+    ) -> Self {
+        let k = router.shards();
+        Driver {
+            config,
+            router,
+            workers: HashMap::new(),
+            exec_of_idx: HashMap::new(),
+            dead_workers: HashSet::new(),
+            notify_q: vec![VecDeque::new(); k],
+            outstanding: 0,
+            tasks_finished: 0,
+            next_worker_idx: 0,
+            peak_workers: 0,
+            workers_released: 0,
+            shard_counts: vec![0; k],
+            shard_peaks: vec![0; k],
+            partitioned: false,
+            partition_fallbacks: 0,
+            file_names: HashMap::new(),
+            done_tx,
+        }
+    }
+
+    fn shard_of(&self, exec: ExecutorId) -> usize {
+        self.router.shard_of_exec(exec).unwrap_or(0)
+    }
+
+    /// Spawn one worker thread and register it with the router (round-
+    /// robin shard placement); returns the registration effects (the
+    /// fresh executor's `Notify`).
     fn spawn_worker(&mut self, now: Micros) -> Result<Vec<Effect>> {
-        let (exec, effects) = self.core.register_node(now);
+        let (exec, effects) = self.router.register_node(now);
         self.attach_worker(exec)?;
         Ok(effects)
     }
@@ -241,32 +372,44 @@ impl Driver<'_> {
                 tx,
                 join,
                 cache_dir,
+                idx,
+                inflight: 0,
             },
         );
+        self.exec_of_idx.insert(idx, exec);
+        let s = self.shard_of(exec);
+        self.shard_counts[s] += 1;
+        self.shard_peaks[s] = self.shard_peaks[s].max(self.shard_counts[s]);
         self.peak_workers = self.peak_workers.max(self.workers.len());
         Ok(())
     }
 
-    /// Enact a batch of coordinator effects on the worker fleet. FIFO so
-    /// notification delivery order stays deterministic.
+    /// Enact a batch of router effects on the worker fleet. FIFO so
+    /// notification delivery order stays deterministic. Effects carry
+    /// *global* executor ids — the router translates shard-local ids at
+    /// the boundary.
     fn apply(&mut self, effects: Vec<Effect>, now: Micros) -> Result<()> {
         let mut queue: VecDeque<Effect> = effects.into();
         while let Some(effect) = queue.pop_front() {
             match effect {
-                Effect::Notify(e) => self.notify_q.push_back(e),
+                Effect::Notify(e) => {
+                    let s = self.shard_of(e);
+                    self.notify_q[s].push_back(e);
+                }
                 Effect::Fetch(plan) => self.send_assignment(plan)?,
                 Effect::Compute { task_id, .. } => {
                     // The worker already ran the compute alongside the
                     // fetch: close the loop immediately.
-                    let mut effs = self.core.on_compute_done(task_id, now, now);
+                    self.tasks_finished += 1;
+                    let mut effs = self.router.on_compute_done(task_id, now, now);
                     queue.extend(effs.drain(..));
-                    self.core.recycle_effects(effs);
+                    self.router.recycle_effects(effs);
                 }
                 Effect::Allocate(n) => {
                     for _ in 0..n {
                         let mut effs = self.spawn_worker_registered(now)?;
                         queue.extend(effs.drain(..));
-                        self.core.recycle_effects(effs);
+                        self.router.recycle_effects(effs);
                     }
                 }
                 Effect::Release(execs) => {
@@ -280,33 +423,79 @@ impl Driver<'_> {
     }
 
     /// An [`Effect::Allocate`] node comes up instantly on a local
-    /// testbed: drain the provisioner's pending count and spawn.
+    /// testbed: drain the requesting shard's pending count and spawn.
     fn spawn_worker_registered(&mut self, now: Micros) -> Result<Vec<Effect>> {
-        let (exec, effects) = self.core.on_node_registered(now);
+        let (exec, effects) = self.router.on_node_registered(now);
         self.attach_worker(exec)?;
         Ok(effects)
     }
 
-    /// Enact one [`Effect::Release`]: scrub the executor from the core,
-    /// shut its worker thread down and delete its cache directory — the
-    /// transient resource, and every replica it held, are gone, exactly
-    /// like a deallocated node in the sim. The core only names idle
-    /// executors with no pending reservation and no in-flight peer
-    /// transfer, so no undelivered work targets this worker; a racing
-    /// peer *copy* from the vanished directory falls back to the
-    /// persistent store in `run_one` and is recorded as the miss it was.
+    /// Enact one [`Effect::Release`]: scrub the executor from the
+    /// router, shut its worker thread down and delete its cache
+    /// directory — the transient resource, and every replica it held,
+    /// are gone, exactly like a deallocated node in the sim. The router
+    /// only names idle executors with no pending reservation and no
+    /// in-flight cross-shard transfer (those are deferred and counted),
+    /// so no undelivered work targets this worker; a racing peer *copy*
+    /// from the vanished directory falls back to the persistent store
+    /// in `run_one` and is recorded as the miss it was.
     fn release_worker(&mut self, exec: ExecutorId) {
-        self.core.release_node(exec);
+        // Capture the shard before the router drops the binding.
+        let s = self.shard_of(exec);
+        self.router.release_node(exec);
         if let Some(h) = self.workers.remove(&exec) {
+            self.exec_of_idx.remove(&h.idx);
             let _ = h.tx.send(ToWorker::Shutdown);
             let _ = h.join.join();
             let _ = std::fs::remove_dir_all(&h.cache_dir);
+            self.shard_counts[s] = self.shard_counts[s].saturating_sub(1);
             self.workers_released += 1;
-            crate::debug!("released idle worker {exec}");
+            crate::debug!("released idle worker {exec} (shard {s})");
         }
         // Belt and braces: reserved executors are never named in a
         // release, so this should find nothing.
-        self.notify_q.retain(|&e| e != exec);
+        for q in &mut self.notify_q {
+            q.retain(|&e| e != exec);
+        }
+    }
+
+    /// Fault injection: kill one worker as if its node died.
+    ///
+    /// Rust threads cannot be destroyed preemptively, so the kill is
+    /// cooperative on the *thread* (shutdown + join) but abrupt on the
+    /// *coordinator*: `on_executor_failed` is fed before any in-flight
+    /// result from the victim reaches the event API, so router-side
+    /// this is a kill-mid-fetch — the victim's tasks requeue and any
+    /// message its thread already sent is dropped via `dead_workers`.
+    /// Prefers a victim with work in flight (lowest executor id breaks
+    /// ties) and only considers shards with ≥ 2 workers so no shard is
+    /// emptied; returns `Ok(false)` when no worker is eligible yet.
+    fn kill_one_worker(&mut self, now: Micros) -> Result<bool> {
+        let mut candidates: Vec<(bool, u32, ExecutorId)> = self
+            .workers
+            .iter()
+            .filter(|(e, _)| self.shard_counts[self.shard_of(**e)] >= 2)
+            .map(|(e, h)| (h.inflight == 0, e.0, *e))
+            .collect();
+        candidates.sort_unstable();
+        let Some(&(_, _, exec)) = candidates.first() else {
+            return Ok(false);
+        };
+        let s = self.shard_of(exec);
+        let h = self.workers.remove(&exec).expect("candidate was just listed");
+        self.exec_of_idx.remove(&h.idx);
+        self.dead_workers.insert(h.idx);
+        let _ = h.tx.send(ToWorker::Shutdown);
+        let _ = h.join.join();
+        let _ = std::fs::remove_dir_all(&h.cache_dir);
+        self.shard_counts[s] = self.shard_counts[s].saturating_sub(1);
+        for q in &mut self.notify_q {
+            q.retain(|&e| e != exec);
+        }
+        crate::warn!("fault injection: killed worker {exec} (shard {s})");
+        let effects = self.router.on_executor_failed(exec, now);
+        self.apply(effects, now)?;
+        Ok(true)
     }
 
     /// Map a resolved fetch plan onto a worker assignment.
@@ -319,7 +508,20 @@ impl Driver<'_> {
         let source = match (plan.kind, plan.peer) {
             (AccessKind::HitLocal, _) => FetchSource::Local,
             (AccessKind::HitGlobal, Some(p)) => {
-                FetchSource::Peer(self.workers[&p].cache_dir.clone())
+                if self.partitioned && self.shard_of(p) != self.shard_of(plan.exec) {
+                    // Injected partition: the cross-shard copy path is
+                    // cut; fall back to the persistent store and let the
+                    // worker report the miss it really experienced.
+                    self.partition_fallbacks += 1;
+                    FetchSource::Persistent
+                } else {
+                    match self.workers.get(&p) {
+                        Some(h) => FetchSource::Peer(h.cache_dir.clone()),
+                        // Peer retired or killed between planning and
+                        // enactment: persistent-store fallback.
+                        None => FetchSource::Persistent,
+                    }
+                }
             }
             _ => FetchSource::Persistent,
         };
@@ -328,47 +530,83 @@ impl Driver<'_> {
             .iter()
             .filter_map(|f| self.file_names.get(f).cloned())
             .collect();
-        self.workers[&plan.exec]
-            .tx
-            .send(ToWorker::Run(Assignment {
-                task_id: plan.task_id,
-                file_name,
-                source,
-                evict,
-            }))
-            .expect("worker channel closed");
+        let h = self
+            .workers
+            .get_mut(&plan.exec)
+            .ok_or_else(|| Error::Runtime(format!("fetch for unknown worker {}", plan.exec)))?;
+        h.inflight += 1;
+        h.tx.send(ToWorker::Run(Assignment {
+            task_id: plan.task_id,
+            file_name,
+            source,
+            evict,
+        }))
+        .expect("worker channel closed");
         self.outstanding += 1;
         Ok(())
+    }
+
+    /// Deliver queued notifications, draining shard queues round-robin
+    /// until a full pass over all shards makes no progress.
+    fn drain_notifications(&mut self, now: Micros) -> Result<()> {
+        let k = self.notify_q.len();
+        loop {
+            let mut progressed = false;
+            for s in 0..k {
+                while let Some(e) = self.notify_q[s].pop_front() {
+                    progressed = true;
+                    let effects = self.router.on_pickup(e, now);
+                    self.apply(effects, now)?;
+                }
+            }
+            if !progressed {
+                return Ok(());
+            }
+        }
     }
 
     /// Deliver queued notifications and keep the cluster busy: the live
     /// analogue of the sim's dispatcher drain plus tick safety net.
     fn pump(&mut self, now: Micros) -> Result<()> {
         loop {
-            while let Some(e) = self.notify_q.pop_front() {
-                let effects = self.core.on_pickup(e, now);
-                self.apply(effects, now)?;
-            }
+            self.drain_notifications(now)?;
             // Safety net: tasks wait, workers are free, nothing is in
             // flight — force progress (max-cache-hit can decline).
-            if self.outstanding > 0 || self.core.queue_is_empty() || self.core.free_count() == 0 {
+            if self.outstanding > 0
+                || self.router.queue_is_empty()
+                || self.router.free_count() == 0
+            {
                 break;
             }
-            let queue_before = self.core.queue_len();
-            let effects = self.core.kick();
+            let queue_before = self.router.queue_len();
+            let effects = self.router.kick();
             if effects.is_empty() {
                 break;
             }
             self.apply(effects, now)?;
-            while let Some(e) = self.notify_q.pop_front() {
-                let effects = self.core.on_pickup(e, now);
-                self.apply(effects, now)?;
-            }
-            if self.outstanding == 0 && self.core.queue_len() == queue_before {
+            self.drain_notifications(now)?;
+            if self.outstanding == 0 && self.router.queue_len() == queue_before {
                 break; // the forced pickup declined too; wait for events
             }
         }
         Ok(())
+    }
+
+    /// Account a worker's answer: one fewer assignment in flight there.
+    fn note_answer(&mut self, idx: usize) {
+        if let Some(exec) = self.exec_of_idx.get(&idx) {
+            if let Some(h) = self.workers.get_mut(exec) {
+                h.inflight = h.inflight.saturating_sub(1);
+            }
+        }
+    }
+
+    fn shutdown_workers(&mut self) {
+        for (_, h) in self.workers.drain() {
+            let _ = h.tx.send(ToWorker::Shutdown);
+            let _ = h.join.join();
+        }
+        self.exec_of_idx.clear();
     }
 }
 
@@ -380,20 +618,28 @@ pub fn run(config: &LiveConfig, tasks: &[LiveTask]) -> Result<LiveReport> {
     std::fs::create_dir_all(&config.cache_root)?;
     let t0 = Instant::now();
     let (done_tx, done_rx) = mpsc::channel::<WorkerMsg>();
+    let shards = config.shards.max(1);
 
     // File sizes from the persistent store (needed for cache accounting).
     let mut file_sizes: HashMap<FileId, u64> = HashMap::new();
     let mut file_names: HashMap<FileId, String> = HashMap::new();
     for t in tasks {
-        if let std::collections::hash_map::Entry::Vacant(e) = file_sizes.entry(t.file) {
-            let meta = std::fs::metadata(config.persistent_dir.join(&t.file_name))?;
-            e.insert(meta.len());
-            file_names.insert(t.file, t.file_name.clone());
+        for (file, name) in t.inputs() {
+            if let std::collections::hash_map::Entry::Vacant(e) = file_sizes.entry(file) {
+                let meta = std::fs::metadata(config.persistent_dir.join(name))?;
+                e.insert(meta.len());
+                file_names.insert(file, name.to_string());
+            }
         }
     }
 
-    let max_workers = config.max_workers.max(config.initial_workers).max(1);
-    let core = CoordinatorCore::new(
+    // The router needs at least one executor slot per shard.
+    let max_workers = config
+        .max_workers
+        .max(config.initial_workers)
+        .max(1)
+        .max(shards);
+    let router = ShardedCoordinator::new(
         CoreConfig {
             scheduler: SchedulerConfig {
                 policy: config.policy,
@@ -411,25 +657,17 @@ pub fn run(config: &LiveConfig, tasks: &[LiveTask]) -> Result<LiveReport> {
             slots_per_node: 1,
             file_sizes: FileSizes::per_file(file_sizes),
         },
+        shards,
         Pcg64::seeded(config.seed),
     );
-    let mut drv = Driver {
-        config,
-        core,
-        workers: HashMap::new(),
-        notify_q: VecDeque::new(),
-        outstanding: 0,
-        next_worker_idx: 0,
-        peak_workers: 0,
-        workers_released: 0,
-        file_names,
-        done_tx,
-    };
+    let mut drv = Driver::new(config, router, done_tx);
+    drv.file_names = file_names;
 
     // Initial fleet, then batch submission (like the §5.1 microbench):
     // the fresh workers' notifications queue up and deliver after the
     // whole queue is populated — matching the sim driver, where arrivals
-    // outrun the dispatcher's service latency.
+    // outrun the dispatcher's service latency. Round-robin registration
+    // seeds every shard's pool.
     for _ in 0..config.initial_workers.max(1) {
         let now = now_micros(t0);
         let effects = drv.spawn_worker(now)?;
@@ -439,29 +677,30 @@ pub fn run(config: &LiveConfig, tasks: &[LiveTask]) -> Result<LiveReport> {
         let now = now_micros(t0);
         let task = Task {
             id: TaskId(i as u64),
-            files: vec![t.file],
+            files: t.file_ids(),
             compute: Micros::ZERO,
             arrival: Micros::ZERO,
         };
-        let effects = drv.core.on_arrival(task, 0, 0.0, now);
+        let effects = drv.router.on_arrival(task, 0, 0.0, now);
         drv.apply(effects, now)?;
     }
     drv.pump(now_micros(t0))?;
 
     let mut retried: HashMap<u64, bool> = HashMap::new();
-    let mut completed = 0u64;
     let mut failed = 0u64;
     let mut bytes_moved = 0u64;
     let mut fetch_total = Duration::ZERO;
     let mut compute_total = Duration::ZERO;
+    let mut kill_pending = config.faults.kill_worker_after;
 
-    // Main loop: completions drive re-dispatch through the core; the
-    // shared provisioner grows the fleet while the queue stays long.
-    while completed + failed < tasks.len() as u64 {
+    // Main loop: completions drive re-dispatch through the router; the
+    // per-shard provisioners grow their pools while queues stay long.
+    while drv.tasks_finished + failed < tasks.len() as u64 {
         let now = now_micros(t0);
         // Sample + provisioning decision (the sim's 1 Hz tick, run per
-        // completion here).
-        let effects = drv.core.on_tick(now);
+        // completion here). Also how a shard whose pool was emptied by
+        // releases regrows: its provisioner allocates on the next tick.
+        let effects = drv.router.on_tick(now);
         drv.apply(effects, now)?;
         drv.pump(now)?;
 
@@ -470,6 +709,15 @@ pub fn run(config: &LiveConfig, tasks: &[LiveTask]) -> Result<LiveReport> {
             .map_err(|_| Error::Runtime("live engine stalled for 60s".into()))?;
         let now = now_micros(t0);
         match msg {
+            WorkerMsg::Done { worker, .. } | WorkerMsg::Failed { worker, .. }
+                if drv.dead_workers.contains(&worker) =>
+            {
+                // A message the victim thread sent before the kill
+                // landed: the router already requeued its task, so the
+                // stale answer must not reach the event API or tallies.
+                drv.outstanding -= 1;
+                crate::debug!("dropped stale message from killed worker {worker}");
+            }
             WorkerMsg::Done {
                 worker,
                 task_id,
@@ -478,16 +726,18 @@ pub fn run(config: &LiveConfig, tasks: &[LiveTask]) -> Result<LiveReport> {
                 fetch,
                 compute,
             } => {
-                crate::debug!("worker {worker}: task {task_id} done ({kind:?}, {bytes} B)");
+                crate::debug!("worker {worker}: task {task_id} fetch done ({kind:?}, {bytes} B)");
                 drv.outstanding -= 1;
+                drv.note_answer(worker);
                 bytes_moved += bytes;
                 fetch_total += fetch;
                 compute_total += compute;
                 // Report what the worker actually experienced (a peer
                 // copy may have fallen back to the persistent store).
-                let effects = drv.core.on_fetch_done(task_id, now, Some((kind, bytes)));
+                // Multi-input tasks chain here: the router answers with
+                // the next file's fetch, then the closing compute.
+                let effects = drv.router.on_fetch_done(task_id, now, Some((kind, bytes)));
                 drv.apply(effects, now)?;
-                completed += 1;
             }
             WorkerMsg::Failed {
                 worker,
@@ -495,10 +745,11 @@ pub fn run(config: &LiveConfig, tasks: &[LiveTask]) -> Result<LiveReport> {
                 error,
             } => {
                 drv.outstanding -= 1;
+                drv.note_answer(worker);
                 // Frees the slot and — when a backlog remains — re-notifies
                 // the freed worker, so a permanently-failed task cannot
                 // idle its executor for the rest of the run.
-                let effects = drv.core.on_task_failed(task_id, now);
+                let effects = drv.router.on_task_failed(task_id, now);
                 drv.apply(effects, now)?;
                 // Replay policy (§4.2): re-dispatch once, then count as
                 // failed.
@@ -507,11 +758,11 @@ pub fn run(config: &LiveConfig, tasks: &[LiveTask]) -> Result<LiveReport> {
                     let t = &tasks[task_id.0 as usize];
                     let task = Task {
                         id: task_id,
-                        files: vec![t.file],
+                        files: t.file_ids(),
                         compute: Micros::ZERO,
                         arrival: now,
                     };
-                    let effects = drv.core.on_arrival(task, 0, 0.0, now);
+                    let effects = drv.router.on_arrival(task, 0, 0.0, now);
                     drv.apply(effects, now)?;
                     crate::warn!("task {task_id} failed on worker {worker} ({error}); replaying");
                 } else {
@@ -520,17 +771,33 @@ pub fn run(config: &LiveConfig, tasks: &[LiveTask]) -> Result<LiveReport> {
                 }
             }
         }
+        // Completion-count fault triggers.
+        if let Some(n) = kill_pending {
+            if drv.tasks_finished >= n && drv.kill_one_worker(now)? {
+                kill_pending = None;
+            }
+        }
+        if let Some(n) = config.faults.partition_after {
+            if !drv.partitioned && drv.tasks_finished >= n {
+                drv.partitioned = true;
+                crate::warn!("fault injection: shards partitioned");
+            }
+        }
         drv.pump(now)?;
     }
 
-    // Shut down workers.
-    for (_, h) in drv.workers.drain() {
-        let _ = h.tx.send(ToWorker::Shutdown);
-        let _ = h.join.join();
-    }
+    // Shut down workers, then hold the run to the chaos oracle: every
+    // live run ends state-consistent or errors out.
+    drv.shutdown_workers();
+    drv.router
+        .check_integrity()
+        .map_err(Error::SimInvariant)?;
 
-    let (hits_local, hits_global, misses) = drv.core.rec.access_counts();
-    let recorder = std::mem::take(&mut drv.core.rec);
+    let completed = drv.tasks_finished;
+    let dispatch_order = drv.router.take_dispatch_log();
+    let shard = drv.router.take_counters();
+    let recorder = drv.router.take_merged_recorder();
+    let (hits_local, hits_global, misses) = recorder.access_counts();
     let done_tasks = completed.max(1);
     Ok(LiveReport {
         completed,
@@ -544,9 +811,169 @@ pub fn run(config: &LiveConfig, tasks: &[LiveTask]) -> Result<LiveReport> {
         avg_compute: compute_total / done_tasks as u32,
         peak_workers: drv.peak_workers,
         workers_released: drv.workers_released,
-        dispatch_order: drv.core.take_dispatch_log(),
+        dispatch_order,
         recorder,
+        shard,
+        workers_per_shard: drv.shard_peaks.clone(),
+        partition_fallbacks: drv.partition_fallbacks,
     })
+}
+
+/// Scripted two-shard release-deferral probe, exercised by the chaos
+/// suite (`rust/tests/chaos.rs`). Drives a real two-worker fleet with
+/// *manual* coordinator timestamps so the idle-release decision and the
+/// cross-shard serving deferral are deterministic: worker 1 (shard 1)
+/// caches its shard's file, then serves it cross-shard to worker 0
+/// (shard 0) while a tick falls mid-transfer — the router must defer
+/// worker 1's release until the copy is fed back, then retire both.
+/// Returns `(workers_released, cross_release_deferrals)`.
+#[doc(hidden)]
+pub fn scripted_cross_release_probe(root: &Path) -> Result<(u64, u64)> {
+    fn t(s: u64) -> Micros {
+        Micros::from_secs(s)
+    }
+    fn feed_done(
+        drv: &mut Driver<'_>,
+        rx: &mpsc::Receiver<WorkerMsg>,
+        now: Micros,
+    ) -> Result<()> {
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(WorkerMsg::Done {
+                worker,
+                task_id,
+                kind,
+                bytes,
+                ..
+            }) => {
+                drv.outstanding -= 1;
+                drv.note_answer(worker);
+                let effects = drv.router.on_fetch_done(task_id, now, Some((kind, bytes)));
+                drv.apply(effects, now)?;
+                drv.pump(now)
+            }
+            Ok(WorkerMsg::Failed { task_id, error, .. }) => Err(Error::Runtime(format!(
+                "probe task {task_id} failed: {error}"
+            ))),
+            Err(_) => Err(Error::Runtime("probe worker stalled".into())),
+        }
+    }
+
+    let store = root.join("store");
+    let cache_root = root.join("caches");
+    std::fs::create_dir_all(&store)?;
+    std::fs::create_dir_all(&cache_root)?;
+    let config = LiveConfig {
+        initial_workers: 2,
+        max_workers: 2,
+        queue_tasks_per_worker: usize::MAX >> 8,
+        allocation: AllocationPolicy::OneAtATime,
+        policy: DispatchPolicy::GoodCacheCompute,
+        cache: CacheConfig::lru(1 << 20),
+        persistent_dir: store.clone(),
+        cache_root,
+        compute: ComputeKind::Sleep(Duration::from_millis(1)),
+        seed: 11,
+        idle_release_s: 0.5,
+        shards: 2,
+        faults: LiveFaults::default(),
+    };
+    let (done_tx, done_rx) = mpsc::channel::<WorkerMsg>();
+    let router = ShardedCoordinator::new(
+        CoreConfig {
+            scheduler: SchedulerConfig {
+                policy: config.policy,
+                ..SchedulerConfig::default()
+            },
+            provisioner: ProvisionerConfig {
+                allocation: config.allocation,
+                idle_release_s: config.idle_release_s,
+                static_provisioning: false,
+                initial_nodes: 2,
+                queue_tasks_per_node: u64::MAX >> 8,
+            },
+            cache: config.cache,
+            max_nodes: 2,
+            slots_per_node: 1,
+            file_sizes: FileSizes::Uniform(2048),
+        },
+        2,
+        Pcg64::seeded(config.seed),
+    );
+    let mut drv = Driver::new(&config, router, done_tx);
+
+    // One file homed on each shard (the hash router decides homes).
+    let file_a = (0u32..1024)
+        .map(FileId)
+        .find(|&f| drv.router.shard_of_file(f) == 0)
+        .ok_or_else(|| Error::Runtime("no shard-0 file id in probe range".into()))?;
+    let file_b = (0u32..1024)
+        .map(FileId)
+        .find(|&f| drv.router.shard_of_file(f) == 1)
+        .ok_or_else(|| Error::Runtime("no shard-1 file id in probe range".into()))?;
+    std::fs::write(store.join("fa.bin"), vec![0xAAu8; 2048])?;
+    std::fs::write(store.join("fb.bin"), vec![0xBBu8; 2048])?;
+    drv.file_names.insert(file_a, "fa.bin".into());
+    drv.file_names.insert(file_b, "fb.bin".into());
+
+    // Round-robin registration: worker 0 → shard 0, worker 1 → shard 1.
+    for _ in 0..2 {
+        let effects = drv.spawn_worker(t(0))?;
+        drv.apply(effects, t(0))?;
+    }
+
+    // Task 0 seeds worker 1's cache with shard 1's file.
+    let effects = drv.router.on_arrival(
+        Task {
+            id: TaskId(0),
+            files: vec![file_b],
+            compute: Micros::ZERO,
+            arrival: t(0),
+        },
+        0,
+        0.0,
+        t(0),
+    );
+    drv.apply(effects, t(0))?;
+    drv.pump(t(0))?;
+    feed_done(&mut drv, &done_rx, t(1))?;
+
+    // Task 1 on shard 0 needs [file_a, file_b]: the chained second
+    // fetch is the cross-shard copy served by worker 1.
+    let effects = drv.router.on_arrival(
+        Task {
+            id: TaskId(1),
+            files: vec![file_a, file_b],
+            compute: Micros::ZERO,
+            arrival: t(2),
+        },
+        0,
+        0.0,
+        t(2),
+    );
+    drv.apply(effects, t(2))?;
+    drv.pump(t(2))?;
+    // fa.bin staged (persistent miss); the router answers with the
+    // cross-shard fetch of fb.bin and marks worker 1 as serving.
+    feed_done(&mut drv, &done_rx, t(3))?;
+
+    // Mid-transfer tick: worker 1 has been idle since t=1 — far past
+    // the 0.5 s release threshold — but it is serving a cross-shard
+    // copy, so the router must defer its release.
+    let effects = drv.router.on_tick(t(10));
+    drv.apply(effects, t(10))?;
+    let deferrals = drv.router.counters().cross_release_deferrals;
+
+    // The copy lands; task 1 completes.
+    feed_done(&mut drv, &done_rx, t(11))?;
+
+    // Post-transfer tick: both workers idle well past the threshold
+    // and no transfer in flight — now they retire.
+    let effects = drv.router.on_tick(t(20));
+    drv.apply(effects, t(20))?;
+
+    drv.router.check_integrity().map_err(Error::SimInvariant)?;
+    drv.shutdown_workers();
+    Ok((drv.workers_released, deferrals))
 }
 
 fn now_micros(t0: Instant) -> Micros {
@@ -684,10 +1111,7 @@ mod tests {
             std::fs::write(dir.join(&name), vec![i as u8; bytes]).unwrap();
             // 3 accesses per file.
             for _ in 0..3 {
-                tasks.push(LiveTask {
-                    file_name: name.clone(),
-                    file: FileId(i as u32),
-                });
+                tasks.push(LiveTask::single(name.clone(), FileId(i as u32)));
             }
         }
         tasks
@@ -699,12 +1123,8 @@ mod tests {
         p
     }
 
-    #[test]
-    fn live_run_completes_and_hits_cache() {
-        let root = tmp("basic");
-        let data = root.join("store");
-        let tasks = setup_dataset(&data, 10, 4096);
-        let cfg = LiveConfig {
+    fn base_config(data: PathBuf, cache_root: PathBuf) -> LiveConfig {
+        LiveConfig {
             initial_workers: 3,
             max_workers: 3,
             queue_tasks_per_worker: 10,
@@ -715,11 +1135,21 @@ mod tests {
                 policy: EvictionPolicy::Lru,
             },
             persistent_dir: data,
-            cache_root: root.join("caches"),
+            cache_root,
             compute: ComputeKind::Sleep(Duration::from_millis(1)),
             seed: 7,
             idle_release_s: 0.0,
-        };
+            shards: 1,
+            faults: LiveFaults::default(),
+        }
+    }
+
+    #[test]
+    fn live_run_completes_and_hits_cache() {
+        let root = tmp("basic");
+        let data = root.join("store");
+        let tasks = setup_dataset(&data, 10, 4096);
+        let cfg = base_config(data, root.join("caches"));
         let report = run(&cfg, &tasks).expect("live run");
         assert_eq!(report.completed, 30);
         assert_eq!(report.failed, 0);
@@ -731,12 +1161,16 @@ mod tests {
             report.hits_local,
             report.hits_global
         );
-        // The report's tallies are the shared recorder's tallies.
+        // The report's tallies are the merged recorder's tallies.
         assert_eq!(
             report.recorder.access_counts(),
             (report.hits_local, report.hits_global, report.misses)
         );
         assert_eq!(report.dispatch_order.len(), 30);
+        // K=1: one shard carrying the whole run, no cross traffic.
+        assert_eq!(report.shard.shards, 1);
+        assert_eq!(report.shard.cross_fetches, 0);
+        assert_eq!(report.workers_per_shard, vec![3]);
         let _ = std::fs::remove_dir_all(&root);
     }
 
@@ -745,22 +1179,9 @@ mod tests {
         let root = tmp("model");
         let data = root.join("store");
         let tasks = setup_dataset(&data, 10, 4096);
-        let cfg = LiveConfig {
-            initial_workers: 1,
-            max_workers: 3,
-            queue_tasks_per_worker: 10,
-            allocation: AllocationPolicy::Model,
-            policy: DispatchPolicy::GoodCacheCompute,
-            cache: CacheConfig {
-                capacity_bytes: 1 << 20,
-                policy: EvictionPolicy::Lru,
-            },
-            persistent_dir: data,
-            cache_root: root.join("caches"),
-            compute: ComputeKind::Sleep(Duration::from_millis(1)),
-            seed: 7,
-            idle_release_s: 0.0,
-        };
+        let mut cfg = base_config(data, root.join("caches"));
+        cfg.initial_workers = 1;
+        cfg.allocation = AllocationPolicy::Model;
         let report = run(&cfg, &tasks).expect("live run under --allocation model");
         assert_eq!(report.completed, 30);
         assert_eq!(report.failed, 0);
@@ -773,22 +1194,10 @@ mod tests {
         let root = tmp("fa");
         let data = root.join("store");
         let tasks = setup_dataset(&data, 5, 1024);
-        let cfg = LiveConfig {
-            initial_workers: 2,
-            max_workers: 2,
-            queue_tasks_per_worker: 10,
-            allocation: AllocationPolicy::OneAtATime,
-            policy: DispatchPolicy::FirstAvailable,
-            cache: CacheConfig {
-                capacity_bytes: 1 << 20,
-                policy: EvictionPolicy::Lru,
-            },
-            persistent_dir: data,
-            cache_root: root.join("caches"),
-            compute: ComputeKind::Sleep(Duration::from_millis(1)),
-            seed: 7,
-            idle_release_s: 0.0,
-        };
+        let mut cfg = base_config(data, root.join("caches"));
+        cfg.initial_workers = 2;
+        cfg.max_workers = 2;
+        cfg.policy = DispatchPolicy::FirstAvailable;
         let report = run(&cfg, &tasks).expect("live run");
         assert_eq!(report.completed, 15);
         assert_eq!(report.misses, 15);
@@ -797,33 +1206,50 @@ mod tests {
     }
 
     #[test]
+    fn sharded_live_run_completes_on_every_shard() {
+        let root = tmp("sharded");
+        let data = root.join("store");
+        let tasks = setup_dataset(&data, 12, 2048);
+        let mut cfg = base_config(data, root.join("caches"));
+        cfg.initial_workers = 2;
+        cfg.max_workers = 2;
+        cfg.shards = 2;
+        let report = run(&cfg, &tasks).expect("sharded live run");
+        assert_eq!(report.completed, 36);
+        assert_eq!(report.failed, 0);
+        assert_eq!(report.shard.shards, 2);
+        assert_eq!(report.workers_per_shard.len(), 2);
+        // Round-robin registration puts one worker on each shard, and
+        // 12 distinct files hash onto both shards.
+        assert!(
+            report.workers_per_shard.iter().all(|&w| w > 0),
+            "some shard never had a worker: {:?}",
+            report.workers_per_shard
+        );
+        let routed: Vec<u64> = report.shard.per_shard.iter().map(|s| s.tasks_routed).collect();
+        assert_eq!(routed.iter().sum::<u64>(), 36);
+        assert!(routed.iter().all(|&r| r > 0), "unbalanced routing {routed:?}");
+        let dispatched: u64 = report.shard.per_shard.iter().map(|s| s.dispatches).sum();
+        assert_eq!(dispatched, 36);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
     fn release_effect_retires_worker_and_scrubs_cache_dir() {
-        // Drive the Driver directly with core-time stamps so the test
+        // Drive the Driver directly with router-time stamps so the test
         // is deterministic: two idle workers, a tick far in the future,
         // and the resulting Release must shut threads down, delete
-        // cache directories and scrub the core.
+        // cache directories and scrub the router.
         let root = tmp("release");
         let data = root.join("store");
         let _tasks = setup_dataset(&data, 2, 512);
-        let cfg = LiveConfig {
-            initial_workers: 2,
-            max_workers: 2,
-            queue_tasks_per_worker: 10,
-            allocation: AllocationPolicy::OneAtATime,
-            policy: DispatchPolicy::GoodCacheCompute,
-            cache: CacheConfig {
-                capacity_bytes: 1 << 20,
-                policy: EvictionPolicy::Lru,
-            },
-            persistent_dir: data,
-            cache_root: root.join("caches"),
-            compute: ComputeKind::Sleep(Duration::from_millis(1)),
-            seed: 7,
-            idle_release_s: 0.5,
-        };
+        let mut cfg = base_config(data, root.join("caches"));
+        cfg.initial_workers = 2;
+        cfg.max_workers = 2;
+        cfg.idle_release_s = 0.5;
         std::fs::create_dir_all(&cfg.cache_root).unwrap();
         let (done_tx, _done_rx) = mpsc::channel::<WorkerMsg>();
-        let core = CoordinatorCore::new(
+        let router = ShardedCoordinator::new(
             CoreConfig {
                 scheduler: SchedulerConfig {
                     policy: cfg.policy,
@@ -841,20 +1267,10 @@ mod tests {
                 slots_per_node: 1,
                 file_sizes: FileSizes::Uniform(512),
             },
+            1,
             Pcg64::seeded(cfg.seed),
         );
-        let mut drv = Driver {
-            config: &cfg,
-            core,
-            workers: HashMap::new(),
-            notify_q: VecDeque::new(),
-            outstanding: 0,
-            next_worker_idx: 0,
-            peak_workers: 0,
-            workers_released: 0,
-            file_names: HashMap::new(),
-            done_tx,
-        };
+        let mut drv = Driver::new(&cfg, router, done_tx);
         drv.spawn_worker(Micros::ZERO).unwrap();
         drv.spawn_worker(Micros::ZERO).unwrap();
         assert_eq!(drv.workers.len(), 2);
@@ -863,7 +1279,7 @@ mod tests {
 
         // Ten idle seconds later the provisioner must want them gone.
         let now = Micros::from_secs(10);
-        let effects = drv.core.on_tick(now);
+        let effects = drv.router.on_tick(now);
         assert!(
             effects
                 .iter()
@@ -884,22 +1300,12 @@ mod tests {
         let root = tmp("prov");
         let data = root.join("store");
         let tasks = setup_dataset(&data, 20, 512);
-        let cfg = LiveConfig {
-            initial_workers: 1,
-            max_workers: 4,
-            queue_tasks_per_worker: 5,
-            allocation: AllocationPolicy::Multiplicative(2.0),
-            policy: DispatchPolicy::GoodCacheCompute,
-            cache: CacheConfig {
-                capacity_bytes: 1 << 20,
-                policy: EvictionPolicy::Lru,
-            },
-            persistent_dir: data,
-            cache_root: root.join("caches"),
-            compute: ComputeKind::Sleep(Duration::from_millis(2)),
-            seed: 7,
-            idle_release_s: 0.0,
-        };
+        let mut cfg = base_config(data, root.join("caches"));
+        cfg.initial_workers = 1;
+        cfg.max_workers = 4;
+        cfg.queue_tasks_per_worker = 5;
+        cfg.allocation = AllocationPolicy::Multiplicative(2.0);
+        cfg.compute = ComputeKind::Sleep(Duration::from_millis(2));
         let report = run(&cfg, &tasks).expect("live run");
         assert_eq!(report.completed, 60);
         assert!(report.peak_workers > 1, "never grew: {}", report.peak_workers);

@@ -19,6 +19,8 @@ use crate::util::stats::percentile;
 use crate::util::time::Micros;
 use crate::util::units::bps_to_gbps;
 
+pub mod snapshot;
+
 /// Per-second sample bucket (the summary-view time series of Figs 4–10).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Bucket {
@@ -248,7 +250,7 @@ impl ShardCounters {
 }
 
 /// Recorder driven by the engines during a run.
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone)]
 pub struct Recorder {
     /// Per-second series.
     pub ts: TimeSeries,

@@ -1,0 +1,504 @@
+//! Per-shard recorder snapshots as JSON-lines envelopes — the file-based
+//! shard transport of ROADMAP item 1 (`figures --emit-shards DIR` /
+//! `figures --merge DIR`, docs/LIVE.md).
+//!
+//! One envelope holds one shard's [`Recorder`] plus run identity
+//! ([`SnapshotMeta`]). The format is designed for *bit-exact* round
+//! trips, not human editing:
+//!
+//! * every `f64` travels as its IEEE-754 bit pattern
+//!   ([`f64::to_bits`]) printed as a decimal `u64` — no decimal
+//!   formatting, no parsing drift;
+//! * every time-series bucket is written, including all-zero ones, so
+//!   the merged series length (and therefore every gauge sum and the
+//!   re-derived queue peak) is identical to the in-process merge;
+//! * a trailing `end` record carries the line count, so truncated files
+//!   fail loudly instead of merging a partial shard.
+//!
+//! Schema (one JSON object per line, `u64` integers and escape-free
+//! strings only):
+//!
+//! ```text
+//! {"schema":1,"kind":"meta","run":"fig05-...","shard":0,"shards":4,
+//!  "ideal_wet_bits":...,"hits_local":...,"hits_global":...,"misses":...,
+//!  "tasks_done":...,"resp_sum_bits":...,"resp_max_bits":...,
+//!  "last_completion_us":...,"cpu_slot_seconds_bits":...,"queue_max":...,
+//!  "buckets":N,"intervals":M}
+//! {"kind":"bucket","sec":0,"bl":..,"br":..,"bg":..,"tc":..,"ar":..,
+//!  "ql":..,"no":..,"bs":..,"ts":..}            × N (sequential)
+//! {"kind":"interval","idx":0,"rate_bits":..,"start_us":..,
+//!  "last_arrival_us":..,"last_completion_us":..,"tasks":..}   × M
+//! {"kind":"end","lines":1+N+M}
+//! ```
+//!
+//! Any malformed line surfaces as a typed
+//! [`ConfigError::InvalidValue`] naming the line, and a missing `end`
+//! record as [`ConfigError::MissingKey`] — never a panic (the merge
+//! round-trip test in `integration.rs` pins both).
+
+use std::fmt::Write as _;
+
+use crate::config::ConfigError;
+use crate::util::time::Micros;
+use crate::{Error, Result};
+
+use super::{IntervalStat, Recorder};
+
+/// Envelope schema version.
+pub const SCHEMA: u64 = 1;
+
+/// Run identity carried alongside one shard's recorder.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotMeta {
+    /// Run name (the experiment config's `name`); merge groups by this.
+    pub run: String,
+    /// Shard id of this snapshot (0-based).
+    pub shard: usize,
+    /// Total shards in the run this snapshot belongs to.
+    pub shards: usize,
+    /// Ideal workload execution time (s) — identical across the run's
+    /// shards; the merge re-summarizes against it.
+    pub ideal_wet_s: f64,
+}
+
+/// Serialize one shard's recorder into a JSON-lines envelope.
+pub fn to_jsonl(meta: &SnapshotMeta, rec: &Recorder) -> String {
+    let buckets = rec.ts.buckets();
+    let mut out = String::new();
+    let mut lines = 0usize;
+    let _ = writeln!(
+        out,
+        "{{\"schema\":{SCHEMA},\"kind\":\"meta\",\"run\":\"{}\",\"shard\":{},\
+         \"shards\":{},\"ideal_wet_bits\":{},\"hits_local\":{},\"hits_global\":{},\
+         \"misses\":{},\"tasks_done\":{},\"resp_sum_bits\":{},\"resp_max_bits\":{},\
+         \"last_completion_us\":{},\"cpu_slot_seconds_bits\":{},\"queue_max\":{},\
+         \"buckets\":{},\"intervals\":{}}}",
+        meta.run,
+        meta.shard,
+        meta.shards,
+        meta.ideal_wet_s.to_bits(),
+        rec.hits_local,
+        rec.hits_global,
+        rec.misses,
+        rec.tasks_done,
+        rec.resp_sum_s.to_bits(),
+        rec.resp_max_s.to_bits(),
+        rec.last_completion.0,
+        rec.cpu_slot_seconds.to_bits(),
+        rec.queue_max,
+        buckets.len(),
+        rec.intervals.len(),
+    );
+    lines += 1;
+    for (sec, b) in buckets.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "{{\"kind\":\"bucket\",\"sec\":{sec},\"bl\":{},\"br\":{},\"bg\":{},\
+             \"tc\":{},\"ar\":{},\"ql\":{},\"no\":{},\"bs\":{},\"ts\":{}}}",
+            b.bytes_local,
+            b.bytes_remote,
+            b.bytes_gpfs,
+            b.tasks_completed,
+            b.arrivals,
+            b.queue_len,
+            b.nodes,
+            b.busy_slots,
+            b.total_slots,
+        );
+        lines += 1;
+    }
+    for (idx, iv) in rec.intervals.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "{{\"kind\":\"interval\",\"idx\":{idx},\"rate_bits\":{},\"start_us\":{},\
+             \"last_arrival_us\":{},\"last_completion_us\":{},\"tasks\":{}}}",
+            iv.rate.to_bits(),
+            iv.start.0,
+            iv.last_arrival.0,
+            iv.last_completion.0,
+            iv.tasks,
+        );
+        lines += 1;
+    }
+    let _ = writeln!(out, "{{\"kind\":\"end\",\"lines\":{lines}}}");
+    out
+}
+
+/// Parse an envelope back into its meta + recorder. Bit-exact inverse of
+/// [`to_jsonl`]; every failure is a typed [`ConfigError`].
+pub fn from_jsonl(text: &str) -> Result<(SnapshotMeta, Recorder)> {
+    let mut meta: Option<SnapshotMeta> = None;
+    let mut rec = Recorder::default();
+    let mut want_buckets = 0usize;
+    let mut want_intervals = 0usize;
+    let mut got_buckets = 0usize;
+    let mut got_intervals = 0usize;
+    let mut body_lines = 0usize;
+    let mut ended = false;
+
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let lineno = i + 1;
+        if ended {
+            return Err(bad(lineno, line, "no content after the `end` record"));
+        }
+        let fields = parse_obj(line, lineno)?;
+        let kind = get_str(&fields, "kind", lineno, line)?;
+        match kind.as_str() {
+            "meta" => {
+                if meta.is_some() {
+                    return Err(bad(lineno, line, "a single `meta` record"));
+                }
+                let schema = get_u64(&fields, "schema", lineno, line)?;
+                if schema != SCHEMA {
+                    return Err(bad(lineno, line, &format!("schema {SCHEMA}")));
+                }
+                meta = Some(SnapshotMeta {
+                    run: get_str(&fields, "run", lineno, line)?,
+                    shard: get_u64(&fields, "shard", lineno, line)? as usize,
+                    shards: get_u64(&fields, "shards", lineno, line)?.max(1) as usize,
+                    ideal_wet_s: f64::from_bits(get_u64(&fields, "ideal_wet_bits", lineno, line)?),
+                });
+                rec.hits_local = get_u64(&fields, "hits_local", lineno, line)?;
+                rec.hits_global = get_u64(&fields, "hits_global", lineno, line)?;
+                rec.misses = get_u64(&fields, "misses", lineno, line)?;
+                rec.tasks_done = get_u64(&fields, "tasks_done", lineno, line)?;
+                rec.resp_sum_s = f64::from_bits(get_u64(&fields, "resp_sum_bits", lineno, line)?);
+                rec.resp_max_s = f64::from_bits(get_u64(&fields, "resp_max_bits", lineno, line)?);
+                rec.last_completion =
+                    Micros(get_u64(&fields, "last_completion_us", lineno, line)?);
+                rec.cpu_slot_seconds =
+                    f64::from_bits(get_u64(&fields, "cpu_slot_seconds_bits", lineno, line)?);
+                rec.queue_max = get_u64(&fields, "queue_max", lineno, line)? as usize;
+                want_buckets = get_u64(&fields, "buckets", lineno, line)? as usize;
+                want_intervals = get_u64(&fields, "intervals", lineno, line)? as usize;
+                body_lines += 1;
+            }
+            "bucket" => {
+                if meta.is_none() {
+                    return Err(bad(lineno, line, "the `meta` record first"));
+                }
+                let sec = get_u64(&fields, "sec", lineno, line)? as usize;
+                if sec != got_buckets {
+                    return Err(bad(lineno, line, &format!("bucket sec {got_buckets}")));
+                }
+                let b = rec.ts.bucket_mut(sec as u64);
+                b.bytes_local = get_u64(&fields, "bl", lineno, line)?;
+                b.bytes_remote = get_u64(&fields, "br", lineno, line)?;
+                b.bytes_gpfs = get_u64(&fields, "bg", lineno, line)?;
+                b.tasks_completed = get_u32(&fields, "tc", lineno, line)?;
+                b.arrivals = get_u32(&fields, "ar", lineno, line)?;
+                b.queue_len = get_u32(&fields, "ql", lineno, line)?;
+                b.nodes = get_u32(&fields, "no", lineno, line)?;
+                b.busy_slots = get_u32(&fields, "bs", lineno, line)?;
+                b.total_slots = get_u32(&fields, "ts", lineno, line)?;
+                got_buckets += 1;
+                body_lines += 1;
+            }
+            "interval" => {
+                if meta.is_none() {
+                    return Err(bad(lineno, line, "the `meta` record first"));
+                }
+                let idx = get_u64(&fields, "idx", lineno, line)? as usize;
+                if idx != got_intervals {
+                    return Err(bad(lineno, line, &format!("interval idx {got_intervals}")));
+                }
+                rec.intervals.push(IntervalStat {
+                    rate: f64::from_bits(get_u64(&fields, "rate_bits", lineno, line)?),
+                    start: Micros(get_u64(&fields, "start_us", lineno, line)?),
+                    last_arrival: Micros(get_u64(&fields, "last_arrival_us", lineno, line)?),
+                    last_completion: Micros(get_u64(
+                        &fields,
+                        "last_completion_us",
+                        lineno,
+                        line,
+                    )?),
+                    tasks: get_u64(&fields, "tasks", lineno, line)?,
+                });
+                got_intervals += 1;
+                body_lines += 1;
+            }
+            "end" => {
+                let n = get_u64(&fields, "lines", lineno, line)? as usize;
+                if n != body_lines {
+                    return Err(bad(
+                        lineno,
+                        line,
+                        &format!("{body_lines} body line(s) before `end`"),
+                    ));
+                }
+                ended = true;
+            }
+            other => {
+                return Err(bad(
+                    lineno,
+                    line,
+                    &format!("kind meta|bucket|interval|end, not `{other}`"),
+                ));
+            }
+        }
+    }
+
+    let meta = meta.ok_or_else(|| truncated("meta"))?;
+    if !ended {
+        return Err(truncated("end"));
+    }
+    if got_buckets != want_buckets || got_intervals != want_intervals {
+        return Err(Error::Config(ConfigError::Invariant {
+            field: "snapshot".into(),
+            message: format!(
+                "meta promised {want_buckets} bucket(s)/{want_intervals} interval(s), \
+                 got {got_buckets}/{got_intervals}"
+            ),
+        }));
+    }
+    Ok((meta, rec))
+}
+
+fn truncated(key: &str) -> Error {
+    Error::Config(ConfigError::MissingKey {
+        key: key.into(),
+        context: "snapshot envelope (truncated?)".into(),
+    })
+}
+
+fn bad(lineno: usize, line: &str, expected: &str) -> Error {
+    let mut excerpt: String = line.chars().take(60).collect();
+    if line.chars().count() > 60 {
+        excerpt.push('…');
+    }
+    Error::Config(ConfigError::InvalidValue {
+        key: format!("snapshot line {lineno}"),
+        value: excerpt,
+        expected: expected.into(),
+    })
+}
+
+/// One parsed value: the schema only carries `u64` integers and
+/// escape-free strings.
+enum Field {
+    U64(u64),
+    Str(String),
+}
+
+/// Parse one flat JSON object line into key/value pairs. Hand-rolled on
+/// purpose — the crate is zero-dependency, and restricting the grammar
+/// (no nesting, no escapes, no floats) keeps the round trip bit-exact.
+fn parse_obj(line: &str, lineno: usize) -> Result<Vec<(String, Field)>> {
+    let mut cs = line.chars().peekable();
+    let mut out = Vec::new();
+    if cs.next() != Some('{') {
+        return Err(bad(lineno, line, "a `{`-opened JSON object"));
+    }
+    loop {
+        if cs.next() != Some('"') {
+            return Err(bad(lineno, line, "a quoted key"));
+        }
+        let mut key = String::new();
+        loop {
+            match cs.next() {
+                Some('"') => break,
+                Some('\\') | None => return Err(bad(lineno, line, "an escape-free key")),
+                Some(c) => key.push(c),
+            }
+        }
+        if cs.next() != Some(':') {
+            return Err(bad(lineno, line, "`:` after the key"));
+        }
+        let field = match cs.peek() {
+            Some('"') => {
+                cs.next();
+                let mut s = String::new();
+                loop {
+                    match cs.next() {
+                        Some('"') => break,
+                        Some('\\') | None => {
+                            return Err(bad(lineno, line, "an escape-free string value"))
+                        }
+                        Some(c) => s.push(c),
+                    }
+                }
+                Field::Str(s)
+            }
+            Some(c) if c.is_ascii_digit() => {
+                let mut n: u64 = 0;
+                while let Some(&d) = cs.peek() {
+                    let Some(digit) = d.to_digit(10) else { break };
+                    cs.next();
+                    n = n
+                        .checked_mul(10)
+                        .and_then(|n| n.checked_add(u64::from(digit)))
+                        .ok_or_else(|| bad(lineno, line, "a u64 integer"))?;
+                }
+                Field::U64(n)
+            }
+            _ => return Err(bad(lineno, line, "a string or u64 value")),
+        };
+        out.push((key, field));
+        match cs.next() {
+            Some(',') => continue,
+            Some('}') => break,
+            _ => return Err(bad(lineno, line, "`,` or `}` after a value")),
+        }
+    }
+    if cs.next().is_some() {
+        return Err(bad(lineno, line, "nothing after the closing `}`"));
+    }
+    Ok(out)
+}
+
+fn get_u64(fields: &[(String, Field)], key: &str, lineno: usize, line: &str) -> Result<u64> {
+    match fields.iter().find(|(k, _)| k == key) {
+        Some((_, Field::U64(n))) => Ok(*n),
+        _ => Err(bad(lineno, line, &format!("integer field `{key}`"))),
+    }
+}
+
+fn get_u32(fields: &[(String, Field)], key: &str, lineno: usize, line: &str) -> Result<u32> {
+    let n = get_u64(fields, key, lineno, line)?;
+    u32::try_from(n).map_err(|_| bad(lineno, line, &format!("u32 field `{key}`")))
+}
+
+fn get_str(fields: &[(String, Field)], key: &str, lineno: usize, line: &str) -> Result<String> {
+    match fields.iter().find(|(k, _)| k == key) {
+        Some((_, Field::Str(s))) => Ok(s.clone()),
+        _ => Err(bad(lineno, line, &format!("string field `{key}`"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::AccessKind;
+
+    fn fixture() -> Recorder {
+        let mut r = Recorder::new();
+        r.record_arrival(Micros::from_secs(0), 0, 0.1 + 0.2); // non-representable rate
+        r.record_arrival(Micros::from_secs(2), 1, 7.5);
+        r.record_access(Micros::from_secs(1), AccessKind::HitLocal, 100);
+        r.record_access(Micros::from_secs(1), AccessKind::HitGlobal, 40);
+        r.record_access(Micros::from_secs(3), AccessKind::Miss, 55);
+        r.record_completion(Micros(3_333_333), Micros::from_secs(0), 0);
+        r.record_completion(Micros(4_000_001), Micros::from_secs(2), 1);
+        r.sample(Micros::from_secs(1), 7, 2, 1, 4);
+        r.sample(Micros::from_secs(5), 0, 2, 0, 4); // trailing all-zero gauge tail
+        r
+    }
+
+    #[test]
+    fn round_trip_is_bit_exact() {
+        let rec = fixture();
+        let meta = SnapshotMeta {
+            run: "fix-a".into(),
+            shard: 2,
+            shards: 4,
+            ideal_wet_s: 1.0 / 3.0,
+        };
+        let text = to_jsonl(&meta, &rec);
+        let (m2, r2) = from_jsonl(&text).unwrap();
+        assert_eq!(m2, meta);
+        // Debug formatting round-trips every f64 exactly, so string
+        // equality here is bit-for-bit recorder equality.
+        assert_eq!(format!("{rec:?}"), format!("{r2:?}"));
+        assert_eq!(r2.ts.len(), rec.ts.len(), "zero tail buckets survive");
+        // And a second trip is a fixed point.
+        assert_eq!(to_jsonl(&m2, &r2), text);
+    }
+
+    #[test]
+    fn empty_recorder_round_trips() {
+        let meta = SnapshotMeta {
+            run: "empty".into(),
+            shard: 0,
+            shards: 1,
+            ideal_wet_s: 0.0,
+        };
+        let text = to_jsonl(&meta, &Recorder::new());
+        let (m2, r2) = from_jsonl(&text).unwrap();
+        assert_eq!(m2, meta);
+        assert_eq!(r2.tasks_done(), 0);
+        assert!(r2.ts.is_empty());
+    }
+
+    #[test]
+    fn truncated_envelope_is_typed_error() {
+        let meta = SnapshotMeta {
+            run: "t".into(),
+            shard: 0,
+            shards: 2,
+            ideal_wet_s: 1.0,
+        };
+        let text = to_jsonl(&meta, &fixture());
+        // Drop the trailing `end` record.
+        let cut = text.rsplit_once("{\"kind\":\"end\"").unwrap().0;
+        match from_jsonl(cut) {
+            Err(Error::Config(ConfigError::MissingKey { key, .. })) => assert_eq!(key, "end"),
+            other => panic!("expected typed truncation error, got {other:?}"),
+        }
+        // Empty input is the same class of failure.
+        assert!(matches!(
+            from_jsonl(""),
+            Err(Error::Config(ConfigError::MissingKey { .. }))
+        ));
+    }
+
+    #[test]
+    fn corrupt_lines_are_typed_errors() {
+        let meta = SnapshotMeta {
+            run: "c".into(),
+            shard: 1,
+            shards: 2,
+            ideal_wet_s: 1.0,
+        };
+        let good = to_jsonl(&meta, &fixture());
+        for mangle in [
+            good.replacen("\"kind\":\"bucket\"", "\"kind\":\"bukket\"", 1),
+            good.replacen("\"sec\":1", "\"sec\":9", 1),
+            good.replacen("\"hits_local\"", "\"hits_lokal\"", 1),
+            good.replacen("\"schema\":1", "\"schema\":9", 1),
+            good.replacen("{\"kind\":\"bucket\"", "\"kind\":\"bucket\"", 1),
+            format!("{good}garbage\n"),
+        ] {
+            match from_jsonl(&mangle) {
+                Err(Error::Config(_)) => {}
+                other => panic!("expected typed config error, got {other:?}"),
+            }
+        }
+        // A bucket line silently deleted: the meta count catches it.
+        let dropped: String = good
+            .lines()
+            .filter(|l| !l.contains("\"sec\":4"))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        assert!(matches!(
+            from_jsonl(&dropped),
+            Err(Error::Config(ConfigError::InvalidValue { .. }))
+        ));
+    }
+
+    #[test]
+    fn merge_of_parsed_shards_matches_in_process_absorb() {
+        let a = fixture();
+        let mut b = fixture();
+        b.record_access(Micros::from_secs(9), AccessKind::Miss, 7);
+        let mut direct = Recorder::new();
+        direct.absorb(a.clone());
+        direct.absorb(b.clone());
+
+        let mut via_files = Recorder::new();
+        for (i, r) in [a, b].into_iter().enumerate() {
+            let meta = SnapshotMeta {
+                run: "m".into(),
+                shard: i,
+                shards: 2,
+                ideal_wet_s: 2.0,
+            };
+            let (_, parsed) = from_jsonl(&to_jsonl(&meta, &r)).unwrap();
+            via_files.absorb(parsed);
+        }
+        assert_eq!(format!("{direct:?}"), format!("{via_files:?}"));
+    }
+}

@@ -57,7 +57,7 @@ use crate::coordinator::scheduler::SchedulerStats;
 use crate::coordinator::shard::ShardedCoordinator;
 use crate::coordinator::AccessKind;
 use crate::ids::{ExecutorId, TaskId};
-use crate::metrics::{IntervalStat, ShardCounters, SummaryMetrics, TimeSeries};
+use crate::metrics::{IntervalStat, Recorder, ShardCounters, SummaryMetrics, TimeSeries};
 use crate::util::prng::Pcg64;
 use crate::util::time::Micros;
 use crate::util::units::gbps_to_bps;
@@ -202,6 +202,16 @@ struct Engine {
 
 /// Run one experiment to completion.
 pub fn run(cfg: &ExperimentConfig) -> RunResult {
+    run_with_shard_recorders(cfg).0
+}
+
+/// Run one experiment, also returning the per-shard recorders the merged
+/// report was built from (in shard order) — the `figures --emit-shards`
+/// seam. The [`RunResult`] is identical to [`run`]'s: the merged view is
+/// a fresh [`Recorder`] absorbing clones of the returned shard
+/// recorders, which `Recorder::absorb`'s losslessness makes bit-equal to
+/// the router's own end-of-run merge.
+pub fn run_with_shard_recorders(cfg: &ExperimentConfig) -> (RunResult, Vec<Recorder>) {
     cfg.validate().expect("invalid experiment config");
     let t_wall = std::time::Instant::now();
     let wl = workload::generate(&cfg.workload, cfg.seed);
@@ -307,16 +317,21 @@ pub fn run(cfg: &ExperimentConfig) -> RunResult {
         fs.heap_updates,
         fs.dedup_skips
     );
-    // Merged reporting: at K = 1 the recorder is moved out untouched;
-    // at K > 1 per-shard recorders merge losslessly (Recorder::absorb).
-    // The dispatch log must be taken before the counters so the
-    // per-shard dispatch tallies are filled.
+    // Merged reporting: the per-shard recorders are taken unmerged (so
+    // emit-shards can snapshot them) and absorbed into one cluster view,
+    // which Recorder::absorb's losslessness makes bit-identical to the
+    // router's own merge at any K. The dispatch log must be taken before
+    // the counters so the per-shard dispatch tallies are filled.
     let sched_stats = eng.router.merged_sched_stats();
     let dispatch_order = eng.router.take_dispatch_log();
     let shard = eng.router.take_counters();
-    let mut rec = eng.router.take_merged_recorder();
+    let shard_recs = eng.router.take_shard_recorders();
+    let mut rec = Recorder::new();
+    for r in &shard_recs {
+        rec.absorb(r.clone());
+    }
     let summary = rec.summarize(ideal_wet);
-    RunResult {
+    let result = RunResult {
         name: cfg.name.clone(),
         summary,
         access_counts: rec.access_counts(),
@@ -329,7 +344,8 @@ pub fn run(cfg: &ExperimentConfig) -> RunResult {
         file_size_bytes: cfg.workload.file_size_bytes,
         sim_wall_s: t_wall.elapsed().as_secs_f64(),
         events_processed: eng.events,
-    }
+    };
+    (result, shard_recs)
 }
 
 impl Engine {

@@ -16,4 +16,4 @@
 pub mod engine;
 pub mod flow;
 
-pub use engine::{run, RunResult};
+pub use engine::{run, run_with_shard_recorders, RunResult};

@@ -228,6 +228,157 @@ fn self_test_dump_names_seed_plan_and_trace() {
     );
 }
 
+// ---- live engine under injected faults ---------------------------------
+
+use datadiffusion::coordinator::provisioner::AllocationPolicy;
+use datadiffusion::coordinator::shard::ShardedCoordinator;
+use datadiffusion::live::{self, ComputeKind, LiveConfig, LiveFaults, LiveTask};
+use std::path::PathBuf;
+use std::time::Duration;
+
+const LIVE_FILE_BYTES: u64 = 2048;
+
+fn live_tmp(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("dd-chaos-live-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+/// File ids grouped by home shard of a K-way router (the home hash is a
+/// pure function of K, so a probe router predicts the live run's homes).
+fn live_files_by_shard(k: usize, per_shard: usize) -> Vec<Vec<FileId>> {
+    let probe = ShardedCoordinator::new(
+        CoreConfig {
+            scheduler: SchedulerConfig::default(),
+            provisioner: ProvisionerConfig::default(),
+            cache: CacheConfig::lru(1_000),
+            max_nodes: k.max(1),
+            slots_per_node: 1,
+            file_sizes: FileSizes::Uniform(LIVE_FILE_BYTES),
+        },
+        k,
+        Pcg64::seeded(1),
+    );
+    let mut by_shard: Vec<Vec<FileId>> = vec![Vec::new(); k];
+    for raw in 0..4096u32 {
+        let f = FileId(raw);
+        let s = probe.shard_of_file(f);
+        if by_shard[s].len() < per_shard {
+            by_shard[s].push(f);
+        }
+        if by_shard.iter().all(|v| v.len() >= per_shard) {
+            return by_shard;
+        }
+    }
+    panic!("router hash left a shard empty over 4096 file ids");
+}
+
+#[test]
+fn live_sweep_with_kill_and_partition_is_oracle_clean() {
+    // The chaos fault menu through the *live* engine at K ∈ {1, 4}: a
+    // worker thread killed mid-run (kill-mid-fetch: its in-flight work
+    // is requeued via `on_executor_failed`) and, later, a shard
+    // partition (cross-shard copies refused at assignment time). Every
+    // run ends with the router's `check_integrity` oracle — a non-Ok
+    // return here IS an oracle failure.
+    for shards in [1usize, 4] {
+        let by_shard = live_files_by_shard(shards, 2);
+        let all_files: Vec<FileId> = by_shard.iter().flatten().copied().collect();
+        let root = live_tmp(&format!("k{shards}"));
+        let store = root.join("store");
+        std::fs::create_dir_all(&store).expect("store dir");
+        let name_of = |f: FileId| format!("f{}.bin", f.0);
+        for &f in &all_files {
+            std::fs::write(store.join(name_of(f)), vec![f.0 as u8; LIVE_FILE_BYTES as usize])
+                .expect("dataset");
+        }
+        // Singles first (3× per file, seeding every shard), then — at
+        // K=4 — one pair per shard whose second input is homed on the
+        // next shard over, forcing cross-shard copies *after* the
+        // partition trigger has fired.
+        let mut tasks: Vec<LiveTask> = Vec::new();
+        for _ in 0..3 {
+            for &f in &all_files {
+                tasks.push(LiveTask::single(name_of(f), f));
+            }
+        }
+        if shards > 1 {
+            for s in 0..shards {
+                let g = by_shard[s][0];
+                let foreign = by_shard[(s + 1) % shards][0];
+                tasks.push(LiveTask {
+                    file_name: name_of(g),
+                    file: g,
+                    extra: vec![(foreign, name_of(foreign))],
+                });
+            }
+        }
+        let total = tasks.len() as u64;
+
+        let cfg = LiveConfig {
+            // Two workers per shard: the kill always has an eligible
+            // victim (no shard is ever emptied).
+            initial_workers: 2 * shards,
+            max_workers: 2 * shards,
+            queue_tasks_per_worker: usize::MAX >> 8,
+            allocation: AllocationPolicy::OneAtATime,
+            policy: DispatchPolicy::GoodCacheCompute,
+            cache: CacheConfig::lru(1 << 20),
+            persistent_dir: store,
+            cache_root: root.join("caches"),
+            compute: ComputeKind::Sleep(Duration::from_millis(2)),
+            seed: 4242 + shards as u64,
+            idle_release_s: 0.0,
+            shards,
+            faults: LiveFaults {
+                kill_worker_after: Some(5),
+                partition_after: Some(10),
+            },
+        };
+        let report = live::run(&cfg, &tasks)
+            .unwrap_or_else(|e| panic!("[K={shards}] live chaos run failed its oracle: {e}"));
+
+        assert_eq!(report.completed, total, "[K={shards}] tasks lost under faults");
+        assert_eq!(report.failed, 0, "[K={shards}] no worker error was injected");
+        assert!(
+            report.shard.exec_failures >= 1,
+            "[K={shards}] the kill fault was never enacted"
+        );
+        if shards > 1 {
+            assert!(
+                report.partition_fallbacks >= 1,
+                "[K={shards}] no cross-shard copy was refused by the partition \
+                 (cross_fetches={}, fallbacks={})",
+                report.shard.cross_fetches,
+                report.partition_fallbacks
+            );
+        } else {
+            assert_eq!(report.shard.cross_fetches, 0, "[K=1] nothing to cross");
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}
+
+#[test]
+fn live_release_deferral_probe_counts_both_sides() {
+    // The scripted live probe: a cross-shard copy is in flight when the
+    // idle-release tick fires, so the router must defer the serving
+    // worker's release (`cross_release_deferrals`) and release it — plus
+    // the requester — on a later tick (`workers_released`).
+    let root = live_tmp("probe");
+    let (released, deferrals) =
+        live::scripted_cross_release_probe(&root).expect("scripted probe");
+    assert!(
+        deferrals >= 1,
+        "release of a cross-serving worker was not deferred"
+    );
+    assert!(
+        released >= 2,
+        "idle workers were not released after the copy drained (got {released})"
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
+
 // ---- direct §4.2 replay coverage against the core ----------------------
 
 fn replay_core(policy: DispatchPolicy) -> CoordinatorCore {

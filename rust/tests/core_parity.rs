@@ -91,10 +91,7 @@ fn sim_and_live_drivers_replay_identical_decisions() {
             // the task's dominant file.
             let file = spec.inputs[0];
             let name = format!("f{}.bin", file.0);
-            tasks.push(LiveTask {
-                file_name: name,
-                file,
-            });
+            tasks.push(LiveTask::single(name, file));
         }
         for f in 0..NUM_FILES {
             // Exactly file_size_bytes on disk so the live cache model
@@ -114,6 +111,8 @@ fn sim_and_live_drivers_replay_identical_decisions() {
             compute: ComputeKind::Sleep(Duration::ZERO),
             seed: 999, // different stream on purpose: must not matter
             idle_release_s: 0.0,
+            shards: 1,
+            faults: live::LiveFaults::default(),
         };
         let report = live::run(&live_cfg, &tasks).expect("live run");
         assert_eq!(report.completed, NUM_TASKS, "[{policy}] live incomplete");

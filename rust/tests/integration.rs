@@ -293,6 +293,93 @@ fn config_file_round_trip_drives_simulation() {
 }
 
 #[test]
+fn shard_snapshot_round_trip_is_bit_identical() {
+    use datadiffusion::experiments::shardio;
+    use datadiffusion::metrics::Recorder;
+
+    // Two K=4 runs under different policies, emitted as one snapshot
+    // envelope per shard and recombined from the files.
+    let mut cfgs = Vec::new();
+    for (name, policy) in [
+        ("rt-gcc", DispatchPolicy::GoodCacheCompute),
+        ("rt-fa", DispatchPolicy::FirstAvailable),
+    ] {
+        let mut cfg = scaled_paper_cfg(8, 50);
+        cfg.name = name.into();
+        cfg.scheduler.policy = policy;
+        cfg.cluster.shards = 4;
+        cfgs.push(cfg);
+    }
+    let dir = std::env::temp_dir().join(format!("dd-integ-rt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let paths = shardio::emit_shards(&cfgs, &dir).expect("emit");
+    assert_eq!(paths.len(), 8, "two runs × four shards");
+    let merged = shardio::merge_dir(&dir).expect("merge");
+    assert_eq!(merged.len(), 2);
+
+    for m in &merged {
+        let cfg = cfgs.iter().find(|c| c.name == m.name).expect("run name");
+        assert_eq!(m.shards, 4);
+        // The in-process reference: same run, shard recorders absorbed
+        // directly without ever leaving the process.
+        let (reference, shard_recs) = sim::run_with_shard_recorders(cfg);
+        let mut inproc = Recorder::new();
+        for r in shard_recs {
+            inproc.absorb(r);
+        }
+        assert_eq!(m.recorder.access_counts(), inproc.access_counts(), "{}", m.name);
+        assert_eq!(m.recorder.tasks_done(), inproc.tasks_done(), "{}", m.name);
+        // The summary is all f64s; Debug formatting shows every bit that
+        // matters, so string equality pins bit-identity end to end.
+        let s = m.recorder.summarize(m.ideal_wet_s);
+        assert_eq!(
+            format!("{s:?}"),
+            format!("{:?}", reference.summary),
+            "{}: file-merged summary diverged from the in-process run",
+            m.name
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_shard_snapshots_fail_typed_not_panic() {
+    use datadiffusion::config::ConfigError;
+    use datadiffusion::experiments::shardio;
+    use datadiffusion::Error;
+
+    let mut cfg = scaled_paper_cfg(8, 100);
+    cfg.name = "rt-corrupt".into();
+    cfg.cluster.shards = 2;
+    let dir = std::env::temp_dir().join(format!("dd-integ-corrupt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let paths = shardio::emit_shards(std::slice::from_ref(&cfg), &dir).expect("emit");
+    let pristine = std::fs::read_to_string(&paths[0]).expect("read envelope");
+
+    // Truncated mid-stream: the `end` record never arrives.
+    std::fs::write(&paths[0], &pristine[..pristine.len() / 2]).expect("truncate");
+    let err = shardio::merge_dir(&dir).expect_err("truncated envelope must fail");
+    assert!(
+        matches!(err, Error::Config(_)),
+        "truncation must surface as a typed config error, got {err:?}"
+    );
+
+    // Corrupted record: a line that is not valid envelope JSON.
+    let garbled = pristine.replacen("\"kind\":\"meta\"", "\"kind\":\"mete\"", 1);
+    std::fs::write(&paths[0], garbled).expect("garble");
+    let err = shardio::merge_dir(&dir).expect_err("garbled envelope must fail");
+    assert!(
+        matches!(
+            err,
+            Error::Config(ConfigError::InvalidValue { .. })
+                | Error::Config(ConfigError::MissingKey { .. })
+        ),
+        "corruption must surface as a typed config error, got {err:?}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn failure_free_but_stressed_provisioning_cycles() {
     // Bursty arrivals with aggressive release: nodes should be released
     // between bursts and re-acquired, and everything still completes.

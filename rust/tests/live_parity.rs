@@ -1,0 +1,379 @@
+//! Live-vs-core parity battery for the sharded live engine (PR 10).
+//!
+//! Two pins hold the live engine to the coordinator's decision stream:
+//!
+//! 1. **K=1 bit-identity** — a real `live::run` (worker threads, cache
+//!    directories, filesystem copies) over a single shard must replay
+//!    the *bare* [`CoordinatorCore`]'s dispatch order and access
+//!    tallies exactly, where the reference is a synchronous in-process
+//!    driver that enacts effects the same way the live driver does
+//!    (FIFO notify queue, fetch → `on_fetch_done(Some(observed))`,
+//!    immediate compute close, kick safety net). One worker at
+//!    `idle_release_s = 0` makes the decision stream independent of
+//!    wall-clock timestamps, so threads and real I/O cannot perturb it.
+//!
+//! 2. **K=4 conservation** — a seeded four-shard live run with
+//!    multi-input tasks whose second file is homed on a *foreign*
+//!    shard must complete everything, dispatch each task exactly once,
+//!    balance the per-shard tallies, and actually cross shards
+//!    (`cross_fetches > 0` with `cross_in`/`cross_out` conserved).
+
+use datadiffusion::cache::{CacheConfig, EvictionPolicy};
+use datadiffusion::coordinator::core::{
+    CoordinatorCore, CoreConfig, Effect, FetchPlan, FileSizes,
+};
+use datadiffusion::coordinator::provisioner::{AllocationPolicy, ProvisionerConfig};
+use datadiffusion::coordinator::queue::Task;
+use datadiffusion::coordinator::scheduler::{DispatchPolicy, SchedulerConfig};
+use datadiffusion::coordinator::shard::ShardedCoordinator;
+use datadiffusion::ids::{ExecutorId, FileId, TaskId};
+use datadiffusion::live::{self, ComputeKind, LiveConfig, LiveFaults, LiveTask};
+use datadiffusion::util::prng::Pcg64;
+use datadiffusion::util::time::Micros;
+use std::collections::{HashMap, VecDeque};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+const NUM_FILES: u32 = 10;
+const ACCESSES_PER_FILE: usize = 3;
+const FILE_BYTES: u64 = 2048;
+const SEED: u64 = 999;
+
+fn tmp(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("dd-liveparity-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+/// Interleaved access sequence (f0, f1, …, f9, f0, …): re-accesses are
+/// spread out so cache decisions differ per policy.
+fn task_files() -> Vec<FileId> {
+    (0..NUM_FILES as usize * ACCESSES_PER_FILE)
+        .map(|i| FileId((i as u32) % NUM_FILES))
+        .collect()
+}
+
+fn write_store(store: &Path, files: u32) {
+    std::fs::create_dir_all(store).unwrap();
+    for f in 0..files {
+        std::fs::write(store.join(format!("f{f}.bin")), vec![f as u8; FILE_BYTES as usize])
+            .unwrap();
+    }
+}
+
+fn core_config(policy: DispatchPolicy, sizes: HashMap<FileId, u64>) -> CoreConfig {
+    CoreConfig {
+        scheduler: SchedulerConfig {
+            policy,
+            ..SchedulerConfig::default()
+        },
+        provisioner: ProvisionerConfig {
+            allocation: AllocationPolicy::OneAtATime,
+            idle_release_s: 0.0,
+            static_provisioning: false,
+            initial_nodes: 1,
+            queue_tasks_per_node: (usize::MAX >> 8) as u64,
+        },
+        cache: CacheConfig {
+            capacity_bytes: 1 << 20,
+            policy: EvictionPolicy::Lru,
+        },
+        max_nodes: 1,
+        slots_per_node: 1,
+        file_sizes: FileSizes::per_file(sizes),
+    }
+}
+
+/// Synchronous reference driver over the bare core: enacts effects with
+/// the live driver's structure (FIFO queues, observed-report feedback)
+/// but no threads, no files, no wall clock.
+struct RefDriver {
+    core: CoordinatorCore,
+    notify: VecDeque<ExecutorId>,
+    pending: VecDeque<FetchPlan>,
+}
+
+impl RefDriver {
+    fn apply(&mut self, effects: Vec<Effect>) {
+        let mut queue: VecDeque<Effect> = effects.into();
+        while let Some(effect) = queue.pop_front() {
+            match effect {
+                Effect::Notify(e) => self.notify.push_back(e),
+                Effect::Fetch(plan) => self.pending.push_back(plan),
+                Effect::Compute { task_id, .. } => {
+                    let effs = self
+                        .core
+                        .on_compute_done(task_id, Micros::ZERO, Micros::ZERO);
+                    queue.extend(effs);
+                }
+                Effect::Allocate(_) | Effect::Release(_) => {
+                    panic!("static 1-worker fleet must not provision: {effect:?}")
+                }
+            }
+        }
+    }
+
+    fn pump(&mut self) {
+        loop {
+            while let Some(e) = self.notify.pop_front() {
+                let effects = self.core.on_pickup(e, Micros::ZERO);
+                self.apply(effects);
+            }
+            if !self.pending.is_empty()
+                || self.core.queue_is_empty()
+                || self.core.free_count() == 0
+            {
+                break;
+            }
+            let queue_before = self.core.queue_len();
+            let effects = self.core.kick();
+            if effects.is_empty() {
+                break;
+            }
+            self.apply(effects);
+            while let Some(e) = self.notify.pop_front() {
+                let effects = self.core.on_pickup(e, Micros::ZERO);
+                self.apply(effects);
+            }
+            if self.pending.is_empty() && self.core.queue_len() == queue_before {
+                break;
+            }
+        }
+    }
+}
+
+/// Replay the workload through the bare core; returns the dispatch
+/// order and `(hits_local, hits_global, misses)`.
+fn drive_reference(policy: DispatchPolicy) -> (Vec<TaskId>, (u64, u64, u64)) {
+    let sizes: HashMap<FileId, u64> = (0..NUM_FILES).map(|f| (FileId(f), FILE_BYTES)).collect();
+    let core = CoordinatorCore::new(core_config(policy, sizes), Pcg64::seeded(SEED));
+    let mut drv = RefDriver {
+        core,
+        notify: VecDeque::new(),
+        pending: VecDeque::new(),
+    };
+    let (_, effects) = drv.core.register_node(Micros::ZERO);
+    drv.apply(effects);
+    for (i, f) in task_files().into_iter().enumerate() {
+        let effects = drv.core.on_arrival(
+            Task {
+                id: TaskId(i as u64),
+                files: vec![f],
+                compute: Micros::ZERO,
+                arrival: Micros::ZERO,
+            },
+            0,
+            0.0,
+            Micros::ZERO,
+        );
+        drv.apply(effects);
+    }
+    drv.pump();
+    let total = task_files().len();
+    let mut closed = 0usize;
+    while closed < total {
+        let plan = drv
+            .pending
+            .pop_front()
+            .unwrap_or_else(|| panic!("reference stalled after {closed}/{total} fetches"));
+        // One worker: the observed outcome is exactly the plan (a peer
+        // copy is impossible, so no fallback path can diverge).
+        let effects =
+            drv.core
+                .on_fetch_done(plan.task_id, Micros::ZERO, Some((plan.kind, plan.bytes)));
+        closed += 1;
+        drv.apply(effects);
+        drv.pump();
+    }
+    let order = drv.core.take_dispatch_log();
+    (order, drv.core.rec.access_counts())
+}
+
+fn live_config(policy: DispatchPolicy, store: PathBuf, caches: PathBuf) -> LiveConfig {
+    LiveConfig {
+        initial_workers: 1,
+        max_workers: 1,
+        queue_tasks_per_worker: usize::MAX >> 8,
+        allocation: AllocationPolicy::OneAtATime,
+        policy,
+        cache: CacheConfig {
+            capacity_bytes: 1 << 20,
+            policy: EvictionPolicy::Lru,
+        },
+        persistent_dir: store,
+        cache_root: caches,
+        compute: ComputeKind::Sleep(Duration::ZERO),
+        seed: SEED,
+        idle_release_s: 0.0,
+        shards: 1,
+        faults: LiveFaults::default(),
+    }
+}
+
+#[test]
+fn k1_live_replays_bare_core_bit_for_bit() {
+    for policy in [
+        DispatchPolicy::GoodCacheCompute,
+        DispatchPolicy::MaxComputeUtil,
+        DispatchPolicy::FirstAvailable,
+    ] {
+        let (want_order, want_counts) = drive_reference(policy);
+        assert_eq!(want_order.len(), task_files().len(), "[{policy}] reference");
+
+        let root = tmp(&format!("k1-{policy}"));
+        let store = root.join("store");
+        write_store(&store, NUM_FILES);
+        let tasks: Vec<LiveTask> = task_files()
+            .into_iter()
+            .map(|f| LiveTask::single(format!("f{}.bin", f.0), f))
+            .collect();
+        let cfg = live_config(policy, store, root.join("caches"));
+        let report = live::run(&cfg, &tasks).expect("live run");
+        assert_eq!(report.completed, task_files().len() as u64, "[{policy}]");
+        assert_eq!(report.failed, 0, "[{policy}]");
+
+        assert_eq!(
+            report.dispatch_order, want_order,
+            "[{policy}] live dispatch order diverged from the bare core"
+        );
+        assert_eq!(
+            (report.hits_local, report.hits_global, report.misses),
+            want_counts,
+            "[{policy}] live access tallies diverged from the bare core"
+        );
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}
+
+/// Find file ids for a K-shard router until every shard holds at least
+/// `per_shard` ids (the router's home hash is pure, so a probe router
+/// with any config reports the same homes the live run will use).
+fn files_by_shard(k: usize, per_shard: usize) -> Vec<Vec<FileId>> {
+    let mut cfg = core_config(DispatchPolicy::FirstAvailable, HashMap::new());
+    cfg.max_nodes = k; // the router asserts max_nodes >= shards
+    let probe = ShardedCoordinator::new(cfg, k, Pcg64::seeded(1));
+    let mut by_shard: Vec<Vec<FileId>> = vec![Vec::new(); k];
+    for raw in 0..4096u32 {
+        let f = FileId(raw);
+        let s = probe.shard_of_file(f);
+        if by_shard[s].len() < per_shard {
+            by_shard[s].push(f);
+        }
+        if by_shard.iter().all(|v| v.len() >= per_shard) {
+            return by_shard;
+        }
+    }
+    panic!("router hash left a shard empty over 4096 file ids: {by_shard:?}");
+}
+
+#[test]
+fn k4_sharded_live_run_conserves_every_tally() {
+    const K: usize = 4;
+    let by_shard = files_by_shard(K, 2);
+    let all_files: Vec<FileId> = by_shard.iter().flatten().copied().collect();
+
+    let root = tmp("k4");
+    let store = root.join("store");
+    std::fs::create_dir_all(&store).unwrap();
+    let name_of = |f: FileId| format!("f{}.bin", f.0);
+    for &f in &all_files {
+        std::fs::write(store.join(name_of(f)), vec![f.0 as u8; FILE_BYTES as usize]).unwrap();
+    }
+
+    // Singles first (3× per file, seeding every shard's caches), then
+    // one pair task per shard whose second input is homed on the next
+    // shard over — by then the foreign file is cached there, so the
+    // chained fetch must rewrite into a cross-shard copy. Each shard's
+    // pair sits behind six singles (≥ 12ms of sleep compute) while the
+    // foreign file it wants is the *first* task on its home shard
+    // (~2ms), so the replica exists long before the pair's second fetch
+    // is planned.
+    let mut tasks: Vec<LiveTask> = Vec::new();
+    for _ in 0..ACCESSES_PER_FILE {
+        for &f in &all_files {
+            tasks.push(LiveTask::single(name_of(f), f));
+        }
+    }
+    let mut pair_count = 0u64;
+    for s in 0..K {
+        let g = by_shard[s][0];
+        let foreign = by_shard[(s + 1) % K][0];
+        tasks.push(LiveTask {
+            file_name: name_of(g),
+            file: g,
+            extra: vec![(foreign, name_of(foreign))],
+        });
+        pair_count += 1;
+    }
+    let total_tasks = tasks.len() as u64;
+    let total_accesses = (all_files.len() * ACCESSES_PER_FILE) as u64 + 2 * pair_count;
+
+    let mut cfg = live_config(
+        DispatchPolicy::GoodCacheCompute,
+        store,
+        root.join("caches"),
+    );
+    cfg.initial_workers = K;
+    cfg.max_workers = K;
+    cfg.shards = K;
+    // Real (small) compute so per-shard progress rates stay comparable
+    // and the singles-before-pairs ordering above is honored in time.
+    cfg.compute = ComputeKind::Sleep(Duration::from_millis(2));
+    let report = live::run(&cfg, &tasks).expect("sharded live run");
+
+    assert_eq!(report.completed, total_tasks);
+    assert_eq!(report.failed, 0);
+
+    // Each task dispatched exactly once, and the per-shard dispatch
+    // tallies partition the total.
+    assert_eq!(report.dispatch_order.len() as u64, total_tasks);
+    let mut ids: Vec<u64> = report.dispatch_order.iter().map(|t| t.0).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len() as u64, total_tasks, "a task was dispatched twice");
+    let shard = &report.shard;
+    assert_eq!(shard.shards, K);
+    assert_eq!(
+        shard.per_shard.iter().map(|s| s.dispatches).sum::<u64>(),
+        total_tasks
+    );
+    assert_eq!(
+        shard.per_shard.iter().map(|s| s.tasks_routed).sum::<u64>(),
+        total_tasks
+    );
+    assert!(
+        shard.per_shard.iter().all(|s| s.tasks_routed > 0),
+        "a shard was never routed a task: {:?}",
+        shard.per_shard
+    );
+
+    // Every file access lands in exactly one tally bucket.
+    assert_eq!(
+        report.hits_local + report.hits_global + report.misses,
+        total_accesses
+    );
+
+    // The pair tasks really crossed shards, and the cross accounting is
+    // conserved: one `cross_in` + one `cross_out` per rewritten fetch.
+    assert!(shard.cross_fetches > 0, "no fetch ever crossed shards");
+    assert_eq!(
+        shard.per_shard.iter().map(|s| s.cross_in).sum::<u64>(),
+        shard.cross_fetches
+    );
+    assert_eq!(
+        shard.per_shard.iter().map(|s| s.cross_out).sum::<u64>(),
+        shard.cross_fetches
+    );
+    assert!(shard.cross_bytes >= shard.cross_fetches * FILE_BYTES);
+
+    // Round-robin registration staffed every shard's pool.
+    assert_eq!(report.workers_per_shard.len(), K);
+    assert!(
+        report.workers_per_shard.iter().all(|&w| w > 0),
+        "a shard never had a worker: {:?}",
+        report.workers_per_shard
+    );
+    assert_eq!(report.partition_fallbacks, 0, "no partition was injected");
+
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -58,7 +58,16 @@ checks only quantities that noise cannot fake:
    model/deadband_holds is reported for visibility, and
    model/target_changes_per_decision rides the baseline drift rule
    below (a churn spike means the deadband stopped damping).
-3e. *Million-task scale drive* (fresh snapshot only): the arena/SoA
+3e. *Live-engine accounting* (fresh snapshot only): the K=2 sharded
+   live bench runs real worker pools behind the router, so every
+   shard's pool must be staffed (live/workers_per_shard > 0 — the
+   counter is the *minimum* pool peak across shards, so a zero means
+   some shard never received a worker and its queue ran on borrowed
+   capacity), cross-shard copies must fire (live/cross_fetches > 0)
+   and move real bytes (live/cross_copy_bytes > 0 — a zero with
+   nonzero fetches means the copy path stopped accounting transfer
+   sizes).
+3f. *Million-task scale drive* (fresh snapshot only): the arena/SoA
    scale group must run and stay within its allocation budget —
    scale/events_per_sec must be present and positive (a wall-clock
    throughput, reported but not compared across machines),
@@ -336,7 +345,41 @@ def run_gate(fresh, baseline):
             "router's pressure-weighted quota apportionment has gone dead"
         )
 
-    # --- 2g. million-task scale-drive accounting (within-run). ----------
+    # --- 2g. live-engine accounting (within-run). -----------------------
+    for key in (
+        "live/workers_per_shard",
+        "live/cross_copy_bytes",
+        "live/cross_fetches",
+    ):
+        if key not in counters:
+            fail(f"missing counter {key}")
+    live_pool = counters["live/workers_per_shard"]
+    live_cross = counters["live/cross_fetches"]
+    live_bytes = counters["live/cross_copy_bytes"]
+    print(
+        f"bench-gate: live pools (min per shard) = {live_pool:g}, "
+        f"cross copies = {live_cross:g} moving {live_bytes:g} bytes"
+    )
+    if live_pool <= 0:
+        fail(
+            "live/workers_per_shard is 0: some router shard never received "
+            "a live worker, so its queue can only drain through other "
+            "shards' pools (per-shard pool staffing went dead)"
+        )
+    if live_cross <= 0:
+        fail(
+            "live/cross_fetches is 0: the K=2 live fixture's pair tasks "
+            "deterministically chain a fetch of the other shard's cached "
+            "file, so the live engine stopped enacting cross-shard copies"
+        )
+    if live_bytes <= 0:
+        fail(
+            "live/cross_copy_bytes is 0: cross-shard copies fired but moved "
+            "no accounted bytes, so the worker-to-worker transfer "
+            "accounting went dead"
+        )
+
+    # --- 2h. million-task scale-drive accounting (within-run). ----------
     for key in (
         "scale/events_per_sec",
         "scale/allocs_per_event",
@@ -455,6 +498,9 @@ def synthetic_fresh():
         "model/deadband_holds": 10.0,
         "model/target_changes_per_decision": 0.025,
         "model/shard_rebalances": 4.0,
+        "live/workers_per_shard": 1.0,
+        "live/cross_copy_bytes": 8192.0,
+        "live/cross_fetches": 2.0,
         "scale/events_per_sec": 2_000_000.0,
         "scale/allocs_per_event": 0.0001,
         "scale/peak_table_bytes": 5e7,
@@ -583,6 +629,18 @@ def self_test():
     def target_churn_drifts(s):
         s["counters"]["model/target_changes_per_decision"] = 0.025 * 2.0
 
+    def missing_live_counter(s):
+        del s["counters"]["live/cross_copy_bytes"]
+
+    def live_pool_unstaffed(s):
+        s["counters"]["live/workers_per_shard"] = 0.0
+
+    def live_cross_copies_dead(s):
+        s["counters"]["live/cross_fetches"] = 0.0
+
+    def live_copy_bytes_unaccounted(s):
+        s["counters"]["live/cross_copy_bytes"] = 0.0
+
     def missing_scale_counter(s):
         del s["counters"]["scale/peak_table_bytes"]
 
@@ -623,6 +681,10 @@ def self_test():
         ("shard quota rebalancing dead", shard_rebalancing_dead),
         ("missing model counter", missing_model_counter),
         ("target churn drifts past baseline", target_churn_drifts),
+        ("missing live counter", missing_live_counter),
+        ("live shard pool unstaffed", live_pool_unstaffed),
+        ("live cross-shard copies dead", live_cross_copies_dead),
+        ("live copy bytes unaccounted", live_copy_bytes_unaccounted),
         ("missing scale counter", missing_scale_counter),
         ("scale drive never ran", scale_drive_never_ran),
         ("scale drive allocates per event", scale_allocates_per_event),
